@@ -1,0 +1,53 @@
+//! E4 — the BoolHash experiment (Figs 5–6): boolean activations packed
+//! N-at-a-time into PCILT offsets, measured against scalar DM on CPU.
+//!
+//! The authors' prior paper measured **6.59×** for N=8 on their test
+//! network; this reproduces the *shape* of that result (monotone speedup
+//! in N, same order of magnitude at N=8) on our hardware and network.
+//!
+//! Run with: `cargo run --release --example boolhash_speedup`
+
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::{DmEngine, SegmentEngine};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::timing::{bench, BenchOpts};
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // Boolean activations, as in the BoolHash configuration.
+    let x = Tensor4::random_activations(Shape4::new(1, 96, 96, 4), 1, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(8, 5, 5, 4), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(5, 5);
+    let opts = BenchOpts::default();
+
+    let dm = DmEngine::new(w.clone(), geom);
+    let y_ref = dm.conv(&x);
+    let t_dm = bench("dm", &opts, || dm.conv(&x));
+    println!("{}", t_dm.report());
+
+    println!("\nsegment width sweep (bool activations):");
+    println!(
+        "{:<8} {:>12} {:>10} {:>14} {:>12}",
+        "N", "p50", "speedup", "rows/segment", "add-ratio"
+    );
+    for n in [1usize, 2, 4, 8, 16] {
+        let seg = SegmentEngine::new(&w, 1, n, geom);
+        assert_eq!(seg.conv(&x), y_ref, "exactness lost at N={n}");
+        let t = bench(&format!("segment-{n}"), &opts, || seg.conv(&x));
+        let ops_dm = dm.op_counts(x.shape());
+        let ops_seg = seg.op_counts(x.shape());
+        println!(
+            "{:<8} {:>12} {:>9.2}x {:>14} {:>11.1}x",
+            n,
+            pcilt::util::stats::fmt_ns(t.ns_per_iter()),
+            t_dm.ns_per_iter() / t.ns_per_iter(),
+            seg.seg_card,
+            ops_dm.adds as f64 / ops_seg.adds as f64,
+        );
+    }
+    println!(
+        "\npaper (BoolHash, ref [73]): 6.59x at N=8 on their network — \
+         compare the N=8 row's speedup column."
+    );
+}

@@ -1,0 +1,72 @@
+//! E6/E7 — the PCILT memory planner: reproduces every in-text memory
+//! number from the paper and then explores the design space (activation
+//! cardinality x value width x sharing) for a user-defined network.
+//!
+//! Pass a config file with a `[network]` section to plan your own CNN:
+//! `cargo run --example memory_planner -- mynet.toml`
+
+use pcilt::config::toml::Document;
+use pcilt::config::network_from_document;
+use pcilt::pcilt::memory::{
+    basic_pcilt_bytes, build_mults_per_filter, dm_mults, paper_memory_report, shared_pcilt_bytes,
+    NetworkSpec,
+};
+use pcilt::util::stats::{fmt_bytes, fmt_count};
+
+fn main() {
+    // --- paper reproduction ----------------------------------------------
+    println!("## Paper's in-text claims vs this model (E6/E7)\n");
+    println!(
+        "{:<52} {:>12} {:>12} {:>7}",
+        "configuration", "ours", "paper", "ratio"
+    );
+    for row in paper_memory_report() {
+        let paper = row.paper_bytes.unwrap();
+        println!(
+            "{:<52} {:>12} {:>12} {:>6.2}x",
+            row.label,
+            fmt_bytes(row.ours_bytes),
+            fmt_bytes(paper),
+            row.ours_bytes / paper
+        );
+    }
+    println!(
+        "\nbuild cost: {} mults once vs {} DM mults (10k 1024x768 frames, 5x5)",
+        fmt_count(build_mults_per_filter(5, 1, 8) as u128),
+        fmt_count(dm_mults(10_000, 768, 1024, 5) as u128)
+    );
+
+    // --- user network (or the paper's) ------------------------------------
+    let net = match std::env::args().nth(1) {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path).expect("reading config");
+            let doc = Document::parse(&text).expect("parsing config");
+            network_from_document(&doc).expect("bad [network] section")
+        }
+        None => NetworkSpec::paper_example(),
+    };
+    println!(
+        "\n## Design-space sweep for network {:?} (k={}, w{} bits)\n",
+        net.filters, net.kernel, net.weight_bits
+    );
+    println!(
+        "{:<10} {:>14} {:>14} {:>16}",
+        "act_bits", "16-bit values", "natural width", "shared (32 vals)"
+    );
+    for bits in [1u32, 2, 4, 8] {
+        let n = net.with_activation_bits(bits);
+        println!(
+            "{:<10} {:>14} {:>14} {:>16}",
+            bits,
+            fmt_bytes(basic_pcilt_bytes(&n, 16)),
+            fmt_bytes(basic_pcilt_bytes(&n, n.product_bits())),
+            fmt_bytes(shared_pcilt_bytes(32, &[bits], n.product_bits(), false)),
+        );
+    }
+    println!(
+        "\nweights: {} | products are {}+{} bits wide",
+        fmt_count(net.weight_count() as u128),
+        net.weight_bits,
+        net.activation_bits
+    );
+}

@@ -1,0 +1,109 @@
+//! E11 — the end-to-end serving validation (DESIGN.md §6).
+//!
+//! Loads the trained QuantCNN artifact bundle (`make artifacts`), starts
+//! the coordinator with PJRT workers + dynamic batching, drives a Poisson
+//! open-loop workload, reports p50/p99 latency and throughput, and
+//! cross-checks a sample of responses bit-for-bit against the rust-native
+//! PCILT engine. Also runs the same workload on the native PCILT pool for
+//! an engine-vs-engine comparison.
+//!
+//! Run with: `cargo run --release --example serve_cnn` (after
+//! `make artifacts`).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pcilt::coordinator::{run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts};
+use pcilt::model::{EngineChoice, QuantCnn};
+use pcilt::runtime::ArtifactBundle;
+
+fn main() -> anyhow::Result<()> {
+    pcilt::util::logger::init();
+    let dir = std::env::var("PCILT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let bundle = ArtifactBundle::load(Path::new(&dir))
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    println!(
+        "loaded bundle: QuantCNN act_bits={} trained test-acc={:.3}",
+        bundle.params.act_bits, bundle.final_test_acc
+    );
+
+    let opts = ServerOpts {
+        workers: 4,
+        max_batch: 8,
+        batch_deadline: Duration::from_micros(2_000),
+        queue_capacity: 1024,
+    };
+    let rate = 2_000.0;
+    let total = 4_000;
+    let img = bundle.params.img;
+    let act_bits = bundle.params.act_bits;
+
+    // --- correctness spot-check before load: server answers == native ---
+    let server = Arc::new(Server::start(
+        BackendSpec::Hlo {
+            bundle: bundle.clone(),
+            engine: "pcilt".to_string(),
+        },
+        &opts,
+    )?);
+    server.warmup(8, img)?; // absorb PJRT compile in the workers
+    let native = QuantCnn::new(bundle.params.clone(), EngineChoice::Pcilt);
+    let (codes, _, labels) = bundle.smoke_pair()?;
+    let mut correct = 0;
+    for i in 0..8 {
+        // slice image i out of the smoke batch
+        let mut one = pcilt::tensor::Tensor4::<u8>::zeros(pcilt::tensor::Shape4::new(
+            1, img, img, 1,
+        ));
+        for h in 0..img {
+            for w in 0..img {
+                one.set(0, h, w, 0, codes.get(i, h, w, 0));
+            }
+        }
+        let resp = server.infer_blocking(one.clone())?;
+        let native_logits = native.forward(&one);
+        anyhow::ensure!(
+            resp.logits == native_logits[0],
+            "served logits != native engine logits for smoke image {i}"
+        );
+        if resp.class == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    println!("served answers == rust-native PCILT engine: OK (bit-exact, 8/8)");
+    println!("smoke-batch classification: {correct}/8 correct");
+
+    // --- load test: PJRT pool -------------------------------------------
+    println!("\n=== PJRT (hlo) pool: Poisson {rate} rps, {total} requests ===");
+    server.warmup(8, img)?;
+    let report = run_poisson(&server, rate, total, img, act_bits, 0xE2E);
+    let m = server.metrics();
+    println!(
+        "offered {} ({:.0} rps), shed {}",
+        report.offered, report.offered_rps, report.rejected
+    );
+    println!("{}", m.report());
+    drop(server);
+
+    // --- same workload on the rust-native PCILT engine pool --------------
+    println!("\n=== native PCILT pool: Poisson {rate} rps, {total} requests ===");
+    let server2 = Arc::new(Server::start(
+        BackendSpec::Native {
+            params: bundle.params.clone(),
+            engine: NativeEngineKind::Pcilt,
+        },
+        &opts,
+    )?);
+    server2.warmup(8, img)?;
+    let report2 = run_poisson(&server2, rate, total, img, act_bits, 0xE2E);
+    let m2 = server2.metrics();
+    println!(
+        "offered {} ({:.0} rps), shed {}",
+        report2.offered, report2.offered_rps, report2.rejected
+    );
+    println!("{}", m2.report());
+
+    println!("\nE11 complete — record these numbers in EXPERIMENTS.md §E11.");
+    Ok(())
+}

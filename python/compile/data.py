@@ -1,0 +1,66 @@
+"""Synthetic 8-class 16x16 glyph corpus.
+
+The paper trains/evaluates on unspecified data; per DESIGN.md §2 we use a
+procedural corpus so the repo is self-contained: eight structured glyph
+classes with random jitter, per-pixel noise and amplitude scaling. Hard
+enough that an untrained net is at 12.5% and a trained quantized CNN
+reaches >90%, which is all the quantization-accuracy experiment (E10)
+needs.
+"""
+
+import numpy as np
+
+IMG = 16
+NUM_CLASSES = 8
+
+
+def _glyph(cls, rng):
+    """Draw one clean glyph of class `cls` on a 16x16 canvas."""
+    img = np.zeros((IMG, IMG), np.float32)
+    c = IMG // 2
+    if cls == 0:  # horizontal bar
+        r = rng.integers(4, IMG - 4)
+        img[r - 1 : r + 1, 2:-2] = 1.0
+    elif cls == 1:  # vertical bar
+        r = rng.integers(4, IMG - 4)
+        img[2:-2, r - 1 : r + 1] = 1.0
+    elif cls == 2:  # main diagonal
+        for i in range(2, IMG - 2):
+            img[i, max(0, i - 1) : i + 1] = 1.0
+    elif cls == 3:  # cross
+        img[c - 1 : c + 1, 2:-2] = 1.0
+        img[2:-2, c - 1 : c + 1] = 1.0
+    elif cls == 4:  # square outline
+        a, b = 3, IMG - 3
+        img[a:b, a] = img[a:b, b - 1] = 1.0
+        img[a, a:b] = img[b - 1, a:b] = 1.0
+    elif cls == 5:  # filled disc
+        yy, xx = np.mgrid[0:IMG, 0:IMG]
+        img[(yy - c) ** 2 + (xx - c) ** 2 <= 16] = 1.0
+    elif cls == 6:  # checkerboard
+        img[::4, :] = 0.0
+        yy, xx = np.mgrid[0:IMG, 0:IMG]
+        img[((yy // 2) + (xx // 2)) % 2 == 0] = 1.0
+    elif cls == 7:  # T shape
+        img[2:4, 2:-2] = 1.0
+        img[2:-2, c - 1 : c + 1] = 1.0
+    else:
+        raise ValueError(cls)
+    return img
+
+
+def make_dataset(n, seed=0, noise=0.15):
+    """Returns (x [n,16,16,1] float32 in [0,1], y [n] int32)."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, IMG, IMG, 1), np.float32)
+    ys = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    for i, cls in enumerate(ys):
+        g = _glyph(int(cls), rng)
+        # random shift by up to ±2 px
+        dy, dx = rng.integers(-2, 3, size=2)
+        g = np.roll(np.roll(g, dy, axis=0), dx, axis=1)
+        # amplitude + additive noise, clipped to [0,1]
+        amp = rng.uniform(0.6, 1.0)
+        g = amp * g + rng.normal(0, noise, g.shape)
+        xs[i, :, :, 0] = np.clip(g, 0.0, 1.0)
+    return xs, ys

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: direct-multiplication conv baseline.
+
+The comparator for the PCILT kernel: same tiling and grid, but the inner
+loop multiplies weight x activation (what an MXU/MAC datapath would do)
+instead of gathering from tables. Used by E1's kernel-level comparison and
+as the DM variant of the AOT model artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dm_kernel(x_ref, w_ref, o_ref, *, kh, kw):
+    """x_ref: [1,H,W,Cin] uint8; w_ref: [Cout,KH,KW,Cin] int8;
+    o_ref: [1,OH,OW,Cout] int32."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    _, h, wd, _ = x.shape
+    cout = w.shape[0]
+    oh = h - kh + 1
+    ow = wd - kw + 1
+    acc = jnp.zeros((1, oh, ow, cout), jnp.int32)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + oh, kx : kx + ow, :]  # [1,OH,OW,Cin]
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w[:, ky, kx, :],
+                dimension_numbers=(((3,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw"))
+def dm_conv(x, w, kh, kw):
+    """DM convolution via a Pallas kernel (unit stride, valid padding)."""
+    n, h, wd, cin = x.shape
+    cout, wkh, wkw, wcin = w.shape
+    assert (wkh, wkw, wcin) == (kh, kw, cin)
+    oh, ow = h - kh + 1, wd - kw + 1
+    kernel = functools.partial(_dm_kernel, kh=kh, kw=kw)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cout, kh, kw, cin), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: PCILT gather-convolution.
+
+The paper's Fig 2/3 datapath, rethought for TPU (DESIGN.md §Hardware-
+Adaptation): the PCILT bank for a whole layer is small enough to sit
+**resident in VMEM** (a 4-bit activation domain is 16 entries per weight;
+even a 5x5x64 filter bank is ~400 KB at int32, and the configs used here
+are well under the ~16 MB VMEM budget), so the grid streams activation
+tiles HBM->VMEM while every grid step reuses the same table block. The
+multiplier-free inner loop is a VPU gather (activation code indexes the
+table row) followed by the Fig 4 adder tree, which on TPU is the VPU's
+tree reduction over the position axis.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through the interpret path and the
+same HLO is what the rust runtime executes (see aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pcilt_kernel(x_ref, tables_ref, o_ref, *, kh, kw, cin, cout):
+    """One batch-row grid step.
+
+    x_ref:      [1, H, W, Cin]  uint8 activation codes (VMEM tile)
+    tables_ref: [Cout, P, A]    int32 PCILT bank (whole, VMEM-resident)
+    o_ref:      [1, OH, OW, Cout] int32
+    """
+    x = x_ref[...].astype(jnp.int32)
+    tables = tables_ref[...]
+    _, h, w, _ = x.shape
+    oh = h - kh + 1
+    ow = w - kw + 1
+    acc = jnp.zeros((1, oh, ow, cout), jnp.int32)
+    pos = 0
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + oh, kx : kx + ow, :]  # [1,OH,OW,Cin]
+            for ic in range(cin):
+                # The PCILT fetch: activation value *is* the table offset.
+                t = tables[:, pos + ic, :]  # [Cout, A]
+                gathered = jnp.take(t, patch[..., ic], axis=1)  # [Cout,1,OH,OW]
+                acc = acc + jnp.moveaxis(gathered, 0, -1)
+            pos += cin
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw"))
+def pcilt_conv(x, tables, kh, kw):
+    """PCILT convolution via a Pallas kernel (unit stride, valid padding).
+
+    x: [N, H, W, Cin] uint8; tables: [Cout, P, A] int32 (P = kh*kw*Cin).
+    Grid over the batch: each step owns one sample; the table bank is
+    mapped whole into every step (block index 0), i.e. VMEM-resident.
+    """
+    n, h, w, cin = x.shape
+    cout, p, a = tables.shape
+    assert p == kh * kw * cin, f"tables P={p} != {kh}*{kw}*{cin}"
+    oh, ow = h - kh + 1, w - kw + 1
+    kernel = functools.partial(_pcilt_kernel, kh=kh, kw=kw, cin=cin, cout=cout)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cout, p, a), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32),
+        interpret=True,
+    )(x, tables)
+
+
+def vmem_footprint_bytes(h, w, cin, cout, kh, kw, act_bits):
+    """Analytic VMEM footprint of one grid step (perf model, DESIGN.md §Perf):
+    activation tile + table bank + output tile, in bytes."""
+    act = h * w * cin  # uint8
+    tables = cout * kh * kw * cin * (1 << act_bits) * 4
+    out = (h - kh + 1) * (w - kw + 1) * cout * 4
+    return act + tables + out

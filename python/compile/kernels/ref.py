@@ -1,0 +1,149 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here is deliberately the most literal possible formulation of
+the paper's math — the Pallas kernels and the rust engines are both tested
+against these functions. Integer semantics (i32 accumulators, exact table
+products) mirror `rust/src/pcilt/` bit for bit.
+
+Layouts match the rust side: activations NHWC uint8 codes, weights OHWI
+int8, outputs NHWC int32.
+"""
+
+import jax.numpy as jnp
+
+
+def conv2d_dm(x, w, stride=(1, 1)):
+    """Direct-multiplication valid convolution (correlation).
+
+    x: [N, H, W, Cin] integer codes (any int dtype, values >= 0)
+    w: [Cout, KH, KW, Cin] signed integer weights
+    returns [N, OH, OW, Cout] int32
+    """
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    n, h, wd, cin = x.shape
+    cout, kh, kw, wcin = w.shape
+    assert cin == wcin, f"cin {cin} != weight cin {wcin}"
+    sy, sx = stride
+    oh = (h - kh) // sy + 1
+    ow = (wd - kw) // sx + 1
+    out = jnp.zeros((n, oh, ow, cout), jnp.int32)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + oh * sy : sy, kx : kx + ow * sx : sx, :]
+            # [N,OH,OW,Cin] x [Cout,Cin] -> [N,OH,OW,Cout]
+            out = out + jnp.einsum("nhwc,oc->nhwo", patch, w[:, ky, kx, :])
+    return out
+
+
+def build_tables(w, act_bits):
+    """PCILT construction (Fig 1): tables[oc, p, a] = w[oc, p] * a.
+
+    w: [Cout, KH, KW, Cin] -> tables [Cout, KH*KW*Cin, 2**act_bits] int32.
+    Position order (ky, kx, ic) row-major, matching rust LayerTables.
+    """
+    cout = w.shape[0]
+    flat = w.reshape(cout, -1).astype(jnp.int32)  # [Cout, P]
+    acts = jnp.arange(2**act_bits, dtype=jnp.int32)  # [A]
+    return flat[:, :, None] * acts[None, None, :]
+
+
+def conv2d_pcilt(x, tables, kh, kw, stride=(1, 1)):
+    """PCILT convolution (Fig 2): gather products from tables and add.
+
+    x: [N, H, W, Cin] uint8 codes < 2**act_bits
+    tables: [Cout, P, A] with P = KH*KW*Cin
+    """
+    n, h, wd, cin = x.shape
+    cout, p, _a = tables.shape
+    assert p == kh * kw * cin
+    sy, sx = stride
+    oh = (h - kh) // sy + 1
+    ow = (wd - kw) // sx + 1
+    out = jnp.zeros((n, oh, ow, cout), jnp.int32)
+    pos = 0
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + oh * sy : sy, kx : kx + ow * sx : sx, :].astype(jnp.int32)
+            # gather tables[oc, pos+ic, patch] summed over ic
+            for ic in range(cin):
+                t = tables[:, pos + ic, :]  # [Cout, A]
+                out = out + t[:, patch[..., ic]].transpose(1, 2, 3, 0)
+            pos += cin
+    return out
+
+
+def im2col_rf(x, kh, kw, stride=(1, 1)):
+    """Unfold RFs in the rust walk order (ky, kx, ic): [N,OH,OW,KH*KW*Cin]."""
+    n, h, wd, cin = x.shape
+    sy, sx = stride
+    oh = (h - kh) // sy + 1
+    ow = (wd - kw) // sx + 1
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(x[:, ky : ky + oh * sy : sy, kx : kx + ow * sx : sx, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def pack_offsets(rf_codes, seg_n, act_bits):
+    """Pack flattened RF codes into segment offsets (Fig 5 pre-processing).
+
+    rf_codes: [..., P] integer codes; P padded to multiple of seg_n with 0.
+    returns [..., ceil(P/seg_n)] int32 offsets (little-endian packing).
+    """
+    p = rf_codes.shape[-1]
+    n_seg = -(-p // seg_n)
+    pad = n_seg * seg_n - p
+    if pad:
+        rf_codes = jnp.pad(rf_codes, [(0, 0)] * (rf_codes.ndim - 1) + [(0, pad)])
+    grouped = rf_codes.reshape(rf_codes.shape[:-1] + (n_seg, seg_n)).astype(jnp.int32)
+    shifts = jnp.arange(seg_n, dtype=jnp.int32) * act_bits
+    return jnp.sum(grouped << shifts, axis=-1)
+
+
+def build_segment_tables(w, act_bits, seg_n):
+    """Segment PCILTs (Fig 5): table[oc, s, off] = sum_j w_j * a_j(off)."""
+    cout = w.shape[0]
+    flat = w.reshape(cout, -1).astype(jnp.int32)  # [Cout, P]
+    p = flat.shape[1]
+    n_seg = -(-p // seg_n)
+    pad = n_seg * seg_n - p
+    if pad:
+        flat = jnp.pad(flat, [(0, 0), (0, pad)])
+    seg_w = flat.reshape(cout, n_seg, seg_n)  # [Cout, S, seg_n]
+    offs = jnp.arange(2 ** (seg_n * act_bits), dtype=jnp.int32)  # [R]
+    mask = (1 << act_bits) - 1
+    # decode a_j for every offset: [R, seg_n]
+    a = (offs[:, None] >> (jnp.arange(seg_n, dtype=jnp.int32) * act_bits)[None, :]) & mask
+    # [Cout, S, R]
+    return jnp.einsum("csj,rj->csr", seg_w, a)
+
+
+def conv2d_segment(x, seg_tables, kh, kw, seg_n, act_bits, stride=(1, 1)):
+    """Segment-offset convolution (Fig 6)."""
+    rf = im2col_rf(x, kh, kw, stride).astype(jnp.int32)
+    offs = pack_offsets(rf, seg_n, act_bits)  # [N,OH,OW,S]
+    cout, n_seg, _r = seg_tables.shape
+    out = jnp.zeros(offs.shape[:3] + (cout,), jnp.int32)
+    for s in range(n_seg):
+        t = seg_tables[:, s, :]  # [Cout, R]
+        out = out + t[:, offs[..., s]].transpose(1, 2, 3, 0)
+    return out
+
+
+def quantize_unsigned(x, max_val, bits):
+    """Unsigned activation quantizer, mirrors rust `Quantizer::unsigned`."""
+    qmax = (1 << bits) - 1
+    scale = jnp.where(max_val > 0, max_val / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), 0, qmax)
+    return q.astype(jnp.uint8), scale
+
+
+def quantize_symmetric(w, bits):
+    """Symmetric weight quantizer, mirrors rust `Quantizer::symmetric`."""
+    qmax = (1 << (bits - 1)) - 1
+    max_abs = jnp.max(jnp.abs(w))
+    scale = jnp.where(max_abs > 0, max_abs / qmax, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale

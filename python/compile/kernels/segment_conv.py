@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: segment-offset PCILT conv (Figs 5-6).
+
+The pre-processing ("bit shifting and masking") packs seg_n activation
+codes into one offset inside the kernel — on TPU these are cheap VPU ops,
+mirroring the paper's "separate circuitry ... pipelining the results to
+the convolutional circuitry". One gather then retrieves the whole
+segment's contribution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_kernel(x_ref, tables_ref, o_ref, *, kh, kw, cin, cout, seg_n, act_bits):
+    """x_ref: [1,H,W,Cin] uint8; tables_ref: [Cout,S,R] int32;
+    o_ref: [1,OH,OW,Cout] int32."""
+    x = x_ref[...].astype(jnp.int32)
+    tables = tables_ref[...]
+    _, h, w, _ = x.shape
+    oh = h - kh + 1
+    ow = w - kw + 1
+    # im2col in the (ky, kx, ic) walk order.
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(x[:, ky : ky + oh, kx : kx + ow, :])
+    rf = jnp.concatenate(cols, axis=-1)  # [1,OH,OW,P]
+    p = rf.shape[-1]
+    n_seg = -(-p // seg_n)
+    pad = n_seg * seg_n - p
+    if pad:
+        rf = jnp.pad(rf, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    grouped = rf.reshape(1, oh, ow, n_seg, seg_n)
+    # offset packing: shift+mask only.
+    shifts = jnp.arange(seg_n, dtype=jnp.int32) * act_bits
+    offs = jnp.sum(grouped << shifts, axis=-1)  # [1,OH,OW,S]
+    acc = jnp.zeros((1, oh, ow, cout), jnp.int32)
+    for s in range(n_seg):
+        t = tables[:, s, :]  # [Cout, R]
+        gathered = jnp.take(t, offs[..., s], axis=1)  # [Cout,1,OH,OW]
+        acc = acc + jnp.moveaxis(gathered, 0, -1)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "seg_n", "act_bits"))
+def segment_conv(x, seg_tables, kh, kw, seg_n, act_bits):
+    """Segment-offset convolution via a Pallas kernel."""
+    n, h, w, cin = x.shape
+    cout, n_seg, r = seg_tables.shape
+    assert n_seg == -(-(kh * kw * cin) // seg_n)
+    assert r == 1 << (seg_n * act_bits)
+    oh, ow = h - kh + 1, w - kw + 1
+    kernel = functools.partial(
+        _segment_kernel, kh=kh, kw=kw, cin=cin, cout=cout, seg_n=seg_n, act_bits=act_bits
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cout, n_seg, r), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32),
+        interpret=True,
+    )(x, seg_tables)

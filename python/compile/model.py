@@ -1,0 +1,226 @@
+"""L2: the QuantCNN model — training graph (fake-quant STE) and the
+integer inference graph wired to the L1 Pallas kernels.
+
+Architecture (deliberately small; the paper's setting is low-cardinality
+inference, not large-scale training):
+
+    input [B,16,16,1] float in [0,1]
+      -> quantize to act codes (act_bits)
+    conv1 3x3, 1->C1, int weights    -> requant+relu -> maxpool 2x2
+    conv2 3x3, C1->C2, int weights   -> requant+relu -> maxpool 2x2
+    flatten -> dense -> logits [B,8]
+
+The integer path is EXACTLY mirrored by `rust/src/model/` (same quantizer
+formulas, same round-ties-even requant), so PJRT artifact outputs and the
+rust-native PCILT engine outputs are bit-comparable.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.dm_conv import dm_conv
+from .kernels.pcilt_conv import pcilt_conv
+from .kernels.segment_conv import segment_conv
+
+NUM_CLASSES = 8
+C1, C2 = 8, 16
+K = 3
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    act_bits: int = 4
+    weight_bits: int = 8
+    # 'pcilt' | 'dm' | 'segment' — which L1 kernel the inference graph uses
+    engine: str = "pcilt"
+    seg_n: int = 2  # for engine == 'segment'
+
+
+def init_params(rng_key, cfg: ModelConfig):
+    """He-init float master weights."""
+    k1, k2, k3 = jax.random.split(rng_key, 3)
+    return {
+        "w1": jax.random.normal(k1, (C1, K, K, 1)) * (2.0 / (K * K)) ** 0.5,
+        "w2": jax.random.normal(k2, (C2, K, K, C1)) * (2.0 / (K * K * C1)) ** 0.5,
+        "w3": jax.random.normal(k3, (NUM_CLASSES, 2 * 2 * C2)) * 0.1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# training graph (float with straight-through fake quantization)
+# ---------------------------------------------------------------------------
+
+
+def _ste_round(x):
+    """Round with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _fake_quant_act(x, max_val, bits):
+    qmax = (1 << bits) - 1
+    scale = max_val / qmax
+    q = jnp.clip(_ste_round(x / scale), 0, qmax)
+    return q * scale
+
+
+def _fake_quant_weight(w, bits):
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jax.lax.stop_gradient(jnp.max(jnp.abs(w))), 1e-6) / qmax
+    q = jnp.clip(_ste_round(w / scale), -qmax, qmax)
+    return q * scale
+
+
+def _conv_f32(x, w):
+    """Float correlation, OHWI weights, valid padding (training path)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        jnp.transpose(w, (1, 2, 3, 0)),  # OHWI -> HWIO
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+# Fixed activation clip ranges (static, so train == infer calibration).
+ACT1_MAX = 4.0
+ACT2_MAX = 8.0
+
+
+def forward_train(params, x, cfg: ModelConfig):
+    """Fake-quantized float forward used for training."""
+    a = _fake_quant_act(x, 1.0, cfg.act_bits)
+    w1 = _fake_quant_weight(params["w1"], cfg.weight_bits)
+    h = _conv_f32(a, w1)
+    h = jnp.clip(h, 0.0, ACT1_MAX)
+    h = _fake_quant_act(h, ACT1_MAX, cfg.act_bits)
+    h = _pool(h)  # [B,7,7,C1]
+    w2 = _fake_quant_weight(params["w2"], cfg.weight_bits)
+    h = _conv_f32(h, w2)
+    h = jnp.clip(h, 0.0, ACT2_MAX)
+    h = _fake_quant_act(h, ACT2_MAX, cfg.act_bits)
+    h = _pool(h)  # [B,2,2,C2]
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["w3"].T
+
+
+def loss_fn(params, x, y, cfg: ModelConfig):
+    logits = forward_train(params, x, cfg)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# integer inference graph
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """Frozen integer parameters + scales for the inference graph."""
+
+    cfg: ModelConfig
+    w1: jnp.ndarray  # int8 [C1,K,K,1]
+    w2: jnp.ndarray  # int8 [C2,K,K,C1]
+    w3: jnp.ndarray  # int8 [8, 64]
+    s_in: float
+    s_w1: float
+    s_w2: float
+    s_w3: float
+    s_a1: float  # scale of conv1 output codes
+    s_a2: float
+
+
+def quantize_model(params, cfg: ModelConfig) -> QuantizedModel:
+    w1, s_w1 = ref.quantize_symmetric(params["w1"], cfg.weight_bits)
+    w2, s_w2 = ref.quantize_symmetric(params["w2"], cfg.weight_bits)
+    w3, s_w3 = ref.quantize_symmetric(params["w3"], cfg.weight_bits)
+    qmax = (1 << cfg.act_bits) - 1
+    return QuantizedModel(
+        cfg=cfg,
+        w1=w1,
+        w2=w2,
+        w3=w3,
+        s_in=1.0 / qmax,
+        s_w1=float(s_w1),
+        s_w2=float(s_w2),
+        s_w3=float(s_w3),
+        s_a1=ACT1_MAX / qmax,
+        s_a2=ACT2_MAX / qmax,
+    )
+
+
+def _requant(acc, multiplier, bits):
+    """i32 accumulator -> unsigned act codes. Round-ties-even to match the
+    rust implementation's `round_ties_even` exactly."""
+    v = jnp.round(acc.astype(jnp.float32) * multiplier)
+    return jnp.clip(v, 0, (1 << bits) - 1).astype(jnp.uint8)
+
+
+def _pool_codes(x):
+    return jax.lax.reduce_window(
+        x, jnp.uint8(0), jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _conv_int(x_codes, w_int8, qm: QuantizedModel):
+    """Dispatch to the configured L1 kernel."""
+    cfg = qm.cfg
+    kh = kw = K
+    if cfg.engine == "dm":
+        return dm_conv(x_codes, w_int8, kh, kw)
+    if cfg.engine == "pcilt":
+        tables = ref.build_tables(w_int8, cfg.act_bits)
+        return pcilt_conv(x_codes, tables, kh, kw)
+    if cfg.engine == "segment":
+        st = ref.build_segment_tables(w_int8, cfg.act_bits, cfg.seg_n)
+        return segment_conv(x_codes, st, kh, kw, cfg.seg_n, cfg.act_bits)
+    raise ValueError(f"unknown engine {cfg.engine}")
+
+
+def forward_int(qm: QuantizedModel, x_codes):
+    """Integer inference: uint8 input codes -> int32 logits.
+
+    All heavy compute goes through the L1 Pallas kernels; the only float
+    ops are the requant multipliers (as on real int8 inference stacks).
+    """
+    cfg = qm.cfg
+    m1 = qm.s_in * qm.s_w1 / qm.s_a1
+    acc1 = _conv_int(x_codes, qm.w1, qm)  # [B,14,14,C1]
+    a1 = _requant(acc1, m1, cfg.act_bits)  # relu folded into the clamp >= 0
+    a1 = _pool_codes(a1)  # [B,7,7,C1]
+    m2 = qm.s_a1 * qm.s_w2 / qm.s_a2
+    acc2 = _conv_int(a1, qm.w2, qm)  # [B,5,5,C2]
+    a2 = _requant(acc2, m2, cfg.act_bits)
+    a2 = _pool_codes(a2)  # [B,2,2,C2]
+    flat = a2.reshape(a2.shape[0], -1).astype(jnp.int32)  # [B,64]
+    logits_i32 = flat @ qm.w3.astype(jnp.int32).T  # [B,8]
+    return logits_i32
+
+
+def forward_float_eval(params, x, cfg: ModelConfig):
+    """Float (non-quantized) forward, the FP32 accuracy baseline of E10."""
+    h = _conv_f32(x, params["w1"])
+    h = jnp.clip(h, 0.0, ACT1_MAX)
+    h = _pool(h)
+    h = _conv_f32(h, params["w2"])
+    h = jnp.clip(h, 0.0, ACT2_MAX)
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["w3"].T
+
+
+def encode_input(x_float, act_bits):
+    """Float [0,1] images -> uint8 activation codes (the serving front
+    door; rust mirrors this in `model::encode_input`)."""
+    q, _ = ref.quantize_unsigned(x_float, 1.0, act_bits)
+    return q

@@ -1,0 +1,92 @@
+"""L2 training: SGD with momentum on the fake-quantized QuantCNN, plus the
+E10 cardinality sweep (FP32 vs INT8/4/2/bool activations).
+
+Run directly for a training log, or let aot.py call `train()`.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import ModelConfig, forward_float_eval, forward_train, init_params, loss_fn
+
+
+def accuracy(logits, y):
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+
+
+def train(
+    cfg: ModelConfig,
+    steps=400,
+    batch=64,
+    lr=0.05,
+    momentum=0.9,
+    seed=0,
+    train_n=4096,
+    test_n=1024,
+    log_every=50,
+    verbose=True,
+):
+    """Train; returns (params, log) where log is a list of dict rows."""
+    xs, ys = data.make_dataset(train_n, seed=seed)
+    xt, yt = data.make_dataset(test_n, seed=seed + 1)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, vel, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb, cfg)
+        vel = jax.tree_util.tree_map(lambda v, g: momentum * v - lr * g, vel, grads)
+        params = jax.tree_util.tree_map(lambda p, v: p + v, params, vel)
+        return params, vel, loss
+
+    rng = np.random.default_rng(seed)
+    log = []
+    t0 = time.time()
+    for i in range(steps):
+        idx = rng.integers(0, train_n, size=batch)
+        params, vel, loss = step(params, vel, xs[idx], ys[idx])
+        if i % log_every == 0 or i == steps - 1:
+            test_acc = accuracy(forward_train(params, xt, cfg), yt)
+            row = {
+                "step": i,
+                "loss": float(loss),
+                "test_acc": test_acc,
+                "elapsed_s": time.time() - t0,
+            }
+            log.append(row)
+            if verbose:
+                print(
+                    f"step {i:4d}  loss {row['loss']:.4f}  "
+                    f"test_acc {test_acc:.3f}  ({row['elapsed_s']:.1f}s)"
+                )
+    return params, log
+
+
+def cardinality_sweep(steps=400, seed=0):
+    """E10: accuracy at FP32 and act_bits in {8,4,2,1}. Returns rows."""
+    rows = []
+    # FP32 baseline: train unquantized (act_bits high enough to be ~lossless
+    # in the STE graph is not the same as true fp32 — train a float model).
+    cfg = ModelConfig(act_bits=8)
+    params, _ = train(cfg, steps=steps, seed=seed, verbose=False)
+    xt, yt = data.make_dataset(1024, seed=seed + 1)
+    fp32_acc = accuracy(forward_float_eval(params, jnp.asarray(xt), cfg), jnp.asarray(yt))
+    rows.append({"setting": "fp32", "test_acc": fp32_acc})
+    for bits in (8, 4, 2, 1):
+        cfg = ModelConfig(act_bits=bits)
+        params, log = train(cfg, steps=steps, seed=seed, verbose=False)
+        rows.append({"setting": f"int{bits}", "test_acc": log[-1]["test_acc"]})
+    return rows
+
+
+if __name__ == "__main__":
+    cfg = ModelConfig()
+    print(f"training QuantCNN act_bits={cfg.act_bits} weight_bits={cfg.weight_bits}")
+    train(cfg)

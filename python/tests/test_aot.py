@@ -1,0 +1,126 @@
+"""AOT pipeline tests: HLO-text emission invariants and artifact-bundle
+format compatibility with the rust loader.
+
+The most important test here guards a silent-wrong-numbers regression we
+hit during development: `as_hlo_text()` **elides large constants** as
+`{...}` unless `print_large_constants=True`, and the HLO text parser then
+reconstructs garbage tables (EXPERIMENTS.md §Perf L2)."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import to_hlo_text
+from compile.kernels import ref
+from compile.kernels.pcilt_conv import pcilt_conv, vmem_footprint_bytes
+
+
+class TestHloText:
+    def test_large_constants_not_elided(self):
+        # A function with a baked constant big enough to trigger elision.
+        table = jnp.arange(16 * 72 * 16, dtype=jnp.int32).reshape(16, 72, 16)
+
+        def fn(x):
+            return (jnp.sum(table[:, 0, :] * x, axis=-1),)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((16,), jnp.int32))
+        text = to_hlo_text(lowered)
+        assert "{...}" not in text, "large constants elided — rust would load garbage"
+        assert "HloModule" in text
+
+    def test_pallas_kernel_lowers_to_hlo_text(self):
+        x = np.random.default_rng(0).integers(0, 16, (1, 6, 6, 1), dtype=np.uint8)
+        w = np.random.default_rng(1).integers(-127, 128, (2, 3, 3, 1)).astype(np.int8)
+        tables = ref.build_tables(jnp.asarray(w), 4)
+
+        def fn(codes):
+            return (pcilt_conv(codes, tables, 3, 3),)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct(x.shape, jnp.uint8))
+        text = to_hlo_text(lowered)
+        assert "{...}" not in text
+        # entry signature carries the uint8 input and int32 output
+        assert "u8[1,6,6,1]" in text
+        assert "s32[" in text
+
+    def test_entry_returns_tuple(self):
+        # rust unwraps with to_tuple1 — the lowering must return a 1-tuple.
+        def fn(x):
+            return (x + 1,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+        text = to_hlo_text(lowered)
+        first = text.splitlines()[0]
+        assert "->(" in first.replace(" ", ""), f"not a tuple return: {first}"
+
+
+class TestArtifactBundle:
+    """Format checks against the built bundle (skipped if not built)."""
+
+    @pytest.fixture(scope="class")
+    def art_dir(self):
+        d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        if not os.path.exists(os.path.join(d, "manifest.toml")):
+            pytest.skip("artifacts not built")
+        return d
+
+    def test_manifest_has_required_keys(self, art_dir):
+        text = open(os.path.join(art_dir, "manifest.toml")).read()
+        for key in (
+            "[model]",
+            "act_bits",
+            "[scales]",
+            "s_in",
+            "[weights]",
+            "w1_len",
+            "[artifacts]",
+            "pcilt_b1",
+        ):
+            assert key in text, f"manifest missing {key}"
+
+    def test_weight_lengths_consistent(self, art_dir):
+        import re
+
+        text = open(os.path.join(art_dir, "manifest.toml")).read()
+        lens = {
+            k: int(re.search(rf"{k} = (\d+)", text).group(1))
+            for k in ("w1_len", "w2_len", "w3_len")
+        }
+        size = os.path.getsize(os.path.join(art_dir, "weights.bin"))
+        assert size == sum(lens.values())
+
+    def test_hlo_files_exist_and_unelided(self, art_dir):
+        import re
+
+        text = open(os.path.join(art_dir, "manifest.toml")).read()
+        files = re.findall(r'= "(model_[^"]+\.hlo\.txt)"', text)
+        assert len(files) >= 4
+        for f in files:
+            content = open(os.path.join(art_dir, f)).read()
+            assert "{...}" not in content, f"{f} has elided constants"
+
+    def test_smoke_pair_shapes(self, art_dir):
+        codes = np.fromfile(os.path.join(art_dir, "smoke_input_b8.bin"), np.uint8)
+        logits = np.fromfile(os.path.join(art_dir, "smoke_logits_b8.bin"), np.int32)
+        labels = np.fromfile(os.path.join(art_dir, "smoke_labels_b8.bin"), np.int32)
+        assert codes.size == 8 * 16 * 16
+        assert logits.size == 8 * 8
+        assert labels.size == 8
+        assert codes.max() <= 15  # INT4 codes
+
+
+class TestVmemModel:
+    def test_footprint_small_enough_for_vmem(self):
+        # DESIGN.md §Hardware-Adaptation: table bank must be VMEM-resident.
+        for (h, w, cin, cout) in [(16, 16, 1, 8), (7, 7, 8, 16)]:
+            b = vmem_footprint_bytes(h, w, cin, cout, 3, 3, 4)
+            assert b < 16 * 1024 * 1024, f"footprint {b} exceeds VMEM budget"
+
+    def test_footprint_scales_with_cardinality(self):
+        a4 = vmem_footprint_bytes(16, 16, 8, 16, 3, 3, 4)
+        a8 = vmem_footprint_bytes(16, 16, 8, 16, 3, 3, 8)
+        assert a8 > a4

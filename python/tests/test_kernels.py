@@ -1,0 +1,192 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal of the python side: the PCILT kernel
+must be bit-exact against DM (the paper's "no result precision loss"), and
+hypothesis sweeps shapes/cardinalities.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.dm_conv import dm_conv
+from compile.kernels.pcilt_conv import pcilt_conv
+from compile.kernels.segment_conv import segment_conv
+
+RNG = np.random.default_rng(42)
+
+
+def rand_case(n, h, w, cin, cout, kh, kw, act_bits, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1 << act_bits, size=(n, h, w, cin), dtype=np.uint8)
+    wt = rng.integers(-127, 128, size=(cout, kh, kw, cin)).astype(np.int8)
+    return jnp.asarray(x), jnp.asarray(wt)
+
+
+class TestRefOracles:
+    """The oracles agree among themselves first."""
+
+    def test_pcilt_ref_equals_dm_ref(self):
+        x, w = rand_case(2, 8, 8, 3, 4, 3, 3, 4, seed=1)
+        tables = ref.build_tables(w, 4)
+        np.testing.assert_array_equal(
+            ref.conv2d_pcilt(x, tables, 3, 3), ref.conv2d_dm(x, w)
+        )
+
+    def test_segment_ref_equals_dm_ref(self):
+        x, w = rand_case(1, 7, 7, 1, 2, 3, 3, 2, seed=2)
+        st_ = ref.build_segment_tables(w, 2, 4)
+        np.testing.assert_array_equal(
+            ref.conv2d_segment(x, st_, 3, 3, 4, 2), ref.conv2d_dm(x, w)
+        )
+
+    def test_pack_offsets_little_endian(self):
+        rf = jnp.asarray([[3, 0, 1, 2]], dtype=jnp.uint8)
+        offs = ref.pack_offsets(rf, 4, 2)
+        assert int(offs[0, 0]) == 3 | (1 << 4) | (2 << 6)
+
+    def test_tables_shape_and_content(self):
+        _, w = rand_case(1, 4, 4, 2, 3, 3, 3, 4, seed=3)
+        t = ref.build_tables(w, 4)
+        assert t.shape == (3, 18, 16)
+        # spot check: position order is (ky,kx,ic)
+        assert int(t[1, 0, 5]) == int(w[1, 0, 0, 0]) * 5
+        assert int(t[2, 4, 3]) == int(w[2, 0, 2, 0]) * 3  # pos 4 = ky0,kx2,ic0
+
+    def test_strided_dm_ref(self):
+        x, w = rand_case(1, 9, 9, 2, 2, 3, 3, 4, seed=4)
+        y = ref.conv2d_dm(x, w, stride=(2, 2))
+        assert y.shape == (1, 4, 4, 2)
+        # check one position by hand
+        acc = sum(
+            int(w[0, ky, kx, ic]) * int(x[0, 2 + ky, 4 + kx, ic])
+            for ky in range(3)
+            for kx in range(3)
+            for ic in range(2)
+        )
+        assert int(y[0, 1, 2, 0]) == acc
+
+
+class TestPciltKernel:
+    def test_exact_vs_ref_small(self):
+        x, w = rand_case(2, 8, 8, 2, 4, 3, 3, 4, seed=5)
+        tables = ref.build_tables(w, 4)
+        got = pcilt_conv(x, tables, 3, 3)
+        np.testing.assert_array_equal(got, ref.conv2d_dm(x, w))
+
+    def test_5x5_kernel(self):
+        x, w = rand_case(1, 12, 10, 1, 3, 5, 5, 4, seed=6)
+        tables = ref.build_tables(w, 4)
+        np.testing.assert_array_equal(pcilt_conv(x, tables, 5, 5), ref.conv2d_dm(x, w))
+
+    def test_bool_activations(self):
+        x, w = rand_case(1, 6, 6, 2, 2, 3, 3, 1, seed=7)
+        tables = ref.build_tables(w, 1)
+        np.testing.assert_array_equal(pcilt_conv(x, tables, 3, 3), ref.conv2d_dm(x, w))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 2),
+        hw=st.integers(5, 10),
+        cin=st.integers(1, 3),
+        cout=st.integers(1, 4),
+        k=st.sampled_from([1, 3, 5]),
+        act_bits=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exactness_hypothesis(self, n, hw, cin, cout, k, act_bits, seed):
+        if k > hw:
+            return
+        x, w = rand_case(n, hw, hw, cin, cout, k, k, act_bits, seed=seed)
+        tables = ref.build_tables(w, act_bits)
+        np.testing.assert_array_equal(
+            pcilt_conv(x, tables, k, k), ref.conv2d_dm(x, w)
+        )
+
+
+class TestDmKernel:
+    def test_exact_vs_ref(self):
+        x, w = rand_case(2, 9, 7, 3, 4, 3, 3, 8, seed=8)
+        np.testing.assert_array_equal(dm_conv(x, w, 3, 3), ref.conv2d_dm(x, w))
+
+    def test_1x1_kernel(self):
+        x, w = rand_case(1, 4, 4, 4, 8, 1, 1, 4, seed=9)
+        np.testing.assert_array_equal(dm_conv(x, w, 1, 1), ref.conv2d_dm(x, w))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        hw=st.integers(4, 9),
+        cin=st.integers(1, 3),
+        cout=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exactness_hypothesis(self, hw, cin, cout, seed):
+        x, w = rand_case(1, hw, hw, cin, cout, 3, 3, 8, seed=seed)
+        np.testing.assert_array_equal(dm_conv(x, w, 3, 3), ref.conv2d_dm(x, w))
+
+
+class TestSegmentKernel:
+    def test_boolhash_config(self):
+        # The BoolHash configuration: bool acts, 8 per offset.
+        x, w = rand_case(1, 8, 8, 1, 2, 5, 5, 1, seed=10)
+        st_ = ref.build_segment_tables(w, 1, 8)
+        got = segment_conv(x, st_, 5, 5, 8, 1)
+        np.testing.assert_array_equal(got, ref.conv2d_dm(x, w))
+
+    def test_int2_by_4(self):
+        x, w = rand_case(2, 7, 7, 2, 3, 3, 3, 2, seed=11)
+        st_ = ref.build_segment_tables(w, 2, 4)
+        np.testing.assert_array_equal(
+            segment_conv(x, st_, 3, 3, 4, 2), ref.conv2d_dm(x, w)
+        )
+
+    def test_seg_n_1_degenerates_to_pcilt(self):
+        x, w = rand_case(1, 6, 6, 1, 2, 3, 3, 4, seed=12)
+        st_ = ref.build_segment_tables(w, 4, 1)
+        np.testing.assert_array_equal(
+            segment_conv(x, st_, 3, 3, 1, 4), ref.conv2d_dm(x, w)
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seg_n=st.sampled_from([1, 2, 4, 8]),
+        act_bits=st.sampled_from([1, 2]),
+        hw=st.integers(5, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exactness_hypothesis(self, seg_n, act_bits, hw, seed):
+        if seg_n * act_bits > 12:
+            return
+        x, w = rand_case(1, hw, hw, 1, 2, 3, 3, act_bits, seed=seed)
+        st_ = ref.build_segment_tables(w, act_bits, seg_n)
+        np.testing.assert_array_equal(
+            segment_conv(x, st_, 3, 3, seg_n, act_bits), ref.conv2d_dm(x, w)
+        )
+
+
+class TestQuantizers:
+    def test_unsigned_range(self):
+        x = jnp.linspace(-1.0, 15.0, 50)
+        q, scale = ref.quantize_unsigned(x, 15.0, 4)
+        assert q.dtype == jnp.uint8
+        assert int(q.min()) == 0 and int(q.max()) == 15
+        assert float(scale) == pytest.approx(1.0)
+
+    def test_symmetric_range(self):
+        w = jnp.asarray([-2.0, -1.0, 0.0, 1.0, 2.0])
+        q, scale = ref.quantize_symmetric(w, 4)
+        assert q.dtype == jnp.int8
+        assert int(q.min()) == -7 and int(q.max()) == 7
+        assert float(scale) == pytest.approx(2.0 / 7.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 10_000))
+    def test_roundtrip_error_bounded(self, bits, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=32).astype(np.float32))
+        q, scale = ref.quantize_symmetric(w, bits)
+        err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(w))
+        assert err.max() <= float(scale) / 2 + 1e-6

@@ -1,0 +1,126 @@
+"""L2 tests: model shapes, quantization glue, training smoke, engine
+agreement on the integer inference path."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import data
+from compile.model import (
+    ModelConfig,
+    encode_input,
+    forward_float_eval,
+    forward_int,
+    forward_train,
+    init_params,
+    loss_fn,
+    quantize_model,
+)
+from compile.train import accuracy, train
+
+
+@pytest.fixture(scope="module")
+def tiny_trained():
+    """A briefly-trained model shared across tests (module-scoped)."""
+    cfg = ModelConfig()
+    params, log = train(cfg, steps=120, train_n=1024, test_n=256, verbose=False)
+    return cfg, params, log
+
+
+class TestData:
+    def test_shapes_and_range(self):
+        x, y = data.make_dataset(32, seed=0)
+        assert x.shape == (32, 16, 16, 1)
+        assert y.shape == (32,)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        assert set(np.unique(y)).issubset(set(range(8)))
+
+    def test_deterministic_by_seed(self):
+        x1, y1 = data.make_dataset(16, seed=7)
+        x2, y2 = data.make_dataset(16, seed=7)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_classes_distinguishable(self):
+        # mean images of different classes differ substantially
+        x, y = data.make_dataset(512, seed=1, noise=0.05)
+        means = [x[y == c].mean(axis=0) for c in range(8)]
+        for a in range(8):
+            for b in range(a + 1, 8):
+                d = np.abs(means[a] - means[b]).mean()
+                assert d > 0.02, f"classes {a},{b} too similar ({d})"
+
+
+class TestTrainGraph:
+    def test_forward_shapes(self):
+        cfg = ModelConfig()
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        x = jnp.zeros((4, 16, 16, 1), jnp.float32)
+        logits = forward_train(params, x, cfg)
+        assert logits.shape == (4, 8)
+
+    def test_loss_finite_and_grad_nonzero(self):
+        cfg = ModelConfig()
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        x, y = data.make_dataset(16, seed=2)
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, jnp.asarray(x), jnp.asarray(y), cfg
+        )
+        assert np.isfinite(float(loss))
+        gnorm = sum(float(jnp.sum(g**2)) for g in jax.tree_util.tree_leaves(grads))
+        assert gnorm > 0.0
+
+    def test_training_reduces_loss(self, tiny_trained):
+        _, _, log = tiny_trained
+        assert log[-1]["loss"] < log[0]["loss"]
+
+    def test_training_beats_chance(self, tiny_trained):
+        _, _, log = tiny_trained
+        assert log[-1]["test_acc"] > 0.5, f"acc={log[-1]['test_acc']}"
+
+
+class TestIntegerInference:
+    def test_quantized_close_to_float(self, tiny_trained):
+        cfg, params, _ = tiny_trained
+        qm = quantize_model(params, cfg)
+        x, y = data.make_dataset(256, seed=3)
+        codes = encode_input(jnp.asarray(x), cfg.act_bits)
+        int_acc = accuracy(forward_int(qm, codes), jnp.asarray(y))
+        fq_acc = accuracy(forward_train(params, jnp.asarray(x), cfg), jnp.asarray(y))
+        assert int_acc > fq_acc - 0.15, f"int={int_acc} fakequant={fq_acc}"
+
+    def test_engines_agree_bitexact(self, tiny_trained):
+        # pcilt / dm / segment integer paths must produce identical logits —
+        # the paper's exactness claim end-to-end.
+        cfg, params, _ = tiny_trained
+        x, _ = data.make_dataset(16, seed=4)
+        codes = encode_input(jnp.asarray(x), cfg.act_bits)
+        outs = {}
+        for engine in ("pcilt", "dm", "segment"):
+            ecfg = ModelConfig(act_bits=cfg.act_bits, engine=engine, seg_n=2)
+            qm = quantize_model(params, ecfg)
+            outs[engine] = np.asarray(forward_int(qm, codes))
+        np.testing.assert_array_equal(outs["pcilt"], outs["dm"])
+        np.testing.assert_array_equal(outs["segment"], outs["dm"])
+
+    def test_logits_are_int32(self, tiny_trained):
+        cfg, params, _ = tiny_trained
+        qm = quantize_model(params, cfg)
+        x, _ = data.make_dataset(2, seed=5)
+        out = forward_int(qm, encode_input(jnp.asarray(x), cfg.act_bits))
+        assert out.dtype == jnp.int32
+        assert out.shape == (2, 8)
+
+    def test_encode_input_range(self):
+        x = jnp.asarray(np.linspace(0, 1, 64, dtype=np.float32).reshape(1, 8, 8, 1))
+        codes = encode_input(x, 4)
+        assert codes.dtype == jnp.uint8
+        assert int(codes.max()) == 15 and int(codes.min()) == 0
+
+    def test_float_eval_baseline_shape(self, tiny_trained):
+        cfg, params, _ = tiny_trained
+        x, _ = data.make_dataset(4, seed=6)
+        out = forward_float_eval(params, jnp.asarray(x), cfg)
+        assert out.shape == (4, 8)

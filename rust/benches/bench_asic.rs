@@ -1,0 +1,124 @@
+//! E2 / E3 — ASIC simulator benchmarks (the paper's Figs 3–4 claims).
+//!
+//! Regenerates the engine-comparison table at every activation
+//! cardinality, the adder-tree sweep, the SRAM/ROM trade, and the lane
+//! scaling curve. Filter with
+//! `cargo bench --bench bench_asic -- <engines|tree|lanes>`.
+
+use pcilt::asic::units::{simulate_reduction, AdderTree};
+use pcilt::asic::{
+    report::comparison_table, simulate_dm, simulate_fft, simulate_pcilt, simulate_segment,
+    simulate_winograd, LayerWorkload, TableMem,
+};
+use pcilt::util::stats::fmt_count;
+
+fn filter_match(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+fn engines() {
+    if !filter_match("engines") {
+        return;
+    }
+    let lanes = 16;
+    for act_bits in [1u32, 2, 4, 8] {
+        let wl = LayerWorkload {
+            act_bits,
+            k: 3,
+            ..LayerWorkload::default_small()
+        };
+        let mut reports = vec![
+            simulate_dm(&wl, lanes),
+            simulate_pcilt(&wl, lanes, 8, TableMem::Sram),
+            simulate_pcilt(&wl, lanes, 8, TableMem::Rom),
+        ];
+        if act_bits <= 2 {
+            reports.push(simulate_segment(
+                &wl,
+                lanes,
+                (8 / act_bits) as usize,
+                TableMem::Sram,
+            ));
+        }
+        reports.push(simulate_winograd(&wl, lanes));
+        reports.push(simulate_fft(&wl, lanes));
+        comparison_table(
+            &format!("E2: ASIC engines at INT{act_bits} activations (Fig 3)"),
+            &wl,
+            &reports,
+            1.0,
+        )
+        .print();
+    }
+}
+
+fn tree() {
+    if !filter_match("tree") {
+        return;
+    }
+    println!("\n## E3: adder tree (Fig 4) — cycle-stepped simulation");
+    // Reduce one 5x5x8 = 200-position RF at each width; cycle counts come
+    // from the *simulated* pipeline, cross-checked against the analytic
+    // formula inside the simulator's tests.
+    let values: Vec<i64> = (0..200).map(|i| (i % 17) as i64).collect();
+    println!(
+        "{:<8} {:>10} {:>8} {:>10} {:>10}",
+        "width", "cycles", "depth", "speedup", "add ops"
+    );
+    let (_, base) = simulate_reduction(1, &values);
+    for width in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut t = AdderTree::new(width);
+        let mut i = 0;
+        let mut cycles = 0u64;
+        while i < values.len() {
+            i += t.feed(&values[i..]);
+            t.tick();
+            cycles += 1;
+        }
+        cycles += t.drain();
+        println!(
+            "{:<8} {:>10} {:>8} {:>9.2}x {:>10}",
+            width,
+            cycles,
+            t.depth(),
+            base as f64 / cycles as f64,
+            t.add_ops
+        );
+    }
+    println!("(width=1 is the serial-adder bottleneck the paper calls out)");
+}
+
+fn lanes() {
+    if !filter_match("lanes") {
+        return;
+    }
+    println!("\n## E2c: lane scaling (how many PCILT units fit vs DM MACs)");
+    let wl = LayerWorkload {
+        act_bits: 2,
+        k: 3,
+        ..LayerWorkload::default_small()
+    };
+    println!(
+        "{:<8} {:>14} {:>14} {:>12} {:>12}",
+        "lanes", "pcilt cycles", "dm cycles", "pcilt area", "dm area"
+    );
+    for lanes in [1usize, 4, 16, 64, 256] {
+        let p = simulate_pcilt(&wl, lanes, 4, TableMem::Rom);
+        let d = simulate_dm(&wl, lanes);
+        println!(
+            "{:<8} {:>14} {:>14} {:>12} {:>12}",
+            lanes,
+            fmt_count(p.cycles as u128),
+            fmt_count(d.cycles as u128),
+            format!("{:.0}um2", p.area_um2),
+            format!("{:.0}um2", d.area_um2),
+        );
+    }
+}
+
+fn main() {
+    engines();
+    tree();
+    lanes();
+}

@@ -1,0 +1,243 @@
+//! E1 / E8 / E9 / E12 — CPU engine benchmarks.
+//!
+//! * **E1** (Figs 1–2): PCILT vs DM across layer shapes and activation
+//!   cardinalities — exactness asserted, wall time reported.
+//! * **E8**: custom convolutional functions cost the same at inference as
+//!   plain multiplication (the table hides the function).
+//! * **E9**: PCILT-as-weights — training-convergence and parameter counts
+//!   for the four adjustment ranges.
+//! * **E12**: the paper's own CPU caveat — the DM-vs-PCILT crossover as
+//!   weight width grows and tables fall out of cache.
+//!
+//! Filter with `cargo bench --bench bench_engines -- <e1|custom|asweights|crossover>`.
+
+use pcilt::pcilt::as_weights::{AdjustRange, TableParamLayer};
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::{ConvFunc, DmEngine, PciltEngine, SharedEngine};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::timing::{bench, section, BenchOpts};
+
+fn filter_match(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+fn e1() {
+    if !filter_match("e1") {
+        return;
+    }
+    section("E1: PCILT vs DM across shapes and cardinalities (Figs 1-2)");
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(1);
+    println!(
+        "{:<34} {:>10} {:>10} {:>9}",
+        "layer", "dm p50", "pcilt p50", "speedup"
+    );
+    for (h, w_dim, cin, cout, k, bits) in [
+        (32usize, 32usize, 8usize, 16usize, 3usize, 4u32),
+        (32, 32, 8, 16, 5, 4),
+        (64, 64, 16, 32, 3, 4),
+        (64, 64, 16, 32, 3, 8),
+        (64, 64, 4, 8, 5, 2),
+        (96, 96, 1, 8, 5, 1),
+    ] {
+        let x = Tensor4::random_activations(Shape4::new(1, h, w_dim, cin), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(cout, k, k, cin), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(k, k);
+        let dm = DmEngine::new(w.clone(), geom);
+        let pc = PciltEngine::new(&w, bits, geom);
+        assert_eq!(dm.conv(&x), pc.conv(&x), "exactness violated");
+        let td = bench("dm", &opts, || dm.conv(&x));
+        let tp = bench("pcilt", &opts, || pc.conv(&x));
+        println!(
+            "{:<34} {:>10} {:>10} {:>8.2}x",
+            format!("{h}x{w_dim}x{cin}->{cout} k{k} a{bits}"),
+            pcilt::util::stats::fmt_ns(td.ns_per_iter()),
+            pcilt::util::stats::fmt_ns(tp.ns_per_iter()),
+            td.ns_per_iter() / tp.ns_per_iter()
+        );
+    }
+}
+
+fn custom() {
+    if !filter_match("custom") {
+        return;
+    }
+    section("E8: custom convolutional functions — identical inference cost");
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(2);
+    let x = Tensor4::random_activations(Shape4::new(1, 64, 64, 8), 4, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(16, 3, 3, 8), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    for f in [
+        ConvFunc::Mul,
+        ConvFunc::SatMul { max: 512 },
+        ConvFunc::LogMul { base: 2.0 },
+        ConvFunc::Codebook {
+            codes: (0..16).map(|i| (i as f32).sqrt()).collect(),
+        },
+    ] {
+        let e = PciltEngine::with_func(&w, 4, geom, &f);
+        let t = bench(f.name(), &opts, || e.conv(&x));
+        println!("{}", t.report());
+    }
+    println!("(the function only affects table *construction*; fetch+add cost is constant)");
+}
+
+fn asweights() {
+    if !filter_match("asweights") {
+        return;
+    }
+    section("E9: PCILT-as-weights — four adjustment ranges");
+    let mut rng = Rng::new(3);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let target = TableParamLayer::random(4, geom, 2, 2, 2.0, &mut rng);
+    let x = Tensor4::random_activations(Shape4::new(8, 8, 8, 2), 2, &mut rng);
+    let (y_t, _) = target.forward(&x);
+    println!(
+        "{:<16} {:>8} {:>12} {:>12} {:>10}",
+        "range", "params", "loss@0", "loss@80", "reduction"
+    );
+    for range in AdjustRange::ALL {
+        let mut model = TableParamLayer::random(4, geom, 2, 2, 0.1, &mut rng);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..80 {
+            let (y, codes) = model.forward(&x);
+            let n = y.data().len() as f32;
+            let mut loss = 0f32;
+            let grad = Tensor4::from_vec(
+                y.shape(),
+                y.data()
+                    .iter()
+                    .zip(y_t.data().iter())
+                    .map(|(&a, &b)| {
+                        loss += (a - b) * (a - b);
+                        (a - b) / n
+                    })
+                    .collect(),
+            );
+            loss /= 2.0 * n;
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            model.sgd_step(&grad, &codes, range, 0.5);
+        }
+        println!(
+            "{:<16} {:>8} {:>12.4} {:>12.4} {:>9.1}x",
+            range.name(),
+            model.param_count(range),
+            first,
+            last,
+            first / last.max(1e-9)
+        );
+    }
+}
+
+fn crossover() {
+    if !filter_match("crossover") {
+        return;
+    }
+    section("E12: CPU crossover — PCILT vs DM as tables grow (paper's CPU caveat)");
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(4);
+    println!(
+        "{:<26} {:>12} {:>10} {:>10} {:>9}",
+        "config", "table bytes", "dm p50", "pcilt p50", "ratio"
+    );
+    for (bits, cin, cout) in [
+        (1u32, 8usize, 16usize),
+        (2, 8, 16),
+        (4, 8, 16),
+        (8, 8, 16),
+        (8, 32, 64),
+    ] {
+        let x = Tensor4::random_activations(Shape4::new(1, 48, 48, cin), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(cout, 3, 3, cin), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let dm = DmEngine::new(w.clone(), geom);
+        let pc = PciltEngine::new(&w, bits, geom);
+        let td = bench("dm", &opts, || dm.conv(&x));
+        let tp = bench("pcilt", &opts, || pc.conv(&x));
+        println!(
+            "{:<26} {:>12} {:>10} {:>10} {:>8.2}x",
+            format!("a{bits} {cin}->{cout}"),
+            pcilt::util::stats::fmt_bytes(pc.tables().bytes(32)),
+            pcilt::util::stats::fmt_ns(td.ns_per_iter()),
+            pcilt::util::stats::fmt_ns(tp.ns_per_iter()),
+            td.ns_per_iter() / tp.ns_per_iter()
+        );
+    }
+    // Shared tables reduce footprint at an indirection cost:
+    let x = Tensor4::random_activations(Shape4::new(1, 48, 48, 8), 4, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(16, 3, 3, 8), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let sh = SharedEngine::new(&w, 4, geom);
+    let t = bench("shared (indirect)", &opts, || sh.conv(&x));
+    println!("{}", t.report());
+}
+
+fn ablation() {
+    if !filter_match("ablation") {
+        return;
+    }
+    section("Ablation: table layout — canonical [oc][p][a] gathers vs channels-last rows");
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(5);
+    let x = Tensor4::random_activations(Shape4::new(1, 64, 64, 8), 4, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(16, 3, 3, 8), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let engine = PciltEngine::new(&w, 4, geom);
+    // canonical-layout inner loop (the pre-optimization design), written
+    // against the same tables so only the layout/loop changes:
+    let canonical = |x: &Tensor4<u8>| {
+        let tables = engine.tables();
+        let s = x.shape();
+        let out_shape = geom.out_shape(s, tables.out_ch);
+        let mut out = Tensor4::<i32>::zeros(out_shape);
+        let card = tables.card;
+        let mut offs = vec![0usize; tables.positions];
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let mut p = 0;
+                    for ky in 0..geom.kh {
+                        let row = x.row_span(n, oy + ky, ox, geom.kw);
+                        for &a in row {
+                            offs[p] = p * card + a as usize;
+                            p += 1;
+                        }
+                    }
+                    for oc in 0..tables.out_ch {
+                        let ch = tables.channel_tables(oc);
+                        let mut acc = 0i32;
+                        for &o in offs.iter() {
+                            acc += ch[o];
+                        }
+                        out.set(n, oy, ox, oc, acc);
+                    }
+                }
+            }
+        }
+        out
+    };
+    assert_eq!(canonical(&x), engine.conv(&x));
+    let tc = bench("canonical gathers", &opts, || canonical(&x));
+    let tl = bench("channels-last rows", &opts, || engine.conv(&x));
+    println!("{}", tc.report());
+    println!("{}", tl.report());
+    println!(
+        "layout speedup: {:.2}x (the §Perf L3 hot-path-1 change)",
+        tc.ns_per_iter() / tl.ns_per_iter()
+    );
+}
+
+fn main() {
+    e1();
+    ablation();
+    custom();
+    asweights();
+    crossover();
+}

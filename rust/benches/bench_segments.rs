@@ -1,0 +1,139 @@
+//! E4 / E5 — segment-offset benchmarks (Figs 5–7).
+//!
+//! * **E4**: the BoolHash speedup curve — boolean activations, segment
+//!   width N ∈ {1,2,4,8,16}, vs scalar DM (paper: 6.59× at N=8).
+//! * **E5**: Fig 7 layout plans — zero-skipping and position reuse.
+//!
+//! Filter with `cargo bench --bench bench_segments -- <boolhash|layout>`.
+
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::dm::conv_reference;
+use pcilt::pcilt::{DmEngine, LayoutEngine, LayoutPlan, PciltEngine, RowSegmentEngine, SegmentEngine};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::stats::fmt_ns;
+use pcilt::util::timing::{bench, section, BenchOpts};
+
+fn filter_match(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+fn boolhash() {
+    if !filter_match("boolhash") {
+        return;
+    }
+    section("E4: BoolHash speedup (Figs 5-6; paper claims 6.59x at N=8)");
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(11);
+    for (bits, cin, label) in [(1u32, 1usize, "bool cin=1"), (1, 4, "bool cin=4"), (2, 4, "INT2 cin=4")] {
+        let x = Tensor4::random_activations(Shape4::new(1, 96, 96, cin), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(8, 5, 5, cin), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(5, 5);
+        let dm = DmEngine::new(w.clone(), geom);
+        let y_ref = dm.conv(&x);
+        let t_dm = bench("dm", &opts, || dm.conv(&x));
+        // A deliberately scalar DM — closer to the kind of baseline the
+        // original BoolHash measurement compared against.
+        let t_scalar = bench("dm-scalar", &opts, || conv_reference(&x, &w, geom));
+        println!(
+            "\n[{label} activations]  dm(simd) p50 = {}, dm(scalar) p50 = {}",
+            fmt_ns(t_dm.ns_per_iter()),
+            fmt_ns(t_scalar.ns_per_iter())
+        );
+        println!(
+            "{:<6} {:>10} {:>10} {:>12} {:>10} {:>12} {:>9} {:>9}",
+            "N", "flat p50", "flat", "row p50", "row", "vs-scalar", "segments", "rows/seg"
+        );
+        for n in [1usize, 2, 4, 8, 16] {
+            if n as u32 * bits > 16 {
+                continue;
+            }
+            let seg = SegmentEngine::new(&w, bits, n, geom);
+            assert_eq!(seg.conv(&x), y_ref);
+            let t = bench("seg", &opts, || seg.conv(&x));
+            let row = RowSegmentEngine::new(&w, bits, n, geom);
+            assert_eq!(row.conv(&x), y_ref);
+            let tr = bench("seg-row", &opts, || row.conv(&x));
+            println!(
+                "{:<6} {:>10} {:>9.2}x {:>12} {:>9.2}x {:>11.2}x {:>9} {:>9}",
+                n,
+                fmt_ns(t.ns_per_iter()),
+                t_dm.ns_per_iter() / t.ns_per_iter(),
+                fmt_ns(tr.ns_per_iter()),
+                t_dm.ns_per_iter() / tr.ns_per_iter(),
+                t_scalar.ns_per_iter() / tr.ns_per_iter(),
+                row.n_segments,
+                seg.seg_card
+            );
+        }
+    }
+}
+
+fn layout() {
+    if !filter_match("layout") {
+        return;
+    }
+    section("E5: Fig 7 layout plans — zero-skipping and reuse");
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(13);
+    let x = Tensor4::random_activations(Shape4::new(1, 96, 96, 1), 2, &mut rng);
+    // A Fig-7-like sparse ring filter: most positions zero.
+    let w = Tensor4::from_fn(Shape4::new(4, 5, 5, 1), |_, ky, kx, _| {
+        if ky == 0 || ky == 4 || kx == 0 || kx == 4 {
+            if (ky + kx) % 2 == 0 {
+                2i8
+            } else {
+                1
+            }
+        } else {
+            0
+        }
+    });
+    let geom = ConvGeometry::unit_stride(5, 5);
+    let dm = DmEngine::new(w.clone(), geom);
+    let y_ref = dm.conv(&x);
+    let t_dm = bench("dm (dense)", &opts, || dm.conv(&x));
+    println!("{}", t_dm.report());
+
+    let dense_plan = LayoutPlan::dense(25, 4);
+    let dense = LayoutEngine::new(&w, 2, dense_plan.clone(), geom);
+    assert_eq!(dense.conv(&x), y_ref);
+    let t_dense = bench("layout dense N=4", &opts, || dense.conv(&x));
+    println!("{}", t_dense.report());
+
+    // zero-skipping per filter is per-layer here (all filters share the
+    // ring support), so one plan works for all output channels:
+    let flat: Vec<i32> = {
+        let mut f = Vec::new();
+        for ky in 0..5 {
+            for kx in 0..5 {
+                f.push(w.get(0, ky, kx, 0) as i32);
+            }
+        }
+        f
+    };
+    let skip_plan = LayoutPlan::zero_skipping(&flat, 4);
+    let skip = LayoutEngine::new(&w, 2, skip_plan.clone(), geom);
+    assert_eq!(skip.conv(&x), y_ref);
+    let t_skip = bench("layout zero-skip N=4", &opts, || skip.conv(&x));
+    println!("{}", t_skip.report());
+    println!(
+        "positions processed: dense {} -> skip {} ({}/25 non-zero); \
+         speedup over dense layout: {:.2}x",
+        dense_plan.work(),
+        skip_plan.work(),
+        flat.iter().filter(|&&v| v != 0).count(),
+        t_dense.ns_per_iter() / t_skip.ns_per_iter()
+    );
+
+    // Basic PCILT for context.
+    let pc = PciltEngine::new(&w, 2, geom);
+    let t_pc = bench("pcilt (per-position)", &opts, || pc.conv(&x));
+    println!("{}", t_pc.report());
+}
+
+fn main() {
+    boolhash();
+    layout();
+}

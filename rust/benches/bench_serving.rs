@@ -1,0 +1,153 @@
+//! E11 — serving benchmarks: the coordinator under Poisson and closed-loop
+//! load, across engines (native PCILT / native DM / PJRT artifact), plus a
+//! batching-policy sweep. Requires `make artifacts` for the `hlo` rows;
+//! native rows run regardless.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pcilt::coordinator::{
+    run_closed_loop, run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts,
+};
+use pcilt::model::random_params;
+use pcilt::runtime::ArtifactBundle;
+use pcilt::util::prng::Rng;
+use pcilt::util::stats::fmt_ns;
+
+fn specs() -> Vec<(String, BackendSpec)> {
+    let mut out = Vec::new();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactBundle::load(&dir) {
+        Ok(bundle) => {
+            out.push((
+                "native-pcilt".into(),
+                BackendSpec::Native {
+                    params: bundle.params.clone(),
+                    engine: NativeEngineKind::Pcilt,
+                },
+            ));
+            out.push((
+                "native-dm".into(),
+                BackendSpec::Native {
+                    params: bundle.params.clone(),
+                    engine: NativeEngineKind::Dm,
+                },
+            ));
+            out.push((
+                "native-segment2".into(),
+                BackendSpec::Native {
+                    params: bundle.params.clone(),
+                    engine: NativeEngineKind::Segment { seg_n: 2 },
+                },
+            ));
+            out.push((
+                "hlo-pcilt".into(),
+                BackendSpec::Hlo {
+                    bundle,
+                    engine: "pcilt".into(),
+                },
+            ));
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); benching random-weight native engines");
+            let mut rng = Rng::new(1);
+            let params = random_params(4, &mut rng);
+            out.push((
+                "native-pcilt".into(),
+                BackendSpec::Native {
+                    params: params.clone(),
+                    engine: NativeEngineKind::Pcilt,
+                },
+            ));
+            out.push((
+                "native-dm".into(),
+                BackendSpec::Native {
+                    params,
+                    engine: NativeEngineKind::Dm,
+                },
+            ));
+        }
+    }
+    out
+}
+
+fn main() {
+    let opts = ServerOpts {
+        workers: 4,
+        max_batch: 8,
+        batch_deadline: Duration::from_micros(2_000),
+        queue_capacity: 2048,
+    };
+
+    println!("## E11a: open-loop Poisson (2000 rps offered, 3000 requests)");
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>12} {:>8}",
+        "engine", "p50", "p99", "tput rps", "mean batch", "shed"
+    );
+    for (name, spec) in specs() {
+        let server = Arc::new(Server::start(spec, &opts).expect("server start"));
+        server.warmup(8, 16).expect("warmup");
+        let report = run_poisson(&server, 2000.0, 3000, 16, 4, 0xAB);
+        let m = server.metrics();
+        println!(
+            "{:<16} {:>10} {:>10} {:>10.0} {:>12.2} {:>8}",
+            name,
+            fmt_ns(m.p50_latency_ns),
+            fmt_ns(m.p99_latency_ns),
+            m.throughput_rps,
+            m.mean_batch_size,
+            report.rejected
+        );
+    }
+
+    println!("\n## E11b: closed-loop peak throughput (8 clients x 400 reqs)");
+    println!(
+        "{:<16} {:>12} {:>10} {:>10}",
+        "engine", "tput rps", "p50", "p99"
+    );
+    for (name, spec) in specs() {
+        let server = Arc::new(Server::start(spec, &opts).expect("server start"));
+        server.warmup(8, 16).expect("warmup");
+        let report = run_closed_loop(&server, 8, 400, 16, 4, 0xCD);
+        let m = server.metrics();
+        println!(
+            "{:<16} {:>12.0} {:>10} {:>10}",
+            name,
+            report.accepted as f64 / report.wall_s,
+            fmt_ns(m.p50_latency_ns),
+            fmt_ns(m.p99_latency_ns),
+        );
+    }
+
+    println!("\n## E11c: batching policy sweep (native-pcilt, closed loop)");
+    println!(
+        "{:<22} {:>12} {:>10} {:>12}",
+        "policy", "tput rps", "p99", "mean batch"
+    );
+    let base_spec = specs().remove(0).1;
+    for (max_batch, deadline_us) in [(1usize, 0u64), (4, 500), (8, 2_000), (16, 5_000)] {
+        let server = Arc::new(
+            Server::start(
+                base_spec.clone(),
+                &ServerOpts {
+                    workers: 4,
+                    max_batch,
+                    batch_deadline: Duration::from_micros(deadline_us),
+                    queue_capacity: 2048,
+                },
+            )
+            .expect("server start"),
+        );
+        server.warmup(8, 16).expect("warmup");
+        let report = run_closed_loop(&server, 8, 300, 16, 4, 0xEF);
+        let m = server.metrics();
+        println!(
+            "{:<22} {:>12.0} {:>10} {:>12.2}",
+            format!("batch<={max_batch} ddl={deadline_us}us"),
+            report.accepted as f64 / report.wall_s,
+            fmt_ns(m.p99_latency_ns),
+            m.mean_batch_size
+        );
+    }
+}

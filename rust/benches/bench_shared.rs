@@ -1,0 +1,91 @@
+//! E7 — shared PCILTs (§Using Shared PCILTs): the ~25 MB / ~18 MB
+//! network-size-independent memory claims, the dedup sweep over actual
+//! weight cardinality, value-level indirection, and the indirection
+//! latency cost on CPU.
+
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::shared::{SharedTables, ValueIndirection};
+use pcilt::pcilt::{ConvFunc, PciltEngine, SharedEngine};
+use pcilt::pcilt::memory::shared_pcilt_bytes;
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::stats::{fmt_bytes, fmt_ns};
+use pcilt::util::timing::{bench, section, BenchOpts};
+
+fn palette_weights(shape: Shape4, palette: &[i8], rng: &mut Rng) -> Tensor4<i8> {
+    Tensor4::from_fn(shape, |_, _, _, _| *rng.choose(palette))
+}
+
+fn main() {
+    section("E7a: the paper's shared-table arithmetic (network-size independent)");
+    let unshared = shared_pcilt_bytes(32, &[10, 16], 32, false);
+    let prefix = shared_pcilt_bytes(32, &[10, 16], 32, true);
+    println!(
+        "32-value INT16 weights x {{INT10, INT16}} acts: {} (paper ~25 MB)",
+        fmt_bytes(unshared)
+    );
+    println!(
+        "with prefix sharing:                           {} (paper ~18 MB)",
+        fmt_bytes(prefix)
+    );
+    println!(
+        "(same formula, paper's constants are ~3x larger — see EXPERIMENTS.md §E7;\n\
+         the headline property holds: the total is independent of network size)"
+    );
+
+    section("E7b: dedup sweep — memory savings vs actual weight cardinality");
+    let mut rng = Rng::new(21);
+    println!(
+        "{:<24} {:>10} {:>14} {:>14} {:>9}",
+        "palette", "uniques", "dense", "shared", "savings"
+    );
+    let shape = Shape4::new(32, 5, 5, 16);
+    for palette in [
+        vec![-1i8, 0, 1],
+        vec![-3, -1, 0, 1, 3],
+        (-7..=7).collect::<Vec<i8>>(),
+        (-63..=63).collect::<Vec<i8>>(),
+    ] {
+        let w = palette_weights(shape, &palette, &mut rng);
+        let t = SharedTables::build(&w, 8, &ConvFunc::Mul);
+        let m = t.bytes(16);
+        println!(
+            "{:<24} {:>10} {:>14} {:>14} {:>8.1}x",
+            format!("{} values", palette.len()),
+            t.n_unique,
+            fmt_bytes(m.dense_bytes),
+            fmt_bytes(m.total()),
+            m.savings_ratio()
+        );
+    }
+
+    section("E7c: value-level indirection variant");
+    let w = palette_weights(Shape4::new(16, 3, 3, 8), &[-2, -1, 0, 1, 2], &mut rng);
+    let vi = ValueIndirection::build(&w, 4, &ConvFunc::Mul);
+    let st = SharedTables::build(&w, 4, &ConvFunc::Mul);
+    println!(
+        "pool of {} unique values; value-indirect {} vs table-pointer {}",
+        vi.pool.len(),
+        fmt_bytes(vi.bytes(16)),
+        fmt_bytes(st.bytes(16).total()),
+    );
+
+    section("E7d: the indirection delay on CPU (shared vs dense tables)");
+    let opts = BenchOpts::default();
+    let x = Tensor4::random_activations(Shape4::new(1, 64, 64, 8), 4, &mut rng);
+    let w = palette_weights(Shape4::new(16, 3, 3, 8), &[-3, -1, 0, 1, 3], &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let dense = PciltEngine::new(&w, 4, geom);
+    let shared = SharedEngine::new(&w, 4, geom);
+    assert_eq!(dense.conv(&x), shared.conv(&x));
+    let td = bench("pcilt dense", &opts, || dense.conv(&x));
+    let ts = bench("pcilt shared", &opts, || shared.conv(&x));
+    println!("{}", td.report());
+    println!("{}", ts.report());
+    println!(
+        "indirection cost: {:.2}x slower, {:.1}x less table memory",
+        ts.ns_per_iter() / td.ns_per_iter(),
+        dense.tables().bytes(16) / shared.tables().bytes(16).total()
+    );
+    let _ = fmt_ns(0.0);
+}

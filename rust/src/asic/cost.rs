@@ -1,0 +1,216 @@
+//! Unit cost models for the ASIC simulator.
+//!
+//! The paper's performance claims live on a hypothetical custom CNN ASIC;
+//! we make them testable with a transparent operation-level cost model.
+//! Energy numbers are calibrated to the source the paper itself cites for
+//! its "differs by more than a magnitude" claim — W. Dally, *High-
+//! Performance Hardware for Machine Learning*, NIPS 2015 tutorial (45 nm):
+//!
+//! | op                | energy (pJ) |
+//! |-------------------|-------------|
+//! | INT8 add          | 0.03        |
+//! | INT32 add         | 0.1         |
+//! | FP32 add          | 0.9         |
+//! | INT8 multiply     | 0.2         |
+//! | INT32 multiply    | 3.1         |
+//! | FP32 multiply     | 3.7         |
+//! | SRAM read (8 KB)  | 5           |
+//! | SRAM read (32 KB) | 10          |
+//! | SRAM read (1 MB)  | 100         |
+//! | DRAM read         | 1,280–2,560 |
+//!
+//! Latency is modeled in cycles with simple width-scaled rules; area in
+//! arbitrary gate units scaled to Dally's add/multiply area ratios (INT8
+//! add ≈ 36 µm², INT8 mul ≈ 282 µm², FP32 add 4,184 µm², FP32 mul
+//! 7,700 µm² at 45 nm). The absolute numbers matter less than the
+//! *ratios*, which are what the paper's argument uses.
+
+/// Numeric kind of an operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumKind {
+    Int,
+    Float,
+}
+
+/// Cost (energy pJ, latency cycles, area µm²) of one operator instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitCost {
+    pub energy_pj: f64,
+    pub latency_cycles: u32,
+    pub area_um2: f64,
+}
+
+/// Interpolate/extrapolate energies by bit width from the calibration
+/// anchors, linear in width for adds, quadratic for multiplies (array
+/// multiplier scaling).
+pub fn add_cost(bits: u32, kind: NumKind) -> UnitCost {
+    match kind {
+        NumKind::Int => {
+            // anchors: 8 -> 0.03 pJ, 32 -> 0.1 pJ (linear in width)
+            let energy = 0.03 + (bits.max(1) as f64 - 8.0) * (0.1 - 0.03) / 24.0;
+            UnitCost {
+                energy_pj: energy.max(0.005),
+                latency_cycles: 1,
+                area_um2: 36.0 * bits as f64 / 8.0,
+            }
+        }
+        NumKind::Float => UnitCost {
+            energy_pj: 0.9,
+            latency_cycles: 2,
+            area_um2: 4184.0,
+        },
+    }
+}
+
+pub fn mul_cost(bits: u32, kind: NumKind) -> UnitCost {
+    match kind {
+        NumKind::Int => {
+            // anchors: 8 -> 0.2 pJ, 32 -> 3.1 pJ; power-law fit
+            // e = 0.2 * w^alpha with alpha = ln(15.5)/ln(4) ≈ 1.977
+            // (≈ quadratic, as expected for an array multiplier).
+            let w = bits.max(1) as f64 / 8.0;
+            let alpha = (3.1f64 / 0.2).ln() / 4f64.ln();
+            let energy = 0.2 * w.powf(alpha);
+            UnitCost {
+                energy_pj: energy.max(0.02),
+                latency_cycles: if bits <= 8 { 1 } else { 3 },
+                area_um2: 282.0 * w * w,
+            }
+        }
+        NumKind::Float => UnitCost {
+            energy_pj: 3.7,
+            latency_cycles: 4,
+            area_um2: 7700.0,
+        },
+    }
+}
+
+/// SRAM read cost as a function of bank capacity in bytes.
+/// Anchors: 8 KB → 5 pJ, 32 KB → 10 pJ, 1 MB → 100 pJ
+/// (≈ energy ∝ sqrt(capacity), the usual bank-wire scaling).
+pub fn sram_read_cost(capacity_bytes: f64) -> UnitCost {
+    let kb = (capacity_bytes / 1024.0).max(0.03125); // floor at a 32 B block
+    // fit e = a * sqrt(kb): through (8,5): a = 5/sqrt(8) = 1.77;
+    // check: 32 KB -> 10.0 ✓, 1024 KB -> 56.6 (under the 100 anchor;
+    // take the max of sqrt fit and linear-to-1MB fit for conservatism)
+    let sqrt_fit = 5.0 / 8f64.sqrt() * kb.sqrt();
+    let lin_fit = 100.0 * kb / 1024.0;
+    UnitCost {
+        energy_pj: sqrt_fit.max(lin_fit),
+        latency_cycles: if kb <= 32.0 { 1 } else { 2 },
+        // ~0.45 µm²/byte at 45nm 6T SRAM (~0.075 µm²/bit)
+        area_um2: capacity_bytes * 0.45,
+    }
+}
+
+/// ROM read: cheaper than SRAM of the same size (no write circuitry);
+/// the paper notes PCILTs "can be stored in ROM instead of RAM".
+pub fn rom_read_cost(capacity_bytes: f64) -> UnitCost {
+    let s = sram_read_cost(capacity_bytes);
+    UnitCost {
+        energy_pj: s.energy_pj * 0.5,
+        latency_cycles: s.latency_cycles,
+        area_um2: s.area_um2 * 0.4,
+    }
+}
+
+/// Off-chip DRAM read per 32-bit word.
+pub fn dram_read_cost() -> UnitCost {
+    UnitCost {
+        energy_pj: 1920.0, // middle of Dally's 1.28–2.56 nJ range
+        latency_cycles: 100,
+        area_um2: 0.0,
+    }
+}
+
+/// Register-file access (tiny, ~1 pJ at most): used for the shift/mask
+/// offset pre-processing, which the paper notes is much cheaper than
+/// arithmetic.
+pub fn reg_cost() -> UnitCost {
+    UnitCost {
+        energy_pj: 0.01,
+        latency_cycles: 0,
+        area_um2: 10.0,
+    }
+}
+
+/// Shift/mask op — "bit shifting and masking perform much better than
+/// multiplication and division, or even addition and subtraction".
+pub fn shift_cost(bits: u32) -> UnitCost {
+    UnitCost {
+        energy_pj: 0.01 * bits as f64 / 8.0,
+        latency_cycles: 1,
+        area_um2: 12.0 * bits as f64 / 8.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dally_anchor_points() {
+        assert!((add_cost(8, NumKind::Int).energy_pj - 0.03).abs() < 1e-12);
+        assert!((add_cost(32, NumKind::Int).energy_pj - 0.1).abs() < 1e-12);
+        assert!((mul_cost(8, NumKind::Int).energy_pj - 0.2).abs() < 1e-12);
+        assert!((mul_cost(32, NumKind::Int).energy_pj - 3.1).abs() < 1e-9);
+        assert_eq!(add_cost(32, NumKind::Float).energy_pj, 0.9);
+        assert_eq!(mul_cost(32, NumKind::Float).energy_pj, 3.7);
+    }
+
+    #[test]
+    fn paper_ratio_claims_hold() {
+        // Dally via the paper: FP32 vs INT8 — 30x for add, 18.5x for mul.
+        let add_ratio = add_cost(32, NumKind::Float).energy_pj / add_cost(8, NumKind::Int).energy_pj;
+        let mul_ratio = mul_cost(32, NumKind::Float).energy_pj / mul_cost(8, NumKind::Int).energy_pj;
+        assert!((add_ratio - 30.0).abs() < 1.0, "add ratio {add_ratio}");
+        assert!((mul_ratio - 18.5).abs() < 1.0, "mul ratio {mul_ratio}");
+    }
+
+    #[test]
+    fn mul_much_pricier_than_add() {
+        // The core PCILT premise: eliminating the multiply matters.
+        for bits in [4, 8, 16, 32] {
+            assert!(
+                mul_cost(bits, NumKind::Int).energy_pj > 2.5 * add_cost(bits, NumKind::Int).energy_pj
+            );
+        }
+    }
+
+    #[test]
+    fn sram_anchors() {
+        assert!((sram_read_cost(8.0 * 1024.0).energy_pj - 5.0).abs() < 0.01);
+        assert!((sram_read_cost(32.0 * 1024.0).energy_pj - 10.0).abs() < 0.01);
+        assert!((sram_read_cost(1024.0 * 1024.0).energy_pj - 100.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn sram_monotone_in_capacity() {
+        let mut last = 0.0;
+        for kb in [1.0, 4.0, 16.0, 64.0, 256.0, 2048.0] {
+            let e = sram_read_cost(kb * 1024.0).energy_pj;
+            assert!(e > last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn small_sram_cheaper_than_int32_dram() {
+        // PCILT's case rests on small fast table memory beating repeated
+        // arithmetic + big memory traffic.
+        assert!(sram_read_cost(4096.0).energy_pj < dram_read_cost().energy_pj / 100.0);
+    }
+
+    #[test]
+    fn rom_cheaper_than_sram() {
+        let s = sram_read_cost(65536.0);
+        let r = rom_read_cost(65536.0);
+        assert!(r.energy_pj < s.energy_pj);
+        assert!(r.area_um2 < s.area_um2);
+    }
+
+    #[test]
+    fn shifts_are_nearly_free() {
+        assert!(shift_cost(16).energy_pj < add_cost(8, NumKind::Int).energy_pj);
+    }
+}

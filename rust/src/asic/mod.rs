@@ -1,0 +1,18 @@
+//! ASIC simulator substrate — the hardware the paper's performance claims
+//! presuppose, built as a transparent cost/cycle model (DESIGN.md §2).
+//!
+//! * [`cost`] — per-operation energy/latency/area, calibrated to the Dally
+//!   NIPS'15 numbers the paper cites.
+//! * [`units`] — cycle-stepped memory banks and the Fig 4 adder tree.
+//! * [`engines`] — PCILT / DM / segment / Winograd / FFT datapath models.
+//! * [`report`] — comparison tables for E2/E3.
+
+pub mod cost;
+pub mod engines;
+pub mod report;
+pub mod units;
+
+pub use engines::{
+    simulate_dm, simulate_fft, simulate_pcilt, simulate_segment, simulate_winograd, AsicReport,
+    LayerWorkload, TableMem,
+};

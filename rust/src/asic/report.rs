@@ -1,0 +1,82 @@
+//! Tabular reporting for the ASIC experiments (E2/E3): formats
+//! [`AsicReport`]s into the comparison tables printed by `bench_asic` and
+//! the `pcilt sim` CLI subcommand.
+
+use crate::util::stats::{fmt_bytes, fmt_count};
+
+use super::engines::{AsicReport, LayerWorkload};
+
+/// A rendered comparison table.
+pub struct ComparisonTable {
+    pub title: String,
+    pub rows: Vec<String>,
+}
+
+impl ComparisonTable {
+    pub fn print(&self) {
+        println!("\n## {}", self.title);
+        for r in &self.rows {
+            println!("{r}");
+        }
+    }
+}
+
+/// Build the engine-comparison table for one workload at a clock.
+pub fn comparison_table(
+    title: &str,
+    wl: &LayerWorkload,
+    reports: &[AsicReport],
+    clock_ghz: f64,
+) -> ComparisonTable {
+    let mut rows = Vec::new();
+    rows.push(format!(
+        "workload: {}x{}x{} -> {} filters {}x{}, a{}w{} bits, {} lanes, {:.1} GHz",
+        wl.h, wl.w, wl.cin, wl.cout, wl.k, wl.k, wl.act_bits, wl.weight_bits,
+        reports.first().map(|r| r.lanes).unwrap_or(0), clock_ghz
+    ));
+    rows.push(format!(
+        "{:<24} {:>12} {:>12} {:>12} {:>12} {:>14} {:>12}",
+        "engine", "cycles", "mults", "adds", "energy/out", "throughput", "area"
+    ));
+    // Normalize against the first report (conventionally the DM baseline).
+    let base = reports.first();
+    for r in reports {
+        let speedup = base
+            .map(|b| b.cycles as f64 / r.cycles as f64)
+            .unwrap_or(1.0);
+        rows.push(format!(
+            "{:<24} {:>12} {:>12} {:>12} {:>10.2}pJ {:>11.2e}/s {:>9} ({:>5.2}x vs base)",
+            r.engine,
+            fmt_count(r.cycles as u128),
+            fmt_count(r.mults as u128),
+            fmt_count(r.adds as u128),
+            r.energy_per_output(wl),
+            r.throughput(wl, clock_ghz),
+            fmt_bytes(r.area_um2), // µm² rendered via byte formatter scale
+            speedup,
+        ));
+    }
+    ComparisonTable {
+        title: title.to_string(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::engines::{simulate_dm, simulate_pcilt, TableMem};
+
+    #[test]
+    fn table_renders_all_engines() {
+        let wl = LayerWorkload::default_small();
+        let reports = vec![
+            simulate_dm(&wl, 16),
+            simulate_pcilt(&wl, 16, 8, TableMem::Sram),
+        ];
+        let t = comparison_table("E2", &wl, &reports, 1.0);
+        assert_eq!(t.rows.len(), 4); // header x2 + 2 engines
+        assert!(t.rows[2].contains("dm"));
+        assert!(t.rows[3].contains("pcilt"));
+    }
+}

@@ -1,0 +1,251 @@
+//! Cycle-stepped hardware unit models: SRAM banks with port contention and
+//! the pipelined adder tree of Fig 4.
+//!
+//! These are deliberately small, explicit state machines — the experiments
+//! step them cycle by cycle so bottleneck claims ("the inference speed
+//! bottleneck there will be the adder") come out of a simulation rather
+//! than a formula.
+
+/// A memory bank with a fixed number of read ports. Requests beyond the
+/// port count in a cycle stall (model of the shared-PCILT "sharing … may
+/// cause a processing delay").
+#[derive(Debug, Clone)]
+pub struct MemBank {
+    pub capacity_bytes: f64,
+    pub ports: u32,
+    /// Reads served this cycle (reset by `tick`).
+    inflight: u32,
+    /// Total reads served.
+    pub reads: u64,
+    /// Total cycles any request had to stall for a port.
+    pub stalls: u64,
+}
+
+impl MemBank {
+    pub fn new(capacity_bytes: f64, ports: u32) -> MemBank {
+        assert!(ports >= 1);
+        MemBank {
+            capacity_bytes,
+            ports,
+            inflight: 0,
+            reads: 0,
+            stalls: 0,
+        }
+    }
+
+    /// Try to issue a read this cycle. Returns false (and records a stall)
+    /// if all ports are busy.
+    pub fn try_read(&mut self) -> bool {
+        if self.inflight < self.ports {
+            self.inflight += 1;
+            self.reads += 1;
+            true
+        } else {
+            self.stalls += 1;
+            false
+        }
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self) {
+        self.inflight = 0;
+    }
+}
+
+/// Pipelined adder tree (Fig 4): `width` leaf inputs per cycle, `depth =
+/// ceil(log2(width))` register stages, plus a root accumulator. With
+/// `width = 1` it degenerates to the single serial adder whose bottleneck
+/// the paper calls out.
+#[derive(Debug, Clone)]
+pub struct AdderTree {
+    pub width: usize,
+    depth: usize,
+    /// Values in flight, one slot per pipeline stage (each slot is a
+    /// partial sum that will reach the accumulator `depth` cycles later).
+    pipeline: Vec<Option<i64>>,
+    /// Root accumulator.
+    pub acc: i64,
+    /// Adder activations (for energy accounting): each cycle, each active
+    /// tree level does its adds.
+    pub add_ops: u64,
+    cycle: u64,
+}
+
+impl AdderTree {
+    pub fn new(width: usize) -> AdderTree {
+        assert!(width >= 1);
+        let depth = (usize::BITS - (width - 1).leading_zeros()) as usize; // ceil(log2)
+        AdderTree {
+            width,
+            depth: depth.max(1),
+            pipeline: vec![None; depth.max(1)],
+            acc: 0,
+            add_ops: 0,
+            cycle: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Feed up to `width` values this cycle; returns how many were taken.
+    /// Values reduce combinationally into one partial sum that enters the
+    /// pipeline; the pipeline drains into the accumulator.
+    pub fn feed(&mut self, values: &[i64]) -> usize {
+        let take = values.len().min(self.width);
+        if take > 0 {
+            let partial: i64 = values[..take].iter().sum();
+            // adds used: take-1 within the tree this cycle
+            self.add_ops += take.saturating_sub(1) as u64;
+            // enters stage 0; shifted by tick()
+            debug_assert!(self.pipeline[0].is_none(), "feed before tick");
+            self.pipeline[0] = Some(partial);
+        }
+        take
+    }
+
+    /// Advance one cycle: shift the pipeline; the last stage folds into the
+    /// accumulator (one more add).
+    pub fn tick(&mut self) {
+        self.cycle += 1;
+        let last = self.pipeline.pop().expect("pipeline is never empty");
+        if let Some(v) = last {
+            self.acc += v;
+            self.add_ops += 1;
+        }
+        self.pipeline.insert(0, None);
+    }
+
+    /// Is anything still in flight?
+    pub fn busy(&self) -> bool {
+        self.pipeline.iter().any(Option::is_some)
+    }
+
+    /// Drain fully; returns cycles spent draining.
+    pub fn drain(&mut self) -> u64 {
+        let mut c = 0;
+        while self.busy() {
+            self.tick();
+            c += 1;
+        }
+        c
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Convenience: cycles to reduce `n` values through this tree,
+    /// including drain (analytic cross-check for the simulation).
+    pub fn reduce_cycles(width: usize, n: usize) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        let feeds = n.div_ceil(width) as u64;
+        let depth = AdderTree::new(width).depth() as u64;
+        // the last feed's tick overlaps the first drain cycle
+        feeds + depth - 1
+    }
+}
+
+/// Run a full reduction of `values` through a fresh tree of `width`;
+/// returns (sum, cycles).
+pub fn simulate_reduction(width: usize, values: &[i64]) -> (i64, u64) {
+    let mut tree = AdderTree::new(width);
+    let mut i = 0;
+    let mut cycles = 0u64;
+    while i < values.len() {
+        let take = tree.feed(&values[i..]);
+        i += take;
+        tree.tick();
+        cycles += 1;
+    }
+    cycles += tree.drain();
+    (tree.acc, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn membank_ports_limit_reads_per_cycle() {
+        let mut b = MemBank::new(1024.0, 2);
+        assert!(b.try_read());
+        assert!(b.try_read());
+        assert!(!b.try_read()); // third read stalls
+        assert_eq!(b.stalls, 1);
+        b.tick();
+        assert!(b.try_read());
+        assert_eq!(b.reads, 3);
+    }
+
+    #[test]
+    fn tree_sums_correctly() {
+        forall("adder tree sum == naive sum", 100, |g| {
+            let width = g.one_of(&[1usize, 2, 4, 8, 16]);
+            let n = g.usize(0, 64);
+            let values = g.vec_of(n, |g| g.i64(-1000, 1000));
+            let (sum, _) = simulate_reduction(width, &values);
+            assert_eq!(sum, values.iter().sum::<i64>());
+        });
+    }
+
+    #[test]
+    fn simulated_cycles_match_analytic() {
+        forall("sim cycles == analytic", 100, |g| {
+            let width = g.one_of(&[1usize, 2, 4, 8, 16, 32]);
+            let n = g.usize(1, 100);
+            let values = g.vec_of(n, |_| 1i64);
+            let (_, cycles) = simulate_reduction(width, &values);
+            assert_eq!(cycles, AdderTree::reduce_cycles(width, n));
+        });
+    }
+
+    #[test]
+    fn wider_tree_is_faster() {
+        // Fig 4: "that might be sped up by having a tree of adders".
+        let values: Vec<i64> = (0..25).collect(); // a 5x5 RF
+        let (_, c1) = simulate_reduction(1, &values);
+        let (_, c4) = simulate_reduction(4, &values);
+        let (_, c8) = simulate_reduction(8, &values);
+        assert!(c1 > c4 && c4 > c8, "c1={c1} c4={c4} c8={c8}");
+    }
+
+    #[test]
+    fn serial_adder_is_the_bottleneck() {
+        // width=1: cycles ≈ n (the paper's bottleneck case).
+        let values = vec![1i64; 100];
+        let (_, c) = simulate_reduction(1, &values);
+        assert!(c >= 100);
+    }
+
+    #[test]
+    fn add_ops_counted() {
+        // Reducing n values needs exactly n-1 adds... plus the accumulator
+        // folds (one per feed chunk). Check total ≥ n-1 and the sum exact.
+        let values = vec![2i64; 17];
+        let mut tree = AdderTree::new(4);
+        let mut i = 0;
+        while i < values.len() {
+            i += tree.feed(&values[i..]);
+            tree.tick();
+        }
+        tree.drain();
+        assert_eq!(tree.acc, 34);
+        assert!(tree.add_ops >= 16);
+    }
+
+    #[test]
+    fn depth_is_log2_width() {
+        assert_eq!(AdderTree::new(1).depth(), 1);
+        assert_eq!(AdderTree::new(2).depth(), 1);
+        assert_eq!(AdderTree::new(4).depth(), 2);
+        assert_eq!(AdderTree::new(8).depth(), 3);
+        assert_eq!(AdderTree::new(16).depth(), 4);
+        let _ = Rng::new(0); // keep import used
+    }
+}

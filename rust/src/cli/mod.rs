@@ -1,0 +1,179 @@
+//! Hand-rolled CLI argument parsing (`clap` is unavailable offline).
+//!
+//! Grammar: `pcilt <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are errors; every subcommand supports `--help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + key/value options.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// CLI parse errors.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CliError {
+    #[error("missing subcommand; try `pcilt help`")]
+    MissingSubcommand,
+    #[error("option '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("unexpected positional argument '{0}'")]
+    UnexpectedPositional(String),
+    #[error("unknown option '--{0}' for subcommand '{1}'")]
+    UnknownOption(String, String),
+    #[error("invalid value for '--{0}': {1}")]
+    InvalidValue(String, String),
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `valued` lists options that take a
+    /// value; `flags` lists boolean options.
+    pub fn parse(
+        raw: &[String],
+        valued: &[&str],
+        flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut it = raw.iter();
+        let subcommand = it.next().ok_or(CliError::MissingSubcommand)?.clone();
+        let mut opts = BTreeMap::new();
+        let mut got_flags = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(CliError::UnexpectedPositional(tok.clone()));
+            };
+            if flags.contains(&name) {
+                got_flags.push(name.to_string());
+            } else if valued.contains(&name) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                opts.insert(name.to_string(), v.clone());
+            } else {
+                return Err(CliError::UnknownOption(name.to_string(), subcommand));
+            }
+        }
+        Ok(Args {
+            subcommand,
+            opts,
+            flags: got_flags,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::InvalidValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::InvalidValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// Usage text for `pcilt help`.
+pub const USAGE: &str = "\
+pcilt — PCILT convolution inference (Gatchev & Mollov 2021 reproduction)
+
+USAGE: pcilt <subcommand> [options]
+
+SUBCOMMANDS:
+  serve     run the serving coordinator under a Poisson workload
+              --engine pcilt|dm|segment|shared|hlo   (default pcilt)
+              --workers N       worker threads        (default 4)
+              --rate R          offered load, req/s   (default 500)
+              --requests N      total requests        (default 2000)
+              --max-batch N     dynamic batch cap     (default 16)
+              --deadline-us N   batch deadline        (default 2000)
+              --artifacts DIR   artifact bundle       (default artifacts)
+              --config FILE     TOML config (overrides defaults)
+  validate  cross-check PJRT artifact vs native engines on the smoke pair
+              --artifacts DIR
+  sim       ASIC simulator comparison tables (E2/E3)
+              --lanes N  --clock GHZ  --act-bits B
+  memory    PCILT memory model report (E6/E7 paper numbers)
+  engines   quick CPU engine comparison on a random layer (E1)
+              --act-bits B  --channels C
+  help      this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(
+            &v(&["serve", "--workers", "8", "--engine", "dm"]),
+            &["workers", "engine"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 8);
+        assert_eq!(a.get_str("engine", "pcilt"), "dm");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&v(&["serve"]), &["workers"], &[]).unwrap();
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn flags_parse() {
+        let a = Args::parse(&v(&["sim", "--verbose"]), &[], &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = Args::parse(&v(&["serve", "--nope", "1"]), &["workers"], &[]).unwrap_err();
+        assert!(matches!(e, CliError::UnknownOption(..)));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = Args::parse(&v(&["serve", "--workers"]), &["workers"], &[]).unwrap_err();
+        assert_eq!(e, CliError::MissingValue("workers".into()));
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = Args::parse(&v(&["serve", "--workers", "lots"]), &["workers"], &[]).unwrap();
+        assert!(a.get_usize("workers", 4).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        let e = Args::parse(&v(&["serve", "oops"]), &[], &[]).unwrap_err();
+        assert!(matches!(e, CliError::UnexpectedPositional(_)));
+    }
+}

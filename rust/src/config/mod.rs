@@ -1,0 +1,312 @@
+//! Typed configuration for the serving coordinator, ASIC simulator and
+//! network descriptions, loaded from a TOML-subset file (see [`toml`]).
+//!
+//! Everything has defaults so `pcilt serve` runs with no config file; a file
+//! overrides selectively. Unknown keys are rejected to catch typos.
+
+pub mod toml;
+
+use std::path::Path;
+
+use crate::pcilt::memory::NetworkSpec;
+
+pub use self::toml::{Document, ParseError, Value};
+
+/// Which convolution engine the coordinator routes requests to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Direct-multiplication baseline.
+    Dm,
+    /// Basic PCILT lookup (Figs 1–2).
+    Pcilt,
+    /// Segment-offset PCILT (Figs 5–6).
+    Segment,
+    /// Shared-table PCILT.
+    Shared,
+    /// AOT-compiled HLO artifact executed via PJRT.
+    Hlo,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Some(match s {
+            "dm" => EngineKind::Dm,
+            "pcilt" => EngineKind::Pcilt,
+            "segment" => EngineKind::Segment,
+            "shared" => EngineKind::Shared,
+            "hlo" => EngineKind::Hlo,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Dm => "dm",
+            EngineKind::Pcilt => "pcilt",
+            EngineKind::Segment => "segment",
+            EngineKind::Shared => "shared",
+            EngineKind::Hlo => "hlo",
+        }
+    }
+}
+
+/// Serving coordinator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Number of inference worker threads.
+    pub workers: usize,
+    /// Maximum dynamic batch size.
+    pub max_batch: usize,
+    /// Batching deadline: a partial batch is dispatched after this long.
+    pub batch_deadline_us: u64,
+    /// Bounded request-queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+    /// Engine requests are routed to by default.
+    pub engine: EngineKind,
+    /// Directory holding `manifest.txt` + HLO artifacts.
+    pub artifact_dir: String,
+    /// Workload generator: mean request rate (requests/second).
+    pub rate_rps: f64,
+    /// Workload generator: total requests to issue.
+    pub total_requests: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            max_batch: 16,
+            batch_deadline_us: 2_000,
+            queue_capacity: 1024,
+            engine: EngineKind::Pcilt,
+            artifact_dir: "artifacts".to_string(),
+            rate_rps: 500.0,
+            total_requests: 2_000,
+        }
+    }
+}
+
+/// Error produced by typed-config loading.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error(transparent)]
+    Parse(#[from] ParseError),
+    #[error("io error reading config: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+fn invalid<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError::Invalid(msg.into()))
+}
+
+impl ServeConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn load(path: &Path) -> Result<ServeConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_document(&Document::parse(&text)?)
+    }
+
+    pub fn from_document(doc: &Document) -> Result<ServeConfig, ConfigError> {
+        let mut cfg = ServeConfig::default();
+        for key in doc.keys() {
+            match key {
+                "serve.workers" => {
+                    cfg.workers = pos_usize(doc, key)?;
+                }
+                "serve.max_batch" => {
+                    cfg.max_batch = pos_usize(doc, key)?;
+                }
+                "serve.batch_deadline_us" => {
+                    cfg.batch_deadline_us = pos_usize(doc, key)? as u64;
+                }
+                "serve.queue_capacity" => {
+                    cfg.queue_capacity = pos_usize(doc, key)?;
+                }
+                "serve.engine" => {
+                    let s = doc.get_str(key).unwrap_or_default();
+                    cfg.engine = EngineKind::parse(s)
+                        .ok_or_else(|| ConfigError::Invalid(format!("unknown engine '{s}'")))?;
+                }
+                "serve.artifact_dir" => {
+                    cfg.artifact_dir = doc
+                        .get_str(key)
+                        .ok_or_else(|| ConfigError::Invalid("artifact_dir must be a string".into()))?
+                        .to_string();
+                }
+                "serve.rate_rps" => {
+                    let v = doc.get_float(key).unwrap_or(-1.0);
+                    if v <= 0.0 {
+                        return invalid("rate_rps must be > 0");
+                    }
+                    cfg.rate_rps = v;
+                }
+                "serve.total_requests" => {
+                    cfg.total_requests = pos_usize(doc, key)?;
+                }
+                k if k.starts_with("network.") => {} // parsed by NetworkSpec
+                k => return invalid(format!("unknown config key '{k}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_batch > self.queue_capacity {
+            return invalid(format!(
+                "max_batch ({}) exceeds queue_capacity ({})",
+                self.max_batch, self.queue_capacity
+            ));
+        }
+        if self.workers == 0 || self.workers > 1024 {
+            return invalid("workers must be in 1..=1024");
+        }
+        Ok(())
+    }
+}
+
+fn pos_usize(doc: &Document, key: &str) -> Result<usize, ConfigError> {
+    match doc.get_int(key) {
+        Some(v) if v > 0 => Ok(v as usize),
+        Some(v) => invalid(format!("{key} must be positive, got {v}")),
+        None => invalid(format!("{key} must be an integer")),
+    }
+}
+
+/// Parse a `[network]` section into a [`NetworkSpec`] (used by the memory
+/// model and the `pcilt memory` CLI). Layout:
+///
+/// ```toml
+/// [network]
+/// filters = [50, 80, 120, 200, 350]
+/// kernel = 5
+/// weight_bits = 8
+/// activation_bits = 8
+/// input_channels = 3
+/// ```
+pub fn network_from_document(doc: &Document) -> Result<NetworkSpec, ConfigError> {
+    let filters: Vec<usize> = match doc.get("network.filters") {
+        Some(Value::Array(a)) => a
+            .iter()
+            .map(|v| {
+                v.as_int()
+                    .filter(|&i| i > 0)
+                    .map(|i| i as usize)
+                    .ok_or_else(|| ConfigError::Invalid("filters must be positive ints".into()))
+            })
+            .collect::<Result<_, _>>()?,
+        _ => return invalid("network.filters must be an array"),
+    };
+    if filters.is_empty() {
+        return invalid("network.filters must be non-empty");
+    }
+    let kernel = doc.get_int("network.kernel").unwrap_or(5);
+    let weight_bits = doc.get_int("network.weight_bits").unwrap_or(8);
+    let activation_bits = doc.get_int("network.activation_bits").unwrap_or(8);
+    let input_channels = doc.get_int("network.input_channels").unwrap_or(3);
+    for (name, v, lo, hi) in [
+        ("kernel", kernel, 1, 16),
+        ("weight_bits", weight_bits, 1, 32),
+        ("activation_bits", activation_bits, 1, 16),
+        ("input_channels", input_channels, 1, 4096),
+    ] {
+        if v < lo || v > hi {
+            return invalid(format!("network.{name} must be in {lo}..={hi}, got {v}"));
+        }
+    }
+    Ok(NetworkSpec {
+        filters,
+        kernel: kernel as usize,
+        weight_bits: weight_bits as u32,
+        activation_bits: activation_bits as u32,
+        input_channels: input_channels as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let doc = Document::parse(
+            r#"
+[serve]
+workers = 8
+max_batch = 32
+engine = "segment"
+rate_rps = 100.0
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.engine, EngineKind::Segment);
+        assert_eq!(cfg.rate_rps, 100.0);
+        // untouched default
+        assert_eq!(cfg.queue_capacity, ServeConfig::default().queue_capacity);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = Document::parse("[serve]\ntypo_key = 1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_engine_rejected() {
+        let doc = Document::parse("[serve]\nengine = \"gpu\"").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn batch_larger_than_queue_rejected() {
+        let doc = Document::parse("[serve]\nmax_batch = 100\nqueue_capacity = 10").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn network_spec_parses() {
+        let doc = Document::parse(
+            r#"
+[network]
+filters = [50, 80, 120, 200, 350]
+kernel = 5
+weight_bits = 8
+activation_bits = 4
+"#,
+        )
+        .unwrap();
+        let net = network_from_document(&doc).unwrap();
+        assert_eq!(net.filters, vec![50, 80, 120, 200, 350]);
+        assert_eq!(net.activation_bits, 4);
+        assert_eq!(net.input_channels, 3); // default
+    }
+
+    #[test]
+    fn network_bad_bits_rejected() {
+        let doc = Document::parse("[network]\nfilters = [4]\nweight_bits = 99").unwrap();
+        assert!(network_from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn engine_name_roundtrip() {
+        for e in [
+            EngineKind::Dm,
+            EngineKind::Pcilt,
+            EngineKind::Segment,
+            EngineKind::Shared,
+            EngineKind::Hlo,
+        ] {
+            assert_eq!(EngineKind::parse(e.name()), Some(e));
+        }
+    }
+}

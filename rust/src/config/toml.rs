@@ -1,0 +1,340 @@
+//! Hand-rolled parser for the TOML subset this project uses for its config
+//! files (serde/toml crates are unavailable in the offline build).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` pairs
+//! with string / integer / float / boolean / homogeneous-array values,
+//! `#` comments, and blank lines. Unsupported TOML (multi-line strings,
+//! dates, inline tables, arrays-of-tables) is rejected with a line-numbered
+//! error — better a loud failure than silent misconfiguration.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// A parsed document: dotted-path → value. Section `[a.b]` with `k = v`
+/// stores under key `"a.b.k"`; top-level keys store as `"k"`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return err(lineno, "unterminated section header");
+                };
+                let name = name.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+                {
+                    return err(lineno, format!("invalid section name '{name}'"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return err(lineno, "expected 'key = value'");
+            };
+            let key = line[..eq].trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return err(lineno, format!("invalid key '{key}'"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.insert(path.clone(), value).is_some() {
+                return err(lineno, format!("duplicate key '{path}'"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All keys, sorted (BTreeMap order).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Keys under a section prefix (e.g. `"server"` matches `"server.port"`).
+    pub fn section_keys<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let dotted = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&dotted))
+            .map(String::as_str)
+    }
+}
+
+impl fmt::Display for Document {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.entries {
+            writeln!(f, "{k} = {v:?}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    if text.is_empty() {
+        return err(line, "missing value");
+    }
+    // String
+    if let Some(rest) = text.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return err(line, "unterminated string");
+        };
+        if inner.contains('"') {
+            return err(line, "embedded quote in string (escapes unsupported)");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    // Array
+    if let Some(rest) = text.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            return err(line, "unterminated array");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // Bool
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Numbers (underscore separators allowed, as in TOML)
+    let num = text.replace('_', "");
+    if num.contains('.') || num.contains('e') || num.contains('E') {
+        if let Ok(f) = num.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    } else if let Ok(i) = num.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    err(line, format!("cannot parse value '{text}'"))
+}
+
+/// Split array items at top-level commas (strings may contain commas).
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+# top comment
+name = "demo"
+[server]
+port = 8080
+rate = 1.5
+debug = true
+[server.batch]
+max = 32
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("demo"));
+        assert_eq!(doc.get_int("server.port"), Some(8080));
+        assert_eq!(doc.get_float("server.rate"), Some(1.5));
+        assert_eq!(doc.get_bool("server.debug"), Some(true));
+        assert_eq!(doc.get_int("server.batch.max"), Some(32));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = Document::parse(r#"dims = [1, 2, 3]
+names = ["a", "b,c"]"#).unwrap();
+        let dims: Vec<i64> = doc
+            .get("dims")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_int().unwrap())
+            .collect();
+        assert_eq!(dims, vec![1, 2, 3]);
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let doc = Document::parse(r##"s = "a#b" # trailing"##).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = Document::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.get_int("big"), Some(1_000_000));
+    }
+
+    #[test]
+    fn negative_and_float_numbers() {
+        let doc = Document::parse("a = -42\nb = -0.5\nc = 1e3").unwrap();
+        assert_eq!(doc.get_int("a"), Some(-42));
+        assert_eq!(doc.get_float("b"), Some(-0.5));
+        assert_eq!(doc.get_float("c"), Some(1000.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Document::parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = Document::parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn int_as_float_coercion() {
+        let doc = Document::parse("x = 3").unwrap();
+        assert_eq!(doc.get_float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn section_keys_enumeration() {
+        let doc = Document::parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
+        let keys: Vec<&str> = doc.section_keys("s").collect();
+        assert_eq!(keys, vec!["s.a", "s.b"]);
+    }
+}

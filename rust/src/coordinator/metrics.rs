@@ -1,0 +1,168 @@
+//! Serving metrics: counters + latency histograms, shared across worker
+//! threads behind a mutex (updates are batched per inference batch, so
+//! contention is negligible relative to inference cost).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{fmt_ns, LatencyHistogram};
+
+#[derive(Debug, Default, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected_full: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub p50_latency_ns: f64,
+    pub p99_latency_ns: f64,
+    pub max_latency_ns: u64,
+    pub throughput_rps: f64,
+    pub elapsed_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} submitted, {} rejected, {} completed in {:.2}s\n\
+             throughput: {:.0} req/s | batches: {} (mean size {:.2})\n\
+             latency: p50={} p99={} max={}",
+            self.submitted,
+            self.rejected_full,
+            self.completed,
+            self.elapsed_s,
+            self.throughput_rps,
+            self.batches,
+            self.mean_batch_size,
+            fmt_ns(self.p50_latency_ns),
+            fmt_ns(self.p99_latency_ns),
+            fmt_ns(self.max_latency_ns as f64),
+        )
+    }
+}
+
+struct Inner {
+    submitted: u64,
+    rejected_full: u64,
+    completed: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    latency: LatencyHistogram,
+    started: Instant,
+}
+
+/// Thread-safe metrics collector.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                submitted: 0,
+                rejected_full: 0,
+                completed: 0,
+                batches: 0,
+                batch_size_sum: 0,
+                latency: LatencyHistogram::new(),
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    /// Zero all counters and restart the clock — used after warmup so
+    /// steady-state reports are not polluted by one-time compile costs.
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        *g = Inner {
+            submitted: 0,
+            rejected_full: 0,
+            completed: 0,
+            batches: 0,
+            batch_size_sum: 0,
+            latency: LatencyHistogram::new(),
+            started: Instant::now(),
+        };
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected_full += 1;
+    }
+
+    /// Record a completed batch with the per-request latencies.
+    pub fn on_batch(&self, latencies_ns: &[u64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_size_sum += latencies_ns.len() as u64;
+        g.completed += latencies_ns.len() as u64;
+        for &ns in latencies_ns {
+            g.latency.record(ns);
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            submitted: g.submitted,
+            rejected_full: g.rejected_full,
+            completed: g.completed,
+            batches: g.batches,
+            mean_batch_size: if g.batches > 0 {
+                g.batch_size_sum as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            p50_latency_ns: g.latency.percentile_ns(0.50),
+            p99_latency_ns: g.latency.percentile_ns(0.99),
+            max_latency_ns: g.latency.max_ns(),
+            throughput_rps: if elapsed > 0.0 {
+                g.completed as f64 / elapsed
+            } else {
+                0.0
+            },
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_batch(&[1_000, 2_000]);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected_full, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert!(s.max_latency_ns >= 2_000);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        m.on_batch(&[5_000; 10]);
+        let r = m.snapshot().report();
+        assert!(r.contains("completed"));
+        assert!(r.contains("p99"));
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving coordinator (Layer 3): bounded request queue, dynamic
+//! batcher, engine router, worker pool, metrics and workload generators.
+//! The paper is an inference paper, so L3 takes the serving shape
+//! (vLLM-router-like); see DESIGN.md §3.
+
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+pub mod workload;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use queue::{BoundedQueue, PushError};
+pub use request::{InferRequest, InferResponse};
+pub use router::Router;
+pub use server::{Server, ServerOpts, SubmitError};
+pub use worker::{Backend, BackendSpec, NativeEngineKind};
+pub use workload::{run_closed_loop, run_poisson, WorkloadReport};

@@ -1,0 +1,257 @@
+//! Bounded MPMC request queue with condvar wakeups and a dynamic-batching
+//! pop: the heart of the serving data plane.
+//!
+//! `push` applies **backpressure**: a full queue rejects immediately (the
+//! caller surfaces 503-style rejection), never blocks the submitting
+//! thread. `pop_batch` implements the size-or-deadline dynamic batching
+//! policy: return as soon as `max_batch` requests are available, or when
+//! `deadline` has elapsed since the *first* request of the forming batch
+//! arrived — the standard latency/throughput knob (vLLM-style).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why `push` failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity — shed load.
+    Full,
+    /// Queue closed — server shutting down.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded queue. `T` is typically [`super::request::InferRequest`].
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity.min(4096)),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push with backpressure.
+    pub fn push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((item, PushError::Closed));
+        }
+        if g.items.len() >= self.capacity {
+            return Err((item, PushError::Full));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Current depth (racy; for metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: pushes fail, poppers drain remaining items then get
+    /// `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Dynamic-batch pop. Blocks until at least one item is available (or
+    /// the queue is closed and empty -> `None`), then gathers up to
+    /// `max_batch` items, waiting at most `deadline` from the moment the
+    /// first item was taken.
+    pub fn pop_batch(&self, max_batch: usize, deadline: Duration) -> Option<Vec<T>> {
+        assert!(max_batch >= 1);
+        let mut g = self.inner.lock().unwrap();
+        // Wait for the first item.
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(g.items.pop_front().unwrap());
+        let t0 = Instant::now();
+        // Gather until size or deadline.
+        loop {
+            while batch.len() < max_batch {
+                match g.items.pop_front() {
+                    Some(it) => batch.push(it),
+                    None => break,
+                }
+            }
+            if batch.len() >= max_batch || g.closed {
+                break;
+            }
+            let elapsed = t0.elapsed();
+            if elapsed >= deadline {
+                break;
+            }
+            let (g2, timeout) = self
+                .not_empty
+                .wait_timeout(g, deadline - elapsed)
+                .unwrap();
+            g = g2;
+            if timeout.timed_out() && g.items.is_empty() {
+                break;
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let b = q.pop_batch(5, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let (item, e) = q.push(3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(e, PushError::Full);
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_and_drains() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2).unwrap_err().1, PushError::Closed);
+        // drains remaining then None
+        assert_eq!(q.pop_batch(4, Duration::ZERO).unwrap(), vec![1]);
+        assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn batch_respects_max_size() {
+        let q = BoundedQueue::new(64);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 4);
+        let b2 = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(64));
+        q.push(1).unwrap();
+        let t0 = Instant::now();
+        let b = q.pop_batch(8, Duration::from_millis(20)).unwrap();
+        assert_eq!(b, vec![1]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(18), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn late_arrivals_join_forming_batch() {
+        let q = Arc::new(BoundedQueue::new(64));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            q2.push(2).unwrap();
+            q2.push(3).unwrap();
+        });
+        let b = q.pop_batch(3, Duration::from_millis(200)).unwrap();
+        h.join().unwrap();
+        assert_eq!(b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_items() {
+        let q = Arc::new(BoundedQueue::new(1024));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for i in 0..100 {
+                        loop {
+                            if q.push(p * 1000 + i).is_ok() {
+                                break;
+                            }
+                            thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(b) = q.pop_batch(16, Duration::from_millis(2)) {
+                        got.extend(b);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 400);
+        all.dedup();
+        assert_eq!(all.len(), 400, "duplicated or lost items");
+    }
+
+    #[test]
+    fn blocked_popper_wakes_on_close() {
+        let q: Arc<BoundedQueue<i32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop_batch(4, Duration::from_millis(50)));
+        thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,85 @@
+//! Request/response types for the serving coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::tensor::Tensor4;
+
+/// A single inference request: one image's activation codes.
+pub struct InferRequest {
+    pub id: u64,
+    /// `[1, H, W, C]` activation codes.
+    pub codes: Tensor4<u8>,
+    /// Wall-clock submit time (for queueing-latency accounting).
+    pub submitted_at: Instant,
+    /// Reply channel; dropped replies are ignored (client went away).
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// The response delivered to the reply channel.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<i32>,
+    pub class: usize,
+    /// Total latency (submit -> reply) in nanoseconds.
+    pub latency_ns: u64,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+impl InferRequest {
+    pub fn new(id: u64, codes: Tensor4<u8>) -> (InferRequest, mpsc::Receiver<InferResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferRequest {
+                id,
+                codes,
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape4;
+
+    #[test]
+    fn request_reply_roundtrip() {
+        let codes = Tensor4::<u8>::zeros(Shape4::new(1, 4, 4, 1));
+        let (req, rx) = InferRequest::new(7, codes);
+        req.reply
+            .send(InferResponse {
+                id: req.id,
+                logits: vec![1, 2, 3],
+                class: 2,
+                latency_ns: 1000,
+                batch_size: 4,
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.class, 2);
+    }
+
+    #[test]
+    fn dropped_receiver_send_fails_quietly() {
+        let codes = Tensor4::<u8>::zeros(Shape4::new(1, 4, 4, 1));
+        let (req, rx) = InferRequest::new(1, codes);
+        drop(rx);
+        assert!(req
+            .reply
+            .send(InferResponse {
+                id: 1,
+                logits: vec![],
+                class: 0,
+                latency_ns: 0,
+                batch_size: 1,
+            })
+            .is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Engine router: fronts several [`Server`] pools (one per engine) and
+//! routes each request by its engine preference, with a default pool for
+//! unopinionated clients. This is the multi-variant serving mode used by
+//! the A/B experiments in `bench_serving` (e.g. compare the PCILT pool
+//! against the DM pool under identical load).
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+
+use crate::tensor::Tensor4;
+
+use super::request::InferResponse;
+use super::server::{Server, SubmitError};
+
+/// A routing table over engine-named pools.
+pub struct Router {
+    pools: BTreeMap<String, Arc<Server>>,
+    default_pool: String,
+}
+
+/// Routing errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RouteError {
+    #[error("unknown engine '{0}'")]
+    UnknownEngine(String),
+    #[error("pool rejected request: {0:?}")]
+    Submit(SubmitError),
+}
+
+impl Router {
+    pub fn new(pools: Vec<(String, Arc<Server>)>, default_pool: &str) -> Router {
+        let map: BTreeMap<String, Arc<Server>> = pools.into_iter().collect();
+        assert!(
+            map.contains_key(default_pool),
+            "default pool '{default_pool}' not registered"
+        );
+        Router {
+            pools: map,
+            default_pool: default_pool.to_string(),
+        }
+    }
+
+    pub fn engines(&self) -> Vec<&str> {
+        self.pools.keys().map(String::as_str).collect()
+    }
+
+    /// Route a request to the named engine pool (or the default).
+    pub fn route(
+        &self,
+        engine: Option<&str>,
+        codes: Tensor4<u8>,
+    ) -> Result<(u64, mpsc::Receiver<InferResponse>), RouteError> {
+        let name = engine.unwrap_or(&self.default_pool);
+        let pool = self
+            .pools
+            .get(name)
+            .ok_or_else(|| RouteError::UnknownEngine(name.to_string()))?;
+        pool.submit(codes).map_err(RouteError::Submit)
+    }
+
+    pub fn pool(&self, engine: &str) -> Option<&Arc<Server>> {
+        self.pools.get(engine)
+    }
+
+    /// Shut down all pools, returning per-pool metrics.
+    pub fn shutdown(self) -> Vec<(String, super::metrics::MetricsSnapshot)> {
+        self.pools
+            .into_iter()
+            .map(|(name, pool)| {
+                let m = match Arc::try_unwrap(pool) {
+                    Ok(server) => server.shutdown(),
+                    Err(arc) => arc.metrics(), // still referenced: snapshot only
+                };
+                (name, m)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ServerOpts;
+    use crate::coordinator::worker::{BackendSpec, NativeEngineKind};
+    use crate::model::random_params;
+    use crate::tensor::Shape4;
+    use crate::util::prng::Rng;
+    use std::time::Duration;
+
+    fn router() -> Router {
+        let mut rng = Rng::new(41);
+        let params = random_params(4, &mut rng);
+        let opts = ServerOpts {
+            workers: 1,
+            max_batch: 4,
+            batch_deadline: Duration::from_millis(1),
+            queue_capacity: 64,
+        };
+        let mk = |engine| {
+            Arc::new(
+                Server::start(
+                    BackendSpec::Native {
+                        params: params.clone(),
+                        engine,
+                    },
+                    &opts,
+                )
+                .unwrap(),
+            )
+        };
+        Router::new(
+            vec![
+                ("pcilt".to_string(), mk(NativeEngineKind::Pcilt)),
+                ("dm".to_string(), mk(NativeEngineKind::Dm)),
+            ],
+            "pcilt",
+        )
+    }
+
+    fn image(seed: u64) -> Tensor4<u8> {
+        let mut rng = Rng::new(seed);
+        Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 4, &mut rng)
+    }
+
+    #[test]
+    fn routes_to_named_and_default() {
+        let r = router();
+        let (_, rx) = r.route(Some("dm"), image(1)).unwrap();
+        assert!(rx.recv().is_ok());
+        let (_, rx) = r.route(None, image(2)).unwrap();
+        assert!(rx.recv().is_ok());
+        let metrics = r.shutdown();
+        let total: u64 = metrics.iter().map(|(_, m)| m.completed).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn unknown_engine_rejected() {
+        let r = router();
+        assert!(matches!(
+            r.route(Some("fft"), image(3)),
+            Err(RouteError::UnknownEngine(_))
+        ));
+    }
+
+    #[test]
+    fn pools_are_isolated() {
+        let r = router();
+        for i in 0..6 {
+            let (_, rx) = r.route(Some("pcilt"), image(10 + i)).unwrap();
+            rx.recv().unwrap();
+        }
+        let dm_metrics = r.pool("dm").unwrap().metrics();
+        assert_eq!(dm_metrics.completed, 0);
+        let pc_metrics = r.pool("pcilt").unwrap().metrics();
+        assert_eq!(pc_metrics.completed, 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_default_pool_panics() {
+        let mut rng = Rng::new(43);
+        let s = Arc::new(
+            Server::start(
+                BackendSpec::Native {
+                    params: random_params(4, &mut rng),
+                    engine: NativeEngineKind::Dm,
+                },
+                &ServerOpts::default(),
+            )
+            .unwrap(),
+        );
+        Router::new(vec![("dm".to_string(), s)], "missing");
+    }
+}

@@ -1,0 +1,354 @@
+//! The serving coordinator: bounded queue → dynamic batcher → worker pool.
+//!
+//! Thread topology:
+//!
+//! ```text
+//!   clients ──submit()──▶ BoundedQueue ──pop_batch()──▶ worker 0..N
+//!                 ▲  backpressure (Full)                 │
+//!                 └────────── metrics ◀──────────────────┘
+//! ```
+//!
+//! Workers build their backend in-thread from a [`BackendSpec`] (PJRT
+//! executables are not Send) and loop on the size-or-deadline batching
+//! policy. Shutdown closes the queue; workers drain and exit.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::tensor::Tensor4;
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::queue::{BoundedQueue, PushError};
+use super::request::{InferRequest, InferResponse};
+use super::worker::{process_batch, Backend, BackendSpec};
+
+/// Server configuration (subset of `config::ServeConfig` the data plane
+/// needs).
+#[derive(Debug, Clone)]
+pub struct ServerOpts {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_deadline: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            workers: 4,
+            max_batch: 16,
+            batch_deadline: Duration::from_micros(2_000),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// Why a submit failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Backpressure: queue full.
+    Overloaded,
+    /// Server shutting down.
+    Closed,
+}
+
+/// A running coordinator.
+pub struct Server {
+    queue: Arc<BoundedQueue<InferRequest>>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    backend_name: String,
+}
+
+impl Server {
+    /// Start `opts.workers` worker threads over the given backend spec.
+    pub fn start(spec: BackendSpec, opts: &ServerOpts) -> anyhow::Result<Server> {
+        assert!(opts.workers >= 1);
+        let queue = Arc::new(BoundedQueue::new(opts.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        // Build one backend on the caller thread first so construction
+        // errors surface synchronously (bad artifacts, absurd configs).
+        let probe = Backend::build(&spec)?;
+        let backend_name = probe.name();
+        drop(probe);
+
+        let mut workers = Vec::with_capacity(opts.workers);
+        for wid in 0..opts.workers {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let spec = spec.clone();
+            let max_batch = opts.max_batch;
+            let deadline = opts.batch_deadline;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pcilt-worker-{wid}"))
+                    .spawn(move || {
+                        let backend = match Backend::build(&spec) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                log::error!("worker {wid}: backend build failed: {e:#}");
+                                return;
+                            }
+                        };
+                        log::debug!("worker {wid} up ({})", backend.name());
+                        while let Some(batch) = queue.pop_batch(max_batch, deadline) {
+                            if let Err(e) =
+                                process_batch(&backend, batch, |lat| metrics.on_batch(lat))
+                            {
+                                log::error!("worker {wid}: batch failed: {e:#}");
+                            }
+                        }
+                        log::debug!("worker {wid} drained, exiting");
+                    })
+                    .expect("spawning worker"),
+            );
+        }
+        Ok(Server {
+            queue,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(0),
+            backend_name,
+        })
+    }
+
+    pub fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+
+    /// Submit one image; returns the reply receiver. Non-blocking; full
+    /// queue => `Overloaded` (shed load, count it).
+    pub fn submit(
+        &self,
+        codes: Tensor4<u8>,
+    ) -> Result<(u64, mpsc::Receiver<InferResponse>), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (req, rx) = InferRequest::new(id, codes);
+        self.metrics.on_submit();
+        match self.queue.push(req) {
+            Ok(()) => Ok((id, rx)),
+            Err((_, PushError::Full)) => {
+                self.metrics.on_reject();
+                Err(SubmitError::Overloaded)
+            }
+            Err((_, PushError::Closed)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer_blocking(&self, codes: Tensor4<u8>) -> anyhow::Result<InferResponse> {
+        let (_, rx) = self
+            .submit(codes)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Send `n` throwaway requests (waiting for each) and reset metrics —
+    /// absorbs worker-startup costs (PJRT compilation) so subsequent
+    /// measurements reflect steady state.
+    pub fn warmup(&self, n: usize, img: usize) -> anyhow::Result<()> {
+        use crate::tensor::Shape4;
+        for _ in 0..n {
+            let codes = Tensor4::zeros(Shape4::new(1, img, img, 1));
+            self.infer_blocking(codes)?;
+        }
+        self.metrics.reset();
+        Ok(())
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Graceful shutdown: close the queue, join the workers (they drain
+    /// outstanding requests first).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::NativeEngineKind;
+    use crate::model::random_params;
+    use crate::tensor::Shape4;
+    use crate::util::prng::Rng;
+
+    fn test_server(workers: usize, queue_capacity: usize) -> Server {
+        let mut rng = Rng::new(21);
+        let spec = BackendSpec::Native {
+            params: random_params(4, &mut rng),
+            engine: NativeEngineKind::Pcilt,
+        };
+        Server::start(
+            spec,
+            &ServerOpts {
+                workers,
+                max_batch: 4,
+                batch_deadline: Duration::from_millis(1),
+                queue_capacity,
+            },
+        )
+        .unwrap()
+    }
+
+    fn one_image(seed: u64) -> Tensor4<u8> {
+        let mut rng = Rng::new(seed);
+        Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 4, &mut rng)
+    }
+
+    #[test]
+    fn serves_blocking_requests() {
+        let server = test_server(2, 64);
+        for i in 0..10 {
+            let resp = server.infer_blocking(one_image(i)).unwrap();
+            assert_eq!(resp.logits.len(), 8);
+            assert!(resp.class < 8);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.submitted, 10);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_answered() {
+        let server = Arc::new(test_server(4, 256));
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let s = Arc::clone(&server);
+                std::thread::spawn(move || {
+                    let mut ok = 0;
+                    for i in 0..25 {
+                        if s.infer_blocking(one_image(t * 100 + i)).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        let m = Arc::try_unwrap(server)
+            .map_err(|_| ())
+            .unwrap()
+            .shutdown();
+        assert_eq!(m.completed, 200);
+        assert!(m.mean_batch_size >= 1.0);
+    }
+
+    #[test]
+    fn responses_match_request_content() {
+        // Submit distinguishable inputs concurrently; every response id must
+        // carry the logits of ITS request (no cross-wiring).
+        let server = test_server(3, 128);
+        let backend_check = {
+            let mut rng = Rng::new(21);
+            let spec = BackendSpec::Native {
+                params: random_params(4, &mut rng),
+                engine: NativeEngineKind::Pcilt,
+            };
+            Backend::build(&spec).unwrap()
+        };
+        let images: Vec<Tensor4<u8>> = (0..20).map(|i| one_image(1000 + i)).collect();
+        let rxs: Vec<_> = images
+            .iter()
+            .map(|img| server.submit(img.clone()).unwrap())
+            .collect();
+        for ((_, rx), img) in rxs.into_iter().zip(images.iter()) {
+            let resp = rx.recv().unwrap();
+            let expect = backend_check.infer_batch(&[img]).unwrap();
+            assert_eq!(resp.logits, expect[0], "response/request mismatch");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_with_backpressure() {
+        // 1 worker, tiny queue, huge deadline so the queue jams.
+        let mut rng = Rng::new(22);
+        let spec = BackendSpec::Native {
+            params: random_params(4, &mut rng),
+            engine: NativeEngineKind::Dm,
+        };
+        let server = Server::start(
+            spec,
+            &ServerOpts {
+                workers: 1,
+                max_batch: 2,
+                batch_deadline: Duration::from_millis(50),
+                queue_capacity: 4,
+            },
+        )
+        .unwrap();
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..64 {
+            match server.submit(one_image(i)) {
+                Ok((_, rx)) => rxs.push(rx),
+                Err(SubmitError::Overloaded) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "expected shed load");
+        // accepted requests still complete
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.rejected_full, rejected);
+        assert_eq!(m.completed + m.rejected_full, 64);
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let server = test_server(1, 64);
+        let rxs: Vec<_> = (0..12)
+            .map(|i| server.submit(one_image(i)).unwrap().1)
+            .collect();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 12);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let server = test_server(1, 256);
+        // Flood; with 1 worker + max_batch 4, mean batch should exceed 1.
+        let rxs: Vec<_> = (0..64)
+            .map(|i| server.submit(one_image(i)).unwrap().1)
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert!(
+            m.mean_batch_size > 1.5,
+            "expected batching, mean={}",
+            m.mean_batch_size
+        );
+    }
+}

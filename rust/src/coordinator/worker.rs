@@ -1,0 +1,294 @@
+//! Inference workers: each worker thread owns a backend built in-thread
+//! (PJRT executables are not `Send` — raw C pointers — so the spec is what
+//! crosses the thread boundary, not the backend).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::{EngineChoice, ModelParams, QuantCnn};
+use crate::runtime::{ArtifactBundle, CompiledModel, PjrtContext};
+use crate::tensor::{Shape4, Tensor4};
+
+use super::request::{InferRequest, InferResponse};
+
+/// Cloneable description of a backend; workers build from this in-thread.
+#[derive(Clone)]
+pub enum BackendSpec {
+    /// Rust-native engines over loaded model params.
+    Native {
+        params: ModelParams,
+        engine: NativeEngineKind,
+    },
+    /// PJRT execution of the AOT artifacts.
+    Hlo {
+        bundle: ArtifactBundle,
+        engine: String, // artifact engine name: "pcilt" | "dm"
+    },
+}
+
+/// Which native engine a worker builds (mirror of config::EngineKind minus
+/// Hlo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeEngineKind {
+    Dm,
+    Pcilt,
+    Segment { seg_n: usize },
+    Shared,
+}
+
+impl NativeEngineKind {
+    fn to_choice(self) -> EngineChoice {
+        match self {
+            NativeEngineKind::Dm => EngineChoice::Dm,
+            NativeEngineKind::Pcilt => EngineChoice::Pcilt,
+            NativeEngineKind::Segment { seg_n } => EngineChoice::Segment { seg_n },
+            NativeEngineKind::Shared => EngineChoice::Shared,
+        }
+    }
+}
+
+/// A built backend, owned by one worker thread.
+pub enum Backend {
+    Native(QuantCnn),
+    Hlo {
+        /// (batch_size, executable), ascending batch size.
+        models: Vec<(usize, CompiledModel)>,
+        classes: usize,
+        img: usize,
+        // Keep the context alive as long as the executables.
+        _ctx: PjrtContext,
+    },
+}
+
+impl Backend {
+    /// Build from a spec (call inside the worker thread).
+    pub fn build(spec: &BackendSpec) -> Result<Backend> {
+        match spec {
+            BackendSpec::Native { params, engine } => Ok(Backend::Native(QuantCnn::new(
+                params.clone(),
+                engine.to_choice(),
+            ))),
+            BackendSpec::Hlo { bundle, engine } => {
+                let ctx = PjrtContext::cpu()?;
+                let mut models = Vec::new();
+                for b in bundle.batches_for(engine) {
+                    let path = bundle
+                        .hlo_path(engine, b)
+                        .context("artifact disappeared")?;
+                    models.push((b, ctx.load_hlo(&path)?));
+                }
+                anyhow::ensure!(!models.is_empty(), "no artifacts for engine {engine}");
+                Ok(Backend::Hlo {
+                    models,
+                    classes: bundle.params.classes,
+                    img: bundle.params.img,
+                    _ctx: ctx,
+                })
+            }
+        }
+    }
+
+    /// Stack per-request `[1,H,W,C]` code tensors into one `[B,H,W,C]`.
+    fn stack(codes: &[&Tensor4<u8>]) -> Tensor4<u8> {
+        let s0 = codes[0].shape();
+        let out_shape = Shape4::new(codes.len(), s0.h, s0.w, s0.c);
+        let mut data = Vec::with_capacity(out_shape.len());
+        for c in codes {
+            assert_eq!(c.shape(), s0, "mixed shapes in batch");
+            data.extend_from_slice(c.data());
+        }
+        Tensor4::from_vec(out_shape, data)
+    }
+
+    /// Run a batch of single-image code tensors; returns per-request logits.
+    pub fn infer_batch(&self, codes: &[&Tensor4<u8>]) -> Result<Vec<Vec<i32>>> {
+        match self {
+            Backend::Native(model) => {
+                let stacked = Self::stack(codes);
+                Ok(model.forward(&stacked))
+            }
+            Backend::Hlo {
+                models,
+                classes,
+                img,
+                ..
+            } => {
+                let b = codes.len();
+                let mut out = Vec::with_capacity(b);
+                let mut i = 0;
+                while i < b {
+                    // Pick the smallest exported batch >= remaining, else
+                    // the largest and chunk.
+                    let remaining = b - i;
+                    let (exe_b, exe) = models
+                        .iter()
+                        .find(|(eb, _)| *eb >= remaining)
+                        .unwrap_or_else(|| models.last().unwrap());
+                    let take = remaining.min(*exe_b);
+                    // Pad to the executable's batch with zero images.
+                    let zero = Tensor4::<u8>::zeros(Shape4::new(1, *img, *img, 1));
+                    let mut slice: Vec<&Tensor4<u8>> =
+                        codes[i..i + take].to_vec();
+                    while slice.len() < *exe_b {
+                        slice.push(&zero);
+                    }
+                    let stacked = Self::stack(&slice);
+                    let logits = exe.infer(&stacked, *classes)?;
+                    out.extend(logits.into_iter().take(take));
+                    i += take;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Backend::Native(m) => format!("native-{}", m.engine_name()),
+            Backend::Hlo { .. } => "hlo".to_string(),
+        }
+    }
+}
+
+/// Process one batch of requests end-to-end: infer, record metrics via
+/// `on_done`, then reply. Metrics are recorded **before** replies go out so
+/// a client that observes its response also observes the metrics update
+/// (the tests rely on this ordering).
+pub fn process_batch(
+    backend: &Backend,
+    batch: Vec<InferRequest>,
+    on_done: impl FnOnce(&[u64]),
+) -> Result<()> {
+    let refs: Vec<&Tensor4<u8>> = batch.iter().map(|r| &r.codes).collect();
+    let logits = backend.infer_batch(&refs)?;
+    let now = Instant::now();
+    let bsize = batch.len();
+    let latencies: Vec<u64> = batch
+        .iter()
+        .map(|req| now.duration_since(req.submitted_at).as_nanos() as u64)
+        .collect();
+    on_done(&latencies);
+    for ((req, lg), latency_ns) in batch.into_iter().zip(logits).zip(latencies) {
+        let class = lg
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        // Ignore send errors: client hung up.
+        let _ = req.reply.send(InferResponse {
+            id: req.id,
+            logits: lg,
+            class,
+            latency_ns,
+            batch_size: bsize,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::random_params;
+    use crate::util::prng::Rng;
+
+    fn native_spec(engine: NativeEngineKind) -> BackendSpec {
+        let mut rng = Rng::new(11);
+        BackendSpec::Native {
+            params: random_params(4, &mut rng),
+            engine,
+        }
+    }
+
+    fn codes(n: usize, seed: u64) -> Vec<Tensor4<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 4, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn native_backend_batches() {
+        let backend = Backend::build(&native_spec(NativeEngineKind::Pcilt)).unwrap();
+        let cs = codes(5, 1);
+        let refs: Vec<&Tensor4<u8>> = cs.iter().collect();
+        let out = backend.infer_batch(&refs).unwrap();
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|l| l.len() == 8));
+    }
+
+    #[test]
+    fn native_engines_agree_in_batch() {
+        let cs = codes(3, 2);
+        let refs: Vec<&Tensor4<u8>> = cs.iter().collect();
+        let a = Backend::build(&native_spec(NativeEngineKind::Dm))
+            .unwrap()
+            .infer_batch(&refs)
+            .unwrap();
+        let b = Backend::build(&native_spec(NativeEngineKind::Pcilt))
+            .unwrap()
+            .infer_batch(&refs)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_order_preserved() {
+        // Each request's logits must match a solo run of that request.
+        let backend = Backend::build(&native_spec(NativeEngineKind::Pcilt)).unwrap();
+        let cs = codes(4, 3);
+        let refs: Vec<&Tensor4<u8>> = cs.iter().collect();
+        let batched = backend.infer_batch(&refs).unwrap();
+        for (i, c) in cs.iter().enumerate() {
+            let solo = backend.infer_batch(&[c]).unwrap();
+            assert_eq!(solo[0], batched[i], "request {i} out of order");
+        }
+    }
+
+    #[test]
+    fn process_batch_replies_to_all() {
+        let backend = Backend::build(&native_spec(NativeEngineKind::Dm)).unwrap();
+        let cs = codes(3, 4);
+        let mut rxs = Vec::new();
+        let mut reqs = Vec::new();
+        for (i, c) in cs.into_iter().enumerate() {
+            let (req, rx) = InferRequest::new(i as u64, c);
+            reqs.push(req);
+            rxs.push(rx);
+        }
+        let mut lat_count = 0;
+        process_batch(&backend, reqs, |l| lat_count = l.len()).unwrap();
+        assert_eq!(lat_count, 3);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.batch_size, 3);
+            assert!(resp.class < 8);
+        }
+    }
+
+    #[test]
+    fn hlo_backend_pads_odd_batches() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(bundle) = ArtifactBundle::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let backend = Backend::build(&BackendSpec::Hlo {
+            bundle,
+            engine: "pcilt".to_string(),
+        })
+        .unwrap();
+        // Batch of 3: must pad to the b8 artifact (or run b1 x3) and still
+        // return exactly 3 results.
+        let cs = codes(3, 5);
+        let refs: Vec<&Tensor4<u8>> = cs.iter().collect();
+        let out = backend.infer_batch(&refs).unwrap();
+        assert_eq!(out.len(), 3);
+        // order preserved vs solo
+        let solo = backend.infer_batch(&[refs[1]]).unwrap();
+        assert_eq!(solo[0], out[1]);
+    }
+}

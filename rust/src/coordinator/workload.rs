@@ -1,0 +1,181 @@
+//! Workload generation for the serving experiments (E11): open-loop
+//! Poisson arrivals and a closed-loop N-client mode, over synthetic input
+//! images (random activation codes, or the artifact smoke inputs when
+//! accuracy is being checked).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::tensor::{Shape4, Tensor4};
+use crate::util::prng::Rng;
+
+use super::server::{Server, SubmitError};
+
+/// Result of a workload run.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub offered: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    pub wall_s: f64,
+    /// Offered request rate actually achieved.
+    pub offered_rps: f64,
+}
+
+/// Open-loop Poisson arrivals at `rate_rps`, `total` requests. Responses
+/// are collected on a drainer thread; returns once all accepted requests
+/// have completed.
+pub fn run_poisson(
+    server: &Arc<Server>,
+    rate_rps: f64,
+    total: usize,
+    img: usize,
+    act_bits: u32,
+    seed: u64,
+) -> WorkloadReport {
+    assert!(rate_rps > 0.0);
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let mut rxs = Vec::with_capacity(total);
+    let mut next_arrival = Instant::now();
+    for _ in 0..total {
+        // Poisson process: exponential inter-arrival gaps.
+        let gap = rng.exponential(rate_rps);
+        next_arrival += Duration::from_secs_f64(gap);
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        let codes = Tensor4::random_activations(Shape4::new(1, img, img, 1), act_bits, &mut rng);
+        match server.submit(codes) {
+            Ok((_, rx)) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(SubmitError::Overloaded) => rejected += 1,
+            Err(SubmitError::Closed) => break,
+        }
+    }
+    // Drain all responses.
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    WorkloadReport {
+        offered: accepted + rejected,
+        accepted,
+        rejected,
+        wall_s: wall,
+        offered_rps: (accepted + rejected) as f64 / wall,
+    }
+}
+
+/// Closed-loop: `clients` threads each issue `per_client` back-to-back
+/// blocking requests — measures peak sustainable throughput.
+pub fn run_closed_loop(
+    server: &Arc<Server>,
+    clients: usize,
+    per_client: usize,
+    img: usize,
+    act_bits: u32,
+    seed: u64,
+) -> WorkloadReport {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let server = Arc::clone(server);
+            let mut rng = Rng::new(seed.wrapping_add(c as u64 * 7919));
+            std::thread::spawn(move || {
+                let mut ok = 0usize;
+                let mut rej = 0usize;
+                for _ in 0..per_client {
+                    let codes = Tensor4::random_activations(
+                        Shape4::new(1, img, img, 1),
+                        act_bits,
+                        &mut rng,
+                    );
+                    match server.submit(codes) {
+                        Ok((_, rx)) => {
+                            let _ = rx.recv();
+                            ok += 1;
+                        }
+                        Err(_) => rej += 1,
+                    }
+                }
+                (ok, rej)
+            })
+        })
+        .collect();
+    let mut accepted = 0;
+    let mut rejected = 0;
+    for h in handles {
+        let (ok, rej) = h.join().unwrap();
+        accepted += ok;
+        rejected += rej;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    WorkloadReport {
+        offered: accepted + rejected,
+        accepted,
+        rejected,
+        wall_s: wall,
+        offered_rps: (accepted + rejected) as f64 / wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ServerOpts;
+    use crate::coordinator::worker::{BackendSpec, NativeEngineKind};
+    use crate::model::random_params;
+
+    fn server() -> Arc<Server> {
+        let mut rng = Rng::new(31);
+        Arc::new(
+            Server::start(
+                BackendSpec::Native {
+                    params: random_params(4, &mut rng),
+                    engine: NativeEngineKind::Pcilt,
+                },
+                &ServerOpts {
+                    workers: 2,
+                    max_batch: 8,
+                    batch_deadline: Duration::from_millis(1),
+                    queue_capacity: 256,
+                },
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn poisson_completes_all_accepted() {
+        let s = server();
+        let r = run_poisson(&s, 2000.0, 100, 16, 4, 1);
+        assert_eq!(r.offered, 100);
+        assert_eq!(r.accepted + r.rejected, 100);
+        assert!(r.accepted > 0);
+        let m = s.metrics();
+        assert_eq!(m.completed as usize, r.accepted);
+    }
+
+    #[test]
+    fn poisson_rate_roughly_respected() {
+        let s = server();
+        // 500 rps for 50 requests ~ 0.1 s minimum wall time.
+        let r = run_poisson(&s, 500.0, 50, 16, 4, 2);
+        assert!(r.wall_s > 0.05, "wall={}", r.wall_s);
+        assert!(r.offered_rps < 1500.0, "rate={}", r.offered_rps);
+    }
+
+    #[test]
+    fn closed_loop_counts_add_up() {
+        let s = server();
+        let r = run_closed_loop(&s, 4, 25, 16, 4, 3);
+        assert_eq!(r.offered, 100);
+        assert_eq!(r.accepted, 100); // queue is big enough, nothing shed
+    }
+}

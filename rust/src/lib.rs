@@ -1,0 +1,27 @@
+//! # pcilt — Faster Convolution Inference Through Pre-Calculated Lookup Tables
+//!
+//! A full-system reproduction of Gatchev & Mollov (2021). The crate is the
+//! Layer-3 (rust) half of a three-layer stack:
+//!
+//! - **L1** Pallas kernels and **L2** JAX model live under `python/` and run
+//!   only at build time (`make artifacts`), producing HLO-text artifacts.
+//! - **L3** (this crate) implements the paper's algorithm and all the
+//!   substrates its claims need: the PCILT engines ([`pcilt`]), a
+//!   cycle/energy ASIC simulator ([`asic`]), an integer tensor library
+//!   ([`tensor`]), quantization ([`quant`]), a PJRT runtime that loads the
+//!   AOT artifacts ([`runtime`]), and a thread-based serving coordinator
+//!   ([`coordinator`]).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod asic;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod pcilt;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,278 @@
+//! `pcilt` — the leader binary: serving coordinator, ASIC simulator,
+//! memory model and validation subcommands. See `pcilt help`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use pcilt::asic::{
+    report::comparison_table, simulate_dm, simulate_fft, simulate_pcilt, simulate_segment,
+    simulate_winograd, LayerWorkload, TableMem,
+};
+use pcilt::cli::{Args, USAGE};
+use pcilt::config::{EngineKind, ServeConfig};
+use pcilt::coordinator::{run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts};
+use pcilt::model::{EngineChoice, QuantCnn};
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::memory::paper_memory_report;
+use pcilt::pcilt::{DmEngine, PciltEngine, SegmentEngine, SharedEngine};
+use pcilt::runtime::{ArtifactBundle, PjrtContext};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::stats::{fmt_bytes, fmt_count};
+use pcilt::util::timing::{run as bench_run, BenchOpts};
+
+fn main() {
+    pcilt::util::logger::init();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    if raw.is_empty() || raw[0] == "help" || raw[0] == "--help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let valued = [
+        "engine",
+        "workers",
+        "rate",
+        "requests",
+        "max-batch",
+        "deadline-us",
+        "artifacts",
+        "config",
+        "lanes",
+        "clock",
+        "act-bits",
+        "channels",
+    ];
+    let args = Args::parse(raw, &valued, &["verbose"])?;
+    match args.subcommand.as_str() {
+        "serve" => cmd_serve(&args),
+        "validate" => cmd_validate(&args),
+        "sim" => cmd_sim(&args),
+        "memory" => cmd_memory(),
+        "engines" => cmd_engines(&args),
+        other => bail!("unknown subcommand '{other}'; try `pcilt help`"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::load(Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e).context("bad --engine")?;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.rate_rps = args.get_f64("rate", cfg.rate_rps)?;
+    cfg.total_requests = args.get_usize("requests", cfg.total_requests)?;
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    cfg.batch_deadline_us = args.get_usize("deadline-us", cfg.batch_deadline_us as usize)? as u64;
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifact_dir = d.to_string();
+    }
+    cfg.validate()?;
+
+    let bundle = ArtifactBundle::load(Path::new(&cfg.artifact_dir)).with_context(|| {
+        format!(
+            "loading artifacts from '{}'; run `make artifacts` first",
+            cfg.artifact_dir
+        )
+    })?;
+    let act_bits = bundle.params.act_bits;
+    let img = bundle.params.img;
+    let spec = match cfg.engine {
+        EngineKind::Hlo => BackendSpec::Hlo {
+            bundle,
+            engine: "pcilt".to_string(),
+        },
+        native => BackendSpec::Native {
+            params: bundle.params.clone(),
+            engine: match native {
+                EngineKind::Dm => NativeEngineKind::Dm,
+                EngineKind::Pcilt => NativeEngineKind::Pcilt,
+                EngineKind::Segment => NativeEngineKind::Segment { seg_n: 2 },
+                EngineKind::Shared => NativeEngineKind::Shared,
+                EngineKind::Hlo => unreachable!(),
+            },
+        },
+    };
+    let opts = ServerOpts {
+        workers: cfg.workers,
+        max_batch: cfg.max_batch,
+        batch_deadline: Duration::from_micros(cfg.batch_deadline_us),
+        queue_capacity: cfg.queue_capacity,
+    };
+    log::info!(
+        "serving engine={} workers={} rate={}rps requests={}",
+        cfg.engine.name(),
+        cfg.workers,
+        cfg.rate_rps,
+        cfg.total_requests
+    );
+    let server = Arc::new(Server::start(spec, &opts)?);
+    let report = run_poisson(
+        &server,
+        cfg.rate_rps,
+        cfg.total_requests,
+        img,
+        act_bits,
+        0xBEEF,
+    );
+    let metrics = server.metrics();
+    println!("--- workload ---");
+    println!(
+        "offered {} ({:.0} rps), accepted {}, shed {}",
+        report.offered, report.offered_rps, report.accepted, report.rejected
+    );
+    println!("--- server ({}) ---", cfg.engine.name());
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let bundle = ArtifactBundle::load(Path::new(dir))
+        .with_context(|| format!("loading artifacts from '{dir}'"))?;
+    println!(
+        "bundle: act_bits={} classes={} trained-acc={:.3}",
+        bundle.params.act_bits, bundle.params.classes, bundle.final_test_acc
+    );
+    let (codes, expect_logits, labels) = bundle.smoke_pair()?;
+
+    // 1. PJRT artifact output == python smoke logits (bit-exact).
+    let ctx = PjrtContext::cpu()?;
+    let exe = ctx.load_hlo(&bundle.hlo_path("pcilt", 8).context("no pcilt_b8 artifact")?)?;
+    let pjrt_logits: Vec<i32> = exe
+        .infer(&codes, bundle.params.classes)?
+        .into_iter()
+        .flatten()
+        .collect();
+    anyhow::ensure!(pjrt_logits == expect_logits, "PJRT != python smoke logits");
+    println!("PJRT(pcilt_b8) == python reference: OK (bit-exact)");
+
+    // 2. Native engines == PJRT (bit-exact across the stack).
+    for (name, choice) in [
+        ("dm", EngineChoice::Dm),
+        ("pcilt", EngineChoice::Pcilt),
+        ("segment", EngineChoice::Segment { seg_n: 2 }),
+        ("shared", EngineChoice::Shared),
+    ] {
+        let model = QuantCnn::new(bundle.params.clone(), choice);
+        let native: Vec<i32> = model.forward(&codes).into_iter().flatten().collect();
+        anyhow::ensure!(native == expect_logits, "native {name} != reference");
+        println!("native {name:<8} == python reference: OK (bit-exact)");
+    }
+
+    // 3. Classification accuracy on the smoke batch.
+    let model = QuantCnn::new(bundle.params.clone(), EngineChoice::Pcilt);
+    let preds = model.classify(&codes);
+    let correct = preds
+        .iter()
+        .zip(labels.iter())
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    println!("smoke accuracy: {correct}/8");
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let lanes = args.get_usize("lanes", 16)?;
+    let clock = args.get_f64("clock", 1.0)?;
+    let act_bits = args.get_usize("act-bits", 4)? as u32;
+    let wl = LayerWorkload {
+        act_bits,
+        k: 3,
+        ..LayerWorkload::default_small()
+    };
+    let mut reports = vec![
+        simulate_dm(&wl, lanes),
+        simulate_pcilt(&wl, lanes, 8, TableMem::Sram),
+        simulate_pcilt(&wl, lanes, 8, TableMem::Rom),
+    ];
+    if act_bits <= 2 {
+        reports.push(simulate_segment(
+            &wl,
+            lanes,
+            (8 / act_bits) as usize,
+            TableMem::Sram,
+        ));
+    }
+    reports.push(simulate_winograd(&wl, lanes));
+    reports.push(simulate_fft(&wl, lanes));
+    comparison_table("E2: ASIC engine comparison (Fig 3)", &wl, &reports, clock).print();
+
+    // Fig 4: adder tree sweep.
+    println!("\n## E3: adder tree width sweep (Fig 4)");
+    println!("{:<10} {:>14} {:>16}", "width", "cycles", "speedup");
+    let base = simulate_pcilt(&wl, lanes, 1, TableMem::Sram).cycles;
+    for width in [1usize, 2, 4, 8, 16, 32] {
+        let r = simulate_pcilt(&wl, lanes, width, TableMem::Sram);
+        println!(
+            "{:<10} {:>14} {:>15.2}x",
+            width,
+            fmt_count(r.cycles as u128),
+            base as f64 / r.cycles as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory() -> Result<()> {
+    println!("## E6/E7: PCILT memory model vs the paper's in-text claims\n");
+    println!(
+        "{:<52} {:>12} {:>12} {:>7}",
+        "configuration", "ours", "paper", "ratio"
+    );
+    for row in paper_memory_report() {
+        let paper = row.paper_bytes.unwrap_or(f64::NAN);
+        println!(
+            "{:<52} {:>12} {:>12} {:>6.2}x",
+            row.label,
+            fmt_bytes(row.ours_bytes),
+            fmt_bytes(paper),
+            row.ours_bytes / paper
+        );
+    }
+    println!(
+        "\nbuild cost (5x5 filter, INT8 acts): {} mults once vs {} DM mults \
+         for 10k 1024x768 frames",
+        fmt_count(pcilt::pcilt::memory::build_mults_per_filter(5, 1, 8) as u128),
+        fmt_count(pcilt::pcilt::memory::dm_mults(10_000, 768, 1024, 5) as u128),
+    );
+    Ok(())
+}
+
+fn cmd_engines(args: &Args) -> Result<()> {
+    let act_bits = args.get_usize("act-bits", 4)? as u32;
+    let channels = args.get_usize("channels", 8)?;
+    let mut rng = Rng::new(7);
+    let x = Tensor4::random_activations(Shape4::new(1, 32, 32, channels), act_bits, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(16, 3, 3, channels), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let opts = BenchOpts::default();
+    println!("## E1: CPU engine comparison (32x32x{channels} -> 16ch 3x3, a{act_bits})");
+    let dm = DmEngine::new(w.clone(), geom);
+    bench_run("dm", &opts, || dm.conv(&x));
+    let p = PciltEngine::new(&w, act_bits, geom);
+    bench_run("pcilt", &opts, || p.conv(&x));
+    let sh = SharedEngine::new(&w, act_bits, geom);
+    bench_run("shared", &opts, || sh.conv(&x));
+    if act_bits <= 2 {
+        let seg = SegmentEngine::new(&w, act_bits, (8 / act_bits) as usize, geom);
+        bench_run("segment", &opts, || seg.conv(&x));
+    }
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Rust-native QuantCNN — the exact mirror of `python/compile/model.py`'s
+//! integer inference graph, parameterized over any [`ConvEngine`].
+//!
+//! This is what lets the serving coordinator run the trained network
+//! through the paper's engines (PCILT, segment, shared …) without touching
+//! Python, and what the integration tests compare bit-for-bit against the
+//! PJRT artifact outputs (`artifacts/smoke_*.bin`).
+
+use crate::pcilt::engine::{ConvEngine, ConvGeometry};
+use crate::pcilt::{DmEngine, PciltEngine, SegmentEngine, SharedEngine};
+use crate::tensor::{max_pool2d, Shape4, Tensor4};
+
+/// Frozen integer model parameters + scales (mirror of python
+/// `QuantizedModel`). Loaded from `artifacts/manifest.toml` + `weights.bin`
+/// by [`crate::runtime::artifact`].
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub act_bits: u32,
+    pub img: usize,
+    pub classes: usize,
+    pub c1: usize,
+    pub c2: usize,
+    pub kernel: usize,
+    pub w1: Tensor4<i8>, // [C1,K,K,1]
+    pub w2: Tensor4<i8>, // [C2,K,K,C1]
+    pub w3: Vec<i8>,     // [classes * (2*2*C2)] row-major
+    pub s_in: f32,
+    pub s_w1: f32,
+    pub s_w2: f32,
+    pub s_w3: f32,
+    pub s_a1: f32,
+    pub s_a2: f32,
+}
+
+/// Engine choice for the two conv layers.
+pub enum EngineChoice {
+    Dm,
+    Pcilt,
+    Segment { seg_n: usize },
+    Shared,
+}
+
+/// The runnable model: two conv engines + the dense head.
+pub struct QuantCnn {
+    pub params: ModelParams,
+    conv1: Box<dyn ConvEngine>,
+    conv2: Box<dyn ConvEngine>,
+    engine_name: &'static str,
+}
+
+fn build_engine(
+    w: &Tensor4<i8>,
+    act_bits: u32,
+    geom: ConvGeometry,
+    choice: &EngineChoice,
+) -> Box<dyn ConvEngine> {
+    match choice {
+        EngineChoice::Dm => Box::new(DmEngine::new(w.clone(), geom)),
+        EngineChoice::Pcilt => Box::new(PciltEngine::new(w, act_bits, geom)),
+        EngineChoice::Segment { seg_n } => {
+            Box::new(SegmentEngine::new(w, act_bits, *seg_n, geom))
+        }
+        EngineChoice::Shared => Box::new(SharedEngine::new(w, act_bits, geom)),
+    }
+}
+
+impl QuantCnn {
+    pub fn new(params: ModelParams, choice: EngineChoice) -> QuantCnn {
+        let geom = ConvGeometry::unit_stride(params.kernel, params.kernel);
+        let conv1 = build_engine(&params.w1, params.act_bits, geom, &choice);
+        let conv2 = build_engine(&params.w2, params.act_bits, geom, &choice);
+        let engine_name = conv1.name();
+        QuantCnn {
+            params,
+            conv1,
+            conv2,
+            engine_name,
+        }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine_name
+    }
+
+    /// Float [0,1] image -> activation codes (mirror of python
+    /// `encode_input`).
+    pub fn encode_input(&self, x: &Tensor4<f32>) -> Tensor4<u8> {
+        let qmax = ((1u32 << self.params.act_bits) - 1) as f32;
+        x.map(|v| (v * qmax).round().clamp(0.0, qmax) as u8)
+    }
+
+    /// Requant: i32 accumulators -> unsigned codes. **round-ties-even** to
+    /// match `jnp.round` bit-for-bit.
+    fn requant(&self, acc: &Tensor4<i32>, multiplier: f32) -> Tensor4<u8> {
+        let qmax = (1i32 << self.params.act_bits) - 1;
+        acc.map(|v| {
+            let r = (v as f32 * multiplier).round_ties_even() as i32;
+            r.clamp(0, qmax) as u8
+        })
+    }
+
+    /// Integer forward: codes [B,16,16,1] -> logits i32 [B, classes].
+    pub fn forward(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
+        let p = &self.params;
+        let m1 = p.s_in * p.s_w1 / p.s_a1;
+        let acc1 = self.conv1.conv(codes);
+        let a1 = self.requant(&acc1, m1);
+        let a1 = pool_codes(&a1);
+        let m2 = p.s_a1 * p.s_w2 / p.s_a2;
+        let acc2 = self.conv2.conv(&a1);
+        let a2 = self.requant(&acc2, m2);
+        let a2 = pool_codes(&a2);
+        // flatten NHWC row-major (matches jnp reshape) then dense head
+        let s = a2.shape();
+        let feat = s.h * s.w * s.c;
+        let mut out = Vec::with_capacity(s.n);
+        for n in 0..s.n {
+            let start = n * feat;
+            let flat = &a2.data()[start..start + feat];
+            let mut logits = vec![0i32; p.classes];
+            for (cls, logit) in logits.iter_mut().enumerate() {
+                let row = &p.w3[cls * feat..(cls + 1) * feat];
+                *logit = row
+                    .iter()
+                    .zip(flat.iter())
+                    .map(|(&w, &a)| w as i32 * a as i32)
+                    .sum();
+            }
+            out.push(logits);
+        }
+        out
+    }
+
+    /// Forward + argmax.
+    pub fn classify(&self, codes: &Tensor4<u8>) -> Vec<usize> {
+        self.forward(codes)
+            .iter()
+            .map(|logits| {
+                logits
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// 2x2 max pool on u8 codes (codes are monotone in the dequantized value,
+/// so pooling codes == pooling values).
+fn pool_codes(x: &Tensor4<u8>) -> Tensor4<u8> {
+    let as_i32 = x.map(|v| v as i32);
+    max_pool2d(&as_i32).map(|v| v as u8)
+}
+
+/// Build a random-weight ModelParams for tests/benches (no artifacts
+/// needed).
+pub fn random_params(act_bits: u32, rng: &mut crate::util::prng::Rng) -> ModelParams {
+    let (c1, c2, k, img, classes) = (8, 16, 3, 16, 8);
+    let w1 = Tensor4::random_weights(Shape4::new(c1, k, k, 1), 8, rng);
+    let w2 = Tensor4::random_weights(Shape4::new(c2, k, k, c1), 8, rng);
+    let w3: Vec<i8> = (0..classes * 2 * 2 * c2)
+        .map(|_| rng.range_i64(-127, 127) as i8)
+        .collect();
+    ModelParams {
+        act_bits,
+        img,
+        classes,
+        c1,
+        c2,
+        kernel: k,
+        w1,
+        w2,
+        w3,
+        s_in: 1.0 / 15.0,
+        s_w1: 0.01,
+        s_w2: 0.01,
+        s_w3: 0.01,
+        s_a1: 4.0 / 15.0,
+        s_a2: 8.0 / 15.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_codes(n: usize, act_bits: u32, rng: &mut Rng) -> Tensor4<u8> {
+        Tensor4::random_activations(Shape4::new(n, 16, 16, 1), act_bits, rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let model = QuantCnn::new(random_params(4, &mut rng), EngineChoice::Pcilt);
+        let codes = random_codes(3, 4, &mut rng);
+        let logits = model.forward(&codes);
+        assert_eq!(logits.len(), 3);
+        assert!(logits.iter().all(|l| l.len() == 8));
+    }
+
+    #[test]
+    fn all_engines_bit_identical() {
+        // The end-to-end exactness claim at the rust layer.
+        let mut rng = Rng::new(2);
+        let params = random_params(4, &mut rng);
+        let codes = random_codes(4, 4, &mut rng);
+        let reference = QuantCnn::new(params.clone(), EngineChoice::Dm).forward(&codes);
+        for choice in [
+            EngineChoice::Pcilt,
+            EngineChoice::Segment { seg_n: 2 },
+            EngineChoice::Shared,
+        ] {
+            let m = QuantCnn::new(params.clone(), choice);
+            assert_eq!(m.forward(&codes), reference, "engine {}", m.engine_name());
+        }
+    }
+
+    #[test]
+    fn encode_input_matches_python_formula() {
+        let mut rng = Rng::new(3);
+        let model = QuantCnn::new(random_params(4, &mut rng), EngineChoice::Dm);
+        let x = Tensor4::from_vec(
+            Shape4::new(1, 1, 2, 2),
+            vec![0.0f32, 0.5, 1.0, 0.26668],
+        );
+        let codes = model.encode_input(&x);
+        // 0.5 * 15 = 7.5 -> rounds to 8 (round half away, like jnp for
+        // values not exactly representable... 7.5 IS representable; jnp
+        // rounds ties to even -> 8 as well here since round() half-away
+        // gives 8 and ties-even gives 8). 0.26668*15=4.0002 -> 4.
+        assert_eq!(codes.data(), &[0, 8, 15, 4]);
+    }
+
+    #[test]
+    fn classify_returns_valid_classes() {
+        let mut rng = Rng::new(4);
+        let model = QuantCnn::new(random_params(4, &mut rng), EngineChoice::Pcilt);
+        let codes = random_codes(8, 4, &mut rng);
+        for c in model.classify(&codes) {
+            assert!(c < 8);
+        }
+    }
+
+    #[test]
+    fn bool_activation_model_runs() {
+        let mut rng = Rng::new(5);
+        let model = QuantCnn::new(
+            random_params(1, &mut rng),
+            EngineChoice::Segment { seg_n: 8 },
+        );
+        let codes = random_codes(2, 1, &mut rng);
+        assert_eq!(model.forward(&codes).len(), 2);
+    }
+
+    #[test]
+    fn pool_codes_matches_value_pooling() {
+        let mut rng = Rng::new(6);
+        let x = Tensor4::random_activations(Shape4::new(1, 4, 4, 2), 4, &mut rng);
+        let pooled = pool_codes(&x);
+        for h in 0..2 {
+            for w in 0..2 {
+                for c in 0..2 {
+                    let m = x
+                        .get(0, 2 * h, 2 * w, c)
+                        .max(x.get(0, 2 * h, 2 * w + 1, c))
+                        .max(x.get(0, 2 * h + 1, 2 * w, c))
+                        .max(x.get(0, 2 * h + 1, 2 * w + 1, c));
+                    assert_eq!(pooled.get(0, h, w, c), m);
+                }
+            }
+        }
+    }
+}

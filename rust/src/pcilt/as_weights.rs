@@ -1,0 +1,425 @@
+//! PCILTs as weights — the paper's most speculative extension: drop input
+//! weights entirely and let backpropagation adjust **table values**
+//! directly, "similarly to the CNNs that adjust filter weights instead of
+//! input weights".
+//!
+//! The paper defines **four general ranges** (granularities) of adjustment;
+//! we implement all four as group-reductions of the per-cell gradient:
+//!
+//! | range | group key | classic equivalent |
+//! |-------|-----------|--------------------|
+//! | [`AdjustRange::AllTables`]   | `(oc)`       | input-weight update |
+//! | [`AdjustRange::PerTable`]    | `(oc, pos)`  | filter-weight update |
+//! | [`AdjustRange::PerOffsetRow`]| `(oc, a)`    | per-activation filter scaling |
+//! | [`AdjustRange::PerCell`]     | `(oc, pos, a)` | fully free table |
+//!
+//! Tables are trained in f32 (the master copy); inference quantizes to the
+//! i32 tables the PCILT engines consume. `reconstruct_filters` inverts
+//! trained tables back into classic filters (least squares over the
+//! activation codes), the paper's "build back from them weight-adjusted
+//! input filters".
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::engine::ConvGeometry;
+use super::table::LayerTables;
+
+/// The four adjustment granularities of the extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdjustRange {
+    AllTables,
+    PerTable,
+    PerOffsetRow,
+    PerCell,
+}
+
+impl AdjustRange {
+    pub const ALL: [AdjustRange; 4] = [
+        AdjustRange::AllTables,
+        AdjustRange::PerTable,
+        AdjustRange::PerOffsetRow,
+        AdjustRange::PerCell,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdjustRange::AllTables => "all-tables",
+            AdjustRange::PerTable => "per-table",
+            AdjustRange::PerOffsetRow => "per-offset-row",
+            AdjustRange::PerCell => "per-cell",
+        }
+    }
+}
+
+/// A conv layer whose parameters are the PCILT values themselves.
+pub struct TableParamLayer {
+    /// `values[(oc * positions + p) * card + a]`, trained in f32.
+    values: Vec<f32>,
+    pub out_ch: usize,
+    pub positions: usize,
+    pub card: usize,
+    pub act_bits: u32,
+    geom: ConvGeometry,
+}
+
+impl TableParamLayer {
+    /// Random initialization (the paper: "in an extreme case, they can even
+    /// be generated randomly").
+    pub fn random(
+        out_ch: usize,
+        geom: ConvGeometry,
+        in_ch: usize,
+        act_bits: u32,
+        scale: f32,
+        rng: &mut crate::util::prng::Rng,
+    ) -> TableParamLayer {
+        let positions = geom.kh * geom.kw * in_ch;
+        let card = 1usize << act_bits;
+        TableParamLayer {
+            values: (0..out_ch * positions * card)
+                .map(|_| rng.f32_range(-scale, scale))
+                .collect(),
+            out_ch,
+            positions,
+            card,
+            act_bits,
+            geom,
+        }
+    }
+
+    /// Initialize from classic weights (tables = w·a), the warm start.
+    pub fn from_weights(weights: &Tensor4<i8>, act_bits: u32, geom: ConvGeometry) -> TableParamLayer {
+        let tables = LayerTables::build(weights, act_bits, &super::custom_fn::ConvFunc::Mul);
+        TableParamLayer {
+            values: tables.values().iter().map(|&v| v as f32).collect(),
+            out_ch: tables.out_ch,
+            positions: tables.positions,
+            card: tables.card,
+            act_bits,
+            geom,
+        }
+    }
+
+    /// Number of trainable parameters at a given adjustment range — the
+    /// paper's "optimal size of the network parameter space" knob.
+    pub fn param_count(&self, range: AdjustRange) -> usize {
+        match range {
+            AdjustRange::AllTables => self.out_ch,
+            AdjustRange::PerTable => self.out_ch * self.positions,
+            AdjustRange::PerOffsetRow => self.out_ch * self.card,
+            AdjustRange::PerCell => self.out_ch * self.positions * self.card,
+        }
+    }
+
+    #[inline(always)]
+    fn idx(&self, oc: usize, p: usize, a: usize) -> usize {
+        (oc * self.positions + p) * self.card + a
+    }
+
+    /// Forward: f32 lookup-sum convolution. Also returns the flattened RF
+    /// activation codes per output position (needed by `backward`).
+    pub fn forward(&self, x: &Tensor4<u8>) -> (Tensor4<f32>, Vec<u8>) {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let out_shape = g.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let mut codes = Vec::with_capacity(s.n * out_shape.h * out_shape.w * self.positions);
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let rf_start = codes.len();
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        codes.extend_from_slice(row);
+                    }
+                    let rf = &codes[rf_start..];
+                    for oc in 0..self.out_ch {
+                        let mut acc = 0f32;
+                        for (p, &a) in rf.iter().enumerate() {
+                            acc += self.values[self.idx(oc, p, a as usize)];
+                        }
+                        out.set(n, oy, ox, oc, acc);
+                    }
+                }
+            }
+        }
+        (out, codes)
+    }
+
+    /// Backward + SGD step at the chosen adjustment range.
+    /// `grad_out` is dL/d(output); `codes` is the forward's RF record.
+    /// Returns the mean-square per-cell gradient (diagnostic).
+    pub fn sgd_step(
+        &mut self,
+        grad_out: &Tensor4<f32>,
+        codes: &[u8],
+        range: AdjustRange,
+        lr: f32,
+    ) -> f32 {
+        let gs = grad_out.shape();
+        assert_eq!(gs.c, self.out_ch);
+        let rfs = gs.n * gs.h * gs.w;
+        assert_eq!(codes.len(), rfs * self.positions);
+        // 1. per-cell gradient accumulation
+        let mut grad = vec![0f32; self.values.len()];
+        for r in 0..rfs {
+            let rf = &codes[r * self.positions..(r + 1) * self.positions];
+            // grad_out is NHWC with c == out_ch; flat RF index r maps to
+            // (n, oy, ox) in row-major order, so the slice is contiguous:
+            let go = &grad_out.data()[r * self.out_ch..(r + 1) * self.out_ch];
+            for (oc, &g) in go.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                for (p, &a) in rf.iter().enumerate() {
+                    grad[self.idx(oc, p, a as usize)] += g;
+                }
+            }
+        }
+        // 2. group-reduce per the adjustment range, then broadcast update.
+        match range {
+            AdjustRange::PerCell => {
+                for (v, g) in self.values.iter_mut().zip(grad.iter()) {
+                    *v -= lr * g;
+                }
+            }
+            AdjustRange::PerTable => {
+                for oc in 0..self.out_ch {
+                    for p in 0..self.positions {
+                        let base = (oc * self.positions + p) * self.card;
+                        let mean: f32 =
+                            grad[base..base + self.card].iter().sum::<f32>() / self.card as f32;
+                        for a in 0..self.card {
+                            self.values[base + a] -= lr * mean;
+                        }
+                    }
+                }
+            }
+            AdjustRange::PerOffsetRow => {
+                for oc in 0..self.out_ch {
+                    for a in 0..self.card {
+                        let mut sum = 0f32;
+                        for p in 0..self.positions {
+                            sum += grad[self.idx(oc, p, a)];
+                        }
+                        let mean = sum / self.positions as f32;
+                        for p in 0..self.positions {
+                            let i = self.idx(oc, p, a);
+                            self.values[i] -= lr * mean;
+                        }
+                    }
+                }
+            }
+            AdjustRange::AllTables => {
+                let per = self.positions * self.card;
+                for oc in 0..self.out_ch {
+                    let base = oc * per;
+                    let mean: f32 = grad[base..base + per].iter().sum::<f32>() / per as f32;
+                    for v in &mut self.values[base..base + per] {
+                        *v -= lr * mean;
+                    }
+                }
+            }
+        }
+        grad.iter().map(|g| g * g).sum::<f32>() / grad.len() as f32
+    }
+
+    /// Quantize the trained f32 tables into integer [`LayerTables`] for the
+    /// inference engines (round to nearest).
+    pub fn to_layer_tables(&self) -> LayerTables {
+        // Build a zero layer of the right geometry, then overwrite values.
+        let in_ch = self.positions / (self.geom.kh * self.geom.kw);
+        let zero_w = Tensor4::<i8>::zeros(Shape4::new(
+            self.out_ch,
+            self.geom.kh,
+            self.geom.kw,
+            in_ch,
+        ));
+        let mut lt = LayerTables::build(&zero_w, self.act_bits, &super::custom_fn::ConvFunc::Mul);
+        for (dst, &src) in lt.values_mut().iter_mut().zip(self.values.iter()) {
+            *dst = src.round() as i32;
+        }
+        lt
+    }
+
+    /// Reconstruct classic filter weights from the tables, assuming the
+    /// table rows approximate `w·a`: least squares over activation codes,
+    /// `w = Σ_a a·T[a] / Σ_a a²`.
+    pub fn reconstruct_filters(&self) -> Vec<f32> {
+        let denom: f32 = (0..self.card).map(|a| (a * a) as f32).sum();
+        let mut out = Vec::with_capacity(self.out_ch * self.positions);
+        for oc in 0..self.out_ch {
+            for p in 0..self.positions {
+                let mut num = 0f32;
+                for a in 0..self.card {
+                    num += a as f32 * self.values[self.idx(oc, p, a)];
+                }
+                out.push(if denom > 0.0 { num / denom } else { 0.0 });
+            }
+        }
+        out
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::engine::ConvEngine;
+    use crate::pcilt::lookup::PciltEngine;
+    use crate::util::prng::Rng;
+
+    /// Fit a TableParamLayer to mimic a fixed random target layer on random
+    /// data; returns (initial_loss, final_loss).
+    fn fit(range: AdjustRange, steps: usize, seed: u64) -> (f32, f32) {
+        let mut rng = Rng::new(seed);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let target = TableParamLayer::random(2, geom, 1, 2, 2.0, &mut rng);
+        let mut model = TableParamLayer::random(2, geom, 1, 2, 0.1, &mut rng);
+        let x = Tensor4::random_activations(Shape4::new(4, 6, 6, 1), 2, &mut rng);
+        let (y_t, _) = target.forward(&x);
+        let mut first = None;
+        let mut last = 0f32;
+        for _ in 0..steps {
+            let (y, codes) = model.forward(&x);
+            // L = 0.5 * mean (y - y_t)^2 ; dL/dy = (y - y_t)/N
+            let n = y.data().len() as f32;
+            let mut loss = 0f32;
+            let grad = Tensor4::from_vec(
+                y.shape(),
+                y.data()
+                    .iter()
+                    .zip(y_t.data().iter())
+                    .map(|(&a, &b)| {
+                        loss += (a - b) * (a - b);
+                        (a - b) / n
+                    })
+                    .collect(),
+            );
+            loss /= 2.0 * n;
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+            model.sgd_step(&grad, &codes, range, 0.5);
+        }
+        (first.unwrap(), last)
+    }
+
+    #[test]
+    fn per_cell_training_converges() {
+        let (first, last) = fit(AdjustRange::PerCell, 120, 101);
+        assert!(
+            last < first * 0.05,
+            "per-cell should fit well: first={first} last={last}"
+        );
+    }
+
+    #[test]
+    fn all_ranges_reduce_loss() {
+        for (i, range) in AdjustRange::ALL.iter().enumerate() {
+            let (first, last) = fit(*range, 60, 200 + i as u64);
+            assert!(
+                last < first,
+                "{}: first={first} last={last}",
+                range.name()
+            );
+        }
+    }
+
+    #[test]
+    fn param_counts_ordered_by_selectivity() {
+        let mut rng = Rng::new(103);
+        let layer =
+            TableParamLayer::random(4, ConvGeometry::unit_stride(3, 3), 2, 4, 1.0, &mut rng);
+        let counts: Vec<usize> = AdjustRange::ALL
+            .iter()
+            .map(|r| layer.param_count(*r))
+            .collect();
+        // all-tables(4) < per-offset-row(64) < per-table(72) < per-cell(1152)
+        assert_eq!(counts[0], 4);
+        assert_eq!(counts[1], 4 * 18);
+        assert_eq!(counts[2], 4 * 16);
+        assert_eq!(counts[3], 4 * 18 * 16);
+        assert!(counts[0] < counts[2] && counts[2] < counts[1] && counts[1] < counts[3]);
+    }
+
+    #[test]
+    fn warm_start_matches_pcilt_engine() {
+        // from_weights + forward == integer PCILT engine output.
+        let mut rng = Rng::new(107);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 4, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let layer = TableParamLayer::from_weights(&w, 2, geom);
+        let x = Tensor4::random_activations(Shape4::new(1, 5, 5, 2), 2, &mut rng);
+        let (y, _) = layer.forward(&x);
+        let e = PciltEngine::new(&w, 2, geom);
+        let yi = e.conv(&x);
+        for (a, b) in y.data().iter().zip(yi.data().iter()) {
+            assert_eq!(*a as i32, *b);
+        }
+    }
+
+    #[test]
+    fn filter_reconstruction_roundtrip() {
+        // Tables built from weights reconstruct those weights exactly.
+        let mut rng = Rng::new(109);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 6, &mut rng);
+        let layer = TableParamLayer::from_weights(&w, 3, ConvGeometry::unit_stride(3, 3));
+        let rec = layer.reconstruct_filters();
+        let mut i = 0;
+        for oc in 0..2 {
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let expect = w.get(oc, ky, kx, 0) as f32;
+                    assert!(
+                        (rec[i] - expect).abs() < 1e-4,
+                        "oc={oc} ky={ky} kx={kx}: {} vs {expect}",
+                        rec[i]
+                    );
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_layer_tables_roundtrips_integers() {
+        let mut rng = Rng::new(113);
+        let w = Tensor4::random_weights(Shape4::new(1, 2, 2, 1), 4, &mut rng);
+        let geom = ConvGeometry::unit_stride(2, 2);
+        let layer = TableParamLayer::from_weights(&w, 2, geom);
+        let lt = layer.to_layer_tables();
+        let direct = LayerTables::build(&w, 2, &super::super::custom_fn::ConvFunc::Mul);
+        assert_eq!(lt.values(), direct.values());
+    }
+
+    #[test]
+    fn per_table_range_equals_filter_weight_update_semantics() {
+        // A per-table update shifts every entry of one table by the same
+        // amount — check the invariance: entry differences within a table
+        // are preserved.
+        let mut rng = Rng::new(127);
+        let geom = ConvGeometry::unit_stride(2, 2);
+        let mut layer = TableParamLayer::random(1, geom, 1, 2, 1.0, &mut rng);
+        let before: Vec<f32> = layer.values().to_vec();
+        let x = Tensor4::random_activations(Shape4::new(2, 4, 4, 1), 2, &mut rng);
+        let (y, codes) = layer.forward(&x);
+        let grad = Tensor4::from_vec(y.shape(), vec![0.1; y.data().len()]);
+        layer.sgd_step(&grad, &codes, AdjustRange::PerTable, 0.1);
+        let after = layer.values();
+        for p in 0..layer.positions {
+            let base = p * layer.card;
+            let delta0 = after[base] - before[base];
+            for a in 1..layer.card {
+                let d = after[base + a] - before[base + a];
+                assert!((d - delta0).abs() < 1e-5, "p={p} a={a}");
+            }
+        }
+    }
+}

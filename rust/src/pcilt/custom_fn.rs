@@ -1,0 +1,124 @@
+//! Custom convolutional functions — the paper's *"Using Custom
+//! Convolutional Functions"* extension.
+//!
+//! A PCILT stores `f(w, a)` for every activation value `a`; nothing forces
+//! `f` to be plain multiplication. Because the function is evaluated only at
+//! table-build time, an arbitrarily expensive `f` has **zero inference
+//! cost** — the paper's key observation. We provide the classic product,
+//! a saturating product, a log-domain product (non-uniform precision over a
+//! wide range via integer codes), and a free-form codebook.
+
+/// A convolutional function `f(weight, activation) -> i32` used to populate
+/// PCILT entries. `a` is the raw unsigned activation code.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConvFunc {
+    /// Classic direct multiplication: `w * a`. Bit-exact vs the DM engine.
+    Mul,
+    /// Multiplication saturated to `[-max, max]` — models narrow PCILT
+    /// value storage (the "~75 MB" narrower-product variant of §Basic).
+    SatMul { max: i32 },
+    /// Log-domain product: activation codes are exponents,
+    /// `f(w, a) = w * round(base^a)` with `f(w, 0) = 0`.
+    /// Represents a big dynamic range with few activation codes
+    /// ("representing floating-point values with non-uniform distribution
+    /// through integers with uniform distribution").
+    LogMul { base: f64 },
+    /// Free-form codebook: activation code `a` dereferences `codes[a]`,
+    /// `f(w, a) = round(w * codes[a])`. The codebook length must cover the
+    /// activation cardinality.
+    Codebook { codes: Vec<f32> },
+}
+
+impl ConvFunc {
+    /// Evaluate the function. Build-time only — never on the inference path.
+    pub fn eval(&self, w: i32, a: u32) -> i32 {
+        match self {
+            ConvFunc::Mul => w * a as i32,
+            ConvFunc::SatMul { max } => (w * a as i32).clamp(-max, *max),
+            ConvFunc::LogMul { base } => {
+                if a == 0 {
+                    0
+                } else {
+                    let m = base.powi(a as i32 - 1).round() as i32;
+                    w.saturating_mul(m)
+                }
+            }
+            ConvFunc::Codebook { codes } => {
+                let code = codes
+                    .get(a as usize)
+                    .unwrap_or_else(|| panic!("codebook too short for activation {a}"));
+                (w as f32 * code).round() as i32
+            }
+        }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvFunc::Mul => "mul",
+            ConvFunc::SatMul { .. } => "satmul",
+            ConvFunc::LogMul { .. } => "logmul",
+            ConvFunc::Codebook { .. } => "codebook",
+        }
+    }
+
+    /// Whether this function is plain multiplication (lets engines assert
+    /// bit-exactness against the DM baseline).
+    pub fn is_exact_mul(&self) -> bool {
+        matches!(self, ConvFunc::Mul)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn mul_is_mul() {
+        assert_eq!(ConvFunc::Mul.eval(-7, 13), -91);
+        assert_eq!(ConvFunc::Mul.eval(0, 255), 0);
+    }
+
+    #[test]
+    fn satmul_saturates() {
+        let f = ConvFunc::SatMul { max: 100 };
+        assert_eq!(f.eval(50, 3), 100);
+        assert_eq!(f.eval(-50, 3), -100);
+        assert_eq!(f.eval(7, 2), 14);
+    }
+
+    #[test]
+    fn logmul_zero_maps_to_zero() {
+        let f = ConvFunc::LogMul { base: 2.0 };
+        assert_eq!(f.eval(5, 0), 0);
+        assert_eq!(f.eval(5, 1), 5); // 2^0
+        assert_eq!(f.eval(5, 4), 40); // 2^3
+    }
+
+    #[test]
+    fn logmul_grows_geometrically() {
+        let f = ConvFunc::LogMul { base: 2.0 };
+        forall("logmul doubles per code", 100, |g| {
+            let w = g.i64(-100, 100) as i32;
+            let a = g.i64(1, 14) as u32;
+            assert_eq!(f.eval(w, a + 1), f.eval(w, a).saturating_mul(2));
+        });
+    }
+
+    #[test]
+    fn codebook_dereferences() {
+        let f = ConvFunc::Codebook {
+            codes: vec![0.0, 0.5, 1.0, 2.5],
+        };
+        assert_eq!(f.eval(4, 1), 2);
+        assert_eq!(f.eval(4, 3), 10);
+        assert_eq!(f.eval(-4, 2), -4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn codebook_out_of_range_panics() {
+        ConvFunc::Codebook { codes: vec![0.0] }.eval(1, 5);
+    }
+}

@@ -1,0 +1,201 @@
+//! Direct-multiplication (DM) convolution — the classic algorithm the paper
+//! benchmarks PCILT against, and the bit-exact reference for every
+//! integer engine in this crate.
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+
+/// DM engine: holds OHWI weights and geometry.
+pub struct DmEngine {
+    weights: Tensor4<i8>,
+    geom: ConvGeometry,
+    /// Flattened weights `[oc][kh*kw*ic]` as i32 for the inner loop.
+    flat: Vec<i32>,
+    positions: usize,
+}
+
+impl DmEngine {
+    pub fn new(weights: Tensor4<i8>, geom: ConvGeometry) -> DmEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh, "weight kh mismatch");
+        assert_eq!(s.w, geom.kw, "weight kw mismatch");
+        let positions = s.h * s.w * s.c;
+        let flat: Vec<i32> = weights.data().iter().map(|&w| w as i32).collect();
+        DmEngine {
+            weights,
+            geom,
+            flat,
+            positions,
+        }
+    }
+
+    pub fn weights(&self) -> &Tensor4<i8> {
+        &self.weights
+    }
+}
+
+impl ConvEngine for DmEngine {
+    fn name(&self) -> &'static str {
+        "dm"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.weights.shape().n
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        let g = self.geom;
+        let ws = self.weights.shape();
+        assert_eq!(s.c, ws.c, "input channels {} != weight in_ch {}", s.c, ws.c);
+        let out_shape = g.out_shape(s, ws.n);
+        let mut out = Tensor4::zeros(out_shape);
+        // Gather the RF into a scratch buffer once per position, then do a
+        // dense dot per output channel — same memory behaviour as an
+        // im2col'd GEMM without materializing the whole matrix.
+        let mut rf = vec![0i32; self.positions];
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let mut p = 0;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        // row covers channels at kx=0; walk kw*c contiguous
+                        for &v in row {
+                            rf[p] = v as i32;
+                            p += 1;
+                        }
+                    }
+                    for oc in 0..ws.n {
+                        let w = &self.flat[oc * self.positions..(oc + 1) * self.positions];
+                        let mut acc = 0i32;
+                        for (wv, av) in w.iter().zip(rf.iter()) {
+                            acc += wv * av;
+                        }
+                        out.set(n, oy, ox, oc, acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.positions * self.out_channels()) as u64;
+        OpCounts {
+            mults: rfs * per_rf,
+            adds: rfs * per_rf,
+            // DM fetches both operand streams: weight + activation.
+            fetches: rfs * per_rf * 2,
+        }
+    }
+}
+
+/// Reference scalar implementation used in tests — deliberately the most
+/// naive possible nested loop, so faster engines are checked against
+/// something visually verifiable.
+pub fn conv_reference(x: &Tensor4<u8>, w: &Tensor4<i8>, geom: ConvGeometry) -> Tensor4<i32> {
+    let s = x.shape();
+    let ws = w.shape();
+    assert_eq!(s.c, ws.c);
+    let out_shape = geom.out_shape(s, ws.n);
+    let mut out = Tensor4::zeros(out_shape);
+    for n in 0..s.n {
+        for oy in 0..out_shape.h {
+            for ox in 0..out_shape.w {
+                for oc in 0..ws.n {
+                    let mut acc = 0i32;
+                    for ky in 0..geom.kh {
+                        for kx in 0..geom.kw {
+                            for ic in 0..s.c {
+                                acc += w.get(oc, ky, kx, ic) as i32
+                                    * x.get(n, oy * geom.sy + ky, ox * geom.sx + kx, ic) as i32;
+                            }
+                        }
+                    }
+                    out.set(n, oy, ox, oc, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn known_3x3_identity_kernel() {
+        // Kernel that picks the center pixel.
+        let mut w = Tensor4::<i8>::zeros(Shape4::new(1, 3, 3, 1));
+        w.set(0, 1, 1, 0, 1);
+        let x = Tensor4::from_fn(Shape4::new(1, 4, 4, 1), |_, h, w2, _| (h * 4 + w2) as u8);
+        let e = DmEngine::new(w, ConvGeometry::unit_stride(3, 3));
+        let y = e.conv(&x);
+        assert_eq!(y.shape(), Shape4::new(1, 2, 2, 1));
+        assert_eq!(y.get(0, 0, 0, 0), 5);
+        assert_eq!(y.get(0, 1, 1, 0), 10);
+    }
+
+    #[test]
+    fn engine_matches_naive_reference() {
+        forall("dm engine == naive reference", 40, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let (kh, kw) = *rng.choose(&[(1, 1), (3, 3), (5, 5), (2, 3)]);
+            let ic = rng.range_i64(1, 4) as usize;
+            let oc = rng.range_i64(1, 4) as usize;
+            let h = kh + rng.range_i64(0, 5) as usize;
+            let w_dim = kw + rng.range_i64(0, 5) as usize;
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let x = Tensor4::random_activations(Shape4::new(2, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+            let geom = ConvGeometry::unit_stride(kh, kw);
+            let engine = DmEngine::new(w.clone(), geom);
+            assert_eq!(engine.conv(&x), conv_reference(&x, &w, geom));
+        });
+    }
+
+    #[test]
+    fn strided_matches_reference() {
+        let mut rng = Rng::new(7);
+        let x = Tensor4::random_activations(Shape4::new(1, 9, 9, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry {
+            kh: 3,
+            kw: 3,
+            sy: 2,
+            sx: 2,
+        };
+        let engine = DmEngine::new(w.clone(), geom);
+        assert_eq!(engine.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn op_counts_paper_example() {
+        // §Basic: 10,000 samples of 1024x768, 5x5 filter (1 in, 1 out ch)
+        // -> 194,820,000,000 multiplications.
+        let mut rng = Rng::new(1);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        let e = DmEngine::new(w, ConvGeometry::unit_stride(5, 5));
+        let per_sample = e.op_counts(Shape4::new(1, 768, 1024, 1)).mults;
+        assert_eq!(per_sample * 10_000, 194_820_000_000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn channel_mismatch_panics() {
+        let mut rng = Rng::new(2);
+        let x = Tensor4::random_activations(Shape4::new(1, 5, 5, 3), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(1, 3, 3, 2), 8, &mut rng);
+        DmEngine::new(w, ConvGeometry::unit_stride(3, 3)).conv(&x);
+    }
+}

@@ -1,0 +1,106 @@
+//! The `ConvEngine` trait: common interface of every convolution
+//! implementation in this crate (DM baseline, the PCILT variants, Winograd
+//! and FFT baselines), plus shared geometry.
+
+use crate::tensor::{Shape4, Tensor4};
+
+/// Convolution geometry shared by all engines: kernel size and stride.
+/// Padding is applied by the caller (`tensor::pad_nhwc`) so engines always
+/// see "valid" convolutions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeometry {
+    pub kh: usize,
+    pub kw: usize,
+    pub sy: usize,
+    pub sx: usize,
+}
+
+impl ConvGeometry {
+    pub fn unit_stride(kh: usize, kw: usize) -> ConvGeometry {
+        ConvGeometry {
+            kh,
+            kw,
+            sy: 1,
+            sx: 1,
+        }
+    }
+
+    pub fn out_shape(&self, input: Shape4, out_ch: usize) -> Shape4 {
+        let (oh, ow) = input.conv_out(self.kh, self.kw, self.sy, self.sx);
+        Shape4::new(input.n, oh, ow, out_ch)
+    }
+}
+
+/// A convolution engine: consumes u8 activations (codes in `[0, 2^bits)`),
+/// produces i32 accumulator outputs. Integer-exact engines (DM, PCILT with
+/// `ConvFunc::Mul`) agree bit-for-bit; approximate baselines (FFT) agree
+/// after rounding.
+pub trait ConvEngine: Send + Sync {
+    /// Engine name for reports and routing.
+    fn name(&self) -> &'static str;
+
+    /// Number of output channels.
+    fn out_channels(&self) -> usize;
+
+    /// Geometry this engine was built for.
+    fn geometry(&self) -> ConvGeometry;
+
+    /// Run the convolution over a batch.
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32>;
+
+    /// Operation counts for one invocation on input shape `s` —
+    /// (multiplications, additions, table fetches). Used by the op-count
+    /// experiments; engines report their true inner-loop behaviour.
+    fn op_counts(&self, s: Shape4) -> OpCounts;
+}
+
+/// Arithmetic/memory operation counts for an engine invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OpCounts {
+    pub mults: u64,
+    pub adds: u64,
+    pub fetches: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.mults + self.adds + self.fetches
+    }
+}
+
+/// Number of receptive-field evaluations for geometry `g` on input `s`.
+pub fn rf_count(g: ConvGeometry, s: Shape4) -> u64 {
+    let (oh, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+    (s.n * oh * ow) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_shape_matches_conv_out() {
+        let g = ConvGeometry::unit_stride(5, 5);
+        let out = g.out_shape(Shape4::new(2, 16, 16, 3), 8);
+        assert_eq!(out, Shape4::new(2, 12, 12, 8));
+    }
+
+    #[test]
+    fn rf_count_counts_positions() {
+        let g = ConvGeometry::unit_stride(5, 5);
+        // The paper's §Basic example: 1024x768 frame, 5x5 filter, valid conv
+        // -> 1020*764 = 779,280 RF positions per sample.
+        assert_eq!(rf_count(g, Shape4::new(1, 768, 1024, 1)), 764 * 1020);
+    }
+
+    #[test]
+    fn strided_geometry() {
+        let g = ConvGeometry {
+            kh: 3,
+            kw: 3,
+            sy: 2,
+            sx: 2,
+        };
+        assert_eq!(g.out_shape(Shape4::new(1, 9, 9, 1), 4), Shape4::new(1, 4, 4, 4));
+    }
+}

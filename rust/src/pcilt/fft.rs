@@ -1,0 +1,335 @@
+//! FFT-based convolution baseline — the Fourier-domain comparator of the
+//! paper's algorithm discussion (Mathieu et al., Highlander et al.).
+//!
+//! 2-D convolution by pointwise product of zero-padded radix-2 FFTs. The
+//! filter spectra are precomputed once (the "reusing the same transformed
+//! feature map" trick applies per input channel). Results are rounded to
+//! i32; for the integer magnitudes in this repo the float error is ≪ 0.5,
+//! so the rounded output matches DM exactly (tests assert this).
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::engine::{ConvEngine, ConvGeometry, OpCounts};
+
+/// Complex number (no `num-complex` offline; two f64s suffice).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64 {
+            re: self.re + o.re,
+            im: self.im + o.im,
+        }
+    }
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64 {
+            re: self.re - o.re,
+            im: self.im - o.im,
+        }
+    }
+    #[cfg(test)]
+    #[inline]
+    fn conj(self) -> C64 {
+        C64 {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+}
+
+/// In-place iterative radix-2 Cooley–Tukey FFT. `xs.len()` must be a power
+/// of two. `inverse` applies the conjugate transform *without* the 1/N
+/// normalization (callers normalize once).
+pub fn fft_inplace(xs: &mut [C64], inverse: bool) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            xs.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64 {
+            re: ang.cos(),
+            im: ang.sin(),
+        };
+        let mut i = 0;
+        while i < n {
+            let mut w = C64 { re: 1.0, im: 0.0 };
+            for k in 0..len / 2 {
+                let u = xs[i + k];
+                let v = xs[i + k + len / 2].mul(w);
+                xs[i + k] = u.add(v);
+                xs[i + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// 2-D FFT over a row-major `rows × cols` buffer (both powers of two).
+fn fft2_inplace(buf: &mut [C64], rows: usize, cols: usize, inverse: bool) {
+    // Rows
+    for r in 0..rows {
+        fft_inplace(&mut buf[r * cols..(r + 1) * cols], inverse);
+    }
+    // Columns (gather/scatter through a scratch column).
+    let mut col = vec![C64::default(); rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col[r] = buf[r * cols + c];
+        }
+        fft_inplace(&mut col, inverse);
+        for r in 0..rows {
+            buf[r * cols + c] = col[r];
+        }
+    }
+}
+
+/// FFT conv engine for arbitrary kernels, unit stride.
+pub struct FftEngine {
+    /// Precomputed filter spectra: `[oc][ic][fh*fw]`, for the padded size
+    /// chosen at construction (covers inputs up to `max_h × max_w`).
+    spectra: Vec<Vec<Vec<C64>>>,
+    geom: ConvGeometry,
+    out_ch: usize,
+    in_ch: usize,
+    fh: usize,
+    fw: usize,
+}
+
+impl FftEngine {
+    /// `max_h/max_w`: the largest input this engine will see (spectra are
+    /// sized for it; smaller inputs zero-pad into the same transform).
+    pub fn new(weights: &Tensor4<i8>, max_h: usize, max_w: usize) -> FftEngine {
+        let s = weights.shape();
+        let fh = max_h.next_power_of_two();
+        let fw = max_w.next_power_of_two();
+        let mut spectra = Vec::with_capacity(s.n);
+        for oc in 0..s.n {
+            let mut per_ic = Vec::with_capacity(s.c);
+            for ic in 0..s.c {
+                let mut buf = vec![C64::default(); fh * fw];
+                // Correlation (what CNNs call convolution) = convolution
+                // with the kernel unflipped in the frequency domain if we
+                // conjugate: we instead time-reverse the kernel so the
+                // pointwise product yields correlation directly.
+                for ky in 0..s.h {
+                    for kx in 0..s.w {
+                        let v = weights.get(oc, ky, kx, ic) as f64;
+                        let y = (fh - ky) % fh;
+                        let x = (fw - kx) % fw;
+                        buf[y * fw + x] = C64 { re: v, im: 0.0 };
+                    }
+                }
+                fft2_inplace(&mut buf, fh, fw, false);
+                per_ic.push(buf);
+            }
+            spectra.push(per_ic);
+        }
+        FftEngine {
+            spectra,
+            geom: ConvGeometry::unit_stride(s.h, s.w),
+            out_ch: s.n,
+            in_ch: s.c,
+            fh,
+            fw,
+        }
+    }
+}
+
+impl ConvEngine for FftEngine {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        assert_eq!(s.c, self.in_ch);
+        assert!(s.h <= self.fh && s.w <= self.fw, "input exceeds engine size");
+        let out_shape = self.geom.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let (fh, fw) = (self.fh, self.fw);
+        let norm = 1.0 / (fh * fw) as f64;
+        for n in 0..s.n {
+            // Transform each input channel once; reuse across out channels
+            // (Mathieu et al.'s reuse).
+            let mut xs: Vec<Vec<C64>> = Vec::with_capacity(self.in_ch);
+            for ic in 0..self.in_ch {
+                let mut buf = vec![C64::default(); fh * fw];
+                for h in 0..s.h {
+                    for w in 0..s.w {
+                        buf[h * fw + w] = C64 {
+                            re: x.get(n, h, w, ic) as f64,
+                            im: 0.0,
+                        };
+                    }
+                }
+                fft2_inplace(&mut buf, fh, fw, false);
+                xs.push(buf);
+            }
+            let mut acc = vec![C64::default(); fh * fw];
+            for oc in 0..self.out_ch {
+                acc.iter_mut().for_each(|c| *c = C64::default());
+                for ic in 0..self.in_ch {
+                    let spec = &self.spectra[oc][ic];
+                    let xin = &xs[ic];
+                    for i in 0..fh * fw {
+                        acc[i] = acc[i].add(xin[i].mul(spec[i]));
+                    }
+                }
+                fft2_inplace(&mut acc, fh, fw, true);
+                for oy in 0..out_shape.h {
+                    for ox in 0..out_shape.w {
+                        let v = acc[oy * fw + ox].re * norm;
+                        out.set(n, oy, ox, oc, v.round() as i32);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        // Complex FFT cost: 2-D transform of fh*fw points ≈
+        // fh*fw*log2(fh*fw) butterflies; each butterfly = 1 complex mult
+        // (4 real mults, 2 adds) + 2 complex adds (4 real adds).
+        let pts = (self.fh * self.fw) as u64;
+        let lg = (pts as f64).log2() as u64;
+        let butterflies_per_fft = pts / 2 * lg;
+        let ffts = s.n as u64 * (self.in_ch as u64 + self.out_ch as u64); // fwd per ic + inv per oc
+        let pointwise = s.n as u64 * (self.in_ch * self.out_ch) as u64 * pts;
+        OpCounts {
+            mults: ffts * butterflies_per_fft * 4 + pointwise * 4,
+            adds: ffts * butterflies_per_fft * 6 + pointwise * 2,
+            fetches: ffts * pts * 2 + pointwise * 2,
+        }
+    }
+}
+
+/// Convenience check used in tests: does the conjugate-symmetry of real
+/// input hold in our forward transform? (Guards the twiddle sign.)
+#[cfg(test)]
+fn spectrum_is_conjugate_symmetric(buf: &[C64], n: usize) -> bool {
+    (1..n).all(|k| {
+        let a = buf[k];
+        let b = buf[n - k].conj();
+        (a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::new(81);
+        let orig: Vec<C64> = (0..64)
+            .map(|_| C64 {
+                re: rng.f64() * 10.0 - 5.0,
+                im: rng.f64() * 10.0 - 5.0,
+            })
+            .collect();
+        let mut buf = orig.clone();
+        fft_inplace(&mut buf, false);
+        fft_inplace(&mut buf, true);
+        for (a, b) in buf.iter().zip(orig.iter()) {
+            assert!((a.re / 64.0 - b.re).abs() < 1e-9);
+            assert!((a.im / 64.0 - b.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn real_input_conjugate_symmetry() {
+        let mut buf: Vec<C64> = (0..32)
+            .map(|i| C64 {
+                re: (i * i % 7) as f64,
+                im: 0.0,
+            })
+            .collect();
+        fft_inplace(&mut buf, false);
+        assert!(spectrum_is_conjugate_symmetric(&buf, 32));
+    }
+
+    #[test]
+    fn matches_dm_small() {
+        let mut rng = Rng::new(83);
+        let x = Tensor4::random_activations(Shape4::new(1, 8, 8, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 8, &mut rng);
+        let e = FftEngine::new(&w, 8, 8);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, e.geometry()));
+    }
+
+    #[test]
+    fn matches_dm_5x5_kernel() {
+        let mut rng = Rng::new(87);
+        let x = Tensor4::random_activations(Shape4::new(2, 12, 10, 1), 8, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 5, 5, 1), 8, &mut rng);
+        let e = FftEngine::new(&w, 12, 10);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, e.geometry()));
+    }
+
+    #[test]
+    fn exactness_property_non_pow2_inputs() {
+        forall("fft == dm", 10, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let h = rng.range_i64(5, 13) as usize;
+            let w_dim = rng.range_i64(5, 13) as usize;
+            let x = Tensor4::random_activations(Shape4::new(1, h, w_dim, 1), 4, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+            let e = FftEngine::new(&w, h, w_dim);
+            assert_eq!(e.conv(&x), conv_reference(&x, &w, e.geometry()));
+        });
+    }
+
+    #[test]
+    fn op_counts_reflect_complex_overhead() {
+        // The paper (via Fialka, Kim): FFT's constant factors (complex
+        // arithmetic) dominate for small kernels. Check FFT reports more
+        // mults than DM on a small-kernel small-image case.
+        let mut rng = Rng::new(89);
+        let w = Tensor4::random_weights(Shape4::new(1, 3, 3, 1), 8, &mut rng);
+        let fft = FftEngine::new(&w, 16, 16);
+        let dm = crate::pcilt::dm::DmEngine::new(w.clone(), ConvGeometry::unit_stride(3, 3));
+        let s = Shape4::new(1, 16, 16, 1);
+        assert!(fft.op_counts(s).mults > dm.op_counts(s).mults);
+    }
+}

@@ -1,0 +1,220 @@
+//! Grouped convolutions — the paper: *"The PCILT algorithm is compatible
+//! with many other techniques for increasing performance – eg, with
+//! grouped convolutions."*
+//!
+//! [`GroupedEngine`] splits input and output channels into `groups`
+//! independent slices and runs **any** inner `ConvEngine` per group —
+//! demonstrating the compatibility claim by construction: every PCILT
+//! variant composes unchanged. Table memory and op counts both divide by
+//! `groups` (each group's filters see only `cin/groups` inputs), the same
+//! economics grouped convs buy DM.
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::engine::{ConvEngine, ConvGeometry, OpCounts};
+
+/// A grouped convolution over per-group inner engines.
+pub struct GroupedEngine {
+    engines: Vec<Box<dyn ConvEngine>>,
+    groups: usize,
+    in_ch: usize,
+    out_ch: usize,
+    geom: ConvGeometry,
+}
+
+impl GroupedEngine {
+    /// Build from full OHWI weights with block-diagonal group structure:
+    /// group `g` owns output channels `[g*oc/G, (g+1)*oc/G)` and reads
+    /// input channels `[g*ic/G, (g+1)*ic/G)`. `make_engine` constructs the
+    /// inner engine for one group's weight slice — pass a closure building
+    /// a `PciltEngine`, `SegmentEngine`, `DmEngine`, …
+    pub fn new(
+        weights: &Tensor4<i8>,
+        in_ch: usize,
+        groups: usize,
+        geom: ConvGeometry,
+        make_engine: impl Fn(Tensor4<i8>) -> Box<dyn ConvEngine>,
+    ) -> GroupedEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        assert!(groups >= 1);
+        assert_eq!(s.n % groups, 0, "out_ch {} % groups {}", s.n, groups);
+        assert_eq!(in_ch % groups, 0, "in_ch {in_ch} % groups {groups}");
+        let ic_g = in_ch / groups;
+        assert_eq!(
+            s.c, ic_g,
+            "grouped weights carry cin/groups = {ic_g} input channels"
+        );
+        let oc_g = s.n / groups;
+        let mut engines = Vec::with_capacity(groups);
+        for g in 0..groups {
+            let slice = Tensor4::from_fn(Shape4::new(oc_g, s.h, s.w, ic_g), |o, ky, kx, ic| {
+                weights.get(g * oc_g + o, ky, kx, ic)
+            });
+            let e = make_engine(slice);
+            assert_eq!(e.out_channels(), oc_g, "inner engine out_ch mismatch");
+            engines.push(e);
+        }
+        GroupedEngine {
+            engines,
+            groups,
+            in_ch,
+            out_ch: s.n,
+            geom,
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+}
+
+impl ConvEngine for GroupedEngine {
+    fn name(&self) -> &'static str {
+        "grouped"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        assert_eq!(s.c, self.in_ch);
+        let ic_g = self.in_ch / self.groups;
+        let oc_g = self.out_ch / self.groups;
+        let out_shape = self.geom.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        for (g, engine) in self.engines.iter().enumerate() {
+            // Slice this group's input channels.
+            let xg = Tensor4::from_fn(Shape4::new(s.n, s.h, s.w, ic_g), |n, h, w, c| {
+                x.get(n, h, w, g * ic_g + c)
+            });
+            let yg = engine.conv(&xg);
+            for n in 0..out_shape.n {
+                for oy in 0..out_shape.h {
+                    for ox in 0..out_shape.w {
+                        for c in 0..oc_g {
+                            out.set(n, oy, ox, g * oc_g + c, yg.get(n, oy, ox, c));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let ic_g = self.in_ch / self.groups;
+        let sg = Shape4::new(s.n, s.h, s.w, ic_g);
+        let mut total = OpCounts::default();
+        for e in &self.engines {
+            let c = e.op_counts(sg);
+            total.mults += c.mults;
+            total.adds += c.adds;
+            total.fetches += c.fetches;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::pcilt::{DmEngine, PciltEngine, SegmentEngine};
+    use crate::util::prng::Rng;
+
+    /// Dense reference for a grouped conv: zero-pad the group weights into
+    /// a block-diagonal full filter and run the naive reference.
+    fn grouped_reference(
+        x: &Tensor4<u8>,
+        grouped_w: &Tensor4<i8>,
+        in_ch: usize,
+        groups: usize,
+        geom: ConvGeometry,
+    ) -> Tensor4<i32> {
+        let s = grouped_w.shape();
+        let (oc_g, ic_g) = (s.n / groups, in_ch / groups);
+        let full = Tensor4::from_fn(Shape4::new(s.n, s.h, s.w, in_ch), |o, ky, kx, ic| {
+            let g = o / oc_g;
+            if ic / ic_g == g {
+                grouped_w.get(o, ky, kx, ic % ic_g)
+            } else {
+                0
+            }
+        });
+        conv_reference(x, &full, geom)
+    }
+
+    fn case(groups: usize, seed: u64, inner: &str) {
+        let mut rng = Rng::new(seed);
+        let (in_ch, out_ch) = (4, 8);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let w = Tensor4::random_weights(
+            Shape4::new(out_ch, 3, 3, in_ch / groups),
+            8,
+            &mut rng,
+        );
+        let x = Tensor4::random_activations(Shape4::new(2, 7, 7, in_ch), 2, &mut rng);
+        let e = GroupedEngine::new(&w, in_ch, groups, geom, |slice| match inner {
+            "dm" => Box::new(DmEngine::new(slice, geom)),
+            "pcilt" => Box::new(PciltEngine::new(&slice, 2, geom)),
+            "segment" => Box::new(SegmentEngine::new(&slice, 2, 4, geom)),
+            _ => unreachable!(),
+        });
+        assert_eq!(
+            e.conv(&x),
+            grouped_reference(&x, &w, in_ch, groups, geom),
+            "groups={groups} inner={inner}"
+        );
+    }
+
+    #[test]
+    fn grouped_pcilt_matches_block_diagonal_reference() {
+        for groups in [1, 2, 4] {
+            case(groups, 41 + groups as u64, "pcilt");
+        }
+    }
+
+    #[test]
+    fn grouped_composes_with_every_inner_engine() {
+        for inner in ["dm", "pcilt", "segment"] {
+            case(2, 47, inner);
+        }
+    }
+
+    #[test]
+    fn groups_divide_table_memory_and_ops() {
+        let mut rng = Rng::new(53);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let (in_ch, out_ch) = (8, 16);
+        // dense
+        let wd = Tensor4::random_weights(Shape4::new(out_ch, 3, 3, in_ch), 8, &mut rng);
+        let dense = PciltEngine::new(&wd, 4, geom);
+        // 4 groups
+        let wg = Tensor4::random_weights(Shape4::new(out_ch, 3, 3, in_ch / 4), 8, &mut rng);
+        let grouped = GroupedEngine::new(&wg, in_ch, 4, geom, |s| {
+            Box::new(PciltEngine::new(&s, 4, geom))
+        });
+        let shape = Shape4::new(1, 16, 16, in_ch);
+        let dense_ops = dense.op_counts(shape);
+        let grouped_ops = grouped.op_counts(shape);
+        assert_eq!(dense_ops.adds / grouped_ops.adds, 4);
+        assert_eq!(grouped_ops.mults, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_groups_rejected() {
+        let mut rng = Rng::new(59);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let w = Tensor4::random_weights(Shape4::new(6, 3, 3, 1), 8, &mut rng);
+        GroupedEngine::new(&w, 3, 2, geom, |s| Box::new(DmEngine::new(s, geom)));
+    }
+}

@@ -1,0 +1,405 @@
+//! Layout plans — the Fig 7 generalization of offset pre-processing.
+//!
+//! Activations are "a bitstream that can be reprocessed into PCILT offsets
+//! in any needed way": a **plan** maps each segment to an arbitrary list of
+//! RF positions (not necessarily adjacent), with a per-segment scale factor.
+//! This supports:
+//!
+//! * **zero-skipping** — positions whose weights are zero are simply absent
+//!   from every segment ("Zero values are omitted from PCILTs, increasing
+//!   speed");
+//! * **position reuse** — a position may appear in several segments, or in a
+//!   factor-scaled segment, giving it an effective weight beyond the nominal
+//!   range (the gray cells of Fig 7);
+//! * arbitrary grouping of non-adjacent positions.
+
+use crate::tensor::{Shape4, Tensor4};
+use crate::util::bitpack::{offset_space, pack_offset};
+
+use super::custom_fn::ConvFunc;
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+
+/// One segment of a layout plan: the RF positions it covers (as flat
+/// `(ky*kw + kx)*ic + c` indices) and a scale factor applied to the whole
+/// segment's table values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentSpec {
+    pub positions: Vec<usize>,
+    /// Table values are `factor * Σ f(w_j, a_j)` — factor > 1 re-weights the
+    /// covered positions beyond the filter's nominal range.
+    pub factor: i32,
+}
+
+/// A layout plan for a filter: a list of segments.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LayoutPlan {
+    pub segments: Vec<SegmentSpec>,
+}
+
+impl LayoutPlan {
+    /// The plan Fig 7 implies for plain dense processing: consecutive
+    /// segments of `seg_n`, no skips, factor 1.
+    pub fn dense(positions: usize, seg_n: usize) -> LayoutPlan {
+        let mut segments = Vec::new();
+        let mut p = 0;
+        while p < positions {
+            let hi = (p + seg_n).min(positions);
+            segments.push(SegmentSpec {
+                positions: (p..hi).collect(),
+                factor: 1,
+            });
+            p = hi;
+        }
+        LayoutPlan { segments }
+    }
+
+    /// Zero-skipping plan: like [`dense`](Self::dense) but positions whose
+    /// weight is zero are omitted entirely ("skipping some RF positions at
+    /// all, thus eliminating non-important filter positions").
+    pub fn zero_skipping(flat_weights: &[i32], seg_n: usize) -> LayoutPlan {
+        let nonzero: Vec<usize> = flat_weights
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w != 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut segments = Vec::new();
+        for chunk in nonzero.chunks(seg_n.max(1)) {
+            segments.push(SegmentSpec {
+                positions: chunk.to_vec(),
+                factor: 1,
+            });
+        }
+        LayoutPlan { segments }
+    }
+
+    /// Total positions processed (with multiplicity — reused positions
+    /// count every time).
+    pub fn work(&self) -> usize {
+        self.segments.iter().map(|s| s.positions.len()).sum()
+    }
+
+    /// Validate against a filter with `positions` RF positions.
+    pub fn validate(&self, positions: usize) -> Result<(), String> {
+        for (i, seg) in self.segments.iter().enumerate() {
+            if seg.positions.is_empty() {
+                return Err(format!("segment {i} is empty"));
+            }
+            if seg.factor == 0 {
+                return Err(format!("segment {i} has zero factor"));
+            }
+            for &p in &seg.positions {
+                if p >= positions {
+                    return Err(format!(
+                        "segment {i} references position {p} >= {positions}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The effective weight each position contributes under this plan,
+    /// given the filter's flat weights: `Σ_segments containing p
+    /// factor * w[p]`. Used to verify plans against an intended filter.
+    pub fn effective_weights(&self, flat_weights: &[i32]) -> Vec<i32> {
+        let mut eff = vec![0i32; flat_weights.len()];
+        for seg in &self.segments {
+            for &p in &seg.positions {
+                eff[p] += seg.factor * flat_weights[p];
+            }
+        }
+        eff
+    }
+}
+
+/// Conv engine executing a layout plan. Tables are built per (out channel,
+/// segment); inference packs each segment's (possibly non-adjacent)
+/// activations into an offset and fetches the pre-scaled sum.
+pub struct LayoutEngine {
+    /// `tables[oc][seg]` -> value vector of len 2^(positions_in_seg * bits).
+    tables: Vec<Vec<Vec<i32>>>,
+    plan: LayoutPlan,
+    geom: ConvGeometry,
+    out_ch: usize,
+    positions: usize,
+    act_bits: u32,
+}
+
+impl LayoutEngine {
+    pub fn new(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        plan: LayoutPlan,
+        geom: ConvGeometry,
+    ) -> LayoutEngine {
+        Self::with_func(weights, act_bits, plan, geom, &ConvFunc::Mul)
+    }
+
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        plan: LayoutPlan,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> LayoutEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let positions = s.h * s.w * s.c;
+        plan.validate(positions).expect("invalid layout plan");
+        let mask = (1u32 << act_bits) - 1;
+        let mut tables = Vec::with_capacity(s.n);
+        for oc in 0..s.n {
+            // flatten this filter in RF order
+            let mut flat = Vec::with_capacity(positions);
+            for ky in 0..s.h {
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        flat.push(weights.get(oc, ky, kx, ic) as i32);
+                    }
+                }
+            }
+            let mut per_seg = Vec::with_capacity(plan.segments.len());
+            for seg in &plan.segments {
+                let rows = offset_space(seg.positions.len(), act_bits)
+                    .expect("layout segment table infeasible")
+                    as usize;
+                let mut tab = Vec::with_capacity(rows);
+                for offset in 0..rows {
+                    let mut acc = 0i32;
+                    for (j, &p) in seg.positions.iter().enumerate() {
+                        let a = ((offset as u32) >> (j as u32 * act_bits)) & mask;
+                        acc += f.eval(flat[p], a);
+                    }
+                    tab.push(acc * seg.factor);
+                }
+                per_seg.push(tab);
+            }
+            tables.push(per_seg);
+        }
+        LayoutEngine {
+            tables,
+            plan,
+            geom,
+            out_ch: s.n,
+            positions,
+            act_bits,
+        }
+    }
+
+    pub fn plan(&self) -> &LayoutPlan {
+        &self.plan
+    }
+
+    /// Total table entries across segments and channels.
+    pub fn entries(&self) -> usize {
+        self.tables
+            .iter()
+            .flat_map(|per| per.iter().map(Vec::len))
+            .sum()
+    }
+}
+
+impl ConvEngine for LayoutEngine {
+    fn name(&self) -> &'static str {
+        "layout"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let out_shape = g.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let mut rf = vec![0u8; self.positions];
+        let mut seg_acts: Vec<u8> = Vec::new();
+        let mut offsets = vec![0u32; self.plan.segments.len()];
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let mut p = 0;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        rf[p..p + g.kw * s.c].copy_from_slice(row);
+                        p += g.kw * s.c;
+                    }
+                    for (i, seg) in self.plan.segments.iter().enumerate() {
+                        seg_acts.clear();
+                        seg_acts.extend(seg.positions.iter().map(|&q| rf[q]));
+                        offsets[i] = pack_offset(&seg_acts, self.act_bits);
+                    }
+                    for oc in 0..self.out_ch {
+                        let per = &self.tables[oc];
+                        let mut acc = 0i32;
+                        for (i, &off) in offsets.iter().enumerate() {
+                            acc += per[i][off as usize];
+                        }
+                        out.set(n, oy, ox, oc, acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.plan.segments.len() * self.out_ch) as u64;
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            fetches: rfs * (self.plan.work() as u64 + per_rf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+
+    fn flat_weights(w: &Tensor4<i8>, oc: usize) -> Vec<i32> {
+        let s = w.shape();
+        let mut flat = Vec::new();
+        for ky in 0..s.h {
+            for kx in 0..s.w {
+                for ic in 0..s.c {
+                    flat.push(w.get(oc, ky, kx, ic) as i32);
+                }
+            }
+        }
+        flat
+    }
+
+    #[test]
+    fn dense_plan_matches_reference() {
+        let mut rng = Rng::new(51);
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 1), 2, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let plan = LayoutPlan::dense(9, 4);
+        let e = LayoutEngine::new(&w, 2, plan, geom);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn zero_skipping_matches_reference_on_sparse_filter() {
+        let mut rng = Rng::new(53);
+        let x = Tensor4::random_activations(Shape4::new(1, 8, 8, 1), 2, &mut rng);
+        // Filter with mostly zeros (like Fig 7's ring shape).
+        let w = Tensor4::from_fn(Shape4::new(1, 5, 5, 1), |_, ky, kx, _| {
+            if ky == 0 || kx == 2 {
+                1i8
+            } else {
+                0
+            }
+        });
+        let geom = ConvGeometry::unit_stride(5, 5);
+        let flat = flat_weights(&w, 0);
+        let plan = LayoutPlan::zero_skipping(&flat, 4);
+        let dense_work = LayoutPlan::dense(25, 4).work();
+        assert!(plan.work() < dense_work, "skip plan should do less work");
+        let e = LayoutEngine::new(&w, 2, plan, geom);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn position_reuse_doubles_effective_weight() {
+        // A position appearing in two segments contributes twice — the
+        // "weigh them beyond the filter weights range" mechanism.
+        let mut rng = Rng::new(57);
+        let x = Tensor4::random_activations(Shape4::new(1, 4, 4, 1), 2, &mut rng);
+        let w = Tensor4::from_fn(Shape4::new(1, 2, 2, 1), |_, _, _, _| 1i8);
+        let geom = ConvGeometry::unit_stride(2, 2);
+        let plan = LayoutPlan {
+            segments: vec![
+                SegmentSpec {
+                    positions: vec![0, 1, 2, 3],
+                    factor: 1,
+                },
+                SegmentSpec {
+                    positions: vec![0],
+                    factor: 1,
+                }, // position 0 again
+            ],
+        };
+        let e = LayoutEngine::new(&w, 2, plan.clone(), geom);
+        let y = e.conv(&x);
+        // effective weights = [2,1,1,1]
+        let eff = plan.effective_weights(&[1, 1, 1, 1]);
+        assert_eq!(eff, vec![2, 1, 1, 1]);
+        let expect = 2 * x.get(0, 0, 0, 0) as i32
+            + x.get(0, 0, 1, 0) as i32
+            + x.get(0, 1, 0, 0) as i32
+            + x.get(0, 1, 1, 0) as i32;
+        assert_eq!(y.get(0, 0, 0, 0), expect);
+    }
+
+    #[test]
+    fn factor_scales_segment() {
+        let mut rng = Rng::new(59);
+        let x = Tensor4::random_activations(Shape4::new(1, 3, 3, 1), 3, &mut rng);
+        let w = Tensor4::from_fn(Shape4::new(1, 1, 1, 1), |_, _, _, _| 3i8);
+        let geom = ConvGeometry::unit_stride(1, 1);
+        let plan = LayoutPlan {
+            segments: vec![SegmentSpec {
+                positions: vec![0],
+                factor: 4,
+            }],
+        };
+        let e = LayoutEngine::new(&w, 3, plan, geom);
+        let y = e.conv(&x);
+        for h in 0..3 {
+            for w2 in 0..3 {
+                assert_eq!(y.get(0, h, w2, 0), 12 * x.get(0, h, w2, 0) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_validation_catches_errors() {
+        assert!(LayoutPlan {
+            segments: vec![SegmentSpec {
+                positions: vec![9],
+                factor: 1
+            }]
+        }
+        .validate(9)
+        .is_err());
+        assert!(LayoutPlan {
+            segments: vec![SegmentSpec {
+                positions: vec![],
+                factor: 1
+            }]
+        }
+        .validate(9)
+        .is_err());
+        assert!(LayoutPlan {
+            segments: vec![SegmentSpec {
+                positions: vec![0],
+                factor: 0
+            }]
+        }
+        .validate(9)
+        .is_err());
+        assert!(LayoutPlan::dense(9, 4).validate(9).is_ok());
+    }
+
+    #[test]
+    fn zero_skipping_on_all_zero_filter_is_empty() {
+        let plan = LayoutPlan::zero_skipping(&[0, 0, 0, 0], 2);
+        assert_eq!(plan.segments.len(), 0);
+        assert_eq!(plan.work(), 0);
+    }
+}

@@ -1,0 +1,263 @@
+//! The basic PCILT engine — Figs 1–3 of the paper.
+//!
+//! At every receptive-field position, instead of multiplying weight ×
+//! activation, the activation value is used as an **offset into that
+//! weight's PCILT** and the product is fetched. The inner loop therefore
+//! contains *no multiplications at all* — only a fetch and an add, which is
+//! exactly the datapath Fig 3 draws as SRAM-next-to-adder.
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::custom_fn::ConvFunc;
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::table::LayerTables;
+
+/// Basic PCILT engine.
+///
+/// Besides the canonical `[oc][position][activation]` tables it keeps a
+/// **channels-last mirror** `[position][activation][oc]`: for a fixed
+/// receptive-field position and activation code, the products for *all*
+/// output channels are contiguous, so the inner loop is a vectorizable
+/// add of `out_ch`-long rows instead of `out_ch` scalar gathers. This is
+/// the §Perf optimization recorded in EXPERIMENTS.md (the ASIC analogue
+/// is Fig 3's one-PCILT-per-lane broadcast of the activation offset).
+pub struct PciltEngine {
+    tables: LayerTables,
+    /// `cl[(p * card + a) * out_ch + oc]` — channels-last mirror.
+    cl: Vec<i32>,
+    geom: ConvGeometry,
+    act_bits: u32,
+}
+
+impl PciltEngine {
+    /// Build tables from weights with the classic product function.
+    pub fn new(weights: &Tensor4<i8>, act_bits: u32, geom: ConvGeometry) -> PciltEngine {
+        Self::with_func(weights, act_bits, geom, &ConvFunc::Mul)
+    }
+
+    /// Build tables with an arbitrary convolutional function (the *Using
+    /// Custom Convolutional Functions* extension — same inference cost).
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> PciltEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let tables = LayerTables::build(weights, act_bits, f);
+        let cl = Self::channels_last(&tables);
+        PciltEngine {
+            tables,
+            cl,
+            geom,
+            act_bits,
+        }
+    }
+
+    /// Build the `[p][a][oc]` mirror from canonical tables.
+    fn channels_last(tables: &LayerTables) -> Vec<i32> {
+        let (oc_n, positions, card) = (tables.out_ch, tables.positions, tables.card);
+        let mut cl = vec![0i32; oc_n * positions * card];
+        for oc in 0..oc_n {
+            for p in 0..positions {
+                let t = tables.table(oc, p);
+                for (a, &v) in t.iter().enumerate() {
+                    cl[(p * card + a) * oc_n + oc] = v;
+                }
+            }
+        }
+        cl
+    }
+
+    /// Wrap pre-built tables (used by PCILT-as-weights, where tables are the
+    /// trained parameters and no weight tensor exists).
+    pub fn from_tables(tables: LayerTables, geom: ConvGeometry) -> PciltEngine {
+        assert_eq!(
+            tables.positions % (geom.kh * geom.kw),
+            0,
+            "table positions not divisible by kernel area"
+        );
+        let act_bits = tables.act_bits;
+        let cl = Self::channels_last(&tables);
+        PciltEngine {
+            tables,
+            cl,
+            geom,
+            act_bits,
+        }
+    }
+
+    pub fn tables(&self) -> &LayerTables {
+        &self.tables
+    }
+
+    pub fn act_bits(&self) -> u32 {
+        self.act_bits
+    }
+
+    /// One-off table construction cost in `f` evaluations.
+    pub fn build_evals(&self) -> u64 {
+        self.tables.build_evals
+    }
+}
+
+impl ConvEngine for PciltEngine {
+    fn name(&self) -> &'static str {
+        "pcilt"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.tables.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.tables.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels {} != table in_ch {}", s.c, in_ch);
+        debug_assert!(
+            x.data().iter().all(|&a| (a as usize) < self.tables.card),
+            "activation exceeds table cardinality"
+        );
+        let out_shape = g.out_shape(s, self.tables.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let card = self.tables.card;
+        let oc_n = self.tables.out_ch;
+        // Channels-last inner loop: one contiguous `oc_n`-long row add per
+        // RF position — SIMD-friendly, no per-channel gathers.
+        let cl = &self.cl[..];
+        let mut acc = vec![0i32; oc_n];
+        let row_w = out_shape.w;
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..row_w {
+                    acc.fill(0);
+                    let mut p = 0usize;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        for &a in row {
+                            let base = (p * card + a as usize) * oc_n;
+                            let trow = &cl[base..base + oc_n];
+                            for (acc_v, &t) in acc.iter_mut().zip(trow) {
+                                *acc_v += t;
+                            }
+                            p += 1;
+                        }
+                    }
+                    let start = out_shape.index(n, oy, ox, 0);
+                    out.data_mut()[start..start + oc_n].copy_from_slice(&acc);
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.tables.positions * self.tables.out_ch) as u64;
+        OpCounts {
+            mults: 0, // the whole point
+            adds: rfs * per_rf,
+            // one activation fetch per position (shared across out chans)
+            // plus one table fetch per (position, out channel).
+            fetches: rfs * (self.tables.positions as u64 + per_rf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::{conv_reference, DmEngine};
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn exactness_vs_dm_small() {
+        let mut rng = Rng::new(11);
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let pcilt = PciltEngine::new(&w, 4, geom);
+        let dm = DmEngine::new(w.clone(), geom);
+        // The paper: "The PCILT values are an exact product … there is no
+        // result precision loss."
+        assert_eq!(pcilt.conv(&x), dm.conv(&x));
+    }
+
+    #[test]
+    fn exactness_property_all_cardinalities() {
+        forall("pcilt == dm for all bits/shapes", 30, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 3, 4, 8]);
+            let (kh, kw) = *rng.choose(&[(1, 1), (3, 3), (5, 5)]);
+            let ic = rng.range_i64(1, 3) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            let h = kh + rng.range_i64(0, 4) as usize;
+            let w_dim = kw + rng.range_i64(0, 4) as usize;
+            let x = Tensor4::random_activations(Shape4::new(1, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+            let geom = ConvGeometry::unit_stride(kh, kw);
+            let pcilt = PciltEngine::new(&w, bits, geom);
+            assert_eq!(pcilt.conv(&x), conv_reference(&x, &w, geom));
+        });
+    }
+
+    #[test]
+    fn custom_function_applies() {
+        let mut rng = Rng::new(13);
+        let x = Tensor4::random_activations(Shape4::new(1, 4, 4, 1), 2, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(1, 2, 2, 1), 4, &mut rng);
+        let geom = ConvGeometry::unit_stride(2, 2);
+        let f = ConvFunc::LogMul { base: 2.0 };
+        let e = PciltEngine::with_func(&w, 2, geom, &f);
+        let y = e.conv(&x);
+        // Verify one output by hand.
+        let mut acc = 0i32;
+        for ky in 0..2 {
+            for kx in 0..2 {
+                acc += f.eval(w.get(0, ky, kx, 0) as i32, x.get(0, ky, kx, 0) as u32);
+            }
+        }
+        assert_eq!(y.get(0, 0, 0, 0), acc);
+    }
+
+    #[test]
+    fn no_multiplications_reported() {
+        let mut rng = Rng::new(17);
+        let w = Tensor4::random_weights(Shape4::new(4, 5, 5, 3), 8, &mut rng);
+        let e = PciltEngine::new(&w, 4, ConvGeometry::unit_stride(5, 5));
+        let ops = e.op_counts(Shape4::new(1, 32, 32, 3));
+        assert_eq!(ops.mults, 0);
+        assert!(ops.adds > 0 && ops.fetches > 0);
+    }
+
+    #[test]
+    fn strided_exactness() {
+        let mut rng = Rng::new(19);
+        let x = Tensor4::random_activations(Shape4::new(2, 9, 9, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry {
+            kh: 3,
+            kw: 3,
+            sy: 2,
+            sx: 2,
+        };
+        let pcilt = PciltEngine::new(&w, 4, geom);
+        assert_eq!(pcilt.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn build_cost_matches_paper_formula() {
+        let mut rng = Rng::new(23);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        let e = PciltEngine::new(&w, 8, ConvGeometry::unit_stride(5, 5));
+        assert_eq!(e.build_evals(), 25 * 256);
+    }
+}

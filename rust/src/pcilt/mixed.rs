@@ -1,0 +1,322 @@
+//! Mixed-cardinality inputs — the §Basic note that *"PCILTs allow
+//! productively utilizing inputs with different cardinalities — while
+//! calculating PCILT values, input data values cardinalities should be
+//! scaled to their lowest common denominator (LCD)"*, including the lossy
+//! variant *"even a max data value lower than the LCD can be used, at the
+//! cost of losing some precision from the inputs with the highest
+//! cardinality."*
+//!
+//! Each input channel declares its own bit width; tables are built over a
+//! common table cardinality. Channels at the table cardinality index
+//! directly; narrower channels are **rescaled into the common code space
+//! at build time** (so the rescale multiply also disappears into the
+//! table); when the table cardinality is *below* a channel's width the
+//! channel is right-shifted (precision loss, quantified by
+//! [`MixedEngine::max_code_error`]).
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::custom_fn::ConvFunc;
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+
+/// Per-channel activation bit widths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelWidths {
+    pub bits: Vec<u32>,
+}
+
+impl ChannelWidths {
+    pub fn uniform(c: usize, bits: u32) -> ChannelWidths {
+        ChannelWidths {
+            bits: vec![bits; c],
+        }
+    }
+
+    /// The paper's LCD: the widest channel's cardinality (every narrower
+    /// code space embeds into it by scaling).
+    pub fn lcd_bits(&self) -> u32 {
+        *self.bits.iter().max().expect("no channels")
+    }
+}
+
+/// Mixed-cardinality PCILT engine.
+pub struct MixedEngine {
+    /// Channels-last tables `[(p * card + a) * oc]` over the table code
+    /// space.
+    cl: Vec<i32>,
+    widths: ChannelWidths,
+    /// Per-channel shift applied to input codes when the table cardinality
+    /// is below the channel width (lossy mode); 0 in exact mode.
+    shifts: Vec<u32>,
+    table_bits: u32,
+    card: usize,
+    out_ch: usize,
+    positions: usize,
+    geom: ConvGeometry,
+}
+
+impl MixedEngine {
+    /// Exact mode: table cardinality = LCD of all channel widths. Narrow
+    /// channels are scaled up into the LCD code space inside the tables
+    /// (`value = f(w, a * 2^(lcd-bits_c))`), so no inference-path scaling
+    /// is needed.
+    pub fn new(
+        weights: &Tensor4<i8>,
+        widths: ChannelWidths,
+        geom: ConvGeometry,
+    ) -> MixedEngine {
+        let lcd = widths.lcd_bits();
+        Self::with_table_bits(weights, widths, lcd, geom, &ConvFunc::Mul)
+    }
+
+    /// General mode: an explicit table cardinality, possibly below the LCD
+    /// ("to save PCILT memory … at the cost of losing some precision").
+    pub fn with_table_bits(
+        weights: &Tensor4<i8>,
+        widths: ChannelWidths,
+        table_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> MixedEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        assert_eq!(s.c, widths.bits.len(), "one width per input channel");
+        assert!((1..=10).contains(&table_bits));
+        let card = 1usize << table_bits;
+        let positions = s.h * s.w * s.c;
+        let oc_n = s.n;
+        // Per channel: how the raw code maps into the table code space.
+        //  - channel narrower than table: scale factor 2^(table-bits_c),
+        //    baked into table VALUES (index stays the raw code).
+        //  - channel wider than table: shift codes right at inference
+        //    (lossy), values built over the truncated code.
+        let mut shifts = Vec::with_capacity(s.c);
+        let mut value_scale = Vec::with_capacity(s.c);
+        for &b in &widths.bits {
+            if b <= table_bits {
+                shifts.push(0);
+                value_scale.push(1i64 << (widths.lcd_bits() - b)); // to LCD space
+            } else {
+                shifts.push(b - table_bits);
+                value_scale.push(1i64 << (widths.lcd_bits() - b + (b - table_bits)));
+            }
+        }
+        let mut cl = vec![0i32; positions * card * oc_n];
+        for oc in 0..oc_n {
+            let mut p = 0usize;
+            for ky in 0..s.h {
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        let w = weights.get(oc, ky, kx, ic) as i32;
+                        for a in 0..card {
+                            // effective activation in LCD units
+                            let eff = a as i64 * value_scale[ic];
+                            let v = f.eval(w, eff.min(u32::MAX as i64) as u32);
+                            cl[(p * card + a) * oc_n + oc] = v;
+                        }
+                        p += 1;
+                    }
+                }
+            }
+        }
+        MixedEngine {
+            cl,
+            widths,
+            shifts,
+            table_bits,
+            card,
+            out_ch: oc_n,
+            positions,
+            geom,
+        }
+    }
+
+    pub fn table_bits(&self) -> u32 {
+        self.table_bits
+    }
+
+    /// Worst-case code truncation (in LCD units) any channel suffers —
+    /// zero in exact (LCD) mode.
+    pub fn max_code_error(&self) -> u32 {
+        self.widths
+            .bits
+            .iter()
+            .zip(&self.shifts)
+            .map(|(&b, &sh)| if sh == 0 { 0 } else { (1u32 << sh) - 1 } << (self.widths.lcd_bits() - b))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Table entries.
+    pub fn entries(&self) -> usize {
+        self.cl.len()
+    }
+}
+
+impl ConvEngine for MixedEngine {
+    fn name(&self) -> &'static str {
+        "mixed"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let out_shape = g.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let oc_n = self.out_ch;
+        let card = self.card;
+        let cl = &self.cl[..];
+        let mut acc = vec![0i32; oc_n];
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    acc.fill(0);
+                    let mut p = 0usize;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        for (i, &a) in row.iter().enumerate() {
+                            let ic = i % s.c;
+                            let code = (a as usize) >> self.shifts[ic];
+                            let base = (p * card + code) * oc_n;
+                            for (av, &t) in acc.iter_mut().zip(&cl[base..base + oc_n]) {
+                                *av += t;
+                            }
+                            p += 1;
+                        }
+                    }
+                    let start = out_shape.index(n, oy, ox, 0);
+                    out.data_mut()[start..start + oc_n].copy_from_slice(&acc);
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.positions * self.out_ch) as u64;
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            fetches: rfs * (self.positions as u64 + per_rf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+
+    /// Mixed activations: channel c uses widths.bits[c] bits.
+    fn mixed_activations(
+        shape: Shape4,
+        widths: &ChannelWidths,
+        rng: &mut Rng,
+    ) -> Tensor4<u8> {
+        Tensor4::from_fn(shape, |_, _, _, c| {
+            rng.range_i64(0, (1 << widths.bits[c]) - 1) as u8
+        })
+    }
+
+    /// Reference: scale each channel's codes into LCD space, then DM.
+    fn lcd_reference(
+        x: &Tensor4<u8>,
+        w: &Tensor4<i8>,
+        widths: &ChannelWidths,
+        geom: ConvGeometry,
+    ) -> Tensor4<i32> {
+        let lcd = widths.lcd_bits();
+        let scaled = Tensor4::from_fn(x.shape(), |n, h, ww, c| {
+            ((x.get(n, h, ww, c) as u32) << (lcd - widths.bits[c])) as u8
+        });
+        conv_reference(&scaled, w, geom)
+    }
+
+    #[test]
+    fn exact_mode_matches_lcd_reference() {
+        let mut rng = Rng::new(61);
+        // channels at 1, 2 and 4 bits; LCD = 4 bits
+        let widths = ChannelWidths {
+            bits: vec![1, 2, 4],
+        };
+        let x = mixed_activations(Shape4::new(2, 6, 6, 3), &widths, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 3), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let e = MixedEngine::new(&w, widths.clone(), geom);
+        assert_eq!(e.max_code_error(), 0);
+        assert_eq!(e.conv(&x), lcd_reference(&x, &w, &widths, geom));
+    }
+
+    #[test]
+    fn uniform_widths_degenerate_to_basic() {
+        let mut rng = Rng::new(62);
+        let widths = ChannelWidths::uniform(2, 4);
+        let x = mixed_activations(Shape4::new(1, 5, 5, 2), &widths, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let e = MixedEngine::new(&w, widths, geom);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn lossy_mode_bounded_error() {
+        // Table at 2 bits, one channel at 4 bits: codes truncated by 2 bits.
+        let mut rng = Rng::new(63);
+        let widths = ChannelWidths {
+            bits: vec![2, 4],
+        };
+        let x = mixed_activations(Shape4::new(1, 6, 6, 2), &widths, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(1, 3, 3, 2), 4, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let lossy = MixedEngine::with_table_bits(&w, widths.clone(), 2, geom, &ConvFunc::Mul);
+        assert!(lossy.max_code_error() > 0);
+        let exact = lcd_reference(&x, &w, &widths, geom);
+        let got = lossy.conv(&x);
+        // per-position error bound: positions * max|w| * code_error
+        let bound = 9 * 7 * lossy.max_code_error() as i32;
+        for (a, b) in got.data().iter().zip(exact.data().iter()) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+        // and memory shrank 4x vs the exact table
+        let exact_engine = MixedEngine::new(&w, widths, geom);
+        assert_eq!(exact_engine.entries() / lossy.entries(), 4);
+    }
+
+    #[test]
+    fn bool_plus_int8_channels() {
+        // Extreme mix: a boolean channel next to an INT8 channel.
+        let mut rng = Rng::new(64);
+        let widths = ChannelWidths {
+            bits: vec![1, 8],
+        };
+        let x = mixed_activations(Shape4::new(1, 4, 4, 2), &widths, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 2, 2, 2), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(2, 2);
+        let e = MixedEngine::new(&w, widths.clone(), geom);
+        assert_eq!(e.conv(&x), lcd_reference(&x, &w, &widths, geom));
+    }
+
+    #[test]
+    fn lcd_bits_is_max() {
+        assert_eq!(
+            ChannelWidths {
+                bits: vec![1, 4, 2]
+            }
+            .lcd_bits(),
+            4
+        );
+    }
+}

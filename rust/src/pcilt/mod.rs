@@ -1,0 +1,29 @@
+//! The paper's contribution: PCILT convolution engines and their
+//! extensions, the DM/Winograd/FFT baselines, and the analytic memory
+//! model. See DESIGN.md §5 for the experiment mapping.
+
+pub mod as_weights;
+pub mod custom_fn;
+pub mod dm;
+pub mod engine;
+pub mod fft;
+pub mod grouped;
+pub mod layout;
+pub mod lookup;
+pub mod memory;
+pub mod mixed;
+pub mod segment;
+pub mod shared;
+pub mod table;
+pub mod winograd;
+
+pub use custom_fn::ConvFunc;
+pub use dm::DmEngine;
+pub use engine::{ConvEngine, ConvGeometry, OpCounts};
+pub use grouped::GroupedEngine;
+pub use layout::{LayoutEngine, LayoutPlan, SegmentSpec};
+pub use lookup::PciltEngine;
+pub use mixed::{ChannelWidths, MixedEngine};
+pub use segment::{RowSegmentEngine, SegmentEngine};
+pub use shared::SharedEngine;
+pub use table::{LayerTables, Pcilt};

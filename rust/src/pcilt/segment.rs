@@ -1,0 +1,592 @@
+//! Segment-offset PCILT engine — the *"Pre-processing Activations Into
+//! PCILT Offsets"* extension (Figs 5–6).
+//!
+//! A filter's positions are divided into **segments** of `seg_n` positions.
+//! The `seg_n` activations covering a segment are packed (shift+mask) into a
+//! single offset; the segment's PCILT stores, at that offset, the **sum of
+//! the segment's products**:
+//!
+//! ```text
+//! T_seg[offset] = Σ_{j∈segment} f(w_j, a_j(offset))
+//! ```
+//!
+//! One fetch therefore retrieves the whole segment's contribution,
+//! dividing both memory accesses and additions by `seg_n`. With boolean
+//! activations and `seg_n = 8` this is the configuration the authors'
+//! prior BoolHash paper measured at **6.59×** over scalar DM.
+
+use crate::tensor::{Shape4, Tensor4};
+use crate::util::bitpack::{offset_space, pack_offset};
+
+use super::custom_fn::ConvFunc;
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+
+/// Segment-offset engine for one conv layer.
+pub struct SegmentEngine {
+    /// `values[((oc * n_segments) + s) * seg_card + offset]`.
+    values: Vec<i32>,
+    out_ch: usize,
+    /// Positions per filter (`kh*kw*ic`), before padding to a segment
+    /// multiple.
+    positions: usize,
+    /// Positions per segment.
+    pub seg_n: usize,
+    /// Number of segments per filter (`ceil(positions / seg_n)`).
+    pub n_segments: usize,
+    /// Rows per segment table: `2^(seg_n * act_bits)`.
+    pub seg_card: usize,
+    act_bits: u32,
+    geom: ConvGeometry,
+    /// `f` evaluations during construction.
+    pub build_evals: u64,
+}
+
+impl SegmentEngine {
+    /// Build from weights. `seg_n * act_bits` must be ≤ 20 (a 1M-row table;
+    /// beyond that the table is infeasible, which the constructor surfaces
+    /// rather than thrashing memory silently).
+    pub fn new(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+    ) -> SegmentEngine {
+        Self::with_func(weights, act_bits, seg_n, geom, &ConvFunc::Mul)
+    }
+
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> SegmentEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        assert!(seg_n >= 1);
+        let seg_card = offset_space(seg_n, act_bits)
+            .unwrap_or_else(|| {
+                panic!(
+                    "segment table infeasible: {seg_n} positions x {act_bits} bits \
+                     = 2^{} rows",
+                    seg_n as u32 * act_bits
+                )
+            }) as usize;
+        assert!(
+            (seg_n as u32 * act_bits) <= 20,
+            "segment table too large: 2^{} rows",
+            seg_n as u32 * act_bits
+        );
+        let positions = s.h * s.w * s.c;
+        let n_segments = positions.div_ceil(seg_n);
+        // Flatten weights in RF walk order; pad the tail segment with
+        // zero weights (f(0, a) need not be 0 for custom funcs, so padding
+        // uses an explicit "missing" that contributes f-of-weight-zero —
+        // for Mul that is exactly 0).
+        let mut flat = Vec::with_capacity(n_segments * seg_n);
+        let mut values = vec![0i32; s.n * n_segments * seg_card];
+        let mut build_evals = 0u64;
+        let mask = (1u32 << act_bits) - 1;
+        for oc in 0..s.n {
+            flat.clear();
+            for ky in 0..s.h {
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        flat.push(weights.get(oc, ky, kx, ic) as i32);
+                    }
+                }
+            }
+            flat.resize(n_segments * seg_n, 0);
+            for seg in 0..n_segments {
+                let ws = &flat[seg * seg_n..(seg + 1) * seg_n];
+                let base = (oc * n_segments + seg) * seg_card;
+                for offset in 0..seg_card {
+                    let mut acc = 0i32;
+                    for (j, &wj) in ws.iter().enumerate() {
+                        let aj = ((offset as u32) >> (j as u32 * act_bits)) & mask;
+                        acc += f.eval(wj, aj);
+                        build_evals += 1;
+                    }
+                    values[base + offset] = acc;
+                }
+            }
+        }
+        SegmentEngine {
+            values,
+            out_ch: s.n,
+            positions,
+            seg_n,
+            n_segments,
+            seg_card,
+            act_bits,
+            geom,
+            build_evals,
+        }
+    }
+
+    pub fn act_bits(&self) -> u32 {
+        self.act_bits
+    }
+
+    /// Table memory in entries.
+    pub fn entries(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Memory at a given value bit-width.
+    pub fn bytes(&self, value_bits: u32) -> f64 {
+        self.entries() as f64 * value_bits as f64 / 8.0
+    }
+
+    #[inline(always)]
+    fn seg_table(&self, oc: usize, seg: usize) -> &[i32] {
+        let base = (oc * self.n_segments + seg) * self.seg_card;
+        &self.values[base..base + self.seg_card]
+    }
+}
+
+impl ConvEngine for SegmentEngine {
+    fn name(&self) -> &'static str {
+        "segment"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels mismatch");
+        let out_shape = g.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        // Pre-processing circuitry: pack the RF's activations into segment
+        // offsets once, reused across all output channels (the paper:
+        // "calculated offsets can be reused").
+        let mut rf = vec![0u8; self.n_segments * self.seg_n];
+        let mut offsets = vec![0u32; self.n_segments];
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let mut p = 0;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        rf[p..p + g.kw * s.c].copy_from_slice(row);
+                        p += g.kw * s.c;
+                    }
+                    rf[self.positions..].fill(0); // tail padding
+                    for (seg, off) in offsets.iter_mut().enumerate() {
+                        *off = pack_offset(
+                            &rf[seg * self.seg_n..(seg + 1) * self.seg_n],
+                            self.act_bits,
+                        );
+                    }
+                    for oc in 0..self.out_ch {
+                        let mut acc = 0i32;
+                        for (seg, &off) in offsets.iter().enumerate() {
+                            acc += self.seg_table(oc, seg)[off as usize];
+                        }
+                        out.set(n, oy, ox, oc, acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.n_segments * self.out_ch) as u64;
+        OpCounts {
+            mults: 0,
+            // seg_n-fold fewer adds and fetches than the basic engine —
+            // the productivity mechanism of Fig 6.
+            adds: rfs * per_rf,
+            fetches: rfs * (self.positions as u64 + per_rf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    fn exact_case(seed: u64, bits: u32, seg_n: usize, kh: usize, kw: usize, ic: usize, oc: usize) {
+        let mut rng = Rng::new(seed);
+        let h = kh + 3;
+        let w_dim = kw + 3;
+        let x = Tensor4::random_activations(Shape4::new(1, h, w_dim, ic), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(kh, kw);
+        let e = SegmentEngine::new(&w, bits, seg_n, geom);
+        assert_eq!(
+            e.conv(&x),
+            conv_reference(&x, &w, geom),
+            "bits={bits} seg_n={seg_n} k={kh}x{kw} ic={ic} oc={oc}"
+        );
+    }
+
+    #[test]
+    fn boolhash_configuration_exact() {
+        // The paper's measured configuration: boolean activations, 8 packed
+        // per offset.
+        exact_case(1, 1, 8, 5, 5, 1, 2);
+    }
+
+    #[test]
+    fn int2_by_4_exact() {
+        exact_case(2, 2, 4, 3, 3, 2, 3);
+    }
+
+    #[test]
+    fn int4_by_2_exact() {
+        exact_case(3, 4, 2, 3, 3, 1, 2);
+    }
+
+    #[test]
+    fn seg_n_1_equals_basic_pcilt() {
+        // Degenerate segments of one position = the basic algorithm.
+        exact_case(4, 4, 1, 3, 3, 2, 2);
+    }
+
+    #[test]
+    fn tail_padding_handles_non_divisible() {
+        // 3x3x1 = 9 positions, seg_n = 4 -> 3 segments with padding.
+        exact_case(5, 2, 4, 3, 3, 1, 1);
+        // 5x5x1 = 25 positions, seg_n = 8 -> 4 segments, 7 padded.
+        exact_case(6, 1, 8, 5, 5, 1, 1);
+    }
+
+    #[test]
+    fn exactness_property() {
+        forall("segment == reference", 25, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4]);
+            let seg_n = *rng.choose(&[1usize, 2, 4, 8]);
+            if seg_n as u32 * bits > 16 {
+                return;
+            }
+            let (kh, kw) = *rng.choose(&[(2, 2), (3, 3)]);
+            let ic = rng.range_i64(1, 2) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            exact_case(rng.next_u64(), bits, seg_n, kh, kw, ic, oc);
+        });
+    }
+
+    #[test]
+    fn op_reduction_factor() {
+        // seg_n=8 cuts adds per RF by ~8x vs basic PCILT (25 pos -> 4 segs).
+        let mut rng = Rng::new(8);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(5, 5);
+        let e8 = SegmentEngine::new(&w, 1, 8, geom);
+        let e1 = SegmentEngine::new(&w, 1, 1, geom);
+        let s = Shape4::new(1, 32, 32, 1);
+        let adds8 = e8.op_counts(s).adds;
+        let adds1 = e1.op_counts(s).adds;
+        assert_eq!(e8.n_segments, 4);
+        assert_eq!(adds1 / adds8, 25 / 4);
+    }
+
+    #[test]
+    fn build_cost_scales_with_offset_space() {
+        // Fig 5: a segment of 3 bool activations has 8 offsets, each costing
+        // 3 evals.
+        let mut rng = Rng::new(9);
+        let w = Tensor4::random_weights(Shape4::new(1, 1, 3, 1), 8, &mut rng);
+        let e = SegmentEngine::new(&w, 1, 3, ConvGeometry::unit_stride(1, 3));
+        assert_eq!(e.n_segments, 1);
+        assert_eq!(e.seg_card, 8);
+        assert_eq!(e.build_evals, 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn infeasible_table_rejected() {
+        let mut rng = Rng::new(10);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        // 8 positions x 4 bits = 2^32 rows: must panic.
+        SegmentEngine::new(&w, 4, 8, ConvGeometry::unit_stride(5, 5));
+    }
+}
+
+/// Row-aligned segment engine — the §Perf-optimized variant (EXPERIMENTS.md
+/// §Perf): segments never cross kernel rows, so activations can be packed
+/// **once per input row** into a bitstream and every segment offset is then
+/// an O(1) window extraction (`util::bitpack::window_offset`) instead of a
+/// per-RF shift/mask loop. This is the software realization of the paper's
+/// "an even wider data bus can extract several PCILT offsets at once".
+///
+/// Tables are stored channels-last (`[seg][offset][oc]`) so the accumulate
+/// loop is a contiguous row add per segment. Requires `f(0, a) == 0` for
+/// the row-tail padding (true of every `ConvFunc`).
+pub struct RowSegmentEngine {
+    /// `cl[(seg_global * seg_card + offset) * out_ch + oc]`.
+    cl: Vec<i32>,
+    out_ch: usize,
+    positions: usize,
+    pub seg_n: usize,
+    /// Segments per kernel row: `ceil(kw*cin / seg_n)`.
+    pub segs_per_row: usize,
+    /// Total segments: `kh * segs_per_row`.
+    pub n_segments: usize,
+    pub seg_card: usize,
+    act_bits: u32,
+    geom: ConvGeometry,
+}
+
+impl RowSegmentEngine {
+    pub fn new(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+    ) -> RowSegmentEngine {
+        Self::with_func(weights, act_bits, seg_n, geom, &ConvFunc::Mul)
+    }
+
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> RowSegmentEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        assert!(seg_n >= 1);
+        assert!(
+            (seg_n as u32 * act_bits) <= 20,
+            "segment table too large: 2^{} rows",
+            seg_n as u32 * act_bits
+        );
+        debug_assert_eq!(f.eval(0, 1), 0, "row padding requires f(0, a) == 0");
+        let seg_card = offset_space(seg_n, act_bits).expect("infeasible segment") as usize;
+        let row_positions = s.w * s.c; // kw * cin
+        let segs_per_row = row_positions.div_ceil(seg_n);
+        let n_segments = s.h * segs_per_row;
+        let positions = s.h * row_positions;
+        let mask = (1u32 << act_bits) - 1;
+        let oc_n = s.n;
+        let mut cl = vec![0i32; n_segments * seg_card * oc_n];
+        for oc in 0..oc_n {
+            for ky in 0..s.h {
+                // flatten this kernel row's weights, padded to segment grid
+                let mut roww = Vec::with_capacity(segs_per_row * seg_n);
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        roww.push(weights.get(oc, ky, kx, ic) as i32);
+                    }
+                }
+                roww.resize(segs_per_row * seg_n, 0);
+                for j in 0..segs_per_row {
+                    let ws = &roww[j * seg_n..(j + 1) * seg_n];
+                    let seg_global = ky * segs_per_row + j;
+                    for offset in 0..seg_card {
+                        let mut acc = 0i32;
+                        for (k, &wk) in ws.iter().enumerate() {
+                            let a = ((offset as u32) >> (k as u32 * act_bits)) & mask;
+                            acc += f.eval(wk, a);
+                        }
+                        cl[(seg_global * seg_card + offset) * oc_n + oc] = acc;
+                    }
+                }
+            }
+        }
+        RowSegmentEngine {
+            cl,
+            out_ch: oc_n,
+            positions,
+            seg_n,
+            segs_per_row,
+            n_segments,
+            seg_card,
+            act_bits,
+            geom,
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.cl.len()
+    }
+}
+
+impl ConvEngine for RowSegmentEngine {
+    fn name(&self) -> &'static str {
+        "segment-row"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        use crate::util::bitpack::{pack_stream, window_offset};
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels mismatch");
+        let out_shape = g.out_shape(s, self.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let oc_n = self.out_ch;
+        let row_positions = g.kw * s.c;
+        let bits = self.act_bits;
+        let card = self.seg_card;
+        let cl = &self.cl[..];
+        let mut acc = vec![0i32; oc_n];
+        for n in 0..s.n {
+            // Pack every input row once; each row is w*cin codes.
+            let streams: Vec<Vec<u64>> = (0..s.h)
+                .map(|y| pack_stream(x.row_span(n, y, 0, s.w), bits))
+                .collect();
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    acc.fill(0);
+                    let col_start = ox * g.sx * s.c;
+                    for ky in 0..g.kh {
+                        let stream = &streams[oy * g.sy + ky];
+                        for j in 0..self.segs_per_row {
+                            let start = col_start + j * self.seg_n;
+                            let take = self.seg_n.min(row_positions - j * self.seg_n);
+                            let off = window_offset(stream, bits, start, take) as usize;
+                            let seg_global = ky * self.segs_per_row + j;
+                            let base = (seg_global * card + off) * oc_n;
+                            let trow = &cl[base..base + oc_n];
+                            for (a, &t) in acc.iter_mut().zip(trow) {
+                                *a += t;
+                            }
+                        }
+                    }
+                    let start = out_shape.index(n, oy, ox, 0);
+                    out.data_mut()[start..start + oc_n].copy_from_slice(&acc);
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.n_segments * self.out_ch) as u64;
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            // one O(1) window extraction per segment + one row fetch per
+            // (segment, oc); row packing amortizes to ~1 op/activation.
+            fetches: rfs * (self.n_segments as u64 + per_rf) + (s.h * s.w * s.c) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod row_tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    fn exact(seed: u64, bits: u32, seg_n: usize, kh: usize, kw: usize, ic: usize, oc: usize) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random_activations(Shape4::new(2, kh + 4, kw + 5, ic), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(kh, kw);
+        let e = RowSegmentEngine::new(&w, bits, seg_n, geom);
+        assert_eq!(
+            e.conv(&x),
+            conv_reference(&x, &w, geom),
+            "bits={bits} seg_n={seg_n} k={kh}x{kw} ic={ic} oc={oc}"
+        );
+    }
+
+    #[test]
+    fn boolhash_row_aligned_exact() {
+        exact(1, 1, 8, 5, 5, 1, 4);
+        exact(2, 1, 8, 5, 5, 4, 8);
+    }
+
+    #[test]
+    fn int2_and_int4_exact() {
+        exact(3, 2, 4, 3, 3, 2, 3);
+        exact(4, 4, 2, 3, 3, 1, 2);
+    }
+
+    #[test]
+    fn row_tail_padding_exact() {
+        // kw*cin = 5 with seg_n = 4: tail segment of 1 position.
+        exact(5, 2, 4, 3, 5, 1, 2);
+        // kw*cin = 6 with seg_n = 4: tail of 2.
+        exact(6, 1, 4, 3, 3, 2, 1);
+    }
+
+    #[test]
+    fn strided_row_aligned_exact() {
+        let mut rng = Rng::new(7);
+        let x = Tensor4::random_activations(Shape4::new(1, 9, 9, 2), 2, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry {
+            kh: 3,
+            kw: 3,
+            sy: 2,
+            sx: 2,
+        };
+        let e = RowSegmentEngine::new(&w, 2, 3, geom);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn property_row_aligned_exact() {
+        forall("row-segment == reference", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4]);
+            let seg_n = *rng.choose(&[1usize, 2, 4, 8]);
+            if seg_n as u32 * bits > 16 {
+                return;
+            }
+            let (kh, kw) = *rng.choose(&[(2usize, 2usize), (3, 3), (5, 5)]);
+            exact(
+                rng.next_u64(),
+                bits,
+                seg_n,
+                kh,
+                kw,
+                rng.range_i64(1, 2) as usize,
+                rng.range_i64(1, 4) as usize,
+            );
+        });
+    }
+
+    #[test]
+    fn row_mode_matches_flat_mode() {
+        let mut rng = Rng::new(8);
+        let x = Tensor4::random_activations(Shape4::new(1, 8, 8, 1), 1, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 5, 5, 1), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(5, 5);
+        let flat = SegmentEngine::new(&w, 1, 8, geom);
+        let row = RowSegmentEngine::new(&w, 1, 8, geom);
+        assert_eq!(flat.conv(&x), row.conv(&x));
+    }
+
+    #[test]
+    fn segment_counts() {
+        let mut rng = Rng::new(9);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        let e = RowSegmentEngine::new(&w, 1, 8, ConvGeometry::unit_stride(5, 5));
+        // 5 positions/row, seg_n 8 -> 1 segment per row, 5 total.
+        assert_eq!(e.segs_per_row, 1);
+        assert_eq!(e.n_segments, 5);
+    }
+}

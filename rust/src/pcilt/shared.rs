@@ -1,0 +1,505 @@
+//! Shared PCILTs — the *"Using Shared PCILTs"* extension.
+//!
+//! Tables depend only on `(weight value, activation cardinality, f)`, so a
+//! layer whose weights take few distinct values (small **actual
+//! cardinality**) needs only that many unique tables; every position keeps a
+//! **pointer** to its table. A further variant replaces whole-table pointers
+//! with per-value indirection when table-level repetition is low but
+//! value-level repetition is high. The prefix property (a low-cardinality
+//! table is the prefix of the same weight's higher-cardinality table)
+//! enables cross-cardinality sharing.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::custom_fn::ConvFunc;
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+
+/// Shared-table store for one layer: unique tables + per-position pointers.
+pub struct SharedTables {
+    /// Unique tables, each `card` entries, concatenated.
+    unique: Vec<i32>,
+    /// Number of unique tables.
+    pub n_unique: usize,
+    /// `pointers[oc * positions + p]` = index of the unique table for that
+    /// weight position.
+    pointers: Vec<u32>,
+    pub out_ch: usize,
+    pub positions: usize,
+    pub card: usize,
+    pub act_bits: u32,
+}
+
+impl SharedTables {
+    /// Build, deduplicating by weight value.
+    pub fn build(weights: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> SharedTables {
+        assert!((1..=12).contains(&act_bits));
+        let s = weights.shape();
+        let positions = s.h * s.w * s.c;
+        let card = 1usize << act_bits;
+        let mut by_weight: BTreeMap<i32, u32> = BTreeMap::new();
+        let mut unique: Vec<i32> = Vec::new();
+        let mut pointers = Vec::with_capacity(s.n * positions);
+        for oc in 0..s.n {
+            for ky in 0..s.h {
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        let w = weights.get(oc, ky, kx, ic) as i32;
+                        let idx = *by_weight.entry(w).or_insert_with(|| {
+                            let idx = (unique.len() / card) as u32;
+                            unique.extend((0..card).map(|a| f.eval(w, a as u32)));
+                            idx
+                        });
+                        pointers.push(idx);
+                    }
+                }
+            }
+        }
+        SharedTables {
+            n_unique: unique.len() / card,
+            unique,
+            pointers,
+            out_ch: s.n,
+            positions,
+            card,
+            act_bits,
+        }
+    }
+
+    /// Table for `(oc, position)` via one pointer indirection.
+    #[inline(always)]
+    pub fn table(&self, oc: usize, position: usize) -> &[i32] {
+        let t = self.pointers[oc * self.positions + position] as usize;
+        &self.unique[t * self.card..(t + 1) * self.card]
+    }
+
+    /// Memory footprint: unique tables at `value_bits` per entry plus
+    /// pointers at `ceil(log2 n_unique)` bits each — the quantities the
+    /// paper's ~25 MB / ~18 MB examples trade off.
+    pub fn bytes(&self, value_bits: u32) -> SharedMemory {
+        let table_bytes = self.unique.len() as f64 * value_bits as f64 / 8.0;
+        let ptr_bits = (self.n_unique.max(2) as f64).log2().ceil();
+        let pointer_bytes = self.pointers.len() as f64 * ptr_bits / 8.0;
+        let dense_bytes =
+            (self.out_ch * self.positions * self.card) as f64 * value_bits as f64 / 8.0;
+        SharedMemory {
+            table_bytes,
+            pointer_bytes,
+            dense_bytes,
+        }
+    }
+}
+
+/// Memory breakdown of a shared-table layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SharedMemory {
+    /// Bytes for the unique tables.
+    pub table_bytes: f64,
+    /// Bytes for per-position pointers.
+    pub pointer_bytes: f64,
+    /// Bytes the unshared (dense) layout would need.
+    pub dense_bytes: f64,
+}
+
+impl SharedMemory {
+    pub fn total(&self) -> f64 {
+        self.table_bytes + self.pointer_bytes
+    }
+    pub fn savings_ratio(&self) -> f64 {
+        self.dense_bytes / self.total()
+    }
+}
+
+/// Value-level indirection variant: positions share a pool of **unique
+/// values**; each (position, activation) cell stores a narrow index into the
+/// pool. Feasible when `value_index_bits < value_bits` ("where the
+/// indirection offsets need substantially less memory than the PCILT
+/// values").
+pub struct ValueIndirection {
+    /// Unique values pool.
+    pub pool: Vec<i32>,
+    /// `cells[(oc*positions + p) * card + a]` = pool index.
+    cells: Vec<u32>,
+    pub card: usize,
+    positions: usize,
+}
+
+impl ValueIndirection {
+    pub fn build(weights: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> ValueIndirection {
+        let s = weights.shape();
+        let positions = s.h * s.w * s.c;
+        let card = 1usize << act_bits;
+        let mut pool_map: BTreeMap<i32, u32> = BTreeMap::new();
+        let mut pool = Vec::new();
+        let mut cells = Vec::with_capacity(s.n * positions * card);
+        for oc in 0..s.n {
+            for ky in 0..s.h {
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        let w = weights.get(oc, ky, kx, ic) as i32;
+                        for a in 0..card {
+                            let v = f.eval(w, a as u32);
+                            let idx = *pool_map.entry(v).or_insert_with(|| {
+                                pool.push(v);
+                                (pool.len() - 1) as u32
+                            });
+                            cells.push(idx);
+                        }
+                    }
+                }
+            }
+        }
+        ValueIndirection {
+            pool,
+            cells,
+            card,
+            positions,
+        }
+    }
+
+    #[inline(always)]
+    pub fn fetch(&self, oc: usize, position: usize, a: u8) -> i32 {
+        let cell = self.cells[(oc * self.positions + position) * self.card + a as usize];
+        self.pool[cell as usize]
+    }
+
+    /// Bytes: pool at `value_bits` + cells at `ceil(log2 |pool|)` bits.
+    pub fn bytes(&self, value_bits: u32) -> f64 {
+        let idx_bits = (self.pool.len().max(2) as f64).log2().ceil();
+        self.pool.len() as f64 * value_bits as f64 / 8.0
+            + self.cells.len() as f64 * idx_bits / 8.0
+    }
+}
+
+/// Shared-table conv engine (pointer indirection on the hot path — the
+/// "smaller delay … due to the usage of an additional PCILT indirection").
+pub struct SharedEngine {
+    tables: SharedTables,
+    geom: ConvGeometry,
+}
+
+impl SharedEngine {
+    pub fn new(weights: &Tensor4<i8>, act_bits: u32, geom: ConvGeometry) -> SharedEngine {
+        Self::with_func(weights, act_bits, geom, &ConvFunc::Mul)
+    }
+
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> SharedEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        SharedEngine {
+            tables: SharedTables::build(weights, act_bits, f),
+            geom,
+        }
+    }
+
+    pub fn tables(&self) -> &SharedTables {
+        &self.tables
+    }
+}
+
+impl ConvEngine for SharedEngine {
+    fn name(&self) -> &'static str {
+        "shared"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.tables.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        self.geom
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        let g = self.geom;
+        let t = &self.tables;
+        let in_ch = t.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let out_shape = g.out_shape(s, t.out_ch);
+        let mut out = Tensor4::zeros(out_shape);
+        let mut rf = vec![0u8; t.positions];
+        for n in 0..s.n {
+            for oy in 0..out_shape.h {
+                for ox in 0..out_shape.w {
+                    let mut p = 0;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        rf[p..p + g.kw * s.c].copy_from_slice(row);
+                        p += g.kw * s.c;
+                    }
+                    for oc in 0..t.out_ch {
+                        let base = oc * t.positions;
+                        let mut acc = 0i32;
+                        for (pos, &a) in rf.iter().enumerate() {
+                            let ti = t.pointers[base + pos] as usize;
+                            acc += t.unique[ti * t.card + a as usize];
+                        }
+                        out.set(n, oy, ox, oc, acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let rfs = rf_count(self.geom, s);
+        let per_rf = (self.tables.positions * self.tables.out_ch) as u64;
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            // extra pointer fetch per (position, oc): the indirection cost.
+            fetches: rfs * (self.tables.positions as u64 + 2 * per_rf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    /// Weights drawn from a small palette = small actual cardinality.
+    fn palette_weights(shape: Shape4, palette: &[i8], rng: &mut Rng) -> Tensor4<i8> {
+        Tensor4::from_fn(shape, |_, _, _, _| *rng.choose(palette))
+    }
+
+    #[test]
+    fn dedup_counts_unique_weight_values() {
+        let mut rng = Rng::new(31);
+        let w = palette_weights(Shape4::new(8, 3, 3, 4), &[-2, -1, 0, 1, 2], &mut rng);
+        let t = SharedTables::build(&w, 4, &ConvFunc::Mul);
+        assert!(t.n_unique <= 5);
+        assert!(t.n_unique >= 2);
+    }
+
+    #[test]
+    fn lossless_vs_reference() {
+        forall("shared == reference", 25, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4]);
+            let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 2), bits, &mut rng);
+            let w = palette_weights(Shape4::new(3, 3, 3, 2), &[-3, -1, 0, 1, 3], &mut rng);
+            let geom = ConvGeometry::unit_stride(3, 3);
+            let e = SharedEngine::new(&w, bits, geom);
+            assert_eq!(e.conv(&x), conv_reference(&x, &w, geom));
+        });
+    }
+
+    #[test]
+    fn memory_savings_grow_with_repetition() {
+        let mut rng = Rng::new(37);
+        // Large layer, tiny palette: dense >> shared.
+        let w = palette_weights(Shape4::new(32, 5, 5, 16), &[-1, 0, 1], &mut rng);
+        let t = SharedTables::build(&w, 8, &ConvFunc::Mul);
+        let m = t.bytes(16);
+        assert!(
+            m.savings_ratio() > 50.0,
+            "expected large savings, got {:.1}x",
+            m.savings_ratio()
+        );
+        // And full-cardinality random weights: savings bounded by 256 tables.
+        let w2 = Tensor4::random_weights(Shape4::new(32, 5, 5, 16), 8, &mut rng);
+        let t2 = SharedTables::build(&w2, 8, &ConvFunc::Mul);
+        assert!(t2.n_unique <= 255);
+    }
+
+    #[test]
+    fn value_indirection_lossless() {
+        let mut rng = Rng::new(41);
+        let w = palette_weights(Shape4::new(2, 3, 3, 1), &[-2, 0, 2], &mut rng);
+        let vi = ValueIndirection::build(&w, 3, &ConvFunc::Mul);
+        for oc in 0..2 {
+            let mut pos = 0;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let wv = w.get(oc, ky, kx, 0) as i32;
+                    for a in 0..8u8 {
+                        assert_eq!(vi.fetch(oc, pos, a), wv * a as i32);
+                    }
+                    pos += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn value_indirection_pools_repeated_products() {
+        let mut rng = Rng::new(43);
+        // palette {-1,0,1} x 16 activation values -> at most 31 products
+        let w = palette_weights(Shape4::new(16, 5, 5, 8), &[-1, 0, 1], &mut rng);
+        let vi = ValueIndirection::build(&w, 4, &ConvFunc::Mul);
+        assert!(vi.pool.len() <= 31, "pool={}", vi.pool.len());
+    }
+
+    #[test]
+    fn prefix_property_of_cardinalities() {
+        // "the one for the lower cardinality will match the beginning of the
+        // one for the higher cardinality"
+        use crate::pcilt::table::Pcilt;
+        let lo = Pcilt::build(-7, 4, &ConvFunc::Mul);
+        let hi = Pcilt::build(-7, 8, &ConvFunc::Mul);
+        assert_eq!(&hi.entries[..16], &lo.entries[..]);
+    }
+
+    #[test]
+    fn indirection_fetch_overhead_reported() {
+        let mut rng = Rng::new(47);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 4, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let shared = SharedEngine::new(&w, 4, geom);
+        let s = Shape4::new(1, 8, 8, 1);
+        let basic = crate::pcilt::lookup::PciltEngine::new(&w, 4, geom);
+        assert!(shared.op_counts(s).fetches > basic.op_counts(s).fetches);
+        assert_eq!(shared.op_counts(s).adds, basic.op_counts(s).adds);
+    }
+}
+
+/// Two-level indirection — "In cases where the indirection offsets tables
+/// repeat often and the memory access speed is high, it might be justified
+/// to have two-level indirection: pointers to unique tables with
+/// indirection offsets to PCILTs with unique values."
+///
+/// Level 1: per-position pointer to a unique *index table*;
+/// Level 2: index-table cells point into a pool of unique values.
+pub struct TwoLevelTables {
+    /// Unique values pool.
+    pub pool: Vec<i32>,
+    /// Unique index tables, each `card` cells, concatenated.
+    index_tables: Vec<u32>,
+    /// Number of unique index tables.
+    pub n_index_tables: usize,
+    /// Per-position pointer into the index tables.
+    pointers: Vec<u32>,
+    pub card: usize,
+    positions: usize,
+}
+
+impl TwoLevelTables {
+    pub fn build(weights: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> TwoLevelTables {
+        let s = weights.shape();
+        let positions = s.h * s.w * s.c;
+        let card = 1usize << act_bits;
+        let mut pool_map: BTreeMap<i32, u32> = BTreeMap::new();
+        let mut pool = Vec::new();
+        let mut table_map: BTreeMap<Vec<u32>, u32> = BTreeMap::new();
+        let mut index_tables: Vec<u32> = Vec::new();
+        let mut pointers = Vec::with_capacity(s.n * positions);
+        for oc in 0..s.n {
+            for ky in 0..s.h {
+                for kx in 0..s.w {
+                    for ic in 0..s.c {
+                        let w = weights.get(oc, ky, kx, ic) as i32;
+                        let idx_row: Vec<u32> = (0..card)
+                            .map(|a| {
+                                let v = f.eval(w, a as u32);
+                                *pool_map.entry(v).or_insert_with(|| {
+                                    pool.push(v);
+                                    (pool.len() - 1) as u32
+                                })
+                            })
+                            .collect();
+                        let t = *table_map.entry(idx_row.clone()).or_insert_with(|| {
+                            let t = (index_tables.len() / card) as u32;
+                            index_tables.extend_from_slice(&idx_row);
+                            t
+                        });
+                        pointers.push(t);
+                    }
+                }
+            }
+        }
+        TwoLevelTables {
+            pool,
+            n_index_tables: index_tables.len() / card,
+            index_tables,
+            pointers,
+            card,
+            positions,
+        }
+    }
+
+    /// Fetch through both levels.
+    #[inline(always)]
+    pub fn fetch(&self, oc: usize, position: usize, a: u8) -> i32 {
+        let t = self.pointers[oc * self.positions + position] as usize;
+        let cell = self.index_tables[t * self.card + a as usize];
+        self.pool[cell as usize]
+    }
+
+    /// Bytes: pool at `value_bits`, index cells at `ceil(log2 |pool|)`
+    /// bits, pointers at `ceil(log2 n_index_tables)` bits.
+    pub fn bytes(&self, value_bits: u32) -> f64 {
+        let idx_bits = (self.pool.len().max(2) as f64).log2().ceil();
+        let ptr_bits = (self.n_index_tables.max(2) as f64).log2().ceil();
+        self.pool.len() as f64 * value_bits as f64 / 8.0
+            + self.index_tables.len() as f64 * idx_bits / 8.0
+            + self.pointers.len() as f64 * ptr_bits / 8.0
+    }
+}
+
+#[cfg(test)]
+mod two_level_tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn palette_weights(shape: Shape4, palette: &[i8], rng: &mut Rng) -> Tensor4<i8> {
+        Tensor4::from_fn(shape, |_, _, _, _| *rng.choose(palette))
+    }
+
+    #[test]
+    fn two_level_is_lossless() {
+        let mut rng = Rng::new(71);
+        let w = palette_weights(Shape4::new(3, 3, 3, 2), &[-2, 0, 1, 3], &mut rng);
+        let t = TwoLevelTables::build(&w, 3, &ConvFunc::Mul);
+        for oc in 0..3 {
+            let mut pos = 0;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    for ic in 0..2 {
+                        let wv = w.get(oc, ky, kx, ic) as i32;
+                        for a in 0..8u8 {
+                            assert_eq!(t.fetch(oc, pos, a), wv * a as i32);
+                        }
+                        pos += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn index_tables_dedupe_by_weight_value() {
+        let mut rng = Rng::new(72);
+        let w = palette_weights(Shape4::new(16, 5, 5, 8), &[-1, 0, 1], &mut rng);
+        let t = TwoLevelTables::build(&w, 4, &ConvFunc::Mul);
+        assert!(t.n_index_tables <= 3);
+        // pool: products of {-1,0,1} x 0..15 = at most 31 values
+        assert!(t.pool.len() <= 31);
+    }
+
+    #[test]
+    fn two_level_beats_one_level_when_tables_repeat() {
+        let mut rng = Rng::new(73);
+        // big layer, tiny palette, wide values -> two-level wins
+        let w = palette_weights(Shape4::new(64, 5, 5, 16), &[-1, 1], &mut rng);
+        let two = TwoLevelTables::build(&w, 8, &ConvFunc::Mul);
+        let one = ValueIndirection::build(&w, 8, &ConvFunc::Mul);
+        assert!(
+            two.bytes(32) < one.bytes(32),
+            "two-level {} vs one-level {}",
+            two.bytes(32),
+            one.bytes(32)
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! PCILT construction — Fig 1 of the paper.
+//!
+//! A **PCILT** (pre-calculated inference lookup table) for one filter weight
+//! `w` over activations of cardinality `2^bits` is the vector
+//! `[f(w, 0), f(w, 1), …, f(w, 2^bits − 1)]`. At inference the activation
+//! value *is* the table offset, so a multiply becomes a fetch (Fig 2).
+//!
+//! [`LayerTables`] holds the tables for an entire conv layer in one dense
+//! block laid out `[out_ch][position][activation]`, with `position`
+//! enumerating `(ky, kx, ic)` in the same order the engines walk receptive
+//! fields, so the inference inner loop streams this memory sequentially.
+
+use crate::tensor::Tensor4;
+
+use super::custom_fn::ConvFunc;
+
+/// A single weight's lookup table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pcilt {
+    /// `entries[a] = f(w, a)`.
+    pub entries: Vec<i32>,
+    /// Activation bit width; `entries.len() == 2^act_bits`.
+    pub act_bits: u32,
+}
+
+impl Pcilt {
+    /// Build the table for weight `w`. Counts `2^act_bits` evaluations of
+    /// `f` — the "6,400 multiplications for a 5×5 filter at 8-bit
+    /// cardinality" one-off cost the paper quantifies.
+    pub fn build(w: i32, act_bits: u32, f: &ConvFunc) -> Pcilt {
+        assert!((1..=16).contains(&act_bits), "act_bits must be 1..=16");
+        let n = 1usize << act_bits;
+        Pcilt {
+            entries: (0..n).map(|a| f.eval(w, a as u32)).collect(),
+            act_bits,
+        }
+    }
+
+    /// Fetch the inference value for activation `a` — the whole algorithm.
+    #[inline(always)]
+    pub fn fetch(&self, a: u8) -> i32 {
+        self.entries[a as usize]
+    }
+
+    /// Bytes needed at a given value width (the paper stores products at
+    /// their natural width, e.g. 12-bit products in 1.5 bytes).
+    pub fn bytes(&self, value_bits: u32) -> f64 {
+        self.entries.len() as f64 * value_bits as f64 / 8.0
+    }
+}
+
+/// All PCILTs of a convolution layer in a dense, cache-friendly layout.
+#[derive(Debug, Clone)]
+pub struct LayerTables {
+    /// `values[((oc * positions) + p) * card + a]`.
+    values: Vec<i32>,
+    /// Number of output channels.
+    pub out_ch: usize,
+    /// Positions per filter: `kh * kw * in_ch`.
+    pub positions: usize,
+    /// Activation cardinality `2^act_bits`.
+    pub card: usize,
+    pub act_bits: u32,
+    /// Number of `f` evaluations performed during the build.
+    pub build_evals: u64,
+}
+
+impl LayerTables {
+    /// Build tables from OHWI filter weights (`[out_ch, kh, kw, in_ch]`).
+    /// Position order is `(ky, kx, ic)` row-major, matching
+    /// [`crate::tensor::im2col`] and the engines' RF walk.
+    pub fn build(weights: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> LayerTables {
+        assert!((1..=12).contains(&act_bits), "layer act_bits must be 1..=12");
+        let s = weights.shape();
+        let (out_ch, kh, kw, in_ch) = (s.n, s.h, s.w, s.c);
+        let positions = kh * kw * in_ch;
+        let card = 1usize << act_bits;
+        let mut values = Vec::with_capacity(out_ch * positions * card);
+        for oc in 0..out_ch {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    for ic in 0..in_ch {
+                        let w = weights.get(oc, ky, kx, ic) as i32;
+                        for a in 0..card {
+                            values.push(f.eval(w, a as u32));
+                        }
+                    }
+                }
+            }
+        }
+        LayerTables {
+            values,
+            out_ch,
+            positions,
+            card,
+            act_bits,
+            build_evals: (out_ch * positions * card) as u64,
+        }
+    }
+
+    /// The table slice for `(oc, position)`: `card` consecutive entries.
+    #[inline(always)]
+    pub fn table(&self, oc: usize, position: usize) -> &[i32] {
+        let start = (oc * self.positions + position) * self.card;
+        &self.values[start..start + self.card]
+    }
+
+    /// All tables of one output channel, contiguous: `positions * card`.
+    #[inline(always)]
+    pub fn channel_tables(&self, oc: usize) -> &[i32] {
+        let start = oc * self.positions * self.card;
+        &self.values[start..start + self.positions * self.card]
+    }
+
+    /// Fetch `f(w[oc, position], a)`.
+    #[inline(always)]
+    pub fn fetch(&self, oc: usize, position: usize, a: u8) -> i32 {
+        self.table(oc, position)[a as usize]
+    }
+
+    /// Total entries (`out_ch * positions * card`).
+    pub fn entries(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Memory footprint at the natural product width.
+    pub fn bytes(&self, value_bits: u32) -> f64 {
+        self.entries() as f64 * value_bits as f64 / 8.0
+    }
+
+    /// Mutable access for the PCILT-as-weights extension (training adjusts
+    /// table values directly).
+    pub fn values_mut(&mut self) -> &mut [i32] {
+        &mut self.values
+    }
+
+    pub fn values(&self) -> &[i32] {
+        &self.values
+    }
+
+    /// Index of `(oc, position, a)` into the flat value array.
+    #[inline(always)]
+    pub fn flat_index(&self, oc: usize, position: usize, a: usize) -> usize {
+        (oc * self.positions + position) * self.card + a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape4;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn single_table_is_products() {
+        let t = Pcilt::build(-3, 4, &ConvFunc::Mul);
+        assert_eq!(t.entries.len(), 16);
+        for a in 0..16 {
+            assert_eq!(t.entries[a], -3 * a as i32);
+        }
+        assert_eq!(t.fetch(5), -15);
+    }
+
+    #[test]
+    fn paper_build_cost_5x5_int8() {
+        // §Basic: "calculating the PCILTs for a 5x5 filter to process
+        // activations with 8-bit cardinality will require 6,400
+        // multiplications".
+        let mut rng = Rng::new(1);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        let lt = LayerTables::build(&w, 8, &ConvFunc::Mul);
+        assert_eq!(lt.build_evals, 6_400);
+    }
+
+    #[test]
+    fn layer_tables_match_per_weight_tables() {
+        let mut rng = Rng::new(2);
+        let w = Tensor4::random_weights(Shape4::new(3, 2, 2, 4), 6, &mut rng);
+        let lt = LayerTables::build(&w, 4, &ConvFunc::Mul);
+        assert_eq!(lt.positions, 16);
+        assert_eq!(lt.card, 16);
+        for oc in 0..3 {
+            let mut pos = 0;
+            for ky in 0..2 {
+                for kx in 0..2 {
+                    for ic in 0..4 {
+                        let expect = Pcilt::build(w.get(oc, ky, kx, ic) as i32, 4, &ConvFunc::Mul);
+                        assert_eq!(lt.table(oc, pos), &expect.entries[..]);
+                        pos += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_equals_eval_property() {
+        forall("fetch == f(w,a)", 200, |g| {
+            let bits = g.one_of(&[1u32, 2, 4, 8]);
+            let w = g.i64(-127, 127) as i32;
+            let f = ConvFunc::Mul;
+            let t = Pcilt::build(w, bits, &f);
+            let a = g.i64(0, (1 << bits) - 1) as u8;
+            assert_eq!(t.fetch(a), f.eval(w, a as u32));
+        });
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let t = Pcilt::build(1, 8, &ConvFunc::Mul);
+        assert_eq!(t.bytes(16), 512.0);
+        assert_eq!(t.bytes(12), 384.0); // narrow products: 1.5 B/entry
+    }
+
+    #[test]
+    fn channel_tables_contiguity() {
+        let mut rng = Rng::new(3);
+        let w = Tensor4::random_weights(Shape4::new(2, 1, 1, 3), 4, &mut rng);
+        let lt = LayerTables::build(&w, 2, &ConvFunc::Mul);
+        let ch = lt.channel_tables(1);
+        assert_eq!(ch.len(), 3 * 4);
+        assert_eq!(&ch[0..4], lt.table(1, 0));
+        assert_eq!(&ch[8..12], lt.table(1, 2));
+    }
+}

@@ -1,0 +1,258 @@
+//! Winograd F(2×2, 3×3) convolution — the Toom-Cook-family baseline the
+//! paper's algorithm discussion compares against (Lavin & Gray's minimal
+//! filtering, 2.25× multiplication reduction for 3×3 kernels).
+//!
+//! Implemented over f64 with exact rational transform constants; for
+//! integer inputs of the magnitudes used here the arithmetic is exact, so
+//! the rounded result matches DM bit-for-bit (verified in tests). Op counts
+//! report the genuine Winograd multiplication economy for the ASIC
+//! comparison (E2).
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::engine::{ConvEngine, ConvGeometry, OpCounts};
+
+/// Winograd engine for 3×3 kernels, unit stride.
+pub struct WinogradEngine {
+    /// Transformed filters: `u[oc][ic][16]` (4×4 per channel pair).
+    u: Vec<f64>,
+    out_ch: usize,
+    in_ch: usize,
+}
+
+/// Filter transform `G g Gᵀ`, G = [[1,0,0],[1/2,1/2,1/2],[1/2,-1/2,1/2],[0,0,1]].
+fn filter_transform(g: &[f64; 9]) -> [f64; 16] {
+    // G g -> 4x3
+    let mut gg = [0f64; 12];
+    for c in 0..3 {
+        let (g0, g1, g2) = (g[c], g[3 + c], g[6 + c]);
+        gg[c] = g0;
+        gg[3 + c] = 0.5 * (g0 + g1 + g2);
+        gg[6 + c] = 0.5 * (g0 - g1 + g2);
+        gg[9 + c] = g2;
+    }
+    // (G g) Gᵀ -> 4x4
+    let mut u = [0f64; 16];
+    for r in 0..4 {
+        let (a, b, c) = (gg[3 * r], gg[3 * r + 1], gg[3 * r + 2]);
+        u[4 * r] = a;
+        u[4 * r + 1] = 0.5 * (a + b + c);
+        u[4 * r + 2] = 0.5 * (a - b + c);
+        u[4 * r + 3] = c;
+    }
+    u
+}
+
+/// Input transform `Bᵀ d B`,
+/// Bᵀ = [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]].
+fn input_transform(d: &[f64; 16]) -> [f64; 16] {
+    let mut bd = [0f64; 16];
+    for c in 0..4 {
+        let (d0, d1, d2, d3) = (d[c], d[4 + c], d[8 + c], d[12 + c]);
+        bd[c] = d0 - d2;
+        bd[4 + c] = d1 + d2;
+        bd[8 + c] = d2 - d1;
+        bd[12 + c] = d1 - d3;
+    }
+    let mut v = [0f64; 16];
+    for r in 0..4 {
+        let (d0, d1, d2, d3) = (bd[4 * r], bd[4 * r + 1], bd[4 * r + 2], bd[4 * r + 3]);
+        v[4 * r] = d0 - d2;
+        v[4 * r + 1] = d1 + d2;
+        v[4 * r + 2] = d2 - d1;
+        v[4 * r + 3] = d1 - d3;
+    }
+    v
+}
+
+/// Output transform `Aᵀ m A`, Aᵀ = [[1,1,1,0],[0,1,-1,-1]].
+fn output_transform(m: &[f64; 16]) -> [f64; 4] {
+    let mut am = [0f64; 8];
+    for c in 0..4 {
+        let (m0, m1, m2, m3) = (m[c], m[4 + c], m[8 + c], m[12 + c]);
+        am[c] = m0 + m1 + m2;
+        am[4 + c] = m1 - m2 - m3;
+    }
+    let mut y = [0f64; 4];
+    for r in 0..2 {
+        let (a0, a1, a2, a3) = (am[4 * r], am[4 * r + 1], am[4 * r + 2], am[4 * r + 3]);
+        y[2 * r] = a0 + a1 + a2;
+        y[2 * r + 1] = a1 - a2 - a3;
+    }
+    y
+}
+
+impl WinogradEngine {
+    pub fn new(weights: &Tensor4<i8>) -> WinogradEngine {
+        let s = weights.shape();
+        assert_eq!((s.h, s.w), (3, 3), "Winograd F(2x2,3x3) needs 3x3 kernels");
+        let mut u = Vec::with_capacity(s.n * s.c * 16);
+        for oc in 0..s.n {
+            for ic in 0..s.c {
+                let mut g = [0f64; 9];
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        g[ky * 3 + kx] = weights.get(oc, ky, kx, ic) as f64;
+                    }
+                }
+                u.extend_from_slice(&filter_transform(&g));
+            }
+        }
+        WinogradEngine {
+            u,
+            out_ch: s.n,
+            in_ch: s.c,
+        }
+    }
+}
+
+impl ConvEngine for WinogradEngine {
+    fn name(&self) -> &'static str {
+        "winograd"
+    }
+
+    fn out_channels(&self) -> usize {
+        self.out_ch
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        ConvGeometry::unit_stride(3, 3)
+    }
+
+    fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+        let s = x.shape();
+        assert_eq!(s.c, self.in_ch);
+        let (oh, ow) = s.conv_out(3, 3, 1, 1);
+        let mut out = Tensor4::zeros(Shape4::new(s.n, oh, ow, self.out_ch));
+        // Tile the output into 2x2 blocks; each consumes a 4x4 input patch.
+        for n in 0..s.n {
+            let mut ty = 0;
+            while ty < oh {
+                let mut tx = 0;
+                while tx < ow {
+                    // Gather the 4x4 patch per input channel (zero-pad the
+                    // ragged edge: those outputs are discarded below).
+                    let mut acc = vec![[0f64; 16]; self.out_ch];
+                    for ic in 0..self.in_ch {
+                        let mut d = [0f64; 16];
+                        for dy in 0..4 {
+                            for dx in 0..4 {
+                                let (y, x2) = (ty + dy, tx + dx);
+                                if y < s.h && x2 < s.w {
+                                    d[dy * 4 + dx] = x.get(n, y, x2, ic) as f64;
+                                }
+                            }
+                        }
+                        let v = input_transform(&d);
+                        for oc in 0..self.out_ch {
+                            let u = &self.u[(oc * self.in_ch + ic) * 16..][..16];
+                            let a = &mut acc[oc];
+                            for i in 0..16 {
+                                a[i] += u[i] * v[i]; // the Winograd Hadamard product
+                            }
+                        }
+                    }
+                    for (oc, a) in acc.iter().enumerate() {
+                        let y4 = output_transform(a);
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                if ty + dy < oh && tx + dx < ow {
+                                    out.set(
+                                        n,
+                                        ty + dy,
+                                        tx + dx,
+                                        oc,
+                                        y4[dy * 2 + dx].round() as i32,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    tx += 2;
+                }
+                ty += 2;
+            }
+        }
+        out
+    }
+
+    fn op_counts(&self, s: Shape4) -> OpCounts {
+        let (oh, ow) = s.conv_out(3, 3, 1, 1);
+        let tiles = (s.n * oh.div_ceil(2) * ow.div_ceil(2)) as u64;
+        let ch_pairs = (self.in_ch * self.out_ch) as u64;
+        // 16 multiplies per tile per channel pair (vs 36 for DM: the 2.25x).
+        let mults = tiles * ch_pairs * 16;
+        // Transforms are additions: Bᵀ d B ≈ 32 adds/tile/ic, Aᵀ m A ≈ 24
+        // adds/tile/oc, plus 16 accumulation adds per tile per pair.
+        let adds = tiles
+            * (self.in_ch as u64 * 32 + self.out_ch as u64 * 24 + ch_pairs * 16);
+        OpCounts {
+            mults,
+            adds,
+            fetches: tiles * (self.in_ch as u64 * 16 + ch_pairs * 16),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::conv_reference;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn matches_dm_on_even_tiles() {
+        let mut rng = Rng::new(61);
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let e = WinogradEngine::new(&w);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, e.geometry()));
+    }
+
+    #[test]
+    fn matches_dm_on_ragged_edges() {
+        // 5x7 input -> 3x5 output: odd in both dims exercises edge discard.
+        let mut rng = Rng::new(67);
+        let x = Tensor4::random_activations(Shape4::new(2, 5, 7, 1), 8, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let e = WinogradEngine::new(&w);
+        assert_eq!(e.conv(&x), conv_reference(&x, &w, e.geometry()));
+    }
+
+    #[test]
+    fn exactness_property() {
+        forall("winograd == dm", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let h = rng.range_i64(3, 9) as usize;
+            let w_dim = rng.range_i64(3, 9) as usize;
+            let ic = rng.range_i64(1, 3) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            let bits = *rng.choose(&[2u32, 4, 8]);
+            let x = Tensor4::random_activations(Shape4::new(1, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, 3, 3, ic), 8, &mut rng);
+            let e = WinogradEngine::new(&w);
+            assert_eq!(e.conv(&x), conv_reference(&x, &w, e.geometry()));
+        });
+    }
+
+    #[test]
+    fn multiplication_economy_is_2_25x() {
+        let mut rng = Rng::new(71);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 4), 8, &mut rng);
+        let wino = WinogradEngine::new(&w);
+        let dm = crate::pcilt::dm::DmEngine::new(w.clone(), ConvGeometry::unit_stride(3, 3));
+        // Even output dims so tiles are full.
+        let s = Shape4::new(1, 18, 18, 4);
+        let r = dm.op_counts(s).mults as f64 / wino.op_counts(s).mults as f64;
+        assert!((r - 2.25).abs() < 1e-9, "ratio={r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_3x3() {
+        let mut rng = Rng::new(73);
+        let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
+        WinogradEngine::new(&w);
+    }
+}

@@ -1,0 +1,232 @@
+//! Quantization: the memory-technology leg of the paper's design space.
+//!
+//! The PCILT algorithm presumes **low-cardinality integer activations**
+//! (bool/INT2/INT4/INT8) and integer (or FP) weights. This module provides
+//! the codecs used across the repo: symmetric per-tensor weight
+//! quantization, unsigned activation quantization (post-ReLU ranges), and
+//! round-trip helpers that the JAX side (`python/compile/model.py`) mirrors
+//! bit-for-bit so rust and JAX agree on integer semantics.
+
+use crate::tensor::Tensor4;
+
+/// Parameters of an affine quantizer `q = clamp(round(x / scale), lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    pub scale: f32,
+    pub bits: u32,
+    pub signed: bool,
+}
+
+impl Quantizer {
+    /// Symmetric signed quantizer sized for the observed max-abs value.
+    /// Range is `[-(2^(b-1)-1), 2^(b-1)-1]` (symmetric; -2^(b-1) unused so
+    /// that negation stays in range, as in standard symmetric schemes).
+    pub fn symmetric(max_abs: f32, bits: u32) -> Quantizer {
+        assert!(bits >= 2 && bits <= 8, "signed bits must be 2..=8");
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
+        Quantizer {
+            scale,
+            bits,
+            signed: true,
+        }
+    }
+
+    /// Unsigned quantizer for non-negative (post-ReLU) activations:
+    /// range `[0, 2^b - 1]`.
+    pub fn unsigned(max_val: f32, bits: u32) -> Quantizer {
+        assert!(bits >= 1 && bits <= 8, "unsigned bits must be 1..=8");
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let scale = if max_val > 0.0 { max_val / qmax } else { 1.0 };
+        Quantizer {
+            scale,
+            bits,
+            signed: false,
+        }
+    }
+
+    pub fn qmin(&self) -> i32 {
+        if self.signed {
+            -((1i32 << (self.bits - 1)) - 1)
+        } else {
+            0
+        }
+    }
+
+    pub fn qmax(&self) -> i32 {
+        if self.signed {
+            (1i32 << (self.bits - 1)) - 1
+        } else {
+            (1i32 << self.bits) - 1
+        }
+    }
+
+    /// Quantize a single value (round-half-away-from-zero, matching
+    /// `jnp.round`'s behaviour on the .5 boundary closely enough for the
+    /// test tolerance used on the python side).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round() as i32;
+        q.clamp(self.qmin(), self.qmax())
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Quantize an f32 tensor into u8 activations.
+    pub fn quantize_activations(&self, x: &Tensor4<f32>) -> Tensor4<u8> {
+        assert!(!self.signed, "activations use the unsigned quantizer");
+        x.map(|v| self.quantize(v) as u8)
+    }
+
+    /// Quantize an f32 tensor into i8 weights.
+    pub fn quantize_weights(&self, x: &Tensor4<f32>) -> Tensor4<i8> {
+        assert!(self.signed, "weights use the symmetric quantizer");
+        x.map(|v| self.quantize(v) as i8)
+    }
+}
+
+/// Max-abs of a float tensor (calibration for [`Quantizer::symmetric`]).
+pub fn max_abs(x: &Tensor4<f32>) -> f32 {
+    x.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Max of a float tensor (calibration for [`Quantizer::unsigned`]).
+pub fn max_val(x: &Tensor4<f32>) -> f32 {
+    x.data().iter().fold(0.0f32, |m, &v| m.max(v))
+}
+
+/// Fake-quantization: quantize + dequantize, the straight-through-estimator
+/// forward used in training. Mirrored by the JAX model.
+pub fn fake_quant(x: &Tensor4<f32>, q: &Quantizer) -> Tensor4<f32> {
+    x.map(|v| q.dequantize(q.quantize(v)))
+}
+
+/// Requantization of i32 accumulator outputs back to unsigned activations
+/// for the next layer: `a' = clamp(round(acc * (s_in*s_w / s_out)), 0, qmax)`.
+/// This is the integer-only inter-layer glue (Jacob et al. scheme, which
+/// the paper cites as the INT8 baseline practice).
+#[derive(Debug, Clone, Copy)]
+pub struct Requant {
+    pub multiplier: f32,
+    pub out_bits: u32,
+}
+
+impl Requant {
+    pub fn new(in_scale: f32, w_scale: f32, out_scale: f32, out_bits: u32) -> Requant {
+        Requant {
+            multiplier: in_scale * w_scale / out_scale,
+            out_bits,
+        }
+    }
+
+    #[inline]
+    pub fn apply(&self, acc: i32) -> u8 {
+        let v = (acc as f32 * self.multiplier).round() as i32;
+        v.clamp(0, (1i32 << self.out_bits) - 1) as u8
+    }
+
+    pub fn apply_tensor(&self, acc: &Tensor4<i32>) -> Tensor4<u8> {
+        acc.map(|v| self.apply(v))
+    }
+}
+
+/// Cardinality (number of representable values) of `bits`-wide unsigned
+/// activations — the quantity the paper's memory analysis revolves around.
+pub fn cardinality(bits: u32) -> usize {
+    1usize << bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape4;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn symmetric_range_is_symmetric() {
+        let q = Quantizer::symmetric(1.0, 8);
+        assert_eq!(q.qmin(), -127);
+        assert_eq!(q.qmax(), 127);
+        assert_eq!(q.quantize(1.0), 127);
+        assert_eq!(q.quantize(-1.0), -127);
+        assert_eq!(q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn unsigned_range() {
+        let q = Quantizer::unsigned(15.0, 4);
+        assert_eq!(q.qmin(), 0);
+        assert_eq!(q.qmax(), 15);
+        assert_eq!(q.quantize(15.0), 15);
+        assert_eq!(q.quantize(-3.0), 0);
+        assert_eq!(q.quantize(7.5), 8); // round half away from zero
+    }
+
+    #[test]
+    fn bool_activations_are_1_bit() {
+        let q = Quantizer::unsigned(1.0, 1);
+        assert_eq!(q.qmax(), 1);
+        assert_eq!(q.quantize(0.6), 1);
+        assert_eq!(q.quantize(0.4), 0);
+        assert_eq!(cardinality(1), 2);
+    }
+
+    #[test]
+    fn quantize_clamps_outliers() {
+        let q = Quantizer::symmetric(1.0, 4);
+        assert_eq!(q.quantize(100.0), 7);
+        assert_eq!(q.quantize(-100.0), -7);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        forall("quant roundtrip error <= scale/2", 300, |g| {
+            let bits = g.one_of(&[2u32, 4, 8]);
+            let max = g.f32(0.1, 10.0);
+            let q = Quantizer::symmetric(max, bits);
+            let x = g.f32(-max, max);
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(
+                err <= q.scale / 2.0 + 1e-6,
+                "err={err} scale={} x={x}",
+                q.scale
+            );
+        });
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let mut rng = Rng::new(4);
+        let x = Tensor4::random_f32(Shape4::new(1, 4, 4, 3), -2.0, 2.0, &mut rng);
+        let q = Quantizer::symmetric(2.0, 4);
+        let once = fake_quant(&x, &q);
+        let twice = fake_quant(&once, &q);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn requant_clamps_to_out_range() {
+        let r = Requant::new(0.1, 0.05, 0.2, 4);
+        assert_eq!(r.apply(0), 0);
+        assert_eq!(r.apply(-100), 0);
+        assert_eq!(r.apply(i32::MAX / 2), 15);
+    }
+
+    #[test]
+    fn requant_scales_linearly_in_midrange() {
+        let r = Requant::new(1.0, 1.0, 2.0, 8);
+        assert_eq!(r.apply(10), 5);
+        assert_eq!(r.apply(20), 10);
+    }
+
+    #[test]
+    fn calibration_helpers() {
+        let x = Tensor4::from_vec(Shape4::new(1, 1, 2, 2), vec![-3.0f32, 1.0, 2.0, -0.5]);
+        assert_eq!(max_abs(&x), 3.0);
+        assert_eq!(max_val(&x), 2.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Artifact bundle loading: `manifest.toml` + `weights.bin` + HLO texts,
+//! produced by `python/compile/aot.py` (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::toml::Document;
+use crate::model::ModelParams;
+use crate::tensor::{Shape4, Tensor4};
+
+/// Parsed artifact bundle.
+#[derive(Debug, Clone)]
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub params: ModelParams,
+    /// (engine, batch) -> HLO file name.
+    pub hlo_files: Vec<(String, usize, String)>,
+    pub final_test_acc: f64,
+}
+
+/// Errors from artifact loading.
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(#[from] crate::config::toml::ParseError),
+    #[error("manifest invalid: {0}")]
+    Invalid(String),
+}
+
+fn invalid<T>(msg: impl Into<String>) -> Result<T, ArtifactError> {
+    Err(ArtifactError::Invalid(msg.into()))
+}
+
+fn need_int(doc: &Document, key: &str) -> Result<usize, ArtifactError> {
+    match doc.get_int(key) {
+        Some(v) if v >= 0 => Ok(v as usize),
+        _ => invalid(format!("missing or invalid int key '{key}'")),
+    }
+}
+
+fn need_float(doc: &Document, key: &str) -> Result<f64, ArtifactError> {
+    doc.get_float(key)
+        .ok_or_else(|| ArtifactError::Invalid(format!("missing float key '{key}'")))
+}
+
+impl ArtifactBundle {
+    /// Load and validate a bundle directory.
+    pub fn load(dir: &Path) -> Result<ArtifactBundle, ArtifactError> {
+        let manifest_path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&manifest_path)?;
+        let doc = Document::parse(&text)?;
+
+        let act_bits = need_int(&doc, "model.act_bits")? as u32;
+        let img = need_int(&doc, "model.img")?;
+        let classes = need_int(&doc, "model.classes")?;
+        let c1 = need_int(&doc, "model.c1")?;
+        let c2 = need_int(&doc, "model.c2")?;
+        let kernel = need_int(&doc, "model.kernel")?;
+        if !(1..=8).contains(&act_bits) {
+            return invalid(format!("act_bits {act_bits} out of range"));
+        }
+
+        // weights
+        let w1_len = need_int(&doc, "weights.w1_len")?;
+        let w2_len = need_int(&doc, "weights.w2_len")?;
+        let w3_len = need_int(&doc, "weights.w3_len")?;
+        let wfile = doc
+            .get_str("weights.file")
+            .ok_or_else(|| ArtifactError::Invalid("missing weights.file".into()))?;
+        let raw = std::fs::read(dir.join(wfile))?;
+        if raw.len() != w1_len + w2_len + w3_len {
+            return invalid(format!(
+                "weights.bin length {} != {}",
+                raw.len(),
+                w1_len + w2_len + w3_len
+            ));
+        }
+        let as_i8: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+        let w1_shape = Shape4::new(c1, kernel, kernel, 1);
+        let w2_shape = Shape4::new(c2, kernel, kernel, c1);
+        if w1_shape.len() != w1_len || w2_shape.len() != w2_len {
+            return invalid("weight shapes inconsistent with lengths");
+        }
+        let w1 = Tensor4::from_vec(w1_shape, as_i8[..w1_len].to_vec());
+        let w2 = Tensor4::from_vec(w2_shape, as_i8[w1_len..w1_len + w2_len].to_vec());
+        let w3 = as_i8[w1_len + w2_len..].to_vec();
+        if w3.len() != classes * 2 * 2 * c2 {
+            return invalid("w3 length inconsistent with classes * features");
+        }
+
+        let params = ModelParams {
+            act_bits,
+            img,
+            classes,
+            c1,
+            c2,
+            kernel,
+            w1,
+            w2,
+            w3,
+            s_in: need_float(&doc, "scales.s_in")? as f32,
+            s_w1: need_float(&doc, "scales.s_w1")? as f32,
+            s_w2: need_float(&doc, "scales.s_w2")? as f32,
+            s_w3: need_float(&doc, "scales.s_w3")? as f32,
+            s_a1: need_float(&doc, "scales.s_a1")? as f32,
+            s_a2: need_float(&doc, "scales.s_a2")? as f32,
+        };
+
+        // artifact HLO list: keys like artifacts.pcilt_b8 = "file"
+        let mut hlo_files = Vec::new();
+        for key in doc.section_keys("artifacts") {
+            let name = key.trim_start_matches("artifacts.");
+            let Some((engine, batch)) = name.rsplit_once("_b") else {
+                return invalid(format!("bad artifact key '{key}'"));
+            };
+            let batch: usize = batch
+                .parse()
+                .map_err(|_| ArtifactError::Invalid(format!("bad batch in '{key}'")))?;
+            let file = doc
+                .get_str(key)
+                .ok_or_else(|| ArtifactError::Invalid(format!("'{key}' not a string")))?;
+            if !dir.join(file).exists() {
+                return invalid(format!("artifact file '{file}' missing"));
+            }
+            hlo_files.push((engine.to_string(), batch, file.to_string()));
+        }
+        if hlo_files.is_empty() {
+            return invalid("no HLO artifacts listed");
+        }
+
+        Ok(ArtifactBundle {
+            dir: dir.to_path_buf(),
+            params,
+            hlo_files,
+            final_test_acc: need_float(&doc, "model.final_test_acc")?,
+        })
+    }
+
+    /// Path of the HLO for (engine, batch), if exported.
+    pub fn hlo_path(&self, engine: &str, batch: usize) -> Option<PathBuf> {
+        self.hlo_files
+            .iter()
+            .find(|(e, b, _)| e == engine && *b == batch)
+            .map(|(_, _, f)| self.dir.join(f))
+    }
+
+    /// Batch sizes available for an engine, ascending.
+    pub fn batches_for(&self, engine: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .hlo_files
+            .iter()
+            .filter(|(e, _, _)| e == engine)
+            .map(|(_, b, _)| *b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Load the smoke-test input/output pair exported by aot.py.
+    pub fn smoke_pair(&self) -> Result<(Tensor4<u8>, Vec<i32>, Vec<i32>), ArtifactError> {
+        let input = std::fs::read(self.dir.join("smoke_input_b8.bin"))?;
+        let img = self.params.img;
+        let expect_len = 8 * img * img;
+        if input.len() != expect_len {
+            return invalid(format!("smoke input length {} != {expect_len}", input.len()));
+        }
+        let codes = Tensor4::from_vec(Shape4::new(8, img, img, 1), input);
+        let logits_raw = std::fs::read(self.dir.join("smoke_logits_b8.bin"))?;
+        let logits: Vec<i32> = logits_raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let labels_raw = std::fs::read(self.dir.join("smoke_labels_b8.bin"))?;
+        let labels: Vec<i32> = labels_raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((codes, logits, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifacts may not exist in a bare checkout; tests that need them
+    /// self-skip (integration tests in rust/tests/ require them and are
+    /// run via `make test` after `make artifacts`).
+    fn bundle() -> Option<ArtifactBundle> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactBundle::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_manifest_when_present() {
+        let Some(b) = bundle() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(b.params.img, 16);
+        assert_eq!(b.params.classes, 8);
+        assert!(b.final_test_acc > 0.5);
+        assert!(b.hlo_path("pcilt", 1).is_some());
+        assert_eq!(b.batches_for("pcilt"), vec![1, 8]);
+    }
+
+    #[test]
+    fn smoke_pair_shapes() {
+        let Some(b) = bundle() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (codes, logits, labels) = b.smoke_pair().unwrap();
+        assert_eq!(codes.shape(), Shape4::new(8, 16, 16, 1));
+        assert_eq!(logits.len(), 64);
+        assert_eq!(labels.len(), 8);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactBundle::load(Path::new("/nonexistent/nope")).is_err());
+    }
+
+    #[test]
+    fn corrupt_manifest_errors() {
+        let tmp = std::env::temp_dir().join("pcilt_test_corrupt_manifest");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.toml"), "not = valid [").unwrap();
+        assert!(ArtifactBundle::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime: loads the AOT artifact bundle (`make artifacts`) and executes
+//! the HLO via the PJRT C API (`xla` crate). Python never runs here —
+//! the bundle is self-contained.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactBundle, ArtifactError};
+pub use pjrt::{CompiledModel, PjrtContext};

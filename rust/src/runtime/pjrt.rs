@@ -1,0 +1,118 @@
+//! PJRT execution of AOT artifacts: HLO text -> compile -> execute.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU). One compiled
+//! executable per (engine, batch-size) artifact; executables are `Send`
+//! but compilation is done up front so the request path never compiles.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor4;
+
+/// A PJRT CPU client (wrap to keep `xla` types out of the public API).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtContext { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<CompiledModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(CompiledModel { exe })
+    }
+}
+
+/// A compiled (engine, batch) model executable.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledModel {
+    /// Run the integer inference graph: u8 codes [B,H,W,1] -> i32 logits
+    /// [B, classes]. The batch size must match the artifact's.
+    pub fn infer(&self, codes: &Tensor4<u8>, classes: usize) -> Result<Vec<Vec<i32>>> {
+        let s = codes.shape();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[s.n, s.h, s.w, s.c],
+            codes.data(),
+        )
+        .context("building input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("executing artifact")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True -> 1-tuple of [B, classes].
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let flat = out.to_vec::<i32>().context("reading logits")?;
+        anyhow::ensure!(
+            flat.len() == s.n * classes,
+            "logit count {} != batch {} x classes {}",
+            flat.len(),
+            s.n,
+            classes
+        );
+        Ok(flat.chunks_exact(classes).map(<[i32]>::to_vec).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ArtifactBundle;
+    use crate::tensor::Shape4;
+
+    #[test]
+    fn pjrt_client_boots() {
+        let ctx = PjrtContext::cpu().unwrap();
+        assert_eq!(ctx.platform(), "cpu");
+    }
+
+    #[test]
+    fn artifact_executes_and_matches_python_smoke() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(bundle) = ArtifactBundle::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ctx = PjrtContext::cpu().unwrap();
+        let model = ctx.load_hlo(&bundle.hlo_path("pcilt", 8).unwrap()).unwrap();
+        let (codes, expect_logits, _labels) = bundle.smoke_pair().unwrap();
+        let got = model.infer(&codes, bundle.params.classes).unwrap();
+        let flat: Vec<i32> = got.into_iter().flatten().collect();
+        assert_eq!(flat, expect_logits, "PJRT output != python smoke logits");
+    }
+
+    #[test]
+    fn wrong_batch_size_rejected() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(bundle) = ArtifactBundle::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ctx = PjrtContext::cpu().unwrap();
+        let model = ctx.load_hlo(&bundle.hlo_path("pcilt", 1).unwrap()).unwrap();
+        let codes = Tensor4::<u8>::zeros(Shape4::new(2, 16, 16, 1)); // batch 2 vs 1
+        assert!(model.infer(&codes, 8).is_err());
+    }
+}

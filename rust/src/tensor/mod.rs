@@ -1,0 +1,14 @@
+//! Minimal integer/float tensor substrate for the PCILT engines.
+//!
+//! Layout convention throughout the crate is **NHWC** for activations
+//! (`[batch, height, width, channels]`) and **OHWI** for filters
+//! (`[out_ch, kh, kw, in_ch]`) — chosen so the innermost loop of every conv
+//! engine walks contiguous channel vectors.
+
+mod shape;
+mod tensor4;
+mod ops;
+
+pub use ops::{im2col, max_pool2d, pad_nhwc, relu_i32, Padding};
+pub use shape::Shape4;
+pub use tensor4::Tensor4;

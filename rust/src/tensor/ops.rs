@@ -1,0 +1,167 @@
+//! Tensor operations shared by the conv engines: padding, im2col, pooling
+//! and activation helpers.
+
+use super::{Shape4, Tensor4};
+
+/// Padding mode for convolutions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding; output shrinks by `k - 1`.
+    Valid,
+    /// Zero-pad so output spatial size equals input (stride 1).
+    Same,
+}
+
+/// Zero-pad an NHWC activation tensor by `(py, px)` on each side.
+pub fn pad_nhwc(x: &Tensor4<u8>, py: usize, px: usize) -> Tensor4<u8> {
+    if py == 0 && px == 0 {
+        return x.clone();
+    }
+    let s = x.shape();
+    let out_shape = Shape4::new(s.n, s.h + 2 * py, s.w + 2 * px, s.c);
+    let mut out = Tensor4::zeros(out_shape);
+    for n in 0..s.n {
+        for h in 0..s.h {
+            for w in 0..s.w {
+                for c in 0..s.c {
+                    out.set(n, h + py, w + px, c, x.get(n, h, w, c));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col: unfold receptive fields into rows of a matrix.
+/// Input `[n,h,w,c]`, kernel `kh × kw`, stride `(sy,sx)` →
+/// output `(n*oh*ow) × (kh*kw*c)`, row-major.
+/// Returned as `(rows, cols, data)`.
+pub fn im2col(
+    x: &Tensor4<u8>,
+    kh: usize,
+    kw: usize,
+    sy: usize,
+    sx: usize,
+) -> (usize, usize, Vec<u8>) {
+    let s = x.shape();
+    let (oh, ow) = s.conv_out(kh, kw, sy, sx);
+    let rows = s.n * oh * ow;
+    let cols = kh * kw * s.c;
+    let mut data = Vec::with_capacity(rows * cols);
+    for n in 0..s.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let row = x.channels(n, oy * sy + ky, ox * sx + kx);
+                        data.extend_from_slice(row);
+                    }
+                }
+            }
+        }
+    }
+    (rows, cols, data)
+}
+
+/// 2×2 max pooling with stride 2 over an i32 NHWC tensor. Odd trailing
+/// rows/columns are dropped (floor semantics), matching the JAX model.
+pub fn max_pool2d(x: &Tensor4<i32>) -> Tensor4<i32> {
+    let s = x.shape();
+    let oh = s.h / 2;
+    let ow = s.w / 2;
+    let mut out = Tensor4::zeros(Shape4::new(s.n, oh, ow, s.c));
+    for n in 0..s.n {
+        for y in 0..oh {
+            for w in 0..ow {
+                for c in 0..s.c {
+                    let m = x
+                        .get(n, 2 * y, 2 * w, c)
+                        .max(x.get(n, 2 * y, 2 * w + 1, c))
+                        .max(x.get(n, 2 * y + 1, 2 * w, c))
+                        .max(x.get(n, 2 * y + 1, 2 * w + 1, c));
+                    out.set(n, y, w, c, m);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// ReLU on an i32 tensor (in place).
+pub fn relu_i32(x: &mut Tensor4<i32>) {
+    for v in x.data_mut() {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pad_centers_data() {
+        let x = Tensor4::from_fn(Shape4::new(1, 2, 2, 1), |_, h, w, _| (1 + h * 2 + w) as u8);
+        let p = pad_nhwc(&x, 1, 1);
+        assert_eq!(p.shape(), Shape4::new(1, 4, 4, 1));
+        assert_eq!(p.get(0, 0, 0, 0), 0);
+        assert_eq!(p.get(0, 1, 1, 0), 1);
+        assert_eq!(p.get(0, 2, 2, 0), 4);
+        assert_eq!(p.get(0, 3, 3, 0), 0);
+    }
+
+    #[test]
+    fn pad_zero_is_identity() {
+        let mut rng = Rng::new(1);
+        let x = Tensor4::random_activations(Shape4::new(2, 3, 3, 2), 4, &mut rng);
+        assert_eq!(pad_nhwc(&x, 0, 0), x);
+    }
+
+    #[test]
+    fn im2col_small_example() {
+        // 1x3x3x1 input, 2x2 kernel, stride 1 -> 4 rows x 4 cols
+        let x = Tensor4::from_fn(Shape4::new(1, 3, 3, 1), |_, h, w, _| (h * 3 + w) as u8);
+        let (rows, cols, data) = im2col(&x, 2, 2, 1, 1);
+        assert_eq!((rows, cols), (4, 4));
+        // first RF: positions (0,0),(0,1),(1,0),(1,1) -> 0,1,3,4
+        assert_eq!(&data[0..4], &[0, 1, 3, 4]);
+        // last RF: (1,1),(1,2),(2,1),(2,2) -> 4,5,7,8
+        assert_eq!(&data[12..16], &[4, 5, 7, 8]);
+    }
+
+    #[test]
+    fn im2col_respects_stride() {
+        let x = Tensor4::from_fn(Shape4::new(1, 4, 4, 1), |_, h, w, _| (h * 4 + w) as u8);
+        let (rows, cols, data) = im2col(&x, 2, 2, 2, 2);
+        assert_eq!((rows, cols), (4, 4));
+        assert_eq!(&data[0..4], &[0, 1, 4, 5]);
+        assert_eq!(&data[4..8], &[2, 3, 6, 7]);
+    }
+
+    #[test]
+    fn max_pool_picks_max() {
+        let x = Tensor4::from_fn(Shape4::new(1, 4, 4, 1), |_, h, w, _| (h * 4 + w) as i32);
+        let p = max_pool2d(&x);
+        assert_eq!(p.shape(), Shape4::new(1, 2, 2, 1));
+        assert_eq!(p.get(0, 0, 0, 0), 5);
+        assert_eq!(p.get(0, 1, 1, 0), 15);
+    }
+
+    #[test]
+    fn max_pool_drops_odd_edge() {
+        let x = Tensor4::<i32>::zeros(Shape4::new(1, 5, 5, 2));
+        assert_eq!(max_pool2d(&x).shape(), Shape4::new(1, 2, 2, 2));
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut x = Tensor4::from_vec(
+            Shape4::new(1, 1, 2, 2),
+            vec![-3, 0, 5, -1],
+        );
+        relu_i32(&mut x);
+        assert_eq!(x.data(), &[0, 0, 5, 0]);
+    }
+}

@@ -1,0 +1,92 @@
+//! 4-D shape with row-major (NHWC) strides.
+
+use std::fmt;
+
+/// Shape of a rank-4 tensor, `[n, h, w, c]`, row-major.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape4 {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape4 {
+    pub fn new(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Self { n, h, w, c }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat index of `[n, h, w, c]`.
+    #[inline(always)]
+    pub fn index(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert!(n < self.n && h < self.h && w < self.w && c < self.c,
+            "index [{n},{h},{w},{c}] out of shape {self}");
+        ((n * self.h + h) * self.w + w) * self.c + c
+    }
+
+    /// Strides `[n, h, w, c]` in elements.
+    pub fn strides(&self) -> [usize; 4] {
+        [self.h * self.w * self.c, self.w * self.c, self.c, 1]
+    }
+
+    /// Output spatial shape of a valid (unpadded) convolution with a
+    /// `kh × kw` kernel and stride `(sy, sx)`.
+    pub fn conv_out(&self, kh: usize, kw: usize, sy: usize, sx: usize) -> (usize, usize) {
+        assert!(self.h >= kh && self.w >= kw,
+            "kernel {kh}x{kw} larger than input {}x{}", self.h, self.w);
+        assert!(sy > 0 && sx > 0);
+        ((self.h - kh) / sy + 1, (self.w - kw) / sx + 1)
+    }
+}
+
+impl fmt::Display for Shape4 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{},{},{},{}]", self.n, self.h, self.w, self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn len_and_strides() {
+        let s = Shape4::new(2, 3, 4, 5);
+        assert_eq!(s.len(), 120);
+        assert_eq!(s.strides(), [60, 20, 5, 1]);
+    }
+
+    #[test]
+    fn index_is_row_major() {
+        let s = Shape4::new(2, 3, 4, 5);
+        assert_eq!(s.index(0, 0, 0, 0), 0);
+        assert_eq!(s.index(0, 0, 0, 4), 4);
+        assert_eq!(s.index(0, 0, 1, 0), 5);
+        assert_eq!(s.index(0, 1, 0, 0), 20);
+        assert_eq!(s.index(1, 0, 0, 0), 60);
+        assert_eq!(s.index(1, 2, 3, 4), 119);
+    }
+
+    #[test]
+    fn conv_out_shapes() {
+        let s = Shape4::new(1, 16, 16, 3);
+        assert_eq!(s.conv_out(5, 5, 1, 1), (12, 12));
+        assert_eq!(s.conv_out(3, 3, 2, 2), (7, 7));
+        assert_eq!(s.conv_out(16, 16, 1, 1), (1, 1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_out_rejects_oversized_kernel() {
+        Shape4::new(1, 4, 4, 1).conv_out(5, 5, 1, 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Owned rank-4 tensor over a copyable element type.
+
+use std::fmt;
+
+use super::Shape4;
+use crate::util::prng::Rng;
+
+/// Dense rank-4 tensor, row-major NHWC (or OHWI for filters).
+#[derive(Clone, PartialEq)]
+pub struct Tensor4<T> {
+    shape: Shape4,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor4<T> {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Shape4) -> Self {
+        Self {
+            shape,
+            data: vec![T::default(); shape.len()],
+        }
+    }
+
+    /// Build from existing data (length must match the shape).
+    pub fn from_vec(shape: Shape4, data: Vec<T>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.len(),
+            "data length {} != shape {} ({} elements)",
+            data.len(),
+            shape,
+            shape.len()
+        );
+        Self { shape, data }
+    }
+
+    /// Fill via a function of the 4 indices.
+    pub fn from_fn(shape: Shape4, mut f: impl FnMut(usize, usize, usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(shape.len());
+        for n in 0..shape.n {
+            for h in 0..shape.h {
+                for w in 0..shape.w {
+                    for c in 0..shape.c {
+                        data.push(f(n, h, w, c));
+                    }
+                }
+            }
+        }
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> Shape4 {
+        self.shape
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline(always)]
+    pub fn get(&self, n: usize, h: usize, w: usize, c: usize) -> T {
+        self.data[self.shape.index(n, h, w, c)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, n: usize, h: usize, w: usize, c: usize, v: T) {
+        let i = self.shape.index(n, h, w, c);
+        self.data[i] = v;
+    }
+
+    /// Contiguous channel vector at `[n, h, w, :]`.
+    #[inline(always)]
+    pub fn channels(&self, n: usize, h: usize, w: usize) -> &[T] {
+        let start = self.shape.index(n, h, w, 0);
+        &self.data[start..start + self.shape.c]
+    }
+
+    /// Contiguous row span `[n, h, w..w+pixels, :]` — `pixels * c` elements
+    /// (NHWC rows are contiguous along w). The conv engines use this to
+    /// stream a kernel row's worth of activations in one slice.
+    #[inline(always)]
+    pub fn row_span(&self, n: usize, h: usize, w: usize, pixels: usize) -> &[T] {
+        debug_assert!(w + pixels <= self.shape.w, "row span out of bounds");
+        let start = self.shape.index(n, h, w, 0);
+        &self.data[start..start + pixels * self.shape.c]
+    }
+
+    /// Map element-wise into a new tensor.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor4<U> {
+        Tensor4 {
+            shape: self.shape,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl Tensor4<u8> {
+    /// Random activation tensor with values in `[0, 2^bits)`.
+    pub fn random_activations(shape: Shape4, bits: u32, rng: &mut Rng) -> Self {
+        assert!(bits >= 1 && bits <= 8);
+        let hi = (1i64 << bits) - 1;
+        Self {
+            shape,
+            data: (0..shape.len()).map(|_| rng.range_i64(0, hi) as u8).collect(),
+        }
+    }
+}
+
+impl Tensor4<i8> {
+    /// Random symmetric weight tensor with values in `[-2^(bits-1)+1, 2^(bits-1)-1]`
+    /// (symmetric range, as in symmetric per-tensor quantization).
+    pub fn random_weights(shape: Shape4, bits: u32, rng: &mut Rng) -> Self {
+        assert!(bits >= 2 && bits <= 8);
+        let hi = (1i64 << (bits - 1)) - 1;
+        Self {
+            shape,
+            data: (0..shape.len())
+                .map(|_| rng.range_i64(-hi, hi) as i8)
+                .collect(),
+        }
+    }
+}
+
+impl Tensor4<f32> {
+    /// Random float tensor, uniform in `[lo, hi)`.
+    pub fn random_f32(shape: Shape4, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        Self {
+            shape,
+            data: (0..shape.len()).map(|_| rng.f32_range(lo, hi)).collect(),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor4<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor4{} ", self.shape)?;
+        if self.data.len() <= 32 {
+            write!(f, "{:?}", self.data)
+        } else {
+            write!(f, "[{:?}, ... {} elements]", &self.data[..8], self.data.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set_get() {
+        let mut t = Tensor4::<i32>::zeros(Shape4::new(1, 2, 2, 3));
+        assert_eq!(t.get(0, 1, 1, 2), 0);
+        t.set(0, 1, 1, 2, 42);
+        assert_eq!(t.get(0, 1, 1, 2), 42);
+        assert_eq!(t.data().iter().sum::<i32>(), 42);
+    }
+
+    #[test]
+    fn from_fn_index_agreement() {
+        let t = Tensor4::from_fn(Shape4::new(2, 2, 2, 2), |n, h, w, c| {
+            (n * 1000 + h * 100 + w * 10 + c) as i32
+        });
+        assert_eq!(t.get(1, 0, 1, 1), 1011);
+        assert_eq!(t.get(0, 1, 0, 0), 100);
+    }
+
+    #[test]
+    fn channels_slice_contiguous() {
+        let t = Tensor4::from_fn(Shape4::new(1, 2, 2, 4), |_, h, w, c| {
+            (h * 100 + w * 10 + c) as i32
+        });
+        assert_eq!(t.channels(0, 1, 1), &[110, 111, 112, 113]);
+    }
+
+    #[test]
+    fn random_activations_in_range() {
+        let mut rng = Rng::new(3);
+        for bits in 1..=8u32 {
+            let t = Tensor4::random_activations(Shape4::new(1, 4, 4, 4), bits, &mut rng);
+            assert!(t.data().iter().all(|&v| (v as u32) < (1 << bits)));
+        }
+    }
+
+    #[test]
+    fn random_weights_symmetric_range() {
+        let mut rng = Rng::new(5);
+        let t = Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 4, &mut rng);
+        assert!(t.data().iter().all(|&v| (-7..=7).contains(&v)));
+    }
+
+    #[test]
+    fn map_preserves_shape() {
+        let t = Tensor4::from_fn(Shape4::new(1, 2, 2, 1), |_, h, w, _| (h + w) as i32);
+        let u = t.map(|x| x as f32 * 0.5);
+        assert_eq!(u.shape(), t.shape());
+        assert_eq!(u.get(0, 1, 1, 0), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_length() {
+        Tensor4::from_vec(Shape4::new(1, 2, 2, 2), vec![0i32; 7]);
+    }
+}

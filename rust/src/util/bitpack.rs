@@ -1,0 +1,172 @@
+//! Bitstream packing/unpacking of low-cardinality activations into PCILT
+//! offsets.
+//!
+//! This is the mechanical core of the paper's *"Pre-processing Activations
+//! Into PCILT Offsets"* extension: a run of N activations, each `bits` wide,
+//! is packed little-endian-first into a single integer offset used to index
+//! a segment PCILT. The paper notes the pre-processing is done "through fast
+//! operations (bit shifting and masking)" — this module is exactly those
+//! shifts and masks.
+
+/// Pack `values[i]` (each `< 2^bits`) into one offset:
+/// `offset = Σ values[i] << (i*bits)`.
+#[inline]
+pub fn pack_offset(values: &[u8], bits: u32) -> u32 {
+    debug_assert!(bits >= 1 && bits <= 8);
+    debug_assert!(values.len() as u32 * bits <= 32);
+    let mut off = 0u32;
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!((v as u32) < (1u32 << bits), "value {v} exceeds {bits} bits");
+        off |= (v as u32) << (i as u32 * bits);
+    }
+    off
+}
+
+/// Inverse of [`pack_offset`].
+#[inline]
+pub fn unpack_offset(offset: u32, bits: u32, n: usize, out: &mut [u8]) {
+    debug_assert!(out.len() >= n);
+    let mask = (1u32 << bits) - 1;
+    for (i, slot) in out.iter_mut().take(n).enumerate() {
+        *slot = ((offset >> (i as u32 * bits)) & mask) as u8;
+    }
+}
+
+/// Pack an entire activation row into a dense bitstream (`bits` per value).
+/// Used for the "activations data bus with the bit width of the
+/// combination" ASIC mode and to model memory traffic honestly.
+pub fn pack_stream(values: &[u8], bits: u32) -> Vec<u64> {
+    debug_assert!(bits >= 1 && bits <= 8);
+    let total_bits = values.len() as u64 * bits as u64;
+    let mut out = vec![0u64; total_bits.div_ceil(64) as usize];
+    for (i, &v) in values.iter().enumerate() {
+        let bit = i as u64 * bits as u64;
+        let word = (bit / 64) as usize;
+        let shift = bit % 64;
+        out[word] |= (v as u64) << shift;
+        // A value may straddle a word boundary.
+        if shift + bits as u64 > 64 {
+            out[word + 1] |= (v as u64) >> (64 - shift);
+        }
+    }
+    out
+}
+
+/// Read value `i` back out of a stream packed by [`pack_stream`].
+#[inline]
+pub fn read_stream(stream: &[u64], bits: u32, i: usize) -> u8 {
+    let mask = (1u64 << bits) - 1;
+    let bit = i as u64 * bits as u64;
+    let word = (bit / 64) as usize;
+    let shift = bit % 64;
+    let mut v = stream[word] >> shift;
+    if shift + bits as u64 > 64 {
+        v |= stream[word + 1] << (64 - shift);
+    }
+    (v & mask) as u8
+}
+
+/// Extract a window of `n` consecutive values starting at `start` as a
+/// packed offset — the "wider data bus extracts several PCILT offsets at
+/// once" optimization, done in O(2 word reads) instead of n masked reads.
+#[inline]
+pub fn window_offset(stream: &[u64], bits: u32, start: usize, n: usize) -> u32 {
+    debug_assert!(n as u32 * bits <= 32);
+    let width = n as u64 * bits as u64;
+    let bit = start as u64 * bits as u64;
+    let word = (bit / 64) as usize;
+    let shift = bit % 64;
+    let mut v = stream[word] >> shift;
+    if shift + width > 64 && word + 1 < stream.len() {
+        v |= stream[word + 1] << (64 - shift);
+    }
+    let mask = if width >= 64 { u64::MAX } else { (1u64 << width) - 1 };
+    (v & mask) as u32
+}
+
+/// Number of distinct offsets for `n` values of `bits` width — the segment
+/// PCILT row count (`2^(n*bits)`). Returns `None` on overflow past 2^31
+/// (such a table would be absurd; callers treat it as "infeasible").
+pub fn offset_space(n: usize, bits: u32) -> Option<u32> {
+    let total = (n as u32).checked_mul(bits)?;
+    if total > 31 {
+        None
+    } else {
+        Some(1u32 << total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn pack_unpack_roundtrip_small() {
+        let vals = [3u8, 0, 1, 2];
+        let off = pack_offset(&vals, 2);
+        assert_eq!(off, 3 | (0 << 2) | (1 << 4) | (2 << 6));
+        let mut out = [0u8; 4];
+        unpack_offset(off, 2, 4, &mut out);
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn bool_packing_matches_bits() {
+        // 8 booleans -> 8-bit offset, the paper's BoolHash configuration.
+        let vals = [1u8, 0, 1, 1, 0, 0, 1, 0];
+        let off = pack_offset(&vals, 1);
+        assert_eq!(off, 0b0100_1101);
+    }
+
+    #[test]
+    fn stream_roundtrip_property() {
+        forall("bitstream roundtrip", 200, |g| {
+            let bits = g.one_of(&[1u32, 2, 3, 4, 5, 8]);
+            let n = g.usize(1, 200);
+            let vals =
+                g.vec_of(n, |g| g.i64(0, (1 << bits) - 1) as u8);
+            let stream = pack_stream(&vals, bits);
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(read_stream(&stream, bits, i), v, "i={i} bits={bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn window_offset_matches_pack() {
+        forall("window offset == packed slice", 200, |g| {
+            let bits = g.one_of(&[1u32, 2, 4]);
+            let n_total = g.usize(8, 120);
+            let vals = g.vec_of(n_total, |g| g.i64(0, (1 << bits) - 1) as u8);
+            let stream = pack_stream(&vals, bits);
+            let seg = g.one_of(&[2usize, 4, 8]);
+            if seg > n_total {
+                return;
+            }
+            let start = g.usize(0, n_total - seg);
+            let direct = pack_offset(&vals[start..start + seg], bits);
+            let windowed = window_offset(&stream, bits, start, seg);
+            assert_eq!(direct, windowed);
+        });
+    }
+
+    #[test]
+    fn offset_space_limits() {
+        assert_eq!(offset_space(8, 1), Some(256));
+        assert_eq!(offset_space(4, 2), Some(256));
+        assert_eq!(offset_space(2, 4), Some(256));
+        assert_eq!(offset_space(8, 4), None); // 2^32 rows: infeasible
+        assert_eq!(offset_space(1, 8), Some(256));
+    }
+
+    #[test]
+    fn straddling_word_boundary() {
+        // 3-bit values force straddles at bits 63/64.
+        let vals: Vec<u8> = (0..64).map(|i| (i % 8) as u8).collect();
+        let stream = pack_stream(&vals, 3);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(read_stream(&stream, 3, i), v, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation utilities: deterministic PRNG, statistics, bit packing,
+//! bench timing, logging, and a minimal property-testing harness.
+//! These substitute for crates unavailable in the offline build
+//! (`rand`, `criterion`, `env_logger`, `proptest`) — see DESIGN.md §2.
+
+pub mod bitpack;
+pub mod logger;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod timing;

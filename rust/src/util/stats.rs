@@ -1,0 +1,309 @@
+//! Small statistics helpers used by benchmarks, the ASIC simulator reports
+//! and the serving metrics: summary statistics, percentiles, and an online
+//! histogram for latency recording.
+
+/// Summary of a sample: n, mean, std-dev, min/max and selected percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary from raw samples. Sorts a copy; O(n log n).
+    pub fn from(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "summary of empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / if n > 1 { (n - 1) as f64 } else { 1.0 };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n > 1 {
+            self.m2 / (self.n - 1) as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Fixed-bucket log-scale histogram for latencies in nanoseconds.
+/// Buckets are powers of sqrt(2) from 1us up; cheap to update from many
+/// threads behind a mutex, and good enough for p50/p99 reporting.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const HIST_BUCKETS: usize = 64;
+const HIST_BASE_NS: f64 = 1_000.0; // 1 us
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; HIST_BUCKETS],
+            total: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            return 0;
+        }
+        let ratio = ns as f64 / HIST_BASE_NS;
+        if ratio <= 1.0 {
+            return 0;
+        }
+        // log base sqrt(2)
+        let b = (2.0 * ratio.log2()).floor() as usize + 1;
+        b.min(HIST_BUCKETS - 1)
+    }
+
+    /// Lower bound in ns of bucket `i`.
+    fn bucket_floor(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            HIST_BASE_NS * 2f64.powf((i - 1) as f64 / 2.0)
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.counts[Self::bucket_of(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.total as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate percentile in ns (bucket lower-edge interpolation).
+    pub fn percentile_ns(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let lo = Self::bucket_floor(i);
+                let hi = Self::bucket_floor(i + 1).max(lo + 1.0);
+                // interpolate within the bucket; never report beyond the
+                // observed maximum (bucket upper edges overshoot it)
+                let into = (target - (acc - c)) as f64 / c.max(1) as f64;
+                return (lo + (hi - lo) * into).min(self.max_ns as f64);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Pretty-print a nanosecond duration with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Pretty-print a byte count with an adaptive unit (binary prefixes).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const KIB: f64 = 1024.0;
+    if bytes < KIB {
+        format!("{bytes:.0} B")
+    } else if bytes < KIB * KIB {
+        format!("{:.2} KiB", bytes / KIB)
+    } else if bytes < KIB * KIB * KIB {
+        format!("{:.2} MiB", bytes / (KIB * KIB))
+    } else {
+        format!("{:.2} GiB", bytes / (KIB * KIB * KIB))
+    }
+}
+
+/// Pretty-print a count with thousands separators.
+pub fn fmt_count(n: u128) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = Summary::from(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std() - s.std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_truth() {
+        let mut h = LatencyHistogram::new();
+        // 1000 samples uniform 1..=100 us
+        for i in 0..1000u64 {
+            h.record((i % 100 + 1) * 1_000);
+        }
+        let p50 = h.percentile_ns(0.50);
+        // log-bucket resolution is sqrt(2); allow that factor both ways
+        assert!(p50 > 50_000.0 / 1.5 && p50 < 50_000.0 * 1.5, "p50={p50}");
+        assert_eq!(h.count(), 1000);
+        assert!(h.mean_ns() > 45_000.0 && h.mean_ns() < 56_000.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(5_000);
+        b.record(7_000);
+        b.record(9_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max_ns(), 9_000);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_count(1_234_567), "1,234,567");
+    }
+}

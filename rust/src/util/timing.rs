@@ -1,0 +1,155 @@
+//! Benchmark timing helpers: warmup + repeated measurement with summary
+//! statistics. This replaces `criterion` (unavailable offline) for the
+//! `harness = false` bench binaries.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Result of a [`bench`] run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub summary: Summary,
+    /// Number of timed iterations.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.summary.p50
+    }
+
+    /// One-line report: `name  p50  mean ±std  (n=..)`.
+    pub fn report(&self) -> String {
+        use super::stats::fmt_ns;
+        format!(
+            "{:<44} p50={:>10} mean={:>10} ±{:<10} n={}",
+            self.name,
+            fmt_ns(self.summary.p50),
+            fmt_ns(self.summary.mean),
+            fmt_ns(self.summary.std),
+            self.iters
+        )
+    }
+}
+
+/// Options controlling a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once total timed duration exceeds this many ns.
+    pub budget_ns: u128,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget_ns: 500_000_000, // 0.5 s per benchmark by default
+        }
+    }
+}
+
+impl BenchOpts {
+    /// A faster profile for use inside `cargo test`.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget_ns: 50_000_000,
+        }
+    }
+}
+
+/// Time `f`, which should return a value that depends on the computation so
+/// the optimizer cannot elide it (it is passed through `black_box` anyway).
+pub fn bench<T>(name: &str, opts: &BenchOpts, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.min_iters);
+    let start = Instant::now();
+    let mut i = 0;
+    while i < opts.max_iters
+        && (i < opts.min_iters || start.elapsed().as_nanos() < opts.budget_ns)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        i += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::from(&samples),
+        iters: samples.len(),
+    }
+}
+
+/// Convenience: print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Convenience: run + print.
+pub fn run<T>(name: &str, opts: &BenchOpts, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, opts, f);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = BenchOpts::quick();
+        let r = bench("spin", &opts, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 3);
+        assert!(r.summary.mean > 0.0);
+    }
+
+    #[test]
+    fn faster_code_is_faster() {
+        let opts = BenchOpts {
+            warmup_iters: 2,
+            min_iters: 20,
+            max_iters: 200,
+            budget_ns: 100_000_000,
+        };
+        let small = bench("small", &opts, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        let big = bench("big", &opts, || {
+            let mut acc = 0u64;
+            for i in 0..100_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(
+            big.summary.p50 > small.summary.p50 * 5.0,
+            "big={} small={}",
+            big.summary.p50,
+            small.summary.p50
+        );
+    }
+}

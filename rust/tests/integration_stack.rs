@@ -1,0 +1,204 @@
+//! Integration tests over the full stack: artifact bundle → PJRT → native
+//! engines → serving coordinator. These REQUIRE `make artifacts` (the
+//! Makefile's `test` target guarantees the ordering); they fail loudly if
+//! the bundle is missing rather than silently skipping.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use pcilt::coordinator::{run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts};
+use pcilt::model::{EngineChoice, QuantCnn};
+use pcilt::runtime::{ArtifactBundle, PjrtContext};
+use pcilt::tensor::{Shape4, Tensor4};
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn bundle() -> ArtifactBundle {
+    ArtifactBundle::load(&artifact_dir())
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+fn slice_image(codes: &Tensor4<u8>, i: usize) -> Tensor4<u8> {
+    let s = codes.shape();
+    Tensor4::from_fn(Shape4::new(1, s.h, s.w, s.c), |_, h, w, c| {
+        codes.get(i, h, w, c)
+    })
+}
+
+#[test]
+fn full_stack_bit_exact_python_pjrt_native() {
+    let b = bundle();
+    let (codes, expect, _) = b.smoke_pair().unwrap();
+
+    // PJRT executes the AOT artifact...
+    let ctx = PjrtContext::cpu().unwrap();
+    let exe = ctx.load_hlo(&b.hlo_path("pcilt", 8).unwrap()).unwrap();
+    let pjrt: Vec<i32> = exe
+        .infer(&codes, b.params.classes)
+        .unwrap()
+        .into_iter()
+        .flatten()
+        .collect();
+    assert_eq!(pjrt, expect, "PJRT != python");
+
+    // ...and every native engine agrees bit-for-bit.
+    for choice in [
+        EngineChoice::Dm,
+        EngineChoice::Pcilt,
+        EngineChoice::Segment { seg_n: 2 },
+        EngineChoice::Segment { seg_n: 4 },
+        EngineChoice::Shared,
+    ] {
+        let m = QuantCnn::new(b.params.clone(), choice);
+        let native: Vec<i32> = m.forward(&codes).into_iter().flatten().collect();
+        assert_eq!(native, expect, "native {} != python", m.engine_name());
+    }
+}
+
+#[test]
+fn dm_and_pcilt_artifacts_agree() {
+    let b = bundle();
+    let (codes, _, _) = b.smoke_pair().unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let a = ctx.load_hlo(&b.hlo_path("pcilt", 8).unwrap()).unwrap();
+    let d = ctx.load_hlo(&b.hlo_path("dm", 8).unwrap()).unwrap();
+    assert_eq!(
+        a.infer(&codes, b.params.classes).unwrap(),
+        d.infer(&codes, b.params.classes).unwrap(),
+        "pcilt and dm artifacts disagree"
+    );
+}
+
+#[test]
+fn trained_model_classifies_smoke_batch() {
+    let b = bundle();
+    let (codes, _, labels) = b.smoke_pair().unwrap();
+    let m = QuantCnn::new(b.params.clone(), EngineChoice::Pcilt);
+    let preds = m.classify(&codes);
+    let correct = preds
+        .iter()
+        .zip(labels.iter())
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    // Trained to ~100% on the synthetic task; demand at least 6/8 to leave
+    // margin for retraining variance.
+    assert!(correct >= 6, "only {correct}/8 correct");
+}
+
+#[test]
+fn serving_hlo_pool_end_to_end() {
+    let b = bundle();
+    let img = b.params.img;
+    let act_bits = b.params.act_bits;
+    let server = Arc::new(
+        Server::start(
+            BackendSpec::Hlo {
+                bundle: b.clone(),
+                engine: "pcilt".into(),
+            },
+            &ServerOpts {
+                workers: 2,
+                max_batch: 8,
+                batch_deadline: Duration::from_micros(1000),
+                queue_capacity: 512,
+            },
+        )
+        .unwrap(),
+    );
+    let report = run_poisson(&server, 1000.0, 200, img, act_bits, 0x11);
+    assert_eq!(report.accepted + report.rejected, 200);
+    let m = server.metrics();
+    assert_eq!(m.completed as usize, report.accepted);
+    assert!(m.p50_latency_ns > 0.0);
+}
+
+#[test]
+fn serving_answers_match_native_under_concurrency() {
+    let b = bundle();
+    let (codes, _, _) = b.smoke_pair().unwrap();
+    let native = QuantCnn::new(b.params.clone(), EngineChoice::Pcilt);
+    let server = Arc::new(
+        Server::start(
+            BackendSpec::Hlo {
+                bundle: b.clone(),
+                engine: "pcilt".into(),
+            },
+            &ServerOpts {
+                workers: 3,
+                max_batch: 4,
+                batch_deadline: Duration::from_micros(500),
+                queue_capacity: 256,
+            },
+        )
+        .unwrap(),
+    );
+    // Fire all 8 smoke images from 4 threads repeatedly; every response
+    // must equal the native engine's logits for that image.
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let server = Arc::clone(&server);
+        let images: Vec<Tensor4<u8>> = (0..8).map(|i| slice_image(&codes, i)).collect();
+        let expect: Vec<Vec<i32>> = images
+            .iter()
+            .map(|img| native.forward(img).remove(0))
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            for round in 0..5 {
+                for (i, img) in images.iter().enumerate() {
+                    let resp = server.infer_blocking(img.clone()).unwrap();
+                    assert_eq!(
+                        resp.logits, expect[i],
+                        "thread {t} round {round} image {i}: wrong answer"
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn failure_injection_malformed_artifact_rejected() {
+    // A corrupted HLO file must fail compilation, not crash the process.
+    let tmp = std::env::temp_dir().join("pcilt_bad_hlo");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let bad = tmp.join("bad.hlo.txt");
+    std::fs::write(&bad, "HloModule garbage\nENTRY nope {\n}").unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    assert!(ctx.load_hlo(&bad).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn failure_injection_truncated_weights_rejected() {
+    // Copy the bundle, truncate weights.bin: loader must detect it.
+    let src = artifact_dir();
+    let tmp = std::env::temp_dir().join("pcilt_truncated_bundle");
+    std::fs::create_dir_all(&tmp).unwrap();
+    for f in std::fs::read_dir(&src).unwrap() {
+        let f = f.unwrap();
+        std::fs::copy(f.path(), tmp.join(f.file_name())).unwrap();
+    }
+    let weights = std::fs::read(tmp.join("weights.bin")).unwrap();
+    std::fs::write(tmp.join("weights.bin"), &weights[..weights.len() / 2]).unwrap();
+    assert!(ArtifactBundle::load(&tmp).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn hlo_batch1_and_batch8_agree() {
+    let b = bundle();
+    let (codes, expect, _) = b.smoke_pair().unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let b1 = ctx.load_hlo(&b.hlo_path("pcilt", 1).unwrap()).unwrap();
+    for i in 0..8 {
+        let one = slice_image(&codes, i);
+        let logits = b1.infer(&one, b.params.classes).unwrap();
+        assert_eq!(logits[0], expect[i * 8..(i + 1) * 8].to_vec(), "image {i}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Cross-module property tests: the invariants DESIGN.md §7 lists, checked
+//! with the in-tree propcheck harness at larger scales than the per-module
+//! unit tests.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pcilt::coordinator::{BackendSpec, BoundedQueue, NativeEngineKind, Server, ServerOpts};
+use pcilt::model::{random_params, EngineChoice, QuantCnn};
+use pcilt::pcilt::dm::conv_reference;
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::{
+    ConvFunc, DmEngine, LayoutEngine, LayoutPlan, PciltEngine, SegmentEngine, SharedEngine,
+};
+use pcilt::quant::Quantizer;
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::propcheck::forall;
+
+/// Every engine in the crate computes the same convolution. One property to
+/// rule them all.
+#[test]
+fn all_engines_equal_reference() {
+    forall("all engines == naive reference", 25, |g| {
+        let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+        let bits = *rng.choose(&[1u32, 2, 4]);
+        let (kh, kw) = *rng.choose(&[(3usize, 3usize), (5, 5)]);
+        let ic = rng.range_i64(1, 3) as usize;
+        let oc = rng.range_i64(1, 4) as usize;
+        let h = kh + rng.range_i64(0, 6) as usize;
+        let wd = kw + rng.range_i64(0, 6) as usize;
+        let x = Tensor4::random_activations(Shape4::new(1, h, wd, ic), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(kh, kw);
+        let expect = conv_reference(&x, &w, geom);
+
+        assert_eq!(DmEngine::new(w.clone(), geom).conv(&x), expect, "dm");
+        assert_eq!(PciltEngine::new(&w, bits, geom).conv(&x), expect, "pcilt");
+        assert_eq!(SharedEngine::new(&w, bits, geom).conv(&x), expect, "shared");
+        let seg_n = *rng.choose(&[1usize, 2, 4]);
+        if seg_n as u32 * bits <= 12 {
+            assert_eq!(
+                SegmentEngine::new(&w, bits, seg_n, geom).conv(&x),
+                expect,
+                "segment{seg_n}"
+            );
+        }
+        let positions = kh * kw * ic;
+        let plan = LayoutPlan::dense(positions, *rng.choose(&[2usize, 3, 5]));
+        assert_eq!(LayoutEngine::new(&w, bits, plan, geom).conv(&x), expect, "layout");
+    });
+}
+
+/// PCILT with a custom function == DM over pre-transformed activations,
+/// when the function factors as w * t(a).
+#[test]
+fn codebook_factorization_property() {
+    forall("codebook pcilt == dm over decoded acts", 20, |g| {
+        let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+        // integer codebook so both paths are exact
+        let codes: Vec<f32> = (0..8).map(|i| (i * i) as f32).collect();
+        let f = ConvFunc::Codebook {
+            codes: codes.clone(),
+        };
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 2), 3, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 5, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let via_table = PciltEngine::with_func(&w, 3, geom, &f).conv(&x);
+        // decode activations then run plain DM — here decoded values are
+        // squares (0..49), still u8-representable
+        let decoded = x.map(|a| codes[a as usize] as u8);
+        let via_dm = DmEngine::new(w, geom).conv(&decoded);
+        assert_eq!(via_table, via_dm);
+    });
+}
+
+/// Quantize→dequantize→quantize is stable (idempotence of the codec pair).
+#[test]
+fn quantizer_idempotence() {
+    forall("quantize is idempotent after one roundtrip", 200, |g| {
+        let bits = g.one_of(&[2u32, 4, 8]);
+        let max = g.f32(0.5, 8.0);
+        let q = Quantizer::symmetric(max, bits);
+        let x = g.f32(-2.0 * max, 2.0 * max);
+        let once = q.quantize(x);
+        let twice = q.quantize(q.dequantize(once));
+        assert_eq!(once, twice);
+    });
+}
+
+/// The queue conserves requests under adversarial batch geometry.
+#[test]
+fn queue_conserves_under_random_batching() {
+    forall("queue conservation", 15, |g| {
+        let cap = g.usize(4, 64);
+        let n = g.usize(1, 200);
+        let max_batch = g.usize(1, 16);
+        let q = BoundedQueue::new(cap);
+        let mut accepted = Vec::new();
+        let mut popped = Vec::new();
+        for i in 0..n {
+            match q.push(i) {
+                Ok(()) => accepted.push(i),
+                Err(_) => {
+                    // drain a bit and retry once
+                    if let Some(b) = q.pop_batch(max_batch, Duration::ZERO) {
+                        popped.extend(b);
+                    }
+                    if q.push(i).is_ok() {
+                        accepted.push(i);
+                    }
+                }
+            }
+        }
+        q.close();
+        while let Some(b) = q.pop_batch(max_batch, Duration::ZERO) {
+            popped.extend(b);
+        }
+        assert_eq!(popped.len(), accepted.len());
+        assert_eq!(popped, accepted, "FIFO order violated");
+    });
+}
+
+/// Server answers are independent of batch composition: the same image
+/// always yields the same logits whatever else it is batched with.
+#[test]
+fn serving_batch_composition_invariance() {
+    let mut rng = Rng::new(99);
+    let params = random_params(4, &mut rng);
+    let native = QuantCnn::new(params.clone(), EngineChoice::Pcilt);
+    let server = Arc::new(
+        Server::start(
+            BackendSpec::Native {
+                params,
+                engine: NativeEngineKind::Pcilt,
+            },
+            &ServerOpts {
+                workers: 2,
+                max_batch: 8,
+                batch_deadline: Duration::from_micros(500),
+                queue_capacity: 512,
+            },
+        )
+        .unwrap(),
+    );
+    let probe = Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 4, &mut rng);
+    let expect = native.forward(&probe).remove(0);
+    // Interleave the probe with random noise traffic from another thread.
+    let noise_server = Arc::clone(&server);
+    let noise = std::thread::spawn(move || {
+        let mut rng = Rng::new(123);
+        for _ in 0..200 {
+            let img = Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 4, &mut rng);
+            let _ = noise_server.infer_blocking(img);
+        }
+    });
+    for _ in 0..50 {
+        let resp = server.infer_blocking(probe.clone()).unwrap();
+        assert_eq!(resp.logits, expect, "batch composition changed an answer");
+    }
+    noise.join().unwrap();
+}
+
+/// Requant codes are monotone in the accumulator (order preservation the
+/// max-pool-on-codes optimization relies on).
+#[test]
+fn requant_monotonicity() {
+    forall("requant is monotone", 100, |g| {
+        let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+        let params = random_params(4, &mut rng);
+        let m = QuantCnn::new(params, EngineChoice::Dm);
+        // encode_input is the exposed quantizer; monotone in the input
+        let a = g.f32(0.0, 1.0);
+        let b = g.f32(0.0, 1.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let t = Tensor4::from_vec(Shape4::new(1, 1, 1, 2), vec![lo, hi]);
+        let codes = m.encode_input(&t);
+        assert!(codes.data()[0] <= codes.data()[1]);
+    });
+}
