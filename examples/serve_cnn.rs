@@ -17,6 +17,7 @@ use std::time::Duration;
 use pcilt::coordinator::{run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts};
 use pcilt::model::{EngineChoice, QuantCnn};
 use pcilt::runtime::ArtifactBundle;
+use pcilt::util::error as anyhow;
 
 fn main() -> anyhow::Result<()> {
     pcilt::util::logger::init();

@@ -11,16 +11,27 @@
 //!
 //! Filter with `cargo bench --bench bench_engines -- <e1|custom|asweights|crossover>`.
 
+use pcilt::model::{random_params, EngineChoice, QuantCnn};
 use pcilt::pcilt::as_weights::{AdjustRange, TableParamLayer};
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::parallel::{conv_parallel, effective_threads};
 use pcilt::pcilt::{ConvFunc, DmEngine, PciltEngine, SharedEngine};
 use pcilt::tensor::{Shape4, Tensor4};
 use pcilt::util::prng::Rng;
-use pcilt::util::timing::{bench, section, BenchOpts};
+use pcilt::util::timing::{bench, section, BenchOpts, BenchResult};
 
 fn filter_match(name: &str) -> bool {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+/// `PCILT_BENCH_QUICK=1` shrinks the measurement budget (CI smoke runs).
+fn bench_opts() -> BenchOpts {
+    if std::env::var("PCILT_BENCH_QUICK").is_ok() {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    }
 }
 
 fn e1() {
@@ -234,10 +245,101 @@ fn ablation() {
     );
 }
 
+/// Parallel batch execution: serial vs scoped-thread data parallelism over
+/// the batch dimension, at raw-engine and full-model level. Exactness is
+/// asserted; results (and speedups) optionally land in the JSON file named
+/// by `PCILT_BENCH_JSON` so CI can track the perf trajectory.
+fn parallel_batch() {
+    if !filter_match("parallel") {
+        return;
+    }
+    let threads = effective_threads(0, usize::MAX);
+    section(&format!(
+        "Parallel batch execution: 1 vs {threads} threads over the N dimension"
+    ));
+    let opts = bench_opts();
+    let mut rng = Rng::new(6);
+
+    // Raw engine level: one conv layer over a batch of 16.
+    let x = Tensor4::random_activations(Shape4::new(16, 48, 48, 4), 4, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(16, 3, 3, 4), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let engine = PciltEngine::new(&w, 4, geom);
+    assert_eq!(
+        conv_parallel(&engine, &x, threads),
+        engine.conv(&x),
+        "parallel conv must be bit-identical"
+    );
+    let conv_serial = bench("pcilt conv b16 serial", &opts, || engine.conv(&x));
+    let conv_par = bench(&format!("pcilt conv b16 {threads}t"), &opts, || {
+        conv_parallel(&engine, &x, threads)
+    });
+    println!("{}", conv_serial.report());
+    println!("{}", conv_par.report());
+    let conv_speedup = conv_serial.ns_per_iter() / conv_par.ns_per_iter();
+    println!("conv speedup: {conv_speedup:.2}x on {threads} threads");
+
+    // Full-model level: QuantCnn forward over a batch of 16.
+    let params = random_params(4, &mut rng);
+    let serial_model = QuantCnn::new(params.clone(), EngineChoice::Pcilt).with_threads(1);
+    let par_model = QuantCnn::new(params, EngineChoice::Pcilt).with_threads(threads);
+    let codes = Tensor4::random_activations(Shape4::new(16, 16, 16, 1), 4, &mut rng);
+    assert_eq!(
+        par_model.forward(&codes),
+        serial_model.forward(&codes),
+        "parallel forward must be bit-identical"
+    );
+    let model_serial = bench("model forward b16 serial", &opts, || {
+        serial_model.forward(&codes)
+    });
+    let model_par = bench(&format!("model forward b16 {threads}t"), &opts, || {
+        par_model.forward(&codes)
+    });
+    println!("{}", model_serial.report());
+    println!("{}", model_par.report());
+    let model_speedup = model_serial.ns_per_iter() / model_par.ns_per_iter();
+    println!("model speedup: {model_speedup:.2}x on {threads} threads");
+
+    if let Ok(path) = std::env::var("PCILT_BENCH_JSON") {
+        let results = [&conv_serial, &conv_par, &model_serial, &model_par];
+        write_bench_json(&path, threads, &results, conv_speedup, model_speedup);
+        println!("wrote {path}");
+    }
+}
+
+/// Hand-rolled JSON (no serde offline); names are plain ASCII.
+fn write_bench_json(
+    path: &str,
+    threads: usize,
+    results: &[&BenchResult],
+    conv_speedup: f64,
+    model_speedup: f64,
+) {
+    let mut rows = String::new();
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"p50_ns\": {:.1}, \"mean_ns\": {:.1}, \"iters\": {}}}",
+            r.name, r.summary.p50, r.summary.mean, r.iters
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_engines/parallel\",\n  \"batch\": 16,\n  \
+         \"threads\": {threads},\n  \"conv_speedup\": {conv_speedup:.3},\n  \
+         \"model_speedup\": {model_speedup:.3},\n  \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
 fn main() {
     e1();
     ablation();
     custom();
     asweights();
     crossover();
+    parallel_batch();
 }

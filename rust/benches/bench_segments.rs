@@ -6,9 +6,11 @@
 //!
 //! Filter with `cargo bench --bench bench_segments -- <boolhash|layout>`.
 
-use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::dm::conv_reference;
-use pcilt::pcilt::{DmEngine, LayoutEngine, LayoutPlan, PciltEngine, RowSegmentEngine, SegmentEngine};
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::{
+    DmEngine, LayoutEngine, LayoutPlan, PciltEngine, RowSegmentEngine, SegmentEngine,
+};
 use pcilt::tensor::{Shape4, Tensor4};
 use pcilt::util::prng::Rng;
 use pcilt::util::stats::fmt_ns;
@@ -26,7 +28,8 @@ fn boolhash() {
     section("E4: BoolHash speedup (Figs 5-6; paper claims 6.59x at N=8)");
     let opts = BenchOpts::default();
     let mut rng = Rng::new(11);
-    for (bits, cin, label) in [(1u32, 1usize, "bool cin=1"), (1, 4, "bool cin=4"), (2, 4, "INT2 cin=4")] {
+    let cases = [(1u32, 1usize, "bool cin=1"), (1, 4, "bool cin=4"), (2, 4, "INT2 cin=4")];
+    for (bits, cin, label) in cases {
         let x = Tensor4::random_activations(Shape4::new(1, 96, 96, cin), bits, &mut rng);
         let w = Tensor4::random_weights(Shape4::new(8, 5, 5, cin), 8, &mut rng);
         let geom = ConvGeometry::unit_stride(5, 5);

@@ -4,9 +4,9 @@
 //! latency cost on CPU.
 
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::memory::shared_pcilt_bytes;
 use pcilt::pcilt::shared::{SharedTables, ValueIndirection};
 use pcilt::pcilt::{ConvFunc, PciltEngine, SharedEngine};
-use pcilt::pcilt::memory::shared_pcilt_bytes;
 use pcilt::tensor::{Shape4, Tensor4};
 use pcilt::util::prng::Rng;
 use pcilt::util::stats::{fmt_bytes, fmt_ns};

@@ -161,8 +161,10 @@ mod tests {
     #[test]
     fn paper_ratio_claims_hold() {
         // Dally via the paper: FP32 vs INT8 — 30x for add, 18.5x for mul.
-        let add_ratio = add_cost(32, NumKind::Float).energy_pj / add_cost(8, NumKind::Int).energy_pj;
-        let mul_ratio = mul_cost(32, NumKind::Float).energy_pj / mul_cost(8, NumKind::Int).energy_pj;
+        let add_ratio =
+            add_cost(32, NumKind::Float).energy_pj / add_cost(8, NumKind::Int).energy_pj;
+        let mul_ratio =
+            mul_cost(32, NumKind::Float).energy_pj / mul_cost(8, NumKind::Int).energy_pj;
         assert!((add_ratio - 30.0).abs() < 1.0, "add ratio {add_ratio}");
         assert!((mul_ratio - 18.5).abs() < 1.0, "mul ratio {mul_ratio}");
     }
@@ -171,9 +173,9 @@ mod tests {
     fn mul_much_pricier_than_add() {
         // The core PCILT premise: eliminating the multiply matters.
         for bits in [4, 8, 16, 32] {
-            assert!(
-                mul_cost(bits, NumKind::Int).energy_pj > 2.5 * add_cost(bits, NumKind::Int).energy_pj
-            );
+            let mul = mul_cost(bits, NumKind::Int).energy_pj;
+            let add = add_cost(bits, NumKind::Int).energy_pj;
+            assert!(mul > 2.5 * add);
         }
     }
 

@@ -14,19 +14,32 @@ pub struct Args {
 }
 
 /// CLI parse errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum CliError {
-    #[error("missing subcommand; try `pcilt help`")]
     MissingSubcommand,
-    #[error("option '--{0}' expects a value")]
     MissingValue(String),
-    #[error("unexpected positional argument '{0}'")]
     UnexpectedPositional(String),
-    #[error("unknown option '--{0}' for subcommand '{1}'")]
     UnknownOption(String, String),
-    #[error("invalid value for '--{0}': {1}")]
     InvalidValue(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingSubcommand => write!(f, "missing subcommand; try `pcilt help`"),
+            CliError::MissingValue(k) => write!(f, "option '--{k}' expects a value"),
+            CliError::UnexpectedPositional(a) => {
+                write!(f, "unexpected positional argument '{a}'")
+            }
+            CliError::UnknownOption(k, sub) => {
+                write!(f, "unknown option '--{k}' for subcommand '{sub}'")
+            }
+            CliError::InvalidValue(k, v) => write!(f, "invalid value for '--{k}': {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (without argv[0]). `valued` lists options that take a
@@ -101,14 +114,26 @@ USAGE: pcilt <subcommand> [options]
 
 SUBCOMMANDS:
   serve     run the serving coordinator under a Poisson workload
-              --engine pcilt|dm|segment|shared|hlo   (default pcilt)
+              --engine pcilt|dm|segment|shared|hlo|auto  (default pcilt;
+                        auto = per-layer planner selection)
               --workers N       worker threads        (default 4)
+              --threads N       batch-parallel threads per inference
+                                (default 0 = auto)
               --rate R          offered load, req/s   (default 500)
               --requests N      total requests        (default 2000)
               --max-batch N     dynamic batch cap     (default 16)
               --deadline-us N   batch deadline        (default 2000)
               --artifacts DIR   artifact bundle       (default artifacts)
-              --config FILE     TOML config (overrides defaults)
+              --config FILE     TOML config (overrides defaults;
+                                [planner] section tunes auto-selection)
+  plan      print the engine registry with predicted OpCounts/memory per
+            layer and the planner's chosen engine (no artifacts needed)
+              --act-bits B      sample-model activation bits (default 4)
+              --batch N         planning batch size   (default 8)
+              --config FILE     plan the [network] section instead
+              --img N           input side for [network] plans (default 64)
+              --calibrate       micro-benchmark candidates instead of the
+                                analytic model
   validate  cross-check PJRT artifact vs native engines on the smoke pair
               --artifacts DIR
   sim       ASIC simulator comparison tables (E2/E3)

@@ -9,6 +9,7 @@ pub mod toml;
 use std::path::Path;
 
 use crate::pcilt::memory::NetworkSpec;
+use crate::pcilt::planner::PlannerPolicy;
 
 pub use self::toml::{Document, ParseError, Value};
 
@@ -25,6 +26,8 @@ pub enum EngineKind {
     Shared,
     /// AOT-compiled HLO artifact executed via PJRT.
     Hlo,
+    /// Planner-selected per layer (see `pcilt::planner`).
+    Auto,
 }
 
 impl EngineKind {
@@ -35,6 +38,7 @@ impl EngineKind {
             "segment" => EngineKind::Segment,
             "shared" => EngineKind::Shared,
             "hlo" => EngineKind::Hlo,
+            "auto" => EngineKind::Auto,
             _ => return None,
         })
     }
@@ -46,6 +50,66 @@ impl EngineKind {
             EngineKind::Segment => "segment",
             EngineKind::Shared => "shared",
             EngineKind::Hlo => "hlo",
+            EngineKind::Auto => "auto",
+        }
+    }
+}
+
+/// `[planner]` section: cost-model weights and execution knobs for the
+/// engine auto-selection planner (`pcilt::planner`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannerConfig {
+    /// "analytic" (cost model) or "calibrate" (micro-benchmark winners).
+    pub mode: PlannerMode,
+    /// Batch-parallel worker threads inside one inference batch
+    /// (0 = auto-detect).
+    pub threads: usize,
+    /// Fast-memory budget for lookup tables, in KiB.
+    pub cache_kb: usize,
+    /// Relative op energies for the analytic score.
+    pub mult_cost: f64,
+    pub add_cost: f64,
+    pub fetch_cost: f64,
+    /// Invocations one table build amortizes over.
+    pub amortize: f64,
+    /// Allow float-datapath baselines (Winograd/FFT) to win.
+    pub allow_approximate: bool,
+}
+
+/// Planner scoring mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerMode {
+    Analytic,
+    Calibrate,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        let p = PlannerPolicy::default();
+        PlannerConfig {
+            mode: PlannerMode::Analytic,
+            threads: 0,
+            cache_kb: (p.cache_bytes / 1024.0) as usize,
+            mult_cost: p.mult_cost,
+            add_cost: p.add_cost,
+            fetch_cost: p.fetch_cost,
+            amortize: p.amortize_invocations,
+            allow_approximate: p.allow_approximate,
+        }
+    }
+}
+
+impl PlannerConfig {
+    /// Convert to the planner's policy struct.
+    pub fn to_policy(&self) -> PlannerPolicy {
+        PlannerPolicy {
+            mult_cost: self.mult_cost,
+            add_cost: self.add_cost,
+            fetch_cost: self.fetch_cost,
+            cache_bytes: self.cache_kb as f64 * 1024.0,
+            miss_penalty: PlannerPolicy::default().miss_penalty,
+            amortize_invocations: self.amortize,
+            allow_approximate: self.allow_approximate,
         }
     }
 }
@@ -69,6 +133,8 @@ pub struct ServeConfig {
     pub rate_rps: f64,
     /// Workload generator: total requests to issue.
     pub total_requests: usize,
+    /// `[planner]` section (engine auto-selection).
+    pub planner: PlannerConfig,
 }
 
 impl Default for ServeConfig {
@@ -82,19 +148,41 @@ impl Default for ServeConfig {
             artifact_dir: "artifacts".to_string(),
             rate_rps: 500.0,
             total_requests: 2_000,
+            planner: PlannerConfig::default(),
         }
     }
 }
 
 /// Error produced by typed-config loading.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error(transparent)]
-    Parse(#[from] ParseError),
-    #[error("io error reading config: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("invalid config: {0}")]
+    Parse(ParseError),
+    Io(std::io::Error),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(e) => write!(f, "{e}"),
+            ConfigError::Io(e) => write!(f, "io error reading config: {e}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<ParseError> for ConfigError {
+    fn from(e: ParseError) -> ConfigError {
+        ConfigError::Parse(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> ConfigError {
+        ConfigError::Io(e)
+    }
 }
 
 fn invalid<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
@@ -132,7 +220,9 @@ impl ServeConfig {
                 "serve.artifact_dir" => {
                     cfg.artifact_dir = doc
                         .get_str(key)
-                        .ok_or_else(|| ConfigError::Invalid("artifact_dir must be a string".into()))?
+                        .ok_or_else(|| {
+                            ConfigError::Invalid("artifact_dir must be a string".into())
+                        })?
                         .to_string();
                 }
                 "serve.rate_rps" => {
@@ -144,6 +234,46 @@ impl ServeConfig {
                 }
                 "serve.total_requests" => {
                     cfg.total_requests = pos_usize(doc, key)?;
+                }
+                "planner.mode" => {
+                    cfg.planner.mode = match doc.get_str(key) {
+                        Some("analytic") => PlannerMode::Analytic,
+                        Some("calibrate") => PlannerMode::Calibrate,
+                        other => {
+                            return invalid(format!(
+                                "planner.mode must be analytic|calibrate, got {other:?}"
+                            ))
+                        }
+                    };
+                }
+                "planner.threads" => {
+                    // 0 is meaningful (= auto), so not pos_usize
+                    cfg.planner.threads = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as usize,
+                        _ => return invalid("planner.threads must be >= 0"),
+                    };
+                }
+                "planner.cache_kb" => {
+                    cfg.planner.cache_kb = pos_usize(doc, key)?;
+                }
+                "planner.mult_cost" => {
+                    cfg.planner.mult_cost = pos_float(doc, key)?;
+                }
+                "planner.add_cost" => {
+                    cfg.planner.add_cost = pos_float(doc, key)?;
+                }
+                "planner.fetch_cost" => {
+                    cfg.planner.fetch_cost = pos_float(doc, key)?;
+                }
+                "planner.amortize" => {
+                    cfg.planner.amortize = pos_float(doc, key)?;
+                }
+                "planner.allow_approximate" => {
+                    cfg.planner.allow_approximate = doc
+                        .get_bool(key)
+                        .ok_or_else(|| {
+                            ConfigError::Invalid("planner.allow_approximate must be a bool".into())
+                        })?;
                 }
                 k if k.starts_with("network.") => {} // parsed by NetworkSpec
                 k => return invalid(format!("unknown config key '{k}'")),
@@ -172,6 +302,14 @@ fn pos_usize(doc: &Document, key: &str) -> Result<usize, ConfigError> {
         Some(v) if v > 0 => Ok(v as usize),
         Some(v) => invalid(format!("{key} must be positive, got {v}")),
         None => invalid(format!("{key} must be an integer")),
+    }
+}
+
+fn pos_float(doc: &Document, key: &str) -> Result<f64, ConfigError> {
+    match doc.get_float(key) {
+        Some(v) if v > 0.0 => Ok(v),
+        Some(v) => invalid(format!("{key} must be positive, got {v}")),
+        None => invalid(format!("{key} must be a number")),
     }
 }
 
@@ -262,6 +400,44 @@ rate_rps = 100.0
     }
 
     #[test]
+    fn planner_section_parses() {
+        let doc = Document::parse(
+            r#"
+[serve]
+engine = "auto"
+[planner]
+mode = "calibrate"
+threads = 8
+cache_kb = 1024
+mult_cost = 5.0
+amortize = 1000
+allow_approximate = true
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Auto);
+        assert_eq!(cfg.planner.mode, PlannerMode::Calibrate);
+        assert_eq!(cfg.planner.threads, 8);
+        assert_eq!(cfg.planner.cache_kb, 1024);
+        assert_eq!(cfg.planner.mult_cost, 5.0);
+        assert_eq!(cfg.planner.amortize, 1000.0);
+        assert!(cfg.planner.allow_approximate);
+        // untouched planner defaults survive
+        assert_eq!(cfg.planner.add_cost, PlannerConfig::default().add_cost);
+        let policy = cfg.planner.to_policy();
+        assert_eq!(policy.cache_bytes, 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn planner_bad_mode_rejected() {
+        let doc = Document::parse("[planner]\nmode = \"guess\"").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[planner]\nthreads = -1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
     fn invalid_engine_rejected() {
         let doc = Document::parse("[serve]\nengine = \"gpu\"").unwrap();
         assert!(ServeConfig::from_document(&doc).is_err());
@@ -305,6 +481,7 @@ activation_bits = 4
             EngineKind::Segment,
             EngineKind::Shared,
             EngineKind::Hlo,
+            EngineKind::Auto,
         ] {
             assert_eq!(EngineKind::parse(e.name()), Some(e));
         }

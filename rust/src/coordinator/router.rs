@@ -19,13 +19,22 @@ pub struct Router {
 }
 
 /// Routing errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RouteError {
-    #[error("unknown engine '{0}'")]
     UnknownEngine(String),
-    #[error("pool rejected request: {0:?}")]
     Submit(SubmitError),
 }
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownEngine(e) => write!(f, "unknown engine '{e}'"),
+            RouteError::Submit(e) => write!(f, "pool rejected request: {e:?}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 impl Router {
     pub fn new(pools: Vec<(String, Arc<Server>)>, default_pool: &str) -> Router {
@@ -45,17 +54,27 @@ impl Router {
     }
 
     /// Route a request to the named engine pool (or the default).
+    /// `Some("auto")` is an alias for the default pool, which serving
+    /// configures to the planner-selected backend — clients can opt into
+    /// "whatever the planner picked" without knowing the engine name.
     pub fn route(
         &self,
         engine: Option<&str>,
         codes: Tensor4<u8>,
     ) -> Result<(u64, mpsc::Receiver<InferResponse>), RouteError> {
-        let name = engine.unwrap_or(&self.default_pool);
+        let name = match engine {
+            None | Some("auto") => &self.default_pool,
+            Some(n) => n,
+        };
         let pool = self
             .pools
             .get(name)
             .ok_or_else(|| RouteError::UnknownEngine(name.to_string()))?;
         pool.submit(codes).map_err(RouteError::Submit)
+    }
+
+    pub fn default_engine(&self) -> &str {
+        &self.default_pool
     }
 
     pub fn pool(&self, engine: &str) -> Option<&Arc<Server>> {
@@ -141,6 +160,18 @@ mod tests {
             r.route(Some("fft"), image(3)),
             Err(RouteError::UnknownEngine(_))
         ));
+    }
+
+    #[test]
+    fn auto_routes_to_default_pool() {
+        let r = router();
+        assert_eq!(r.default_engine(), "pcilt");
+        let (_, rx) = r.route(Some("auto"), image(4)).unwrap();
+        assert!(rx.recv().is_ok());
+        let pc = r.pool("pcilt").unwrap().metrics();
+        assert_eq!(pc.completed, 1);
+        let dm = r.pool("dm").unwrap().metrics();
+        assert_eq!(dm.completed, 0);
     }
 
     #[test]

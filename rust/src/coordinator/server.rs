@@ -18,6 +18,8 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::tensor::Tensor4;
+use crate::util::error as anyhow;
+use crate::util::logger as log;
 
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::{BoundedQueue, PushError};

@@ -4,11 +4,10 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::model::{EngineChoice, ModelParams, QuantCnn};
 use crate::runtime::{ArtifactBundle, CompiledModel, PjrtContext};
 use crate::tensor::{Shape4, Tensor4};
+use crate::util::error::{self as anyhow, Context, Result};
 
 use super::request::{InferRequest, InferResponse};
 
@@ -35,6 +34,8 @@ pub enum NativeEngineKind {
     Pcilt,
     Segment { seg_n: usize },
     Shared,
+    /// Planner-selected per layer (see `pcilt::planner`).
+    Auto,
 }
 
 impl NativeEngineKind {
@@ -44,6 +45,7 @@ impl NativeEngineKind {
             NativeEngineKind::Pcilt => EngineChoice::Pcilt,
             NativeEngineKind::Segment { seg_n } => EngineChoice::Segment { seg_n },
             NativeEngineKind::Shared => EngineChoice::Shared,
+            NativeEngineKind::Auto => EngineChoice::Auto,
         }
     }
 }
@@ -65,10 +67,14 @@ impl Backend {
     /// Build from a spec (call inside the worker thread).
     pub fn build(spec: &BackendSpec) -> Result<Backend> {
         match spec {
-            BackendSpec::Native { params, engine } => Ok(Backend::Native(QuantCnn::new(
-                params.clone(),
-                engine.to_choice(),
-            ))),
+            BackendSpec::Native { params, engine } => {
+                // Intra-batch parallelism is opt-in under a worker pool
+                // (see `parallel::serving_threads`): N workers x auto
+                // threads would oversubscribe the machine.
+                let model = QuantCnn::new(params.clone(), engine.to_choice())
+                    .with_threads(crate::pcilt::parallel::serving_threads());
+                Ok(Backend::Native(model))
+            }
             BackendSpec::Hlo { bundle, engine } => {
                 let ctx = PjrtContext::cpu()?;
                 let mut models = Vec::new();

@@ -6,14 +6,15 @@
 //! - **L1** Pallas kernels and **L2** JAX model live under `python/` and run
 //!   only at build time (`make artifacts`), producing HLO-text artifacts.
 //! - **L3** (this crate) implements the paper's algorithm and all the
-//!   substrates its claims need: the PCILT engines ([`pcilt`]), a
-//!   cycle/energy ASIC simulator ([`asic`]), an integer tensor library
-//!   ([`tensor`]), quantization ([`quant`]), a PJRT runtime that loads the
-//!   AOT artifacts ([`runtime`]), and a thread-based serving coordinator
-//!   ([`coordinator`]).
+//!   substrates its claims need: the PCILT engines ([`pcilt`]), the
+//!   engine auto-selection planner ([`pcilt::planner`]) with data-parallel
+//!   batch execution ([`pcilt::parallel`]), a cycle/energy ASIC simulator
+//!   ([`asic`]), an integer tensor library ([`tensor`]), quantization
+//!   ([`quant`]), a PJRT runtime that loads the AOT artifacts
+//!   ([`runtime`], behind the `xla` feature), and a thread-based serving
+//!   coordinator ([`coordinator`]).
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the architecture and experiment index.
 
 pub mod asic;
 pub mod cli;

@@ -5,21 +5,22 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
-
 use pcilt::asic::{
     report::comparison_table, simulate_dm, simulate_fft, simulate_pcilt, simulate_segment,
     simulate_winograd, LayerWorkload, TableMem,
 };
 use pcilt::cli::{Args, USAGE};
-use pcilt::config::{EngineKind, ServeConfig};
+use pcilt::config::{network_from_document, Document, EngineKind, PlannerMode, ServeConfig};
 use pcilt::coordinator::{run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts};
-use pcilt::model::{EngineChoice, QuantCnn};
+use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCnn};
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
-use pcilt::pcilt::memory::paper_memory_report;
-use pcilt::pcilt::{DmEngine, PciltEngine, SegmentEngine, SharedEngine};
+use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec};
+use pcilt::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec};
+use pcilt::pcilt::{parallel, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
 use pcilt::runtime::{ArtifactBundle, PjrtContext};
 use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::error::{bail, ensure, Context, Result};
+use pcilt::util::logger as log;
 use pcilt::util::prng::Rng;
 use pcilt::util::stats::{fmt_bytes, fmt_count};
 use pcilt::util::timing::{run as bench_run, BenchOpts};
@@ -55,10 +56,14 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "clock",
         "act-bits",
         "channels",
+        "img",
+        "batch",
+        "threads",
     ];
-    let args = Args::parse(raw, &valued, &["verbose"])?;
+    let args = Args::parse(raw, &valued, &["verbose", "calibrate"])?;
     match args.subcommand.as_str() {
         "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
         "validate" => cmd_validate(&args),
         "sim" => cmd_sim(&args),
         "memory" => cmd_memory(),
@@ -83,7 +88,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(d) = args.get("artifacts") {
         cfg.artifact_dir = d.to_string();
     }
+    cfg.planner.threads = args.get_usize("threads", cfg.planner.threads)?;
     cfg.validate()?;
+    parallel::set_default_threads(cfg.planner.threads);
+    // Workers resolve EngineChoice::Auto against these process defaults,
+    // so the plan logged below is exactly what they build.
+    pcilt::pcilt::planner::set_default_policy(cfg.planner.to_policy());
+    pcilt::pcilt::planner::set_default_plan_batch(cfg.max_batch);
 
     let bundle = ArtifactBundle::load(Path::new(&cfg.artifact_dir)).with_context(|| {
         format!(
@@ -93,6 +104,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     })?;
     let act_bits = bundle.params.act_bits;
     let img = bundle.params.img;
+    if cfg.engine == EngineKind::Auto {
+        // Log what the planner picked before the pool spins up.
+        for (i, plan) in plan_model(&bundle.params, cfg.planner.to_policy(), cfg.max_batch)
+            .iter()
+            .enumerate()
+        {
+            let c = plan.chosen_candidate();
+            log::info!(
+                "planner: layer {} -> {} (score {:.3e}, tables {})",
+                i + 1,
+                c.label,
+                c.score,
+                fmt_bytes(c.table_bytes)
+            );
+        }
+    }
     let spec = match cfg.engine {
         EngineKind::Hlo => BackendSpec::Hlo {
             bundle,
@@ -105,6 +132,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 EngineKind::Pcilt => NativeEngineKind::Pcilt,
                 EngineKind::Segment => NativeEngineKind::Segment { seg_n: 2 },
                 EngineKind::Shared => NativeEngineKind::Shared,
+                EngineKind::Auto => NativeEngineKind::Auto,
                 EngineKind::Hlo => unreachable!(),
             },
         },
@@ -142,6 +170,115 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pcilt plan` — print the engine registry, per-layer predicted costs and
+/// the planner's chosen engine. Works with no artifacts: defaults to the
+/// QuantCnn sample model; a `--config` file with a `[network]` section
+/// plans that CNN instead; `--calibrate` micro-benchmarks the candidates.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let batch = args.get_usize("batch", 8)?;
+    let act_bits = args.get_usize("act-bits", 4)? as u32;
+    // Parse the config once; the same Document serves both the [planner]
+    // policy and the optional [network] section.
+    let (cfg, doc) = match args.get("config") {
+        Some(path) => {
+            let doc = Document::parse(&std::fs::read_to_string(path)?)?;
+            (ServeConfig::from_document(&doc)?, Some(doc))
+        }
+        None => (ServeConfig::default(), None),
+    };
+    let policy = cfg.planner.to_policy();
+    let calibrate = args.flag("calibrate") || cfg.planner.mode == PlannerMode::Calibrate;
+
+    // A [network] section in the config plans that CNN analytically.
+    if let Some(doc) = &doc {
+        if doc.get("network.filters").is_some() {
+            if calibrate {
+                println!(
+                    "note: --calibrate needs concrete weights; [network] plans are \
+                     shape-only, falling back to the analytic model"
+                );
+            }
+            let net = network_from_document(doc)?;
+            let img = args.get_usize("img", 64)?;
+            return plan_network(&net, &EnginePlanner::new(policy), batch, img);
+        }
+    }
+
+    // Default sample: the QuantCnn model shapes with seeded random weights.
+    let mut rng = Rng::new(42);
+    let params = random_params(act_bits, &mut rng);
+    println!(
+        "## engine plan — QuantCnn sample model (act_bits={act_bits}, batch={batch}, {})",
+        if calibrate { "calibrated" } else { "analytic" }
+    );
+    let planner = EnginePlanner::new(policy.clone());
+    let plans: Vec<LayerPlan> = if calibrate {
+        let [s1, s2] = layer_specs(&params, batch);
+        vec![
+            planner.calibrate(&s1, &params.w1, 0xCA1),
+            planner.calibrate(&s2, &params.w2, 0xCA2),
+        ]
+    } else {
+        plan_model(&params, policy, batch)
+    };
+    for (i, plan) in plans.iter().enumerate() {
+        let c = plan.chosen_candidate();
+        println!(
+            "\nlayer {}: chosen {} (score {:.3e}, tables {}, {} build evals)",
+            i + 1,
+            c.label,
+            c.score,
+            fmt_bytes(c.table_bytes),
+            fmt_count(c.build_evals as u128),
+        );
+        print!("{}", plan.report());
+    }
+    println!(
+        "\nbatch parallelism: {} threads over batch {batch} (PCILT_THREADS / [planner] threads)",
+        parallel::effective_threads(cfg.planner.threads, batch)
+    );
+    Ok(())
+}
+
+/// Plan every conv layer of a `[network]`-section CNN (feature maps halve
+/// after each layer, as with 2x2 pooling).
+fn plan_network(
+    net: &NetworkSpec,
+    planner: &EnginePlanner,
+    batch: usize,
+    img: usize,
+) -> Result<()> {
+    println!(
+        "## engine plan — [network] {:?} k{} a{}w{} (batch {batch}, input {img}x{img})",
+        net.filters, net.kernel, net.activation_bits, net.weight_bits
+    );
+    let mut cin = net.input_channels;
+    let mut side = img.max(net.kernel);
+    for (i, &cout) in net.filters.iter().enumerate() {
+        let spec = LayerSpec {
+            geom: ConvGeometry::unit_stride(net.kernel, net.kernel),
+            in_ch: cin,
+            out_ch: cout,
+            act_bits: net.activation_bits,
+            weight_bits: net.weight_bits,
+            input: Shape4::new(batch, side, side, cin),
+        };
+        let plan = planner.plan_layer(&spec, None);
+        let c = plan.chosen_candidate();
+        println!(
+            "\nlayer {}: chosen {} (score {:.3e}, tables {})",
+            i + 1,
+            c.label,
+            c.score,
+            fmt_bytes(c.table_bytes),
+        );
+        print!("{}", plan.report());
+        cin = cout;
+        side = (((side - net.kernel + 1) / 2).max(net.kernel)).max(1);
+    }
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.get_str("artifacts", "artifacts");
     let bundle = ArtifactBundle::load(Path::new(dir))
@@ -160,7 +297,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         .into_iter()
         .flatten()
         .collect();
-    anyhow::ensure!(pjrt_logits == expect_logits, "PJRT != python smoke logits");
+    ensure!(pjrt_logits == expect_logits, "PJRT != python smoke logits");
     println!("PJRT(pcilt_b8) == python reference: OK (bit-exact)");
 
     // 2. Native engines == PJRT (bit-exact across the stack).
@@ -172,7 +309,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
     ] {
         let model = QuantCnn::new(bundle.params.clone(), choice);
         let native: Vec<i32> = model.forward(&codes).into_iter().flatten().collect();
-        anyhow::ensure!(native == expect_logits, "native {name} != reference");
+        ensure!(native == expect_logits, "native {name} != reference");
         println!("native {name:<8} == python reference: OK (bit-exact)");
     }
 

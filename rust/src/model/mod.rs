@@ -7,7 +7,8 @@
 //! PJRT artifact outputs (`artifacts/smoke_*.bin`).
 
 use crate::pcilt::engine::{ConvEngine, ConvGeometry};
-use crate::pcilt::{DmEngine, PciltEngine, SegmentEngine, SharedEngine};
+use crate::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
+use crate::pcilt::{parallel, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
 use crate::tensor::{max_pool2d, Shape4, Tensor4};
 
 /// Frozen integer model parameters + scales (mirror of python
@@ -38,6 +39,9 @@ pub enum EngineChoice {
     Pcilt,
     Segment { seg_n: usize },
     Shared,
+    /// Let the [`EnginePlanner`] pick a (bit-exact) winner per layer from
+    /// the full registry, using the analytic cost model.
+    Auto,
 }
 
 /// The runnable model: two conv engines + the dense head.
@@ -45,7 +49,11 @@ pub struct QuantCnn {
     pub params: ModelParams,
     conv1: Box<dyn ConvEngine>,
     conv2: Box<dyn ConvEngine>,
-    engine_name: &'static str,
+    /// `"pcilt"`, or `"pcilt+segment"` when the planner picked different
+    /// engines per layer.
+    engine_name: String,
+    /// Batch-parallelism for `forward` (0 = auto; see `pcilt::parallel`).
+    threads: usize,
 }
 
 fn build_engine(
@@ -61,25 +69,79 @@ fn build_engine(
             Box::new(SegmentEngine::new(w, act_bits, *seg_n, geom))
         }
         EngineChoice::Shared => Box::new(SharedEngine::new(w, act_bits, geom)),
+        EngineChoice::Auto => unreachable!("Auto is resolved in QuantCnn::new"),
     }
+}
+
+/// Planner layer specs for the model's two conv layers at a nominal
+/// serving batch.
+pub fn layer_specs(params: &ModelParams, batch: usize) -> [LayerSpec; 2] {
+    let img = params.img;
+    let spec1 = LayerSpec::for_weights(
+        &params.w1,
+        params.act_bits,
+        Shape4::new(batch, img, img, 1),
+    );
+    // conv1 output pools 2x2 before conv2
+    let pooled = (img - params.kernel + 1) / 2;
+    let spec2 = LayerSpec::for_weights(
+        &params.w2,
+        params.act_bits,
+        Shape4::new(batch, pooled, pooled, params.c1),
+    );
+    [spec1, spec2]
+}
+
+/// Plan both conv layers of the model — the `pcilt plan` entry point.
+pub fn plan_model(params: &ModelParams, policy: PlannerPolicy, batch: usize) -> Vec<LayerPlan> {
+    let planner = EnginePlanner::new(policy);
+    let [s1, s2] = layer_specs(params, batch);
+    vec![
+        planner.plan_layer(&s1, Some(&params.w1)),
+        planner.plan_layer(&s2, Some(&params.w2)),
+    ]
 }
 
 impl QuantCnn {
     pub fn new(params: ModelParams, choice: EngineChoice) -> QuantCnn {
         let geom = ConvGeometry::unit_stride(params.kernel, params.kernel);
-        let conv1 = build_engine(&params.w1, params.act_bits, geom, &choice);
-        let conv2 = build_engine(&params.w2, params.act_bits, geom, &choice);
-        let engine_name = conv1.name();
+        let (conv1, conv2) = match &choice {
+            EngineChoice::Auto => {
+                // Resolves against the process-default policy/batch so a
+                // worker thread that only sees a BackendSpec builds exactly
+                // what `[planner]` configured (planner::set_default_policy).
+                let planner = EnginePlanner::default();
+                let batch = crate::pcilt::planner::default_plan_batch();
+                let [s1, s2] = layer_specs(&params, batch);
+                (planner.choose(&params.w1, &s1), planner.choose(&params.w2, &s2))
+            }
+            concrete => (
+                build_engine(&params.w1, params.act_bits, geom, concrete),
+                build_engine(&params.w2, params.act_bits, geom, concrete),
+            ),
+        };
+        let engine_name = if conv1.name() == conv2.name() {
+            conv1.name().to_string()
+        } else {
+            format!("{}+{}", conv1.name(), conv2.name())
+        };
         QuantCnn {
             params,
             conv1,
             conv2,
             engine_name,
+            threads: 0,
         }
     }
 
-    pub fn engine_name(&self) -> &'static str {
-        self.engine_name
+    /// Set the batch-parallelism for `forward` (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> QuantCnn {
+        self.threads = threads;
+        self
+    }
+
+    pub fn engine_name(&self) -> &str {
+        &self.engine_name
     }
 
     /// Float [0,1] image -> activation codes (mirror of python
@@ -100,7 +162,33 @@ impl QuantCnn {
     }
 
     /// Integer forward: codes [B,16,16,1] -> logits i32 [B, classes].
+    /// Data-parallel across the batch (scoped threads; see
+    /// `pcilt::parallel`); bit-identical to [`QuantCnn::forward_serial`].
     pub fn forward(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
+        let n = codes.shape().n;
+        let t = parallel::effective_threads(self.threads, n);
+        if t <= 1 || n <= 1 {
+            return self.forward_serial(codes);
+        }
+        let parts = parallel::chunks(n, t);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = parts
+                .iter()
+                .map(|&(start, count)| {
+                    let sub = parallel::slice_batch(codes, start, count);
+                    scope.spawn(move || self.forward_serial(&sub))
+                })
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("forward worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Single-threaded integer forward (the reference path).
+    pub fn forward_serial(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
         let p = &self.params;
         let m1 = p.s_in * p.s_w1 / p.s_a1;
         let acc1 = self.conv1.conv(codes);
@@ -212,9 +300,45 @@ mod tests {
             EngineChoice::Pcilt,
             EngineChoice::Segment { seg_n: 2 },
             EngineChoice::Shared,
+            EngineChoice::Auto,
         ] {
             let m = QuantCnn::new(params.clone(), choice);
             assert_eq!(m.forward(&codes), reference, "engine {}", m.engine_name());
+        }
+    }
+
+    #[test]
+    fn parallel_forward_matches_serial() {
+        let mut rng = Rng::new(12);
+        let params = random_params(4, &mut rng);
+        let codes = random_codes(9, 4, &mut rng);
+        let serial = QuantCnn::new(params.clone(), EngineChoice::Pcilt).forward_serial(&codes);
+        for threads in [1usize, 2, 3, 8, 32] {
+            let m = QuantCnn::new(params.clone(), EngineChoice::Pcilt).with_threads(threads);
+            assert_eq!(m.forward(&codes), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn auto_choice_picks_an_exact_engine() {
+        let mut rng = Rng::new(13);
+        let params = random_params(2, &mut rng);
+        let m = QuantCnn::new(params, EngineChoice::Auto);
+        // the planner must never auto-pick a float baseline
+        let name = m.engine_name();
+        assert!(!name.contains("winograd") && !name.contains("fft"), "{name}");
+    }
+
+    #[test]
+    fn plan_model_covers_both_layers() {
+        let mut rng = Rng::new(14);
+        let params = random_params(4, &mut rng);
+        let plans = plan_model(&params, PlannerPolicy::default(), 8);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].spec.out_ch, params.c1);
+        assert_eq!(plans[1].spec.out_ch, params.c2);
+        for p in &plans {
+            assert!(p.chosen_candidate().exact);
         }
     }
 

@@ -88,7 +88,11 @@ impl TableParamLayer {
     }
 
     /// Initialize from classic weights (tables = w·a), the warm start.
-    pub fn from_weights(weights: &Tensor4<i8>, act_bits: u32, geom: ConvGeometry) -> TableParamLayer {
+    pub fn from_weights(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        geom: ConvGeometry,
+    ) -> TableParamLayer {
         let tables = LayerTables::build(weights, act_bits, &super::custom_fn::ConvFunc::Mul);
         TableParamLayer {
             values: tables.values().iter().map(|&v| v as f32).collect(),

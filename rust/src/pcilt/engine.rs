@@ -52,6 +52,32 @@ pub trait ConvEngine: Send + Sync {
     /// (multiplications, additions, table fetches). Used by the op-count
     /// experiments; engines report their true inner-loop behaviour.
     fn op_counts(&self, s: Shape4) -> OpCounts;
+
+    /// Registry metadata: exactness and built table footprint. Engines
+    /// that carry lookup tables override this; table-free engines (DM)
+    /// use the default. Consumed by the planner's calibration mode and
+    /// the `pcilt plan` report.
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            exact: true,
+            table_bytes: 0.0,
+        }
+    }
+}
+
+/// Registry metadata every engine reports (see [`ConvEngine::info`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineInfo {
+    /// Engine name (same as [`ConvEngine::name`]).
+    pub name: &'static str,
+    /// Integer-exact vs the DM baseline when built with `ConvFunc::Mul`.
+    /// Float-datapath baselines (Winograd, FFT) report `false` even though
+    /// they round-trip exactly at this repo's magnitudes — the planner
+    /// only auto-selects engines that guarantee bit-exactness.
+    pub exact: bool,
+    /// Bytes of lookup tables this built instance holds (0 if table-free).
+    pub table_bytes: f64,
 }
 
 /// Arithmetic/memory operation counts for an engine invocation.

@@ -9,7 +9,7 @@
 
 use crate::tensor::{Shape4, Tensor4};
 
-use super::engine::{ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// Complex number (no `num-complex` offline; two f64s suffice).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -237,6 +237,17 @@ impl ConvEngine for FftEngine {
             mults: ffts * butterflies_per_fft * 4 + pointwise * 4,
             adds: ffts * butterflies_per_fft * 6 + pointwise * 2,
             fetches: ffts * pts * 2 + pointwise * 2,
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        let spectra: usize = self.spectra.iter().flat_map(|p| p.iter().map(Vec::len)).sum();
+        EngineInfo {
+            name: self.name(),
+            // float spectra: rounds exactly at this repo's magnitudes, but
+            // not guaranteed bit-exact — the planner won't auto-pick.
+            exact: false,
+            table_bytes: spectra as f64 * 16.0,
         }
     }
 }

@@ -17,7 +17,7 @@ use crate::tensor::{Shape4, Tensor4};
 use crate::util::bitpack::{offset_space, pack_offset};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// One segment of a layout plan: the RF positions it covers (as flat
 /// `(ky*kw + kx)*ic + c` indices) and a scale factor applied to the whole
@@ -259,6 +259,23 @@ impl ConvEngine for LayoutEngine {
             mults: 0,
             adds: rfs * per_rf,
             fetches: rfs * (self.plan.work() as u64 + per_rf),
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        // Exact iff every position contributes its weight at most once and
+        // no segment rescales (reuse/factors weigh beyond the filter).
+        let mut seen = vec![0usize; self.positions];
+        for seg in &self.plan.segments {
+            for &p in &seg.positions {
+                seen[p] += 1;
+            }
+        }
+        let unscaled = self.plan.segments.iter().all(|s| s.factor == 1);
+        EngineInfo {
+            name: self.name(),
+            exact: unscaled && seen.iter().all(|&c| c <= 1),
+            table_bytes: self.entries() as f64 * 4.0,
         }
     }
 }

@@ -9,7 +9,7 @@
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::table::LayerTables;
 
 /// Basic PCILT engine.
@@ -167,6 +167,15 @@ impl ConvEngine for PciltEngine {
             // one activation fetch per position (shared across out chans)
             // plus one table fetch per (position, out channel).
             fetches: rfs * (self.tables.positions as u64 + per_rf),
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            exact: true,
+            // canonical tables + the channels-last mirror, i32 entries
+            table_bytes: (self.tables.entries() + self.cl.len()) as f64 * 4.0,
         }
     }
 }

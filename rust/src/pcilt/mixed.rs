@@ -17,7 +17,7 @@
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// Per-channel activation bit widths.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -139,11 +139,15 @@ impl MixedEngine {
     /// Worst-case code truncation (in LCD units) any channel suffers —
     /// zero in exact (LCD) mode.
     pub fn max_code_error(&self) -> u32 {
+        let lcd = self.widths.lcd_bits();
         self.widths
             .bits
             .iter()
             .zip(&self.shifts)
-            .map(|(&b, &sh)| if sh == 0 { 0 } else { (1u32 << sh) - 1 } << (self.widths.lcd_bits() - b))
+            .map(|(&b, &sh)| {
+                let lost = if sh == 0 { 0 } else { (1u32 << sh) - 1 };
+                lost << (lcd - b)
+            })
             .max()
             .unwrap_or(0)
     }
@@ -210,6 +214,15 @@ impl ConvEngine for MixedEngine {
             mults: 0,
             adds: rfs * per_rf,
             fetches: rfs * (self.positions as u64 + per_rf),
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            // exact only in LCD mode; lossy truncation reports inexact
+            exact: self.max_code_error() == 0,
+            table_bytes: self.cl.len() as f64 * 4.0,
         }
     }
 }

@@ -1,6 +1,7 @@
 //! The paper's contribution: PCILT convolution engines and their
-//! extensions, the DM/Winograd/FFT baselines, and the analytic memory
-//! model. See DESIGN.md §5 for the experiment mapping.
+//! extensions, the DM/Winograd/FFT baselines, the analytic memory model,
+//! and the engine auto-selection planner with data-parallel batch
+//! execution. See DESIGN.md §5 for the experiment mapping.
 
 pub mod as_weights;
 pub mod custom_fn;
@@ -12,6 +13,8 @@ pub mod layout;
 pub mod lookup;
 pub mod memory;
 pub mod mixed;
+pub mod parallel;
+pub mod planner;
 pub mod segment;
 pub mod shared;
 pub mod table;
@@ -19,11 +22,13 @@ pub mod winograd;
 
 pub use custom_fn::ConvFunc;
 pub use dm::DmEngine;
-pub use engine::{ConvEngine, ConvGeometry, OpCounts};
+pub use engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 pub use grouped::GroupedEngine;
 pub use layout::{LayoutEngine, LayoutPlan, SegmentSpec};
 pub use lookup::PciltEngine;
 pub use mixed::{ChannelWidths, MixedEngine};
+pub use parallel::conv_parallel;
+pub use planner::{Candidate, EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
 pub use segment::{RowSegmentEngine, SegmentEngine};
 pub use shared::SharedEngine;
 pub use table::{LayerTables, Pcilt};

@@ -1,0 +1,186 @@
+//! Data-parallel batch execution across the `N` dimension.
+//!
+//! Every `ConvEngine` is `Send + Sync` and every sample of an NHWC batch
+//! is independent, so a batch of `n` images splits into per-thread
+//! sub-batches that run the same engine concurrently on scoped threads
+//! (no thread pool dependency offline). Results are bit-identical to the
+//! serial path — chunks are contiguous `[n, h, w, c]` blocks reassembled
+//! in order.
+
+use std::sync::OnceLock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::engine::ConvEngine;
+
+/// Process-wide default thread count for batch parallelism; 0 = resolve
+/// from `PCILT_THREADS` or the machine's available parallelism.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the default parallelism (0 restores auto-detection).
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::SeqCst);
+}
+
+fn env_threads() -> Option<usize> {
+    static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("PCILT_THREADS").ok().and_then(|v| v.parse::<usize>().ok())
+    })
+}
+
+/// Intra-batch threads for a serving worker. Unlike [`effective_threads`],
+/// this is **opt-in**: a worker pool already parallelizes across requests,
+/// so stacking auto-detected intra-batch threads on top of N workers would
+/// oversubscribe the machine. Resolution: explicit process default
+/// (`set_default_threads`), then `PCILT_THREADS`, else 1.
+pub fn serving_threads() -> usize {
+    match DEFAULT_THREADS.load(Ordering::Relaxed) {
+        0 => env_threads().unwrap_or(1),
+        d => d,
+    }
+}
+
+/// Resolve the thread count to use for a batch of `batch` samples.
+/// `requested == 0` means "auto": the process default, then the
+/// `PCILT_THREADS` env var, then `std::thread::available_parallelism`.
+/// Always in `1..=batch.max(1)`.
+pub fn effective_threads(requested: usize, batch: usize) -> usize {
+    let auto = || {
+        env_threads().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    };
+    let n = if requested > 0 {
+        requested
+    } else {
+        match DEFAULT_THREADS.load(Ordering::Relaxed) {
+            0 => auto(),
+            d => d,
+        }
+    };
+    n.clamp(1, batch.max(1))
+}
+
+/// Split `n` samples into at most `threads` contiguous chunks, balanced to
+/// within one sample. Returns `(start, count)` pairs covering `0..n`.
+pub fn chunks(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.clamp(1, n.max(1));
+    let base = n / t;
+    let extra = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let count = base + usize::from(i < extra);
+        if count == 0 {
+            break;
+        }
+        out.push((start, count));
+        start += count;
+    }
+    out
+}
+
+/// Copy samples `[start, start+count)` of an NHWC tensor into an owned
+/// sub-batch (samples are contiguous blocks in row-major NHWC).
+pub fn slice_batch<T: Copy + Default>(x: &Tensor4<T>, start: usize, count: usize) -> Tensor4<T> {
+    let s = x.shape();
+    let per = s.h * s.w * s.c;
+    let shape = Shape4::new(count, s.h, s.w, s.c);
+    Tensor4::from_vec(shape, x.data()[start * per..(start + count) * per].to_vec())
+}
+
+/// Run `engine.conv` over the batch with `threads` workers (0 = auto).
+/// Bit-identical to `engine.conv(x)`; serial when the batch or thread
+/// count is 1.
+pub fn conv_parallel(engine: &dyn ConvEngine, x: &Tensor4<u8>, threads: usize) -> Tensor4<i32> {
+    let s = x.shape();
+    let t = effective_threads(threads, s.n);
+    if t <= 1 || s.n <= 1 {
+        return engine.conv(x);
+    }
+    let parts = chunks(s.n, t);
+    let results: Vec<Tensor4<i32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|&(start, count)| {
+                let sub = slice_batch(x, start, count);
+                scope.spawn(move || engine.conv(&sub))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("conv worker panicked")).collect()
+    });
+    let out_shape = engine.geometry().out_shape(s, engine.out_channels());
+    let mut data = Vec::with_capacity(out_shape.len());
+    for r in &results {
+        data.extend_from_slice(r.data());
+    }
+    Tensor4::from_vec(out_shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::engine::ConvGeometry;
+    use crate::pcilt::{DmEngine, PciltEngine, SegmentEngine};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn chunks_cover_and_balance() {
+        for (n, t) in [(8usize, 4usize), (7, 4), (3, 8), (1, 1), (16, 3)] {
+            let parts = chunks(n, t);
+            let total: usize = parts.iter().map(|&(_, c)| c).sum();
+            assert_eq!(total, n, "n={n} t={t}");
+            assert_eq!(parts[0].0, 0);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].0 + w[0].1, w[1].0, "gaps in {parts:?}");
+            }
+            let max = parts.iter().map(|&(_, c)| c).max().unwrap();
+            let min = parts.iter().map(|&(_, c)| c).min().unwrap();
+            assert!(max - min <= 1, "unbalanced {parts:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let mut rng = Rng::new(91);
+        let x = Tensor4::random_activations(Shape4::new(9, 10, 10, 2), 2, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let engines: Vec<Box<dyn ConvEngine>> = vec![
+            Box::new(DmEngine::new(w.clone(), geom)),
+            Box::new(PciltEngine::new(&w, 2, geom)),
+            Box::new(SegmentEngine::new(&w, 2, 4, geom)),
+        ];
+        for e in &engines {
+            let serial = e.conv(&x);
+            for threads in [1usize, 2, 3, 4, 16] {
+                assert_eq!(
+                    conv_parallel(e.as_ref(), &x, threads),
+                    serial,
+                    "{} with {threads} threads",
+                    e.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_sample_batches_stay_serial() {
+        let mut rng = Rng::new(93);
+        let x = Tensor4::random_activations(Shape4::new(1, 8, 8, 1), 2, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let e = PciltEngine::new(&w, 2, geom);
+        assert_eq!(conv_parallel(&e, &x, 8), e.conv(&x));
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(1, 100), 1);
+        assert!(effective_threads(0, 100) >= 1);
+        assert_eq!(effective_threads(3, 0), 1);
+    }
+}

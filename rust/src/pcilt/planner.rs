@@ -1,0 +1,817 @@
+//! Engine auto-selection planner — the cuDNN-`BestHeuristic` analogue for
+//! lookup-table convolution.
+//!
+//! The paper's claim is conditional: PCILT beats direct multiplication
+//! *when activation cardinality is low and tables fit fast memory*; the
+//! crossover flips for wide activations or tiny workloads (its own CPU
+//! caveat, reproduced in `bench_engines` E12). Hard-coding one engine per
+//! call site therefore leaves performance on the table. This module
+//! enumerates every `ConvEngine` implementation in the crate with registry
+//! metadata, prices each candidate with the analytic `OpCounts` +
+//! table-memory model (`pcilt::memory` economics: op mix, build
+//! amortization, cache-residency of the tables), and picks a per-layer
+//! winner. An optional calibration mode replaces the analytic score with a
+//! micro-benchmark of the built engines.
+//!
+//! Consumers: `model::EngineChoice::Auto` (serving picks engines per
+//! layer), `coordinator` (the `auto` route/backend), and the `pcilt plan`
+//! CLI subcommand (prints the scored table).
+
+use std::sync::RwLock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::custom_fn::ConvFunc;
+use super::dm::DmEngine;
+use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::fft::FftEngine;
+use super::layout::{LayoutEngine, LayoutPlan};
+use super::lookup::PciltEngine;
+use super::mixed::{ChannelWidths, MixedEngine};
+use super::segment::{RowSegmentEngine, SegmentEngine};
+use super::shared::SharedEngine;
+use super::winograd::WinogradEngine;
+
+/// One conv layer, as the planner sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub geom: ConvGeometry,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    /// Activation bit width (cardinality `2^act_bits`).
+    pub act_bits: u32,
+    /// Weight bit width (bounds the shared-table cardinality estimate).
+    pub weight_bits: u32,
+    /// Representative input (batch, h, w, in_ch) one invocation processes.
+    pub input: Shape4,
+}
+
+impl LayerSpec {
+    pub fn positions(&self) -> usize {
+        self.geom.kh * self.geom.kw * self.in_ch
+    }
+
+    /// Spec for a weight tensor (OHWI) at a given input.
+    pub fn for_weights(w: &Tensor4<i8>, act_bits: u32, input: Shape4) -> LayerSpec {
+        let s = w.shape();
+        LayerSpec {
+            geom: ConvGeometry::unit_stride(s.h, s.w),
+            in_ch: s.c,
+            out_ch: s.n,
+            act_bits,
+            weight_bits: 8,
+            input,
+        }
+    }
+}
+
+/// Identity of a planner candidate. Parameterized variants carry their
+/// tuning knob so `build` reconstructs exactly what was scored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineId {
+    Dm,
+    Pcilt,
+    Shared,
+    Mixed,
+    Segment { seg_n: usize },
+    SegmentRow { seg_n: usize },
+    Layout { seg_n: usize },
+    Grouped,
+    Winograd,
+    Fft,
+}
+
+impl EngineId {
+    /// Display label, including the tuning knob.
+    pub fn label(&self) -> String {
+        match self {
+            EngineId::Dm => "dm".to_string(),
+            EngineId::Pcilt => "pcilt".to_string(),
+            EngineId::Shared => "shared".to_string(),
+            EngineId::Mixed => "mixed".to_string(),
+            EngineId::Segment { seg_n } => format!("segment(n={seg_n})"),
+            EngineId::SegmentRow { seg_n } => format!("segment-row(n={seg_n})"),
+            EngineId::Layout { seg_n } => format!("layout(n={seg_n})"),
+            EngineId::Grouped => "grouped".to_string(),
+            EngineId::Winograd => "winograd".to_string(),
+            EngineId::Fft => "fft".to_string(),
+        }
+    }
+
+    /// Build the engine this id names for concrete weights. `Grouped` is
+    /// compositional (wraps an inner engine over grouped weights) and
+    /// cannot be built from a dense layer alone.
+    pub fn build(
+        &self,
+        weights: &Tensor4<i8>,
+        spec: &LayerSpec,
+    ) -> Result<Box<dyn ConvEngine>, String> {
+        let bits = spec.act_bits;
+        let geom = spec.geom;
+        Ok(match *self {
+            EngineId::Dm => Box::new(DmEngine::new(weights.clone(), geom)),
+            EngineId::Pcilt => Box::new(PciltEngine::new(weights, bits, geom)),
+            EngineId::Shared => Box::new(SharedEngine::new(weights, bits, geom)),
+            EngineId::Mixed => Box::new(MixedEngine::new(
+                weights,
+                ChannelWidths::uniform(spec.in_ch, bits),
+                geom,
+            )),
+            EngineId::Segment { seg_n } => Box::new(SegmentEngine::new(weights, bits, seg_n, geom)),
+            EngineId::SegmentRow { seg_n } => {
+                Box::new(RowSegmentEngine::new(weights, bits, seg_n, geom))
+            }
+            EngineId::Layout { seg_n } => {
+                let plan = LayoutPlan::dense(spec.positions(), seg_n);
+                Box::new(LayoutEngine::new(weights, bits, plan, geom))
+            }
+            EngineId::Grouped => {
+                return Err("grouped is compositional; build it around an inner engine".into())
+            }
+            EngineId::Winograd => Box::new(WinogradEngine::new(weights)),
+            EngineId::Fft => Box::new(FftEngine::new(weights, spec.input.h, spec.input.w)),
+        })
+    }
+}
+
+/// A scored registry entry for one layer.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub id: EngineId,
+    pub label: String,
+    /// Integer-exact vs DM (planner only auto-selects exact engines unless
+    /// the policy allows approximate ones).
+    pub exact: bool,
+    /// `None` = usable; `Some(reason)` = listed but not selectable.
+    pub infeasible: Option<String>,
+    /// Predicted per-invocation op counts on `spec.input`.
+    pub ops: OpCounts,
+    /// Predicted lookup-table bytes held by the built engine.
+    pub table_bytes: f64,
+    /// One-off table construction cost in `f` evaluations.
+    pub build_evals: u64,
+    /// Analytic cost (lower is better); micro-benchmark ns in calibration
+    /// mode.
+    pub score: f64,
+}
+
+/// Scoring weights for the analytic cost model. Units are arbitrary
+/// "op energies" — the defaults follow the Dally ratios in `asic::cost`
+/// (an INT multiply ≈ several adds; a cache-resident fetch ≈ an add; a
+/// spilled fetch much worse).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannerPolicy {
+    pub mult_cost: f64,
+    pub add_cost: f64,
+    pub fetch_cost: f64,
+    /// Fast-memory budget for tables; beyond it fetches pay `miss_penalty`.
+    pub cache_bytes: f64,
+    /// Multiplier on table fetches once tables spill the cache budget.
+    pub miss_penalty: f64,
+    /// How many invocations of `spec.input` one table build amortizes over
+    /// (a serving deployment uses a large value; a one-shot run uses 1).
+    pub amortize_invocations: f64,
+    /// Let the planner select float-datapath baselines (Winograd/FFT).
+    pub allow_approximate: bool,
+}
+
+impl Default for PlannerPolicy {
+    fn default() -> Self {
+        PlannerPolicy {
+            mult_cost: 4.0,
+            add_cost: 1.0,
+            fetch_cost: 1.0,
+            cache_bytes: 512.0 * 1024.0,
+            miss_penalty: 8.0,
+            amortize_invocations: 100.0,
+            allow_approximate: false,
+        }
+    }
+}
+
+impl PlannerPolicy {
+    fn score(&self, ops: OpCounts, table_bytes: f64, build_evals: u64) -> f64 {
+        let fetch_factor = if table_bytes <= self.cache_bytes { 1.0 } else { self.miss_penalty };
+        ops.mults as f64 * self.mult_cost
+            + ops.adds as f64 * self.add_cost
+            + ops.fetches as f64 * self.fetch_cost * fetch_factor
+            + build_evals as f64 * self.mult_cost / self.amortize_invocations.max(1.0)
+    }
+}
+
+/// The plan for one layer: every candidate, scored, plus the winner.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub spec: LayerSpec,
+    /// All registry entries, sorted best-score-first (infeasible last).
+    pub candidates: Vec<Candidate>,
+    /// Winner id (best feasible candidate the policy may select).
+    pub chosen: EngineId,
+}
+
+impl LayerPlan {
+    /// The winning candidate's registry row.
+    pub fn chosen_candidate(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .find(|c| c.id == self.chosen)
+            .expect("chosen id is always a candidate")
+    }
+
+    /// Candidate row by id, if enumerated.
+    pub fn candidate(&self, id: EngineId) -> Option<&Candidate> {
+        self.candidates.iter().find(|c| c.id == id)
+    }
+
+    /// Render the scored table (used by `pcilt plan`).
+    pub fn report(&self) -> String {
+        use crate::util::stats::{fmt_bytes, fmt_count};
+        let g = self.spec.geom;
+        let mut out = format!(
+            "layer {}x{}x{} -> {}ch k{}x{} a{} (batch {})\n",
+            self.spec.input.h,
+            self.spec.input.w,
+            self.spec.in_ch,
+            self.spec.out_ch,
+            g.kh,
+            g.kw,
+            self.spec.act_bits,
+            self.spec.input.n,
+        );
+        out.push_str(&format!(
+            "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12}  {}\n",
+            "engine", "mults", "adds", "fetches", "tables", "score", "status"
+        ));
+        for c in &self.candidates {
+            let status = match (&c.infeasible, c.id == self.chosen) {
+                (Some(reason), _) => format!("- {reason}"),
+                (None, true) => "<== chosen".to_string(),
+                (None, false) if !c.exact => "(approximate)".to_string(),
+                (None, false) => String::new(),
+            };
+            out.push_str(&format!(
+                "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12.3e}  {}\n",
+                c.label,
+                fmt_count(c.ops.mults as u128),
+                fmt_count(c.ops.adds as u128),
+                fmt_count(c.ops.fetches as u128),
+                fmt_bytes(c.table_bytes),
+                c.score,
+                status,
+            ));
+        }
+        out
+    }
+}
+
+/// Process-wide policy used wherever a planner is needed but no policy is
+/// threaded through explicitly — most importantly the serving path
+/// (`EngineChoice::Auto` is resolved inside worker threads that only see a
+/// `BackendSpec`). `None` until configured; reads fall back to
+/// `PlannerPolicy::default()`.
+static DEFAULT_POLICY: RwLock<Option<PlannerPolicy>> = RwLock::new(None);
+
+/// Batch size the default plan scores against (serving sets its max batch).
+static DEFAULT_PLAN_BATCH: AtomicUsize = AtomicUsize::new(8);
+
+/// Install the process-default policy (serving calls this with the
+/// `[planner]` config before starting workers).
+pub fn set_default_policy(policy: PlannerPolicy) {
+    *DEFAULT_POLICY.write().unwrap() = Some(policy);
+}
+
+/// The current process-default policy.
+pub fn default_policy() -> PlannerPolicy {
+    DEFAULT_POLICY.read().unwrap().clone().unwrap_or_default()
+}
+
+/// Install the batch size default plans score against.
+pub fn set_default_plan_batch(batch: usize) {
+    DEFAULT_PLAN_BATCH.store(batch.max(1), Ordering::SeqCst);
+}
+
+/// The current default planning batch.
+pub fn default_plan_batch() -> usize {
+    DEFAULT_PLAN_BATCH.load(Ordering::Relaxed)
+}
+
+/// The registry + policy = the planner.
+#[derive(Debug, Clone)]
+pub struct EnginePlanner {
+    pub policy: PlannerPolicy,
+}
+
+impl Default for EnginePlanner {
+    /// Uses the process-default policy (see [`set_default_policy`]).
+    fn default() -> Self {
+        EnginePlanner {
+            policy: default_policy(),
+        }
+    }
+}
+
+impl EnginePlanner {
+    pub fn new(policy: PlannerPolicy) -> EnginePlanner {
+        EnginePlanner { policy }
+    }
+
+    /// Enumerate and score every engine for `spec`. `weights`, when given,
+    /// sharpens the shared-table estimate with the actual distinct-value
+    /// count.
+    pub fn plan_layer(&self, spec: &LayerSpec, weights: Option<&Tensor4<i8>>) -> LayerPlan {
+        let mut candidates = registry(spec, &self.policy, weights);
+        // Feasible first, then by ascending score; stable so enumeration
+        // order breaks ties deterministically.
+        candidates.sort_by(|a, b| {
+            let ka = (a.infeasible.is_some(), a.score);
+            let kb = (b.infeasible.is_some(), b.score);
+            ka.partial_cmp(&kb).expect("scores are finite")
+        });
+        let chosen = candidates
+            .iter()
+            .find(|c| c.infeasible.is_none() && (c.exact || self.policy.allow_approximate))
+            .map(|c| c.id)
+            // DM is always enumerated and always feasible.
+            .unwrap_or(EngineId::Dm);
+        LayerPlan {
+            spec: *spec,
+            candidates,
+            chosen,
+        }
+    }
+
+    /// Plan + build in one step: the serving path for `EngineChoice::Auto`.
+    /// Falls back to DM if the winner cannot be built (never expected for
+    /// the exact set, but the fallback keeps serving alive).
+    pub fn choose(&self, weights: &Tensor4<i8>, spec: &LayerSpec) -> Box<dyn ConvEngine> {
+        let plan = self.plan_layer(spec, Some(weights));
+        plan.chosen
+            .build(weights, spec)
+            .unwrap_or_else(|_| Box::new(DmEngine::new(weights.clone(), spec.geom)))
+    }
+
+    /// Calibration mode: build every feasible selectable candidate and
+    /// micro-benchmark `conv` on a random input of `spec.input`, replacing
+    /// the analytic score with measured p50 nanoseconds. Candidates that
+    /// fail to build keep their analytic score and gain an infeasible
+    /// reason.
+    pub fn calibrate(&self, spec: &LayerSpec, weights: &Tensor4<i8>, seed: u64) -> LayerPlan {
+        use crate::util::prng::Rng;
+        use crate::util::timing::{bench, BenchOpts};
+        let mut plan = self.plan_layer(spec, Some(weights));
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random_activations(spec.input, spec.act_bits, &mut rng);
+        let opts = BenchOpts::quick();
+        for c in &mut plan.candidates {
+            if c.infeasible.is_some() || (!c.exact && !self.policy.allow_approximate) {
+                continue;
+            }
+            match c.id.build(weights, spec) {
+                Ok(engine) => {
+                    let r = bench(&c.label, &opts, || engine.conv(&x));
+                    c.score = r.ns_per_iter();
+                }
+                Err(reason) => c.infeasible = Some(reason),
+            }
+        }
+        plan.candidates.sort_by(|a, b| {
+            let ka = (a.infeasible.is_some(), a.score);
+            let kb = (b.infeasible.is_some(), b.score);
+            ka.partial_cmp(&kb).expect("scores are finite")
+        });
+        plan.chosen = plan
+            .candidates
+            .iter()
+            .find(|c| c.infeasible.is_none() && (c.exact || self.policy.allow_approximate))
+            .map(|c| c.id)
+            .unwrap_or(EngineId::Dm);
+        plan
+    }
+}
+
+/// Upper bound on table bytes before a candidate is "infeasible" rather
+/// than merely penalized — a 1 GiB table is a configuration error.
+const TABLE_BYTES_CEILING: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Enumerate the full engine registry for one layer. Every `ConvEngine`
+/// implementation appears, either scored or with an infeasibility reason.
+pub fn registry(
+    spec: &LayerSpec,
+    policy: &PlannerPolicy,
+    weights: Option<&Tensor4<i8>>,
+) -> Vec<Candidate> {
+    let g = spec.geom;
+    let positions = spec.positions() as u64;
+    let oc = spec.out_ch as u64;
+    let rfs = rf_count(g, spec.input);
+    let per_rf = positions * oc;
+    let card = 1u64 << spec.act_bits;
+    let mut out = Vec::new();
+
+    let mut push = |id: EngineId,
+                    exact: bool,
+                    infeasible: Option<String>,
+                    ops: OpCounts,
+                    table_bytes: f64,
+                    build_evals: u64| {
+        let too_big = infeasible.is_none() && table_bytes > TABLE_BYTES_CEILING;
+        let infeasible = if too_big {
+            Some(format!("tables would need {:.1} GiB", table_bytes / TABLE_BYTES_CEILING))
+        } else {
+            infeasible
+        };
+        out.push(Candidate {
+            id,
+            label: id.label(),
+            exact,
+            infeasible,
+            ops,
+            table_bytes,
+            build_evals,
+            score: policy.score(ops, table_bytes, build_evals),
+        });
+    };
+
+    // DM: the baseline; weights are its only memory.
+    push(
+        EngineId::Dm,
+        true,
+        None,
+        OpCounts {
+            mults: rfs * per_rf,
+            adds: rfs * per_rf,
+            fetches: rfs * per_rf * 2,
+        },
+        (positions * oc) as f64,
+        0,
+    );
+
+    // Basic PCILT: canonical tables + channels-last mirror (i32 each).
+    push(
+        EngineId::Pcilt,
+        true,
+        None,
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            fetches: rfs * (positions + per_rf),
+        },
+        (oc * positions * card) as f64 * 8.0,
+        oc * positions * card,
+    );
+
+    // Shared tables: unique-weight dedup bounds the table count.
+    let unique = match weights {
+        Some(w) => {
+            let mut seen = [false; 256];
+            let mut n = 0u64;
+            for &v in w.data() {
+                let i = (v as i16 + 128) as usize;
+                if !seen[i] {
+                    seen[i] = true;
+                    n += 1;
+                }
+            }
+            n
+        }
+        None => {
+            let max_card = (1u64 << spec.weight_bits).saturating_sub(1).max(1);
+            max_card.min(positions * oc)
+        }
+    };
+    push(
+        EngineId::Shared,
+        true,
+        None,
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            fetches: rfs * (positions + 2 * per_rf),
+        },
+        (unique * card) as f64 * 4.0 + (oc * positions) as f64,
+        unique * card,
+    );
+
+    // Mixed-cardinality engine with uniform widths == basic PCILT with a
+    // single (channels-last) table copy.
+    push(
+        EngineId::Mixed,
+        true,
+        None,
+        OpCounts {
+            mults: 0,
+            adds: rfs * per_rf,
+            fetches: rfs * (positions + per_rf),
+        },
+        (oc * positions * card) as f64 * 4.0,
+        oc * positions * card,
+    );
+
+    // Segment-offset variants: one fetch per segment instead of per
+    // position; table rows grow as 2^(seg_n * act_bits).
+    for seg_n in [2usize, 4, 8] {
+        let width = seg_n as u32 * spec.act_bits;
+        if width > 16 {
+            push(
+                EngineId::Segment { seg_n },
+                true,
+                Some(format!("offset space 2^{width} infeasible")),
+                OpCounts::default(),
+                0.0,
+                0,
+            );
+            continue;
+        }
+        let seg_card = 1u64 << width;
+        let n_seg = positions.div_ceil(seg_n as u64);
+        push(
+            EngineId::Segment { seg_n },
+            true,
+            None,
+            OpCounts {
+                mults: 0,
+                adds: rfs * n_seg * oc,
+                fetches: rfs * (positions + n_seg * oc),
+            },
+            (oc * n_seg * seg_card) as f64 * 4.0,
+            oc * n_seg * seg_card * seg_n as u64,
+        );
+    }
+
+    // Row-aligned segments: O(1) window extraction per segment, segments
+    // never cross kernel rows (more segments when rows are short).
+    {
+        let seg_n = match spec.act_bits {
+            1 => 8usize,
+            2 => 8,
+            3..=4 => 4,
+            _ => 2,
+        };
+        let width = seg_n as u32 * spec.act_bits;
+        if width <= 16 {
+            let seg_card = 1u64 << width;
+            let row_positions = (g.kw * spec.in_ch) as u64;
+            let spr = row_positions.div_ceil(seg_n as u64);
+            let n_seg = g.kh as u64 * spr;
+            let stream_ops = (spec.input.h * spec.input.w * spec.in_ch) as u64;
+            push(
+                EngineId::SegmentRow { seg_n },
+                true,
+                None,
+                OpCounts {
+                    mults: 0,
+                    adds: rfs * n_seg * oc,
+                    fetches: rfs * (n_seg + n_seg * oc) + stream_ops,
+                },
+                (oc * n_seg * seg_card) as f64 * 4.0,
+                oc * n_seg * seg_card * seg_n as u64,
+            );
+        } else {
+            push(
+                EngineId::SegmentRow { seg_n },
+                true,
+                Some(format!("offset space 2^{width} infeasible")),
+                OpCounts::default(),
+                0.0,
+                0,
+            );
+        }
+    }
+
+    // Layout plans (dense): the Fig 7 generalization; per-RF packing makes
+    // it strictly slower than row-aligned segments on CPU but it is the
+    // only engine that supports zero-skipping and reuse plans.
+    {
+        let seg_n = (12 / spec.act_bits.max(1)).clamp(1, 4) as usize;
+        let seg_card = 1u64 << (seg_n as u32 * spec.act_bits);
+        let n_seg = positions.div_ceil(seg_n as u64);
+        push(
+            EngineId::Layout { seg_n },
+            true,
+            None,
+            OpCounts {
+                mults: 0,
+                adds: rfs * n_seg * oc,
+                fetches: rfs * (positions + n_seg * oc),
+            },
+            (oc * n_seg * seg_card) as f64 * 4.0,
+            oc * n_seg * seg_card * seg_n as u64,
+        );
+    }
+
+    // Grouped: compositional wrapper, not directly buildable from a dense
+    // layer — enumerated so the registry is complete.
+    push(
+        EngineId::Grouped,
+        true,
+        Some("compositional: wraps an inner engine over grouped weights".into()),
+        OpCounts::default(),
+        0.0,
+        0,
+    );
+
+    // Winograd F(2x2, 3x3): float datapath, 3x3 unit-stride only.
+    if g.kh == 3 && g.kw == 3 && g.sy == 1 && g.sx == 1 {
+        let (oh, ow) = spec.input.conv_out(3, 3, 1, 1);
+        let tiles = (spec.input.n * oh.div_ceil(2) * ow.div_ceil(2)) as u64;
+        let pairs = (spec.in_ch * spec.out_ch) as u64;
+        push(
+            EngineId::Winograd,
+            false,
+            None,
+            OpCounts {
+                mults: tiles * pairs * 16,
+                adds: tiles * (spec.in_ch as u64 * 32 + oc * 24 + pairs * 16),
+                fetches: tiles * (spec.in_ch as u64 * 16 + pairs * 16),
+            },
+            pairs as f64 * 16.0 * 8.0,
+            pairs * 16,
+        );
+    } else {
+        push(
+            EngineId::Winograd,
+            false,
+            Some("needs 3x3 unit-stride geometry".into()),
+            OpCounts::default(),
+            0.0,
+            0,
+        );
+    }
+
+    // FFT: float spectra, unit stride only.
+    if g.sy == 1 && g.sx == 1 {
+        let fh = spec.input.h.next_power_of_two() as u64;
+        let fw = spec.input.w.next_power_of_two() as u64;
+        let pts = fh * fw;
+        let lg = (pts as f64).log2() as u64;
+        let ffts = spec.input.n as u64 * (spec.in_ch as u64 + oc);
+        let butterflies = pts / 2 * lg;
+        let pointwise = spec.input.n as u64 * (spec.in_ch as u64 * oc) * pts;
+        push(
+            EngineId::Fft,
+            false,
+            None,
+            OpCounts {
+                mults: ffts * butterflies * 4 + pointwise * 4,
+                adds: ffts * butterflies * 6 + pointwise * 2,
+                fetches: ffts * pts * 2 + pointwise * 2,
+            },
+            (spec.in_ch as u64 * oc * pts) as f64 * 16.0,
+            (spec.in_ch as u64 * oc) * pts,
+        );
+    } else {
+        push(
+            EngineId::Fft,
+            false,
+            Some("needs unit stride".into()),
+            OpCounts::default(),
+            0.0,
+            0,
+        );
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn spec(h: usize, w: usize, ic: usize, oc: usize, k: usize, bits: u32) -> LayerSpec {
+        LayerSpec {
+            geom: ConvGeometry::unit_stride(k, k),
+            in_ch: ic,
+            out_ch: oc,
+            act_bits: bits,
+            weight_bits: 8,
+            input: Shape4::new(1, h, w, ic),
+        }
+    }
+
+    #[test]
+    fn registry_enumerates_every_engine_family() {
+        let s = spec(32, 32, 4, 8, 3, 4);
+        let cands = registry(&s, &PlannerPolicy::default(), None);
+        let labels: Vec<String> = cands.iter().map(|c| c.label.clone()).collect();
+        let families = [
+            "dm",
+            "pcilt",
+            "shared",
+            "mixed",
+            "segment(",
+            "segment-row",
+            "layout",
+            "grouped",
+            "winograd",
+            "fft",
+        ];
+        for family in families {
+            assert!(
+                labels.iter().any(|l| l.starts_with(family)),
+                "missing {family} in {labels:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn pcilt_ranks_above_dm_for_low_bit_large_rf() {
+        // bool activations over a big frame, 5x5 filter: the paper's home
+        // turf. Tables are tiny and the build cost amortizes instantly.
+        let s = spec(64, 64, 1, 8, 5, 1);
+        let plan = EnginePlanner::default().plan_layer(&s, None);
+        let pcilt = plan.candidate(EngineId::Pcilt).unwrap().score;
+        let dm = plan.candidate(EngineId::Dm).unwrap().score;
+        assert!(pcilt < dm, "pcilt {pcilt} should beat dm {dm}");
+        // and the chosen engine is one of the lookup family, not DM
+        assert_ne!(plan.chosen, EngineId::Dm);
+    }
+
+    #[test]
+    fn dm_ranks_above_pcilt_for_high_bit_tiny_layer() {
+        // INT8 activations, many channels, tiny frame: tables spill the
+        // cache and the build cost cannot amortize — the paper's own CPU
+        // caveat (E12).
+        let s = spec(8, 8, 8, 32, 3, 8);
+        let plan = EnginePlanner::default().plan_layer(&s, None);
+        let pcilt = plan.candidate(EngineId::Pcilt).unwrap().score;
+        let dm = plan.candidate(EngineId::Dm).unwrap().score;
+        assert!(dm < pcilt, "dm {dm} should beat pcilt {pcilt}");
+    }
+
+    #[test]
+    fn chosen_engine_is_always_exact_by_default() {
+        for (h, bits, k) in [(16usize, 1u32, 3usize), (32, 4, 5), (8, 8, 3)] {
+            let s = spec(h, h, 2, 4, k, bits);
+            let plan = EnginePlanner::default().plan_layer(&s, None);
+            let c = plan.chosen_candidate();
+            assert!(c.exact, "{} is not exact", c.label);
+            assert!(c.infeasible.is_none());
+        }
+    }
+
+    #[test]
+    fn infeasible_segments_are_listed_with_reasons() {
+        let s = spec(16, 16, 2, 4, 3, 8);
+        let plan = EnginePlanner::default().plan_layer(&s, None);
+        // seg_n=4 and 8 at 8 bits are 2^32/2^64 rows: infeasible.
+        let c = plan.candidate(EngineId::Segment { seg_n: 8 }).unwrap();
+        assert!(c.infeasible.is_some());
+        // but they are still enumerated (registry completeness)
+        assert!(plan.candidates.len() >= 10);
+    }
+
+    #[test]
+    fn weights_sharpen_the_shared_estimate() {
+        // Two distinct weight values -> 2 unique tables, far below the
+        // 255-value worst case the blind estimate assumes.
+        let w = Tensor4::from_fn(Shape4::new(8, 3, 3, 4), |_, _, kx, _| {
+            if kx == 0 {
+                1i8
+            } else {
+                -1
+            }
+        });
+        let s = spec(32, 32, 4, 8, 3, 8);
+        let planner = EnginePlanner::default();
+        let blind = planner.plan_layer(&s, None);
+        let informed = planner.plan_layer(&s, Some(&w));
+        let b = blind.candidate(EngineId::Shared).unwrap().table_bytes;
+        let i = informed.candidate(EngineId::Shared).unwrap().table_bytes;
+        assert!(i < b / 10.0, "informed {i} vs blind {b}");
+    }
+
+    #[test]
+    fn choose_builds_the_chosen_engine() {
+        let mut rng = Rng::new(5);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 8, &mut rng);
+        let s = spec(16, 16, 2, 4, 3, 2);
+        let planner = EnginePlanner::default();
+        let plan = planner.plan_layer(&s, Some(&w));
+        let engine = planner.choose(&w, &s);
+        assert_eq!(engine.name(), plan.chosen.build(&w, &s).unwrap().name());
+        assert_eq!(engine.out_channels(), 4);
+    }
+
+    #[test]
+    fn calibrate_scores_are_measured_times() {
+        let mut rng = Rng::new(7);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let s = spec(12, 12, 1, 2, 3, 2);
+        let plan = EnginePlanner::default().calibrate(&s, &w, 11);
+        let c = plan.chosen_candidate();
+        assert!(c.score > 0.0, "measured time must be positive");
+        assert!(c.exact);
+    }
+
+    #[test]
+    fn report_renders_every_candidate() {
+        let s = spec(16, 16, 1, 4, 3, 2);
+        let plan = EnginePlanner::default().plan_layer(&s, None);
+        let r = plan.report();
+        assert!(r.contains("<== chosen"));
+        assert!(r.contains("dm"));
+        assert!(r.contains("grouped"));
+    }
+}

@@ -19,7 +19,7 @@ use crate::tensor::{Shape4, Tensor4};
 use crate::util::bitpack::{offset_space, pack_offset};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// Segment-offset engine for one conv layer.
 pub struct SegmentEngine {
@@ -209,6 +209,14 @@ impl ConvEngine for SegmentEngine {
             // the productivity mechanism of Fig 6.
             adds: rfs * per_rf,
             fetches: rfs * (self.positions as u64 + per_rf),
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            exact: true,
+            table_bytes: self.values.len() as f64 * 4.0,
         }
     }
 }
@@ -488,6 +496,14 @@ impl ConvEngine for RowSegmentEngine {
             // one O(1) window extraction per segment + one row fetch per
             // (segment, oc); row packing amortizes to ~1 op/activation.
             fetches: rfs * (self.n_segments as u64 + per_rf) + (s.h * s.w * s.c) as u64,
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            exact: true,
+            table_bytes: self.cl.len() as f64 * 4.0,
         }
     }
 }

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// Shared-table store for one layer: unique tables + per-position pointers.
 pub struct SharedTables {
@@ -258,6 +258,14 @@ impl ConvEngine for SharedEngine {
             adds: rfs * per_rf,
             // extra pointer fetch per (position, oc): the indirection cost.
             fetches: rfs * (self.tables.positions as u64 + 2 * per_rf),
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            exact: true,
+            table_bytes: self.tables.bytes(32).total(),
         }
     }
 }

@@ -10,7 +10,7 @@
 
 use crate::tensor::{Shape4, Tensor4};
 
-use super::engine::{ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// Winograd engine for 3×3 kernels, unit stride.
 pub struct WinogradEngine {
@@ -190,6 +190,16 @@ impl ConvEngine for WinogradEngine {
             mults,
             adds,
             fetches: tiles * (self.in_ch as u64 * 16 + ch_pairs * 16),
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            // f64 datapath: exact at this repo's magnitudes, but not
+            // guaranteed bit-exact in general — the planner won't auto-pick.
+            exact: false,
+            table_bytes: self.u.len() as f64 * 8.0,
         }
     }
 }

@@ -18,14 +18,35 @@ pub struct ArtifactBundle {
 }
 
 /// Errors from artifact loading.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest parse error: {0}")]
-    Parse(#[from] crate::config::toml::ParseError),
-    #[error("manifest invalid: {0}")]
+    Io(std::io::Error),
+    Parse(crate::config::toml::ParseError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "io error: {e}"),
+            ArtifactError::Parse(e) => write!(f, "manifest parse error: {e}"),
+            ArtifactError::Invalid(msg) => write!(f, "manifest invalid: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> ArtifactError {
+        ArtifactError::Io(e)
+    }
+}
+
+impl From<crate::config::toml::ParseError> for ArtifactError {
+    fn from(e: crate::config::toml::ParseError) -> ArtifactError {
+        ArtifactError::Parse(e)
+    }
 }
 
 fn invalid<T>(msg: impl Into<String>) -> Result<T, ArtifactError> {

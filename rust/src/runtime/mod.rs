@@ -1,8 +1,17 @@
 //! Runtime: loads the AOT artifact bundle (`make artifacts`) and executes
 //! the HLO via the PJRT C API (`xla` crate). Python never runs here —
 //! the bundle is self-contained.
+//!
+//! PJRT execution requires the `xla` cargo feature (and the `xla` crate,
+//! which the offline build cannot vendor). Without it, [`pjrt`] is a stub
+//! with the same API that errors at runtime; everything else in the crate
+//! — every native engine, the planner, the coordinator — works without it.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifact::{ArtifactBundle, ArtifactError};

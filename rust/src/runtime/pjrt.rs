@@ -6,9 +6,8 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::tensor::Tensor4;
+use crate::util::error::{self as anyhow, Context, Result};
 
 /// A PJRT CPU client (wrap to keep `xla` types out of the public API).
 pub struct PjrtContext {

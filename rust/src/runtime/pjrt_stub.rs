@@ -1,0 +1,52 @@
+//! Stub PJRT runtime, compiled when the `xla` feature is off.
+//!
+//! Presents the same API as `pjrt.rs` so the coordinator's `Hlo` backend
+//! and the CLI compile unchanged; every entry point returns a descriptive
+//! error at runtime. The offline build cannot vendor the `xla` crate, so
+//! this is the default configuration (see `runtime/mod.rs`).
+
+use std::path::Path;
+
+use crate::tensor::Tensor4;
+use crate::util::error::{bail, Result};
+
+/// Stand-in for the PJRT CPU client.
+pub struct PjrtContext {
+    _private: (),
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<PjrtContext> {
+        bail!("PJRT support not compiled in; rebuild with `--features xla`")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load_hlo(&self, path: &Path) -> Result<CompiledModel> {
+        bail!("PJRT support not compiled in; cannot load {path:?}")
+    }
+}
+
+/// Stand-in for a compiled (engine, batch) executable.
+pub struct CompiledModel {
+    _private: (),
+}
+
+impl CompiledModel {
+    pub fn infer(&self, _codes: &Tensor4<u8>, _classes: usize) -> Result<Vec<Vec<i32>>> {
+        bail!("PJRT support not compiled in; rebuild with `--features xla`")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let e = PjrtContext::cpu().err().expect("stub must error");
+        assert!(e.to_string().contains("xla"), "message was: {e}");
+    }
+}

@@ -2,8 +2,9 @@
 
 use std::fmt;
 
-use super::Shape4;
 use crate::util::prng::Rng;
+
+use super::Shape4;
 
 /// Dense rank-4 tensor, row-major NHWC (or OHWI for filters).
 #[derive(Clone, PartialEq)]

@@ -1,0 +1,162 @@
+//! Minimal `anyhow`-compatible error handling for the offline build.
+//!
+//! The serving coordinator and CLI were written against the `anyhow` API
+//! (`Result`, `Context`, `bail!`, `ensure!`, `anyhow!`); this module
+//! provides the subset they use with no external dependency. Importing the
+//! module under the alias `anyhow` keeps call sites unchanged:
+//!
+//! ```no_run
+//! use pcilt::util::error::{self as anyhow, bail, Context, Result};
+//!
+//! fn load(path: &str) -> Result<String> {
+//!     if path.is_empty() {
+//!         bail!("empty path");
+//!     }
+//!     std::fs::read_to_string(path).with_context(|| format!("reading {path}"))
+//! }
+//! ```
+
+use std::fmt;
+
+/// A string error. Context layers are flattened into the message at attach
+/// time (`"outer: inner"`), so `{}` and `{:#}` render identically. Like
+/// `anyhow::Error`, it deliberately does **not** implement
+/// `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` defaulted to [`Error`], as in `anyhow`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed message.
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string — `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! __pcilt_anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] — `anyhow::bail!`.
+#[macro_export]
+macro_rules! __pcilt_bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds —
+/// `anyhow::ensure!`.
+#[macro_export]
+macro_rules! __pcilt_ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+pub use crate::__pcilt_anyhow as anyhow;
+pub use crate::__pcilt_bail as bail;
+pub use crate::__pcilt_ensure as ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::{anyhow, bail, ensure, Context, Error, Result};
+
+    fn failing(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        bail!("unreachable end")
+    }
+
+    #[test]
+    fn ensure_and_bail_produce_errors() {
+        assert_eq!(failing(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(failing(true).unwrap_err().to_string(), "unreachable end");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+    }
+
+    #[test]
+    fn context_flattens_and_alternate_renders() {
+        let r: Result<()> = Err(Error::msg("root"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: root");
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(format!("{e:?}"), "outer: root");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/pcilt")?)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        let v = Some(3u8).with_context(|| "unused").unwrap();
+        assert_eq!(v, 3);
+    }
+}

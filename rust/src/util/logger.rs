@@ -1,67 +1,137 @@
-//! Tiny leveled logger backing the `log` crate facade.
+//! Tiny leveled stderr logger with a `log`-crate-shaped macro facade.
 //!
-//! The serving coordinator and CLI log through `log::{info!, warn!, ...}`;
-//! this module provides the stderr sink (no `env_logger` offline). Level is
+//! The serving coordinator and CLI log through `log::{info!, warn!, ...}`
+//! where `log` is this module imported under an alias
+//! (`use crate::util::logger as log;`). No `log`/`env_logger` crates are
+//! available offline, so the facade and the sink live here. Level is
 //! controlled by `PCILT_LOG` (error|warn|info|debug|trace), default `info`.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
-use once_cell::sync::Lazy;
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static INSTALLED: AtomicBool = AtomicBool::new(false);
-
-struct StderrLogger;
-
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.elapsed();
-        let lvl = match record.level() {
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!(
-            "[{:>8.3}s {} {}] {}",
-            t.as_secs_f64(),
-            lvl,
-            record.target(),
-            record.args()
-        );
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+static START: OnceLock<Instant> = OnceLock::new();
 
 /// Install the logger (idempotent). Reads `PCILT_LOG` for the level.
 pub fn init() {
+    START.get_or_init(Instant::now);
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
     let level = match std::env::var("PCILT_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    // set_logger fails only if a logger is already installed, which is fine.
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    set_max_level(level);
 }
+
+/// Set the maximum level that will be emitted.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::SeqCst);
+}
+
+/// Is a record at `level` currently emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record. Called by the macros; `target` is `module_path!()`.
+#[doc(hidden)]
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!("[{:>8.3}s {} {}] {}", t.as_secs_f64(), level.label(), target, args);
+}
+
+#[macro_export]
+macro_rules! __pcilt_log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! __pcilt_log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! __pcilt_log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! __pcilt_log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! __pcilt_log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+pub use crate::__pcilt_log_debug as debug;
+pub use crate::__pcilt_log_error as error;
+pub use crate::__pcilt_log_info as info;
+pub use crate::__pcilt_log_trace as trace;
+pub use crate::__pcilt_log_warn as warn;
 
 #[cfg(test)]
 mod tests {
@@ -71,6 +141,14 @@ mod tests {
     fn init_is_idempotent() {
         init();
         init();
-        log::info!("logger smoke test");
+        crate::util::logger::info!("logger smoke test");
+    }
+
+    #[test]
+    fn levels_order_and_filter() {
+        assert!(Level::Error < Level::Trace);
+        init();
+        // Whatever the env set, Error is always within the max level.
+        assert!(enabled(Level::Error));
     }
 }

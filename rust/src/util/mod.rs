@@ -1,9 +1,11 @@
 //! Foundation utilities: deterministic PRNG, statistics, bit packing,
-//! bench timing, logging, and a minimal property-testing harness.
-//! These substitute for crates unavailable in the offline build
-//! (`rand`, `criterion`, `env_logger`, `proptest`) — see DESIGN.md §2.
+//! bench timing, logging, error handling, and a minimal property-testing
+//! harness. These substitute for crates unavailable in the offline build
+//! (`rand`, `criterion`, `env_logger`, `proptest`, `anyhow`, `log`) — see
+//! DESIGN.md §2.
 
 pub mod bitpack;
+pub mod error;
 pub mod logger;
 pub mod prng;
 pub mod propcheck;

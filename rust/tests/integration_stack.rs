@@ -1,7 +1,10 @@
 //! Integration tests over the full stack: artifact bundle → PJRT → native
 //! engines → serving coordinator. These REQUIRE `make artifacts` (the
 //! Makefile's `test` target guarantees the ordering); they fail loudly if
-//! the bundle is missing rather than silently skipping.
+//! the bundle is missing rather than silently skipping. They also require
+//! the `xla` cargo feature (PJRT), which the offline default build cannot
+//! provide — the whole file is compiled out without it.
+#![cfg(feature = "xla")]
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;

@@ -1,0 +1,151 @@
+//! Planner + parallel-execution integration tests: the auto-selection
+//! registry ranks engines the way the paper's economics say it should, and
+//! whatever the planner picks stays bit-exact with the DM baseline —
+//! including under batch-parallel execution and through the serving
+//! coordinator's `auto` backend.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pcilt::coordinator::{BackendSpec, NativeEngineKind, Server, ServerOpts};
+use pcilt::model::{random_params, EngineChoice, QuantCnn};
+use pcilt::pcilt::dm::conv_reference;
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::parallel::conv_parallel;
+use pcilt::pcilt::planner::{EngineId, EnginePlanner, LayerSpec, PlannerPolicy};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::propcheck::forall;
+
+/// The paper's headline regime: low-cardinality activations over a large
+/// receptive field — lookup tables must out-rank direct multiplication.
+#[test]
+fn registry_ranks_pcilt_above_dm_on_low_bit_large_rf() {
+    let planner = EnginePlanner::default();
+    for (bits, k, side) in [(1u32, 5usize, 96usize), (2, 5, 64), (4, 3, 64)] {
+        let spec = LayerSpec {
+            geom: ConvGeometry::unit_stride(k, k),
+            in_ch: 1,
+            out_ch: 8,
+            act_bits: bits,
+            weight_bits: 8,
+            input: Shape4::new(1, side, side, 1),
+        };
+        let plan = planner.plan_layer(&spec, None);
+        let pcilt = plan.candidate(EngineId::Pcilt).unwrap().score;
+        let dm = plan.candidate(EngineId::Dm).unwrap().score;
+        assert!(
+            pcilt < dm,
+            "a{bits} k{k} {side}x{side}: pcilt {pcilt} !< dm {dm}"
+        );
+    }
+}
+
+/// The paper's own CPU caveat: wide activations and a tiny workload flip
+/// the crossover back to DM (tables spill cache, builds cannot amortize).
+#[test]
+fn registry_ranks_dm_above_pcilt_on_high_bit_tiny_layer() {
+    let planner = EnginePlanner::default();
+    let spec = LayerSpec {
+        geom: ConvGeometry::unit_stride(3, 3),
+        in_ch: 8,
+        out_ch: 32,
+        act_bits: 8,
+        weight_bits: 8,
+        input: Shape4::new(1, 8, 8, 8),
+    };
+    let plan = planner.plan_layer(&spec, None);
+    let pcilt = plan.candidate(EngineId::Pcilt).unwrap().score;
+    let dm = plan.candidate(EngineId::Dm).unwrap().score;
+    assert!(dm < pcilt, "dm {dm} !< pcilt {pcilt}");
+}
+
+/// Whatever the planner selects computes the same convolution as the DM
+/// engine, bit for bit, across random layer shapes and cardinalities.
+#[test]
+fn planner_selected_engines_match_dm_bit_for_bit() {
+    forall("planner choice == dm reference", 20, |g| {
+        let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+        let bits = *rng.choose(&[1u32, 2, 4, 8]);
+        let (kh, kw) = *rng.choose(&[(3usize, 3usize), (5, 5)]);
+        let ic = rng.range_i64(1, 3) as usize;
+        let oc = rng.range_i64(1, 4) as usize;
+        let h = kh + rng.range_i64(0, 6) as usize;
+        let wd = kw + rng.range_i64(0, 6) as usize;
+        let x = Tensor4::random_activations(Shape4::new(2, h, wd, ic), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+        let spec = LayerSpec::for_weights(&w, bits, x.shape());
+        let planner = EnginePlanner::default();
+        let engine = planner.choose(&w, &spec);
+        let expect = conv_reference(&x, &w, spec.geom);
+        assert_eq!(engine.conv(&x), expect, "engine {}", engine.name());
+        // and the parallel path over the same engine agrees too
+        assert_eq!(
+            conv_parallel(engine.as_ref(), &x, 4),
+            expect,
+            "parallel {}",
+            engine.name()
+        );
+    });
+}
+
+/// Turning the amortization knob all the way down forces the planner to
+/// respect one-shot build costs; all the way up, serving economics win.
+#[test]
+fn amortization_knob_moves_the_crossover() {
+    let spec = LayerSpec {
+        geom: ConvGeometry::unit_stride(3, 3),
+        in_ch: 2,
+        out_ch: 4,
+        act_bits: 8,
+        weight_bits: 8,
+        input: Shape4::new(1, 10, 10, 2),
+    };
+    let one_shot = EnginePlanner::new(PlannerPolicy {
+        amortize_invocations: 1.0,
+        ..PlannerPolicy::default()
+    });
+    let serving = EnginePlanner::new(PlannerPolicy {
+        amortize_invocations: 1e9,
+        ..PlannerPolicy::default()
+    });
+    let p1 = one_shot.plan_layer(&spec, None);
+    let p2 = serving.plan_layer(&spec, None);
+    let score_1 = p1.candidate(EngineId::Pcilt).unwrap().score;
+    let score_2 = p2.candidate(EngineId::Pcilt).unwrap().score;
+    assert!(
+        score_2 < score_1,
+        "amortization must lower table-engine scores ({score_2} !< {score_1})"
+    );
+}
+
+/// End-to-end: the coordinator's `auto` backend serves answers identical
+/// to a DM pool over the same weights.
+#[test]
+fn auto_backend_serves_dm_identical_answers() {
+    let mut rng = Rng::new(77);
+    let params = random_params(4, &mut rng);
+    let reference = QuantCnn::new(params.clone(), EngineChoice::Dm);
+    let server = Arc::new(
+        Server::start(
+            BackendSpec::Native {
+                params,
+                engine: NativeEngineKind::Auto,
+            },
+            &ServerOpts {
+                workers: 2,
+                max_batch: 8,
+                batch_deadline: Duration::from_micros(500),
+                queue_capacity: 128,
+            },
+        )
+        .unwrap(),
+    );
+    for i in 0..12 {
+        let img = Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 4, &mut rng);
+        let resp = server.infer_blocking(img.clone()).unwrap();
+        assert_eq!(resp.logits, reference.forward(&img)[0], "request {i}");
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 12);
+}
