@@ -1,0 +1,123 @@
+//! Table-store lifecycle benchmark: cold build vs warm (persisted) load
+//! vs dedup-shared construction.
+//!
+//! The paper's tables are *pre-calculated*; this bench measures what the
+//! `TableStore` buys a serving deployment around that fact:
+//!
+//! * **cold** — fresh store, full table build (the per-boot cost the store
+//!   eliminates);
+//! * **warm** — a fresh store loading the checksummed `tables.bin` cache a
+//!   previous boot persisted (`pcilt tables prebuild` / `[tables] persist`);
+//! * **dedup** — N identical layers borrowing one allocation vs N private
+//!   builds (the §Using Shared PCILTs footprint, attacked across layers).
+//!
+//! Results (and speedups) land in the JSON file named by
+//! `PCILT_BENCH_JSON` so CI tracks the trajectory (`BENCH_tables.json`).
+
+use pcilt::pcilt::engine::ConvGeometry;
+use pcilt::pcilt::{ConvFunc, PciltEngine, TableStore};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::timing::{bench, section, BenchOpts, BenchResult};
+
+/// `PCILT_BENCH_QUICK=1` shrinks the measurement budget (CI smoke runs).
+fn bench_opts() -> BenchOpts {
+    if std::env::var("PCILT_BENCH_QUICK").is_ok() {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    }
+}
+
+const DEDUP_LAYERS: usize = 8;
+
+fn main() {
+    section("Table lifecycle: cold build vs warm (persisted) load vs dedup-shared");
+    let opts = bench_opts();
+    let mut rng = Rng::new(11);
+    // A serving-sized layer: 32 oc x (3*3*16) positions x 2^8 cardinality
+    // = ~1.2M table entries (~4.7 MB), the scale §Using Shared PCILTs
+    // worries about per layer.
+    let w = Tensor4::random_weights(Shape4::new(32, 3, 3, 16), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let bits = 8u32;
+    let f = ConvFunc::Mul;
+
+    // Cold: every boot pays the full build.
+    let cold = bench("cold build", &opts, || {
+        let store = TableStore::new();
+        PciltEngine::from_store(&store, &w, bits, geom, &f).tables().entries()
+    });
+    println!("{}", cold.report());
+
+    // Persist once, then measure warm boots loading the cache.
+    let dir = std::env::temp_dir().join("pcilt_bench_tables_cache");
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let store = TableStore::new();
+        let _e = PciltEngine::from_store(&store, &w, bits, geom, &f);
+        store.save(&dir).expect("persist table cache");
+    }
+    let warm = bench("warm load (persisted)", &opts, || {
+        let store = TableStore::new();
+        store.load(&dir).expect("load table cache");
+        let e = PciltEngine::from_store(&store, &w, bits, geom, &f);
+        assert_eq!(store.stats().builds, 0, "warm boot must not build");
+        e.tables().entries()
+    });
+    println!("{}", warm.report());
+
+    // Dedup: N identical layers — owned builds N times, the store once.
+    let owned = bench(&format!("{DEDUP_LAYERS} layers, owned tables"), &opts, || {
+        (0..DEDUP_LAYERS)
+            .map(|_| PciltEngine::new(&w, bits, geom).tables().entries())
+            .sum::<usize>()
+    });
+    println!("{}", owned.report());
+    let shared = bench(&format!("{DEDUP_LAYERS} layers, dedup-shared"), &opts, || {
+        let store = TableStore::new();
+        (0..DEDUP_LAYERS)
+            .map(|_| PciltEngine::from_store(&store, &w, bits, geom, &f).tables().entries())
+            .sum::<usize>()
+    });
+    println!("{}", shared.report());
+
+    let warm_speedup = cold.ns_per_iter() / warm.ns_per_iter();
+    let dedup_speedup = owned.ns_per_iter() / shared.ns_per_iter();
+    println!("warm load speedup over cold build: {warm_speedup:.2}x");
+    println!("dedup-shared speedup over {DEDUP_LAYERS} owned builds: {dedup_speedup:.2}x");
+
+    if let Ok(path) = std::env::var("PCILT_BENCH_JSON") {
+        let results = [&cold, &warm, &owned, &shared];
+        write_bench_json(&path, &results, warm_speedup, dedup_speedup);
+        println!("wrote {path}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hand-rolled JSON (no serde offline); names are plain ASCII.
+fn write_bench_json(
+    path: &str,
+    results: &[&BenchResult],
+    warm_speedup: f64,
+    dedup_speedup: f64,
+) {
+    let mut rows = String::new();
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"p50_ns\": {:.1}, \"mean_ns\": {:.1}, \"iters\": {}}}",
+            r.name, r.summary.p50, r.summary.mean, r.iters
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_tables/lifecycle\",\n  \"dedup_layers\": {DEDUP_LAYERS},\n  \
+         \"warm_load_speedup\": {warm_speedup:.3},\n  \"dedup_speedup\": {dedup_speedup:.3},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("failed to write {path}: {e}");
+    }
+}

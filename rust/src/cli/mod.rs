@@ -5,10 +5,14 @@
 
 use std::collections::BTreeMap;
 
-/// Parsed command line: subcommand + key/value options.
+/// Parsed command line: subcommand + key/value options, plus an optional
+/// positional action for subcommands that take one (`pcilt tables stats`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Args {
     pub subcommand: String,
+    /// Positional action following the subcommand; only captured by
+    /// [`Args::parse_with_action`], `None` otherwise.
+    pub action: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
@@ -49,8 +53,35 @@ impl Args {
         valued: &[&str],
         flags: &[&str],
     ) -> Result<Args, CliError> {
-        let mut it = raw.iter();
+        Self::parse_inner(raw, valued, flags, false)
+    }
+
+    /// Like [`Args::parse`], but one leading non-`--` token after the
+    /// subcommand is captured as the action (`pcilt tables stats`).
+    pub fn parse_with_action(
+        raw: &[String],
+        valued: &[&str],
+        flags: &[&str],
+    ) -> Result<Args, CliError> {
+        Self::parse_inner(raw, valued, flags, true)
+    }
+
+    fn parse_inner(
+        raw: &[String],
+        valued: &[&str],
+        flags: &[&str],
+        takes_action: bool,
+    ) -> Result<Args, CliError> {
+        let mut it = raw.iter().peekable();
         let subcommand = it.next().ok_or(CliError::MissingSubcommand)?.clone();
+        let action = if takes_action {
+            match it.peek() {
+                Some(tok) if !tok.starts_with("--") => Some(it.next().unwrap().clone()),
+                _ => None,
+            }
+        } else {
+            None
+        };
         let mut opts = BTreeMap::new();
         let mut got_flags = Vec::new();
         while let Some(tok) = it.next() {
@@ -70,6 +101,7 @@ impl Args {
         }
         Ok(Args {
             subcommand,
+            action,
             opts,
             flags: got_flags,
         })
@@ -125,7 +157,8 @@ SUBCOMMANDS:
               --deadline-us N   batch deadline        (default 2000)
               --artifacts DIR   artifact bundle       (default artifacts)
               --config FILE     TOML config (overrides defaults;
-                                [planner] section tunes auto-selection)
+                                [planner] tunes auto-selection, [tables]
+                                sets the table-store budget/persistence)
   plan      print the engine registry with predicted OpCounts/memory per
             layer and the planner's chosen engine (no artifacts needed)
               --act-bits B      sample-model activation bits (default 4)
@@ -136,6 +169,25 @@ SUBCOMMANDS:
                                 analytic model
   validate  cross-check PJRT artifact vs native engines on the smoke pair
               --artifacts DIR
+  tables    table-store lifecycle (content-addressed dedup + persistence)
+            actions:
+              stats     inspect a persisted cache (entries, bytes, kinds)
+              prebuild  build the planner-chosen tables for a model and
+                        persist them (parallel workers)
+              purge     delete the persisted cache
+            options:
+              --config FILE     serve TOML: prebuild plans with its
+                                [planner] policy and [tables] cache dir, so
+                                persisted winners match the warm boot
+              --cache-dir DIR   cache location (default <artifacts>/table_cache)
+              --artifacts DIR   model to prebuild for (default artifacts;
+                                falls back to the seeded sample model)
+              --act-bits B      sample-model activation bits (default 4)
+              --batch N         planning batch size   (default: max_batch)
+              --threads N       parallel build workers (default 0 = auto)
+              --budget-mb N     byte budget while building (default 0 = off)
+              --all             prebuild every table engine, not just the
+                                planner's winner
   sim       ASIC simulator comparison tables (E2/E3)
               --lanes N  --clock GHZ  --act-bits B
   memory    PCILT memory model report (E6/E7 paper numbers)
@@ -199,6 +251,28 @@ mod tests {
     #[test]
     fn positional_rejected() {
         let e = Args::parse(&v(&["serve", "oops"]), &[], &[]).unwrap_err();
+        assert!(matches!(e, CliError::UnexpectedPositional(_)));
+    }
+
+    #[test]
+    fn action_parses_when_enabled() {
+        let a = Args::parse_with_action(
+            &v(&["tables", "prebuild", "--cache-dir", "/tmp/x"]),
+            &["cache-dir"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "tables");
+        assert_eq!(a.action.as_deref(), Some("prebuild"));
+        assert_eq!(a.get("cache-dir"), Some("/tmp/x"));
+        // no action given: options still parse
+        let b =
+            Args::parse_with_action(&v(&["tables", "--cache-dir", "/tmp/y"]), &["cache-dir"], &[])
+                .unwrap();
+        assert_eq!(b.action, None);
+        assert_eq!(b.get("cache-dir"), Some("/tmp/y"));
+        // a second positional is still rejected
+        let e = Args::parse_with_action(&v(&["tables", "stats", "oops"]), &[], &[]).unwrap_err();
         assert!(matches!(e, CliError::UnexpectedPositional(_)));
     }
 }

@@ -83,6 +83,50 @@ pub enum PlannerMode {
     Calibrate,
 }
 
+/// `[tables]` section: lifecycle knobs for the process-wide
+/// `pcilt::store::TableStore` (byte budget, persisted cache location).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TablesConfig {
+    /// LRU eviction budget for resident tables, in MiB. 0 = unlimited:
+    /// the store retains every table for the process lifetime (that IS
+    /// the cache). Long-running deployments whose weights change over
+    /// time (periodic refresh, many distinct models) should set a budget
+    /// so stale tables are evicted rather than accumulated.
+    pub budget_mb: usize,
+    /// Directory holding `tables.bin` + `tables.manifest`. Empty = default
+    /// to `<artifact_dir>/table_cache`.
+    pub cache_dir: String,
+    /// Load the cache at startup and save it at shutdown, so a restarted
+    /// server performs zero redundant table builds.
+    pub persist: bool,
+}
+
+impl Default for TablesConfig {
+    fn default() -> Self {
+        TablesConfig {
+            budget_mb: 0,
+            cache_dir: String::new(),
+            persist: false,
+        }
+    }
+}
+
+impl TablesConfig {
+    /// Budget in bytes for `TableStore::set_budget_bytes`.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_mb as u64 * 1024 * 1024
+    }
+
+    /// The cache directory, defaulting under the artifact dir.
+    pub fn resolve_cache_dir(&self, artifact_dir: &str) -> std::path::PathBuf {
+        if self.cache_dir.is_empty() {
+            Path::new(artifact_dir).join("table_cache")
+        } else {
+            std::path::PathBuf::from(&self.cache_dir)
+        }
+    }
+}
+
 impl Default for PlannerConfig {
     fn default() -> Self {
         let p = PlannerPolicy::default();
@@ -135,6 +179,8 @@ pub struct ServeConfig {
     pub total_requests: usize,
     /// `[planner]` section (engine auto-selection).
     pub planner: PlannerConfig,
+    /// `[tables]` section (table-store budget + persistence).
+    pub tables: TablesConfig,
 }
 
 impl Default for ServeConfig {
@@ -149,6 +195,7 @@ impl Default for ServeConfig {
             rate_rps: 500.0,
             total_requests: 2_000,
             planner: PlannerConfig::default(),
+            tables: TablesConfig::default(),
         }
     }
 }
@@ -274,6 +321,26 @@ impl ServeConfig {
                         .ok_or_else(|| {
                             ConfigError::Invalid("planner.allow_approximate must be a bool".into())
                         })?;
+                }
+                "tables.budget_mb" => {
+                    // 0 is meaningful (= unlimited), so not pos_usize
+                    cfg.tables.budget_mb = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as usize,
+                        _ => return invalid("tables.budget_mb must be >= 0"),
+                    };
+                }
+                "tables.cache_dir" => {
+                    cfg.tables.cache_dir = doc
+                        .get_str(key)
+                        .ok_or_else(|| {
+                            ConfigError::Invalid("tables.cache_dir must be a string".into())
+                        })?
+                        .to_string();
+                }
+                "tables.persist" => {
+                    cfg.tables.persist = doc.get_bool(key).ok_or_else(|| {
+                        ConfigError::Invalid("tables.persist must be a bool".into())
+                    })?;
                 }
                 k if k.starts_with("network.") => {} // parsed by NetworkSpec
                 k => return invalid(format!("unknown config key '{k}'")),
@@ -427,6 +494,47 @@ allow_approximate = true
         assert_eq!(cfg.planner.add_cost, PlannerConfig::default().add_cost);
         let policy = cfg.planner.to_policy();
         assert_eq!(policy.cache_bytes, 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn tables_section_parses() {
+        let doc = Document::parse(
+            r#"
+[tables]
+budget_mb = 256
+cache_dir = "/var/cache/pcilt"
+persist = true
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.tables.budget_mb, 256);
+        assert_eq!(cfg.tables.budget_bytes(), 256 * 1024 * 1024);
+        assert_eq!(cfg.tables.cache_dir, "/var/cache/pcilt");
+        assert!(cfg.tables.persist);
+        assert_eq!(
+            cfg.tables.resolve_cache_dir("artifacts"),
+            std::path::PathBuf::from("/var/cache/pcilt")
+        );
+    }
+
+    #[test]
+    fn tables_defaults_and_cache_dir_fallback() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.tables.budget_mb, 0, "default is unlimited");
+        assert!(!cfg.tables.persist);
+        assert_eq!(
+            cfg.tables.resolve_cache_dir("artifacts"),
+            std::path::Path::new("artifacts").join("table_cache")
+        );
+    }
+
+    #[test]
+    fn tables_bad_values_rejected() {
+        let doc = Document::parse("[tables]\nbudget_mb = -1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[tables]\npersist = 3").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
     }
 
     #[test]

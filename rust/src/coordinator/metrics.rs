@@ -1,10 +1,13 @@
 //! Serving metrics: counters + latency histograms, shared across worker
 //! threads behind a mutex (updates are batched per inference batch, so
-//! contention is negligible relative to inference cost).
+//! contention is negligible relative to inference cost), plus the
+//! process-wide table-store counters (hits/misses/builds/evictions) so a
+//! serving report shows whether warm-up reused or rebuilt its tables.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::pcilt::store::{TableStore, TableStoreStats};
 use crate::util::stats::{fmt_ns, LatencyHistogram};
 
 #[derive(Debug, Default, Clone)]
@@ -19,6 +22,9 @@ pub struct MetricsSnapshot {
     pub max_latency_ns: u64,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
+    /// Process-wide table-store counters at snapshot time (the workers all
+    /// borrow tables through `TableStore::process`).
+    pub tables: TableStoreStats,
 }
 
 impl MetricsSnapshot {
@@ -26,7 +32,8 @@ impl MetricsSnapshot {
         format!(
             "requests: {} submitted, {} rejected, {} completed in {:.2}s\n\
              throughput: {:.0} req/s | batches: {} (mean size {:.2})\n\
-             latency: p50={} p99={} max={}",
+             latency: p50={} p99={} max={}\n\
+             {}",
             self.submitted,
             self.rejected_full,
             self.completed,
@@ -37,6 +44,7 @@ impl MetricsSnapshot {
             fmt_ns(self.p50_latency_ns),
             fmt_ns(self.p99_latency_ns),
             fmt_ns(self.max_latency_ns as f64),
+            self.tables.report(),
         )
     }
 }
@@ -133,6 +141,7 @@ impl Metrics {
                 0.0
             },
             elapsed_s: elapsed,
+            tables: TableStore::process().stats(),
         }
     }
 }
@@ -164,5 +173,8 @@ mod tests {
         let r = m.snapshot().report();
         assert!(r.contains("completed"));
         assert!(r.contains("p99"));
+        // the table-store counters ride along in every serving report
+        assert!(r.contains("tables:"));
+        assert!(r.contains("hits"));
     }
 }

@@ -16,6 +16,7 @@ use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCn
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec};
 use pcilt::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec};
+use pcilt::pcilt::store::{PrebuildRequest, StoreIoError, TableStore};
 use pcilt::pcilt::{parallel, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
 use pcilt::runtime::{ArtifactBundle, PjrtContext};
 use pcilt::tensor::{Shape4, Tensor4};
@@ -42,6 +43,15 @@ fn dispatch(raw: &[String]) -> Result<()> {
     if raw.is_empty() || raw[0] == "help" || raw[0] == "--help" {
         println!("{USAGE}");
         return Ok(());
+    }
+    if raw[0] == "tables" {
+        // `tables` takes a positional action (stats|prebuild|purge).
+        let args = Args::parse_with_action(
+            raw,
+            &["cache-dir", "artifacts", "act-bits", "batch", "threads", "budget-mb", "config"],
+            &["all"],
+        )?;
+        return cmd_tables(&args);
     }
     let valued = [
         "engine",
@@ -96,6 +106,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     pcilt::pcilt::planner::set_default_policy(cfg.planner.to_policy());
     pcilt::pcilt::planner::set_default_plan_batch(cfg.max_batch);
 
+    // [tables]: budget the process store and warm it from the persisted
+    // cache so a restarted server performs zero redundant table builds.
+    let store = TableStore::process();
+    store.set_budget_bytes(cfg.tables.budget_bytes());
+    let cache_dir = cfg.tables.resolve_cache_dir(&cfg.artifact_dir);
+    if cfg.tables.persist {
+        match store.load(&cache_dir) {
+            Ok(n) if n > 0 => {
+                log::info!("tables: warmed {n} entries from {}", cache_dir.display())
+            }
+            Ok(_) => {}
+            // No cache yet (first boot) is not an error; anything else —
+            // permissions, disk faults, corruption — deserves a warning
+            // but must never block serving.
+            Err(StoreIoError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => log::warn!("tables: ignoring unreadable cache: {e}"),
+        }
+    }
+
     let bundle = ArtifactBundle::load(Path::new(&cfg.artifact_dir)).with_context(|| {
         format!(
             "loading artifacts from '{}'; run `make artifacts` first",
@@ -105,18 +134,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let act_bits = bundle.params.act_bits;
     let img = bundle.params.img;
     if cfg.engine == EngineKind::Auto {
-        // Log what the planner picked before the pool spins up.
-        for (i, plan) in plan_model(&bundle.params, cfg.planner.to_policy(), cfg.max_batch)
-            .iter()
-            .enumerate()
-        {
+        // Log what the planner picked before the pool spins up — through
+        // the same store the workers use, so warmed caches show as
+        // "(cached)" here and the logged plan is exactly what gets built.
+        let planner =
+            EnginePlanner::with_store(cfg.planner.to_policy(), TableStore::process().clone());
+        let [s1, s2] = layer_specs(&bundle.params, cfg.max_batch);
+        let plans = [
+            planner.plan_layer(&s1, Some(&bundle.params.w1)),
+            planner.plan_layer(&s2, Some(&bundle.params.w2)),
+        ];
+        for (i, plan) in plans.iter().enumerate() {
             let c = plan.chosen_candidate();
             log::info!(
-                "planner: layer {} -> {} (score {:.3e}, tables {})",
+                "planner: layer {} -> {} (score {:.3e}, tables {}{})",
                 i + 1,
                 c.label,
                 c.score,
-                fmt_bytes(c.table_bytes)
+                fmt_bytes(c.table_bytes),
+                if c.cached { ", cached" } else { "" }
             );
         }
     }
@@ -167,6 +203,139 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("--- server ({}) ---", cfg.engine.name());
     println!("{}", metrics.report());
+    if cfg.tables.persist {
+        match TableStore::process().save(&cache_dir) {
+            Ok(r) => log::info!(
+                "tables: persisted {} entries to {}",
+                r.entries,
+                r.bin_path.display()
+            ),
+            Err(e) => log::warn!("tables: failed to persist cache: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// `pcilt tables <stats|prebuild|purge>` — table-store lifecycle.
+/// `--config` points at the same TOML `pcilt serve` uses, so prebuild
+/// plans with the serve-time `[planner]` policy and resolves the same
+/// `[tables]` cache dir — the persisted winners are exactly what a warm
+/// boot will ask for.
+fn cmd_tables(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ServeConfig::load(Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    let artifact_dir = args.get_str("artifacts", &cfg.artifact_dir).to_string();
+    let cache_dir = match args.get("cache-dir") {
+        Some(d) => Path::new(d).to_path_buf(),
+        None => cfg.tables.resolve_cache_dir(&artifact_dir),
+    };
+    match args.action.as_deref().unwrap_or("stats") {
+        "stats" => {
+            match TableStore::cache_info(&cache_dir) {
+                Ok(info) => {
+                    println!("table cache at {}:", cache_dir.display());
+                    println!("  entries:  {}", info.entries);
+                    println!("  payload:  {}", fmt_bytes(info.payload_bytes as f64));
+                    println!("  checksum: {:016x} (verified)", info.checksum);
+                    for (kind, n) in &info.kinds {
+                        println!("  kind {kind}: {n}");
+                    }
+                }
+                Err(e) => println!("no readable table cache at {}: {e}", cache_dir.display()),
+            }
+            Ok(())
+        }
+        "prebuild" => cmd_tables_prebuild(args, &cfg, &artifact_dir, &cache_dir),
+        "purge" => {
+            if TableStore::purge_cache(&cache_dir)? {
+                println!("purged table cache at {}", cache_dir.display());
+            } else {
+                println!("no table cache at {}", cache_dir.display());
+            }
+            Ok(())
+        }
+        other => bail!("unknown tables action '{other}'; try stats|prebuild|purge"),
+    }
+}
+
+/// Build the planner-chosen (or, with `--all`, every feasible) table
+/// artifact for the model's conv layers on parallel workers and persist
+/// them, so the next `pcilt serve` boot performs zero table builds.
+/// Plans with the `--config` `[planner]` policy at the serve `max_batch`
+/// so the prebuilt winners match what serving will actually request.
+fn cmd_tables_prebuild(
+    args: &Args,
+    cfg: &ServeConfig,
+    artifact_dir: &str,
+    cache_dir: &Path,
+) -> Result<()> {
+    let act_bits = args.get_usize("act-bits", 4)? as u32;
+    let batch = args.get_usize("batch", cfg.max_batch)?;
+    let threads = args.get_usize("threads", cfg.planner.threads)?;
+    let budget_mb = args.get_usize("budget-mb", cfg.tables.budget_mb)?;
+    let all = args.flag("all");
+    let params = match ArtifactBundle::load(Path::new(artifact_dir)) {
+        Ok(bundle) => {
+            println!("prebuilding tables for artifact bundle '{artifact_dir}'");
+            bundle.params
+        }
+        Err(_) => {
+            println!(
+                "no artifact bundle at '{artifact_dir}'; using the seeded sample model \
+                 (act_bits={act_bits})"
+            );
+            random_params(act_bits, &mut Rng::new(42))
+        }
+    };
+    let store = Arc::new(TableStore::with_budget(budget_mb as u64 * 1024 * 1024));
+    // Incremental: keep whatever an earlier prebuild already persisted.
+    match store.load(cache_dir) {
+        Ok(n) if n > 0 => println!("loaded {n} existing cache entries"),
+        _ => {}
+    }
+    let planner = EnginePlanner::with_store(cfg.planner.to_policy(), store.clone());
+    let [s1, s2] = layer_specs(&params, batch);
+    let mut requests: Vec<PrebuildRequest> = Vec::new();
+    for (spec, w) in [(s1, &params.w1), (s2, &params.w2)] {
+        let plan = planner.plan_layer(&spec, Some(w));
+        let ids: Vec<_> = if all {
+            plan.candidates
+                .iter()
+                .filter(|c| c.infeasible.is_none() && c.exact)
+                .map(|c| c.id)
+                .collect()
+        } else {
+            vec![plan.chosen]
+        };
+        for id in ids {
+            let Some(key) = id.table_key(w, &spec) else {
+                continue; // table-free winner (e.g. DM): nothing to cache
+            };
+            let w = w.clone();
+            requests.push(PrebuildRequest {
+                key,
+                build: Box::new(move || {
+                    id.build_artifact(&w, &spec).expect("keyed engines build artifacts")
+                }),
+            });
+        }
+    }
+    let requested = requests.len();
+    let built = store.prebuild(requests, threads);
+    let report = store.save(cache_dir)?;
+    println!(
+        "built {built} of {requested} requested table sets on {} workers",
+        parallel::effective_threads(threads, requested.max(1)),
+    );
+    println!(
+        "persisted {} entries ({}) to {}",
+        report.entries,
+        fmt_bytes(report.payload_bytes as f64),
+        report.bin_path.display()
+    );
+    println!("{}", store.stats().report());
     Ok(())
 }
 

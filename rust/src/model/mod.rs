@@ -6,9 +6,12 @@
 //! Python, and what the integration tests compare bit-for-bit against the
 //! PJRT artifact outputs (`artifacts/smoke_*.bin`).
 
+use std::sync::Arc;
+
 use crate::pcilt::engine::{ConvEngine, ConvGeometry};
 use crate::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
-use crate::pcilt::{parallel, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
+use crate::pcilt::store::TableStore;
+use crate::pcilt::{parallel, ConvFunc, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
 use crate::tensor::{max_pool2d, Shape4, Tensor4};
 
 /// Frozen integer model parameters + scales (mirror of python
@@ -61,15 +64,17 @@ fn build_engine(
     act_bits: u32,
     geom: ConvGeometry,
     choice: &EngineChoice,
+    store: &TableStore,
 ) -> Box<dyn ConvEngine> {
+    let f = ConvFunc::Mul;
     match choice {
         EngineChoice::Dm => Box::new(DmEngine::new(w.clone(), geom)),
-        EngineChoice::Pcilt => Box::new(PciltEngine::new(w, act_bits, geom)),
+        EngineChoice::Pcilt => Box::new(PciltEngine::from_store(store, w, act_bits, geom, &f)),
         EngineChoice::Segment { seg_n } => {
-            Box::new(SegmentEngine::new(w, act_bits, *seg_n, geom))
+            Box::new(SegmentEngine::from_store(store, w, act_bits, *seg_n, geom, &f))
         }
-        EngineChoice::Shared => Box::new(SharedEngine::new(w, act_bits, geom)),
-        EngineChoice::Auto => unreachable!("Auto is resolved in QuantCnn::new"),
+        EngineChoice::Shared => Box::new(SharedEngine::from_store(store, w, act_bits, geom, &f)),
+        EngineChoice::Auto => unreachable!("Auto is resolved in QuantCnn::with_store"),
     }
 }
 
@@ -103,21 +108,38 @@ pub fn plan_model(params: &ModelParams, policy: PlannerPolicy, batch: usize) -> 
 }
 
 impl QuantCnn {
+    /// Build against the process-wide [`TableStore`]: a model loaded twice
+    /// in one process (or after [`TableStore::load`] restored a persisted
+    /// cache) performs zero redundant table builds.
     pub fn new(params: ModelParams, choice: EngineChoice) -> QuantCnn {
+        Self::with_store(params, choice, TableStore::process())
+    }
+
+    /// Build with an explicit table store (tests use private stores to
+    /// assert exact hit/build counts).
+    pub fn with_store(
+        params: ModelParams,
+        choice: EngineChoice,
+        store: &Arc<TableStore>,
+    ) -> QuantCnn {
         let geom = ConvGeometry::unit_stride(params.kernel, params.kernel);
         let (conv1, conv2) = match &choice {
             EngineChoice::Auto => {
                 // Resolves against the process-default policy/batch so a
                 // worker thread that only sees a BackendSpec builds exactly
-                // what `[planner]` configured (planner::set_default_policy).
-                let planner = EnginePlanner::default();
+                // what `[planner]` configured (planner::set_default_policy),
+                // borrowing tables through the store.
+                let planner = EnginePlanner::with_store(
+                    crate::pcilt::planner::default_policy(),
+                    store.clone(),
+                );
                 let batch = crate::pcilt::planner::default_plan_batch();
                 let [s1, s2] = layer_specs(&params, batch);
                 (planner.choose(&params.w1, &s1), planner.choose(&params.w2, &s2))
             }
             concrete => (
-                build_engine(&params.w1, params.act_bits, geom, concrete),
-                build_engine(&params.w2, params.act_bits, geom, concrete),
+                build_engine(&params.w1, params.act_bits, geom, concrete, store),
+                build_engine(&params.w2, params.act_bits, geom, concrete, store),
             ),
         };
         let engine_name = if conv1.name() == conv2.name() {
@@ -305,6 +327,25 @@ mod tests {
             let m = QuantCnn::new(params.clone(), choice);
             assert_eq!(m.forward(&codes), reference, "engine {}", m.engine_name());
         }
+    }
+
+    #[test]
+    fn model_loaded_twice_builds_tables_once() {
+        // The store acceptance criterion at the model level: a second
+        // instance of the same model performs zero redundant table builds.
+        let mut rng = Rng::new(21);
+        let params = random_params(4, &mut rng);
+        let store = Arc::new(TableStore::new());
+        let m1 = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+        let after_first = store.stats();
+        assert_eq!(after_first.builds, 2, "two conv layers, two builds");
+        let m2 = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+        let after_second = store.stats();
+        assert_eq!(after_second.builds, after_first.builds, "zero redundant builds");
+        assert_eq!(after_second.hits, after_first.hits + 2);
+        // and the store-shared model is bit-identical
+        let codes = random_codes(3, 4, &mut rng);
+        assert_eq!(m1.forward(&codes), m2.forward(&codes));
     }
 
     #[test]

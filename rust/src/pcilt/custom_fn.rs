@@ -67,6 +67,24 @@ impl ConvFunc {
     pub fn is_exact_mul(&self) -> bool {
         matches!(self, ConvFunc::Mul)
     }
+
+    /// Stable content id for `pcilt::store` cache keys: two functions with
+    /// the same id populate identical tables for identical weights, so the
+    /// id hashes the variant *and* every parameter that reaches `eval`.
+    pub fn cache_id(&self) -> u64 {
+        let mut bytes: Vec<u8> = self.name().as_bytes().to_vec();
+        match self {
+            ConvFunc::Mul => {}
+            ConvFunc::SatMul { max } => bytes.extend_from_slice(&max.to_le_bytes()),
+            ConvFunc::LogMul { base } => bytes.extend_from_slice(&base.to_bits().to_le_bytes()),
+            ConvFunc::Codebook { codes } => {
+                for c in codes {
+                    bytes.extend_from_slice(&c.to_bits().to_le_bytes());
+                }
+            }
+        }
+        super::store::fnv1a(&bytes)
+    }
 }
 
 #[cfg(test)]
@@ -120,5 +138,23 @@ mod tests {
     #[should_panic]
     fn codebook_out_of_range_panics() {
         ConvFunc::Codebook { codes: vec![0.0] }.eval(1, 5);
+    }
+
+    #[test]
+    fn cache_ids_distinguish_functions_and_params() {
+        assert_eq!(ConvFunc::Mul.cache_id(), ConvFunc::Mul.cache_id());
+        assert_ne!(ConvFunc::Mul.cache_id(), ConvFunc::SatMul { max: 1 }.cache_id());
+        assert_ne!(
+            ConvFunc::SatMul { max: 1 }.cache_id(),
+            ConvFunc::SatMul { max: 2 }.cache_id()
+        );
+        assert_ne!(
+            ConvFunc::LogMul { base: 2.0 }.cache_id(),
+            ConvFunc::LogMul { base: 3.0 }.cache_id()
+        );
+        assert_ne!(
+            ConvFunc::Codebook { codes: vec![1.0] }.cache_id(),
+            ConvFunc::Codebook { codes: vec![2.0] }.cache_id()
+        );
     }
 }

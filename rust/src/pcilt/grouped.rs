@@ -27,7 +27,11 @@ impl GroupedEngine {
     /// group `g` owns output channels `[g*oc/G, (g+1)*oc/G)` and reads
     /// input channels `[g*ic/G, (g+1)*ic/G)`. `make_engine` constructs the
     /// inner engine for one group's weight slice — pass a closure building
-    /// a `PciltEngine`, `SegmentEngine`, `DmEngine`, …
+    /// a `PciltEngine`, `SegmentEngine`, `DmEngine`, … To share tables
+    /// across groups (and with every other layer in the process), capture
+    /// a `pcilt::store::TableStore` and build with the engines'
+    /// `from_store` constructors: groups with identical weight slices then
+    /// deduplicate to a single table allocation.
     pub fn new(
         weights: &Tensor4<i8>,
         in_ch: usize,
@@ -207,6 +211,35 @@ mod tests {
         let grouped_ops = grouped.op_counts(shape);
         assert_eq!(dense_ops.adds / grouped_ops.adds, 4);
         assert_eq!(grouped_ops.mults, 0);
+    }
+
+    #[test]
+    fn identical_group_slices_dedup_through_the_store() {
+        use crate::pcilt::store::TableStore;
+        let mut rng = Rng::new(61);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let (in_ch, groups) = (4, 4);
+        // Every group sees the SAME weight slice: 4 groups, 1 build.
+        let proto = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let w = Tensor4::from_fn(Shape4::new(8, 3, 3, 1), |o, ky, kx, ic| {
+            proto.get(o % 2, ky, kx, ic)
+        });
+        let store = TableStore::new();
+        let e = GroupedEngine::new(&w, in_ch, groups, geom, |slice| {
+            Box::new(PciltEngine::from_store(
+                &store,
+                &slice,
+                2,
+                geom,
+                &crate::pcilt::ConvFunc::Mul,
+            ))
+        });
+        let s = store.stats();
+        assert_eq!(s.builds, 1, "identical slices must build tables once");
+        assert_eq!(s.hits, groups as u64 - 1);
+        // and the composition still computes the right convolution
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, in_ch), 2, &mut rng);
+        assert_eq!(e.conv(&x), grouped_reference(&x, &w, in_ch, groups, geom));
     }
 
     #[test]

@@ -6,25 +6,32 @@
 //! contains *no multiplications at all* — only a fetch and an add, which is
 //! exactly the datapath Fig 3 draws as SRAM-next-to-adder.
 
+use std::sync::Arc;
+
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
 use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::store::{TableArtifact, TableHandle, TableKey, TableStore};
 use super::table::LayerTables;
 
 /// Basic PCILT engine.
 ///
-/// Besides the canonical `[oc][position][activation]` tables it keeps a
-/// **channels-last mirror** `[position][activation][oc]`: for a fixed
-/// receptive-field position and activation code, the products for *all*
-/// output channels are contiguous, so the inner loop is a vectorizable
-/// add of `out_ch`-long rows instead of `out_ch` scalar gathers. This is
-/// the §Perf optimization recorded in EXPERIMENTS.md (the ASIC analogue
-/// is Fig 3's one-PCILT-per-lane broadcast of the activation offset).
+/// Tables are **borrowed** through a [`TableHandle`] rather than owned:
+/// store-backed engines over identical layers share one allocation (see
+/// `pcilt::store`), while the plain constructors wrap a private handle.
+/// Besides the canonical `[oc][position][activation]` tables the engine
+/// runs on the handle's **channels-last mirror** `[position][activation]
+/// [oc]`: for a fixed receptive-field position and activation code, the
+/// products for *all* output channels are contiguous, so the inner loop is
+/// a vectorizable add of `out_ch`-long rows instead of `out_ch` scalar
+/// gathers. This is the §Perf optimization recorded in EXPERIMENTS.md (the
+/// ASIC analogue is Fig 3's one-PCILT-per-lane broadcast of the activation
+/// offset).
 pub struct PciltEngine {
-    tables: LayerTables,
-    /// `cl[(p * card + a) * out_ch + oc]` — channels-last mirror.
-    cl: Vec<i32>,
+    handle: TableHandle,
+    /// `cl[(p * card + a) * out_ch + oc]` — shared channels-last mirror.
+    cl: Arc<Vec<i32>>,
     geom: ConvGeometry,
     act_bits: u32,
 }
@@ -37,6 +44,8 @@ impl PciltEngine {
 
     /// Build tables with an arbitrary convolutional function (the *Using
     /// Custom Convolutional Functions* extension — same inference cost).
+    /// Tables are private to this engine; serving paths use
+    /// [`PciltEngine::from_store`] for dedup and persistence.
     pub fn with_func(
         weights: &Tensor4<i8>,
         act_bits: u32,
@@ -46,51 +55,66 @@ impl PciltEngine {
         let s = weights.shape();
         assert_eq!(s.h, geom.kh);
         assert_eq!(s.w, geom.kw);
-        let tables = LayerTables::build(weights, act_bits, f);
-        let cl = Self::channels_last(&tables);
-        PciltEngine {
-            tables,
-            cl,
-            geom,
-            act_bits,
-        }
+        let handle =
+            TableHandle::private(TableArtifact::Dense(LayerTables::build(weights, act_bits, f)));
+        Self::from_handle(handle, geom)
     }
 
-    /// Build the `[p][a][oc]` mirror from canonical tables.
-    fn channels_last(tables: &LayerTables) -> Vec<i32> {
-        let (oc_n, positions, card) = (tables.out_ch, tables.positions, tables.card);
-        let mut cl = vec![0i32; oc_n * positions * card];
-        for oc in 0..oc_n {
-            for p in 0..positions {
-                let t = tables.table(oc, p);
-                for (a, &v) in t.iter().enumerate() {
-                    cl[(p * card + a) * oc_n + oc] = v;
-                }
-            }
-        }
-        cl
+    /// Borrow (or build-on-miss) the layer's tables from a [`TableStore`]:
+    /// identical `(weights, act_bits, f)` layers share one allocation and
+    /// one build, process-wide. Bit-identical to the owning constructors.
+    pub fn from_store(
+        store: &TableStore,
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> PciltEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let key = TableKey::dense(weights, act_bits, f);
+        let handle = store.get_or_build(key, || {
+            TableArtifact::Dense(LayerTables::build(weights, act_bits, f))
+        });
+        let engine = Self::from_handle(handle, geom);
+        // from_handle materialized the channels-last mirror, growing the
+        // entry after its insert-time budget check; settle up.
+        store.rebalance();
+        engine
     }
 
-    /// Wrap pre-built tables (used by PCILT-as-weights, where tables are the
-    /// trained parameters and no weight tensor exists).
-    pub fn from_tables(tables: LayerTables, geom: ConvGeometry) -> PciltEngine {
+    /// Wrap a dense-table handle (store-borrowed or private).
+    pub fn from_handle(handle: TableHandle, geom: ConvGeometry) -> PciltEngine {
+        let tables = handle.dense();
         assert_eq!(
             tables.positions % (geom.kh * geom.kw),
             0,
             "table positions not divisible by kernel area"
         );
         let act_bits = tables.act_bits;
-        let cl = Self::channels_last(&tables);
+        let cl = handle.channels_last();
         PciltEngine {
-            tables,
+            handle,
             cl,
             geom,
             act_bits,
         }
     }
 
+    /// Wrap pre-built tables (used by PCILT-as-weights, where tables are the
+    /// trained parameters and no weight tensor exists).
+    pub fn from_tables(tables: LayerTables, geom: ConvGeometry) -> PciltEngine {
+        Self::from_handle(TableHandle::private(TableArtifact::Dense(tables)), geom)
+    }
+
     pub fn tables(&self) -> &LayerTables {
-        &self.tables
+        self.handle.dense()
+    }
+
+    /// The handle the engine borrows its tables through.
+    pub fn handle(&self) -> &TableHandle {
+        &self.handle
     }
 
     pub fn act_bits(&self) -> u32 {
@@ -99,7 +123,7 @@ impl PciltEngine {
 
     /// One-off table construction cost in `f` evaluations.
     pub fn build_evals(&self) -> u64 {
-        self.tables.build_evals
+        self.tables().build_evals
     }
 }
 
@@ -109,7 +133,7 @@ impl ConvEngine for PciltEngine {
     }
 
     fn out_channels(&self) -> usize {
-        self.tables.out_ch
+        self.tables().out_ch
     }
 
     fn geometry(&self) -> ConvGeometry {
@@ -119,16 +143,17 @@ impl ConvEngine for PciltEngine {
     fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
         let s = x.shape();
         let g = self.geom;
-        let in_ch = self.tables.positions / (g.kh * g.kw);
+        let tables = self.tables();
+        let in_ch = tables.positions / (g.kh * g.kw);
         assert_eq!(s.c, in_ch, "input channels {} != table in_ch {}", s.c, in_ch);
         debug_assert!(
-            x.data().iter().all(|&a| (a as usize) < self.tables.card),
+            x.data().iter().all(|&a| (a as usize) < tables.card),
             "activation exceeds table cardinality"
         );
-        let out_shape = g.out_shape(s, self.tables.out_ch);
+        let out_shape = g.out_shape(s, tables.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let card = self.tables.card;
-        let oc_n = self.tables.out_ch;
+        let card = tables.card;
+        let oc_n = tables.out_ch;
         // Channels-last inner loop: one contiguous `oc_n`-long row add per
         // RF position — SIMD-friendly, no per-channel gathers.
         let cl = &self.cl[..];
@@ -160,13 +185,14 @@ impl ConvEngine for PciltEngine {
 
     fn op_counts(&self, s: Shape4) -> OpCounts {
         let rfs = rf_count(self.geom, s);
-        let per_rf = (self.tables.positions * self.tables.out_ch) as u64;
+        let tables = self.tables();
+        let per_rf = (tables.positions * tables.out_ch) as u64;
         OpCounts {
             mults: 0, // the whole point
             adds: rfs * per_rf,
             // one activation fetch per position (shared across out chans)
             // plus one table fetch per (position, out channel).
-            fetches: rfs * (self.tables.positions as u64 + per_rf),
+            fetches: rfs * (tables.positions as u64 + per_rf),
         }
     }
 
@@ -175,7 +201,7 @@ impl ConvEngine for PciltEngine {
             name: self.name(),
             exact: true,
             // canonical tables + the channels-last mirror, i32 entries
-            table_bytes: (self.tables.entries() + self.cl.len()) as f64 * 4.0,
+            table_bytes: (self.tables().entries() + self.cl.len()) as f64 * 4.0,
         }
     }
 }
@@ -260,6 +286,25 @@ mod tests {
         };
         let pcilt = PciltEngine::new(&w, 4, geom);
         assert_eq!(pcilt.conv(&x), conv_reference(&x, &w, geom));
+    }
+
+    #[test]
+    fn store_borrowed_engine_matches_owned_and_dedups() {
+        let mut rng = Rng::new(29);
+        let x = Tensor4::random_activations(Shape4::new(2, 6, 6, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let store = TableStore::new();
+        let owned = PciltEngine::new(&w, 4, geom);
+        let a = PciltEngine::from_store(&store, &w, 4, geom, &ConvFunc::Mul);
+        let b = PciltEngine::from_store(&store, &w, 4, geom, &ConvFunc::Mul);
+        let expect = owned.conv(&x);
+        assert_eq!(a.conv(&x), expect);
+        assert_eq!(b.conv(&x), expect);
+        let s = store.stats();
+        assert_eq!((s.builds, s.hits), (1, 1), "second engine must borrow, not rebuild");
+        // both engines run on the same shared channels-last mirror
+        assert!(Arc::ptr_eq(&a.cl, &b.cl));
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
 use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
 
 /// Per-channel activation bit widths.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -39,48 +40,31 @@ impl ChannelWidths {
     }
 }
 
-/// Mixed-cardinality PCILT engine.
-pub struct MixedEngine {
+/// Mixed-cardinality table set: channels-last values over the table code
+/// space plus the per-channel inference shifts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixedTables {
     /// Channels-last tables `[(p * card + a) * oc]` over the table code
     /// space.
-    cl: Vec<i32>,
-    widths: ChannelWidths,
+    pub(crate) cl: Vec<i32>,
+    pub widths: ChannelWidths,
     /// Per-channel shift applied to input codes when the table cardinality
     /// is below the channel width (lossy mode); 0 in exact mode.
-    shifts: Vec<u32>,
-    table_bits: u32,
-    card: usize,
-    out_ch: usize,
-    positions: usize,
-    geom: ConvGeometry,
+    pub(crate) shifts: Vec<u32>,
+    pub table_bits: u32,
+    pub card: usize,
+    pub out_ch: usize,
+    pub positions: usize,
 }
 
-impl MixedEngine {
-    /// Exact mode: table cardinality = LCD of all channel widths. Narrow
-    /// channels are scaled up into the LCD code space inside the tables
-    /// (`value = f(w, a * 2^(lcd-bits_c))`), so no inference-path scaling
-    /// is needed.
-    pub fn new(
-        weights: &Tensor4<i8>,
-        widths: ChannelWidths,
-        geom: ConvGeometry,
-    ) -> MixedEngine {
-        let lcd = widths.lcd_bits();
-        Self::with_table_bits(weights, widths, lcd, geom, &ConvFunc::Mul)
-    }
-
-    /// General mode: an explicit table cardinality, possibly below the LCD
-    /// ("to save PCILT memory … at the cost of losing some precision").
-    pub fn with_table_bits(
+impl MixedTables {
+    pub fn build(
         weights: &Tensor4<i8>,
         widths: ChannelWidths,
         table_bits: u32,
-        geom: ConvGeometry,
         f: &ConvFunc,
-    ) -> MixedEngine {
+    ) -> MixedTables {
         let s = weights.shape();
-        assert_eq!(s.h, geom.kh);
-        assert_eq!(s.w, geom.kw);
         assert_eq!(s.c, widths.bits.len(), "one width per input channel");
         assert!((1..=10).contains(&table_bits));
         let card = 1usize << table_bits;
@@ -120,7 +104,7 @@ impl MixedEngine {
                 }
             }
         }
-        MixedEngine {
+        MixedTables {
             cl,
             widths,
             shifts,
@@ -128,12 +112,7 @@ impl MixedEngine {
             card,
             out_ch: oc_n,
             positions,
-            geom,
         }
-    }
-
-    pub fn table_bits(&self) -> u32 {
-        self.table_bits
     }
 
     /// Worst-case code truncation (in LCD units) any channel suffers —
@@ -152,9 +131,133 @@ impl MixedEngine {
             .unwrap_or(0)
     }
 
+    /// Actual resident bytes of this representation (store accounting).
+    pub fn resident_bytes(&self) -> f64 {
+        (self.cl.len() + self.shifts.len() + self.widths.bits.len()) as f64 * 4.0
+    }
+
+    pub(crate) fn write_to(&self, w: &mut ByteWriter) {
+        w.u32(self.table_bits);
+        w.u64(self.out_ch as u64);
+        w.u64(self.positions as u64);
+        w.u32_slice(&self.widths.bits);
+        // shifts are derived from (widths, table_bits) and recomputed on
+        // read — serialized data never feeds the inference-path shift.
+        w.i32_slice(&self.cl);
+    }
+
+    pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<MixedTables, String> {
+        let table_bits = r.take_u32()?;
+        let out_ch = r.take_u64()? as usize;
+        let positions = r.take_u64()? as usize;
+        let bits = r.take_u32_slice()?;
+        let cl = r.take_i32_slice()?;
+        if !(1..=10).contains(&table_bits) {
+            return Err(format!("mixed tables: bad table_bits {table_bits}"));
+        }
+        if bits.is_empty() || bits.iter().any(|&b| !(1..=16).contains(&b)) {
+            return Err("mixed tables: channel widths out of range".into());
+        }
+        if positions % bits.len() != 0 {
+            return Err("mixed tables: positions not a channel multiple".into());
+        }
+        let card = 1usize << table_bits;
+        let expect = positions.checked_mul(card).and_then(|v| v.checked_mul(out_ch));
+        if expect != Some(cl.len()) {
+            return Err(format!(
+                "mixed tables: {} values != {positions}x{card}x{out_ch}",
+                cl.len()
+            ));
+        }
+        let shifts = bits.iter().map(|&b| b.saturating_sub(table_bits)).collect();
+        Ok(MixedTables {
+            cl,
+            widths: ChannelWidths { bits },
+            shifts,
+            table_bits,
+            card,
+            out_ch,
+            positions,
+        })
+    }
+}
+
+/// Mixed-cardinality PCILT engine; borrows its [`MixedTables`] through a
+/// [`TableHandle`].
+pub struct MixedEngine {
+    handle: TableHandle,
+    geom: ConvGeometry,
+}
+
+impl MixedEngine {
+    /// Exact mode: table cardinality = LCD of all channel widths. Narrow
+    /// channels are scaled up into the LCD code space inside the tables
+    /// (`value = f(w, a * 2^(lcd-bits_c))`), so no inference-path scaling
+    /// is needed.
+    pub fn new(
+        weights: &Tensor4<i8>,
+        widths: ChannelWidths,
+        geom: ConvGeometry,
+    ) -> MixedEngine {
+        let lcd = widths.lcd_bits();
+        Self::with_table_bits(weights, widths, lcd, geom, &ConvFunc::Mul)
+    }
+
+    /// General mode: an explicit table cardinality, possibly below the LCD
+    /// ("to save PCILT memory … at the cost of losing some precision").
+    pub fn with_table_bits(
+        weights: &Tensor4<i8>,
+        widths: ChannelWidths,
+        table_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> MixedEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let handle = TableHandle::private(TableArtifact::Mixed(MixedTables::build(
+            weights, widths, table_bits, f,
+        )));
+        MixedEngine { handle, geom }
+    }
+
+    /// Borrow (or build-on-miss) the mixed tables from a [`TableStore`].
+    pub fn from_store(
+        store: &TableStore,
+        weights: &Tensor4<i8>,
+        widths: ChannelWidths,
+        table_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> MixedEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let key = TableKey::mixed(weights, &widths, table_bits, f);
+        let handle = store.get_or_build(key, || {
+            TableArtifact::Mixed(MixedTables::build(weights, widths, table_bits, f))
+        });
+        MixedEngine { handle, geom }
+    }
+
+    /// The borrowed table set.
+    pub fn tables(&self) -> &MixedTables {
+        self.handle.mixed()
+    }
+
+    pub fn table_bits(&self) -> u32 {
+        self.tables().table_bits
+    }
+
+    /// Worst-case code truncation (in LCD units) any channel suffers —
+    /// zero in exact (LCD) mode.
+    pub fn max_code_error(&self) -> u32 {
+        self.tables().max_code_error()
+    }
+
     /// Table entries.
     pub fn entries(&self) -> usize {
-        self.cl.len()
+        self.tables().cl.len()
     }
 }
 
@@ -164,7 +267,7 @@ impl ConvEngine for MixedEngine {
     }
 
     fn out_channels(&self) -> usize {
-        self.out_ch
+        self.tables().out_ch
     }
 
     fn geometry(&self) -> ConvGeometry {
@@ -174,13 +277,14 @@ impl ConvEngine for MixedEngine {
     fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
         let s = x.shape();
         let g = self.geom;
-        let in_ch = self.positions / (g.kh * g.kw);
+        let t = self.tables();
+        let in_ch = t.positions / (g.kh * g.kw);
         assert_eq!(s.c, in_ch);
-        let out_shape = g.out_shape(s, self.out_ch);
+        let out_shape = g.out_shape(s, t.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let oc_n = self.out_ch;
-        let card = self.card;
-        let cl = &self.cl[..];
+        let oc_n = t.out_ch;
+        let card = t.card;
+        let cl = &t.cl[..];
         let mut acc = vec![0i32; oc_n];
         for n in 0..s.n {
             for oy in 0..out_shape.h {
@@ -191,10 +295,10 @@ impl ConvEngine for MixedEngine {
                         let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
                         for (i, &a) in row.iter().enumerate() {
                             let ic = i % s.c;
-                            let code = (a as usize) >> self.shifts[ic];
+                            let code = (a as usize) >> t.shifts[ic];
                             let base = (p * card + code) * oc_n;
-                            for (av, &t) in acc.iter_mut().zip(&cl[base..base + oc_n]) {
-                                *av += t;
+                            for (av, &tv) in acc.iter_mut().zip(&cl[base..base + oc_n]) {
+                                *av += tv;
                             }
                             p += 1;
                         }
@@ -209,11 +313,12 @@ impl ConvEngine for MixedEngine {
 
     fn op_counts(&self, s: Shape4) -> OpCounts {
         let rfs = rf_count(self.geom, s);
-        let per_rf = (self.positions * self.out_ch) as u64;
+        let t = self.tables();
+        let per_rf = (t.positions * t.out_ch) as u64;
         OpCounts {
             mults: 0,
             adds: rfs * per_rf,
-            fetches: rfs * (self.positions as u64 + per_rf),
+            fetches: rfs * (t.positions as u64 + per_rf),
         }
     }
 
@@ -222,7 +327,7 @@ impl ConvEngine for MixedEngine {
             name: self.name(),
             // exact only in LCD mode; lossy truncation reports inexact
             exact: self.max_code_error() == 0,
-            table_bytes: self.cl.len() as f64 * 4.0,
+            table_bytes: self.tables().cl.len() as f64 * 4.0,
         }
     }
 }
@@ -320,6 +425,30 @@ mod tests {
         let geom = ConvGeometry::unit_stride(2, 2);
         let e = MixedEngine::new(&w, widths.clone(), geom);
         assert_eq!(e.conv(&x), lcd_reference(&x, &w, &widths, geom));
+    }
+
+    #[test]
+    fn store_borrowed_mixed_engine_matches_owned() {
+        let mut rng = Rng::new(65);
+        let widths = ChannelWidths {
+            bits: vec![1, 2, 4],
+        };
+        let x = mixed_activations(Shape4::new(1, 6, 6, 3), &widths, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 3), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let store = TableStore::new();
+        let owned = MixedEngine::new(&w, widths.clone(), geom);
+        let a = MixedEngine::from_store(&store, &w, widths.clone(), 4, geom, &ConvFunc::Mul);
+        let b = MixedEngine::from_store(&store, &w, widths.clone(), 4, geom, &ConvFunc::Mul);
+        let expect = owned.conv(&x);
+        assert_eq!(a.conv(&x), expect);
+        assert_eq!(b.conv(&x), expect);
+        assert_eq!(store.stats().builds, 1);
+        // different widths are a different content address
+        let w2 = ChannelWidths::uniform(3, 4);
+        let c = MixedEngine::from_store(&store, &w, w2, 4, geom, &ConvFunc::Mul);
+        assert_eq!(c.table_bits(), 4);
+        assert_eq!(store.stats().builds, 2);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The paper's contribution: PCILT convolution engines and their
 //! extensions, the DM/Winograd/FFT baselines, the analytic memory model,
-//! and the engine auto-selection planner with data-parallel batch
+//! the content-addressed table store that owns every engine's lookup
+//! tables, and the engine auto-selection planner with data-parallel batch
 //! execution. See DESIGN.md §5 for the experiment mapping.
 
 pub mod as_weights;
@@ -17,6 +18,7 @@ pub mod parallel;
 pub mod planner;
 pub mod segment;
 pub mod shared;
+pub mod store;
 pub mod table;
 pub mod winograd;
 
@@ -26,9 +28,12 @@ pub use engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 pub use grouped::GroupedEngine;
 pub use layout::{LayoutEngine, LayoutPlan, SegmentSpec};
 pub use lookup::PciltEngine;
-pub use mixed::{ChannelWidths, MixedEngine};
+pub use mixed::{ChannelWidths, MixedEngine, MixedTables};
 pub use parallel::conv_parallel;
 pub use planner::{Candidate, EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
-pub use segment::{RowSegmentEngine, SegmentEngine};
+pub use segment::{RowSegmentEngine, RowSegmentTables, SegmentEngine, SegmentTables};
 pub use shared::SharedEngine;
+pub use store::{
+    PrebuildRequest, TableArtifact, TableHandle, TableKey, TableStore, TableStoreStats,
+};
 pub use table::{LayerTables, Pcilt};

@@ -17,8 +17,8 @@
 //! layer), `coordinator` (the `auto` route/backend), and the `pcilt plan`
 //! CLI subcommand (prints the scored table).
 
-use std::sync::RwLock;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::tensor::{Shape4, Tensor4};
 
@@ -31,6 +31,7 @@ use super::lookup::PciltEngine;
 use super::mixed::{ChannelWidths, MixedEngine};
 use super::segment::{RowSegmentEngine, SegmentEngine};
 use super::shared::SharedEngine;
+use super::store::{TableKey, TableStore};
 use super::winograd::WinogradEngine;
 
 /// One conv layer, as the planner sees it.
@@ -99,6 +100,96 @@ impl EngineId {
         }
     }
 
+    /// The store key this engine's tables live under, if it carries any.
+    /// `None` for table-free (DM), compositional (grouped) and float
+    /// baselines (Winograd/FFT, whose spectra are weight transforms, not
+    /// lookup tables), and for layout plans (per-plan packing, not yet
+    /// content-addressed).
+    pub fn table_key(&self, weights: &Tensor4<i8>, spec: &LayerSpec) -> Option<TableKey> {
+        let bits = spec.act_bits;
+        let f = ConvFunc::Mul;
+        match *self {
+            EngineId::Pcilt => Some(TableKey::dense(weights, bits, &f)),
+            EngineId::Shared => Some(TableKey::shared(weights, bits, &f)),
+            EngineId::Mixed => Some(TableKey::mixed(
+                weights,
+                &ChannelWidths::uniform(spec.in_ch, bits),
+                bits,
+                &f,
+            )),
+            EngineId::Segment { seg_n } => Some(TableKey::segment(weights, bits, seg_n, &f)),
+            EngineId::SegmentRow { seg_n } => Some(TableKey::row_segment(weights, bits, seg_n, &f)),
+            _ => None,
+        }
+    }
+
+    /// Build just the table artifact this engine would store, without the
+    /// engine around it — the unit of work `TableStore::prebuild`
+    /// parallelizes (`pcilt tables prebuild`). `None` for engines without
+    /// a [`EngineId::table_key`]. Content matches
+    /// [`EngineId::build_with_store`] exactly: same builders, same key.
+    pub fn build_artifact(
+        &self,
+        weights: &Tensor4<i8>,
+        spec: &LayerSpec,
+    ) -> Option<super::store::TableArtifact> {
+        use super::store::TableArtifact;
+        use super::table::LayerTables;
+        let bits = spec.act_bits;
+        let f = ConvFunc::Mul;
+        Some(match *self {
+            EngineId::Pcilt => TableArtifact::Dense(LayerTables::build(weights, bits, &f)),
+            EngineId::Shared => TableArtifact::Shared(super::shared::SharedTables::build(
+                weights, bits, &f,
+            )),
+            EngineId::Mixed => TableArtifact::Mixed(super::mixed::MixedTables::build(
+                weights,
+                ChannelWidths::uniform(spec.in_ch, bits),
+                bits,
+                &f,
+            )),
+            EngineId::Segment { seg_n } => TableArtifact::Segment(
+                super::segment::SegmentTables::build(weights, bits, seg_n, &f),
+            ),
+            EngineId::SegmentRow { seg_n } => TableArtifact::RowSegment(
+                super::segment::RowSegmentTables::build(weights, bits, seg_n, &f),
+            ),
+            _ => return None,
+        })
+    }
+
+    /// Like [`EngineId::build`], but table engines borrow through `store`
+    /// (dedup + persistence); table-free engines build as usual.
+    pub fn build_with_store(
+        &self,
+        weights: &Tensor4<i8>,
+        spec: &LayerSpec,
+        store: &TableStore,
+    ) -> Result<Box<dyn ConvEngine>, String> {
+        let bits = spec.act_bits;
+        let geom = spec.geom;
+        let f = ConvFunc::Mul;
+        Ok(match *self {
+            EngineId::Pcilt => Box::new(PciltEngine::from_store(store, weights, bits, geom, &f)),
+            EngineId::Shared => Box::new(SharedEngine::from_store(store, weights, bits, geom, &f)),
+            EngineId::Mixed => Box::new(MixedEngine::from_store(
+                store,
+                weights,
+                ChannelWidths::uniform(spec.in_ch, bits),
+                bits,
+                geom,
+                &f,
+            )),
+            EngineId::Segment { seg_n } => {
+                Box::new(SegmentEngine::from_store(store, weights, bits, seg_n, geom, &f))
+            }
+            EngineId::SegmentRow { seg_n } => {
+                Box::new(RowSegmentEngine::from_store(store, weights, bits, seg_n, geom, &f))
+            }
+            _ => return self.build(weights, spec),
+        })
+    }
+
     /// Build the engine this id names for concrete weights. `Grouped` is
     /// compositional (wraps an inner engine over grouped weights) and
     /// cannot be built from a dense layer alone.
@@ -149,8 +240,13 @@ pub struct Candidate {
     pub ops: OpCounts,
     /// Predicted lookup-table bytes held by the built engine.
     pub table_bytes: f64,
-    /// One-off table construction cost in `f` evaluations.
+    /// One-off table construction cost in `f` evaluations. Zero when the
+    /// tables are already resident in the planner's `TableStore` — the
+    /// marginal cost of a cached build is a lookup.
     pub build_evals: u64,
+    /// Tables already resident in the planner's store (post-dedup: this
+    /// candidate costs no new build and no new bytes).
+    pub cached: bool,
     /// Analytic cost (lower is better); micro-benchmark ns in calibration
     /// mode.
     pub score: f64,
@@ -244,12 +340,15 @@ impl LayerPlan {
             "engine", "mults", "adds", "fetches", "tables", "score", "status"
         ));
         for c in &self.candidates {
-            let status = match (&c.infeasible, c.id == self.chosen) {
+            let mut status = match (&c.infeasible, c.id == self.chosen) {
                 (Some(reason), _) => format!("- {reason}"),
                 (None, true) => "<== chosen".to_string(),
                 (None, false) if !c.exact => "(approximate)".to_string(),
                 (None, false) => String::new(),
             };
+            if c.cached {
+                status = format!("{} (cached)", status).trim().to_string();
+            }
             out.push_str(&format!(
                 "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12.3e}  {}\n",
                 c.label,
@@ -296,31 +395,65 @@ pub fn default_plan_batch() -> usize {
     DEFAULT_PLAN_BATCH.load(Ordering::Relaxed)
 }
 
-/// The registry + policy = the planner.
-#[derive(Debug, Clone)]
+/// The registry + policy (+ optionally a [`TableStore`]) = the planner.
+/// With a store attached, candidates whose tables are already resident are
+/// scored at their *marginal* cost — zero build, zero new bytes — which is
+/// what stops repeated-weight networks from being mis-scored away from
+/// PCILT, and the chosen engine is built *through* the store so the next
+/// plan sees it.
+#[derive(Clone)]
 pub struct EnginePlanner {
     pub policy: PlannerPolicy,
+    store: Option<Arc<TableStore>>,
+}
+
+impl std::fmt::Debug for EnginePlanner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EnginePlanner")
+            .field("policy", &self.policy)
+            .field("store", &self.store.as_ref().map(|s| s.stats()))
+            .finish()
+    }
 }
 
 impl Default for EnginePlanner {
-    /// Uses the process-default policy (see [`set_default_policy`]).
+    /// Uses the process-default policy (see [`set_default_policy`]) and
+    /// the process-wide table store — the serving configuration.
     fn default() -> Self {
         EnginePlanner {
             policy: default_policy(),
+            store: Some(TableStore::process().clone()),
         }
     }
 }
 
 impl EnginePlanner {
+    /// Pure analytic planner: no store, every candidate priced cold.
     pub fn new(policy: PlannerPolicy) -> EnginePlanner {
-        EnginePlanner { policy }
+        EnginePlanner {
+            policy,
+            store: None,
+        }
+    }
+
+    /// Planner that prices candidates against (and builds through) `store`.
+    pub fn with_store(policy: PlannerPolicy, store: Arc<TableStore>) -> EnginePlanner {
+        EnginePlanner {
+            policy,
+            store: Some(store),
+        }
+    }
+
+    /// The attached table store, if any.
+    pub fn store(&self) -> Option<&Arc<TableStore>> {
+        self.store.as_ref()
     }
 
     /// Enumerate and score every engine for `spec`. `weights`, when given,
     /// sharpens the shared-table estimate with the actual distinct-value
-    /// count.
+    /// count and enables cached-table (post-dedup) pricing.
     pub fn plan_layer(&self, spec: &LayerSpec, weights: Option<&Tensor4<i8>>) -> LayerPlan {
-        let mut candidates = registry(spec, &self.policy, weights);
+        let mut candidates = registry(spec, &self.policy, weights, self.store.as_deref());
         // Feasible first, then by ascending score; stable so enumeration
         // order breaks ties deterministically.
         candidates.sort_by(|a, b| {
@@ -342,13 +475,17 @@ impl EnginePlanner {
     }
 
     /// Plan + build in one step: the serving path for `EngineChoice::Auto`.
-    /// Falls back to DM if the winner cannot be built (never expected for
-    /// the exact set, but the fallback keeps serving alive).
+    /// With a store attached the winner borrows its tables through it, so
+    /// identical layers (and restarted models) share one build. Falls back
+    /// to DM if the winner cannot be built (never expected for the exact
+    /// set, but the fallback keeps serving alive).
     pub fn choose(&self, weights: &Tensor4<i8>, spec: &LayerSpec) -> Box<dyn ConvEngine> {
         let plan = self.plan_layer(spec, Some(weights));
-        plan.chosen
-            .build(weights, spec)
-            .unwrap_or_else(|_| Box::new(DmEngine::new(weights.clone(), spec.geom)))
+        let built = match &self.store {
+            Some(store) => plan.chosen.build_with_store(weights, spec, store),
+            None => plan.chosen.build(weights, spec),
+        };
+        built.unwrap_or_else(|_| Box::new(DmEngine::new(weights.clone(), spec.geom)))
     }
 
     /// Calibration mode: build every feasible selectable candidate and
@@ -396,10 +533,14 @@ const TABLE_BYTES_CEILING: f64 = 1024.0 * 1024.0 * 1024.0;
 
 /// Enumerate the full engine registry for one layer. Every `ConvEngine`
 /// implementation appears, either scored or with an infeasibility reason.
+/// With `store` (and `weights`) present, candidates whose tables are
+/// already resident are priced at marginal cost: zero build evals, and the
+/// table-bytes ceiling does not apply to memory that is already paid for.
 pub fn registry(
     spec: &LayerSpec,
     policy: &PlannerPolicy,
     weights: Option<&Tensor4<i8>>,
+    store: Option<&TableStore>,
 ) -> Vec<Candidate> {
     let g = spec.geom;
     let positions = spec.positions() as u64;
@@ -415,7 +556,14 @@ pub fn registry(
                     ops: OpCounts,
                     table_bytes: f64,
                     build_evals: u64| {
-        let too_big = infeasible.is_none() && table_bytes > TABLE_BYTES_CEILING;
+        let cached = match (weights, store) {
+            (Some(w), Some(st)) if infeasible.is_none() => {
+                id.table_key(w, spec).is_some_and(|k| st.contains(k))
+            }
+            _ => false,
+        };
+        let build_evals = if cached { 0 } else { build_evals };
+        let too_big = !cached && infeasible.is_none() && table_bytes > TABLE_BYTES_CEILING;
         let infeasible = if too_big {
             Some(format!("tables would need {:.1} GiB", table_bytes / TABLE_BYTES_CEILING))
         } else {
@@ -429,6 +577,7 @@ pub fn registry(
             ops,
             table_bytes,
             build_evals,
+            cached,
             score: policy.score(ops, table_bytes, build_evals),
         });
     };
@@ -693,7 +842,7 @@ mod tests {
     #[test]
     fn registry_enumerates_every_engine_family() {
         let s = spec(32, 32, 4, 8, 3, 4);
-        let cands = registry(&s, &PlannerPolicy::default(), None);
+        let cands = registry(&s, &PlannerPolicy::default(), None, None);
         let labels: Vec<String> = cands.iter().map(|c| c.label.clone()).collect();
         let families = [
             "dm",
@@ -813,5 +962,66 @@ mod tests {
         assert!(r.contains("<== chosen"));
         assert!(r.contains("dm"));
         assert!(r.contains("grouped"));
+    }
+
+    #[test]
+    fn cached_tables_zero_the_build_cost() {
+        let mut rng = Rng::new(17);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 8, &mut rng);
+        let s = spec(16, 16, 2, 4, 3, 2);
+        let store = Arc::new(TableStore::new());
+        let planner = EnginePlanner::with_store(PlannerPolicy::default(), store.clone());
+        let cold = planner.plan_layer(&s, Some(&w));
+        let cold_c = cold.candidate(EngineId::Pcilt).unwrap().clone();
+        assert!(!cold_c.cached);
+        assert!(cold_c.build_evals > 0);
+        // Resident tables (another layer/model already built them).
+        EngineId::Pcilt.build_with_store(&w, &s, &store).unwrap();
+        let warm = planner.plan_layer(&s, Some(&w));
+        let warm_c = warm.candidate(EngineId::Pcilt).unwrap();
+        assert!(warm_c.cached);
+        assert_eq!(warm_c.build_evals, 0);
+        assert!(warm_c.score < cold_c.score, "cached build must score lower");
+        assert!(warm.report().contains("(cached)"));
+    }
+
+    #[test]
+    fn warm_store_flips_one_shot_crossover_to_pcilt() {
+        // The planner bug this store fixes: table-memory/build cost was a
+        // naive per-layer sum, so a repeated-weight layer paid its build
+        // twice and DM mis-won. With dedup pricing the second instance of
+        // the layer is free and PCILT wins.
+        let mut rng = Rng::new(19);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 1), 8, &mut rng);
+        let s = spec(4, 4, 1, 4, 3, 4);
+        let policy = PlannerPolicy {
+            amortize_invocations: 1.0, // one-shot: builds are expensive
+            ..PlannerPolicy::default()
+        };
+        let store = Arc::new(TableStore::new());
+        let planner = EnginePlanner::with_store(policy, store.clone());
+        let cold = planner.plan_layer(&s, Some(&w));
+        assert_eq!(cold.chosen, EngineId::Dm, "one-shot build cost must pick DM cold");
+        EngineId::Pcilt.build_with_store(&w, &s, &store).unwrap();
+        let warm = planner.plan_layer(&s, Some(&w));
+        assert_eq!(warm.chosen, EngineId::Pcilt, "resident tables are free to reuse");
+    }
+
+    #[test]
+    fn choose_through_store_builds_once() {
+        let mut rng = Rng::new(23);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 1), 8, &mut rng);
+        let s = spec(32, 32, 1, 4, 3, 2);
+        let store = Arc::new(TableStore::new());
+        let planner = EnginePlanner::with_store(PlannerPolicy::default(), store.clone());
+        let e1 = planner.choose(&w, &s);
+        let e2 = planner.choose(&w, &s);
+        assert_eq!(e1.name(), e2.name());
+        let st = store.stats();
+        assert_eq!(st.builds, 1, "second choose must reuse the resident tables");
+        assert!(st.hits >= 1);
+        // and the borrowed engine is still bit-exact
+        let x = Tensor4::random_activations(Shape4::new(1, 8, 8, 1), 2, &mut rng);
+        assert_eq!(e1.conv(&x), e2.conv(&x));
     }
 }

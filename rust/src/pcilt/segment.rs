@@ -20,50 +20,41 @@ use crate::util::bitpack::{offset_space, pack_offset};
 
 use super::custom_fn::ConvFunc;
 use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
 
-/// Segment-offset engine for one conv layer.
-pub struct SegmentEngine {
+/// Segment-offset table set for one conv layer (geometry-free: table
+/// content depends only on weights, cardinality, `seg_n` and `f`, which is
+/// what makes it content-addressable in `pcilt::store`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentTables {
     /// `values[((oc * n_segments) + s) * seg_card + offset]`.
-    values: Vec<i32>,
-    out_ch: usize,
+    pub(crate) values: Vec<i32>,
+    pub out_ch: usize,
     /// Positions per filter (`kh*kw*ic`), before padding to a segment
     /// multiple.
-    positions: usize,
+    pub positions: usize,
     /// Positions per segment.
     pub seg_n: usize,
     /// Number of segments per filter (`ceil(positions / seg_n)`).
     pub n_segments: usize,
     /// Rows per segment table: `2^(seg_n * act_bits)`.
     pub seg_card: usize,
-    act_bits: u32,
-    geom: ConvGeometry,
+    pub act_bits: u32,
     /// `f` evaluations during construction.
     pub build_evals: u64,
 }
 
-impl SegmentEngine {
+impl SegmentTables {
     /// Build from weights. `seg_n * act_bits` must be ≤ 20 (a 1M-row table;
-    /// beyond that the table is infeasible, which the constructor surfaces
+    /// beyond that the table is infeasible, which the builder surfaces
     /// rather than thrashing memory silently).
-    pub fn new(
+    pub fn build(
         weights: &Tensor4<i8>,
         act_bits: u32,
         seg_n: usize,
-        geom: ConvGeometry,
-    ) -> SegmentEngine {
-        Self::with_func(weights, act_bits, seg_n, geom, &ConvFunc::Mul)
-    }
-
-    pub fn with_func(
-        weights: &Tensor4<i8>,
-        act_bits: u32,
-        seg_n: usize,
-        geom: ConvGeometry,
         f: &ConvFunc,
-    ) -> SegmentEngine {
+    ) -> SegmentTables {
         let s = weights.shape();
-        assert_eq!(s.h, geom.kh);
-        assert_eq!(s.w, geom.kw);
         assert!(seg_n >= 1);
         let seg_card = offset_space(seg_n, act_bits)
             .unwrap_or_else(|| {
@@ -112,7 +103,7 @@ impl SegmentEngine {
                 }
             }
         }
-        SegmentEngine {
+        SegmentTables {
             values,
             out_ch: s.n,
             positions,
@@ -120,8 +111,150 @@ impl SegmentEngine {
             n_segments,
             seg_card,
             act_bits,
-            geom,
             build_evals,
+        }
+    }
+
+    #[inline(always)]
+    fn seg_table(&self, oc: usize, seg: usize) -> &[i32] {
+        let base = (oc * self.n_segments + seg) * self.seg_card;
+        &self.values[base..base + self.seg_card]
+    }
+
+    pub(crate) fn write_to(&self, w: &mut ByteWriter) {
+        w.u32(self.act_bits);
+        w.u64(self.out_ch as u64);
+        w.u64(self.positions as u64);
+        w.u64(self.seg_n as u64);
+        w.u64(self.build_evals);
+        w.i32_slice(&self.values);
+    }
+
+    pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<SegmentTables, String> {
+        let act_bits = r.take_u32()?;
+        let out_ch = r.take_u64()? as usize;
+        let positions = r.take_u64()? as usize;
+        let seg_n = r.take_u64()? as usize;
+        let build_evals = r.take_u64()?;
+        let values = r.take_i32_slice()?;
+        // Bound both factors before the multiply: a huge serialized seg_n
+        // must not truncate past the width check, and a huge act_bits must
+        // not overflow the u32 product.
+        if seg_n == 0 || seg_n > 20 || !(1..=20).contains(&act_bits) || seg_n as u32 * act_bits > 20
+        {
+            return Err(format!("segment tables: bad seg_n {seg_n} x act_bits {act_bits}"));
+        }
+        let seg_card = 1usize << (seg_n as u32 * act_bits);
+        let n_segments = positions.div_ceil(seg_n);
+        let expect = out_ch.checked_mul(n_segments).and_then(|v| v.checked_mul(seg_card));
+        if expect != Some(values.len()) {
+            return Err(format!(
+                "segment tables: {} values != {out_ch}x{n_segments}x{seg_card}",
+                values.len()
+            ));
+        }
+        Ok(SegmentTables {
+            values,
+            out_ch,
+            positions,
+            seg_n,
+            n_segments,
+            seg_card,
+            act_bits,
+            build_evals,
+        })
+    }
+}
+
+/// Segment-offset engine for one conv layer; borrows its
+/// [`SegmentTables`] through a [`TableHandle`].
+pub struct SegmentEngine {
+    handle: TableHandle,
+    /// Positions per segment.
+    pub seg_n: usize,
+    /// Number of segments per filter (`ceil(positions / seg_n)`).
+    pub n_segments: usize,
+    /// Rows per segment table: `2^(seg_n * act_bits)`.
+    pub seg_card: usize,
+    /// `f` evaluations paid when these tables were *originally* built —
+    /// a store-borrowed engine reports the table set's one-off historical
+    /// cost, not a cost it paid itself (the planner's `cached` pricing is
+    /// what zeroes marginal builds).
+    pub build_evals: u64,
+    out_ch: usize,
+    positions: usize,
+    act_bits: u32,
+    geom: ConvGeometry,
+}
+
+impl SegmentEngine {
+    /// Build from weights with privately-owned tables; serving paths use
+    /// [`SegmentEngine::from_store`].
+    pub fn new(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+    ) -> SegmentEngine {
+        Self::with_func(weights, act_bits, seg_n, geom, &ConvFunc::Mul)
+    }
+
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> SegmentEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let handle = TableHandle::private(TableArtifact::Segment(SegmentTables::build(
+            weights, act_bits, seg_n, f,
+        )));
+        Self::from_handle(handle, geom)
+    }
+
+    /// Borrow (or build-on-miss) the segment tables from a [`TableStore`].
+    pub fn from_store(
+        store: &TableStore,
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> SegmentEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let key = TableKey::segment(weights, act_bits, seg_n, f);
+        let handle = store.get_or_build(key, || {
+            TableArtifact::Segment(SegmentTables::build(weights, act_bits, seg_n, f))
+        });
+        Self::from_handle(handle, geom)
+    }
+
+    /// Wrap a segment-table handle (store-borrowed or private).
+    pub fn from_handle(handle: TableHandle, geom: ConvGeometry) -> SegmentEngine {
+        let t = handle.segment();
+        assert_eq!(
+            t.positions % (geom.kh * geom.kw),
+            0,
+            "table positions not divisible by kernel area"
+        );
+        let (seg_n, n_segments, seg_card) = (t.seg_n, t.n_segments, t.seg_card);
+        let (out_ch, positions, act_bits, build_evals) =
+            (t.out_ch, t.positions, t.act_bits, t.build_evals);
+        SegmentEngine {
+            handle,
+            seg_n,
+            n_segments,
+            seg_card,
+            build_evals,
+            out_ch,
+            positions,
+            act_bits,
+            geom,
         }
     }
 
@@ -131,18 +264,12 @@ impl SegmentEngine {
 
     /// Table memory in entries.
     pub fn entries(&self) -> usize {
-        self.values.len()
+        self.handle.segment().values.len()
     }
 
     /// Memory at a given value bit-width.
     pub fn bytes(&self, value_bits: u32) -> f64 {
         self.entries() as f64 * value_bits as f64 / 8.0
-    }
-
-    #[inline(always)]
-    fn seg_table(&self, oc: usize, seg: usize) -> &[i32] {
-        let base = (oc * self.n_segments + seg) * self.seg_card;
-        &self.values[base..base + self.seg_card]
     }
 }
 
@@ -166,6 +293,7 @@ impl ConvEngine for SegmentEngine {
         assert_eq!(s.c, in_ch, "input channels mismatch");
         let out_shape = g.out_shape(s, self.out_ch);
         let mut out = Tensor4::zeros(out_shape);
+        let t = self.handle.segment();
         // Pre-processing circuitry: pack the RF's activations into segment
         // offsets once, reused across all output channels (the paper:
         // "calculated offsets can be reused").
@@ -190,7 +318,7 @@ impl ConvEngine for SegmentEngine {
                     for oc in 0..self.out_ch {
                         let mut acc = 0i32;
                         for (seg, &off) in offsets.iter().enumerate() {
-                            acc += self.seg_table(oc, seg)[off as usize];
+                            acc += t.seg_table(oc, seg)[off as usize];
                         }
                         out.set(n, oy, ox, oc, acc);
                     }
@@ -216,7 +344,7 @@ impl ConvEngine for SegmentEngine {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: self.values.len() as f64 * 4.0,
+            table_bytes: self.entries() as f64 * 4.0,
         }
     }
 }
@@ -318,6 +446,26 @@ mod tests {
     }
 
     #[test]
+    fn store_borrowed_segment_engine_matches_owned() {
+        let mut rng = Rng::new(77);
+        let x = Tensor4::random_activations(Shape4::new(1, 7, 7, 1), 2, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let store = TableStore::new();
+        let owned = SegmentEngine::new(&w, 2, 4, geom);
+        let a = SegmentEngine::from_store(&store, &w, 2, 4, geom, &ConvFunc::Mul);
+        let b = SegmentEngine::from_store(&store, &w, 2, 4, geom, &ConvFunc::Mul);
+        let expect = owned.conv(&x);
+        assert_eq!(a.conv(&x), expect);
+        assert_eq!(b.conv(&x), expect);
+        assert_eq!(store.stats().builds, 1);
+        // a different seg_n is a different content address
+        let c = SegmentEngine::from_store(&store, &w, 2, 2, geom, &ConvFunc::Mul);
+        assert_eq!(c.conv(&x), expect);
+        assert_eq!(store.stats().builds, 2);
+    }
+
+    #[test]
     #[should_panic]
     fn infeasible_table_rejected() {
         let mut rng = Rng::new(10);
@@ -337,41 +485,29 @@ mod tests {
 /// Tables are stored channels-last (`[seg][offset][oc]`) so the accumulate
 /// loop is a contiguous row add per segment. Requires `f(0, a) == 0` for
 /// the row-tail padding (true of every `ConvFunc`).
-pub struct RowSegmentEngine {
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowSegmentTables {
     /// `cl[(seg_global * seg_card + offset) * out_ch + oc]`.
-    cl: Vec<i32>,
-    out_ch: usize,
-    positions: usize,
+    pub(crate) cl: Vec<i32>,
+    pub out_ch: usize,
+    pub positions: usize,
     pub seg_n: usize,
     /// Segments per kernel row: `ceil(kw*cin / seg_n)`.
     pub segs_per_row: usize,
     /// Total segments: `kh * segs_per_row`.
     pub n_segments: usize,
     pub seg_card: usize,
-    act_bits: u32,
-    geom: ConvGeometry,
+    pub act_bits: u32,
 }
 
-impl RowSegmentEngine {
-    pub fn new(
+impl RowSegmentTables {
+    pub fn build(
         weights: &Tensor4<i8>,
         act_bits: u32,
         seg_n: usize,
-        geom: ConvGeometry,
-    ) -> RowSegmentEngine {
-        Self::with_func(weights, act_bits, seg_n, geom, &ConvFunc::Mul)
-    }
-
-    pub fn with_func(
-        weights: &Tensor4<i8>,
-        act_bits: u32,
-        seg_n: usize,
-        geom: ConvGeometry,
         f: &ConvFunc,
-    ) -> RowSegmentEngine {
+    ) -> RowSegmentTables {
         let s = weights.shape();
-        assert_eq!(s.h, geom.kh);
-        assert_eq!(s.w, geom.kw);
         assert!(seg_n >= 1);
         assert!(
             (seg_n as u32 * act_bits) <= 20,
@@ -411,7 +547,7 @@ impl RowSegmentEngine {
                 }
             }
         }
-        RowSegmentEngine {
+        RowSegmentTables {
             cl,
             out_ch: oc_n,
             positions,
@@ -420,12 +556,161 @@ impl RowSegmentEngine {
             n_segments,
             seg_card,
             act_bits,
+        }
+    }
+
+    pub(crate) fn write_to(&self, w: &mut ByteWriter) {
+        w.u32(self.act_bits);
+        w.u64(self.out_ch as u64);
+        w.u64(self.positions as u64);
+        w.u64(self.seg_n as u64);
+        w.u64(self.segs_per_row as u64);
+        w.u64(self.n_segments as u64);
+        w.i32_slice(&self.cl);
+    }
+
+    pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<RowSegmentTables, String> {
+        let act_bits = r.take_u32()?;
+        let out_ch = r.take_u64()? as usize;
+        let positions = r.take_u64()? as usize;
+        let seg_n = r.take_u64()? as usize;
+        let segs_per_row = r.take_u64()? as usize;
+        let n_segments = r.take_u64()? as usize;
+        let cl = r.take_i32_slice()?;
+        // Both factors bounded before the multiply (see
+        // SegmentTables::read_from).
+        if seg_n == 0
+            || seg_n > 20
+            || !(1..=20).contains(&act_bits)
+            || seg_n as u32 * act_bits > 20
+            || segs_per_row == 0
+        {
+            return Err(format!(
+                "row-segment tables: bad seg_n {seg_n} / act_bits {act_bits} / spr {segs_per_row}"
+            ));
+        }
+        let seg_card = 1usize << (seg_n as u32 * act_bits);
+        // n_segments = kh * segs_per_row; positions = kh * (kw*cin) where
+        // the padded per-row grid is segs_per_row * seg_n wide.
+        if n_segments == 0 || n_segments % segs_per_row != 0 {
+            return Err("row-segment tables: segments not divisible by rows".into());
+        }
+        let kh = n_segments / segs_per_row;
+        let grid_ok = match segs_per_row.checked_mul(seg_n) {
+            Some(rg) => positions > 0 && positions % kh == 0 && positions / kh <= rg,
+            None => false,
+        };
+        if !grid_ok {
+            return Err("row-segment tables: inconsistent row geometry".into());
+        }
+        let expect = n_segments.checked_mul(seg_card).and_then(|v| v.checked_mul(out_ch));
+        if expect != Some(cl.len()) {
+            return Err(format!(
+                "row-segment tables: {} values != {n_segments}x{seg_card}x{out_ch}",
+                cl.len()
+            ));
+        }
+        Ok(RowSegmentTables {
+            cl,
+            out_ch,
+            positions,
+            seg_n,
+            segs_per_row,
+            n_segments,
+            seg_card,
+            act_bits,
+        })
+    }
+}
+
+/// Row-aligned segment engine; borrows its [`RowSegmentTables`] through a
+/// [`TableHandle`].
+pub struct RowSegmentEngine {
+    handle: TableHandle,
+    pub seg_n: usize,
+    /// Segments per kernel row: `ceil(kw*cin / seg_n)`.
+    pub segs_per_row: usize,
+    /// Total segments: `kh * segs_per_row`.
+    pub n_segments: usize,
+    pub seg_card: usize,
+    out_ch: usize,
+    positions: usize,
+    act_bits: u32,
+    geom: ConvGeometry,
+}
+
+impl RowSegmentEngine {
+    pub fn new(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+    ) -> RowSegmentEngine {
+        Self::with_func(weights, act_bits, seg_n, geom, &ConvFunc::Mul)
+    }
+
+    pub fn with_func(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> RowSegmentEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let handle = TableHandle::private(TableArtifact::RowSegment(RowSegmentTables::build(
+            weights, act_bits, seg_n, f,
+        )));
+        Self::from_handle(handle, geom)
+    }
+
+    /// Borrow (or build-on-miss) the row-segment tables from a
+    /// [`TableStore`].
+    pub fn from_store(
+        store: &TableStore,
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        seg_n: usize,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> RowSegmentEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let key = TableKey::row_segment(weights, act_bits, seg_n, f);
+        let handle = store.get_or_build(key, || {
+            TableArtifact::RowSegment(RowSegmentTables::build(weights, act_bits, seg_n, f))
+        });
+        Self::from_handle(handle, geom)
+    }
+
+    /// Wrap a row-segment-table handle (store-borrowed or private).
+    pub fn from_handle(handle: TableHandle, geom: ConvGeometry) -> RowSegmentEngine {
+        let t = handle.row_segment();
+        assert_eq!(
+            t.positions % (geom.kh * geom.kw),
+            0,
+            "table positions not divisible by kernel area"
+        );
+        let (seg_n, segs_per_row, n_segments, seg_card) =
+            (t.seg_n, t.segs_per_row, t.n_segments, t.seg_card);
+        let (out_ch, positions, act_bits) = (t.out_ch, t.positions, t.act_bits);
+        RowSegmentEngine {
+            handle,
+            seg_n,
+            segs_per_row,
+            n_segments,
+            seg_card,
+            out_ch,
+            positions,
+            act_bits,
             geom,
         }
     }
 
     pub fn entries(&self) -> usize {
-        self.cl.len()
+        self.handle.row_segment().cl.len()
     }
 }
 
@@ -454,7 +739,8 @@ impl ConvEngine for RowSegmentEngine {
         let row_positions = g.kw * s.c;
         let bits = self.act_bits;
         let card = self.seg_card;
-        let cl = &self.cl[..];
+        let tables = self.handle.row_segment();
+        let cl = &tables.cl[..];
         let mut acc = vec![0i32; oc_n];
         for n in 0..s.n {
             // Pack every input row once; each row is w*cin codes.
@@ -503,7 +789,7 @@ impl ConvEngine for RowSegmentEngine {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: self.cl.len() as f64 * 4.0,
+            table_bytes: self.entries() as f64 * 4.0,
         }
     }
 }
@@ -604,5 +890,21 @@ mod row_tests {
         // 5 positions/row, seg_n 8 -> 1 segment per row, 5 total.
         assert_eq!(e.segs_per_row, 1);
         assert_eq!(e.n_segments, 5);
+    }
+
+    #[test]
+    fn store_borrowed_row_engine_matches_owned() {
+        let mut rng = Rng::new(10);
+        let x = Tensor4::random_activations(Shape4::new(2, 8, 8, 1), 1, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(2, 5, 5, 1), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(5, 5);
+        let store = TableStore::new();
+        let owned = RowSegmentEngine::new(&w, 1, 8, geom);
+        let a = RowSegmentEngine::from_store(&store, &w, 1, 8, geom, &ConvFunc::Mul);
+        let b = RowSegmentEngine::from_store(&store, &w, 1, 8, geom, &ConvFunc::Mul);
+        let expect = owned.conv(&x);
+        assert_eq!(a.conv(&x), expect);
+        assert_eq!(b.conv(&x), expect);
+        assert_eq!(store.stats().builds, 1);
     }
 }

@@ -15,8 +15,10 @@ use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
 use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
 
-/// Shared-table store for one layer: unique tables + per-position pointers.
+/// Shared-table set for one layer: unique tables + per-position pointers.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SharedTables {
     /// Unique tables, each `card` entries, concatenated.
     unique: Vec<i32>,
@@ -74,6 +76,53 @@ impl SharedTables {
         &self.unique[t * self.card..(t + 1) * self.card]
     }
 
+    /// Actual resident bytes of this in-memory representation (i32 values,
+    /// u32 pointers) — what the table store's budget accounts.
+    pub fn resident_bytes(&self) -> f64 {
+        (self.unique.len() + self.pointers.len()) as f64 * 4.0
+    }
+
+    /// Serialize for the table cache (`pcilt::store`).
+    pub(crate) fn write_to(&self, w: &mut ByteWriter) {
+        w.u32(self.act_bits);
+        w.u64(self.out_ch as u64);
+        w.u64(self.positions as u64);
+        w.u64(self.card as u64);
+        w.i32_slice(&self.unique);
+        w.u32_slice(&self.pointers);
+    }
+
+    pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<SharedTables, String> {
+        let act_bits = r.take_u32()?;
+        let out_ch = r.take_u64()? as usize;
+        let positions = r.take_u64()? as usize;
+        let card = r.take_u64()? as usize;
+        let unique = r.take_i32_slice()?;
+        let pointers = r.take_u32_slice()?;
+        if !(1..=12).contains(&act_bits) || card != 1usize << act_bits {
+            return Err(format!("shared tables: bad act_bits {act_bits} / card {card}"));
+        }
+        if card == 0 || unique.len() % card != 0 {
+            return Err("shared tables: unique length not a card multiple".into());
+        }
+        let n_unique = unique.len() / card;
+        if out_ch.checked_mul(positions) != Some(pointers.len()) {
+            return Err("shared tables: pointer count mismatch".into());
+        }
+        if pointers.iter().any(|&p| p as usize >= n_unique) {
+            return Err("shared tables: pointer out of range".into());
+        }
+        Ok(SharedTables {
+            n_unique,
+            unique,
+            pointers,
+            out_ch,
+            positions,
+            card,
+            act_bits,
+        })
+    }
+
     /// Memory footprint: unique tables at `value_bits` per entry plus
     /// pointers at `ceil(log2 n_unique)` bits each — the quantities the
     /// paper's ~25 MB / ~18 MB examples trade off.
@@ -116,6 +165,7 @@ impl SharedMemory {
 /// pool. Feasible when `value_index_bits < value_bits` ("where the
 /// indirection offsets need substantially less memory than the PCILT
 /// values").
+#[derive(Debug, Clone, PartialEq)]
 pub struct ValueIndirection {
     /// Unique values pool.
     pub pool: Vec<i32>,
@@ -170,12 +220,62 @@ impl ValueIndirection {
         self.pool.len() as f64 * value_bits as f64 / 8.0
             + self.cells.len() as f64 * idx_bits / 8.0
     }
+
+    /// Actual resident bytes of this representation (store accounting).
+    pub fn resident_bytes(&self) -> f64 {
+        (self.pool.len() + self.cells.len()) as f64 * 4.0
+    }
+
+    /// Build through a [`TableStore`]: identical layers borrow one pool.
+    pub fn build_in_store(
+        store: &TableStore,
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        f: &ConvFunc,
+    ) -> TableHandle {
+        let key = TableKey::value_indirection(weights, act_bits, f);
+        store.get_or_build(key, || {
+            TableArtifact::Value(ValueIndirection::build(weights, act_bits, f))
+        })
+    }
+
+    pub(crate) fn write_to(&self, w: &mut ByteWriter) {
+        w.u64(self.card as u64);
+        w.u64(self.positions as u64);
+        w.i32_slice(&self.pool);
+        w.u32_slice(&self.cells);
+    }
+
+    pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<ValueIndirection, String> {
+        let card = r.take_u64()? as usize;
+        let positions = r.take_u64()? as usize;
+        let pool = r.take_i32_slice()?;
+        let cells = r.take_u32_slice()?;
+        let per_ch = positions.checked_mul(card);
+        let cells_ok = match per_ch {
+            Some(p) => p > 0 && cells.len() % p == 0,
+            None => false,
+        };
+        if !cells_ok {
+            return Err("value indirection: cell count mismatch".into());
+        }
+        if cells.iter().any(|&c| c as usize >= pool.len()) {
+            return Err("value indirection: cell index out of range".into());
+        }
+        Ok(ValueIndirection {
+            pool,
+            cells,
+            card,
+            positions,
+        })
+    }
 }
 
 /// Shared-table conv engine (pointer indirection on the hot path — the
 /// "smaller delay … due to the usage of an additional PCILT indirection").
+/// Borrows its [`SharedTables`] through a [`TableHandle`].
 pub struct SharedEngine {
-    tables: SharedTables,
+    handle: TableHandle,
     geom: ConvGeometry,
 }
 
@@ -194,13 +294,33 @@ impl SharedEngine {
         assert_eq!(s.h, geom.kh);
         assert_eq!(s.w, geom.kw);
         SharedEngine {
-            tables: SharedTables::build(weights, act_bits, f),
+            handle: TableHandle::private(TableArtifact::Shared(SharedTables::build(
+                weights, act_bits, f,
+            ))),
             geom,
         }
     }
 
+    /// Borrow (or build-on-miss) the shared tables from a [`TableStore`].
+    pub fn from_store(
+        store: &TableStore,
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        geom: ConvGeometry,
+        f: &ConvFunc,
+    ) -> SharedEngine {
+        let s = weights.shape();
+        assert_eq!(s.h, geom.kh);
+        assert_eq!(s.w, geom.kw);
+        let key = TableKey::shared(weights, act_bits, f);
+        let handle = store.get_or_build(key, || {
+            TableArtifact::Shared(SharedTables::build(weights, act_bits, f))
+        });
+        SharedEngine { handle, geom }
+    }
+
     pub fn tables(&self) -> &SharedTables {
-        &self.tables
+        self.handle.shared()
     }
 }
 
@@ -210,7 +330,7 @@ impl ConvEngine for SharedEngine {
     }
 
     fn out_channels(&self) -> usize {
-        self.tables.out_ch
+        self.tables().out_ch
     }
 
     fn geometry(&self) -> ConvGeometry {
@@ -220,7 +340,7 @@ impl ConvEngine for SharedEngine {
     fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
         let s = x.shape();
         let g = self.geom;
-        let t = &self.tables;
+        let t = self.tables();
         let in_ch = t.positions / (g.kh * g.kw);
         assert_eq!(s.c, in_ch);
         let out_shape = g.out_shape(s, t.out_ch);
@@ -252,12 +372,13 @@ impl ConvEngine for SharedEngine {
 
     fn op_counts(&self, s: Shape4) -> OpCounts {
         let rfs = rf_count(self.geom, s);
-        let per_rf = (self.tables.positions * self.tables.out_ch) as u64;
+        let t = self.tables();
+        let per_rf = (t.positions * t.out_ch) as u64;
         OpCounts {
             mults: 0,
             adds: rfs * per_rf,
             // extra pointer fetch per (position, oc): the indirection cost.
-            fetches: rfs * (self.tables.positions as u64 + 2 * per_rf),
+            fetches: rfs * (t.positions as u64 + 2 * per_rf),
         }
     }
 
@@ -265,7 +386,7 @@ impl ConvEngine for SharedEngine {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: self.tables.bytes(32).total(),
+            table_bytes: self.tables().bytes(32).total(),
         }
     }
 }
@@ -351,6 +472,26 @@ mod tests {
     }
 
     #[test]
+    fn value_indirection_borrows_through_the_store() {
+        let mut rng = Rng::new(49);
+        let w = palette_weights(Shape4::new(2, 3, 3, 1), &[-2, 0, 2], &mut rng);
+        let store = TableStore::new();
+        let h1 = ValueIndirection::build_in_store(&store, &w, 3, &ConvFunc::Mul);
+        let h2 = ValueIndirection::build_in_store(&store, &w, 3, &ConvFunc::Mul);
+        assert_eq!(store.stats().builds, 1, "identical pools must build once");
+        let vi = h1.value_indirection();
+        for a in 0..8u8 {
+            assert_eq!(vi.fetch(0, 0, a), w.get(0, 0, 0, 0) as i32 * a as i32);
+        }
+        assert_eq!(h1.value_indirection(), h2.value_indirection());
+        // counting lookup without a builder
+        let key = TableKey::value_indirection(&w, 3, &ConvFunc::Mul);
+        assert!(store.get(key).is_some());
+        assert!(store.get(TableKey::value_indirection(&w, 4, &ConvFunc::Mul)).is_none());
+        assert_eq!(store.stats().misses, 2, "one build miss + one lookup miss");
+    }
+
+    #[test]
     fn prefix_property_of_cardinalities() {
         // "the one for the lower cardinality will match the beginning of the
         // one for the higher cardinality"
@@ -358,6 +499,23 @@ mod tests {
         let lo = Pcilt::build(-7, 4, &ConvFunc::Mul);
         let hi = Pcilt::build(-7, 8, &ConvFunc::Mul);
         assert_eq!(&hi.entries[..16], &lo.entries[..]);
+    }
+
+    #[test]
+    fn store_borrowed_shared_engine_matches_owned() {
+        let mut rng = Rng::new(48);
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 2), 4, &mut rng);
+        let w = palette_weights(Shape4::new(3, 3, 3, 2), &[-3, -1, 0, 1, 3], &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let store = TableStore::new();
+        let owned = SharedEngine::new(&w, 4, geom);
+        let a = SharedEngine::from_store(&store, &w, 4, geom, &ConvFunc::Mul);
+        let b = SharedEngine::from_store(&store, &w, 4, geom, &ConvFunc::Mul);
+        let expect = owned.conv(&x);
+        assert_eq!(a.conv(&x), expect);
+        assert_eq!(b.conv(&x), expect);
+        assert_eq!(store.stats().builds, 1);
+        assert_eq!(a.tables(), b.tables());
     }
 
     #[test]

@@ -1,0 +1,1286 @@
+//! `TableStore` — content-addressed lifecycle management for every lookup
+//! table in the process.
+//!
+//! The paper's speedup rests on tables being *pre-calculated*; what it does
+//! not say is who owns them. Before this module each engine built and
+//! privately owned its tables, so a server warm-up paid the full build cost
+//! on every boot and identical layers duplicated table memory — exactly the
+//! GB-scale footprint §*Using Shared PCILTs* warns about. The store turns
+//! tables into a managed, shareable resource:
+//!
+//! - **Content addressing.** A [`TableKey`] is a 128-bit hash of
+//!   `(artifact kind, weight shape, weight bytes, cardinality, conv-fn id,
+//!   tuning params)`. Two layers with identical weights deduplicate to one
+//!   allocation; engines borrow through a cheap [`TableHandle`] clone.
+//! - **Single-flight builds.** [`TableStore::get_or_build`] builds under
+//!   the store lock, so concurrent workers requesting the same key never
+//!   duplicate a build. [`TableStore::prebuild`] constructs distinct keys
+//!   on parallel scoped threads (the `pcilt::parallel` worker pattern).
+//! - **Budgeted eviction.** A byte budget drives LRU eviction of entries
+//!   no engine currently borrows; a later request transparently rebuilds
+//!   (rebuild-on-miss). `budget = 0` means unlimited.
+//! - **Persistence.** [`TableStore::save`]/[`TableStore::load`] write
+//!   `tables.bin` plus a checksummed `tables.manifest` next to the
+//!   `runtime::artifact` bundles, so a restarted server performs **zero**
+//!   redundant table builds. Loaded entries are bit-identical to a fresh
+//!   build (asserted in `tests/store_stack.rs`).
+//! - **Observability.** Hit/miss/build/load/eviction counters surface
+//!   through [`TableStoreStats`] and `coordinator::metrics`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::tensor::Tensor4;
+
+use super::custom_fn::ConvFunc;
+use super::mixed::{ChannelWidths, MixedTables};
+use super::segment::{RowSegmentTables, SegmentTables};
+use super::shared::{SharedTables, ValueIndirection};
+use super::table::LayerTables;
+
+// ---------------------------------------------------------------------------
+// Hashing
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice (used for file checksums and `ConvFunc` ids).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Two independent FNV-1a streams -> a 128-bit content hash. 64 bits is
+/// uncomfortable for content addressing (a silent collision would alias
+/// one layer's tables to another's); 128 bits is not.
+struct KeyHasher {
+    a: u64,
+    b: u64,
+}
+
+impl KeyHasher {
+    fn new() -> KeyHasher {
+        KeyHasher {
+            a: FNV_OFFSET,
+            b: FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+
+    fn byte(&mut self, x: u8) {
+        self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ x as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    fn bytes(&mut self, xs: &[u8]) {
+        for &x in xs {
+            self.byte(x);
+        }
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn finish(self) -> u128 {
+        ((self.a as u128) << 64) | self.b as u128
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Keys
+// ---------------------------------------------------------------------------
+
+/// Content address of one table artifact. Everything that can change the
+/// table *values* is hashed in; nothing else is (stride, for example, does
+/// not affect table content and is deliberately excluded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TableKey(pub u128);
+
+/// Artifact kind tags (also the on-disk discriminant).
+const KIND_DENSE: u8 = 0;
+const KIND_SHARED: u8 = 1;
+const KIND_VALUE: u8 = 2;
+const KIND_SEGMENT: u8 = 3;
+const KIND_ROW_SEGMENT: u8 = 4;
+const KIND_MIXED: u8 = 5;
+
+impl TableKey {
+    fn of(kind: u8, w: &Tensor4<i8>, bits: u32, f: &ConvFunc, extra: &[u64]) -> TableKey {
+        let mut h = KeyHasher::new();
+        h.byte(kind);
+        let s = w.shape();
+        for d in [s.n, s.h, s.w, s.c] {
+            h.u64(d as u64);
+        }
+        for &v in w.data() {
+            h.byte(v as u8);
+        }
+        h.u32(bits);
+        h.u64(f.cache_id());
+        for &e in extra {
+            h.u64(e);
+        }
+        TableKey(h.finish())
+    }
+
+    /// Dense [`LayerTables`] (the basic PCILT engine).
+    pub fn dense(w: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> TableKey {
+        Self::of(KIND_DENSE, w, act_bits, f, &[])
+    }
+
+    /// [`SharedTables`] (unique tables + per-position pointers).
+    pub fn shared(w: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> TableKey {
+        Self::of(KIND_SHARED, w, act_bits, f, &[])
+    }
+
+    /// [`ValueIndirection`] (unique-value pool + per-cell indices).
+    pub fn value_indirection(w: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> TableKey {
+        Self::of(KIND_VALUE, w, act_bits, f, &[])
+    }
+
+    /// [`SegmentTables`] for a given segment width.
+    pub fn segment(w: &Tensor4<i8>, act_bits: u32, seg_n: usize, f: &ConvFunc) -> TableKey {
+        Self::of(KIND_SEGMENT, w, act_bits, f, &[seg_n as u64])
+    }
+
+    /// [`RowSegmentTables`] for a given segment width.
+    pub fn row_segment(w: &Tensor4<i8>, act_bits: u32, seg_n: usize, f: &ConvFunc) -> TableKey {
+        Self::of(KIND_ROW_SEGMENT, w, act_bits, f, &[seg_n as u64])
+    }
+
+    /// [`MixedTables`] over per-channel widths at a table cardinality.
+    pub fn mixed(
+        w: &Tensor4<i8>,
+        widths: &ChannelWidths,
+        table_bits: u32,
+        f: &ConvFunc,
+    ) -> TableKey {
+        let extra: Vec<u64> = widths.bits.iter().map(|&b| b as u64).collect();
+        Self::of(KIND_MIXED, w, table_bits, f, &extra)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifacts and handles
+// ---------------------------------------------------------------------------
+
+/// One stored table artifact. A closed enum (not a trait object) so the
+/// persistence format is total: every variant serializes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TableArtifact {
+    Dense(LayerTables),
+    Shared(SharedTables),
+    Value(ValueIndirection),
+    Segment(SegmentTables),
+    RowSegment(RowSegmentTables),
+    Mixed(MixedTables),
+}
+
+impl TableArtifact {
+    fn kind(&self) -> u8 {
+        match self {
+            TableArtifact::Dense(_) => KIND_DENSE,
+            TableArtifact::Shared(_) => KIND_SHARED,
+            TableArtifact::Value(_) => KIND_VALUE,
+            TableArtifact::Segment(_) => KIND_SEGMENT,
+            TableArtifact::RowSegment(_) => KIND_ROW_SEGMENT,
+            TableArtifact::Mixed(_) => KIND_MIXED,
+        }
+    }
+
+    /// Human-readable kind name (reports, `pcilt tables stats`).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            TableArtifact::Dense(_) => "dense",
+            TableArtifact::Shared(_) => "shared",
+            TableArtifact::Value(_) => "value",
+            TableArtifact::Segment(_) => "segment",
+            TableArtifact::RowSegment(_) => "segment-row",
+            TableArtifact::Mixed(_) => "mixed",
+        }
+    }
+
+    /// Resident bytes of the artifact itself (i32/u32 entries).
+    pub fn bytes(&self) -> f64 {
+        match self {
+            TableArtifact::Dense(t) => t.entries() as f64 * 4.0,
+            TableArtifact::Shared(t) => t.resident_bytes(),
+            TableArtifact::Value(t) => t.resident_bytes(),
+            TableArtifact::Segment(t) => t.values.len() as f64 * 4.0,
+            TableArtifact::RowSegment(t) => t.cl.len() as f64 * 4.0,
+            TableArtifact::Mixed(t) => t.resident_bytes(),
+        }
+    }
+
+    fn write_to(&self, w: &mut ByteWriter) {
+        match self {
+            TableArtifact::Dense(t) => t.write_to(w),
+            TableArtifact::Shared(t) => t.write_to(w),
+            TableArtifact::Value(t) => t.write_to(w),
+            TableArtifact::Segment(t) => t.write_to(w),
+            TableArtifact::RowSegment(t) => t.write_to(w),
+            TableArtifact::Mixed(t) => t.write_to(w),
+        }
+    }
+
+    fn read_from(kind: u8, r: &mut ByteReader<'_>) -> Result<TableArtifact, String> {
+        Ok(match kind {
+            KIND_DENSE => TableArtifact::Dense(LayerTables::read_from(r)?),
+            KIND_SHARED => TableArtifact::Shared(SharedTables::read_from(r)?),
+            KIND_VALUE => TableArtifact::Value(ValueIndirection::read_from(r)?),
+            KIND_SEGMENT => TableArtifact::Segment(SegmentTables::read_from(r)?),
+            KIND_ROW_SEGMENT => TableArtifact::RowSegment(RowSegmentTables::read_from(r)?),
+            KIND_MIXED => TableArtifact::Mixed(MixedTables::read_from(r)?),
+            other => return Err(format!("unknown artifact kind {other}")),
+        })
+    }
+}
+
+/// A stored entry: the artifact plus lazily-derived views shared by every
+/// borrowing engine (the channels-last mirror for dense tables).
+pub struct StoreEntry {
+    key: TableKey,
+    artifact: TableArtifact,
+    cl: OnceLock<Arc<Vec<i32>>>,
+}
+
+/// Borrowed access to a store entry. Cloning is an `Arc` clone; the entry
+/// stays alive (and is never evicted out from under an engine) for as long
+/// as any handle exists.
+#[derive(Clone)]
+pub struct TableHandle(Arc<StoreEntry>);
+
+impl TableHandle {
+    /// Wrap an artifact in a detached handle owned by no store (used by
+    /// the plain engine constructors and PCILT-as-weights, whose tables
+    /// are trained parameters rather than cacheable derivations).
+    pub fn private(artifact: TableArtifact) -> TableHandle {
+        TableHandle(Arc::new(StoreEntry {
+            key: TableKey(0),
+            artifact,
+            cl: OnceLock::new(),
+        }))
+    }
+
+    /// Content address (zero for private handles).
+    pub fn key(&self) -> TableKey {
+        self.0.key
+    }
+
+    pub fn artifact(&self) -> &TableArtifact {
+        &self.0.artifact
+    }
+
+    /// Dense tables or panic — engines know which kind they stored.
+    pub fn dense(&self) -> &LayerTables {
+        match &self.0.artifact {
+            TableArtifact::Dense(t) => t,
+            other => panic!("handle holds {} tables, not dense", other.kind_name()),
+        }
+    }
+
+    pub fn shared(&self) -> &SharedTables {
+        match &self.0.artifact {
+            TableArtifact::Shared(t) => t,
+            other => panic!("handle holds {} tables, not shared", other.kind_name()),
+        }
+    }
+
+    pub fn value_indirection(&self) -> &ValueIndirection {
+        match &self.0.artifact {
+            TableArtifact::Value(t) => t,
+            other => panic!("handle holds {} tables, not value", other.kind_name()),
+        }
+    }
+
+    pub fn segment(&self) -> &SegmentTables {
+        match &self.0.artifact {
+            TableArtifact::Segment(t) => t,
+            other => panic!("handle holds {} tables, not segment", other.kind_name()),
+        }
+    }
+
+    pub fn row_segment(&self) -> &RowSegmentTables {
+        match &self.0.artifact {
+            TableArtifact::RowSegment(t) => t,
+            other => panic!("handle holds {} tables, not segment-row", other.kind_name()),
+        }
+    }
+
+    pub fn mixed(&self) -> &MixedTables {
+        match &self.0.artifact {
+            TableArtifact::Mixed(t) => t,
+            other => panic!("handle holds {} tables, not mixed", other.kind_name()),
+        }
+    }
+
+    /// Channels-last `[p][a][oc]` mirror of dense tables, built once and
+    /// shared by every engine borrowing this entry. Derived data: cheap to
+    /// recompute, so it is not persisted.
+    pub fn channels_last(&self) -> Arc<Vec<i32>> {
+        self.0
+            .cl
+            .get_or_init(|| Arc::new(self.dense().channels_last()))
+            .clone()
+    }
+
+    /// Resident bytes including derived views built so far.
+    pub fn bytes(&self) -> f64 {
+        let cl = self.0.cl.get().map(|c| c.len() * 4).unwrap_or(0);
+        self.0.artifact.bytes() + cl as f64
+    }
+
+    /// Number of live handles (the store's own counts as one).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Counter snapshot for reports, tests and `coordinator::metrics`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TableStoreStats {
+    /// Entries currently resident.
+    pub entries: u64,
+    /// Resident bytes (artifacts + derived views built so far).
+    pub bytes: f64,
+    /// High-water mark of resident bytes.
+    pub peak_bytes: f64,
+    /// `get_or_build` calls answered from the store.
+    pub hits: u64,
+    /// `get_or_build` calls that found nothing.
+    pub misses: u64,
+    /// Tables built (every miss builds; loads do not count).
+    pub builds: u64,
+    /// Entries restored from a persisted cache.
+    pub loads: u64,
+    /// Entries evicted to meet the byte budget.
+    pub evictions: u64,
+    /// Current byte budget (0 = unlimited).
+    pub budget_bytes: u64,
+}
+
+impl TableStoreStats {
+    /// One-line report for logs and serving metrics.
+    pub fn report(&self) -> String {
+        use crate::util::stats::fmt_bytes;
+        format!(
+            "tables: {} entries ({}), {} hits, {} misses, {} builds, {} loaded, {} evicted",
+            self.entries,
+            fmt_bytes(self.bytes),
+            self.hits,
+            self.misses,
+            self.builds,
+            self.loads,
+            self.evictions,
+        )
+    }
+}
+
+struct Slot {
+    handle: TableHandle,
+    last_used: u64,
+}
+
+struct Inner {
+    entries: BTreeMap<u128, Slot>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    builds: u64,
+    loads: u64,
+    evictions: u64,
+    peak_bytes: f64,
+    budget_bytes: u64,
+}
+
+impl Inner {
+    fn total_bytes(&self) -> f64 {
+        self.entries.values().map(|s| s.handle.bytes()).sum()
+    }
+
+    fn note_peak(&mut self) {
+        let b = self.total_bytes();
+        if b > self.peak_bytes {
+            self.peak_bytes = b;
+        }
+    }
+
+    /// Evict least-recently-used entries nobody borrows until the budget
+    /// holds. Entries with live handles are skipped (evicting them would
+    /// not free memory); if only borrowed entries remain, the store runs
+    /// over budget until they drop. Resident bytes are summed once and
+    /// decremented per eviction — entry bytes can grow behind the store's
+    /// back (lazy mirrors), so a running counter would drift, but one
+    /// O(n) sum plus O(n) per victim keeps inserts cheap.
+    fn evict_to_budget(&mut self) {
+        if self.budget_bytes == 0 {
+            return;
+        }
+        let mut total = self.total_bytes();
+        while total > self.budget_bytes as f64 {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, s)| s.handle.ref_count() == 1)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    if let Some(slot) = self.entries.remove(&k) {
+                        total -= slot.handle.bytes();
+                    }
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// The content-addressed table store. One per process for serving (see
+/// [`TableStore::process`]); tests build private instances.
+pub struct TableStore {
+    inner: Mutex<Inner>,
+}
+
+impl Default for TableStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TableStore {
+    /// Unbounded store.
+    pub fn new() -> TableStore {
+        Self::with_budget(0)
+    }
+
+    /// Store with a byte budget (0 = unlimited).
+    pub fn with_budget(budget_bytes: u64) -> TableStore {
+        TableStore {
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                builds: 0,
+                loads: 0,
+                evictions: 0,
+                peak_bytes: 0.0,
+                budget_bytes,
+            }),
+        }
+    }
+
+    /// The process-wide store shared by `QuantCnn`, the planner and every
+    /// coordinator worker. Configured by `[tables]` (`config::TablesConfig`).
+    pub fn process() -> &'static Arc<TableStore> {
+        static PROCESS: OnceLock<Arc<TableStore>> = OnceLock::new();
+        PROCESS.get_or_init(|| Arc::new(TableStore::new()))
+    }
+
+    /// Install a byte budget (0 = unlimited) and evict down to it.
+    pub fn set_budget_bytes(&self, budget_bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.budget_bytes = budget_bytes;
+        g.evict_to_budget();
+    }
+
+    /// Re-run budget eviction against current resident bytes. Derived
+    /// views (channels-last mirrors) materialize *after* an entry is
+    /// inserted, so engines that build one call this to keep the budget
+    /// honest between inserts.
+    pub fn rebalance(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.note_peak();
+        g.evict_to_budget();
+    }
+
+    /// Non-counting peek — used by the planner's post-dedup cost model,
+    /// which must not skew the hit/miss counters while scoring.
+    pub fn contains(&self, key: TableKey) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&key.0)
+    }
+
+    /// Counting lookup without a builder.
+    pub fn get(&self, key: TableKey) -> Option<TableHandle> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.entries.get_mut(&key.0) {
+            Some(slot) => {
+                slot.last_used = tick;
+                let h = slot.handle.clone();
+                g.hits += 1;
+                Some(h)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Borrow the entry for `key`, building it on miss. Builds run under
+    /// the store lock: single-flight, so concurrent workers asking for the
+    /// same key perform exactly one build. The deliberate cost is that
+    /// builds for *different* keys also serialize — acceptable while
+    /// warm-up is a handful of layers; batch cold-starts should use
+    /// [`TableStore::prebuild`], which constructs artifacts outside the
+    /// lock on parallel workers. After an eviction the next call
+    /// transparently rebuilds (rebuild-on-miss).
+    pub fn get_or_build(
+        &self,
+        key: TableKey,
+        build: impl FnOnce() -> TableArtifact,
+    ) -> TableHandle {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(slot) = g.entries.get_mut(&key.0) {
+            slot.last_used = tick;
+            let h = slot.handle.clone();
+            g.hits += 1;
+            return h;
+        }
+        g.misses += 1;
+        g.builds += 1;
+        let handle = TableHandle(Arc::new(StoreEntry {
+            key,
+            artifact: build(),
+            cl: OnceLock::new(),
+        }));
+        g.entries.insert(
+            key.0,
+            Slot {
+                handle: handle.clone(),
+                last_used: tick,
+            },
+        );
+        g.note_peak();
+        g.evict_to_budget();
+        handle
+    }
+
+    fn insert_counted(&self, key: TableKey, artifact: TableArtifact, as_load: bool) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if g.entries.contains_key(&key.0) {
+            return false;
+        }
+        let handle = TableHandle(Arc::new(StoreEntry {
+            key,
+            artifact,
+            cl: OnceLock::new(),
+        }));
+        if as_load {
+            g.loads += 1;
+        } else {
+            g.builds += 1;
+        }
+        g.entries.insert(
+            key.0,
+            Slot {
+                handle,
+                last_used: tick,
+            },
+        );
+        g.note_peak();
+        g.evict_to_budget();
+        true
+    }
+
+    /// Build many keys in parallel on scoped threads. Artifacts are
+    /// constructed outside the store lock, then inserted; keys already
+    /// present (and in-list duplicates) are skipped. Returns the number
+    /// actually built.
+    pub fn prebuild(&self, requests: Vec<PrebuildRequest>, threads: usize) -> usize {
+        use super::parallel::{chunks, effective_threads};
+        let todo: Vec<PrebuildRequest> = {
+            let g = self.inner.lock().unwrap();
+            let mut seen = std::collections::HashSet::new();
+            requests
+                .into_iter()
+                .filter(|r| !g.entries.contains_key(&r.key.0) && seen.insert(r.key.0))
+                .collect()
+        };
+        if todo.is_empty() {
+            return 0;
+        }
+        let t = effective_threads(threads, todo.len());
+        let built: Vec<(TableKey, TableArtifact)> = if t <= 1 {
+            todo.into_iter().map(|r| (r.key, (r.build)())).collect()
+        } else {
+            let parts = chunks(todo.len(), t);
+            let mut rest = todo;
+            let mut chunk_views: Vec<Vec<PrebuildRequest>> = Vec::with_capacity(parts.len());
+            for &(_, count) in parts.iter().rev() {
+                chunk_views.push(rest.split_off(rest.len() - count));
+            }
+            chunk_views.reverse();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = chunk_views
+                    .into_iter()
+                    .map(|chunk| {
+                        scope.spawn(move || {
+                            chunk
+                                .into_iter()
+                                .map(|r| (r.key, (r.build)()))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("prebuild worker panicked"))
+                    .collect()
+            })
+        };
+        let mut n = 0;
+        for (key, artifact) in built {
+            if self.insert_counted(key, artifact, false) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> TableStoreStats {
+        let g = self.inner.lock().unwrap();
+        TableStoreStats {
+            entries: g.entries.len() as u64,
+            bytes: g.total_bytes(),
+            peak_bytes: g.peak_bytes,
+            hits: g.hits,
+            misses: g.misses,
+            builds: g.builds,
+            loads: g.loads,
+            evictions: g.evictions,
+            budget_bytes: g.budget_bytes,
+        }
+    }
+
+    /// Drop every entry (borrowed ones stay alive through their handles)
+    /// and zero the counters.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let budget = g.budget_bytes;
+        *g = Inner {
+            entries: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            builds: 0,
+            loads: 0,
+            evictions: 0,
+            peak_bytes: 0.0,
+            budget_bytes: budget,
+        };
+    }
+}
+
+/// One parallel-prebuild work item: a key plus its builder closure.
+pub struct PrebuildRequest {
+    pub key: TableKey,
+    pub build: Box<dyn FnOnce() -> TableArtifact + Send>,
+}
+
+// ---------------------------------------------------------------------------
+// Persistence
+// ---------------------------------------------------------------------------
+
+const BIN_FILE: &str = "tables.bin";
+const MANIFEST_FILE: &str = "tables.manifest";
+const MAGIC: &[u8; 4] = b"PCLT";
+const FORMAT_VERSION: u32 = 1;
+
+/// Errors from cache persistence.
+#[derive(Debug)]
+pub enum StoreIoError {
+    Io(std::io::Error),
+    /// Truncated, checksum-mismatched or malformed cache files.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for StoreIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreIoError::Io(e) => write!(f, "table cache io error: {e}"),
+            StoreIoError::Corrupt(msg) => write!(f, "table cache corrupt: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreIoError {}
+
+impl From<std::io::Error> for StoreIoError {
+    fn from(e: std::io::Error) -> StoreIoError {
+        StoreIoError::Io(e)
+    }
+}
+
+fn corrupt<T>(msg: impl Into<String>) -> Result<T, StoreIoError> {
+    Err(StoreIoError::Corrupt(msg.into()))
+}
+
+/// Result of a [`TableStore::save`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SaveReport {
+    pub entries: u64,
+    pub payload_bytes: u64,
+    pub checksum: u64,
+    pub bin_path: PathBuf,
+}
+
+/// Metadata of a persisted cache (`pcilt tables stats`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheInfo {
+    pub entries: u64,
+    pub payload_bytes: u64,
+    pub checksum: u64,
+    /// Entry count per artifact kind name.
+    pub kinds: BTreeMap<&'static str, u64>,
+}
+
+impl TableStore {
+    /// Serialize every resident entry to `dir/tables.bin` plus a
+    /// checksummed `dir/tables.manifest`. Deterministic: entries are
+    /// written in key order, so identical stores produce identical files.
+    pub fn save(&self, dir: &Path) -> Result<SaveReport, StoreIoError> {
+        std::fs::create_dir_all(dir)?;
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        w.u32(FORMAT_VERSION);
+        let entries = {
+            let g = self.inner.lock().unwrap();
+            w.u64(g.entries.len() as u64);
+            for (key, slot) in &g.entries {
+                w.u64((*key >> 64) as u64);
+                w.u64(*key as u64);
+                let art = slot.handle.artifact();
+                w.byte(art.kind());
+                let mut body = ByteWriter::new();
+                art.write_to(&mut body);
+                w.u64(body.buf.len() as u64);
+                w.bytes(&body.buf);
+            }
+            g.entries.len() as u64
+        };
+        let checksum = fnv1a(&w.buf);
+        let bin_path = dir.join(BIN_FILE);
+        std::fs::write(&bin_path, &w.buf)?;
+        let manifest = format!(
+            "version = {FORMAT_VERSION}\nentries = {entries}\npayload_bytes = {}\n\
+             checksum = {checksum:016x}\n",
+            w.buf.len(),
+        );
+        std::fs::write(dir.join(MANIFEST_FILE), manifest)?;
+        Ok(SaveReport {
+            entries,
+            payload_bytes: w.buf.len() as u64,
+            checksum,
+            bin_path,
+        })
+    }
+
+    /// Load a persisted cache, merging entries the store does not already
+    /// hold (resident entries win). Returns the number of entries loaded.
+    /// Every load is verified against the manifest checksum first; a
+    /// corrupt cache errors without touching the store.
+    pub fn load(&self, dir: &Path) -> Result<usize, StoreIoError> {
+        let manifest = parse_manifest(dir)?;
+        let raw = std::fs::read(dir.join(BIN_FILE))?;
+        if raw.len() as u64 != manifest.payload_bytes {
+            return corrupt(format!(
+                "tables.bin is {} bytes, manifest says {}",
+                raw.len(),
+                manifest.payload_bytes
+            ));
+        }
+        if fnv1a(&raw) != manifest.checksum {
+            return corrupt("checksum mismatch between tables.bin and manifest");
+        }
+        let entries = parse_bin(&raw, manifest.entries, |_, _| true)?;
+        let mut n = 0;
+        for (key, artifact) in entries {
+            if self.insert_counted(key, artifact, true) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Inspect a persisted cache without loading it into memory maps
+    /// (the artifacts are parsed to count kinds, then dropped).
+    pub fn cache_info(dir: &Path) -> Result<CacheInfo, StoreIoError> {
+        let manifest = parse_manifest(dir)?;
+        let raw = std::fs::read(dir.join(BIN_FILE))?;
+        if fnv1a(&raw) != manifest.checksum {
+            return corrupt("checksum mismatch between tables.bin and manifest");
+        }
+        let entries = parse_bin(&raw, manifest.entries, |_, _| true)?;
+        let mut kinds: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for (_, artifact) in &entries {
+            *kinds.entry(artifact.kind_name()).or_insert(0) += 1;
+        }
+        Ok(CacheInfo {
+            entries: manifest.entries,
+            payload_bytes: manifest.payload_bytes,
+            checksum: manifest.checksum,
+            kinds,
+        })
+    }
+
+    /// Delete a persisted cache. Returns whether anything was removed.
+    pub fn purge_cache(dir: &Path) -> Result<bool, StoreIoError> {
+        let mut removed = false;
+        for f in [BIN_FILE, MANIFEST_FILE] {
+            let p = dir.join(f);
+            if p.exists() {
+                std::fs::remove_file(&p)?;
+                removed = true;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+struct ManifestInfo {
+    entries: u64,
+    payload_bytes: u64,
+    checksum: u64,
+}
+
+fn parse_manifest(dir: &Path) -> Result<ManifestInfo, StoreIoError> {
+    let text = std::fs::read_to_string(dir.join(MANIFEST_FILE))?;
+    let mut version = None;
+    let mut entries = None;
+    let mut payload_bytes = None;
+    let mut checksum = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return corrupt(format!("bad manifest line '{line}'"));
+        };
+        let (k, v) = (k.trim(), v.trim());
+        match k {
+            "version" => version = v.parse::<u32>().ok(),
+            "entries" => entries = v.parse::<u64>().ok(),
+            "payload_bytes" => payload_bytes = v.parse::<u64>().ok(),
+            "checksum" => checksum = u64::from_str_radix(v, 16).ok(),
+            other => return corrupt(format!("unknown manifest key '{other}'")),
+        }
+    }
+    match (version, entries, payload_bytes, checksum) {
+        (Some(v), Some(e), Some(p), Some(c)) => {
+            if v != FORMAT_VERSION {
+                return corrupt(format!("unsupported cache version {v}"));
+            }
+            Ok(ManifestInfo {
+                entries: e,
+                payload_bytes: p,
+                checksum: c,
+            })
+        }
+        _ => corrupt("manifest missing version/entries/payload_bytes/checksum"),
+    }
+}
+
+fn parse_bin(
+    raw: &[u8],
+    expect_entries: u64,
+    keep: impl Fn(TableKey, u8) -> bool,
+) -> Result<Vec<(TableKey, TableArtifact)>, StoreIoError> {
+    let mut r = ByteReader::new(raw);
+    let magic = r.take_bytes(4).map_err(StoreIoError::Corrupt)?;
+    if magic != MAGIC {
+        return corrupt("bad magic in tables.bin");
+    }
+    let version = r.take_u32().map_err(StoreIoError::Corrupt)?;
+    if version != FORMAT_VERSION {
+        return corrupt(format!("unsupported tables.bin version {version}"));
+    }
+    let count = r.take_u64().map_err(StoreIoError::Corrupt)?;
+    if count != expect_entries {
+        return corrupt(format!(
+            "tables.bin holds {count} entries, manifest says {expect_entries}"
+        ));
+    }
+    let mut out = Vec::with_capacity(count.min(4096) as usize);
+    for _ in 0..count {
+        let hi = r.take_u64().map_err(StoreIoError::Corrupt)?;
+        let lo = r.take_u64().map_err(StoreIoError::Corrupt)?;
+        let key = TableKey(((hi as u128) << 64) | lo as u128);
+        let kind = r.take_byte().map_err(StoreIoError::Corrupt)?;
+        let len = r.take_u64().map_err(StoreIoError::Corrupt)? as usize;
+        let body = r.take_bytes(len).map_err(StoreIoError::Corrupt)?;
+        let mut br = ByteReader::new(body);
+        let artifact = TableArtifact::read_from(kind, &mut br).map_err(StoreIoError::Corrupt)?;
+        if br.remaining() != 0 {
+            return corrupt(format!("{} trailing bytes in entry body", br.remaining()));
+        }
+        if keep(key, kind) {
+            out.push((key, artifact));
+        }
+    }
+    if r.remaining() != 0 {
+        return corrupt(format!("{} trailing bytes in tables.bin", r.remaining()));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level serialization helpers (shared with the table modules)
+// ---------------------------------------------------------------------------
+
+/// Little-endian byte sink used by every table artifact's `write_to`.
+pub(crate) struct ByteWriter {
+    pub(crate) buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub(crate) fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub(crate) fn byte(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub(crate) fn bytes(&mut self, xs: &[u8]) {
+        self.buf.extend_from_slice(xs);
+    }
+
+    pub(crate) fn u32(&mut self, x: u32) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    pub(crate) fn i32_slice(&mut self, xs: &[i32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.bytes(&x.to_le_bytes());
+        }
+    }
+
+    pub(crate) fn u32_slice(&mut self, xs: &[u32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.bytes(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader; every `take_*` fails (rather than
+/// panicking or over-allocating) on truncated input.
+pub(crate) struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn take_bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!("truncated: wanted {n} bytes, have {}", self.remaining()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn take_byte(&mut self) -> Result<u8, String> {
+        Ok(self.take_bytes(1)?[0])
+    }
+
+    pub(crate) fn take_u32(&mut self) -> Result<u32, String> {
+        let b = self.take_bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn take_u64(&mut self) -> Result<u64, String> {
+        let b = self.take_bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub(crate) fn take_i32_slice(&mut self) -> Result<Vec<i32>, String> {
+        let n = self.take_u64()? as usize;
+        let len = n.checked_mul(4).ok_or_else(|| "i32 slice length overflow".to_string())?;
+        let raw = self.take_bytes(len)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub(crate) fn take_u32_slice(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.take_u64()? as usize;
+        let len = n.checked_mul(4).ok_or_else(|| "u32 slice length overflow".to_string())?;
+        let raw = self.take_bytes(len)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape4;
+    use crate::util::prng::Rng;
+
+    fn weights(seed: u64) -> Tensor4<i8> {
+        let mut rng = Rng::new(seed);
+        Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 8, &mut rng)
+    }
+
+    fn dense_artifact(w: &Tensor4<i8>, bits: u32) -> TableArtifact {
+        TableArtifact::Dense(LayerTables::build(w, bits, &ConvFunc::Mul))
+    }
+
+    #[test]
+    fn keys_are_content_addressed() {
+        let w1 = weights(1);
+        let w2 = weights(1);
+        let w3 = weights(2);
+        assert_eq!(
+            TableKey::dense(&w1, 4, &ConvFunc::Mul),
+            TableKey::dense(&w2, 4, &ConvFunc::Mul),
+            "identical content must share a key"
+        );
+        assert_ne!(
+            TableKey::dense(&w1, 4, &ConvFunc::Mul),
+            TableKey::dense(&w3, 4, &ConvFunc::Mul)
+        );
+        assert_ne!(
+            TableKey::dense(&w1, 4, &ConvFunc::Mul),
+            TableKey::dense(&w1, 2, &ConvFunc::Mul),
+            "cardinality is part of the address"
+        );
+        assert_ne!(
+            TableKey::dense(&w1, 4, &ConvFunc::Mul),
+            TableKey::shared(&w1, 4, &ConvFunc::Mul),
+            "kind is part of the address"
+        );
+        assert_ne!(
+            TableKey::segment(&w1, 2, 2, &ConvFunc::Mul),
+            TableKey::segment(&w1, 2, 4, &ConvFunc::Mul),
+            "seg_n is part of the address"
+        );
+        assert_ne!(
+            TableKey::dense(&w1, 4, &ConvFunc::Mul),
+            TableKey::dense(&w1, 4, &ConvFunc::SatMul { max: 10 }),
+            "conv-fn is part of the address"
+        );
+    }
+
+    #[test]
+    fn dedup_counts_hits_and_builds_once() {
+        let store = TableStore::new();
+        let w = weights(3);
+        let key = TableKey::dense(&w, 4, &ConvFunc::Mul);
+        let h1 = store.get_or_build(key, || dense_artifact(&w, 4));
+        let h2 = store.get_or_build(key, || panic!("second request must not rebuild"));
+        assert_eq!(h1.dense(), h2.dense());
+        let s = store.stats();
+        assert_eq!((s.builds, s.hits, s.misses, s.entries), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn channels_last_mirror_is_shared() {
+        let store = TableStore::new();
+        let w = weights(4);
+        let key = TableKey::dense(&w, 2, &ConvFunc::Mul);
+        let h1 = store.get_or_build(key, || dense_artifact(&w, 2));
+        let h2 = store.get_or_build(key, || unreachable!());
+        let cl1 = h1.channels_last();
+        let cl2 = h2.channels_last();
+        assert!(Arc::ptr_eq(&cl1, &cl2), "mirror must be built once and shared");
+        // and the mirror's bytes are accounted
+        assert!(h1.bytes() > h1.artifact().bytes());
+    }
+
+    #[test]
+    fn eviction_respects_borrows_and_lru() {
+        let store = TableStore::new();
+        let wa = weights(5);
+        let wb = weights(6);
+        let wc = weights(7);
+        let ka = TableKey::dense(&wa, 4, &ConvFunc::Mul);
+        let kb = TableKey::dense(&wb, 4, &ConvFunc::Mul);
+        let kc = TableKey::dense(&wc, 4, &ConvFunc::Mul);
+        let ha = store.get_or_build(ka, || dense_artifact(&wa, 4));
+        let hb = store.get_or_build(kb, || dense_artifact(&wb, 4));
+        let one_entry = ha.bytes() as u64;
+        drop(hb);
+        // Budget for ~1 entry: inserting C must evict B (LRU, unborrowed),
+        // not A (borrowed via `ha`).
+        store.set_budget_bytes(one_entry + 16);
+        let _hc = store.get_or_build(kc, || dense_artifact(&wc, 4));
+        assert!(!store.contains(kb), "unborrowed LRU entry must be evicted");
+        assert!(store.contains(ka), "borrowed entry must survive eviction");
+        assert!(store.stats().evictions >= 1);
+        // Rebuild-on-miss: asking for B again builds it anew.
+        let hb2 = store.get_or_build(kb, || dense_artifact(&wb, 4));
+        assert_eq!(hb2.dense(), &LayerTables::build(&wb, 4, &ConvFunc::Mul));
+    }
+
+    #[test]
+    fn roundtrip_every_artifact_kind() {
+        let mut rng = Rng::new(8);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let f = ConvFunc::Mul;
+        let artifacts = vec![
+            TableArtifact::Dense(LayerTables::build(&w, 4, &f)),
+            TableArtifact::Shared(SharedTables::build(&w, 4, &f)),
+            TableArtifact::Value(ValueIndirection::build(&w, 3, &f)),
+            TableArtifact::Segment(SegmentTables::build(&w, 2, 4, &f)),
+            TableArtifact::RowSegment(RowSegmentTables::build(&w, 2, 3, &f)),
+            TableArtifact::Mixed(MixedTables::build(
+                &w,
+                ChannelWidths { bits: vec![1, 4] },
+                4,
+                &f,
+            )),
+        ];
+        for a in artifacts {
+            let mut wtr = ByteWriter::new();
+            a.write_to(&mut wtr);
+            let mut rdr = ByteReader::new(&wtr.buf);
+            let back = TableArtifact::read_from(a.kind(), &mut rdr)
+                .unwrap_or_else(|e| panic!("{}: {e}", a.kind_name()));
+            assert_eq!(rdr.remaining(), 0, "{} left trailing bytes", a.kind_name());
+            assert_eq!(back, a, "{} roundtrip", a.kind_name());
+        }
+    }
+
+    #[test]
+    fn save_load_is_bit_identical_and_counts_loads() {
+        let dir = std::env::temp_dir().join("pcilt_store_roundtrip_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = TableStore::new();
+        let w = weights(9);
+        let kd = TableKey::dense(&w, 4, &ConvFunc::Mul);
+        let ks = TableKey::shared(&w, 4, &ConvFunc::Mul);
+        store.get_or_build(kd, || dense_artifact(&w, 4));
+        store.get_or_build(ks, || {
+            TableArtifact::Shared(SharedTables::build(&w, 4, &ConvFunc::Mul))
+        });
+        let report = store.save(&dir).unwrap();
+        assert_eq!(report.entries, 2);
+
+        let fresh = TableStore::new();
+        assert_eq!(fresh.load(&dir).unwrap(), 2);
+        let s = fresh.stats();
+        assert_eq!((s.loads, s.builds, s.entries), (2, 0, 2));
+        // Served from the cache: the builder must never run.
+        let h = fresh.get_or_build(kd, || panic!("loaded entry must not rebuild"));
+        assert_eq!(h.dense(), &LayerTables::build(&w, 4, &ConvFunc::Mul));
+        // cache_info agrees with the manifest
+        let info = TableStore::cache_info(&dir).unwrap();
+        assert_eq!(info.entries, 2);
+        assert_eq!(info.checksum, report.checksum);
+        assert_eq!(info.kinds.get("dense"), Some(&1));
+        assert_eq!(info.kinds.get("shared"), Some(&1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_cache_is_rejected() {
+        let dir = std::env::temp_dir().join("pcilt_store_corrupt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = TableStore::new();
+        let w = weights(10);
+        store.get_or_build(TableKey::dense(&w, 2, &ConvFunc::Mul), || dense_artifact(&w, 2));
+        store.save(&dir).unwrap();
+        // Flip a payload byte: checksum must catch it.
+        let bin = dir.join(BIN_FILE);
+        let mut raw = std::fs::read(&bin).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xFF;
+        std::fs::write(&bin, &raw).unwrap();
+        let fresh = TableStore::new();
+        assert!(matches!(fresh.load(&dir), Err(StoreIoError::Corrupt(_))));
+        assert_eq!(fresh.stats().entries, 0, "corrupt cache must load nothing");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn purge_removes_cache_files() {
+        let dir = std::env::temp_dir().join("pcilt_store_purge_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = TableStore::new();
+        let w = weights(11);
+        store.get_or_build(TableKey::dense(&w, 2, &ConvFunc::Mul), || dense_artifact(&w, 2));
+        store.save(&dir).unwrap();
+        assert!(TableStore::purge_cache(&dir).unwrap());
+        assert!(!dir.join(BIN_FILE).exists());
+        assert!(!TableStore::purge_cache(&dir).unwrap(), "second purge removes nothing");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prebuild_builds_each_key_once() {
+        let store = TableStore::new();
+        let w = weights(12);
+        let key4 = TableKey::dense(&w, 4, &ConvFunc::Mul);
+        let key2 = TableKey::dense(&w, 2, &ConvFunc::Mul);
+        store.get_or_build(key2, || dense_artifact(&w, 2));
+        let w4 = w.clone();
+        let w2 = w.clone();
+        let reqs = vec![
+            PrebuildRequest {
+                key: key4,
+                build: Box::new(move || dense_artifact(&w4, 4)),
+            },
+            PrebuildRequest {
+                key: key2,
+                build: Box::new(move || panic!("present key must be skipped: {:?}", w2.shape())),
+            },
+        ];
+        assert_eq!(store.prebuild(reqs, 2), 1);
+        assert!(store.contains(key4));
+        assert_eq!(store.stats().entries, 2);
+    }
+
+    #[test]
+    fn stats_report_renders() {
+        let store = TableStore::with_budget(1 << 20);
+        let w = weights(13);
+        store.get_or_build(TableKey::dense(&w, 2, &ConvFunc::Mul), || dense_artifact(&w, 2));
+        let r = store.stats().report();
+        assert!(r.contains("1 entries"));
+        assert!(r.contains("1 builds"));
+    }
+}

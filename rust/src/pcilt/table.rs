@@ -50,7 +50,7 @@ impl Pcilt {
 }
 
 /// All PCILTs of a convolution layer in a dense, cache-friendly layout.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerTables {
     /// `values[((oc * positions) + p) * card + a]`.
     values: Vec<i32>,
@@ -142,6 +142,65 @@ impl LayerTables {
     #[inline(always)]
     pub fn flat_index(&self, oc: usize, position: usize, a: usize) -> usize {
         (oc * self.positions + position) * self.card + a
+    }
+
+    /// Channels-last `[p][a][oc]` mirror: for a fixed position and
+    /// activation code, the values for all output channels are contiguous
+    /// (the vectorizable layout `PciltEngine` runs its inner loop over).
+    /// Deterministic derived data — the store builds it once per entry and
+    /// shares it across every borrowing engine.
+    pub fn channels_last(&self) -> Vec<i32> {
+        let (oc_n, positions, card) = (self.out_ch, self.positions, self.card);
+        let mut cl = vec![0i32; oc_n * positions * card];
+        for oc in 0..oc_n {
+            for p in 0..positions {
+                let t = self.table(oc, p);
+                for (a, &v) in t.iter().enumerate() {
+                    cl[(p * card + a) * oc_n + oc] = v;
+                }
+            }
+        }
+        cl
+    }
+
+    /// Serialize for the table cache (`pcilt::store`); exact i32 entries,
+    /// so a loaded table is bit-identical to a fresh build.
+    pub(crate) fn write_to(&self, w: &mut super::store::ByteWriter) {
+        w.u32(self.act_bits);
+        w.u64(self.out_ch as u64);
+        w.u64(self.positions as u64);
+        w.u64(self.card as u64);
+        w.u64(self.build_evals);
+        w.i32_slice(&self.values);
+    }
+
+    /// Inverse of [`LayerTables::write_to`], validating every invariant the
+    /// builders establish.
+    pub(crate) fn read_from(r: &mut super::store::ByteReader<'_>) -> Result<LayerTables, String> {
+        let act_bits = r.take_u32()?;
+        let out_ch = r.take_u64()? as usize;
+        let positions = r.take_u64()? as usize;
+        let card = r.take_u64()? as usize;
+        let build_evals = r.take_u64()?;
+        let values = r.take_i32_slice()?;
+        if !(1..=12).contains(&act_bits) || card != 1usize << act_bits {
+            return Err(format!("dense tables: bad act_bits {act_bits} / card {card}"));
+        }
+        let expect = out_ch.checked_mul(positions).and_then(|v| v.checked_mul(card));
+        if expect != Some(values.len()) {
+            return Err(format!(
+                "dense tables: {} values != {out_ch}x{positions}x{card}",
+                values.len()
+            ));
+        }
+        Ok(LayerTables {
+            values,
+            out_ch,
+            positions,
+            card,
+            act_bits,
+            build_evals,
+        })
     }
 }
 

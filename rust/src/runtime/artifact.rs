@@ -158,6 +158,13 @@ impl ArtifactBundle {
         })
     }
 
+    /// Default location of the persisted table cache (`tables.bin` +
+    /// `tables.manifest`, see `pcilt::store`) for this bundle: the tables
+    /// are derived from the bundle's weights, so they live alongside it.
+    pub fn table_cache_dir(&self) -> PathBuf {
+        self.dir.join("table_cache")
+    }
+
     /// Path of the HLO for (engine, batch), if exported.
     pub fn hlo_path(&self, engine: &str, batch: usize) -> Option<PathBuf> {
         self.hlo_files

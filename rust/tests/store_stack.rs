@@ -1,0 +1,283 @@
+//! TableStore integration tests: store-borrowed engines are bit-identical
+//! to owning engines, persistence roundtrips exactly, eviction rebuilds
+//! correctly under a tiny budget, and a model loaded twice (or a "server
+//! restart" against a persisted cache dir) performs zero redundant table
+//! builds — the PR's acceptance criteria, verified by store counters.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcilt::model::{random_params, EngineChoice, QuantCnn};
+use pcilt::pcilt::dm::conv_reference;
+use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
+use pcilt::pcilt::planner::{EngineId, EnginePlanner, LayerSpec, PlannerPolicy};
+use pcilt::pcilt::{
+    ChannelWidths, ConvFunc, MixedEngine, PciltEngine, RowSegmentEngine, SegmentEngine,
+    SharedEngine, TableKey, TableStore,
+};
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::propcheck::forall;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pcilt_store_stack_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Property: every store-borrowed table engine computes the same
+/// convolution as its table-owning twin, bit for bit, across random
+/// shapes and cardinalities — and the second borrow never rebuilds.
+#[test]
+fn store_borrowed_engines_match_owned_bit_for_bit() {
+    forall("store == owned for every engine", 15, |g| {
+        let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+        let bits = *rng.choose(&[1u32, 2, 4]);
+        let (kh, kw) = *rng.choose(&[(3usize, 3usize), (5, 5)]);
+        let ic = rng.range_i64(1, 2) as usize;
+        let oc = rng.range_i64(1, 3) as usize;
+        let h = kh + rng.range_i64(0, 4) as usize;
+        let wd = kw + rng.range_i64(0, 4) as usize;
+        let x = Tensor4::random_activations(Shape4::new(2, h, wd, ic), bits, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(kh, kw);
+        let expect = conv_reference(&x, &w, geom);
+        let f = ConvFunc::Mul;
+
+        let store = TableStore::new();
+        let engines: Vec<(&str, Box<dyn ConvEngine>, Box<dyn ConvEngine>)> = vec![
+            (
+                "pcilt",
+                Box::new(PciltEngine::new(&w, bits, geom)),
+                Box::new(PciltEngine::from_store(&store, &w, bits, geom, &f)),
+            ),
+            (
+                "shared",
+                Box::new(SharedEngine::new(&w, bits, geom)),
+                Box::new(SharedEngine::from_store(&store, &w, bits, geom, &f)),
+            ),
+            (
+                "segment",
+                Box::new(SegmentEngine::new(&w, bits, 2, geom)),
+                Box::new(SegmentEngine::from_store(&store, &w, bits, 2, geom, &f)),
+            ),
+            (
+                "segment-row",
+                Box::new(RowSegmentEngine::new(&w, bits, 2, geom)),
+                Box::new(RowSegmentEngine::from_store(&store, &w, bits, 2, geom, &f)),
+            ),
+            (
+                "mixed",
+                Box::new(MixedEngine::new(&w, ChannelWidths::uniform(ic, bits), geom)),
+                Box::new(MixedEngine::from_store(
+                    &store,
+                    &w,
+                    ChannelWidths::uniform(ic, bits),
+                    bits,
+                    geom,
+                    &f,
+                )),
+            ),
+        ];
+        let builds_after_first = store.stats().builds;
+        for (name, owned, borrowed) in &engines {
+            assert_eq!(owned.conv(&x), expect, "{name} owned != reference");
+            assert_eq!(borrowed.conv(&x), expect, "{name} borrowed != reference");
+        }
+        // Borrowing the same content again must be all hits, no builds.
+        let again = PciltEngine::from_store(&store, &w, bits, geom, &f);
+        assert_eq!(again.conv(&x), expect);
+        assert_eq!(store.stats().builds, builds_after_first, "rebuild on second borrow");
+    });
+}
+
+/// Persistence roundtrip: save -> load -> identical entries (checksum
+/// verified), and every engine built from the loaded store is
+/// bit-identical to one built fresh.
+#[test]
+fn persistence_roundtrip_is_bit_identical() {
+    let dir = temp_dir("roundtrip");
+    let mut rng = Rng::new(101);
+    let x = Tensor4::random_activations(Shape4::new(2, 7, 7, 2), 2, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+
+    let store = TableStore::new();
+    let fresh_pcilt = PciltEngine::from_store(&store, &w, 2, geom, &f);
+    let fresh_shared = SharedEngine::from_store(&store, &w, 2, geom, &f);
+    let fresh_segment = SegmentEngine::from_store(&store, &w, 2, 4, geom, &f);
+    let report = store.save(&dir).unwrap();
+    assert_eq!(report.entries, 3);
+
+    // "Server restart": a brand-new store warms from the cache dir.
+    let restarted = TableStore::new();
+    assert_eq!(restarted.load(&dir).unwrap(), 3);
+    let loaded_pcilt = PciltEngine::from_store(&restarted, &w, 2, geom, &f);
+    let loaded_shared = SharedEngine::from_store(&restarted, &w, 2, geom, &f);
+    let loaded_segment = SegmentEngine::from_store(&restarted, &w, 2, 4, geom, &f);
+    let stats = restarted.stats();
+    assert_eq!(stats.builds, 0, "warm boot must perform zero table builds");
+    assert_eq!(stats.loads, 3);
+    assert_eq!(stats.hits, 3);
+
+    assert_eq!(loaded_pcilt.conv(&x), fresh_pcilt.conv(&x));
+    assert_eq!(loaded_shared.conv(&x), fresh_shared.conv(&x));
+    assert_eq!(loaded_segment.conv(&x), fresh_segment.conv(&x));
+
+    // Saving the restarted store reproduces the byte-identical cache.
+    let dir2 = temp_dir("roundtrip2");
+    let report2 = restarted.save(&dir2).unwrap();
+    assert_eq!(report2.checksum, report.checksum, "cache must be deterministic");
+    assert_eq!(report2.payload_bytes, report.payload_bytes);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// Eviction under a tiny budget: the store sheds LRU entries, stays
+/// correct, and transparently rebuilds on the next request.
+#[test]
+fn eviction_then_rebuild_is_correct() {
+    let mut rng = Rng::new(103);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 1), 4, &mut rng);
+    let ws: Vec<Tensor4<i8>> = (0..4)
+        .map(|_| Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng))
+        .collect();
+    let expects: Vec<_> = ws.iter().map(|w| conv_reference(&x, w, geom)).collect();
+
+    // Budget fits roughly one layer's tables: 2 oc * 9 pos * 16 card * 4 B
+    // (plus mirror) ~= 2.3 KiB; give it 4 KiB.
+    let store = TableStore::with_budget(4 * 1024);
+    for round in 0..3 {
+        for (w, expect) in ws.iter().zip(&expects) {
+            // Engine dropped at the end of each iteration, so its entry is
+            // evictable when the next build pushes past the budget.
+            let e = PciltEngine::from_store(&store, w, 4, geom, &f);
+            assert_eq!(e.conv(&x), *expect, "round {round}");
+        }
+    }
+    let stats = store.stats();
+    assert!(stats.evictions > 0, "tiny budget must evict: {stats:?}");
+    assert!(
+        stats.builds > 4,
+        "evicted entries must rebuild on miss: {stats:?}"
+    );
+    // Derived views (channels-last mirrors) grow entries after insert;
+    // re-applying the budget evicts back under it now that no engine
+    // borrows anything.
+    store.set_budget_bytes(4 * 1024);
+    let stats = store.stats();
+    assert!(
+        stats.bytes <= 4.0 * 1024.0,
+        "resident bytes {} over budget with nothing borrowed",
+        stats.bytes
+    );
+}
+
+/// The headline criterion: a model loaded twice performs zero redundant
+/// table builds, and a "restarted server" (fresh store + persisted cache
+/// dir) performs zero builds at all.
+#[test]
+fn model_reload_and_restart_build_nothing() {
+    let dir = temp_dir("model_restart");
+    let mut rng = Rng::new(107);
+    let params = random_params(4, &mut rng);
+    let codes = Tensor4::random_activations(Shape4::new(4, 16, 16, 1), 4, &mut rng);
+
+    // First boot: two conv layers -> two builds.
+    let store = Arc::new(TableStore::new());
+    let m1 = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+    let reference = m1.forward(&codes);
+    assert_eq!(store.stats().builds, 2);
+    // Same model loaded again in-process: zero new builds.
+    let m2 = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+    assert_eq!(store.stats().builds, 2, "reload must not rebuild");
+    assert_eq!(m2.forward(&codes), reference);
+    store.save(&dir).unwrap();
+
+    // Restart: new process (fresh store), warmed from the cache dir.
+    let restarted = Arc::new(TableStore::new());
+    restarted.load(&dir).unwrap();
+    let m3 = QuantCnn::with_store(params, EngineChoice::Pcilt, &restarted);
+    let s = restarted.stats();
+    assert_eq!(s.builds, 0, "restarted server must perform zero table builds");
+    assert_eq!(s.hits, 2);
+    assert_eq!(m3.forward(&codes), reference, "cache-served inference must be bit-identical");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: the planner charges post-dedup (marginal) bytes/builds from
+/// store stats, so a repeated-weight network is no longer mis-scored away
+/// from PCILT once its tables are resident.
+#[test]
+fn planner_charges_marginal_cost_for_resident_tables() {
+    let mut rng = Rng::new(109);
+    let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 1), 8, &mut rng);
+    let spec = LayerSpec {
+        geom: ConvGeometry::unit_stride(3, 3),
+        in_ch: 1,
+        out_ch: 4,
+        act_bits: 4,
+        weight_bits: 8,
+        input: Shape4::new(1, 4, 4, 1),
+    };
+    let one_shot = PlannerPolicy {
+        amortize_invocations: 1.0,
+        ..PlannerPolicy::default()
+    };
+    let store = Arc::new(TableStore::new());
+    let planner = EnginePlanner::with_store(one_shot, store.clone());
+    // Cold: the one-shot build cost keeps DM ahead.
+    assert_eq!(planner.plan_layer(&spec, Some(&w)).chosen, EngineId::Dm);
+    // A first instance of the layer builds through the store...
+    let first = planner.choose(&w, &spec);
+    assert_eq!(first.name(), "dm", "cold choice builds the planned DM engine");
+    EngineId::Pcilt.build_with_store(&w, &spec, &store).unwrap();
+    // ...after which the identical layer prices PCILT at marginal cost.
+    let warm = planner.plan_layer(&spec, Some(&w));
+    assert_eq!(warm.chosen, EngineId::Pcilt);
+    let c = warm.candidate(EngineId::Pcilt).unwrap();
+    assert!(c.cached);
+    assert_eq!(c.build_evals, 0, "resident tables cost no build evals");
+}
+
+/// Corrupt cache files are rejected wholesale (checksum) and never load
+/// partial state.
+#[test]
+fn corrupt_cache_never_loads() {
+    let dir = temp_dir("corrupt");
+    let mut rng = Rng::new(113);
+    let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+    let store = TableStore::new();
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let _e = PciltEngine::from_store(&store, &w, 2, geom, &ConvFunc::Mul);
+    store.save(&dir).unwrap();
+    let bin = dir.join("tables.bin");
+    let mut raw = std::fs::read(&bin).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x5A;
+    std::fs::write(&bin, &raw).unwrap();
+    let fresh = TableStore::new();
+    assert!(fresh.load(&dir).is_err());
+    assert_eq!(fresh.stats().entries, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Keys are pure content addresses: a clone of the weights hits, a one
+/// weight-value flip misses.
+#[test]
+fn content_addressing_across_tensors() {
+    let mut rng = Rng::new(127);
+    let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 8, &mut rng);
+    let same = w.clone();
+    let mut flipped = w.clone();
+    let v = flipped.get(1, 2, 2, 1);
+    flipped.set(1, 2, 2, 1, v.wrapping_add(1));
+    let f = ConvFunc::Mul;
+    assert_eq!(TableKey::dense(&w, 4, &f), TableKey::dense(&same, 4, &f));
+    assert_ne!(TableKey::dense(&w, 4, &f), TableKey::dense(&flipped, 4, &f));
+}
