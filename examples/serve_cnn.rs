@@ -42,10 +42,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- correctness spot-check before load: server answers == native ---
     let server = Arc::new(Server::start(
-        BackendSpec::Hlo {
-            bundle: bundle.clone(),
-            engine: "pcilt".to_string(),
-        },
+        BackendSpec::hlo(bundle.clone(), "pcilt"),
         &opts,
     )?);
     server.warmup(8, img)?; // absorb PJRT compile in the workers
@@ -90,10 +87,7 @@ fn main() -> anyhow::Result<()> {
     // --- same workload on the rust-native PCILT engine pool --------------
     println!("\n=== native PCILT pool: Poisson {rate} rps, {total} requests ===");
     let server2 = Arc::new(Server::start(
-        BackendSpec::Native {
-            params: bundle.params.clone(),
-            engine: NativeEngineKind::Pcilt,
-        },
+        BackendSpec::native(bundle.params.clone(), NativeEngineKind::Pcilt),
         &opts,
     )?);
     server2.warmup(8, img)?;

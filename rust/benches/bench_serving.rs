@@ -1,19 +1,30 @@
 //! E11 — serving benchmarks: the coordinator under Poisson and closed-loop
 //! load, across engines (native PCILT / native DM / PJRT artifact), plus a
-//! batching-policy sweep. Requires `make artifacts` for the `hlo` rows;
-//! native rows run regardless.
+//! batching-policy sweep and the multi-model registry scenario (2 models
+//! sharing a backbone vs 2 independent models — table bytes + dedup hits).
+//! Requires `make artifacts` for the `hlo` rows; native rows run
+//! regardless. With `PCILT_BENCH_JSON` set, the multi-model results land
+//! in that file (`BENCH_serving.json` in CI).
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use pcilt::config::{EngineKind, ModelConfig};
 use pcilt::coordinator::{
-    run_closed_loop, run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts,
+    run_closed_loop, run_poisson, run_poisson_models, BackendSpec, ModelRegistry,
+    NativeEngineKind, Server, ServerOpts,
 };
 use pcilt::model::random_params;
+use pcilt::pcilt::store::{TableStore, TableStoreStats};
 use pcilt::runtime::ArtifactBundle;
 use pcilt::util::prng::Rng;
 use pcilt::util::stats::fmt_ns;
+
+/// `PCILT_BENCH_QUICK=1` shrinks request counts (CI smoke runs).
+fn quick() -> bool {
+    std::env::var("PCILT_BENCH_QUICK").is_ok()
+}
 
 fn specs() -> Vec<(String, BackendSpec)> {
     let mut out = Vec::new();
@@ -22,32 +33,17 @@ fn specs() -> Vec<(String, BackendSpec)> {
         Ok(bundle) => {
             out.push((
                 "native-pcilt".into(),
-                BackendSpec::Native {
-                    params: bundle.params.clone(),
-                    engine: NativeEngineKind::Pcilt,
-                },
+                BackendSpec::native(bundle.params.clone(), NativeEngineKind::Pcilt),
             ));
             out.push((
                 "native-dm".into(),
-                BackendSpec::Native {
-                    params: bundle.params.clone(),
-                    engine: NativeEngineKind::Dm,
-                },
+                BackendSpec::native(bundle.params.clone(), NativeEngineKind::Dm),
             ));
             out.push((
                 "native-segment2".into(),
-                BackendSpec::Native {
-                    params: bundle.params.clone(),
-                    engine: NativeEngineKind::Segment { seg_n: 2 },
-                },
+                BackendSpec::native(bundle.params.clone(), NativeEngineKind::Segment { seg_n: 2 }),
             ));
-            out.push((
-                "hlo-pcilt".into(),
-                BackendSpec::Hlo {
-                    bundle,
-                    engine: "pcilt".into(),
-                },
-            ));
+            out.push(("hlo-pcilt".into(), BackendSpec::hlo(bundle, "pcilt")));
         }
         Err(e) => {
             eprintln!("artifacts unavailable ({e}); benching random-weight native engines");
@@ -55,24 +51,53 @@ fn specs() -> Vec<(String, BackendSpec)> {
             let params = random_params(4, &mut rng);
             out.push((
                 "native-pcilt".into(),
-                BackendSpec::Native {
-                    params: params.clone(),
-                    engine: NativeEngineKind::Pcilt,
-                },
+                BackendSpec::native(params.clone(), NativeEngineKind::Pcilt),
             ));
             out.push((
                 "native-dm".into(),
-                BackendSpec::Native {
-                    params,
-                    engine: NativeEngineKind::Dm,
-                },
+                BackendSpec::native(params, NativeEngineKind::Dm),
             ));
         }
     }
     out
 }
 
+fn model_cfg(name: &str, seed: u64, head_seed: Option<u64>) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        engine: EngineKind::Pcilt,
+        act_bits: 4,
+        seed,
+        head_seed,
+        artifact_dir: None,
+    }
+}
+
+/// One multi-model scenario: start a fresh registry over a private store,
+/// drive mixed Poisson traffic, return (store stats, achieved rps).
+fn run_multi_scenario(models: &[ModelConfig], requests: usize) -> (TableStoreStats, f64) {
+    let opts = ServerOpts {
+        workers: 2,
+        max_batch: 8,
+        batch_deadline: Duration::from_micros(2_000),
+        queue_capacity: 2048,
+    };
+    let store = Arc::new(TableStore::new());
+    let registry =
+        ModelRegistry::start_with_store(models, &opts, store.clone()).expect("registry start");
+    let report = run_poisson_models(&registry, 2000.0, requests, 0x51);
+    let stats = store.stats();
+    let tput = report.accepted as f64 / report.wall_s;
+    registry.shutdown();
+    (stats, tput)
+}
+
 fn main() {
+    let (poisson_reqs, closed_per_client, sweep_per_client, multi_reqs) = if quick() {
+        (300, 40, 30, 200)
+    } else {
+        (3000, 400, 300, 2000)
+    };
     let opts = ServerOpts {
         workers: 4,
         max_batch: 8,
@@ -80,7 +105,7 @@ fn main() {
         queue_capacity: 2048,
     };
 
-    println!("## E11a: open-loop Poisson (2000 rps offered, 3000 requests)");
+    println!("## E11a: open-loop Poisson (2000 rps offered, {poisson_reqs} requests)");
     println!(
         "{:<16} {:>10} {:>10} {:>10} {:>12} {:>8}",
         "engine", "p50", "p99", "tput rps", "mean batch", "shed"
@@ -88,7 +113,7 @@ fn main() {
     for (name, spec) in specs() {
         let server = Arc::new(Server::start(spec, &opts).expect("server start"));
         server.warmup(8, 16).expect("warmup");
-        let report = run_poisson(&server, 2000.0, 3000, 16, 4, 0xAB);
+        let report = run_poisson(&server, 2000.0, poisson_reqs, 16, 4, 0xAB);
         let m = server.metrics();
         println!(
             "{:<16} {:>10} {:>10} {:>10.0} {:>12.2} {:>8}",
@@ -101,7 +126,7 @@ fn main() {
         );
     }
 
-    println!("\n## E11b: closed-loop peak throughput (8 clients x 400 reqs)");
+    println!("\n## E11b: closed-loop peak throughput (8 clients x {closed_per_client} reqs)");
     println!(
         "{:<16} {:>12} {:>10} {:>10}",
         "engine", "tput rps", "p50", "p99"
@@ -109,7 +134,7 @@ fn main() {
     for (name, spec) in specs() {
         let server = Arc::new(Server::start(spec, &opts).expect("server start"));
         server.warmup(8, 16).expect("warmup");
-        let report = run_closed_loop(&server, 8, 400, 16, 4, 0xCD);
+        let report = run_closed_loop(&server, 8, closed_per_client, 16, 4, 0xCD);
         let m = server.metrics();
         println!(
             "{:<16} {:>12.0} {:>10} {:>10}",
@@ -140,7 +165,7 @@ fn main() {
             .expect("server start"),
         );
         server.warmup(8, 16).expect("warmup");
-        let report = run_closed_loop(&server, 8, 300, 16, 4, 0xEF);
+        let report = run_closed_loop(&server, 8, sweep_per_client, 16, 4, 0xEF);
         let m = server.metrics();
         println!(
             "{:<22} {:>12.0} {:>10} {:>12.2}",
@@ -149,5 +174,65 @@ fn main() {
             fmt_ns(m.p99_latency_ns),
             m.mean_batch_size
         );
+    }
+
+    // E11d: the multi-model registry. Two models with a shared backbone
+    // (same conv seed, different heads) vs two fully independent models —
+    // the shared fleet must hold roughly half the table bytes and record
+    // cross-model dedup hits.
+    println!("\n## E11d: multi-model registry ({multi_reqs} mixed requests per scenario)");
+    let shared_models = [model_cfg("base", 7, None), model_cfg("tuned", 7, Some(99))];
+    let indep_models = [model_cfg("m1", 7, None), model_cfg("m2", 8, None)];
+    let (shared, shared_tput) = run_multi_scenario(&shared_models, multi_reqs);
+    let (indep, indep_tput) = run_multi_scenario(&indep_models, multi_reqs);
+    println!(
+        "{:<26} {:>10} {:>14} {:>8} {:>12}",
+        "scenario", "entries", "table bytes", "dedups", "tput rps"
+    );
+    for (label, s, tput) in [
+        ("2 models, shared backbone", &shared, shared_tput),
+        ("2 independent models", &indep, indep_tput),
+    ] {
+        println!(
+            "{:<26} {:>10} {:>14.0} {:>8} {:>12.0}",
+            label, s.entries, s.bytes, s.cross_model_dedup, tput
+        );
+    }
+    println!(
+        "shared-backbone fleet holds {:.2}x the table bytes of the independent fleet",
+        shared.bytes / indep.bytes
+    );
+
+    if let Ok(path) = std::env::var("PCILT_BENCH_JSON") {
+        write_bench_json(&path, &shared, shared_tput, &indep, indep_tput);
+        println!("wrote {path}");
+    }
+}
+
+/// Hand-rolled JSON (no serde offline); names are plain ASCII.
+fn write_bench_json(
+    path: &str,
+    shared: &TableStoreStats,
+    shared_tput: f64,
+    indep: &TableStoreStats,
+    indep_tput: f64,
+) {
+    let scenario = |s: &TableStoreStats, tput: f64| {
+        format!(
+            "{{\"entries\": {}, \"table_bytes\": {:.0}, \"cross_model_dedup\": {}, \
+             \"builds\": {}, \"tput_rps\": {:.1}}}",
+            s.entries, s.bytes, s.cross_model_dedup, s.builds, tput
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"bench_serving/multi_model\",\n  \
+         \"shared_backbone\": {},\n  \"independent\": {},\n  \
+         \"table_bytes_ratio\": {:.3}\n}}\n",
+        scenario(shared, shared_tput),
+        scenario(indep, indep_tput),
+        shared.bytes / indep.bytes,
+    );
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("failed to write {path}: {e}");
     }
 }

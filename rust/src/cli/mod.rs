@@ -158,7 +158,11 @@ SUBCOMMANDS:
               --artifacts DIR   artifact bundle       (default artifacts)
               --config FILE     TOML config (overrides defaults;
                                 [planner] tunes auto-selection, [tables]
-                                sets the table-store budget/persistence)
+                                sets the table-store budget/persistence,
+                                a [[models]] list serves N named models
+                                from per-model pools that share one
+                                table store — identical layers across
+                                models dedup to a single table copy)
   plan      print the engine registry with predicted OpCounts/memory per
             layer and the planner's chosen engine (no artifacts needed)
               --act-bits B      sample-model activation bits (default 4)
@@ -171,7 +175,9 @@ SUBCOMMANDS:
               --artifacts DIR
   tables    table-store lifecycle (content-addressed dedup + persistence)
             actions:
-              stats     inspect a persisted cache (entries, bytes, kinds)
+              stats     inspect a persisted cache (entries, bytes, kinds);
+                        with a [[models]] config, also predict the
+                        cross-model table sharing (dedup) of the fleet
               prebuild  build the planner-chosen tables for a model and
                         persist them (parallel workers)
               purge     delete the persisted cache

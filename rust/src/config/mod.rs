@@ -158,6 +158,43 @@ impl PlannerConfig {
     }
 }
 
+/// One `[[models]]` entry: a named model the multi-model registry
+/// (`coordinator::ModelRegistry`) loads into its own pool. All pools
+/// borrow lookup tables from the single process `TableStore`, so models
+/// sharing conv weights (shared backbones, fine-tuned heads) hold one
+/// table copy between them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Routing name; requests carry it in their `model` field.
+    pub name: String,
+    /// Engine its pool serves with (`auto` = planner-selected).
+    pub engine: EngineKind,
+    /// Activation bit width for the seeded random source (ignored when
+    /// `artifact_dir` is set — the bundle's own width wins).
+    pub act_bits: u32,
+    /// Weight seed for the random source. Models sharing a seed share a
+    /// conv backbone — and therefore lookup tables.
+    pub seed: u64,
+    /// Re-randomize only the dense head from this seed: the
+    /// "fine-tuned head over a shared backbone" variant.
+    pub head_seed: Option<u64>,
+    /// Load real weights from this artifact bundle instead of the seed.
+    pub artifact_dir: Option<String>,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            name: String::new(),
+            engine: EngineKind::Auto,
+            act_bits: 4,
+            seed: 42,
+            head_seed: None,
+            artifact_dir: None,
+        }
+    }
+}
+
 /// Serving coordinator configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -181,6 +218,9 @@ pub struct ServeConfig {
     pub planner: PlannerConfig,
     /// `[tables]` section (table-store budget + persistence).
     pub tables: TablesConfig,
+    /// `[[models]]` list: when non-empty, `pcilt serve` starts the
+    /// multi-model registry instead of a single anonymous pool.
+    pub models: Vec<ModelConfig>,
 }
 
 impl Default for ServeConfig {
@@ -196,6 +236,7 @@ impl Default for ServeConfig {
             total_requests: 2_000,
             planner: PlannerConfig::default(),
             tables: TablesConfig::default(),
+            models: Vec::new(),
         }
     }
 }
@@ -343,9 +384,11 @@ impl ServeConfig {
                     })?;
                 }
                 k if k.starts_with("network.") => {} // parsed by NetworkSpec
+                k if k.starts_with("models.") => {}  // parsed by parse_models below
                 k => return invalid(format!("unknown config key '{k}'")),
             }
         }
+        cfg.models = parse_models(doc)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -360,8 +403,109 @@ impl ServeConfig {
         if self.workers == 0 || self.workers > 1024 {
             return invalid("workers must be in 1..=1024");
         }
+        let mut seen = std::collections::BTreeSet::new();
+        for m in &self.models {
+            if m.name.is_empty() {
+                return invalid("every [[models]] entry needs a non-empty name");
+            }
+            if !seen.insert(m.name.as_str()) {
+                return invalid(format!("duplicate model name '{}'", m.name));
+            }
+            if m.engine == EngineKind::Hlo && m.artifact_dir.is_none() {
+                return invalid(format!(
+                    "model '{}': engine \"hlo\" needs an artifact_dir",
+                    m.name
+                ));
+            }
+        }
         Ok(())
     }
+}
+
+/// Parse the `[[models]]` list (`models.N.*` keys after the array-of-tables
+/// expansion in [`toml::Document`]).
+fn parse_models(doc: &Document) -> Result<Vec<ModelConfig>, ConfigError> {
+    let n = doc.array_len("models");
+    // Loud failure for the single-vs-double-bracket typo: `[models]` (or a
+    // stray `[models.N]` beyond the parsed array) produces `models.*` keys
+    // that no `[[models]]` header claimed — silently ignoring them would
+    // disable multi-model serving without a word.
+    for key in doc.section_keys("models") {
+        let rest = &key["models.".len()..];
+        let idx_ok = rest
+            .split_once('.')
+            .and_then(|(idx, _)| idx.parse::<usize>().ok())
+            .is_some_and(|idx| idx < n);
+        if !idx_ok {
+            return invalid(format!(
+                "stray key '{key}': models must be declared as [[models]] entries \
+                 (double brackets), not a [models] section"
+            ));
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let prefix = format!("models.{i}.");
+        let mut m = ModelConfig::default();
+        for key in doc.section_keys(&format!("models.{i}")) {
+            let field = &key[prefix.len()..];
+            match field {
+                "name" => {
+                    m.name = doc
+                        .get_str(key)
+                        .ok_or_else(|| {
+                            ConfigError::Invalid(format!("models[{i}].name must be a string"))
+                        })?
+                        .to_string();
+                }
+                "engine" => {
+                    let s = doc.get_str(key).unwrap_or_default();
+                    m.engine = EngineKind::parse(s).ok_or_else(|| {
+                        ConfigError::Invalid(format!("models[{i}]: unknown engine '{s}'"))
+                    })?;
+                }
+                "act_bits" => {
+                    m.act_bits = match doc.get_int(key) {
+                        Some(v) if (1..=12).contains(&v) => v as u32,
+                        _ => {
+                            return invalid(format!("models[{i}].act_bits must be in 1..=12"))
+                        }
+                    };
+                }
+                "seed" => {
+                    m.seed = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as u64,
+                        _ => return invalid(format!("models[{i}].seed must be >= 0")),
+                    };
+                }
+                "head_seed" => {
+                    m.head_seed = match doc.get_int(key) {
+                        Some(v) if v >= 0 => Some(v as u64),
+                        _ => return invalid(format!("models[{i}].head_seed must be >= 0")),
+                    };
+                }
+                "artifact_dir" => {
+                    m.artifact_dir = Some(
+                        doc.get_str(key)
+                            .ok_or_else(|| {
+                                ConfigError::Invalid(format!(
+                                    "models[{i}].artifact_dir must be a string"
+                                ))
+                            })?
+                            .to_string(),
+                    );
+                }
+                other => {
+                    return invalid(format!("unknown [[models]] key '{other}' (entry {i})"))
+                }
+            }
+        }
+        if m.name.is_empty() {
+            return invalid(format!("models[{i}] needs a name"));
+        }
+        out.push(m);
+    }
+    Ok(out)
 }
 
 fn pos_usize(doc: &Document, key: &str) -> Result<usize, ConfigError> {
@@ -579,6 +723,80 @@ activation_bits = 4
     fn network_bad_bits_rejected() {
         let doc = Document::parse("[network]\nfilters = [4]\nweight_bits = 99").unwrap();
         assert!(network_from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn models_section_parses() {
+        let doc = Document::parse(
+            r#"
+[serve]
+workers = 2
+[[models]]
+name = "base"
+engine = "pcilt"
+act_bits = 4
+seed = 7
+[[models]]
+name = "tuned"
+engine = "auto"
+seed = 7
+head_seed = 99
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models[0].name, "base");
+        assert_eq!(cfg.models[0].engine, EngineKind::Pcilt);
+        assert_eq!(cfg.models[0].seed, 7);
+        assert_eq!(cfg.models[0].head_seed, None);
+        assert_eq!(cfg.models[1].name, "tuned");
+        assert_eq!(cfg.models[1].engine, EngineKind::Auto);
+        assert_eq!(cfg.models[1].head_seed, Some(99));
+        assert_eq!(cfg.workers, 2);
+    }
+
+    #[test]
+    fn models_default_is_empty() {
+        assert!(ServeConfig::default().models.is_empty());
+        let doc = Document::parse("[serve]\nworkers = 3").unwrap();
+        assert!(ServeConfig::from_document(&doc).unwrap().models.is_empty());
+    }
+
+    #[test]
+    fn models_bad_entries_rejected() {
+        // missing name
+        let doc = Document::parse("[[models]]\nseed = 1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // duplicate names
+        let doc =
+            Document::parse("[[models]]\nname = \"a\"\n[[models]]\nname = \"a\"").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // unknown key
+        let doc = Document::parse("[[models]]\nname = \"a\"\ntypo = 1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // bad engine
+        let doc = Document::parse("[[models]]\nname = \"a\"\nengine = \"gpu\"").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // act_bits out of range
+        let doc = Document::parse("[[models]]\nname = \"a\"\nact_bits = 99").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // hlo without artifacts
+        let doc = Document::parse("[[models]]\nname = \"a\"\nengine = \"hlo\"").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn single_bracket_models_section_is_a_loud_error() {
+        // `[models]` instead of `[[models]]` must fail, not silently
+        // disable multi-model serving.
+        let doc = Document::parse("[models]\nname = \"a\"").unwrap();
+        let err = ServeConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("[[models]]"), "{err}");
+        // stray indexed section beyond the declared entries too
+        let doc =
+            Document::parse("[[models]]\nname = \"a\"\n[models.5]\nseed = 1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
     }
 
     #[test]

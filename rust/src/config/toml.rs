@@ -1,11 +1,14 @@
 //! Hand-rolled parser for the TOML subset this project uses for its config
 //! files (serde/toml crates are unavailable in the offline build).
 //!
-//! Supported: `[section]` and `[section.sub]` headers, `key = value` pairs
-//! with string / integer / float / boolean / homogeneous-array values,
-//! `#` comments, and blank lines. Unsupported TOML (multi-line strings,
-//! dates, inline tables, arrays-of-tables) is rejected with a line-numbered
-//! error — better a loud failure than silent misconfiguration.
+//! Supported: `[section]` and `[section.sub]` headers, `[[name]]`
+//! array-of-tables headers (each occurrence opens table `name.N`, so
+//! `[[models]]` entries parse to `models.0.*`, `models.1.*`, …),
+//! `key = value` pairs with string / integer / float / boolean /
+//! homogeneous-array values, `#` comments, and blank lines. Unsupported
+//! TOML (multi-line strings, dates, inline tables) is rejected with a
+//! line-numbered error — better a loud failure than silent
+//! misconfiguration.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -81,6 +84,10 @@ fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Document {
     entries: BTreeMap<String, Value>,
+    /// `[[name]]` occurrence counts: `arrays["models"] == 2` after two
+    /// `[[models]]` headers (whose keys live under `models.0.*` and
+    /// `models.1.*`).
+    arrays: BTreeMap<String, usize>,
 }
 
 impl Document {
@@ -91,6 +98,24 @@ impl Document {
             let lineno = i + 1;
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let Some(name) = rest.strip_suffix("]]") else {
+                    return err(lineno, "unterminated array-of-tables header");
+                };
+                let name = name.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+                {
+                    return err(lineno, format!("invalid array-of-tables name '{name}'"));
+                }
+                let n = doc.arrays.entry(name.to_string()).or_insert(0);
+                let idx = *n;
+                *n += 1;
+                section = format!("{name}.{idx}");
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -150,6 +175,11 @@ impl Document {
 
     pub fn get_bool(&self, path: &str) -> Option<bool> {
         self.get(path).and_then(Value::as_bool)
+    }
+
+    /// Number of `[[name]]` tables parsed (0 when none appeared).
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).copied().unwrap_or(0)
     }
 
     /// All keys, sorted (BTreeMap order).
@@ -343,5 +373,37 @@ names = ["a", "b,c"]"#).unwrap();
         let doc = Document::parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
         let keys: Vec<&str> = doc.section_keys("s").collect();
         assert_eq!(keys, vec!["s.a", "s.b"]);
+    }
+
+    #[test]
+    fn array_of_tables_index_each_occurrence() {
+        let doc = Document::parse(
+            r#"
+[serve]
+workers = 2
+[[models]]
+name = "a"
+seed = 1
+[[models]]
+name = "b"
+[other]
+x = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.array_len("models"), 2);
+        assert_eq!(doc.array_len("nothing"), 0);
+        assert_eq!(doc.get_str("models.0.name"), Some("a"));
+        assert_eq!(doc.get_int("models.0.seed"), Some(1));
+        assert_eq!(doc.get_str("models.1.name"), Some("b"));
+        assert_eq!(doc.get_int("serve.workers"), Some(2));
+        assert_eq!(doc.get_int("other.x"), Some(1));
+    }
+
+    #[test]
+    fn bad_array_of_tables_headers_rejected() {
+        assert!(Document::parse("[[models]\nname = \"a\"").is_err());
+        assert!(Document::parse("[[bad.name]]\nx = 1").is_err());
+        assert!(Document::parse("[[]]\nx = 1").is_err());
     }
 }

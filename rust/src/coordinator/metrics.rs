@@ -4,7 +4,7 @@
 //! process-wide table-store counters (hits/misses/builds/evictions) so a
 //! serving report shows whether warm-up reused or rebuilt its tables.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::pcilt::store::{TableStore, TableStoreStats};
@@ -22,8 +22,9 @@ pub struct MetricsSnapshot {
     pub max_latency_ns: u64,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
-    /// Process-wide table-store counters at snapshot time (the workers all
-    /// borrow tables through `TableStore::process`).
+    /// Table-store counters at snapshot time — the store this pool's
+    /// workers borrow tables through (the process store unless the backend
+    /// spec pinned a private one).
     pub tables: TableStoreStats,
 }
 
@@ -62,6 +63,8 @@ struct Inner {
 /// Thread-safe metrics collector.
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Store whose counters ride along in every snapshot.
+    store: Arc<TableStore>,
 }
 
 impl Default for Metrics {
@@ -71,7 +74,14 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Collector reporting the process-wide table store.
     pub fn new() -> Metrics {
+        Self::with_store(TableStore::process().clone())
+    }
+
+    /// Collector whose snapshots report `store`'s counters — the
+    /// multi-model registry and store-isolation tests pin private stores.
+    pub fn with_store(store: Arc<TableStore>) -> Metrics {
         Metrics {
             inner: Mutex::new(Inner {
                 submitted: 0,
@@ -82,6 +92,7 @@ impl Metrics {
                 latency: LatencyHistogram::new(),
                 started: Instant::now(),
             }),
+            store,
         }
     }
 
@@ -141,7 +152,7 @@ impl Metrics {
                 0.0
             },
             elapsed_s: elapsed,
-            tables: TableStore::process().stats(),
+            tables: self.store.stats(),
         }
     }
 }
@@ -164,6 +175,32 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert_eq!(s.mean_batch_size, 2.0);
         assert!(s.max_latency_ns >= 2_000);
+    }
+
+    #[test]
+    fn fresh_reset_snapshot_is_finite() {
+        // Regression: right after reset() there are zero batches and ~zero
+        // elapsed time; the snapshot divides by both, so an unguarded
+        // division prints NaN (0/0) or inf in the report.
+        let m = Metrics::new();
+        m.on_batch(&[1_000, 2_000]);
+        m.reset();
+        let s = m.snapshot();
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.completed, 0);
+        assert!(
+            s.mean_batch_size.is_finite() && s.mean_batch_size == 0.0,
+            "mean_batch_size after reset: {}",
+            s.mean_batch_size
+        );
+        assert!(
+            s.throughput_rps.is_finite(),
+            "throughput_rps after reset: {}",
+            s.throughput_rps
+        );
+        assert!(s.p50_latency_ns.is_finite() && s.p99_latency_ns.is_finite());
+        let r = s.report();
+        assert!(!r.contains("NaN") && !r.contains("inf"), "report: {r}");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 pub mod metrics;
 pub mod queue;
+pub mod registry;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -13,8 +14,9 @@ pub mod workload;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{BoundedQueue, PushError};
+pub use registry::{plan_model_sharing, ModelEntry, ModelRegistry, RegistryError, SharingRow};
 pub use request::{InferRequest, InferResponse};
-pub use router::Router;
+pub use router::{RouteError, Router};
 pub use server::{Server, ServerOpts, SubmitError};
-pub use worker::{Backend, BackendSpec, NativeEngineKind};
-pub use workload::{run_closed_loop, run_poisson, WorkloadReport};
+pub use worker::{Backend, BackendKind, BackendSpec, NativeEngineKind};
+pub use workload::{run_closed_loop, run_poisson, run_poisson_models, WorkloadReport};

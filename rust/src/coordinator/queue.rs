@@ -22,7 +22,10 @@ pub enum PushError {
 }
 
 struct Inner<T> {
-    items: VecDeque<T>,
+    /// Items stamped with their enqueue time, so the batching deadline can
+    /// run from when a request *arrived* rather than when a worker first
+    /// looked at it.
+    items: VecDeque<(Instant, T)>,
     closed: bool,
 }
 
@@ -55,7 +58,7 @@ impl<T> BoundedQueue<T> {
         if g.items.len() >= self.capacity {
             return Err((item, PushError::Full));
         }
-        g.items.push_back(item);
+        g.items.push_back((Instant::now(), item));
         drop(g);
         self.not_empty.notify_one();
         Ok(())
@@ -79,8 +82,11 @@ impl<T> BoundedQueue<T> {
 
     /// Dynamic-batch pop. Blocks until at least one item is available (or
     /// the queue is closed and empty -> `None`), then gathers up to
-    /// `max_batch` items, waiting at most `deadline` from the moment the
-    /// first item was taken.
+    /// `max_batch` items, waiting at most `deadline` measured from when the
+    /// *first request of the forming batch arrived* (its enqueue time). A
+    /// request that already sat in the queue past the deadline is flushed
+    /// immediately — queueing delay counts against the latency budget, it
+    /// does not reset it.
     pub fn pop_batch(&self, max_batch: usize, deadline: Duration) -> Option<Vec<T>> {
         assert!(max_batch >= 1);
         let mut g = self.inner.lock().unwrap();
@@ -95,13 +101,13 @@ impl<T> BoundedQueue<T> {
             g = self.not_empty.wait(g).unwrap();
         }
         let mut batch = Vec::with_capacity(max_batch);
-        batch.push(g.items.pop_front().unwrap());
-        let t0 = Instant::now();
+        let (t0, first) = g.items.pop_front().unwrap();
+        batch.push(first);
         // Gather until size or deadline.
         loop {
             while batch.len() < max_batch {
                 match g.items.pop_front() {
-                    Some(it) => batch.push(it),
+                    Some((_, it)) => batch.push(it),
                     None => break,
                 }
             }
@@ -184,6 +190,51 @@ mod tests {
         let waited = t0.elapsed();
         assert!(waited >= Duration::from_millis(18), "waited {waited:?}");
         assert!(waited < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn deadline_runs_from_enqueue_not_pop() {
+        // Regression: a request that already waited past the batching
+        // deadline before any worker popped must be flushed immediately —
+        // the old code restarted the clock at pop time, doubling worst-case
+        // queueing latency under a busy pool.
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        thread::sleep(Duration::from_millis(150));
+        let t0 = Instant::now();
+        let b = q.pop_batch(8, Duration::from_millis(100)).unwrap();
+        assert_eq!(b, vec![1]);
+        // No waiting is involved (the deadline expired in-queue); the wide
+        // bound only guards against the old wait-a-full-deadline behavior
+        // while tolerating CI scheduler stalls.
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(80),
+            "expired deadline must flush immediately, waited {waited:?}"
+        );
+    }
+
+    #[test]
+    fn prefilled_queue_deadline_accounts_oldest_arrival() {
+        // Pre-filled queue: the deadline is measured from the OLDEST
+        // request of the forming batch, so a pop that starts mid-window
+        // only waits out the remainder.
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        thread::sleep(Duration::from_millis(100));
+        let t0 = Instant::now();
+        // 150ms deadline, but ~100ms already elapsed in-queue and nothing
+        // else arrives: the pop must NOT hold the partial batch for a full
+        // 150ms from now — only until the arrival-anchored deadline
+        // (~50ms). The bound leaves ~70ms of CI-scheduler slack.
+        let b = q.pop_batch(4, Duration::from_millis(150)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(120),
+            "deadline must be anchored at arrival, waited {waited:?}"
+        );
     }
 
     #[test]

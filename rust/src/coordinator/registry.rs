@@ -1,0 +1,410 @@
+//! Multi-model serving plane: the `ModelRegistry` loads N named models
+//! (each with its own params, planner-chosen engine plan and quantization
+//! spec) from a `[[models]]` config list and fronts one engine pool per
+//! model behind a model-name router:
+//!
+//! ```text
+//!   request {model, engine, codes}
+//!        │
+//!   ModelRegistry ──▶ per-model Router ──▶ Server pool ──▶ workers
+//!        │                                      │
+//!        └────────── one shared TableStore ◀────┘  (all pools borrow)
+//! ```
+//!
+//! The point of the topology is the shared store: the paper's tables are
+//! per-weight-content, not per-model, so a fleet serving many quantized
+//! CNNs pays for each distinct table exactly once across all models.
+//! Shared backbones and fine-tuned heads resolve to the same 128-bit
+//! content keys and borrow one allocation; the registry accounts every
+//! such resolution in the store's `cross_model_dedup` counter (surfaced in
+//! metrics reports and `pcilt tables stats`).
+
+use std::collections::{BTreeMap, HashSet};
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+
+use crate::config::{EngineKind, ModelConfig};
+use crate::model::{planned_table_keys, random_params_seeded, randomize_head, ModelParams};
+use crate::pcilt::store::{TableKey, TableStore};
+use crate::runtime::ArtifactBundle;
+use crate::tensor::Tensor4;
+use crate::util::error::{self as anyhow, bail, ensure, Context};
+use crate::util::logger as log;
+
+use super::metrics::MetricsSnapshot;
+use super::request::InferResponse;
+use super::router::{RouteError, Router};
+use super::server::{Server, ServerOpts};
+use super::worker::{BackendSpec, NativeEngineKind};
+
+/// One registered model: its pool(s) behind an engine router, plus the
+/// table-sharing bookkeeping.
+pub struct ModelEntry {
+    pub name: String,
+    /// Engine pool label (`"auto"` when the planner picks per layer).
+    pub engine: String,
+    pub params: ModelParams,
+    /// Store keys this model's conv layers resolve to (planned before the
+    /// pools built, against the same store, so they match what was built).
+    pub table_keys: Vec<TableKey>,
+    /// How many of `table_keys` were already registered by earlier models
+    /// — each one is a table copy this model did NOT duplicate.
+    pub shared_keys: u64,
+    router: Router,
+}
+
+/// Errors from model routing.
+#[derive(Debug)]
+pub enum RegistryError {
+    /// No model registered under the requested name; `known` lists the
+    /// registered models so the client can self-correct.
+    UnknownModel {
+        requested: String,
+        known: Vec<String>,
+    },
+    /// The model exists but its router rejected the request.
+    Route(RouteError),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownModel { requested, known } => write!(
+                f,
+                "unknown model '{requested}' (registered models: {})",
+                known.join(", ")
+            ),
+            RegistryError::Route(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The running multi-model serving plane.
+pub struct ModelRegistry {
+    entries: BTreeMap<String, ModelEntry>,
+    /// Registration order (config order) — reports and round-robin
+    /// workloads iterate it, and the first model is the routing default.
+    order: Vec<String>,
+    default_model: String,
+    store: Arc<TableStore>,
+}
+
+/// Load a model's parameters from its config source.
+fn load_params(m: &ModelConfig) -> anyhow::Result<ModelParams> {
+    let mut params = match &m.artifact_dir {
+        Some(dir) => {
+            ArtifactBundle::load(Path::new(dir))
+                .with_context(|| {
+                    format!("model '{}': loading artifacts from '{dir}'", m.name)
+                })?
+                .params
+        }
+        None => random_params_seeded(m.act_bits, m.seed),
+    };
+    if let Some(hs) = m.head_seed {
+        randomize_head(&mut params, hs);
+    }
+    Ok(params)
+}
+
+/// Map a config engine to the worker-side native kind.
+fn native_kind(engine: EngineKind) -> anyhow::Result<NativeEngineKind> {
+    Ok(match engine {
+        EngineKind::Dm => NativeEngineKind::Dm,
+        EngineKind::Pcilt => NativeEngineKind::Pcilt,
+        EngineKind::Segment => NativeEngineKind::Segment { seg_n: 2 },
+        EngineKind::Shared => NativeEngineKind::Shared,
+        EngineKind::Auto => NativeEngineKind::Auto,
+        EngineKind::Hlo => bail!("hlo engines route through BackendSpec::hlo, not native_kind"),
+    })
+}
+
+/// Predicted table sharing for one model of a `[[models]]` list (the
+/// `pcilt tables stats` analysis row).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SharingRow {
+    pub model: String,
+    /// Distinct table keys the model's conv layers resolve to.
+    pub keys: u64,
+    /// Keys already owned by models earlier in the list.
+    pub shared: u64,
+}
+
+/// Predict cross-model table sharing for a `[[models]]` list without
+/// starting any pools. Plans against a throwaway store, so `auto` models
+/// are priced cold — exactly what the first boot would build.
+pub fn plan_model_sharing(models: &[ModelConfig]) -> anyhow::Result<Vec<SharingRow>> {
+    let store = Arc::new(TableStore::new());
+    let mut seen: HashSet<TableKey> = HashSet::new();
+    let mut out = Vec::with_capacity(models.len());
+    for m in models {
+        let keys = match m.engine {
+            EngineKind::Hlo => Vec::new(), // PJRT pools hold no native tables
+            kind => {
+                let params = load_params(m)?;
+                planned_table_keys(&params, &native_kind(kind)?.to_choice(), &store)
+            }
+        };
+        let shared = keys.iter().filter(|&k| seen.contains(k)).count() as u64;
+        seen.extend(keys.iter().copied());
+        out.push(SharingRow {
+            model: m.name.clone(),
+            keys: keys.len() as u64,
+            shared,
+        });
+    }
+    Ok(out)
+}
+
+impl ModelRegistry {
+    /// Start every configured model against the process-wide table store
+    /// (the serving configuration).
+    pub fn start(models: &[ModelConfig], opts: &ServerOpts) -> anyhow::Result<ModelRegistry> {
+        Self::start_with_store(models, opts, TableStore::process().clone())
+    }
+
+    /// Start against an explicit store — tests pin private stores to
+    /// assert exact entry/byte/dedup counts.
+    pub fn start_with_store(
+        models: &[ModelConfig],
+        opts: &ServerOpts,
+        store: Arc<TableStore>,
+    ) -> anyhow::Result<ModelRegistry> {
+        ensure!(!models.is_empty(), "[[models]] list is empty");
+        let mut entries = BTreeMap::new();
+        let mut order = Vec::with_capacity(models.len());
+        let mut seen_keys: HashSet<TableKey> = HashSet::new();
+        for m in models {
+            ensure!(!m.name.is_empty(), "every model needs a non-empty name");
+            ensure!(
+                !entries.contains_key(&m.name),
+                "duplicate model name '{}'",
+                m.name
+            );
+            // Account sharing BEFORE this model builds: planned keys are
+            // computed against the store as earlier models left it, which
+            // is the store state this model's own pool will build against.
+            let (spec, params, table_keys) = match m.engine {
+                EngineKind::Hlo => {
+                    let dir = m.artifact_dir.as_deref().unwrap_or("artifacts");
+                    let bundle = ArtifactBundle::load(Path::new(dir)).with_context(|| {
+                        format!("model '{}': loading artifacts from '{dir}'", m.name)
+                    })?;
+                    // PJRT pools hold no native tables; params come from
+                    // the same bundle the pool serves.
+                    let params = bundle.params.clone();
+                    (BackendSpec::hlo(bundle, "pcilt"), params, Vec::new())
+                }
+                kind => {
+                    let native = native_kind(kind)?;
+                    let params = load_params(m)?;
+                    let keys = planned_table_keys(&params, &native.to_choice(), &store);
+                    (BackendSpec::native(params.clone(), native), params, keys)
+                }
+            };
+            let shared = table_keys.iter().filter(|&k| seen_keys.contains(k)).count() as u64;
+            if shared > 0 {
+                store.note_cross_model_dedup(shared);
+            }
+            seen_keys.extend(table_keys.iter().copied());
+
+            let spec = spec.for_model(m.name.clone()).with_store(store.clone());
+            let server = Arc::new(Server::start(spec, opts)?);
+            log::info!(
+                "registry: model '{}' up ({}, {} table keys, {} shared)",
+                m.name,
+                server.backend_name(),
+                table_keys.len(),
+                shared
+            );
+            let pool_name = m.engine.name().to_string();
+            let router = Router::new(vec![(pool_name.clone(), server)], &pool_name);
+            entries.insert(
+                m.name.clone(),
+                ModelEntry {
+                    name: m.name.clone(),
+                    engine: pool_name,
+                    params,
+                    table_keys,
+                    shared_keys: shared,
+                    router,
+                },
+            );
+            order.push(m.name.clone());
+        }
+        let default_model = order[0].clone();
+        Ok(ModelRegistry {
+            entries,
+            order,
+            default_model,
+            store,
+        })
+    }
+
+    /// Route one request. `model = None` targets the default (first
+    /// configured) model; `engine` follows [`Router::route`] semantics
+    /// (`None`/`Some("auto")` = the model's default pool).
+    pub fn route(
+        &self,
+        model: Option<&str>,
+        engine: Option<&str>,
+        codes: Tensor4<u8>,
+    ) -> Result<(u64, mpsc::Receiver<InferResponse>), RegistryError> {
+        let name = model.unwrap_or(&self.default_model);
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownModel {
+                requested: name.to_string(),
+                known: self.order.clone(),
+            })?;
+        entry.router.route(engine, codes).map_err(RegistryError::Route)
+    }
+
+    /// Registered model names, in config order.
+    pub fn models(&self) -> Vec<&str> {
+        self.order.iter().map(String::as_str).collect()
+    }
+
+    /// Entry for a model, if registered.
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// The store every pool borrows tables from.
+    pub fn store(&self) -> &Arc<TableStore> {
+        &self.store
+    }
+
+    /// Total cross-model table dedups across the fleet (also recorded in
+    /// the store's stats).
+    pub fn cross_model_dedup(&self) -> u64 {
+        self.entries.values().map(|e| e.shared_keys).sum()
+    }
+
+    /// Per-model metrics snapshots, in config order.
+    pub fn metrics(&self) -> Vec<(String, MetricsSnapshot)> {
+        self.order
+            .iter()
+            .map(|name| {
+                let e = &self.entries[name];
+                let m = e
+                    .router
+                    .pool(&e.engine)
+                    .expect("model pool registered under its engine name")
+                    .metrics();
+                (name.clone(), m)
+            })
+            .collect()
+    }
+
+    /// Shut every pool down (draining outstanding requests), returning
+    /// per-model metrics in config order.
+    pub fn shutdown(mut self) -> Vec<(String, MetricsSnapshot)> {
+        let mut out = Vec::with_capacity(self.order.len());
+        for name in std::mem::take(&mut self.order) {
+            if let Some(entry) = self.entries.remove(&name) {
+                let mut pools = entry.router.shutdown();
+                // one pool per model today; take its snapshot
+                if let Some((_, m)) = pools.pop() {
+                    out.push((name, m));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn opts() -> ServerOpts {
+        ServerOpts {
+            workers: 1,
+            max_batch: 4,
+            batch_deadline: Duration::from_millis(1),
+            queue_capacity: 64,
+        }
+    }
+
+    fn cfg(name: &str, seed: u64, head_seed: Option<u64>) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            engine: EngineKind::Pcilt,
+            act_bits: 4,
+            seed,
+            head_seed,
+            artifact_dir: None,
+        }
+    }
+
+    #[test]
+    fn registry_routes_to_named_and_default_model() {
+        let store = Arc::new(TableStore::new());
+        let reg = ModelRegistry::start_with_store(
+            &[cfg("alpha", 1, None), cfg("beta", 2, None)],
+            &opts(),
+            store,
+        )
+        .unwrap();
+        assert_eq!(reg.models(), vec!["alpha", "beta"]);
+        assert_eq!(reg.default_model(), "alpha");
+        let mut rng = crate::util::prng::Rng::new(5);
+        let img = crate::tensor::Tensor4::random_activations(
+            crate::tensor::Shape4::new(1, 16, 16, 1),
+            4,
+            &mut rng,
+        );
+        let (_, rx) = reg.route(Some("beta"), None, img.clone()).unwrap();
+        assert_eq!(rx.recv().unwrap().model, "beta");
+        let (_, rx) = reg.route(None, None, img).unwrap();
+        assert_eq!(rx.recv().unwrap().model, "alpha");
+        let metrics = reg.shutdown();
+        assert_eq!(metrics.len(), 2);
+        let total: u64 = metrics.iter().map(|(_, m)| m.completed).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let store = Arc::new(TableStore::new());
+        let reg =
+            ModelRegistry::start_with_store(&[cfg("only", 3, None)], &opts(), store).unwrap();
+        let img = crate::tensor::Tensor4::<u8>::zeros(crate::tensor::Shape4::new(1, 16, 16, 1));
+        let err = reg.route(Some("missing"), None, img).unwrap_err();
+        assert!(matches!(err, RegistryError::UnknownModel { .. }));
+        let msg = err.to_string();
+        assert!(msg.contains("'missing'") && msg.contains("only"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_and_empty_model_lists_rejected() {
+        let store = Arc::new(TableStore::new());
+        assert!(ModelRegistry::start_with_store(&[], &opts(), store.clone()).is_err());
+        let err = ModelRegistry::start_with_store(
+            &[cfg("x", 1, None), cfg("x", 2, None)],
+            &opts(),
+            store,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn plan_model_sharing_predicts_overlap() {
+        let rows =
+            plan_model_sharing(&[cfg("base", 7, None), cfg("tuned", 7, Some(9))]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].shared, 0);
+        assert_eq!(rows[1].keys, rows[1].shared, "identical backbone shares all keys");
+        assert!(rows[1].shared >= 1);
+    }
+}

@@ -8,6 +8,10 @@ use crate::tensor::Tensor4;
 /// A single inference request: one image's activation codes.
 pub struct InferRequest {
     pub id: u64,
+    /// Model this request targets; empty for anonymous single-model pools.
+    /// Stamped by the pool's `Server::submit` from its backend spec, so
+    /// multi-model metrics and responses can attribute every request.
+    pub model: String,
     /// `[1, H, W, C]` activation codes.
     pub codes: Tensor4<u8>,
     /// Wall-clock submit time (for queueing-latency accounting).
@@ -20,6 +24,8 @@ pub struct InferRequest {
 #[derive(Debug, Clone)]
 pub struct InferResponse {
     pub id: u64,
+    /// Model that served the request (echo of [`InferRequest::model`]).
+    pub model: String,
     pub logits: Vec<i32>,
     pub class: usize,
     /// Total latency (submit -> reply) in nanoseconds.
@@ -34,12 +40,19 @@ impl InferRequest {
         (
             InferRequest {
                 id,
+                model: String::new(),
                 codes,
                 submitted_at: Instant::now(),
                 reply: tx,
             },
             rx,
         )
+    }
+
+    /// Tag the request with the model it targets.
+    pub fn with_model(mut self, model: impl Into<String>) -> InferRequest {
+        self.model = model.into();
+        self
     }
 }
 
@@ -55,6 +68,7 @@ mod tests {
         req.reply
             .send(InferResponse {
                 id: req.id,
+                model: req.model.clone(),
                 logits: vec![1, 2, 3],
                 class: 2,
                 latency_ns: 1000,
@@ -64,6 +78,15 @@ mod tests {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.class, 2);
+        assert_eq!(resp.model, "");
+    }
+
+    #[test]
+    fn with_model_tags_request() {
+        let codes = Tensor4::<u8>::zeros(Shape4::new(1, 4, 4, 1));
+        let (req, _rx) = InferRequest::new(3, codes);
+        let req = req.with_model("vgg");
+        assert_eq!(req.model, "vgg");
     }
 
     #[test]
@@ -75,6 +98,7 @@ mod tests {
             .reply
             .send(InferResponse {
                 id: 1,
+                model: String::new(),
                 logits: vec![],
                 class: 0,
                 latency_ns: 0,

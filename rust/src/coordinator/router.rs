@@ -21,14 +21,23 @@ pub struct Router {
 /// Routing errors.
 #[derive(Debug)]
 pub enum RouteError {
-    UnknownEngine(String),
+    /// No pool registered under the requested engine name; `known` lists
+    /// the registered pools so the client can self-correct.
+    UnknownEngine {
+        requested: String,
+        known: Vec<String>,
+    },
     Submit(SubmitError),
 }
 
 impl std::fmt::Display for RouteError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            RouteError::UnknownEngine(e) => write!(f, "unknown engine '{e}'"),
+            RouteError::UnknownEngine { requested, known } => write!(
+                f,
+                "unknown engine '{requested}' (registered pools: {})",
+                known.join(", ")
+            ),
             RouteError::Submit(e) => write!(f, "pool rejected request: {e:?}"),
         }
     }
@@ -66,10 +75,10 @@ impl Router {
             None | Some("auto") => &self.default_pool,
             Some(n) => n,
         };
-        let pool = self
-            .pools
-            .get(name)
-            .ok_or_else(|| RouteError::UnknownEngine(name.to_string()))?;
+        let pool = self.pools.get(name).ok_or_else(|| RouteError::UnknownEngine {
+            requested: name.to_string(),
+            known: self.pools.keys().cloned().collect(),
+        })?;
         pool.submit(codes).map_err(RouteError::Submit)
     }
 
@@ -116,16 +125,7 @@ mod tests {
             queue_capacity: 64,
         };
         let mk = |engine| {
-            Arc::new(
-                Server::start(
-                    BackendSpec::Native {
-                        params: params.clone(),
-                        engine,
-                    },
-                    &opts,
-                )
-                .unwrap(),
-            )
+            Arc::new(Server::start(BackendSpec::native(params.clone(), engine), &opts).unwrap())
         };
         Router::new(
             vec![
@@ -158,8 +158,20 @@ mod tests {
         let r = router();
         assert!(matches!(
             r.route(Some("fft"), image(3)),
-            Err(RouteError::UnknownEngine(_))
+            Err(RouteError::UnknownEngine { .. })
         ));
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_registered_pools() {
+        let r = router();
+        let err = r.route(Some("fft"), image(3)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("'fft'"), "{msg}");
+        assert!(
+            msg.contains("dm") && msg.contains("pcilt"),
+            "message must list registered pools: {msg}"
+        );
     }
 
     #[test]
@@ -193,10 +205,7 @@ mod tests {
         let mut rng = Rng::new(43);
         let s = Arc::new(
             Server::start(
-                BackendSpec::Native {
-                    params: random_params(4, &mut rng),
-                    engine: NativeEngineKind::Dm,
-                },
+                BackendSpec::native(random_params(4, &mut rng), NativeEngineKind::Dm),
                 &ServerOpts::default(),
             )
             .unwrap(),

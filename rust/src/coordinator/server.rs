@@ -63,6 +63,8 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     backend_name: String,
+    /// Model label stamped on every request (empty for anonymous pools).
+    model: String,
 }
 
 impl Server {
@@ -70,7 +72,10 @@ impl Server {
     pub fn start(spec: BackendSpec, opts: &ServerOpts) -> anyhow::Result<Server> {
         assert!(opts.workers >= 1);
         let queue = Arc::new(BoundedQueue::new(opts.queue_capacity));
-        let metrics = Arc::new(Metrics::new());
+        // Metrics snapshots report the same store the workers borrow
+        // tables through.
+        let metrics = Arc::new(Metrics::with_store(spec.store()));
+        let model = spec.model.clone();
         // Build one backend on the caller thread first so construction
         // errors surface synchronously (bad artifacts, absurd configs).
         let probe = Backend::build(&spec)?;
@@ -114,11 +119,17 @@ impl Server {
             workers,
             next_id: AtomicU64::new(0),
             backend_name,
+            model,
         })
     }
 
     pub fn backend_name(&self) -> &str {
         &self.backend_name
+    }
+
+    /// Model this pool serves ("" for anonymous single-model pools).
+    pub fn model(&self) -> &str {
+        &self.model
     }
 
     /// Submit one image; returns the reply receiver. Non-blocking; full
@@ -129,6 +140,7 @@ impl Server {
     ) -> Result<(u64, mpsc::Receiver<InferResponse>), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (req, rx) = InferRequest::new(id, codes);
+        let req = req.with_model(self.model.clone());
         self.metrics.on_submit();
         match self.queue.push(req) {
             Ok(()) => Ok((id, rx)),
@@ -199,10 +211,7 @@ mod tests {
 
     fn test_server(workers: usize, queue_capacity: usize) -> Server {
         let mut rng = Rng::new(21);
-        let spec = BackendSpec::Native {
-            params: random_params(4, &mut rng),
-            engine: NativeEngineKind::Pcilt,
-        };
+        let spec = BackendSpec::native(random_params(4, &mut rng), NativeEngineKind::Pcilt);
         Server::start(
             spec,
             &ServerOpts {
@@ -267,10 +276,7 @@ mod tests {
         let server = test_server(3, 128);
         let backend_check = {
             let mut rng = Rng::new(21);
-            let spec = BackendSpec::Native {
-                params: random_params(4, &mut rng),
-                engine: NativeEngineKind::Pcilt,
-            };
+            let spec = BackendSpec::native(random_params(4, &mut rng), NativeEngineKind::Pcilt);
             Backend::build(&spec).unwrap()
         };
         let images: Vec<Tensor4<u8>> = (0..20).map(|i| one_image(1000 + i)).collect();
@@ -290,10 +296,7 @@ mod tests {
     fn overload_sheds_with_backpressure() {
         // 1 worker, tiny queue, huge deadline so the queue jams.
         let mut rng = Rng::new(22);
-        let spec = BackendSpec::Native {
-            params: random_params(4, &mut rng),
-            engine: NativeEngineKind::Dm,
-        };
+        let spec = BackendSpec::native(random_params(4, &mut rng), NativeEngineKind::Dm);
         let server = Server::start(
             spec,
             &ServerOpts {

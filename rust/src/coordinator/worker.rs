@@ -2,9 +2,11 @@
 //! (PJRT executables are not `Send` — raw C pointers — so the spec is what
 //! crosses the thread boundary, not the backend).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::{EngineChoice, ModelParams, QuantCnn};
+use crate::pcilt::store::TableStore;
 use crate::runtime::{ArtifactBundle, CompiledModel, PjrtContext};
 use crate::tensor::{Shape4, Tensor4};
 use crate::util::error::{self as anyhow, Context, Result};
@@ -12,8 +14,23 @@ use crate::util::error::{self as anyhow, Context, Result};
 use super::request::{InferRequest, InferResponse};
 
 /// Cloneable description of a backend; workers build from this in-thread.
+/// Beyond the compute ([`BackendKind`]) it carries the serving identity:
+/// the model name stamped on every request of this pool, and the table
+/// store the engines borrow through (the multi-model registry points every
+/// pool at one shared store so identical layers across models dedup).
 #[derive(Clone)]
-pub enum BackendSpec {
+pub struct BackendSpec {
+    /// Model label requests/responses carry; empty for anonymous
+    /// single-model serving.
+    pub model: String,
+    /// Table store engines borrow through; `None` = the process store.
+    pub store: Option<Arc<TableStore>>,
+    pub kind: BackendKind,
+}
+
+/// The compute half of a [`BackendSpec`].
+#[derive(Clone)]
+pub enum BackendKind {
     /// Rust-native engines over loaded model params.
     Native {
         params: ModelParams,
@@ -24,6 +41,48 @@ pub enum BackendSpec {
         bundle: ArtifactBundle,
         engine: String, // artifact engine name: "pcilt" | "dm"
     },
+}
+
+impl BackendSpec {
+    /// Anonymous native backend over the process table store.
+    pub fn native(params: ModelParams, engine: NativeEngineKind) -> BackendSpec {
+        BackendSpec {
+            model: String::new(),
+            store: None,
+            kind: BackendKind::Native { params, engine },
+        }
+    }
+
+    /// Anonymous PJRT backend over an artifact bundle.
+    pub fn hlo(bundle: ArtifactBundle, engine: impl Into<String>) -> BackendSpec {
+        BackendSpec {
+            model: String::new(),
+            store: None,
+            kind: BackendKind::Hlo {
+                bundle,
+                engine: engine.into(),
+            },
+        }
+    }
+
+    /// Name the model this pool serves (stamped on its requests).
+    pub fn for_model(mut self, model: impl Into<String>) -> BackendSpec {
+        self.model = model.into();
+        self
+    }
+
+    /// Pin the table store the pool's engines borrow through.
+    pub fn with_store(mut self, store: Arc<TableStore>) -> BackendSpec {
+        self.store = Some(store);
+        self
+    }
+
+    /// The effective store (the process store unless pinned).
+    pub fn store(&self) -> Arc<TableStore> {
+        self.store
+            .clone()
+            .unwrap_or_else(|| TableStore::process().clone())
+    }
 }
 
 /// Which native engine a worker builds (mirror of config::EngineKind minus
@@ -39,7 +98,8 @@ pub enum NativeEngineKind {
 }
 
 impl NativeEngineKind {
-    fn to_choice(self) -> EngineChoice {
+    /// The model-layer engine choice this kind builds.
+    pub fn to_choice(self) -> EngineChoice {
         match self {
             NativeEngineKind::Dm => EngineChoice::Dm,
             NativeEngineKind::Pcilt => EngineChoice::Pcilt,
@@ -64,18 +124,21 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Build from a spec (call inside the worker thread).
+    /// Build from a spec (call inside the worker thread). Table engines
+    /// borrow through the spec's store, so every worker of every pool that
+    /// shares a store shares one copy of each distinct table.
     pub fn build(spec: &BackendSpec) -> Result<Backend> {
-        match spec {
-            BackendSpec::Native { params, engine } => {
+        match &spec.kind {
+            BackendKind::Native { params, engine } => {
                 // Intra-batch parallelism is opt-in under a worker pool
                 // (see `parallel::serving_threads`): N workers x auto
                 // threads would oversubscribe the machine.
-                let model = QuantCnn::new(params.clone(), engine.to_choice())
-                    .with_threads(crate::pcilt::parallel::serving_threads());
+                let model =
+                    QuantCnn::with_store(params.clone(), engine.to_choice(), &spec.store())
+                        .with_threads(crate::pcilt::parallel::serving_threads());
                 Ok(Backend::Native(model))
             }
-            BackendSpec::Hlo { bundle, engine } => {
+            BackendKind::Hlo { bundle, engine } => {
                 let ctx = PjrtContext::cpu()?;
                 let mut models = Vec::new();
                 for b in bundle.batches_for(engine) {
@@ -183,8 +246,12 @@ pub fn process_batch(
             .map(|(i, _)| i)
             .unwrap_or(0);
         // Ignore send errors: client hung up.
-        let _ = req.reply.send(InferResponse {
-            id: req.id,
+        let InferRequest {
+            id, model, reply, ..
+        } = req;
+        let _ = reply.send(InferResponse {
+            id,
+            model,
             logits: lg,
             class,
             latency_ns,
@@ -202,10 +269,7 @@ mod tests {
 
     fn native_spec(engine: NativeEngineKind) -> BackendSpec {
         let mut rng = Rng::new(11);
-        BackendSpec::Native {
-            params: random_params(4, &mut rng),
-            engine,
-        }
+        BackendSpec::native(random_params(4, &mut rng), engine)
     }
 
     fn codes(n: usize, seed: u64) -> Vec<Tensor4<u8>> {
@@ -276,17 +340,34 @@ mod tests {
     }
 
     #[test]
+    fn spec_store_and_model_label_flow_through() {
+        // Engines must borrow through the spec's pinned store...
+        let store = Arc::new(TableStore::new());
+        let spec = native_spec(NativeEngineKind::Pcilt)
+            .for_model("resnet")
+            .with_store(store.clone());
+        let backend = Backend::build(&spec).unwrap();
+        assert!(
+            store.stats().builds > 0,
+            "pinned store saw no builds: {:?}",
+            store.stats()
+        );
+        // ...and responses echo the request's model label.
+        let mut cs = codes(1, 9);
+        let (req, rx) = InferRequest::new(0, cs.remove(0));
+        let req = req.with_model("resnet");
+        process_batch(&backend, vec![req], |_| {}).unwrap();
+        assert_eq!(rx.recv().unwrap().model, "resnet");
+    }
+
+    #[test]
     fn hlo_backend_pads_odd_batches() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         let Ok(bundle) = ArtifactBundle::load(&dir) else {
             eprintln!("skipping: artifacts not built");
             return;
         };
-        let backend = Backend::build(&BackendSpec::Hlo {
-            bundle,
-            engine: "pcilt".to_string(),
-        })
-        .unwrap();
+        let backend = Backend::build(&BackendSpec::hlo(bundle, "pcilt")).unwrap();
         // Batch of 3: must pad to the b8 artifact (or run b1 x3) and still
         // return exactly 3 results.
         let cs = codes(3, 5);

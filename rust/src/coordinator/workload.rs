@@ -9,6 +9,8 @@ use std::time::{Duration, Instant};
 use crate::tensor::{Shape4, Tensor4};
 use crate::util::prng::Rng;
 
+use super::registry::{ModelRegistry, RegistryError};
+use super::router::RouteError;
 use super::server::{Server, SubmitError};
 
 /// Result of a workload run.
@@ -59,6 +61,61 @@ pub fn run_poisson(
         }
     }
     // Drain all responses.
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    WorkloadReport {
+        offered: accepted + rejected,
+        accepted,
+        rejected,
+        wall_s: wall,
+        offered_rps: (accepted + rejected) as f64 / wall,
+    }
+}
+
+/// Open-loop Poisson arrivals round-robined across every model of a
+/// [`ModelRegistry`] — the mixed-traffic fleet scenario. Each request is
+/// shaped for its target model (per-model image size and cardinality).
+pub fn run_poisson_models(
+    registry: &ModelRegistry,
+    rate_rps: f64,
+    total: usize,
+    seed: u64,
+) -> WorkloadReport {
+    assert!(rate_rps > 0.0);
+    let names: Vec<String> = registry.models().iter().map(|s| s.to_string()).collect();
+    assert!(!names.is_empty());
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let mut rxs = Vec::with_capacity(total);
+    let mut next_arrival = Instant::now();
+    for i in 0..total {
+        let gap = rng.exponential(rate_rps);
+        next_arrival += Duration::from_secs_f64(gap);
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        let name = &names[i % names.len()];
+        let entry = registry.model(name).expect("registered model");
+        let img = entry.params.img;
+        let bits = entry.params.act_bits;
+        let codes = Tensor4::random_activations(Shape4::new(1, img, img, 1), bits, &mut rng);
+        match registry.route(Some(name), None, codes) {
+            Ok((_, rx)) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(RegistryError::Route(RouteError::Submit(SubmitError::Overloaded))) => {
+                rejected += 1
+            }
+            Err(RegistryError::Route(RouteError::Submit(SubmitError::Closed))) => break,
+            Err(e) => panic!("workload routing failed: {e}"),
+        }
+    }
     for rx in rxs {
         let _ = rx.recv();
     }
@@ -136,10 +193,7 @@ mod tests {
         let mut rng = Rng::new(31);
         Arc::new(
             Server::start(
-                BackendSpec::Native {
-                    params: random_params(4, &mut rng),
-                    engine: NativeEngineKind::Pcilt,
-                },
+                BackendSpec::native(random_params(4, &mut rng), NativeEngineKind::Pcilt),
                 &ServerOpts {
                     workers: 2,
                     max_batch: 8,
@@ -177,5 +231,44 @@ mod tests {
         let r = run_closed_loop(&s, 4, 25, 16, 4, 3);
         assert_eq!(r.offered, 100);
         assert_eq!(r.accepted, 100); // queue is big enough, nothing shed
+    }
+
+    #[test]
+    fn poisson_models_round_robins_the_fleet() {
+        use crate::config::{EngineKind, ModelConfig};
+        use crate::coordinator::registry::ModelRegistry;
+        use crate::pcilt::store::TableStore;
+        let cfg = |name: &str, seed: u64| ModelConfig {
+            name: name.to_string(),
+            engine: EngineKind::Pcilt,
+            act_bits: 4,
+            seed,
+            head_seed: None,
+            artifact_dir: None,
+        };
+        let store = Arc::new(TableStore::new());
+        let reg = ModelRegistry::start_with_store(
+            &[cfg("a", 1), cfg("b", 2)],
+            &ServerOpts {
+                workers: 2,
+                max_batch: 8,
+                batch_deadline: Duration::from_millis(1),
+                queue_capacity: 256,
+            },
+            store,
+        )
+        .unwrap();
+        let r = run_poisson_models(&reg, 2000.0, 40, 9);
+        assert_eq!(r.offered, 40);
+        assert!(r.accepted > 0);
+        // both models saw traffic (20 each when nothing is shed)
+        let per_model = reg.metrics();
+        let total: u64 = per_model.iter().map(|(_, m)| m.completed).sum();
+        assert_eq!(total as usize, r.accepted);
+        if r.rejected == 0 {
+            for (name, m) in &per_model {
+                assert_eq!(m.completed, 20, "model {name} completed {}", m.completed);
+            }
+        }
     }
 }

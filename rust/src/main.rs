@@ -11,7 +11,10 @@ use pcilt::asic::{
 };
 use pcilt::cli::{Args, USAGE};
 use pcilt::config::{network_from_document, Document, EngineKind, PlannerMode, ServeConfig};
-use pcilt::coordinator::{run_poisson, BackendSpec, NativeEngineKind, Server, ServerOpts};
+use pcilt::coordinator::{
+    plan_model_sharing, run_poisson, run_poisson_models, BackendSpec, ModelRegistry,
+    NativeEngineKind, Server, ServerOpts,
+};
 use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCnn};
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec};
@@ -125,6 +128,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    let opts = ServerOpts {
+        workers: cfg.workers,
+        max_batch: cfg.max_batch,
+        batch_deadline: Duration::from_micros(cfg.batch_deadline_us),
+        queue_capacity: cfg.queue_capacity,
+    };
+
+    // A `[[models]]` list switches to the multi-model registry: one pool
+    // per named model, all borrowing tables from the shared process store.
+    if !cfg.models.is_empty() {
+        return cmd_serve_multi(&cfg, &opts, &cache_dir);
+    }
+
     let bundle = ArtifactBundle::load(Path::new(&cfg.artifact_dir)).with_context(|| {
         format!(
             "loading artifacts from '{}'; run `make artifacts` first",
@@ -157,13 +173,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let spec = match cfg.engine {
-        EngineKind::Hlo => BackendSpec::Hlo {
-            bundle,
-            engine: "pcilt".to_string(),
-        },
-        native => BackendSpec::Native {
-            params: bundle.params.clone(),
-            engine: match native {
+        EngineKind::Hlo => BackendSpec::hlo(bundle, "pcilt"),
+        native => BackendSpec::native(
+            bundle.params.clone(),
+            match native {
                 EngineKind::Dm => NativeEngineKind::Dm,
                 EngineKind::Pcilt => NativeEngineKind::Pcilt,
                 EngineKind::Segment => NativeEngineKind::Segment { seg_n: 2 },
@@ -171,13 +184,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 EngineKind::Auto => NativeEngineKind::Auto,
                 EngineKind::Hlo => unreachable!(),
             },
-        },
-    };
-    let opts = ServerOpts {
-        workers: cfg.workers,
-        max_batch: cfg.max_batch,
-        batch_deadline: Duration::from_micros(cfg.batch_deadline_us),
-        queue_capacity: cfg.queue_capacity,
+        ),
     };
     log::info!(
         "serving engine={} workers={} rate={}rps requests={}",
@@ -205,6 +212,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("{}", metrics.report());
     if cfg.tables.persist {
         match TableStore::process().save(&cache_dir) {
+            Ok(r) => log::info!(
+                "tables: persisted {} entries to {}",
+                r.entries,
+                r.bin_path.display()
+            ),
+            Err(e) => log::warn!("tables: failed to persist cache: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Multi-model serving: start the registry over the `[[models]]` list,
+/// drive a round-robin Poisson workload across the fleet, and report
+/// per-model metrics plus the shared-store counters — including how many
+/// table keys deduplicated across models.
+fn cmd_serve_multi(cfg: &ServeConfig, opts: &ServerOpts, cache_dir: &Path) -> Result<()> {
+    let names: Vec<&str> = cfg.models.iter().map(|m| m.name.as_str()).collect();
+    log::info!(
+        "serving {} models [{}] workers={} rate={}rps requests={}",
+        cfg.models.len(),
+        names.join(", "),
+        cfg.workers,
+        cfg.rate_rps,
+        cfg.total_requests
+    );
+    let registry = ModelRegistry::start(&cfg.models, opts)?;
+    let report = run_poisson_models(&registry, cfg.rate_rps, cfg.total_requests, 0xBEEF);
+    println!(
+        "--- workload (round-robin over {} models) ---",
+        cfg.models.len()
+    );
+    println!(
+        "offered {} ({:.0} rps), accepted {}, shed {}",
+        report.offered, report.offered_rps, report.accepted, report.rejected
+    );
+    for (name, m) in registry.metrics() {
+        let entry = registry.model(&name).expect("registered model");
+        println!("--- model {name} ({}) ---", entry.engine);
+        println!("{}", m.report());
+    }
+    println!("--- shared table store ---");
+    println!("{}", registry.store().stats().report());
+    println!(
+        "cross-model dedup: {} table keys resolved to tables other models already built",
+        registry.cross_model_dedup()
+    );
+    if cfg.tables.persist {
+        match TableStore::process().save(cache_dir) {
             Ok(r) => log::info!(
                 "tables: persisted {} entries to {}",
                 r.entries,
@@ -244,6 +299,35 @@ fn cmd_tables(args: &Args) -> Result<()> {
                     }
                 }
                 Err(e) => println!("no readable table cache at {}: {e}", cache_dir.display()),
+            }
+            // With a [[models]] config, also predict cross-model sharing:
+            // how many table keys the fleet dedups to single copies.
+            if !cfg.models.is_empty() {
+                // Plan with the same process defaults `pcilt serve` would
+                // install, so `auto` models resolve to the engines (and
+                // therefore table keys) serving actually builds.
+                pcilt::pcilt::planner::set_default_policy(cfg.planner.to_policy());
+                pcilt::pcilt::planner::set_default_plan_batch(cfg.max_batch);
+                println!("\ncross-model table sharing ({} models):", cfg.models.len());
+                match plan_model_sharing(&cfg.models) {
+                    Ok(rows) => {
+                        let mut total = 0u64;
+                        let mut shared = 0u64;
+                        for r in &rows {
+                            total += r.keys;
+                            shared += r.shared;
+                            println!(
+                                "  {:<16} {} table keys, {} shared with earlier models",
+                                r.model, r.keys, r.shared
+                            );
+                        }
+                        println!(
+                            "  predicted cross_model_dedup: {shared} of {total} keys \
+                             resolve to already-built tables"
+                        );
+                    }
+                    Err(e) => println!("  analysis unavailable: {e}"),
+                }
             }
             Ok(())
         }

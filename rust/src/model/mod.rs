@@ -9,8 +9,8 @@
 use std::sync::Arc;
 
 use crate::pcilt::engine::{ConvEngine, ConvGeometry};
-use crate::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
-use crate::pcilt::store::TableStore;
+use crate::pcilt::planner::{EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
+use crate::pcilt::store::{TableKey, TableStore};
 use crate::pcilt::{parallel, ConvFunc, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
 use crate::tensor::{max_pool2d, Shape4, Tensor4};
 
@@ -264,6 +264,60 @@ fn pool_codes(x: &Tensor4<u8>) -> Tensor4<u8> {
     max_pool2d(&as_i32).map(|v| v as u8)
 }
 
+/// Deterministic random-weight params from a seed — the `[[models]]`
+/// "random" source. Two models built from the same seed share identical
+/// conv weights (a shared backbone), so their lookup tables deduplicate to
+/// one copy in a shared [`TableStore`].
+pub fn random_params_seeded(act_bits: u32, seed: u64) -> ModelParams {
+    random_params(act_bits, &mut crate::util::prng::Rng::new(seed))
+}
+
+/// Re-randomize only the dense head: the "fine-tuned head over a shared
+/// backbone" model variant. Conv weights (and therefore every lookup
+/// table) stay byte-identical to the base model; only `w3` changes.
+pub fn randomize_head(params: &mut ModelParams, seed: u64) {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    for v in params.w3.iter_mut() {
+        *v = rng.range_i64(-127, 127) as i8;
+    }
+}
+
+/// The store keys the engines of `choice` would borrow for this model's
+/// conv layers (table-free layers, e.g. DM, contribute nothing). Mirrors
+/// exactly what [`QuantCnn::with_store`] builds — same planner defaults
+/// for `Auto`, same key constructors — so the multi-model registry can
+/// account cross-model sharing without instrumenting every engine
+/// constructor.
+pub fn planned_table_keys(
+    params: &ModelParams,
+    choice: &EngineChoice,
+    store: &Arc<TableStore>,
+) -> Vec<TableKey> {
+    let batch = crate::pcilt::planner::default_plan_batch();
+    let [s1, s2] = layer_specs(params, batch);
+    let layers: [(&Tensor4<i8>, LayerSpec); 2] = [(&params.w1, s1), (&params.w2, s2)];
+    let ids: Vec<EngineId> = match choice {
+        EngineChoice::Dm => vec![EngineId::Dm; 2],
+        EngineChoice::Pcilt => vec![EngineId::Pcilt; 2],
+        EngineChoice::Segment { seg_n } => vec![EngineId::Segment { seg_n: *seg_n }; 2],
+        EngineChoice::Shared => vec![EngineId::Shared; 2],
+        EngineChoice::Auto => {
+            let planner = EnginePlanner::with_store(
+                crate::pcilt::planner::default_policy(),
+                store.clone(),
+            );
+            layers
+                .iter()
+                .map(|&(w, s)| planner.plan_layer(&s, Some(w)).chosen)
+                .collect()
+        }
+    };
+    ids.iter()
+        .zip(layers.iter())
+        .filter_map(|(id, &(w, s))| id.table_key(w, &s))
+        .collect()
+}
+
 /// Build a random-weight ModelParams for tests/benches (no artifacts
 /// needed).
 pub fn random_params(act_bits: u32, rng: &mut crate::util::prng::Rng) -> ModelParams {
@@ -418,6 +472,43 @@ mod tests {
         );
         let codes = random_codes(2, 1, &mut rng);
         assert_eq!(model.forward(&codes).len(), 2);
+    }
+
+    #[test]
+    fn seeded_params_are_deterministic_and_head_randomization_is_local() {
+        let a = random_params_seeded(4, 7);
+        let b = random_params_seeded(4, 7);
+        assert_eq!(a.w1.data(), b.w1.data());
+        assert_eq!(a.w2.data(), b.w2.data());
+        assert_eq!(a.w3, b.w3);
+        let mut tuned = random_params_seeded(4, 7);
+        randomize_head(&mut tuned, 99);
+        // conv backbone byte-identical, head changed
+        assert_eq!(a.w1.data(), tuned.w1.data());
+        assert_eq!(a.w2.data(), tuned.w2.data());
+        assert_ne!(a.w3, tuned.w3);
+    }
+
+    #[test]
+    fn planned_table_keys_match_store_contents() {
+        // Keys predicted for a model == keys actually registered when the
+        // model builds through the store (the registry's dedup accounting
+        // relies on this agreement).
+        let params = random_params_seeded(4, 11);
+        let store = Arc::new(TableStore::new());
+        let keys = planned_table_keys(&params, &EngineChoice::Pcilt, &store);
+        assert_eq!(keys.len(), 2, "two conv layers, two dense keys");
+        let _m = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+        for k in &keys {
+            assert!(store.contains(*k), "predicted key missing after build");
+        }
+        assert_eq!(store.stats().entries as usize, keys.len());
+        // DM is table-free
+        assert!(planned_table_keys(&params, &EngineChoice::Dm, &store).is_empty());
+        // a fine-tuned head does not change the conv keys
+        let mut tuned = params.clone();
+        randomize_head(&mut tuned, 5);
+        assert_eq!(planned_table_keys(&tuned, &EngineChoice::Pcilt, &store), keys);
     }
 
     #[test]

@@ -625,7 +625,10 @@ pub fn registry(
             n
         }
         None => {
-            let max_card = (1u64 << spec.weight_bits).saturating_sub(1).max(1);
+            // A b-bit weight code has 2^b distinct values (`pcilt::table`
+            // builds `2^bits` entries per table); the old `2^b - 1` bound
+            // undercounted the blind shared-table estimate by one value.
+            let max_card = (1u64 << spec.weight_bits).max(1);
             max_card.min(positions * oc)
         }
     };
@@ -909,6 +912,40 @@ mod tests {
         assert!(c.infeasible.is_some());
         // but they are still enumerated (registry completeness)
         assert!(plan.candidates.len() >= 10);
+    }
+
+    #[test]
+    fn planner_table_bytes_match_real_dense_build() {
+        // The planner's dense-PCILT memory estimate must equal what
+        // `LayerTables::build` actually allocates: `entries` i32 canonical
+        // values plus the same-sized channels-last mirror (8 B per entry),
+        // and the build-eval count must match `LayerTables::build_evals`.
+        use crate::pcilt::table::LayerTables;
+        let mut rng = Rng::new(29);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 8, &mut rng);
+        let s = spec(16, 16, 2, 4, 3, 4);
+        let plan = EnginePlanner::new(PlannerPolicy::default()).plan_layer(&s, Some(&w));
+        let c = plan.candidate(EngineId::Pcilt).unwrap();
+        let t = LayerTables::build(&w, 4, &ConvFunc::Mul);
+        assert_eq!(c.table_bytes, t.entries() as f64 * 8.0);
+        assert_eq!(c.build_evals, t.build_evals);
+    }
+
+    #[test]
+    fn blind_shared_bound_is_two_to_the_weight_bits() {
+        // Cardinality off-by-one regression: the blind (no-weights) shared
+        // estimate bounds unique weight values by 2^weight_bits — a b-bit
+        // code has 2^b values, not 2^b - 1. Layer large enough that
+        // positions*oc does not clamp the bound: 3*3*4 * 32 = 1152 > 256.
+        let s = spec(32, 32, 4, 32, 3, 2);
+        let cands = registry(&s, &PlannerPolicy::default(), None, None);
+        let shared = cands.iter().find(|c| c.id == EngineId::Shared).unwrap();
+        let card = 1u64 << s.act_bits;
+        let unique = 1u64 << s.weight_bits; // 256, NOT 255
+        let expect =
+            (unique * card) as f64 * 4.0 + (s.out_ch * s.geom.kh * s.geom.kw * s.in_ch) as f64;
+        assert_eq!(shared.table_bytes, expect);
+        assert_eq!(shared.build_evals, unique * card);
     }
 
     #[test]

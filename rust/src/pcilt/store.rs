@@ -370,6 +370,10 @@ pub struct TableStoreStats {
     pub evictions: u64,
     /// Current byte budget (0 = unlimited).
     pub budget_bytes: u64,
+    /// Table keys one model resolved to entries another model had already
+    /// registered — the fleet-level dedup the multi-model registry
+    /// accounts (each shared key is one table copy NOT duplicated).
+    pub cross_model_dedup: u64,
 }
 
 impl TableStoreStats {
@@ -377,7 +381,8 @@ impl TableStoreStats {
     pub fn report(&self) -> String {
         use crate::util::stats::fmt_bytes;
         format!(
-            "tables: {} entries ({}), {} hits, {} misses, {} builds, {} loaded, {} evicted",
+            "tables: {} entries ({}), {} hits, {} misses, {} builds, {} loaded, {} evicted, \
+             {} cross-model dedups",
             self.entries,
             fmt_bytes(self.bytes),
             self.hits,
@@ -385,6 +390,7 @@ impl TableStoreStats {
             self.builds,
             self.loads,
             self.evictions,
+            self.cross_model_dedup,
         )
     }
 }
@@ -402,6 +408,7 @@ struct Inner {
     builds: u64,
     loads: u64,
     evictions: u64,
+    cross_model_dedup: u64,
     peak_bytes: f64,
     budget_bytes: u64,
 }
@@ -479,6 +486,7 @@ impl TableStore {
                 builds: 0,
                 loads: 0,
                 evictions: 0,
+                cross_model_dedup: 0,
                 peak_bytes: 0.0,
                 budget_bytes,
             }),
@@ -513,6 +521,15 @@ impl TableStore {
     /// which must not skew the hit/miss counters while scoring.
     pub fn contains(&self, key: TableKey) -> bool {
         self.inner.lock().unwrap().entries.contains_key(&key.0)
+    }
+
+    /// Record `n` cross-model table dedups. The multi-model registry calls
+    /// this when a model's planned table keys resolve to entries earlier
+    /// models already registered — the store itself cannot attribute a hit
+    /// to a model, so attribution lives with the registry and the fleet
+    /// total surfaces here (metrics reports, `pcilt tables stats`).
+    pub fn note_cross_model_dedup(&self, n: u64) {
+        self.inner.lock().unwrap().cross_model_dedup += n;
     }
 
     /// Counting lookup without a builder.
@@ -671,6 +688,7 @@ impl TableStore {
             builds: g.builds,
             loads: g.loads,
             evictions: g.evictions,
+            cross_model_dedup: g.cross_model_dedup,
             budget_bytes: g.budget_bytes,
         }
     }
@@ -688,6 +706,7 @@ impl TableStore {
             builds: 0,
             loads: 0,
             evictions: 0,
+            cross_model_dedup: 0,
             peak_bytes: 0.0,
             budget_bytes: budget,
         };
@@ -1282,5 +1301,17 @@ mod tests {
         let r = store.stats().report();
         assert!(r.contains("1 entries"));
         assert!(r.contains("1 builds"));
+        assert!(r.contains("cross-model"));
+    }
+
+    #[test]
+    fn cross_model_dedup_accumulates_and_clears() {
+        let store = TableStore::new();
+        assert_eq!(store.stats().cross_model_dedup, 0);
+        store.note_cross_model_dedup(2);
+        store.note_cross_model_dedup(1);
+        assert_eq!(store.stats().cross_model_dedup, 3);
+        store.clear();
+        assert_eq!(store.stats().cross_model_dedup, 0);
     }
 }

@@ -98,10 +98,7 @@ fn serving_hlo_pool_end_to_end() {
     let act_bits = b.params.act_bits;
     let server = Arc::new(
         Server::start(
-            BackendSpec::Hlo {
-                bundle: b.clone(),
-                engine: "pcilt".into(),
-            },
+            BackendSpec::hlo(b.clone(), "pcilt"),
             &ServerOpts {
                 workers: 2,
                 max_batch: 8,
@@ -125,10 +122,7 @@ fn serving_answers_match_native_under_concurrency() {
     let native = QuantCnn::new(b.params.clone(), EngineChoice::Pcilt);
     let server = Arc::new(
         Server::start(
-            BackendSpec::Hlo {
-                bundle: b.clone(),
-                engine: "pcilt".into(),
-            },
+            BackendSpec::hlo(b.clone(), "pcilt"),
             &ServerOpts {
                 workers: 3,
                 max_batch: 4,

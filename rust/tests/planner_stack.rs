@@ -128,10 +128,7 @@ fn auto_backend_serves_dm_identical_answers() {
     let reference = QuantCnn::new(params.clone(), EngineChoice::Dm);
     let server = Arc::new(
         Server::start(
-            BackendSpec::Native {
-                params,
-                engine: NativeEngineKind::Auto,
-            },
+            BackendSpec::native(params, NativeEngineKind::Auto),
             &ServerOpts {
                 workers: 2,
                 max_batch: 8,

@@ -130,10 +130,7 @@ fn serving_batch_composition_invariance() {
     let native = QuantCnn::new(params.clone(), EngineChoice::Pcilt);
     let server = Arc::new(
         Server::start(
-            BackendSpec::Native {
-                params,
-                engine: NativeEngineKind::Pcilt,
-            },
+            BackendSpec::native(params, NativeEngineKind::Pcilt),
             &ServerOpts {
                 workers: 2,
                 max_batch: 8,
