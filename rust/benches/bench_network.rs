@@ -1,0 +1,151 @@
+//! Depth-scaling benchmark for the NetworkSpec → CompiledNetwork API:
+//! 2-, 4- and 8-conv layer graphs with planner-chosen (auto) engines per
+//! stage, measuring end-to-end imgs/sec, the per-stage engine mix the
+//! planner settled on, and the lookup-table bytes each depth holds.
+//!
+//! This is the scenario the seed repo could not express: the PCILT/DM
+//! crossover moves with depth (shrinking maps, growing channel counts),
+//! so a real network wants a *different* engine at every stage. Results
+//! land in the JSON file named by `PCILT_BENCH_JSON` so CI tracks the
+//! trajectory (`BENCH_network.json`).
+
+use std::sync::Arc;
+
+use pcilt::model::{EngineChoice, NetworkSpec, StageSpec};
+use pcilt::pcilt::TableStore;
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::timing::{bench, section, BenchOpts, BenchResult};
+
+/// `PCILT_BENCH_QUICK=1` shrinks the measurement budget (CI smoke runs).
+fn bench_opts() -> BenchOpts {
+    if std::env::var("PCILT_BENCH_QUICK").is_ok() {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    }
+}
+
+const ACT_BITS: u32 = 2;
+const IMG: usize = 36;
+const BATCH: usize = 8;
+
+/// A `depth`-conv graph: conv(k3)+requant per stage, one 2x2 pool at the
+/// end, dense head. IMG=36 leaves room for 8 convs (36 - 2*8 = 20).
+fn depth_spec(depth: usize) -> NetworkSpec {
+    let mut stages: Vec<StageSpec> = (0..depth)
+        .flat_map(|_| {
+            [
+                StageSpec::Conv {
+                    out_ch: 8,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Auto,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+            ]
+        })
+        .collect();
+    stages.push(StageSpec::MaxPool { k: 2 });
+    stages.push(StageSpec::Dense { classes: 10 });
+    NetworkSpec {
+        act_bits: ACT_BITS,
+        img: IMG,
+        in_ch: 1,
+        stages,
+    }
+}
+
+struct Row {
+    depth: usize,
+    engines: String,
+    table_bytes: f64,
+    imgs_per_sec: f64,
+    result: BenchResult,
+}
+
+fn main() {
+    section("NetworkSpec depth scaling: 2/4/8-conv graphs, auto engines per stage");
+    let opts = bench_opts();
+    let mut rng = Rng::new(7);
+    let codes = Tensor4::random_activations(
+        Shape4::new(BATCH, IMG, IMG, 1),
+        ACT_BITS,
+        &mut rng,
+    );
+    let mut rows = Vec::new();
+    for depth in [2usize, 4, 8] {
+        let spec = depth_spec(depth);
+        let weights = spec.seeded_weights(depth as u64).expect("spec is valid");
+        let store = Arc::new(TableStore::new());
+        let net = spec
+            .compile_with_defaults(&weights, &store)
+            .expect("depth spec compiles");
+        let engines = net.conv_engine_names().join("+");
+        let table_bytes = store.stats().bytes;
+        let result = bench(&format!("{depth}-conv forward (batch {BATCH})"), &opts, || {
+            net.forward(&codes)
+        });
+        println!("{}", result.report());
+        let imgs_per_sec = BATCH as f64 / (result.ns_per_iter() * 1e-9);
+        println!(
+            "depth {depth}: {imgs_per_sec:.0} imgs/sec, engines [{engines}], \
+             tables {table_bytes:.0} B"
+        );
+        rows.push(Row {
+            depth,
+            engines,
+            table_bytes,
+            imgs_per_sec,
+            result,
+        });
+    }
+
+    if rows.len() >= 2 {
+        let first = &rows[0];
+        let last = &rows[rows.len() - 1];
+        println!(
+            "depth {} -> {}: throughput x{:.2}, table bytes x{:.2}",
+            first.depth,
+            last.depth,
+            last.imgs_per_sec / first.imgs_per_sec,
+            if first.table_bytes > 0.0 {
+                last.table_bytes / first.table_bytes
+            } else {
+                f64::NAN
+            },
+        );
+    }
+
+    if let Ok(path) = std::env::var("PCILT_BENCH_JSON") {
+        write_bench_json(&path, &rows);
+        println!("wrote {path}");
+    }
+}
+
+/// Hand-rolled JSON (no serde offline); names are plain ASCII.
+fn write_bench_json(path: &str, rows: &[Row]) {
+    let mut out = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"depth\": {}, \"engines\": \"{}\", \"table_bytes\": {:.0}, \
+             \"imgs_per_sec\": {:.1}, \"p50_ns\": {:.1}, \"iters\": {}}}",
+            r.depth,
+            r.engines,
+            r.table_bytes,
+            r.imgs_per_sec,
+            r.result.summary.p50,
+            r.result.iters,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_network/depth_scaling\",\n  \"act_bits\": {ACT_BITS},\n  \
+         \"img\": {IMG},\n  \"batch\": {BATCH},\n  \"rows\": [\n{out}\n  ]\n}}\n"
+    );
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("failed to write {path}: {e}");
+    }
+}

@@ -69,7 +69,7 @@ fn model_cfg(name: &str, seed: u64, head_seed: Option<u64>) -> ModelConfig {
         act_bits: 4,
         seed,
         head_seed,
-        artifact_dir: None,
+        ..ModelConfig::default()
     }
 }
 

@@ -162,12 +162,17 @@ SUBCOMMANDS:
                                 a [[models]] list serves N named models
                                 from per-model pools that share one
                                 table store — identical layers across
-                                models dedup to a single table copy)
+                                models dedup to a single table copy; a
+                                model may declare an arbitrary-depth
+                                layer graph as [[models.layers]] entries
+                                of typed stages: conv / pool / requant /
+                                dense, engines planner-chosen per stage)
   plan      print the engine registry with predicted OpCounts/memory per
             layer and the planner's chosen engine (no artifacts needed)
-              --act-bits B      sample-model activation bits (default 4)
+              --act-bits B      sample-model activation bits, 1..=8 (default 4)
               --batch N         planning batch size   (default 8)
-              --config FILE     plan the [network] section instead
+              --config FILE     plan the per-stage layer graphs of a
+                                [[models]] list, or a [network] section
               --img N           input side for [network] plans (default 64)
               --calibrate       micro-benchmark candidates instead of the
                                 analytic model
@@ -188,7 +193,7 @@ SUBCOMMANDS:
               --cache-dir DIR   cache location (default <artifacts>/table_cache)
               --artifacts DIR   model to prebuild for (default artifacts;
                                 falls back to the seeded sample model)
-              --act-bits B      sample-model activation bits (default 4)
+              --act-bits B      sample-model activation bits, 1..=8 (default 4)
               --batch N         planning batch size   (default: max_batch)
               --threads N       parallel build workers (default 0 = auto)
               --budget-mb N     byte budget while building (default 0 = off)

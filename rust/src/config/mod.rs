@@ -8,6 +8,8 @@ pub mod toml;
 
 use std::path::Path;
 
+use crate::model::network::StageSpec;
+use crate::model::EngineChoice;
 use crate::pcilt::memory::NetworkSpec;
 use crate::pcilt::planner::PlannerPolicy;
 
@@ -167,7 +169,9 @@ impl PlannerConfig {
 pub struct ModelConfig {
     /// Routing name; requests carry it in their `model` field.
     pub name: String,
-    /// Engine its pool serves with (`auto` = planner-selected).
+    /// Engine its pool serves with (`auto` = planner-selected). For
+    /// layer-graph models this is the default for conv stages that don't
+    /// declare their own `engine`.
     pub engine: EngineKind,
     /// Activation bit width for the seeded random source (ignored when
     /// `artifact_dir` is set — the bundle's own width wins).
@@ -180,6 +184,13 @@ pub struct ModelConfig {
     pub head_seed: Option<u64>,
     /// Load real weights from this artifact bundle instead of the seed.
     pub artifact_dir: Option<String>,
+    /// Input image side for layer-graph models (`[[models.layers]]`).
+    /// Ignored (fixed at the seed topology's 16) when `layers` is empty.
+    pub img: usize,
+    /// Arbitrary-depth layer graph, declared as `[[models.layers]]`
+    /// entries. Empty = the paper's seed 2-conv topology. Validated at
+    /// config-load time by `NetworkSpec` shape/dataflow propagation.
+    pub layers: Vec<StageSpec>,
 }
 
 impl Default for ModelConfig {
@@ -191,7 +202,25 @@ impl Default for ModelConfig {
             seed: 42,
             head_seed: None,
             artifact_dir: None,
+            img: 16,
+            layers: Vec::new(),
         }
+    }
+}
+
+impl ModelConfig {
+    /// The layer-graph spec this model declares, when `layers` is
+    /// non-empty.
+    pub fn network_spec(&self) -> Option<crate::model::network::NetworkSpec> {
+        if self.layers.is_empty() {
+            return None;
+        }
+        Some(crate::model::network::NetworkSpec {
+            act_bits: self.act_bits,
+            img: self.img,
+            in_ch: 1,
+            stages: self.layers.clone(),
+        })
     }
 }
 
@@ -417,6 +446,32 @@ impl ServeConfig {
                     m.name
                 ));
             }
+            if !m.layers.is_empty() {
+                if m.engine == EngineKind::Hlo {
+                    return invalid(format!(
+                        "model '{}': a layers list cannot be served by the hlo engine",
+                        m.name
+                    ));
+                }
+                if m.artifact_dir.is_some() {
+                    return invalid(format!(
+                        "model '{}': layers use seeded weights; artifact_dir is not supported",
+                        m.name
+                    ));
+                }
+                // Shape/dataflow-validate the declared graph now — a bad
+                // spec should fail at config load, not at pool boot.
+                if let Some(spec) = m.network_spec() {
+                    if let Err(e) = spec.validate() {
+                        return invalid(format!("model '{}': {e}", m.name));
+                    }
+                }
+            } else if m.img != 16 {
+                return invalid(format!(
+                    "model '{}': img is only configurable with a layers list",
+                    m.name
+                ));
+            }
         }
         Ok(())
     }
@@ -449,6 +504,9 @@ fn parse_models(doc: &Document) -> Result<Vec<ModelConfig>, ConfigError> {
         let mut m = ModelConfig::default();
         for key in doc.section_keys(&format!("models.{i}")) {
             let field = &key[prefix.len()..];
+            if field.starts_with("layers.") {
+                continue; // parsed by parse_layers below
+            }
             match field {
                 "name" => {
                     m.name = doc
@@ -465,10 +523,12 @@ fn parse_models(doc: &Document) -> Result<Vec<ModelConfig>, ConfigError> {
                     })?;
                 }
                 "act_bits" => {
+                    // u8 activation codes bound the model layer at 8 bits
+                    // (NetworkSpec::validate enforces the same range).
                     m.act_bits = match doc.get_int(key) {
-                        Some(v) if (1..=12).contains(&v) => v as u32,
+                        Some(v) if (1..=8).contains(&v) => v as u32,
                         _ => {
-                            return invalid(format!("models[{i}].act_bits must be in 1..=12"))
+                            return invalid(format!("models[{i}].act_bits must be in 1..=8"))
                         }
                     };
                 }
@@ -495,6 +555,18 @@ fn parse_models(doc: &Document) -> Result<Vec<ModelConfig>, ConfigError> {
                             .to_string(),
                     );
                 }
+                "img" => {
+                    m.img = match doc.get_int(key) {
+                        Some(v) if (1..=4096).contains(&v) => v as usize,
+                        _ => return invalid(format!("models[{i}].img must be in 1..=4096")),
+                    };
+                }
+                "layers" => {
+                    return invalid(format!(
+                        "models[{i}].layers must be declared as [[models.layers]] entries, \
+                         not a scalar key"
+                    ))
+                }
                 other => {
                     return invalid(format!("unknown [[models]] key '{other}' (entry {i})"))
                 }
@@ -503,9 +575,148 @@ fn parse_models(doc: &Document) -> Result<Vec<ModelConfig>, ConfigError> {
         if m.name.is_empty() {
             return invalid(format!("models[{i}] needs a name"));
         }
+        // The model-level engine is the default for conv stages that don't
+        // name their own (hlo + layers is rejected by validate()).
+        let default_choice = match m.engine {
+            EngineKind::Dm => EngineChoice::Dm,
+            EngineKind::Pcilt => EngineChoice::Pcilt,
+            EngineKind::Segment => EngineChoice::Segment { seg_n: 2 },
+            EngineKind::Shared => EngineChoice::Shared,
+            EngineKind::Auto | EngineKind::Hlo => EngineChoice::Auto,
+        };
+        m.layers = parse_layers(doc, i, default_choice)?;
         out.push(m);
     }
     Ok(out)
+}
+
+/// Parse one model's `[[models.layers]]` list (`models.N.layers.M.*` keys
+/// after the nested array-of-tables expansion in [`toml::Document`]) into
+/// typed [`StageSpec`]s. A conv entry may carry a `scale` key, which
+/// desugars into a `Requantize` stage directly after it; a conv without an
+/// `engine` key serves with `default` (the model-level engine).
+fn parse_layers(
+    doc: &Document,
+    i: usize,
+    default: EngineChoice,
+) -> Result<Vec<StageSpec>, ConfigError> {
+    let arr = format!("models.{i}.layers");
+    let n = doc.array_len(&arr);
+    let mut out = Vec::with_capacity(n);
+    for j in 0..n {
+        let prefix = format!("{arr}.{j}");
+        let at = |field: &str| format!("{prefix}.{field}");
+        let ty = doc.get_str(&at("type")).ok_or_else(|| {
+            ConfigError::Invalid(format!(
+                "models[{i}].layers[{j}] needs a type (conv|pool|requant|dense)"
+            ))
+        })?;
+        let allowed: &[&str] = match ty {
+            "conv" => &["type", "out_ch", "kernel", "stride", "engine", "seg_n", "scale"],
+            "pool" => &["type", "k"],
+            "requant" => &["type", "scale"],
+            "dense" => &["type", "classes"],
+            other => {
+                return invalid(format!(
+                    "models[{i}].layers[{j}]: unknown type '{other}' \
+                     (expected conv|pool|requant|dense)"
+                ))
+            }
+        };
+        for key in doc.section_keys(&prefix) {
+            let field = &key[prefix.len() + 1..];
+            if !allowed.contains(&field) {
+                return invalid(format!(
+                    "models[{i}].layers[{j}]: unknown '{ty}' key '{field}'"
+                ));
+            }
+        }
+        let layer_int = |field: &str, default: i64, lo: i64, hi: i64| match doc.get(&at(field)) {
+            None => Ok(default),
+            Some(v) => v.as_int().filter(|x| (lo..=hi).contains(x)).ok_or_else(|| {
+                ConfigError::Invalid(format!(
+                    "models[{i}].layers[{j}].{field} must be an integer in {lo}..={hi}"
+                ))
+            }),
+        };
+        match ty {
+            "conv" => {
+                if doc.get(&at("out_ch")).is_none() {
+                    return invalid(format!("models[{i}].layers[{j}]: conv needs out_ch"));
+                }
+                let out_ch = layer_int("out_ch", 0, 1, 4096)? as usize;
+                let kernel = layer_int("kernel", 3, 1, 16)? as usize;
+                let stride = layer_int("stride", 1, 1, 8)? as usize;
+                let seg_n = layer_int("seg_n", 2, 1, 16)? as usize;
+                let engine = match doc.get(&at("engine")) {
+                    Some(v) => {
+                        let s = v.as_str().ok_or_else(|| {
+                            ConfigError::Invalid(format!(
+                                "models[{i}].layers[{j}].engine must be a string"
+                            ))
+                        })?;
+                        EngineChoice::parse(s, seg_n).ok_or_else(|| {
+                            ConfigError::Invalid(format!(
+                                "models[{i}].layers[{j}]: unknown engine '{s}' \
+                                 (expected dm|pcilt|segment|shared|auto)"
+                            ))
+                        })?
+                    }
+                    None => match default {
+                        EngineChoice::Segment { .. } => EngineChoice::Segment { seg_n },
+                        other => other,
+                    },
+                };
+                // seg_n on a non-segment conv would be silently ignored —
+                // reject it like any other ineffective key.
+                if doc.get(&at("seg_n")).is_some()
+                    && !matches!(engine, EngineChoice::Segment { .. })
+                {
+                    return invalid(format!(
+                        "models[{i}].layers[{j}]: seg_n only applies to engine = \"segment\""
+                    ));
+                }
+                out.push(StageSpec::Conv {
+                    out_ch,
+                    kernel,
+                    stride,
+                    engine,
+                });
+                if doc.get(&at("scale")).is_some() {
+                    out.push(StageSpec::Requantize {
+                        scale: layer_scale(doc, &at("scale"), i, j)?,
+                    });
+                }
+            }
+            "pool" => {
+                let k = layer_int("k", 2, 2, 16)? as usize;
+                out.push(StageSpec::MaxPool { k });
+            }
+            "requant" => {
+                out.push(StageSpec::Requantize {
+                    scale: layer_scale(doc, &at("scale"), i, j)?,
+                });
+            }
+            "dense" => {
+                if doc.get(&at("classes")).is_none() {
+                    return invalid(format!("models[{i}].layers[{j}]: dense needs classes"));
+                }
+                let classes = layer_int("classes", 0, 2, 65536)? as usize;
+                out.push(StageSpec::Dense { classes });
+            }
+            _ => unreachable!("type matched above"),
+        }
+    }
+    Ok(out)
+}
+
+fn layer_scale(doc: &Document, key: &str, i: usize, j: usize) -> Result<f32, ConfigError> {
+    match doc.get_float(key) {
+        Some(v) if v > 0.0 && v.is_finite() => Ok(v as f32),
+        _ => Err(ConfigError::Invalid(format!(
+            "models[{i}].layers[{j}].scale must be a positive number"
+        ))),
+    }
 }
 
 fn pos_usize(doc: &Document, key: &str) -> Result<usize, ConfigError> {
@@ -783,6 +994,191 @@ head_seed = 99
         assert!(ServeConfig::from_document(&doc).is_err());
         // hlo without artifacts
         let doc = Document::parse("[[models]]\nname = \"a\"\nengine = \"hlo\"").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn model_layers_parse_into_typed_stages() {
+        let doc = Document::parse(
+            r#"
+[[models]]
+name = "deep"
+act_bits = 2
+seed = 9
+img = 20
+[[models.layers]]
+type = "conv"
+out_ch = 8
+kernel = 3
+engine = "pcilt"
+scale = 0.05
+[[models.layers]]
+type = "pool"
+k = 2
+[[models.layers]]
+type = "conv"
+out_ch = 4
+kernel = 3
+engine = "segment"
+seg_n = 4
+[[models.layers]]
+type = "requant"
+scale = 0.1
+[[models.layers]]
+type = "dense"
+classes = 10
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.models.len(), 1);
+        let m = &cfg.models[0];
+        assert_eq!(m.img, 20);
+        // conv+scale desugars to conv followed by requantize
+        assert_eq!(
+            m.layers,
+            vec![
+                StageSpec::Conv {
+                    out_ch: 8,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Pcilt,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::MaxPool { k: 2 },
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Segment { seg_n: 4 },
+                },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::Dense { classes: 10 },
+            ]
+        );
+        let spec = m.network_spec().unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.conv_count(), 2);
+    }
+
+    #[test]
+    fn model_engine_is_the_default_for_unmarked_conv_layers() {
+        let doc = Document::parse(
+            r#"
+[[models]]
+name = "m"
+engine = "dm"
+act_bits = 2
+[[models.layers]]
+type = "conv"
+out_ch = 4
+scale = 0.1
+[[models.layers]]
+type = "conv"
+out_ch = 4
+engine = "pcilt"
+scale = 0.1
+[[models.layers]]
+type = "dense"
+classes = 4
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        let m = &cfg.models[0];
+        assert!(matches!(
+            m.layers[0],
+            StageSpec::Conv { engine: EngineChoice::Dm, .. }
+        ));
+        assert!(matches!(
+            m.layers[2],
+            StageSpec::Conv { engine: EngineChoice::Pcilt, .. }
+        ));
+        // engine = "segment" inherits with the layer's own seg_n
+        let doc = Document::parse(
+            r#"
+[[models]]
+name = "m"
+engine = "segment"
+act_bits = 2
+[[models.layers]]
+type = "conv"
+out_ch = 4
+seg_n = 4
+scale = 0.1
+[[models.layers]]
+type = "dense"
+classes = 4
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert!(matches!(
+            cfg.models[0].layers[0],
+            StageSpec::Conv { engine: EngineChoice::Segment { seg_n: 4 }, .. }
+        ));
+    }
+
+    #[test]
+    fn bad_model_layers_rejected() {
+        let wrap = |layers: &str| {
+            format!("[[models]]\nname = \"m\"\nact_bits = 2\n{layers}")
+        };
+        // unknown type
+        let doc = Document::parse(&wrap("[[models.layers]]\ntype = \"relu\"")).unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // conv without out_ch
+        let doc = Document::parse(&wrap("[[models.layers]]\ntype = \"conv\"")).unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // unknown key for the type
+        let doc =
+            Document::parse(&wrap("[[models.layers]]\ntype = \"pool\"\nout_ch = 4")).unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // unknown engine
+        let doc = Document::parse(&wrap(
+            "[[models.layers]]\ntype = \"conv\"\nout_ch = 4\nengine = \"gpu\"",
+        ))
+        .unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // scalar `layers` key instead of [[models.layers]]
+        let doc = Document::parse("[[models]]\nname = \"m\"\nlayers = [1]").unwrap();
+        let err = ServeConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("[[models.layers]]"), "{err}");
+        // shape/dataflow-invalid graph fails at config load: missing
+        // requantize between conv and dense
+        let doc = Document::parse(&wrap(
+            "[[models.layers]]\ntype = \"conv\"\nout_ch = 4\n\
+             [[models.layers]]\ntype = \"dense\"\nclasses = 4",
+        ))
+        .unwrap();
+        let err = ServeConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("requantize"), "{err}");
+        // img without a layers list
+        let doc = Document::parse("[[models]]\nname = \"m\"\nimg = 32").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        // seg_n on a non-segment conv is ineffective -> loud error
+        let doc = Document::parse(&wrap(
+            "[[models.layers]]\ntype = \"conv\"\nout_ch = 4\nengine = \"pcilt\"\n\
+             seg_n = 4\nscale = 0.1\n[[models.layers]]\ntype = \"dense\"\nclasses = 4",
+        ))
+        .unwrap();
+        let err = ServeConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("seg_n"), "{err}");
+        // a forced segment whose offset space overflows act_bits dies at
+        // config load via NetworkSpec validation (act_bits 2 x seg_n 16)
+        let doc = Document::parse(&wrap(
+            "[[models.layers]]\ntype = \"conv\"\nout_ch = 4\nengine = \"segment\"\n\
+             seg_n = 16\nscale = 0.1\n[[models.layers]]\ntype = \"dense\"\nclasses = 4",
+        ))
+        .unwrap();
+        let err = ServeConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("offset space"), "{err}");
+        // layers cannot be combined with an artifact bundle
+        let doc = Document::parse(&wrap(
+            "artifact_dir = \"x\"\n[[models.layers]]\ntype = \"conv\"\nout_ch = 4\n\
+             scale = 0.1\n[[models.layers]]\ntype = \"dense\"\nclasses = 4",
+        ))
+        .unwrap();
         assert!(ServeConfig::from_document(&doc).is_err());
     }
 

@@ -3,7 +3,9 @@
 //!
 //! Supported: `[section]` and `[section.sub]` headers, `[[name]]`
 //! array-of-tables headers (each occurrence opens table `name.N`, so
-//! `[[models]]` entries parse to `models.0.*`, `models.1.*`, …),
+//! `[[models]]` entries parse to `models.0.*`, `models.1.*`, …) including
+//! nested arrays (`[[models.layers]]` appends to the last `[[models]]`
+//! entry, parsing to `models.N.layers.M.*`),
 //! `key = value` pairs with string / integer / float / boolean /
 //! homogeneous-array values, `#` comments, and blank lines. Unsupported
 //! TOML (multi-line strings, dates, inline tables) is rejected with a
@@ -105,17 +107,48 @@ impl Document {
                     return err(lineno, "unterminated array-of-tables header");
                 };
                 let name = name.trim();
-                if name.is_empty()
-                    || !name
-                        .chars()
-                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
-                {
+                let parts: Vec<&str> = name.split('.').collect();
+                if parts.iter().any(|p| {
+                    p.is_empty()
+                        || !p
+                            .chars()
+                            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+                }) {
                     return err(lineno, format!("invalid array-of-tables name '{name}'"));
                 }
-                let n = doc.arrays.entry(name.to_string()).or_insert(0);
+                // TOML semantics for nested arrays-of-tables: every
+                // intermediate segment must name an already-open array and
+                // refers to its LAST element, so `[[models.layers]]`
+                // appends to the layer list of the most recent
+                // `[[models]]` entry (keys land under `models.N.layers.M`).
+                let mut resolved = String::new();
+                for (pi, part) in parts.iter().enumerate() {
+                    if !resolved.is_empty() {
+                        resolved.push('.');
+                    }
+                    resolved.push_str(part);
+                    if pi + 1 < parts.len() {
+                        match doc.arrays.get(&resolved) {
+                            Some(&n) if n > 0 => {
+                                resolved.push('.');
+                                resolved.push_str(&(n - 1).to_string());
+                            }
+                            _ => {
+                                return err(
+                                    lineno,
+                                    format!(
+                                        "[[{name}]]: '{part}' is not a previously declared \
+                                         [[...]] array"
+                                    ),
+                                )
+                            }
+                        }
+                    }
+                }
+                let n = doc.arrays.entry(resolved.clone()).or_insert(0);
                 let idx = *n;
                 *n += 1;
-                section = format!("{name}.{idx}");
+                section = format!("{resolved}.{idx}");
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -403,7 +436,39 @@ x = 1
     #[test]
     fn bad_array_of_tables_headers_rejected() {
         assert!(Document::parse("[[models]\nname = \"a\"").is_err());
+        // a dotted header whose parent array was never declared
         assert!(Document::parse("[[bad.name]]\nx = 1").is_err());
         assert!(Document::parse("[[]]\nx = 1").is_err());
+        assert!(Document::parse("[[a..b]]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn nested_array_of_tables_attach_to_last_parent() {
+        let doc = Document::parse(
+            r#"
+[[models]]
+name = "a"
+[[models.layers]]
+type = "conv"
+out_ch = 8
+[[models.layers]]
+type = "dense"
+[[models]]
+name = "b"
+[[models.layers]]
+type = "conv"
+out_ch = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.array_len("models"), 2);
+        assert_eq!(doc.array_len("models.0.layers"), 2);
+        assert_eq!(doc.array_len("models.1.layers"), 1);
+        assert_eq!(doc.get_str("models.0.layers.0.type"), Some("conv"));
+        assert_eq!(doc.get_int("models.0.layers.0.out_ch"), Some(8));
+        assert_eq!(doc.get_str("models.0.layers.1.type"), Some("dense"));
+        assert_eq!(doc.get_int("models.1.layers.0.out_ch"), Some(4));
+        // layers before any [[models]] entry are a loud error
+        assert!(Document::parse("[[models.layers]]\ntype = \"conv\"").is_err());
     }
 }

@@ -14,7 +14,9 @@ pub mod workload;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{BoundedQueue, PushError};
-pub use registry::{plan_model_sharing, ModelEntry, ModelRegistry, RegistryError, SharingRow};
+pub use registry::{
+    network_for_model, plan_model_sharing, ModelEntry, ModelRegistry, RegistryError, SharingRow,
+};
 pub use request::{InferRequest, InferResponse};
 pub use router::{RouteError, Router};
 pub use server::{Server, ServerOpts, SubmitError};

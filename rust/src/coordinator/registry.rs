@@ -24,7 +24,11 @@ use std::path::Path;
 use std::sync::{mpsc, Arc};
 
 use crate::config::{EngineKind, ModelConfig};
-use crate::model::{planned_table_keys, random_params_seeded, randomize_head, ModelParams};
+use crate::model::{
+    random_params_seeded, randomize_head, EngineChoice, ModelParams, NetworkPlan, NetworkSpec,
+    NetworkWeights,
+};
+use crate::pcilt::planner::EnginePlanner;
 use crate::pcilt::store::{TableKey, TableStore};
 use crate::runtime::ArtifactBundle;
 use crate::tensor::Tensor4;
@@ -41,11 +45,16 @@ use super::worker::{BackendSpec, NativeEngineKind};
 /// table-sharing bookkeeping.
 pub struct ModelEntry {
     pub name: String,
-    /// Engine pool label (`"auto"` when the planner picks per layer).
+    /// Engine pool label (`"auto"` when the planner picks per stage).
     pub engine: String,
-    pub params: ModelParams,
-    /// Store keys this model's conv layers resolve to (planned before the
-    /// pools built, against the same store, so they match what was built).
+    /// The layer graph this model serves (the seed 2-conv topology for
+    /// legacy `[[models]]` entries and HLO pools).
+    pub spec: NetworkSpec,
+    /// The weights instantiating `spec` (what the pool's workers compile).
+    pub weights: NetworkWeights,
+    /// Store keys this model's conv stages resolve to — read off the same
+    /// network planning pass the pool's compile consumes, so they cannot
+    /// drift from what is actually built.
     pub table_keys: Vec<TableKey>,
     /// How many of `table_keys` were already registered by earlier models
     /// — each one is a table copy this model did NOT duplicate.
@@ -109,6 +118,49 @@ fn load_params(m: &ModelConfig) -> anyhow::Result<ModelParams> {
     Ok(params)
 }
 
+/// Resolve a `[[models]]` entry to the layer graph + weights its pool will
+/// serve: the declared `[[models.layers]]` graph with seeded weights, or
+/// the seed 2-conv topology over the entry's params source. Not for HLO
+/// pools (their compute is the AOT artifact, not a native network).
+pub fn network_for_model(m: &ModelConfig) -> anyhow::Result<(NetworkSpec, NetworkWeights)> {
+    match m.network_spec() {
+        Some(spec) => {
+            spec.validate()
+                .with_context(|| format!("model '{}'", m.name))?;
+            let mut weights = spec
+                .seeded_weights(m.seed)
+                .with_context(|| format!("model '{}'", m.name))?;
+            if let Some(hs) = m.head_seed {
+                weights.randomize_dense(hs);
+            }
+            Ok((spec, weights))
+        }
+        None => {
+            let params = load_params(m)?;
+            let choice = native_kind(m.engine)?.to_choice();
+            Ok(NetworkSpec::quantcnn(&params, choice))
+        }
+    }
+}
+
+/// Plan a model's network against `store` with the process-default
+/// planner policy/batch. The returned plan is both the dedup-accounting
+/// input (its table keys) and, pinned into the pool's `BackendSpec`, the
+/// exact per-stage engines every worker builds — no replanning window.
+fn plan_network(
+    m: &ModelConfig,
+    spec: &NetworkSpec,
+    weights: &NetworkWeights,
+    store: &Arc<TableStore>,
+) -> anyhow::Result<NetworkPlan> {
+    let planner = EnginePlanner::with_store(
+        crate::pcilt::planner::default_policy(),
+        store.clone(),
+    );
+    spec.plan(weights, &planner, crate::pcilt::planner::default_plan_batch())
+        .with_context(|| format!("model '{}': planning", m.name))
+}
+
 /// Map a config engine to the worker-side native kind.
 fn native_kind(engine: EngineKind) -> anyhow::Result<NativeEngineKind> {
     Ok(match engine {
@@ -133,8 +185,10 @@ pub struct SharingRow {
 }
 
 /// Predict cross-model table sharing for a `[[models]]` list without
-/// starting any pools. Plans against a throwaway store, so `auto` models
-/// are priced cold — exactly what the first boot would build.
+/// starting any pools. Each model's planned tables are materialized into
+/// the throwaway store before the next model plans — the sequential store
+/// state a real boot produces, so a later `auto` model whose choice flips
+/// toward an earlier model's resident tables is predicted correctly.
 pub fn plan_model_sharing(models: &[ModelConfig]) -> anyhow::Result<Vec<SharingRow>> {
     let store = Arc::new(TableStore::new());
     let mut seen: HashSet<TableKey> = HashSet::new();
@@ -142,9 +196,12 @@ pub fn plan_model_sharing(models: &[ModelConfig]) -> anyhow::Result<Vec<SharingR
     for m in models {
         let keys = match m.engine {
             EngineKind::Hlo => Vec::new(), // PJRT pools hold no native tables
-            kind => {
-                let params = load_params(m)?;
-                planned_table_keys(&params, &native_kind(kind)?.to_choice(), &store)
+            _ => {
+                let (spec, weights) = network_for_model(m)?;
+                let plan = plan_network(m, &spec, &weights, &store)?;
+                spec.compile_planned(&weights, &plan, &store)
+                    .with_context(|| format!("model '{}': materializing plan", m.name))?;
+                plan.table_keys()
             }
         };
         let shared = keys.iter().filter(|&k| seen.contains(k)).count() as u64;
@@ -183,25 +240,33 @@ impl ModelRegistry {
                 "duplicate model name '{}'",
                 m.name
             );
-            // Account sharing BEFORE this model builds: planned keys are
-            // computed against the store as earlier models left it, which
-            // is the store state this model's own pool will build against.
-            let (spec, params, table_keys) = match m.engine {
+            // Account sharing BEFORE this model builds: keys come from the
+            // same network planning pass the pool's compile consumes,
+            // against the store as earlier models left it — which is the
+            // store state this model's own pool will build against.
+            let (backend, net_spec, weights, table_keys) = match m.engine {
                 EngineKind::Hlo => {
                     let dir = m.artifact_dir.as_deref().unwrap_or("artifacts");
                     let bundle = ArtifactBundle::load(Path::new(dir)).with_context(|| {
                         format!("model '{}': loading artifacts from '{dir}'", m.name)
                     })?;
-                    // PJRT pools hold no native tables; params come from
-                    // the same bundle the pool serves.
-                    let params = bundle.params.clone();
-                    (BackendSpec::hlo(bundle, "pcilt"), params, Vec::new())
+                    // PJRT pools hold no native tables; the spec mirrors
+                    // the bundle's topology for workload bookkeeping.
+                    let (net_spec, weights) =
+                        NetworkSpec::quantcnn(&bundle.params, EngineChoice::Dm);
+                    (BackendSpec::hlo(bundle, "pcilt"), net_spec, weights, Vec::new())
                 }
-                kind => {
-                    let native = native_kind(kind)?;
-                    let params = load_params(m)?;
-                    let keys = planned_table_keys(&params, &native.to_choice(), &store);
-                    (BackendSpec::native(params.clone(), native), params, keys)
+                _ => {
+                    let (net_spec, weights) = network_for_model(m)?;
+                    let plan = plan_network(m, &net_spec, &weights, &store)?;
+                    let keys = plan.table_keys();
+                    (
+                        BackendSpec::network(net_spec.clone(), weights.clone())
+                            .with_plan(plan),
+                        net_spec,
+                        weights,
+                        keys,
+                    )
                 }
             };
             let shared = table_keys.iter().filter(|&k| seen_keys.contains(k)).count() as u64;
@@ -210,7 +275,7 @@ impl ModelRegistry {
             }
             seen_keys.extend(table_keys.iter().copied());
 
-            let spec = spec.for_model(m.name.clone()).with_store(store.clone());
+            let spec = backend.for_model(m.name.clone()).with_store(store.clone());
             let server = Arc::new(Server::start(spec, opts)?);
             log::info!(
                 "registry: model '{}' up ({}, {} table keys, {} shared)",
@@ -226,7 +291,8 @@ impl ModelRegistry {
                 ModelEntry {
                     name: m.name.clone(),
                     engine: pool_name,
-                    params,
+                    spec: net_spec,
+                    weights,
                     table_keys,
                     shared_keys: shared,
                     router,
@@ -342,7 +408,7 @@ mod tests {
             act_bits: 4,
             seed,
             head_seed,
-            artifact_dir: None,
+            ..ModelConfig::default()
         }
     }
 
@@ -406,5 +472,77 @@ mod tests {
         assert_eq!(rows[0].shared, 0);
         assert_eq!(rows[1].keys, rows[1].shared, "identical backbone shares all keys");
         assert!(rows[1].shared >= 1);
+    }
+
+    #[test]
+    fn layer_graph_model_serves_through_registry() {
+        use crate::model::{EngineChoice, StageSpec};
+        // A 3-conv layer-graph model next to a legacy seed-topology model;
+        // both route and answer through the same registry.
+        let deep = ModelConfig {
+            name: "deep".to_string(),
+            engine: EngineKind::Auto,
+            act_bits: 2,
+            seed: 5,
+            img: 20,
+            layers: vec![
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Pcilt,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::MaxPool { k: 2 },
+                StageSpec::Conv {
+                    out_ch: 8,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Auto,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Dm,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::Dense { classes: 5 },
+            ],
+            ..ModelConfig::default()
+        };
+        let store = Arc::new(TableStore::new());
+        let reg = ModelRegistry::start_with_store(
+            &[deep, cfg("legacy", 1, None)],
+            &opts(),
+            store.clone(),
+        )
+        .unwrap();
+        assert_eq!(reg.models(), vec!["deep", "legacy"]);
+        let entry = reg.model("deep").unwrap();
+        assert_eq!(entry.spec.img, 20);
+        assert_eq!(entry.spec.conv_count(), 3);
+        // deep inputs are 20x20 at 2 bits, per its spec
+        let mut rng = crate::util::prng::Rng::new(8);
+        let img = crate::tensor::Tensor4::random_activations(
+            crate::tensor::Shape4::new(1, 20, 20, 1),
+            2,
+            &mut rng,
+        );
+        let (_, rx) = reg.route(Some("deep"), None, img.clone()).unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.model, "deep");
+        assert_eq!(resp.logits.len(), 5);
+        // served output == standalone compile of the entry's spec/weights
+        let standalone = entry
+            .spec
+            .compile_with_defaults(&entry.weights, &Arc::new(TableStore::new()))
+            .unwrap();
+        assert_eq!(resp.logits, standalone.forward(&img)[0]);
+        // compile-time keys are what the shared store actually holds
+        for k in &entry.table_keys {
+            assert!(store.contains(*k), "planned key missing from store");
+        }
     }
 }

@@ -5,7 +5,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::model::{EngineChoice, ModelParams, QuantCnn};
+use crate::model::{
+    CompiledNetwork, EngineChoice, ModelParams, NetworkPlan, NetworkSpec, NetworkWeights,
+};
 use crate::pcilt::store::TableStore;
 use crate::runtime::{ArtifactBundle, CompiledModel, PjrtContext};
 use crate::tensor::{Shape4, Tensor4};
@@ -31,10 +33,16 @@ pub struct BackendSpec {
 /// The compute half of a [`BackendSpec`].
 #[derive(Clone)]
 pub enum BackendKind {
-    /// Rust-native engines over loaded model params.
+    /// Rust-native engines: an arbitrary-depth layer graph + its weights,
+    /// compiled in-thread into a `CompiledNetwork`. When `plan` is
+    /// present (the registry's accounting pass), workers build exactly
+    /// those per-stage engines instead of replanning — the table keys the
+    /// registry counted are the keys serving builds, even if the shared
+    /// store mutates between accounting and worker start.
     Native {
-        params: ModelParams,
-        engine: NativeEngineKind,
+        spec: NetworkSpec,
+        weights: NetworkWeights,
+        plan: Option<NetworkPlan>,
     },
     /// PJRT execution of the AOT artifacts.
     Hlo {
@@ -44,13 +52,34 @@ pub enum BackendKind {
 }
 
 impl BackendSpec {
-    /// Anonymous native backend over the process table store.
+    /// Anonymous native backend over the process table store, serving the
+    /// paper's seed 2-conv topology (the legacy constructor — layer-graph
+    /// models use [`BackendSpec::network`]).
     pub fn native(params: ModelParams, engine: NativeEngineKind) -> BackendSpec {
+        let (spec, weights) = NetworkSpec::quantcnn(&params, engine.to_choice());
+        Self::network(spec, weights)
+    }
+
+    /// Anonymous native backend serving an arbitrary-depth layer graph.
+    pub fn network(spec: NetworkSpec, weights: NetworkWeights) -> BackendSpec {
         BackendSpec {
             model: String::new(),
             store: None,
-            kind: BackendKind::Native { params, engine },
+            kind: BackendKind::Native {
+                spec,
+                weights,
+                plan: None,
+            },
         }
+    }
+
+    /// Pin the per-stage network plan workers compile from (no replanning;
+    /// keys built == keys planned). No-op for HLO backends.
+    pub fn with_plan(mut self, plan: NetworkPlan) -> BackendSpec {
+        if let BackendKind::Native { plan: slot, .. } = &mut self.kind {
+            *slot = Some(plan);
+        }
+        self
     }
 
     /// Anonymous PJRT backend over an artifact bundle.
@@ -112,7 +141,7 @@ impl NativeEngineKind {
 
 /// A built backend, owned by one worker thread.
 pub enum Backend {
-    Native(QuantCnn),
+    Native(CompiledNetwork),
     Hlo {
         /// (batch_size, executable), ascending batch size.
         models: Vec<(usize, CompiledModel)>,
@@ -129,14 +158,25 @@ impl Backend {
     /// shares a store shares one copy of each distinct table.
     pub fn build(spec: &BackendSpec) -> Result<Backend> {
         match &spec.kind {
-            BackendKind::Native { params, engine } => {
-                // Intra-batch parallelism is opt-in under a worker pool
-                // (see `parallel::serving_threads`): N workers x auto
-                // threads would oversubscribe the machine.
-                let model =
-                    QuantCnn::with_store(params.clone(), engine.to_choice(), &spec.store())
-                        .with_threads(crate::pcilt::parallel::serving_threads());
-                Ok(Backend::Native(model))
+            BackendKind::Native {
+                spec: net_spec,
+                weights,
+                plan,
+            } => {
+                // With a pinned plan (registry pools), build exactly the
+                // planned engines; otherwise plan here with the
+                // process-default policy/batch, so every worker builds
+                // what `[planner]` configured. Intra-batch parallelism is
+                // opt-in under a worker pool (see
+                // `parallel::serving_threads`): N workers x auto threads
+                // would oversubscribe the machine.
+                let network = match plan {
+                    Some(p) => net_spec.compile_planned(weights, p, &spec.store()),
+                    None => net_spec.compile_with_defaults(weights, &spec.store()),
+                }
+                .map_err(|e| anyhow::Error::msg(format!("compiling network: {e}")))?
+                .with_threads(crate::pcilt::parallel::serving_threads());
+                Ok(Backend::Native(network))
             }
             BackendKind::Hlo { bundle, engine } => {
                 let ctx = PjrtContext::cpu()?;
@@ -173,9 +213,9 @@ impl Backend {
     /// Run a batch of single-image code tensors; returns per-request logits.
     pub fn infer_batch(&self, codes: &[&Tensor4<u8>]) -> Result<Vec<Vec<i32>>> {
         match self {
-            Backend::Native(model) => {
+            Backend::Native(network) => {
                 let stacked = Self::stack(codes);
-                Ok(model.forward(&stacked))
+                Ok(network.forward(&stacked))
             }
             Backend::Hlo {
                 models,
@@ -214,7 +254,7 @@ impl Backend {
 
     pub fn name(&self) -> String {
         match self {
-            Backend::Native(m) => format!("native-{}", m.engine_name()),
+            Backend::Native(n) => format!("native-{}", n.engine_name()),
             Backend::Hlo { .. } => "hlo".to_string(),
         }
     }
@@ -336,6 +376,60 @@ mod tests {
             assert_eq!(resp.id, i as u64);
             assert_eq!(resp.batch_size, 3);
             assert!(resp.class < 8);
+        }
+    }
+
+    #[test]
+    fn network_backend_serves_arbitrary_depth() {
+        use crate::model::StageSpec;
+        // A 3-conv layer graph served through the worker, bit-identical
+        // to its own standalone compile.
+        let net_spec = NetworkSpec {
+            act_bits: 2,
+            img: 16,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Pcilt,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Dm,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Auto,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::Dense { classes: 5 },
+            ],
+        };
+        let weights = net_spec.seeded_weights(5).unwrap();
+        let store = Arc::new(TableStore::new());
+        let backend = Backend::build(
+            &BackendSpec::network(net_spec.clone(), weights.clone()).with_store(store.clone()),
+        )
+        .unwrap();
+        assert!(backend.name().starts_with("native-"));
+        let mut rng = Rng::new(3);
+        let cs: Vec<Tensor4<u8>> = (0..3)
+            .map(|_| Tensor4::random_activations(Shape4::new(1, 16, 16, 1), 2, &mut rng))
+            .collect();
+        let refs: Vec<&Tensor4<u8>> = cs.iter().collect();
+        let out = backend.infer_batch(&refs).unwrap();
+        assert!(out.iter().all(|l| l.len() == 5));
+        let standalone = net_spec.compile_with_defaults(&weights, &store).unwrap();
+        for (i, c) in cs.iter().enumerate() {
+            assert_eq!(out[i], standalone.forward(c)[0]);
         }
     }
 

@@ -101,8 +101,8 @@ pub fn run_poisson_models(
         }
         let name = &names[i % names.len()];
         let entry = registry.model(name).expect("registered model");
-        let img = entry.params.img;
-        let bits = entry.params.act_bits;
+        let img = entry.spec.img;
+        let bits = entry.spec.act_bits;
         let codes = Tensor4::random_activations(Shape4::new(1, img, img, 1), bits, &mut rng);
         match registry.route(Some(name), None, codes) {
             Ok((_, rx)) => {
@@ -243,8 +243,7 @@ mod tests {
             engine: EngineKind::Pcilt,
             act_bits: 4,
             seed,
-            head_seed: None,
-            artifact_dir: None,
+            ..ModelConfig::default()
         };
         let store = Arc::new(TableStore::new());
         let reg = ModelRegistry::start_with_store(

@@ -12,12 +12,12 @@ use pcilt::asic::{
 use pcilt::cli::{Args, USAGE};
 use pcilt::config::{network_from_document, Document, EngineKind, PlannerMode, ServeConfig};
 use pcilt::coordinator::{
-    plan_model_sharing, run_poisson, run_poisson_models, BackendSpec, ModelRegistry,
-    NativeEngineKind, Server, ServerOpts,
+    network_for_model, plan_model_sharing, run_poisson, run_poisson_models, BackendSpec,
+    ModelRegistry, NativeEngineKind, Server, ServerOpts,
 };
 use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCnn};
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
-use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec};
+use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec as MemoryNetworkSpec};
 use pcilt::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec};
 use pcilt::pcilt::store::{PrebuildRequest, StoreIoError, TableStore};
 use pcilt::pcilt::{parallel, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
@@ -167,7 +167,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 i + 1,
                 c.label,
                 c.score,
-                fmt_bytes(c.table_bytes),
+                fmt_bytes(c.table_bytes as f64),
                 if c.cached { ", cached" } else { "" }
             );
         }
@@ -355,7 +355,7 @@ fn cmd_tables_prebuild(
     artifact_dir: &str,
     cache_dir: &Path,
 ) -> Result<()> {
-    let act_bits = args.get_usize("act-bits", 4)? as u32;
+    let act_bits = model_act_bits(args)?;
     let batch = args.get_usize("batch", cfg.max_batch)?;
     let threads = args.get_usize("threads", cfg.planner.threads)?;
     let budget_mb = args.get_usize("budget-mb", cfg.tables.budget_mb)?;
@@ -429,7 +429,7 @@ fn cmd_tables_prebuild(
 /// plans that CNN instead; `--calibrate` micro-benchmarks the candidates.
 fn cmd_plan(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 8)?;
-    let act_bits = args.get_usize("act-bits", 4)? as u32;
+    let act_bits = model_act_bits(args)?;
     // Parse the config once; the same Document serves both the [planner]
     // policy and the optional [network] section.
     let (cfg, doc) = match args.get("config") {
@@ -441,6 +441,59 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let policy = cfg.planner.to_policy();
     let calibrate = args.flag("calibrate") || cfg.planner.mode == PlannerMode::Calibrate;
+
+    // A [[models]] list plans every configured model's layer graph — the
+    // per-stage planner table for arbitrary-depth NetworkSpecs.
+    if !cfg.models.is_empty() {
+        if calibrate {
+            println!("note: --calibrate applies to the sample model; planning analytically");
+        }
+        let planner = EnginePlanner::new(policy);
+        for m in &cfg.models {
+            if m.engine == EngineKind::Hlo {
+                println!("\n## model '{}': hlo pools hold no native tables; skipped", m.name);
+                continue;
+            }
+            let (spec, weights) = network_for_model(m)?;
+            println!(
+                "\n## engine plan — model '{}' ({} stages, {} convs, act_bits={}, \
+                 input {}x{}, batch {batch})",
+                m.name,
+                spec.depth(),
+                spec.conv_count(),
+                spec.act_bits,
+                spec.img,
+                spec.img,
+            );
+            let plan = spec
+                .plan(&weights, &planner, batch)
+                .with_context(|| format!("planning model '{}'", m.name))?;
+            for cp in &plan.convs {
+                // Forced engines with off-registry knobs (e.g. an unusual
+                // seg_n) have no scored row; print the label alone.
+                let scored = cp.plan.candidate(cp.chosen).map(|c| {
+                    format!(
+                        " (score {:.3e}, tables {})",
+                        c.score,
+                        fmt_bytes(c.table_bytes as f64)
+                    )
+                });
+                println!(
+                    "\nstage {}: {} -> {}{}{}",
+                    cp.stage,
+                    m.layers
+                        .get(cp.stage)
+                        .map(|s| s.label())
+                        .unwrap_or_else(|| "conv".to_string()),
+                    cp.chosen.label(),
+                    scored.unwrap_or_default(),
+                    if cp.forced { " [forced by config]" } else { "" },
+                );
+                print!("{}", cp.plan.report());
+            }
+        }
+        return Ok(());
+    }
 
     // A [network] section in the config plans that CNN analytically.
     if let Some(doc) = &doc {
@@ -481,7 +534,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
             i + 1,
             c.label,
             c.score,
-            fmt_bytes(c.table_bytes),
+            fmt_bytes(c.table_bytes as f64),
             fmt_count(c.build_evals as u128),
         );
         print!("{}", plan.report());
@@ -496,7 +549,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
 /// Plan every conv layer of a `[network]`-section CNN (feature maps halve
 /// after each layer, as with 2x2 pooling).
 fn plan_network(
-    net: &NetworkSpec,
+    net: &MemoryNetworkSpec,
     planner: &EnginePlanner,
     batch: usize,
     img: usize,
@@ -523,13 +576,25 @@ fn plan_network(
             i + 1,
             c.label,
             c.score,
-            fmt_bytes(c.table_bytes),
+            fmt_bytes(c.table_bytes as f64),
         );
         print!("{}", plan.report());
         cin = cout;
         side = (((side - net.kernel + 1) / 2).max(net.kernel)).max(1);
     }
     Ok(())
+}
+
+/// `--act-bits` for the model layer: u8 activation codes cap it at 8
+/// (`NetworkSpec::validate` enforces the same range) — reject early with
+/// a clean error instead of failing inside network compilation.
+fn model_act_bits(args: &Args) -> Result<u32> {
+    let act_bits = args.get_usize("act-bits", 4)?;
+    ensure!(
+        (1..=8).contains(&act_bits),
+        "--act-bits must be in 1..=8 for model commands, got {act_bits}"
+    );
+    Ok(act_bits as u32)
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {

@@ -1,18 +1,24 @@
-//! Rust-native QuantCNN — the exact mirror of `python/compile/model.py`'s
-//! integer inference graph, parameterized over any [`ConvEngine`].
-//!
-//! This is what lets the serving coordinator run the trained network
-//! through the paper's engines (PCILT, segment, shared …) without touching
-//! Python, and what the integration tests compare bit-for-bit against the
-//! PJRT artifact outputs (`artifacts/smoke_*.bin`).
+//! Rust-native model layer. [`network`] is the primary inference
+//! abstraction: a declarative [`NetworkSpec`] compiled into a
+//! [`CompiledNetwork`] of per-stage engine executors. [`QuantCnn`] remains
+//! as a thin compat wrapper that declares the paper's seed topology (two
+//! convs + a pooled dense head, the exact mirror of
+//! `python/compile/model.py`) as a `NetworkSpec` — bit-for-bit identical
+//! to the original hard-wired implementation, and still what the
+//! integration tests compare against the PJRT artifact outputs.
+
+pub mod network;
 
 use std::sync::Arc;
 
-use crate::pcilt::engine::{ConvEngine, ConvGeometry};
-use crate::pcilt::planner::{EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
-use crate::pcilt::store::{TableKey, TableStore};
-use crate::pcilt::{parallel, ConvFunc, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
-use crate::tensor::{max_pool2d, Shape4, Tensor4};
+use crate::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
+use crate::pcilt::store::TableStore;
+use crate::tensor::{Shape4, Tensor4};
+
+pub use network::{
+    CompiledNetwork, ConvStagePlan, NetworkError, NetworkPlan, NetworkSpec, NetworkWeights,
+    StageSpec,
+};
 
 /// Frozen integer model parameters + scales (mirror of python
 /// `QuantizedModel`). Loaded from `artifacts/manifest.toml` + `weights.bin`
@@ -36,49 +42,41 @@ pub struct ModelParams {
     pub s_a2: f32,
 }
 
-/// Engine choice for the two conv layers.
+/// Engine choice for a conv stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineChoice {
     Dm,
     Pcilt,
     Segment { seg_n: usize },
     Shared,
-    /// Let the [`EnginePlanner`] pick a (bit-exact) winner per layer from
+    /// Let the [`EnginePlanner`] pick a (bit-exact) winner per stage from
     /// the full registry, using the analytic cost model.
     Auto,
 }
 
-/// The runnable model: two conv engines + the dense head.
-pub struct QuantCnn {
-    pub params: ModelParams,
-    conv1: Box<dyn ConvEngine>,
-    conv2: Box<dyn ConvEngine>,
-    /// `"pcilt"`, or `"pcilt+segment"` when the planner picked different
-    /// engines per layer.
-    engine_name: String,
-    /// Batch-parallelism for `forward` (0 = auto; see `pcilt::parallel`).
-    threads: usize,
-}
-
-fn build_engine(
-    w: &Tensor4<i8>,
-    act_bits: u32,
-    geom: ConvGeometry,
-    choice: &EngineChoice,
-    store: &TableStore,
-) -> Box<dyn ConvEngine> {
-    let f = ConvFunc::Mul;
-    match choice {
-        EngineChoice::Dm => Box::new(DmEngine::new(w.clone(), geom)),
-        EngineChoice::Pcilt => Box::new(PciltEngine::from_store(store, w, act_bits, geom, &f)),
-        EngineChoice::Segment { seg_n } => {
-            Box::new(SegmentEngine::from_store(store, w, act_bits, *seg_n, geom, &f))
-        }
-        EngineChoice::Shared => Box::new(SharedEngine::from_store(store, w, act_bits, geom, &f)),
-        EngineChoice::Auto => unreachable!("Auto is resolved in QuantCnn::with_store"),
+impl EngineChoice {
+    /// Parse a per-stage engine name (`[[models.layers]]` `engine` key).
+    /// `seg_n` supplies the segment width for `"segment"`.
+    pub fn parse(s: &str, seg_n: usize) -> Option<EngineChoice> {
+        Some(match s {
+            "dm" => EngineChoice::Dm,
+            "pcilt" => EngineChoice::Pcilt,
+            "segment" => EngineChoice::Segment { seg_n },
+            "shared" => EngineChoice::Shared,
+            "auto" => EngineChoice::Auto,
+            _ => return None,
+        })
     }
 }
 
-/// Planner layer specs for the model's two conv layers at a nominal
+/// The runnable seed model: the paper's 2-conv topology compiled through
+/// the [`network`] API.
+pub struct QuantCnn {
+    pub params: ModelParams,
+    network: CompiledNetwork,
+}
+
+/// Planner layer specs for the seed model's two conv layers at a nominal
 /// serving batch.
 pub fn layer_specs(params: &ModelParams, batch: usize) -> [LayerSpec; 2] {
     let img = params.img;
@@ -97,14 +95,16 @@ pub fn layer_specs(params: &ModelParams, batch: usize) -> [LayerSpec; 2] {
     [spec1, spec2]
 }
 
-/// Plan both conv layers of the model — the `pcilt plan` entry point.
+/// Plan both conv layers of the seed model — the `pcilt plan` entry point.
+/// Runs the same network planning pass compilation uses.
 pub fn plan_model(params: &ModelParams, policy: PlannerPolicy, batch: usize) -> Vec<LayerPlan> {
-    let planner = EnginePlanner::new(policy);
-    let [s1, s2] = layer_specs(params, batch);
-    vec![
-        planner.plan_layer(&s1, Some(&params.w1)),
-        planner.plan_layer(&s2, Some(&params.w2)),
-    ]
+    let (spec, weights) = NetworkSpec::quantcnn(params, EngineChoice::Auto);
+    spec.plan(&weights, &EnginePlanner::new(policy), batch)
+        .expect("seed topology is always valid")
+        .convs
+        .into_iter()
+        .map(|c| c.plan)
+        .collect()
 }
 
 impl QuantCnn {
@@ -116,152 +116,60 @@ impl QuantCnn {
     }
 
     /// Build with an explicit table store (tests use private stores to
-    /// assert exact hit/build counts).
+    /// assert exact hit/build counts). Compiles the seed topology through
+    /// the network API with the process-default planner policy/batch, so a
+    /// worker thread that only sees a spec builds exactly what `[planner]`
+    /// configured.
     pub fn with_store(
         params: ModelParams,
         choice: EngineChoice,
         store: &Arc<TableStore>,
     ) -> QuantCnn {
-        let geom = ConvGeometry::unit_stride(params.kernel, params.kernel);
-        let (conv1, conv2) = match &choice {
-            EngineChoice::Auto => {
-                // Resolves against the process-default policy/batch so a
-                // worker thread that only sees a BackendSpec builds exactly
-                // what `[planner]` configured (planner::set_default_policy),
-                // borrowing tables through the store.
-                let planner = EnginePlanner::with_store(
-                    crate::pcilt::planner::default_policy(),
-                    store.clone(),
-                );
-                let batch = crate::pcilt::planner::default_plan_batch();
-                let [s1, s2] = layer_specs(&params, batch);
-                (planner.choose(&params.w1, &s1), planner.choose(&params.w2, &s2))
-            }
-            concrete => (
-                build_engine(&params.w1, params.act_bits, geom, concrete, store),
-                build_engine(&params.w2, params.act_bits, geom, concrete, store),
-            ),
-        };
-        let engine_name = if conv1.name() == conv2.name() {
-            conv1.name().to_string()
-        } else {
-            format!("{}+{}", conv1.name(), conv2.name())
-        };
-        QuantCnn {
-            params,
-            conv1,
-            conv2,
-            engine_name,
-            threads: 0,
-        }
+        let (spec, weights) = NetworkSpec::quantcnn(&params, choice);
+        let network = spec
+            .compile_with_defaults(&weights, store)
+            .expect("seed topology is always valid for u8-code act_bits");
+        QuantCnn { params, network }
     }
 
     /// Set the batch-parallelism for `forward` (0 = auto).
     pub fn with_threads(mut self, threads: usize) -> QuantCnn {
-        self.threads = threads;
+        self.network = self.network.with_threads(threads);
         self
     }
 
     pub fn engine_name(&self) -> &str {
-        &self.engine_name
+        self.network.engine_name()
+    }
+
+    /// The compiled stage executors behind this model.
+    pub fn network(&self) -> &CompiledNetwork {
+        &self.network
     }
 
     /// Float [0,1] image -> activation codes (mirror of python
     /// `encode_input`).
     pub fn encode_input(&self, x: &Tensor4<f32>) -> Tensor4<u8> {
-        let qmax = ((1u32 << self.params.act_bits) - 1) as f32;
-        x.map(|v| (v * qmax).round().clamp(0.0, qmax) as u8)
-    }
-
-    /// Requant: i32 accumulators -> unsigned codes. **round-ties-even** to
-    /// match `jnp.round` bit-for-bit.
-    fn requant(&self, acc: &Tensor4<i32>, multiplier: f32) -> Tensor4<u8> {
-        let qmax = (1i32 << self.params.act_bits) - 1;
-        acc.map(|v| {
-            let r = (v as f32 * multiplier).round_ties_even() as i32;
-            r.clamp(0, qmax) as u8
-        })
+        self.network.encode_input(x)
     }
 
     /// Integer forward: codes [B,16,16,1] -> logits i32 [B, classes].
-    /// Data-parallel across the batch (scoped threads; see
-    /// `pcilt::parallel`); bit-identical to [`QuantCnn::forward_serial`].
+    /// Data-parallel across the batch; bit-identical to
+    /// [`QuantCnn::forward_serial`] (both run the network's single
+    /// stage-walk implementation).
     pub fn forward(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
-        let n = codes.shape().n;
-        let t = parallel::effective_threads(self.threads, n);
-        if t <= 1 || n <= 1 {
-            return self.forward_serial(codes);
-        }
-        let parts = parallel::chunks(n, t);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = parts
-                .iter()
-                .map(|&(start, count)| {
-                    let sub = parallel::slice_batch(codes, start, count);
-                    scope.spawn(move || self.forward_serial(&sub))
-                })
-                .collect();
-            let mut out = Vec::with_capacity(n);
-            for h in handles {
-                out.extend(h.join().expect("forward worker panicked"));
-            }
-            out
-        })
+        self.network.forward(codes)
     }
 
     /// Single-threaded integer forward (the reference path).
     pub fn forward_serial(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
-        let p = &self.params;
-        let m1 = p.s_in * p.s_w1 / p.s_a1;
-        let acc1 = self.conv1.conv(codes);
-        let a1 = self.requant(&acc1, m1);
-        let a1 = pool_codes(&a1);
-        let m2 = p.s_a1 * p.s_w2 / p.s_a2;
-        let acc2 = self.conv2.conv(&a1);
-        let a2 = self.requant(&acc2, m2);
-        let a2 = pool_codes(&a2);
-        // flatten NHWC row-major (matches jnp reshape) then dense head
-        let s = a2.shape();
-        let feat = s.h * s.w * s.c;
-        let mut out = Vec::with_capacity(s.n);
-        for n in 0..s.n {
-            let start = n * feat;
-            let flat = &a2.data()[start..start + feat];
-            let mut logits = vec![0i32; p.classes];
-            for (cls, logit) in logits.iter_mut().enumerate() {
-                let row = &p.w3[cls * feat..(cls + 1) * feat];
-                *logit = row
-                    .iter()
-                    .zip(flat.iter())
-                    .map(|(&w, &a)| w as i32 * a as i32)
-                    .sum();
-            }
-            out.push(logits);
-        }
-        out
+        self.network.forward_serial(codes)
     }
 
     /// Forward + argmax.
     pub fn classify(&self, codes: &Tensor4<u8>) -> Vec<usize> {
-        self.forward(codes)
-            .iter()
-            .map(|logits| {
-                logits
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|(_, &v)| v)
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        self.network.classify(codes)
     }
-}
-
-/// 2x2 max pool on u8 codes (codes are monotone in the dequantized value,
-/// so pooling codes == pooling values).
-fn pool_codes(x: &Tensor4<u8>) -> Tensor4<u8> {
-    let as_i32 = x.map(|v| v as i32);
-    max_pool2d(&as_i32).map(|v| v as u8)
 }
 
 /// Deterministic random-weight params from a seed — the `[[models]]`
@@ -280,42 +188,6 @@ pub fn randomize_head(params: &mut ModelParams, seed: u64) {
     for v in params.w3.iter_mut() {
         *v = rng.range_i64(-127, 127) as i8;
     }
-}
-
-/// The store keys the engines of `choice` would borrow for this model's
-/// conv layers (table-free layers, e.g. DM, contribute nothing). Mirrors
-/// exactly what [`QuantCnn::with_store`] builds — same planner defaults
-/// for `Auto`, same key constructors — so the multi-model registry can
-/// account cross-model sharing without instrumenting every engine
-/// constructor.
-pub fn planned_table_keys(
-    params: &ModelParams,
-    choice: &EngineChoice,
-    store: &Arc<TableStore>,
-) -> Vec<TableKey> {
-    let batch = crate::pcilt::planner::default_plan_batch();
-    let [s1, s2] = layer_specs(params, batch);
-    let layers: [(&Tensor4<i8>, LayerSpec); 2] = [(&params.w1, s1), (&params.w2, s2)];
-    let ids: Vec<EngineId> = match choice {
-        EngineChoice::Dm => vec![EngineId::Dm; 2],
-        EngineChoice::Pcilt => vec![EngineId::Pcilt; 2],
-        EngineChoice::Segment { seg_n } => vec![EngineId::Segment { seg_n: *seg_n }; 2],
-        EngineChoice::Shared => vec![EngineId::Shared; 2],
-        EngineChoice::Auto => {
-            let planner = EnginePlanner::with_store(
-                crate::pcilt::planner::default_policy(),
-                store.clone(),
-            );
-            layers
-                .iter()
-                .map(|&(w, s)| planner.plan_layer(&s, Some(w)).chosen)
-                .collect()
-        }
-    };
-    ids.iter()
-        .zip(layers.iter())
-        .filter_map(|(id, &(w, s))| id.table_key(w, &s))
-        .collect()
 }
 
 /// Build a random-weight ModelParams for tests/benches (no artifacts
@@ -490,43 +362,39 @@ mod tests {
     }
 
     #[test]
-    fn planned_table_keys_match_store_contents() {
-        // Keys predicted for a model == keys actually registered when the
-        // model builds through the store (the registry's dedup accounting
-        // relies on this agreement).
+    fn compiled_keys_match_store_contents() {
+        // The registry's dedup accounting reads keys off the compiled
+        // network, which records them during its own build pass — so they
+        // are the store's contents by construction.
         let params = random_params_seeded(4, 11);
         let store = Arc::new(TableStore::new());
-        let keys = planned_table_keys(&params, &EngineChoice::Pcilt, &store);
+        let m = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+        let keys = m.network().table_keys();
         assert_eq!(keys.len(), 2, "two conv layers, two dense keys");
-        let _m = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
-        for k in &keys {
-            assert!(store.contains(*k), "predicted key missing after build");
+        for k in keys {
+            assert!(store.contains(*k), "compiled key missing from store");
         }
         assert_eq!(store.stats().entries as usize, keys.len());
         // DM is table-free
-        assert!(planned_table_keys(&params, &EngineChoice::Dm, &store).is_empty());
+        let dm = QuantCnn::with_store(params.clone(), EngineChoice::Dm, &store);
+        assert!(dm.network().table_keys().is_empty());
         // a fine-tuned head does not change the conv keys
         let mut tuned = params.clone();
         randomize_head(&mut tuned, 5);
-        assert_eq!(planned_table_keys(&tuned, &EngineChoice::Pcilt, &store), keys);
+        let tm = QuantCnn::with_store(tuned, EngineChoice::Pcilt, &store);
+        assert_eq!(tm.network().table_keys(), keys);
     }
 
     #[test]
-    fn pool_codes_matches_value_pooling() {
-        let mut rng = Rng::new(6);
-        let x = Tensor4::random_activations(Shape4::new(1, 4, 4, 2), 4, &mut rng);
-        let pooled = pool_codes(&x);
-        for h in 0..2 {
-            for w in 0..2 {
-                for c in 0..2 {
-                    let m = x
-                        .get(0, 2 * h, 2 * w, c)
-                        .max(x.get(0, 2 * h, 2 * w + 1, c))
-                        .max(x.get(0, 2 * h + 1, 2 * w, c))
-                        .max(x.get(0, 2 * h + 1, 2 * w + 1, c));
-                    assert_eq!(pooled.get(0, h, w, c), m);
-                }
-            }
-        }
+    fn engine_choice_parses() {
+        assert_eq!(EngineChoice::parse("dm", 2), Some(EngineChoice::Dm));
+        assert_eq!(EngineChoice::parse("pcilt", 2), Some(EngineChoice::Pcilt));
+        assert_eq!(
+            EngineChoice::parse("segment", 4),
+            Some(EngineChoice::Segment { seg_n: 4 })
+        );
+        assert_eq!(EngineChoice::parse("shared", 2), Some(EngineChoice::Shared));
+        assert_eq!(EngineChoice::parse("auto", 2), Some(EngineChoice::Auto));
+        assert_eq!(EngineChoice::parse("gpu", 2), None);
     }
 }

@@ -1,0 +1,1196 @@
+//! `NetworkSpec` → `CompiledNetwork`: the declarative, arbitrary-depth
+//! model API.
+//!
+//! The seed repro hard-wired one topology (two convs + a pooled dense
+//! head) into `QuantCnn`; the paper's claim, however, is *per layer* — the
+//! PCILT/DM crossover moves with cardinality and geometry, so a real
+//! network wants a different engine at every depth. `NetworkSpec` is a
+//! typed list of stages (conv / requantize / max-pool / dense) with
+//! per-network activation cardinality, validated by shape-and-dataflow
+//! propagation before anything is built. `compile` runs the
+//! [`EnginePlanner`] once per conv stage, builds every engine through the
+//! [`TableStore`], and records the table keys *from that same pass* — the
+//! registry's cross-model dedup accounting can no longer drift from what
+//! serving actually builds.
+//!
+//! ```text
+//!   NetworkSpec ──validate──▶ shape/dataflow trace
+//!        │                          │
+//!        └──plan(planner)──▶ NetworkPlan (per-conv LayerPlan + TableKey)
+//!                                   │
+//!                            compile(store) ──▶ CompiledNetwork
+//!                                                  forward / classify
+//! ```
+//!
+//! `QuantCnn` survives as a thin compat wrapper that declares the paper's
+//! seed topology as a `NetworkSpec` (see [`NetworkSpec::quantcnn`]) and is
+//! bit-for-bit identical to the original implementation.
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use crate::pcilt::engine::{ConvEngine, ConvGeometry};
+use crate::pcilt::parallel;
+use crate::pcilt::planner::{EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
+use crate::pcilt::store::{TableKey, TableStore};
+use crate::pcilt::DmEngine;
+use crate::tensor::{max_pool2d_k, Shape4, Tensor4};
+
+use super::{EngineChoice, ModelParams};
+
+/// One typed stage of a network. Convs consume activation codes and
+/// produce i32 accumulators; requantize folds accumulators back into
+/// codes; pooling and the dense head operate on codes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageSpec {
+    /// Convolution: `out_ch` filters of `kernel`x`kernel` at `stride`,
+    /// served by `engine` (`Auto` = planner-selected).
+    Conv {
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        engine: EngineChoice,
+    },
+    /// `k`x`k` max pooling with stride `k` (floor semantics; codes are
+    /// monotone in the dequantized value, so pooling codes == values).
+    MaxPool { k: usize },
+    /// Accumulators -> codes at the network's cardinality:
+    /// `clamp(round_ties_even(acc * scale), 0, 2^act_bits - 1)`.
+    Requantize { scale: f32 },
+    /// Flatten NHWC and apply the integer dense head; must be the final
+    /// stage.
+    Dense { classes: usize },
+}
+
+impl StageSpec {
+    /// Short label for reports (`pcilt plan`, bench output).
+    pub fn label(&self) -> String {
+        match self {
+            StageSpec::Conv { out_ch, kernel, stride, .. } => {
+                format!("conv {out_ch}ch k{kernel}s{stride}")
+            }
+            StageSpec::MaxPool { k } => format!("maxpool k{k}"),
+            StageSpec::Requantize { scale } => format!("requant x{scale}"),
+            StageSpec::Dense { classes } => format!("dense {classes}"),
+        }
+    }
+}
+
+/// A declarative network: input geometry, activation cardinality and the
+/// stage list. Pure description — weights live in [`NetworkWeights`] so
+/// one spec can be instantiated with many weight sets (seeded fleets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    /// Activation bit width for every code tensor in the network.
+    pub act_bits: u32,
+    /// Input image side (inputs are `[B, img, img, in_ch]`).
+    pub img: usize,
+    /// Input channel count.
+    pub in_ch: usize,
+    pub stages: Vec<StageSpec>,
+}
+
+/// Spec/weight validation and compilation errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkError {
+    /// The spec itself is malformed (stage-independent).
+    Spec(String),
+    /// A stage fails shape/dataflow propagation or cannot be built.
+    Stage { stage: usize, reason: String },
+    /// Weights do not match the spec's shapes.
+    Weights(String),
+}
+
+impl std::fmt::Display for NetworkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetworkError::Spec(msg) => write!(f, "invalid network spec: {msg}"),
+            NetworkError::Stage { stage, reason } => {
+                write!(f, "invalid network stage {stage}: {reason}")
+            }
+            NetworkError::Weights(msg) => write!(f, "network weights mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetworkError {}
+
+fn stage_err<T>(stage: usize, reason: impl Into<String>) -> Result<T, NetworkError> {
+    Err(NetworkError::Stage {
+        stage,
+        reason: reason.into(),
+    })
+}
+
+/// Weights instantiating a [`NetworkSpec`]: one OHWI tensor per conv
+/// stage (in stage order) plus the row-major dense head.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkWeights {
+    pub convs: Vec<Tensor4<i8>>,
+    /// `[classes * flattened_features]`, row-major per class.
+    pub dense: Vec<i8>,
+}
+
+impl NetworkWeights {
+    /// Re-randomize only the dense head — the "fine-tuned head over a
+    /// shared backbone" variant. Conv weights (and therefore every lookup
+    /// table key) stay byte-identical.
+    pub fn randomize_dense(&mut self, seed: u64) {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        for v in self.dense.iter_mut() {
+            *v = rng.range_i64(-127, 127) as i8;
+        }
+    }
+}
+
+/// What flows between stages during validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flow {
+    /// Activation codes in `[0, 2^act_bits)`.
+    Codes(Shape4),
+    /// i32 conv accumulators awaiting requantization.
+    Acc(Shape4),
+    /// Dense-head output; nothing may follow.
+    Logits,
+}
+
+/// One conv stage as the shape walk sees it.
+#[derive(Debug, Clone, Copy)]
+struct ConvSite {
+    stage: usize,
+    input: Shape4,
+    geom: ConvGeometry,
+    out_ch: usize,
+    engine: EngineChoice,
+}
+
+/// Result of the shape/dataflow walk at a given batch size.
+struct Trace {
+    sites: Vec<ConvSite>,
+    classes: usize,
+    /// Flattened feature count entering the dense head.
+    features: usize,
+}
+
+/// The plan for one conv stage of a network: the scored registry, the
+/// engine that will actually be built (config-forced or planner-chosen)
+/// and the table key it will borrow.
+#[derive(Debug, Clone)]
+pub struct ConvStagePlan {
+    /// Index into `NetworkSpec::stages`.
+    pub stage: usize,
+    pub spec: LayerSpec,
+    /// Engine `compile` builds for this stage.
+    pub chosen: EngineId,
+    /// `true` when the spec pinned a concrete engine (planner overridden).
+    pub forced: bool,
+    /// Store key the built engine borrows (`None` for table-free engines).
+    pub key: Option<TableKey>,
+    /// Full scored registry for the stage (the `pcilt plan` table).
+    pub plan: LayerPlan,
+}
+
+/// Per-conv-stage plans for a whole network — the single source of truth
+/// for both engine construction and table-key accounting.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub convs: Vec<ConvStagePlan>,
+}
+
+impl NetworkPlan {
+    /// The store keys compilation will borrow, in stage order. This is
+    /// what the multi-model registry counts for cross-model dedup — by
+    /// construction identical to what `compile` builds.
+    pub fn table_keys(&self) -> Vec<TableKey> {
+        self.convs.iter().filter_map(|c| c.key).collect()
+    }
+}
+
+impl NetworkSpec {
+    /// The paper's seed topology (the original `QuantCnn` dataflow):
+    /// conv → requantize → 2x2 pool, twice, then the dense head. The
+    /// requantize scales are the quantization-scale ratios the python
+    /// model bakes into its integer graph.
+    pub fn quantcnn(params: &ModelParams, choice: EngineChoice) -> (NetworkSpec, NetworkWeights) {
+        let m1 = params.s_in * params.s_w1 / params.s_a1;
+        let m2 = params.s_a1 * params.s_w2 / params.s_a2;
+        let spec = NetworkSpec {
+            act_bits: params.act_bits,
+            img: params.img,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: params.c1,
+                    kernel: params.kernel,
+                    stride: 1,
+                    engine: choice,
+                },
+                StageSpec::Requantize { scale: m1 },
+                StageSpec::MaxPool { k: 2 },
+                StageSpec::Conv {
+                    out_ch: params.c2,
+                    kernel: params.kernel,
+                    stride: 1,
+                    engine: choice,
+                },
+                StageSpec::Requantize { scale: m2 },
+                StageSpec::MaxPool { k: 2 },
+                StageSpec::Dense {
+                    classes: params.classes,
+                },
+            ],
+        };
+        let weights = NetworkWeights {
+            convs: vec![params.w1.clone(), params.w2.clone()],
+            dense: params.w3.clone(),
+        };
+        (spec, weights)
+    }
+
+    /// Validate by propagating shape and dataflow type through every
+    /// stage ([`ConvGeometry::out_shape`] drives the conv shapes). Catches
+    /// mistyped graphs (conv on accumulators, pooling past 1x1, dense not
+    /// last) at build time, before any table is built.
+    pub fn validate(&self) -> Result<(), NetworkError> {
+        self.trace(1).map(|_| ())
+    }
+
+    /// Total stages (for reports).
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Number of conv stages.
+    pub fn conv_count(&self) -> usize {
+        self.stages
+            .iter()
+            .filter(|s| matches!(s, StageSpec::Conv { .. }))
+            .count()
+    }
+
+    /// Dense-head class count (the last stage of a valid spec).
+    pub fn classes(&self) -> Result<usize, NetworkError> {
+        self.trace(1).map(|t| t.classes)
+    }
+
+    /// The shape/dataflow walk: validates every stage at batch size
+    /// `batch` and records the conv sites + dense geometry.
+    fn trace(&self, batch: usize) -> Result<Trace, NetworkError> {
+        if !(1..=8).contains(&self.act_bits) {
+            return Err(NetworkError::Spec(format!(
+                "act_bits must be in 1..=8, got {}",
+                self.act_bits
+            )));
+        }
+        if self.img == 0 || self.in_ch == 0 {
+            return Err(NetworkError::Spec("img and in_ch must be positive".into()));
+        }
+        if self.stages.is_empty() {
+            return Err(NetworkError::Spec("network has no stages".into()));
+        }
+        let mut flow = Flow::Codes(Shape4::new(batch.max(1), self.img, self.img, self.in_ch));
+        let mut sites = Vec::new();
+        let mut dense: Option<(usize, usize)> = None; // (classes, features)
+        for (i, stage) in self.stages.iter().enumerate() {
+            flow = match (stage, flow) {
+                (_, Flow::Logits) => {
+                    return stage_err(i, "dense must be the final stage");
+                }
+                (&StageSpec::Conv { out_ch, kernel, stride, engine }, Flow::Codes(s)) => {
+                    if out_ch == 0 || kernel == 0 || stride == 0 {
+                        return stage_err(i, "conv needs out_ch, kernel, stride >= 1");
+                    }
+                    if s.h < kernel || s.w < kernel {
+                        return stage_err(
+                            i,
+                            format!("kernel {kernel} exceeds input {}x{}", s.h, s.w),
+                        );
+                    }
+                    // A forced segment engine must fit the offset space the
+                    // planner considers feasible — fail at validation, not
+                    // inside a serving worker's table build.
+                    if let EngineChoice::Segment { seg_n } = engine {
+                        let width = seg_n as u32 * self.act_bits;
+                        if seg_n == 0 || width > 16 {
+                            return stage_err(
+                                i,
+                                format!(
+                                    "segment offset space 2^{width} infeasible \
+                                     (seg_n {seg_n} x act_bits {})",
+                                    self.act_bits
+                                ),
+                            );
+                        }
+                    }
+                    let geom = ConvGeometry {
+                        kh: kernel,
+                        kw: kernel,
+                        sy: stride,
+                        sx: stride,
+                    };
+                    sites.push(ConvSite {
+                        stage: i,
+                        input: s,
+                        geom,
+                        out_ch,
+                        engine,
+                    });
+                    Flow::Acc(geom.out_shape(s, out_ch))
+                }
+                (StageSpec::Conv { .. }, Flow::Acc(_)) => {
+                    return stage_err(i, "conv consumes codes; insert a requantize stage first");
+                }
+                (&StageSpec::Requantize { scale }, Flow::Acc(s)) => {
+                    if !(scale.is_finite() && scale > 0.0) {
+                        return stage_err(i, format!("requantize scale must be > 0, got {scale}"));
+                    }
+                    Flow::Codes(s)
+                }
+                (StageSpec::Requantize { .. }, Flow::Codes(_)) => {
+                    return stage_err(i, "requantize consumes accumulators (place after a conv)");
+                }
+                (&StageSpec::MaxPool { k }, Flow::Codes(s)) => {
+                    if k < 2 {
+                        return stage_err(i, "pool window must be >= 2");
+                    }
+                    if s.h / k == 0 || s.w / k == 0 {
+                        return stage_err(
+                            i,
+                            format!("pool k{k} collapses a {}x{} map to nothing", s.h, s.w),
+                        );
+                    }
+                    Flow::Codes(Shape4::new(s.n, s.h / k, s.w / k, s.c))
+                }
+                (StageSpec::MaxPool { .. }, Flow::Acc(_)) => {
+                    return stage_err(i, "pool consumes codes; insert a requantize stage first");
+                }
+                (&StageSpec::Dense { classes }, Flow::Codes(s)) => {
+                    if classes < 2 {
+                        return stage_err(i, "dense needs at least 2 classes");
+                    }
+                    dense = Some((classes, s.h * s.w * s.c));
+                    Flow::Logits
+                }
+                (StageSpec::Dense { .. }, Flow::Acc(_)) => {
+                    return stage_err(i, "dense consumes codes; insert a requantize stage first");
+                }
+            };
+        }
+        match (flow, dense) {
+            (Flow::Logits, Some((classes, features))) => Ok(Trace {
+                sites,
+                classes,
+                features,
+            }),
+            _ => Err(NetworkError::Spec(
+                "network must end with a dense stage".into(),
+            )),
+        }
+    }
+
+    /// Check a weight set against the spec's shapes.
+    fn check_weights(&self, weights: &NetworkWeights, t: &Trace) -> Result<(), NetworkError> {
+        if weights.convs.len() != t.sites.len() {
+            return Err(NetworkError::Weights(format!(
+                "{} conv weight tensors for {} conv stages",
+                weights.convs.len(),
+                t.sites.len()
+            )));
+        }
+        for (w, site) in weights.convs.iter().zip(&t.sites) {
+            let expect = Shape4::new(site.out_ch, site.geom.kh, site.geom.kw, site.input.c);
+            if w.shape() != expect {
+                return Err(NetworkError::Weights(format!(
+                    "stage {}: weight shape {:?} != expected {:?}",
+                    site.stage,
+                    w.shape(),
+                    expect
+                )));
+            }
+        }
+        if weights.dense.len() != t.classes * t.features {
+            return Err(NetworkError::Weights(format!(
+                "dense head has {} weights, expected {} ({} classes x {} features)",
+                weights.dense.len(),
+                t.classes * t.features,
+                t.classes,
+                t.features
+            )));
+        }
+        Ok(())
+    }
+
+    /// Deterministic random weights for this spec — the seeded `[[models]]`
+    /// source. For the seed 2-conv topology this draws the exact same
+    /// weight stream as `model::random_params_seeded` (convs first, head
+    /// last), so seeded fleets keep their shared-backbone dedup behavior.
+    pub fn seeded_weights(&self, seed: u64) -> Result<NetworkWeights, NetworkError> {
+        let t = self.trace(1)?;
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let convs = t
+            .sites
+            .iter()
+            .map(|site| {
+                let shape = Shape4::new(site.out_ch, site.geom.kh, site.geom.kw, site.input.c);
+                Tensor4::random_weights(shape, 8, &mut rng)
+            })
+            .collect();
+        let dense = (0..t.classes * t.features)
+            .map(|_| rng.range_i64(-127, 127) as i8)
+            .collect();
+        Ok(NetworkWeights { convs, dense })
+    }
+
+    /// Plan every conv stage with `planner` at batch size `batch`: score
+    /// the full engine registry per stage, resolve `Auto` to the winner,
+    /// and derive the table key each stage will borrow. `compile` consumes
+    /// exactly this plan, so predicted keys can never drift from built
+    /// keys.
+    pub fn plan(
+        &self,
+        weights: &NetworkWeights,
+        planner: &EnginePlanner,
+        batch: usize,
+    ) -> Result<NetworkPlan, NetworkError> {
+        let t = self.trace(batch)?;
+        self.check_weights(weights, &t)?;
+        let mut convs = Vec::with_capacity(t.sites.len());
+        for (site, w) in t.sites.iter().zip(&weights.convs) {
+            let spec = LayerSpec {
+                geom: site.geom,
+                in_ch: site.input.c,
+                out_ch: site.out_ch,
+                act_bits: self.act_bits,
+                weight_bits: 8,
+                input: site.input,
+            };
+            let plan = planner.plan_layer(&spec, Some(w));
+            let (chosen, forced) = match site.engine {
+                EngineChoice::Auto => (plan.chosen, false),
+                EngineChoice::Dm => (EngineId::Dm, true),
+                EngineChoice::Pcilt => (EngineId::Pcilt, true),
+                EngineChoice::Segment { seg_n } => (EngineId::Segment { seg_n }, true),
+                EngineChoice::Shared => (EngineId::Shared, true),
+            };
+            // A forced engine the registry marked infeasible for this
+            // layer (offset space, table-byte ceiling) is a plan error,
+            // not a panic inside the table builder at pool boot.
+            if forced {
+                if let Some(reason) =
+                    plan.candidate(chosen).and_then(|c| c.infeasible.as_ref())
+                {
+                    return stage_err(
+                        site.stage,
+                        format!("forced engine {}: {reason}", chosen.label()),
+                    );
+                }
+            }
+            convs.push(ConvStagePlan {
+                stage: site.stage,
+                spec,
+                chosen,
+                forced,
+                key: chosen.table_key(w, &spec),
+                plan,
+            });
+        }
+        Ok(NetworkPlan { convs })
+    }
+
+    /// Plan + build: every conv engine is constructed through `store`
+    /// (borrowed tables, cross-model dedup) from the same pass that
+    /// recorded its table key. A planner-chosen engine that fails to build
+    /// falls back to DM (serving stays alive); a config-forced engine that
+    /// fails is an error.
+    pub fn compile(
+        &self,
+        weights: &NetworkWeights,
+        store: &Arc<TableStore>,
+        policy: PlannerPolicy,
+        batch: usize,
+    ) -> Result<CompiledNetwork, NetworkError> {
+        let planner = EnginePlanner::with_store(policy, store.clone());
+        let plan = self.plan(weights, &planner, batch)?;
+        self.compile_planned(weights, &plan, store)
+    }
+
+    /// `compile` with the process-default planner policy and plan batch —
+    /// what serving workers use, so a worker that only sees a spec builds
+    /// exactly what the `[planner]` config describes.
+    pub fn compile_with_defaults(
+        &self,
+        weights: &NetworkWeights,
+        store: &Arc<TableStore>,
+    ) -> Result<CompiledNetwork, NetworkError> {
+        self.compile(
+            weights,
+            store,
+            crate::pcilt::planner::default_policy(),
+            crate::pcilt::planner::default_plan_batch(),
+        )
+    }
+
+    /// Build a `CompiledNetwork` from an existing [`NetworkPlan`].
+    pub fn compile_planned(
+        &self,
+        weights: &NetworkWeights,
+        plan: &NetworkPlan,
+        store: &Arc<TableStore>,
+    ) -> Result<CompiledNetwork, NetworkError> {
+        let t = self.trace(1)?;
+        self.check_weights(weights, &t)?;
+        if plan.convs.len() != t.sites.len() {
+            return Err(NetworkError::Spec(format!(
+                "plan covers {} conv stages, spec has {}",
+                plan.convs.len(),
+                t.sites.len()
+            )));
+        }
+        let mut stages = Vec::with_capacity(self.stages.len());
+        let mut table_keys = Vec::new();
+        let mut conv_names: Vec<&'static str> = Vec::new();
+        let mut ci = 0;
+        for (i, stage) in self.stages.iter().enumerate() {
+            let compiled = match stage {
+                StageSpec::Conv { .. } => {
+                    let cp = &plan.convs[ci];
+                    let w = &weights.convs[ci];
+                    ci += 1;
+                    let engine: Box<dyn ConvEngine> = match cp
+                        .chosen
+                        .build_with_store(w, &cp.spec, store)
+                    {
+                        Ok(e) => {
+                            // Record the key only for engines that actually
+                            // built — a fallback stage holds no tables.
+                            if let Some(k) = cp.key {
+                                table_keys.push(k);
+                            }
+                            e
+                        }
+                        // Planner winners are never expected to fail, but a
+                        // fallback keeps serving alive (mirrors
+                        // `EnginePlanner::choose`). Forced engines fail loud.
+                        Err(reason) if cp.forced => return stage_err(i, reason),
+                        Err(_) => Box::new(DmEngine::new(w.clone(), cp.spec.geom)),
+                    };
+                    conv_names.push(engine.name());
+                    CompiledStage::Conv(engine)
+                }
+                &StageSpec::MaxPool { k } => CompiledStage::MaxPool { k },
+                &StageSpec::Requantize { scale } => CompiledStage::Requantize { scale },
+                &StageSpec::Dense { classes } => CompiledStage::Dense {
+                    classes,
+                    w: weights.dense.clone(),
+                },
+            };
+            stages.push(compiled);
+        }
+        let engine_name = join_engine_names(&conv_names);
+        Ok(CompiledNetwork {
+            act_bits: self.act_bits,
+            img: self.img,
+            in_ch: self.in_ch,
+            classes: t.classes,
+            stages,
+            engine_name,
+            table_keys,
+            threads: 0,
+        })
+    }
+}
+
+/// `"pcilt"` when every conv agrees, `"pcilt+segment+dm"` otherwise —
+/// the same labeling the 2-layer model used, generalized to any depth.
+fn join_engine_names(names: &[&'static str]) -> String {
+    match names {
+        [] => "empty".to_string(),
+        [first, rest @ ..] if rest.iter().all(|n| n == first) => (*first).to_string(),
+        _ => names.join("+"),
+    }
+}
+
+/// One executable stage of a [`CompiledNetwork`].
+enum CompiledStage {
+    Conv(Box<dyn ConvEngine>),
+    MaxPool { k: usize },
+    Requantize { scale: f32 },
+    Dense { classes: usize, w: Vec<i8> },
+}
+
+/// Data flowing through the stage walk at run time. Codes borrow the
+/// caller's input until the first stage produces an owned tensor, so
+/// `forward_serial` never copies the batch it was handed.
+enum StageData<'a> {
+    Codes(Cow<'a, Tensor4<u8>>),
+    Acc(Tensor4<i32>),
+}
+
+/// The runnable network: boxed stage executors produced by
+/// [`NetworkSpec::compile`]. This is THE inference abstraction — the
+/// serving workers, the registry and the compat `QuantCnn` all execute
+/// through it.
+pub struct CompiledNetwork {
+    act_bits: u32,
+    img: usize,
+    in_ch: usize,
+    classes: usize,
+    stages: Vec<CompiledStage>,
+    engine_name: String,
+    table_keys: Vec<TableKey>,
+    /// Batch-parallelism for `forward` (0 = auto; see `pcilt::parallel`).
+    threads: usize,
+}
+
+impl CompiledNetwork {
+    /// Set the batch-parallelism for `forward` (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> CompiledNetwork {
+        self.threads = threads;
+        self
+    }
+
+    /// `"pcilt"`, or `"pcilt+segment"`-style when conv stages differ.
+    pub fn engine_name(&self) -> &str {
+        &self.engine_name
+    }
+
+    /// Store keys this network's conv engines borrow, in stage order —
+    /// recorded by the compilation pass itself.
+    pub fn table_keys(&self) -> &[TableKey] {
+        &self.table_keys
+    }
+
+    /// Engine name per conv stage, in stage order.
+    pub fn conv_engine_names(&self) -> Vec<&'static str> {
+        self.stages
+            .iter()
+            .filter_map(|s| match s {
+                CompiledStage::Conv(e) => Some(e.name()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn img(&self) -> usize {
+        self.img
+    }
+
+    pub fn in_ch(&self) -> usize {
+        self.in_ch
+    }
+
+    pub fn act_bits(&self) -> u32 {
+        self.act_bits
+    }
+
+    /// Float [0,1] image -> activation codes.
+    pub fn encode_input(&self, x: &Tensor4<f32>) -> Tensor4<u8> {
+        let qmax = ((1u32 << self.act_bits) - 1) as f32;
+        x.map(|v| (v * qmax).round().clamp(0.0, qmax) as u8)
+    }
+
+    /// Integer forward, data-parallel across the batch (scoped threads;
+    /// bit-identical to [`CompiledNetwork::forward_serial`], which it
+    /// wraps — there is exactly one stage-walk implementation).
+    pub fn forward(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
+        let n = codes.shape().n;
+        let t = parallel::effective_threads(self.threads, n);
+        if t <= 1 || n <= 1 {
+            return self.forward_serial(codes);
+        }
+        let parts = parallel::chunks(n, t);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = parts
+                .iter()
+                .map(|&(start, count)| {
+                    let sub = parallel::slice_batch(codes, start, count);
+                    scope.spawn(move || self.forward_serial(&sub))
+                })
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("forward worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// The single-threaded stage walk: codes `[B,img,img,in_ch]` ->
+    /// logits `[B][classes]`. The one and only forward implementation.
+    pub fn forward_serial(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
+        let qmax = (1i32 << self.act_bits) - 1;
+        let mut data = StageData::Codes(Cow::Borrowed(codes));
+        for stage in &self.stages {
+            data = match (stage, data) {
+                (CompiledStage::Conv(engine), StageData::Codes(x)) => {
+                    StageData::Acc(engine.conv(&x))
+                }
+                (&CompiledStage::Requantize { scale }, StageData::Acc(a)) => {
+                    // round-ties-even matches `jnp.round` bit-for-bit
+                    StageData::Codes(Cow::Owned(a.map(|v| {
+                        let r = (v as f32 * scale).round_ties_even() as i32;
+                        r.clamp(0, qmax) as u8
+                    })))
+                }
+                (&CompiledStage::MaxPool { k }, StageData::Codes(x)) => {
+                    StageData::Codes(Cow::Owned(pool_codes(&x, k)))
+                }
+                (CompiledStage::Dense { classes, w }, StageData::Codes(x)) => {
+                    // flatten NHWC row-major (matches jnp reshape), then
+                    // the integer dense head
+                    let s = x.shape();
+                    let feat = s.h * s.w * s.c;
+                    let mut out = Vec::with_capacity(s.n);
+                    for n in 0..s.n {
+                        let flat = &x.data()[n * feat..(n + 1) * feat];
+                        let mut logits = vec![0i32; *classes];
+                        for (cls, logit) in logits.iter_mut().enumerate() {
+                            let row = &w[cls * feat..(cls + 1) * feat];
+                            *logit = row
+                                .iter()
+                                .zip(flat.iter())
+                                .map(|(&w, &a)| w as i32 * a as i32)
+                                .sum();
+                        }
+                        out.push(logits);
+                    }
+                    return out;
+                }
+                // validate() proved the dataflow; a mismatch here is a bug.
+                _ => unreachable!("stage dataflow was validated at compile time"),
+            };
+        }
+        unreachable!("validated networks end with a dense stage")
+    }
+
+    /// Forward + argmax.
+    pub fn classify(&self, codes: &Tensor4<u8>) -> Vec<usize> {
+        self.forward(codes)
+            .iter()
+            .map(|logits| {
+                logits
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// `k`x`k` max pool on u8 codes (codes are monotone in the dequantized
+/// value, so pooling codes == pooling values).
+fn pool_codes(x: &Tensor4<u8>, k: usize) -> Tensor4<u8> {
+    let as_i32 = x.map(|v| v as i32);
+    max_pool2d_k(&as_i32, k).map(|v| v as u8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{random_params, random_params_seeded};
+    use crate::util::prng::Rng;
+
+    fn seed_spec(choice: EngineChoice) -> (NetworkSpec, NetworkWeights) {
+        NetworkSpec::quantcnn(&random_params_seeded(4, 3), choice)
+    }
+
+    fn codes(n: usize, img: usize, bits: u32, seed: u64) -> Tensor4<u8> {
+        let mut rng = Rng::new(seed);
+        Tensor4::random_activations(Shape4::new(n, img, img, 1), bits, &mut rng)
+    }
+
+    #[test]
+    fn seed_topology_validates_and_compiles() {
+        let (spec, weights) = seed_spec(EngineChoice::Pcilt);
+        spec.validate().unwrap();
+        assert_eq!(spec.depth(), 7);
+        assert_eq!(spec.conv_count(), 2);
+        assert_eq!(spec.classes().unwrap(), 8);
+        let store = Arc::new(TableStore::new());
+        let net = spec.compile_with_defaults(&weights, &store).unwrap();
+        assert_eq!(net.engine_name(), "pcilt");
+        assert_eq!(net.classes(), 8);
+        let out = net.forward(&codes(3, 16, 4, 1));
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|l| l.len() == 8));
+    }
+
+    #[test]
+    fn mistyped_graphs_rejected_with_stage_index() {
+        let conv = StageSpec::Conv {
+            out_ch: 4,
+            kernel: 3,
+            stride: 1,
+            engine: EngineChoice::Dm,
+        };
+        let cases: Vec<(Vec<StageSpec>, usize)> = vec![
+            // conv directly on accumulators
+            (vec![conv.clone(), conv.clone()], 1),
+            // requantize on codes
+            (vec![StageSpec::Requantize { scale: 0.1 }], 0),
+            // pool on accumulators
+            (vec![conv.clone(), StageSpec::MaxPool { k: 2 }], 1),
+            // dense on accumulators
+            (vec![conv.clone(), StageSpec::Dense { classes: 4 }], 1),
+            // dense not last
+            (
+                vec![
+                    StageSpec::Dense { classes: 4 },
+                    StageSpec::MaxPool { k: 2 },
+                ],
+                1,
+            ),
+        ];
+        for (stages, bad_stage) in cases {
+            let spec = NetworkSpec {
+                act_bits: 4,
+                img: 16,
+                in_ch: 1,
+                stages,
+            };
+            match spec.validate().unwrap_err() {
+                NetworkError::Stage { stage, .. } => {
+                    assert_eq!(stage, bad_stage);
+                }
+                other => panic!("expected stage error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn shape_propagation_catches_collapsed_maps() {
+        // 16 -> conv k3 -> 14 -> pool 16?? no: pool k16 collapses
+        let spec = NetworkSpec {
+            act_bits: 4,
+            img: 16,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 2,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Dm,
+                },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::MaxPool { k: 16 },
+                StageSpec::Dense { classes: 4 },
+            ],
+        };
+        assert!(matches!(
+            spec.validate(),
+            Err(NetworkError::Stage { stage: 2, .. })
+        ));
+        // and a kernel larger than its input
+        let spec = NetworkSpec {
+            act_bits: 4,
+            img: 4,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 2,
+                    kernel: 5,
+                    stride: 1,
+                    engine: EngineChoice::Dm,
+                },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::Dense { classes: 4 },
+            ],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn missing_dense_tail_rejected() {
+        let spec = NetworkSpec {
+            act_bits: 4,
+            img: 16,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 2,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Dm,
+                },
+                StageSpec::Requantize { scale: 0.1 },
+            ],
+        };
+        assert!(matches!(spec.validate(), Err(NetworkError::Spec(_))));
+    }
+
+    #[test]
+    fn seeded_weights_match_quantcnn_weight_stream() {
+        // The seed topology + seeded_weights must reproduce the exact
+        // weight stream of random_params_seeded, so seeded fleets keep
+        // their shared-backbone table dedup.
+        let params = random_params_seeded(4, 17);
+        let (spec, from_params) = NetworkSpec::quantcnn(&params, EngineChoice::Dm);
+        let seeded = spec.seeded_weights(17).unwrap();
+        assert_eq!(seeded, from_params);
+        // and a dense-only re-randomization keeps the conv stream intact
+        let mut tuned = seeded.clone();
+        tuned.randomize_dense(99);
+        assert_eq!(tuned.convs, from_params.convs);
+        assert_ne!(tuned.dense, from_params.dense);
+    }
+
+    #[test]
+    fn weight_shape_mismatch_rejected() {
+        let (spec, mut weights) = seed_spec(EngineChoice::Dm);
+        weights.convs.pop();
+        assert!(matches!(
+            spec.compile_with_defaults(&weights, &Arc::new(TableStore::new())),
+            Err(NetworkError::Weights(_))
+        ));
+        let (spec, mut weights) = seed_spec(EngineChoice::Dm);
+        weights.dense.pop();
+        assert!(matches!(
+            spec.compile_with_defaults(&weights, &Arc::new(TableStore::new())),
+            Err(NetworkError::Weights(_))
+        ));
+    }
+
+    #[test]
+    fn plan_and_compile_agree_on_table_keys() {
+        // The satellite regression: keys predicted by the planning pass ==
+        // keys the store actually holds after compilation. No mirror to
+        // keep in sync anymore.
+        let (spec, weights) = seed_spec(EngineChoice::Pcilt);
+        let store = Arc::new(TableStore::new());
+        let planner = EnginePlanner::with_store(
+            crate::pcilt::planner::default_policy(),
+            store.clone(),
+        );
+        let plan = spec
+            .plan(&weights, &planner, crate::pcilt::planner::default_plan_batch())
+            .unwrap();
+        let predicted = plan.table_keys();
+        assert_eq!(predicted.len(), 2, "two conv stages, two dense keys");
+        let net = spec.compile_with_defaults(&weights, &store).unwrap();
+        assert_eq!(net.table_keys(), predicted.as_slice());
+        for k in net.table_keys() {
+            assert!(store.contains(*k), "compiled key missing from store");
+        }
+        assert_eq!(store.stats().entries as usize, predicted.len());
+        // DM is table-free
+        let (dm_spec, dm_weights) = seed_spec(EngineChoice::Dm);
+        let dm = dm_spec.compile_with_defaults(&dm_weights, &store).unwrap();
+        assert!(dm.table_keys().is_empty());
+        // a fine-tuned head does not change the conv keys
+        let mut tuned = weights.clone();
+        tuned.randomize_dense(5);
+        let tuned_net = spec.compile_with_defaults(&tuned, &store).unwrap();
+        assert_eq!(tuned_net.table_keys(), predicted.as_slice());
+    }
+
+    #[test]
+    fn infeasible_forced_engines_fail_early() {
+        // A forced segment whose offset space overflows dies at
+        // validation (config load), not inside a worker's table build.
+        let spec = NetworkSpec {
+            act_bits: 4,
+            img: 8,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 2,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Segment { seg_n: 8 }, // width 32
+                },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::Dense { classes: 4 },
+            ],
+        };
+        assert!(matches!(
+            spec.validate(),
+            Err(NetworkError::Stage { stage: 0, .. })
+        ));
+        // A forced pcilt past the planner's table-byte ceiling dies at
+        // plan time with the registry's reason, not an OOM at build time.
+        let spec = NetworkSpec {
+            act_bits: 8,
+            img: 4,
+            in_ch: 256,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 1024,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Pcilt,
+                },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::Dense { classes: 2 },
+            ],
+        };
+        let weights = spec.seeded_weights(1).unwrap();
+        let err = spec
+            .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+            .unwrap_err();
+        match err {
+            NetworkError::Stage { stage, reason } => {
+                assert_eq!(stage, 0);
+                assert!(reason.contains("GiB"), "{reason}");
+            }
+            other => panic!("expected stage error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forced_engines_are_built_and_labeled() {
+        let mut rng = Rng::new(23);
+        let params = random_params(2, &mut rng);
+        let (spec, weights) = NetworkSpec::quantcnn(&params, EngineChoice::Segment { seg_n: 2 });
+        let store = Arc::new(TableStore::new());
+        let planner = EnginePlanner::with_store(
+            crate::pcilt::planner::default_policy(),
+            store.clone(),
+        );
+        let plan = spec.plan(&weights, &planner, 8).unwrap();
+        for cp in &plan.convs {
+            assert!(cp.forced);
+            assert_eq!(cp.chosen, EngineId::Segment { seg_n: 2 });
+        }
+        let net = spec.compile_with_defaults(&weights, &store).unwrap();
+        assert_eq!(net.conv_engine_names().len(), 2);
+    }
+
+    #[test]
+    fn deep_heterogeneous_network_matches_dm_reference() {
+        // A 4-conv spec with a different engine per stage must be
+        // bit-identical to the all-DM build of the same weights.
+        let engines = [
+            EngineChoice::Pcilt,
+            EngineChoice::Segment { seg_n: 2 },
+            EngineChoice::Shared,
+            EngineChoice::Dm,
+        ];
+        let mk = |per_stage: &dyn Fn(usize) -> EngineChoice| NetworkSpec {
+            act_bits: 2,
+            img: 20,
+            in_ch: 1,
+            stages: (0..4)
+                .flat_map(|i| {
+                    let mut v = vec![
+                        StageSpec::Conv {
+                            out_ch: 4,
+                            kernel: 3,
+                            stride: 1,
+                            engine: per_stage(i),
+                        },
+                        StageSpec::Requantize { scale: 0.05 },
+                    ];
+                    if i == 1 {
+                        v.push(StageSpec::MaxPool { k: 2 });
+                    }
+                    v
+                })
+                .chain([StageSpec::Dense { classes: 6 }])
+                .collect(),
+        };
+        let spec = mk(&|i| engines[i]);
+        let dm_spec = mk(&|_| EngineChoice::Dm);
+        let weights = spec.seeded_weights(31).unwrap();
+        let net = spec
+            .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+            .unwrap();
+        let dm = dm_spec
+            .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+            .unwrap();
+        assert_eq!(
+            net.conv_engine_names().len(),
+            4,
+            "four conv stages compiled"
+        );
+        assert!(net.engine_name().contains('+'), "{}", net.engine_name());
+        let x = codes(3, 20, 2, 7);
+        assert_eq!(net.forward(&x), dm.forward(&x));
+    }
+
+    #[test]
+    fn forward_parallel_is_bit_identical_to_serial() {
+        let (spec, weights) = seed_spec(EngineChoice::Pcilt);
+        let store = Arc::new(TableStore::new());
+        let serial = spec
+            .compile_with_defaults(&weights, &store)
+            .unwrap()
+            .with_threads(1);
+        let x = codes(9, 16, 4, 5);
+        let reference = serial.forward_serial(&x);
+        assert_eq!(serial.forward(&x), reference, "threads=1 goes serial");
+        for threads in [2usize, 3, 8, 32] {
+            let net = spec
+                .compile_with_defaults(&weights, &store)
+                .unwrap()
+                .with_threads(threads);
+            assert_eq!(net.forward(&x), reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_codes_matches_value_pooling() {
+        let mut rng = Rng::new(6);
+        let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 2), 4, &mut rng);
+        for k in [2usize, 3] {
+            let pooled = pool_codes(&x, k);
+            let oh = 6 / k;
+            for h in 0..oh {
+                for w in 0..oh {
+                    for c in 0..2 {
+                        let mut m = 0u8;
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                m = m.max(x.get(0, k * h + dy, k * w + dx, c));
+                            }
+                        }
+                        assert_eq!(pooled.get(0, h, w, c), m, "k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_conv_spec_compiles_and_matches_dm() {
+        let mk = |engine| NetworkSpec {
+            act_bits: 2,
+            img: 17,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv {
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 2,
+                    engine,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+                StageSpec::Dense { classes: 4 },
+            ],
+        };
+        let spec = mk(EngineChoice::Pcilt);
+        let weights = spec.seeded_weights(41).unwrap();
+        let store = Arc::new(TableStore::new());
+        let net = spec.compile_with_defaults(&weights, &store).unwrap();
+        let dm = mk(EngineChoice::Dm)
+            .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+            .unwrap();
+        let x = codes(2, 17, 2, 13);
+        assert_eq!(net.forward(&x), dm.forward(&x));
+    }
+
+    #[test]
+    fn engine_name_joins_unique_stage_names() {
+        assert_eq!(join_engine_names(&["pcilt", "pcilt"]), "pcilt");
+        assert_eq!(join_engine_names(&["pcilt", "dm"]), "pcilt+dm");
+        assert_eq!(
+            join_engine_names(&["pcilt", "dm", "pcilt"]),
+            "pcilt+dm+pcilt"
+        );
+    }
+}

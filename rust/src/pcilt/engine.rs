@@ -61,13 +61,13 @@ pub trait ConvEngine: Send + Sync {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: 0.0,
+            table_bytes: 0,
         }
     }
 }
 
 /// Registry metadata every engine reports (see [`ConvEngine::info`]).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EngineInfo {
     /// Engine name (same as [`ConvEngine::name`]).
     pub name: &'static str,
@@ -77,7 +77,8 @@ pub struct EngineInfo {
     /// only auto-selects engines that guarantee bit-exactness.
     pub exact: bool,
     /// Bytes of lookup tables this built instance holds (0 if table-free).
-    pub table_bytes: f64,
+    /// Exact integer byte counts — fractional-byte bit packings round up.
+    pub table_bytes: u64,
 }
 
 /// Arithmetic/memory operation counts for an engine invocation.

@@ -247,7 +247,7 @@ impl ConvEngine for FftEngine {
             // float spectra: rounds exactly at this repo's magnitudes, but
             // not guaranteed bit-exact — the planner won't auto-pick.
             exact: false,
-            table_bytes: spectra as f64 * 16.0,
+            table_bytes: spectra as u64 * 16,
         }
     }
 }

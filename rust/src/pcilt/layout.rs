@@ -275,7 +275,7 @@ impl ConvEngine for LayoutEngine {
         EngineInfo {
             name: self.name(),
             exact: unscaled && seen.iter().all(|&c| c <= 1),
-            table_bytes: self.entries() as f64 * 4.0,
+            table_bytes: self.entries() as u64 * 4,
         }
     }
 }

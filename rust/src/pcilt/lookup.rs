@@ -201,7 +201,7 @@ impl ConvEngine for PciltEngine {
             name: self.name(),
             exact: true,
             // canonical tables + the channels-last mirror, i32 entries
-            table_bytes: (self.tables().entries() + self.cl.len()) as f64 * 4.0,
+            table_bytes: (self.tables().entries() + self.cl.len()) as u64 * 4,
         }
     }
 }

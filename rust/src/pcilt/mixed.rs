@@ -327,7 +327,7 @@ impl ConvEngine for MixedEngine {
             name: self.name(),
             // exact only in LCD mode; lossy truncation reports inexact
             exact: self.max_code_error() == 0,
-            table_bytes: self.tables().cl.len() as f64 * 4.0,
+            table_bytes: self.tables().cl.len() as u64 * 4,
         }
     }
 }

@@ -238,8 +238,9 @@ pub struct Candidate {
     pub infeasible: Option<String>,
     /// Predicted per-invocation op counts on `spec.input`.
     pub ops: OpCounts,
-    /// Predicted lookup-table bytes held by the built engine.
-    pub table_bytes: f64,
+    /// Predicted lookup-table bytes held by the built engine (exact
+    /// integer byte counts, matching `ConvEngine::info`).
+    pub table_bytes: u64,
     /// One-off table construction cost in `f` evaluations. Zero when the
     /// tables are already resident in the planner's `TableStore` — the
     /// marginal cost of a cached build is a lookup.
@@ -287,8 +288,9 @@ impl Default for PlannerPolicy {
 }
 
 impl PlannerPolicy {
-    fn score(&self, ops: OpCounts, table_bytes: f64, build_evals: u64) -> f64 {
-        let fetch_factor = if table_bytes <= self.cache_bytes { 1.0 } else { self.miss_penalty };
+    fn score(&self, ops: OpCounts, table_bytes: u64, build_evals: u64) -> f64 {
+        let fetch_factor =
+            if table_bytes as f64 <= self.cache_bytes { 1.0 } else { self.miss_penalty };
         ops.mults as f64 * self.mult_cost
             + ops.adds as f64 * self.add_cost
             + ops.fetches as f64 * self.fetch_cost * fetch_factor
@@ -355,7 +357,7 @@ impl LayerPlan {
                 fmt_count(c.ops.mults as u128),
                 fmt_count(c.ops.adds as u128),
                 fmt_count(c.ops.fetches as u128),
-                fmt_bytes(c.table_bytes),
+                fmt_bytes(c.table_bytes as f64),
                 c.score,
                 status,
             ));
@@ -529,7 +531,7 @@ impl EnginePlanner {
 
 /// Upper bound on table bytes before a candidate is "infeasible" rather
 /// than merely penalized — a 1 GiB table is a configuration error.
-const TABLE_BYTES_CEILING: f64 = 1024.0 * 1024.0 * 1024.0;
+const TABLE_BYTES_CEILING: u64 = 1024 * 1024 * 1024;
 
 /// Enumerate the full engine registry for one layer. Every `ConvEngine`
 /// implementation appears, either scored or with an infeasibility reason.
@@ -554,7 +556,7 @@ pub fn registry(
                     exact: bool,
                     infeasible: Option<String>,
                     ops: OpCounts,
-                    table_bytes: f64,
+                    table_bytes: u64,
                     build_evals: u64| {
         let cached = match (weights, store) {
             (Some(w), Some(st)) if infeasible.is_none() => {
@@ -565,7 +567,10 @@ pub fn registry(
         let build_evals = if cached { 0 } else { build_evals };
         let too_big = !cached && infeasible.is_none() && table_bytes > TABLE_BYTES_CEILING;
         let infeasible = if too_big {
-            Some(format!("tables would need {:.1} GiB", table_bytes / TABLE_BYTES_CEILING))
+            Some(format!(
+                "tables would need {:.1} GiB",
+                table_bytes as f64 / TABLE_BYTES_CEILING as f64
+            ))
         } else {
             infeasible
         };
@@ -592,7 +597,7 @@ pub fn registry(
             adds: rfs * per_rf,
             fetches: rfs * per_rf * 2,
         },
-        (positions * oc) as f64,
+        positions * oc,
         0,
     );
 
@@ -606,7 +611,7 @@ pub fn registry(
             adds: rfs * per_rf,
             fetches: rfs * (positions + per_rf),
         },
-        (oc * positions * card) as f64 * 8.0,
+        oc * positions * card * 8,
         oc * positions * card,
     );
 
@@ -641,7 +646,7 @@ pub fn registry(
             adds: rfs * per_rf,
             fetches: rfs * (positions + 2 * per_rf),
         },
-        (unique * card) as f64 * 4.0 + (oc * positions) as f64,
+        unique * card * 4 + oc * positions,
         unique * card,
     );
 
@@ -656,7 +661,7 @@ pub fn registry(
             adds: rfs * per_rf,
             fetches: rfs * (positions + per_rf),
         },
-        (oc * positions * card) as f64 * 4.0,
+        oc * positions * card * 4,
         oc * positions * card,
     );
 
@@ -670,7 +675,7 @@ pub fn registry(
                 true,
                 Some(format!("offset space 2^{width} infeasible")),
                 OpCounts::default(),
-                0.0,
+                0,
                 0,
             );
             continue;
@@ -686,7 +691,7 @@ pub fn registry(
                 adds: rfs * n_seg * oc,
                 fetches: rfs * (positions + n_seg * oc),
             },
-            (oc * n_seg * seg_card) as f64 * 4.0,
+            oc * n_seg * seg_card * 4,
             oc * n_seg * seg_card * seg_n as u64,
         );
     }
@@ -716,7 +721,7 @@ pub fn registry(
                     adds: rfs * n_seg * oc,
                     fetches: rfs * (n_seg + n_seg * oc) + stream_ops,
                 },
-                (oc * n_seg * seg_card) as f64 * 4.0,
+                oc * n_seg * seg_card * 4,
                 oc * n_seg * seg_card * seg_n as u64,
             );
         } else {
@@ -725,7 +730,7 @@ pub fn registry(
                 true,
                 Some(format!("offset space 2^{width} infeasible")),
                 OpCounts::default(),
-                0.0,
+                0,
                 0,
             );
         }
@@ -747,7 +752,7 @@ pub fn registry(
                 adds: rfs * n_seg * oc,
                 fetches: rfs * (positions + n_seg * oc),
             },
-            (oc * n_seg * seg_card) as f64 * 4.0,
+            oc * n_seg * seg_card * 4,
             oc * n_seg * seg_card * seg_n as u64,
         );
     }
@@ -759,7 +764,7 @@ pub fn registry(
         true,
         Some("compositional: wraps an inner engine over grouped weights".into()),
         OpCounts::default(),
-        0.0,
+        0,
         0,
     );
 
@@ -777,7 +782,7 @@ pub fn registry(
                 adds: tiles * (spec.in_ch as u64 * 32 + oc * 24 + pairs * 16),
                 fetches: tiles * (spec.in_ch as u64 * 16 + pairs * 16),
             },
-            pairs as f64 * 16.0 * 8.0,
+            pairs * 16 * 8,
             pairs * 16,
         );
     } else {
@@ -786,7 +791,7 @@ pub fn registry(
             false,
             Some("needs 3x3 unit-stride geometry".into()),
             OpCounts::default(),
-            0.0,
+            0,
             0,
         );
     }
@@ -809,7 +814,7 @@ pub fn registry(
                 adds: ffts * butterflies * 6 + pointwise * 2,
                 fetches: ffts * pts * 2 + pointwise * 2,
             },
-            (spec.in_ch as u64 * oc * pts) as f64 * 16.0,
+            spec.in_ch as u64 * oc * pts * 16,
             (spec.in_ch as u64 * oc) * pts,
         );
     } else {
@@ -818,7 +823,7 @@ pub fn registry(
             false,
             Some("needs unit stride".into()),
             OpCounts::default(),
-            0.0,
+            0,
             0,
         );
     }
@@ -927,7 +932,7 @@ mod tests {
         let plan = EnginePlanner::new(PlannerPolicy::default()).plan_layer(&s, Some(&w));
         let c = plan.candidate(EngineId::Pcilt).unwrap();
         let t = LayerTables::build(&w, 4, &ConvFunc::Mul);
-        assert_eq!(c.table_bytes, t.entries() as f64 * 8.0);
+        assert_eq!(c.table_bytes, t.entries() as u64 * 8);
         assert_eq!(c.build_evals, t.build_evals);
     }
 
@@ -942,8 +947,7 @@ mod tests {
         let shared = cands.iter().find(|c| c.id == EngineId::Shared).unwrap();
         let card = 1u64 << s.act_bits;
         let unique = 1u64 << s.weight_bits; // 256, NOT 255
-        let expect =
-            (unique * card) as f64 * 4.0 + (s.out_ch * s.geom.kh * s.geom.kw * s.in_ch) as f64;
+        let expect = unique * card * 4 + (s.out_ch * s.geom.kh * s.geom.kw * s.in_ch) as u64;
         assert_eq!(shared.table_bytes, expect);
         assert_eq!(shared.build_evals, unique * card);
     }
@@ -965,7 +969,7 @@ mod tests {
         let informed = planner.plan_layer(&s, Some(&w));
         let b = blind.candidate(EngineId::Shared).unwrap().table_bytes;
         let i = informed.candidate(EngineId::Shared).unwrap().table_bytes;
-        assert!(i < b / 10.0, "informed {i} vs blind {b}");
+        assert!(i * 10 < b, "informed {i} vs blind {b}");
     }
 
     #[test]

@@ -344,7 +344,7 @@ impl ConvEngine for SegmentEngine {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: self.entries() as f64 * 4.0,
+            table_bytes: self.entries() as u64 * 4,
         }
     }
 }
@@ -789,7 +789,7 @@ impl ConvEngine for RowSegmentEngine {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: self.entries() as f64 * 4.0,
+            table_bytes: self.entries() as u64 * 4,
         }
     }
 }

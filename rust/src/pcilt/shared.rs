@@ -386,7 +386,8 @@ impl ConvEngine for SharedEngine {
         EngineInfo {
             name: self.name(),
             exact: true,
-            table_bytes: self.tables().bytes(32).total(),
+            // fractional pointer-packing bytes round up to whole bytes
+            table_bytes: self.tables().bytes(32).total().ceil() as u64,
         }
     }
 }

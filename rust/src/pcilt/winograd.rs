@@ -199,7 +199,7 @@ impl ConvEngine for WinogradEngine {
             // f64 datapath: exact at this repo's magnitudes, but not
             // guaranteed bit-exact in general — the planner won't auto-pick.
             exact: false,
-            table_bytes: self.u.len() as f64 * 8.0,
+            table_bytes: self.u.len() as u64 * 8,
         }
     }
 }

@@ -9,6 +9,6 @@ mod shape;
 mod tensor4;
 mod ops;
 
-pub use ops::{im2col, max_pool2d, pad_nhwc, relu_i32, Padding};
+pub use ops::{im2col, max_pool2d, max_pool2d_k, pad_nhwc, relu_i32, Padding};
 pub use shape::Shape4;
 pub use tensor4::Tensor4;

@@ -66,19 +66,28 @@ pub fn im2col(
 /// 2×2 max pooling with stride 2 over an i32 NHWC tensor. Odd trailing
 /// rows/columns are dropped (floor semantics), matching the JAX model.
 pub fn max_pool2d(x: &Tensor4<i32>) -> Tensor4<i32> {
+    max_pool2d_k(x, 2)
+}
+
+/// `k`×`k` max pooling with stride `k` over an i32 NHWC tensor. Trailing
+/// rows/columns that don't fill a window are dropped (floor semantics);
+/// `k = 2` is bit-identical to [`max_pool2d`].
+pub fn max_pool2d_k(x: &Tensor4<i32>, k: usize) -> Tensor4<i32> {
+    assert!(k >= 1, "pool window must be >= 1");
     let s = x.shape();
-    let oh = s.h / 2;
-    let ow = s.w / 2;
+    let oh = s.h / k;
+    let ow = s.w / k;
     let mut out = Tensor4::zeros(Shape4::new(s.n, oh, ow, s.c));
     for n in 0..s.n {
         for y in 0..oh {
             for w in 0..ow {
                 for c in 0..s.c {
-                    let m = x
-                        .get(n, 2 * y, 2 * w, c)
-                        .max(x.get(n, 2 * y, 2 * w + 1, c))
-                        .max(x.get(n, 2 * y + 1, 2 * w, c))
-                        .max(x.get(n, 2 * y + 1, 2 * w + 1, c));
+                    let mut m = i32::MIN;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(x.get(n, k * y + dy, k * w + dx, c));
+                        }
+                    }
                     out.set(n, y, w, c, m);
                 }
             }
@@ -147,6 +156,26 @@ mod tests {
         assert_eq!(p.shape(), Shape4::new(1, 2, 2, 1));
         assert_eq!(p.get(0, 0, 0, 0), 5);
         assert_eq!(p.get(0, 1, 1, 0), 15);
+    }
+
+    #[test]
+    fn max_pool_k_generalizes_2x2() {
+        let mut rng = Rng::new(9);
+        let x = Tensor4::random_activations(Shape4::new(2, 7, 7, 3), 4, &mut rng).map(|v| v as i32);
+        // k=2 is bit-identical to the fixed 2x2 path
+        assert_eq!(max_pool2d_k(&x, 2), max_pool2d(&x));
+        // k=3 windows take the max of all nine cells
+        let p = max_pool2d_k(&x, 3);
+        assert_eq!(p.shape(), Shape4::new(2, 2, 2, 3));
+        let mut m = i32::MIN;
+        for dy in 0..3 {
+            for dx in 0..3 {
+                m = m.max(x.get(0, dy, dx, 0));
+            }
+        }
+        assert_eq!(p.get(0, 0, 0, 0), m);
+        // k=1 is the identity on whole windows
+        assert_eq!(max_pool2d_k(&x, 1), x);
     }
 
     #[test]

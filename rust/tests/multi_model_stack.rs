@@ -33,7 +33,7 @@ fn model_cfg(name: &str, seed: u64, head_seed: Option<u64>) -> ModelConfig {
         act_bits: 4,
         seed,
         head_seed,
-        artifact_dir: None,
+        ..ModelConfig::default()
     }
 }
 
@@ -126,10 +126,13 @@ fn routed_outputs_bit_identical_to_standalone() {
     let mut base_logits = Vec::new();
     let mut tuned_logits = Vec::new();
     for name in ["base", "tuned"] {
-        // standalone reference: same params, private store, no serving
-        let params = registry.model(name).unwrap().params.clone();
-        let standalone =
-            QuantCnn::with_store(params, EngineChoice::Pcilt, &Arc::new(TableStore::new()));
+        // standalone reference: same spec + weights, private store, no
+        // serving
+        let entry = registry.model(name).unwrap();
+        let standalone = entry
+            .spec
+            .compile_with_defaults(&entry.weights, &Arc::new(TableStore::new()))
+            .unwrap();
         for i in 0..6 {
             let img = image(100 + i);
             let (_, rx) = registry.route(Some(name), None, img.clone()).unwrap();

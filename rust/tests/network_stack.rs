@@ -1,0 +1,261 @@
+//! NetworkSpec stack: the ISSUE-4 acceptance criteria.
+//!
+//! The compat `NetworkSpec` must reproduce seed `QuantCnn` outputs
+//! bit-for-bit across every engine choice; a 4-conv spec with
+//! heterogeneous per-stage engines must be bit-exact vs the DM reference;
+//! compile-time table keys must equal what the store actually builds; and
+//! a 4-conv network declared purely in TOML must serve end-to-end through
+//! the `ModelRegistry` with planner-chosen per-stage engines.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pcilt::config::{Document, ServeConfig};
+use pcilt::coordinator::{ModelRegistry, ServerOpts};
+use pcilt::model::{
+    random_params_seeded, EngineChoice, NetworkSpec, QuantCnn, StageSpec,
+};
+use pcilt::pcilt::planner::EnginePlanner;
+use pcilt::pcilt::TableStore;
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::propcheck::forall;
+
+fn images(n: usize, img: usize, bits: u32, seed: u64) -> Tensor4<u8> {
+    let mut rng = Rng::new(seed);
+    Tensor4::random_activations(Shape4::new(n, img, img, 1), bits, &mut rng)
+}
+
+/// Property: for every engine choice, the compat spec (what `QuantCnn` now
+/// compiles through) is bit-for-bit the original seed model — across
+/// random weights, random inputs, serial and parallel forward.
+#[test]
+fn compat_spec_reproduces_quantcnn_bit_for_bit() {
+    forall("compat NetworkSpec == QuantCnn", 12, |g| {
+        let weight_seed = g.rng().below(1 << 20);
+        let input_seed = g.rng().below(1 << 20);
+        let act_bits = g.usize(1, 4) as u32;
+        let batch = g.usize(1, 5);
+        let params = random_params_seeded(act_bits, weight_seed);
+        let codes = images(batch, params.img, act_bits, input_seed);
+        let reference = {
+            let store = Arc::new(TableStore::new());
+            QuantCnn::with_store(params.clone(), EngineChoice::Dm, &store).forward(&codes)
+        };
+        for choice in [
+            EngineChoice::Dm,
+            EngineChoice::Pcilt,
+            EngineChoice::Segment { seg_n: 2 },
+            EngineChoice::Shared,
+            EngineChoice::Auto,
+        ] {
+            let (spec, weights) = NetworkSpec::quantcnn(&params, choice);
+            let store = Arc::new(TableStore::new());
+            let net = spec.compile_with_defaults(&weights, &store).unwrap();
+            assert_eq!(
+                net.forward(&codes),
+                reference,
+                "engine {} (weights {weight_seed}, inputs {input_seed}, a{act_bits})",
+                net.engine_name()
+            );
+            // serial == parallel: the single stage-walk pin
+            assert_eq!(net.with_threads(4).forward(&codes), reference);
+        }
+    });
+}
+
+/// A deeper 4-conv spec with a different engine at every stage is
+/// bit-exact vs the all-DM compile of the same weights — the paper's
+/// per-layer heterogeneity claim at depth.
+#[test]
+fn four_conv_heterogeneous_spec_is_bit_exact_vs_dm() {
+    let with_engines = |engines: [EngineChoice; 4]| NetworkSpec {
+        act_bits: 2,
+        img: 24,
+        in_ch: 1,
+        stages: vec![
+            StageSpec::Conv { out_ch: 6, kernel: 3, stride: 1, engine: engines[0] },
+            StageSpec::Requantize { scale: 0.04 },
+            StageSpec::Conv { out_ch: 8, kernel: 3, stride: 1, engine: engines[1] },
+            StageSpec::Requantize { scale: 0.04 },
+            StageSpec::MaxPool { k: 2 },
+            StageSpec::Conv { out_ch: 8, kernel: 3, stride: 1, engine: engines[2] },
+            StageSpec::Requantize { scale: 0.04 },
+            StageSpec::Conv { out_ch: 4, kernel: 3, stride: 1, engine: engines[3] },
+            StageSpec::Requantize { scale: 0.04 },
+            StageSpec::Dense { classes: 10 },
+        ],
+    };
+    let hetero = with_engines([
+        EngineChoice::Pcilt,
+        EngineChoice::Segment { seg_n: 2 },
+        EngineChoice::Shared,
+        EngineChoice::Auto,
+    ]);
+    let dm = with_engines([EngineChoice::Dm; 4]);
+    let weights = hetero.seeded_weights(77).unwrap();
+    let net = hetero
+        .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+        .unwrap();
+    let reference = dm
+        .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+        .unwrap();
+    assert_eq!(net.conv_engine_names().len(), 4);
+    assert_ne!(net.engine_name(), "dm", "{}", net.engine_name());
+    for seed in 0..4 {
+        let x = images(3, 24, 2, 500 + seed);
+        assert_eq!(net.forward(&x), reference.forward(&x), "input seed {seed}");
+    }
+}
+
+/// Compile-time table keys == the keys the store actually holds after the
+/// build — the drift-proof replacement for the old `planned_table_keys`
+/// mirror.
+#[test]
+fn compiled_keys_are_the_store_contents() {
+    let spec = NetworkSpec {
+        act_bits: 2,
+        img: 20,
+        in_ch: 1,
+        stages: vec![
+            StageSpec::Conv { out_ch: 4, kernel: 3, stride: 1, engine: EngineChoice::Pcilt },
+            StageSpec::Requantize { scale: 0.05 },
+            StageSpec::Conv { out_ch: 4, kernel: 3, stride: 1, engine: EngineChoice::Auto },
+            StageSpec::Requantize { scale: 0.05 },
+            StageSpec::Conv { out_ch: 4, kernel: 3, stride: 1, engine: EngineChoice::Dm },
+            StageSpec::Requantize { scale: 0.05 },
+            StageSpec::Dense { classes: 4 },
+        ],
+    };
+    let weights = spec.seeded_weights(9).unwrap();
+    let store = Arc::new(TableStore::new());
+    // the plan predicts…
+    let planner = EnginePlanner::with_store(
+        pcilt::pcilt::planner::default_policy(),
+        store.clone(),
+    );
+    let predicted = spec
+        .plan(&weights, &planner, pcilt::pcilt::planner::default_plan_batch())
+        .unwrap()
+        .table_keys();
+    // …compile records the same keys, and the store holds exactly them.
+    let net = spec.compile_with_defaults(&weights, &store).unwrap();
+    assert_eq!(net.table_keys(), predicted.as_slice());
+    for k in net.table_keys() {
+        assert!(store.contains(*k));
+    }
+    assert_eq!(store.stats().entries as usize, net.table_keys().len());
+}
+
+/// The headline acceptance criterion: a 4-conv `NetworkSpec` declared
+/// purely in TOML serves end-to-end through the `ModelRegistry` with
+/// planner-chosen per-stage engines, bit-identical to the DM reference.
+#[test]
+fn toml_declared_4conv_network_serves_bit_exact() {
+    let doc = Document::parse(
+        r#"
+[serve]
+workers = 2
+max_batch = 4
+[[models]]
+name = "deep4"
+engine = "auto"
+act_bits = 2
+seed = 123
+img = 24
+[[models.layers]]
+type = "conv"
+out_ch = 6
+kernel = 3
+scale = 0.04
+[[models.layers]]
+type = "conv"
+out_ch = 8
+kernel = 3
+scale = 0.04
+[[models.layers]]
+type = "pool"
+k = 2
+[[models.layers]]
+type = "conv"
+out_ch = 8
+kernel = 3
+scale = 0.04
+[[models.layers]]
+type = "conv"
+out_ch = 4
+kernel = 3
+scale = 0.04
+[[models.layers]]
+type = "dense"
+classes = 10
+"#,
+    )
+    .unwrap();
+    let cfg = ServeConfig::from_document(&doc).unwrap();
+    assert_eq!(cfg.models.len(), 1);
+    let m = &cfg.models[0];
+    assert_eq!(m.layers.len(), 10, "4 convs + 4 desugared requants + pool + dense");
+    let spec = m.network_spec().unwrap();
+    assert_eq!(spec.conv_count(), 4);
+
+    let store = Arc::new(TableStore::new());
+    let registry = ModelRegistry::start_with_store(
+        &cfg.models,
+        &ServerOpts {
+            workers: cfg.workers,
+            max_batch: cfg.max_batch,
+            batch_deadline: Duration::from_millis(1),
+            queue_capacity: 64,
+        },
+        store.clone(),
+    )
+    .unwrap();
+
+    // DM reference over the same declared spec + seeded weights.
+    let entry = registry.model("deep4").unwrap();
+    let dm_spec = NetworkSpec {
+        stages: entry
+            .spec
+            .stages
+            .iter()
+            .map(|s| match s {
+                StageSpec::Conv { out_ch, kernel, stride, .. } => StageSpec::Conv {
+                    out_ch: *out_ch,
+                    kernel: *kernel,
+                    stride: *stride,
+                    engine: EngineChoice::Dm,
+                },
+                other => other.clone(),
+            })
+            .collect(),
+        ..entry.spec.clone()
+    };
+    let reference = dm_spec
+        .compile_with_defaults(&entry.weights, &Arc::new(TableStore::new()))
+        .unwrap();
+
+    for i in 0..8 {
+        let img = images(1, 24, 2, 900 + i);
+        let (_, rx) = registry.route(Some("deep4"), None, img.clone()).unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.model, "deep4");
+        assert_eq!(
+            resp.logits,
+            reference.forward(&img)[0],
+            "served logits != DM reference (request {i})"
+        );
+    }
+    // every all-auto stage resolved through the planner to an exact engine
+    let served = entry
+        .spec
+        .compile_with_defaults(&entry.weights, &store)
+        .unwrap();
+    let names = served.conv_engine_names();
+    assert_eq!(names.len(), 4);
+    assert!(
+        !names.iter().any(|n| n.contains("winograd") || n.contains("fft")),
+        "planner must only pick exact engines: {names:?}"
+    );
+    registry.shutdown();
+}
