@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Generate the golden conformance fixtures under rust/tests/data/.
+
+Produces golden_<name>.bin files consumed by rust/tests/common/mod.rs —
+an implementation of the integer inference pipeline *independent* of the
+rust crate, so the conformance suite does not rest solely on the
+in-process DM reference agreeing with itself.
+
+The stage graphs MUST mirror `golden_spec` in rust/tests/common/mod.rs.
+All requantize scales are dyadic rationals, exact in both float32 and
+float64, so numpy and rust f32 denote identical values. Requantization is
+float32 multiply + round-half-even (np.rint) + clamp, matching
+`pcilt::fused::requant_code` bit for bit.
+
+Binary layout (little-endian):
+  magic "PGLD" | u32 version=1
+  u32 n_convs | per conv: u32 o,h,w,i then o*h*w*i weight bytes (i8)
+  u32 dense_len | dense weight bytes (i8)
+  u32 b,h,w,c | input code bytes (u8)
+  u32 rows, classes | rows*classes expected logits (i32)
+"""
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+OUT_DIR = Path(__file__).resolve().parents[2] / "rust" / "tests" / "data"
+
+
+def conv2d(x, w):
+    """Valid conv, stride 1. x [B,H,W,C] int64, w [O,kh,kw,I] int64."""
+    b, h, wd, c = x.shape
+    o, kh, kw, ci = w.shape
+    assert c == ci
+    oh, ow = h - kh + 1, wd - kw + 1
+    out = np.zeros((b, oh, ow, o), dtype=np.int64)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + oh, kx : kx + ow, :]  # [B,oh,ow,C]
+            # sum over C for every output channel
+            out += np.einsum("bhwc,oc->bhwo", patch, w[:, ky, kx, :])
+    return out
+
+
+def requant(acc, scale, qmax):
+    """float32 multiply + round-half-even + clamp, exactly as rust."""
+    r = np.rint(acc.astype(np.float32) * np.float32(scale)).astype(np.int64)
+    return np.clip(r, 0, qmax).astype(np.int64)
+
+
+def max_pool(x, k):
+    """k x k max pool, stride k, floor semantics (trailing dropped)."""
+    b, h, w, c = x.shape
+    ph, pw = h // k, w // k
+    x = x[:, : ph * k, : pw * k, :]
+    return x.reshape(b, ph, k, pw, k, c).max(axis=(2, 4))
+
+
+def dense(x, w_mat):
+    """Flatten NHWC row-major per sample, integer dot per class."""
+    b = x.shape[0]
+    flat = x.reshape(b, -1)  # row-major [H,W,C] flattening
+    return flat @ w_mat.astype(np.int64).T  # [B, classes]
+
+
+def run(spec, convs, dense_w, x):
+    acc = None
+    codes = x.astype(np.int64)
+    qmax = (1 << spec["act_bits"]) - 1
+    ci = 0
+    for stage in spec["stages"]:
+        kind = stage[0]
+        if kind == "conv":
+            acc = conv2d(codes, convs[ci].astype(np.int64))
+            ci += 1
+        elif kind == "requant":
+            codes = requant(acc, stage[1], qmax)
+        elif kind == "pool":
+            codes = max_pool(codes, stage[1])
+        elif kind == "dense":
+            return dense(codes, dense_w)
+    raise AssertionError("spec must end with dense")
+
+
+# Stage graphs — keep in sync with rust/tests/common/mod.rs golden_spec().
+SPECS = {
+    "g2_pool_floor": {
+        "act_bits": 2,
+        "img": 12,
+        "in_ch": 1,
+        "batch": 3,
+        "seed": 1021,
+        "convs": [(4, 3, 3, 1), (6, 3, 3, 4)],
+        "classes": 5,
+        "features": 1 * 1 * 6,
+        "stages": [
+            ("conv",),
+            ("requant", 0.0625),
+            ("pool", 2),
+            ("conv",),
+            ("requant", 0.09375),
+            ("pool", 2),  # 3x3 -> 1x1, floor
+            ("dense",),
+        ],
+    },
+    "g4_odd_maps": {
+        "act_bits": 4,
+        "img": 9,
+        "in_ch": 2,
+        "batch": 2,
+        "seed": 1022,
+        "convs": [(3, 3, 3, 2), (5, 3, 3, 3)],
+        "classes": 4,
+        "features": 5 * 5 * 5,
+        "stages": [
+            ("conv",),
+            ("requant", 0.03125),
+            ("conv",),
+            ("requant", 0.046875),
+            ("dense",),
+        ],
+    },
+    "g8_deep_pool": {
+        "act_bits": 8,
+        "img": 10,
+        "in_ch": 1,
+        "batch": 2,
+        "seed": 1023,
+        "convs": [(2, 3, 3, 1), (3, 3, 3, 2)],
+        "classes": 3,
+        "features": 1 * 1 * 3,
+        "stages": [
+            ("conv",),
+            ("requant", 0.00390625),
+            ("pool", 2),
+            ("conv",),
+            ("requant", 0.015625),
+            ("pool", 2),
+            ("dense",),
+        ],
+    },
+}
+
+
+def emit(name, spec):
+    rng = np.random.RandomState(spec["seed"])
+    convs = [rng.randint(-127, 128, size=s).astype(np.int8) for s in spec["convs"]]
+    dense_w = rng.randint(-127, 128, size=(spec["classes"], spec["features"])).astype(np.int8)
+    x = rng.randint(0, 1 << spec["act_bits"], size=(spec["batch"], spec["img"], spec["img"], spec["in_ch"])).astype(
+        np.uint8
+    )
+    logits = run(spec, convs, dense_w, x)
+    assert logits.shape == (spec["batch"], spec["classes"])
+    assert np.all(np.abs(logits) < 2**31), "logits overflow i32"
+
+    out = bytearray()
+    out += b"PGLD"
+    out += struct.pack("<I", 1)
+    out += struct.pack("<I", len(convs))
+    for w in convs:
+        out += struct.pack("<IIII", *w.shape)
+        out += w.tobytes()
+    out += struct.pack("<I", dense_w.size)
+    out += dense_w.tobytes()
+    out += struct.pack("<IIII", *x.shape)
+    out += x.tobytes()
+    out += struct.pack("<II", spec["batch"], spec["classes"])
+    out += logits.astype("<i4").tobytes()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"golden_{name}.bin"
+    path.write_bytes(bytes(out))
+    print(f"wrote {path} ({len(out)} bytes), logits[0] = {logits[0].tolist()}")
+
+
+if __name__ == "__main__":
+    for name, spec in SPECS.items():
+        emit(name, spec)

@@ -1,0 +1,158 @@
+//! Fused vs unfused stage-walk benchmark on the depth-scaling graphs
+//! (the same 2/4/8-conv topologies as `bench_network`): end-to-end
+//! imgs/sec for the fused code-domain pipeline (tiled
+//! conv→requantize→pool chains, absorbed-requantize tables) against the
+//! unfused per-stage reference walk, per depth. Results land in the JSON
+//! file named by `PCILT_BENCH_JSON` (`BENCH_fused.json` in CI), which
+//! also asserts bit-identity between the two walks before timing.
+
+use std::sync::Arc;
+
+use pcilt::model::{CompiledNetwork, EngineChoice, NetworkSpec, StageSpec};
+use pcilt::pcilt::TableStore;
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+use pcilt::util::timing::{bench, section, BenchOpts, BenchResult};
+
+/// `PCILT_BENCH_QUICK=1` shrinks the measurement budget (CI smoke runs).
+fn bench_opts() -> BenchOpts {
+    if std::env::var("PCILT_BENCH_QUICK").is_ok() {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    }
+}
+
+const ACT_BITS: u32 = 2;
+const IMG: usize = 36;
+const BATCH: usize = 8;
+
+/// A `depth`-conv graph: conv(k3)+requant per stage, one 2x2 pool at the
+/// end, dense head (same shape as `bench_network::depth_spec`).
+fn depth_spec(depth: usize) -> NetworkSpec {
+    let mut stages: Vec<StageSpec> = (0..depth)
+        .flat_map(|_| {
+            [
+                StageSpec::Conv {
+                    out_ch: 8,
+                    kernel: 3,
+                    stride: 1,
+                    engine: EngineChoice::Auto,
+                },
+                StageSpec::Requantize { scale: 0.05 },
+            ]
+        })
+        .collect();
+    stages.push(StageSpec::MaxPool { k: 2, floor: false });
+    stages.push(StageSpec::Dense { classes: 10 });
+    NetworkSpec {
+        act_bits: ACT_BITS,
+        img: IMG,
+        in_ch: 1,
+        stages,
+    }
+}
+
+struct Row {
+    depth: usize,
+    engines: String,
+    absorbed: usize,
+    fused_imgs_per_sec: f64,
+    unfused_imgs_per_sec: f64,
+    fused: BenchResult,
+    unfused: BenchResult,
+}
+
+fn imgs_per_sec(r: &BenchResult) -> f64 {
+    BATCH as f64 / (r.ns_per_iter() * 1e-9)
+}
+
+fn compile(spec: &NetworkSpec, store: &Arc<TableStore>) -> CompiledNetwork {
+    let weights = spec.seeded_weights(spec.conv_count() as u64).expect("spec is valid");
+    spec.compile_with_defaults(&weights, store).expect("depth spec compiles")
+}
+
+fn main() {
+    section("Fused code-domain pipeline vs unfused stage walk: 2/4/8-conv graphs");
+    let opts = bench_opts();
+    let mut rng = Rng::new(7);
+    let codes = Tensor4::random_activations(
+        Shape4::new(BATCH, IMG, IMG, 1),
+        ACT_BITS,
+        &mut rng,
+    );
+    let mut rows = Vec::new();
+    for depth in [2usize, 4, 8] {
+        let spec = depth_spec(depth);
+        let store = Arc::new(TableStore::new());
+        let fused_net = compile(&spec, &store);
+        let unfused_net = compile(&spec, &store).with_fused(false);
+        assert_eq!(
+            fused_net.forward_fused_serial(&codes),
+            unfused_net.forward_serial(&codes),
+            "fused and unfused walks must be bit-identical before timing"
+        );
+        let engines = fused_net.conv_engine_names().join("+");
+        let absorbed = fused_net.absorbed_requant_count();
+        let fused = bench(&format!("{depth}-conv fused (batch {BATCH})"), &opts, || {
+            fused_net.forward_fused_serial(&codes)
+        });
+        println!("{}", fused.report());
+        let unfused = bench(&format!("{depth}-conv unfused (batch {BATCH})"), &opts, || {
+            unfused_net.forward_serial(&codes)
+        });
+        println!("{}", unfused.report());
+        let (f, u) = (imgs_per_sec(&fused), imgs_per_sec(&unfused));
+        println!(
+            "depth {depth}: fused {f:.0} imgs/sec vs unfused {u:.0} imgs/sec \
+             (x{:.2}), engines [{engines}], {absorbed} absorbed requants",
+            f / u
+        );
+        rows.push(Row {
+            depth,
+            engines,
+            absorbed,
+            fused_imgs_per_sec: f,
+            unfused_imgs_per_sec: u,
+            fused,
+            unfused,
+        });
+    }
+
+    if let Ok(path) = std::env::var("PCILT_BENCH_JSON") {
+        write_bench_json(&path, &rows);
+        println!("wrote {path}");
+    }
+}
+
+/// Hand-rolled JSON (no serde offline); names are plain ASCII.
+fn write_bench_json(path: &str, rows: &[Row]) {
+    let mut out = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"depth\": {}, \"engines\": \"{}\", \"absorbed_requants\": {}, \
+             \"fused_imgs_per_sec\": {:.1}, \"unfused_imgs_per_sec\": {:.1}, \
+             \"speedup\": {:.3}, \"fused_p50_ns\": {:.1}, \"unfused_p50_ns\": {:.1}, \
+             \"iters\": {}}}",
+            r.depth,
+            r.engines,
+            r.absorbed,
+            r.fused_imgs_per_sec,
+            r.unfused_imgs_per_sec,
+            r.fused_imgs_per_sec / r.unfused_imgs_per_sec,
+            r.fused.summary.p50,
+            r.unfused.summary.p50,
+            r.fused.iters,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_fused/fused_vs_unfused\",\n  \"act_bits\": {ACT_BITS},\n  \
+         \"img\": {IMG},\n  \"batch\": {BATCH},\n  \"rows\": [\n{out}\n  ]\n}}\n"
+    );
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("failed to write {path}: {e}");
+    }
+}

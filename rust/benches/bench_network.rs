@@ -46,7 +46,7 @@ fn depth_spec(depth: usize) -> NetworkSpec {
             ]
         })
         .collect();
-    stages.push(StageSpec::MaxPool { k: 2 });
+    stages.push(StageSpec::MaxPool { k: 2, floor: false });
     stages.push(StageSpec::Dense { classes: 10 });
     NetworkSpec {
         act_bits: ACT_BITS,

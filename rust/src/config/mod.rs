@@ -613,7 +613,7 @@ fn parse_layers(
         })?;
         let allowed: &[&str] = match ty {
             "conv" => &["type", "out_ch", "kernel", "stride", "engine", "seg_n", "scale"],
-            "pool" => &["type", "k"],
+            "pool" => &["type", "k", "floor"],
             "requant" => &["type", "scale"],
             "dense" => &["type", "classes"],
             other => {
@@ -690,7 +690,18 @@ fn parse_layers(
             }
             "pool" => {
                 let k = layer_int("k", 2, 2, 16)? as usize;
-                out.push(StageSpec::MaxPool { k });
+                // `floor = true` opts into truncating (drop-trailing) pool
+                // semantics; by default a non-tiling pool is rejected at
+                // spec validation with a clear error.
+                let floor = match doc.get(&at("floor")) {
+                    None => false,
+                    Some(v) => v.as_bool().ok_or_else(|| {
+                        ConfigError::Invalid(format!(
+                            "models[{i}].layers[{j}].floor must be a boolean"
+                        ))
+                    })?,
+                };
+                out.push(StageSpec::MaxPool { k, floor });
             }
             "requant" => {
                 out.push(StageSpec::Requantize {
@@ -1045,7 +1056,7 @@ classes = 10
                     engine: EngineChoice::Pcilt,
                 },
                 StageSpec::Requantize { scale: 0.05 },
-                StageSpec::MaxPool { k: 2 },
+                StageSpec::MaxPool { k: 2, floor: false },
                 StageSpec::Conv {
                     out_ch: 4,
                     kernel: 3,
@@ -1059,6 +1070,67 @@ classes = 10
         let spec = m.network_spec().unwrap();
         spec.validate().unwrap();
         assert_eq!(spec.conv_count(), 2);
+    }
+
+    #[test]
+    fn pool_floor_key_parses_and_defaults_strict() {
+        let doc = Document::parse(
+            r#"
+[[models]]
+name = "m"
+act_bits = 2
+img = 17
+[[models.layers]]
+type = "conv"
+out_ch = 2
+kernel = 4
+scale = 0.1
+[[models.layers]]
+type = "pool"
+k = 2
+floor = true
+[[models.layers]]
+type = "dense"
+classes = 4
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert!(matches!(
+            cfg.models[0].layers[2],
+            StageSpec::MaxPool { k: 2, floor: true }
+        ));
+        // A strict (default) pool that does not tile its map is a config
+        // error at spec validation: conv k4 on 17 -> 17 - 4 + 1 = 14, and
+        // 14 % 4 != 0, so a strict k4 pool does not tile.
+        let doc = Document::parse(
+            r#"
+[[models]]
+name = "m"
+act_bits = 2
+img = 17
+[[models.layers]]
+type = "conv"
+out_ch = 2
+kernel = 4
+scale = 0.1
+[[models.layers]]
+type = "pool"
+k = 4
+[[models.layers]]
+type = "dense"
+classes = 4
+"#,
+        )
+        .unwrap();
+        let err = ServeConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("does not tile"), "{err}");
+        // non-boolean floor is rejected
+        let doc = Document::parse(
+            "[[models]]\nname = \"m\"\n[[models.layers]]\ntype = \"pool\"\nfloor = 3",
+        )
+        .unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
     }
 
     #[test]

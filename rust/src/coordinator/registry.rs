@@ -493,7 +493,7 @@ mod tests {
                     engine: EngineChoice::Pcilt,
                 },
                 StageSpec::Requantize { scale: 0.05 },
-                StageSpec::MaxPool { k: 2 },
+                StageSpec::MaxPool { k: 2, floor: false },
                 StageSpec::Conv {
                     out_ch: 8,
                     kernel: 3,

@@ -19,8 +19,10 @@ use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCn
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec as MemoryNetworkSpec};
 use pcilt::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec};
-use pcilt::pcilt::store::{PrebuildRequest, StoreIoError, TableStore};
-use pcilt::pcilt::{parallel, DmEngine, PciltEngine, SegmentEngine, SharedEngine};
+use pcilt::pcilt::store::{PrebuildRequest, StoreIoError, TableArtifact, TableKey, TableStore};
+use pcilt::pcilt::{
+    parallel, ConvFunc, DmEngine, PciltEngine, RequantTable, SegmentEngine, SharedEngine,
+};
 use pcilt::runtime::{ArtifactBundle, PjrtContext};
 use pcilt::tensor::{Shape4, Tensor4};
 use pcilt::util::error::{bail, ensure, Context, Result};
@@ -381,8 +383,12 @@ fn cmd_tables_prebuild(
     }
     let planner = EnginePlanner::with_store(cfg.planner.to_policy(), store.clone());
     let [s1, s2] = layer_specs(&params, batch);
+    // The seed model's requantize scales — the fused chains' absorbed
+    // tables are keyed on them (see NetworkSpec::quantcnn).
+    let m1 = params.s_in * params.s_w1 / params.s_a1;
+    let m2 = params.s_a1 * params.s_w2 / params.s_a2;
     let mut requests: Vec<PrebuildRequest> = Vec::new();
-    for (spec, w) in [(s1, &params.w1), (s2, &params.w2)] {
+    for (spec, w, scale) in [(s1, &params.w1, m1), (s2, &params.w2, m2)] {
         let plan = planner.plan_layer(&spec, Some(w));
         let ids: Vec<_> = if all {
             plan.candidates
@@ -393,15 +399,30 @@ fn cmd_tables_prebuild(
         } else {
             vec![plan.chosen]
         };
+        let mut lookup_family = false;
         for id in ids {
             let Some(key) = id.table_key(w, &spec) else {
                 continue; // table-free winner (e.g. DM): nothing to cache
             };
+            lookup_family = true;
             let w = w.clone();
             requests.push(PrebuildRequest {
                 key,
                 build: Box::new(move || {
                     id.build_artifact(&w, &spec).expect("keyed engines build artifacts")
+                }),
+            });
+        }
+        // Lookup-family chains also borrow an absorbed-requantize table at
+        // serve time (`NetworkSpec::compile`); prebuild it too, so a warm
+        // cache leaves boot with zero builds on the fused default path.
+        if lookup_family && RequantTable::feasible_for_layer(w, spec.act_bits, &ConvFunc::Mul) {
+            let (w, bits) = (w.clone(), spec.act_bits);
+            requests.push(PrebuildRequest {
+                key: TableKey::requant(&w, bits, &ConvFunc::Mul, scale),
+                build: Box::new(move || {
+                    let t = RequantTable::for_layer(&w, bits, &ConvFunc::Mul, scale);
+                    TableArtifact::Requant(t)
                 }),
             });
         }
@@ -478,8 +499,17 @@ fn cmd_plan(args: &Args) -> Result<()> {
                         fmt_bytes(c.table_bytes as f64)
                     )
                 });
+                // The fused-chain variant: an absorbed-requantize table
+                // (u8 entries) priced alongside the engine tables.
+                let requant = match cp.requant_key {
+                    Some(_) => format!(
+                        " + requant table {}",
+                        fmt_bytes(cp.requant_entries as f64)
+                    ),
+                    None => " (inline requant)".to_string(),
+                };
                 println!(
-                    "\nstage {}: {} -> {}{}{}",
+                    "\nstage {}: {} -> {}{}{}{}",
                     cp.stage,
                     m.layers
                         .get(cp.stage)
@@ -487,6 +517,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
                         .unwrap_or_else(|| "conv".to_string()),
                     cp.chosen.label(),
                     scored.unwrap_or_default(),
+                    requant,
                     if cp.forced { " [forced by config]" } else { "" },
                 );
                 print!("{}", cp.plan.report());

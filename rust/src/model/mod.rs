@@ -154,14 +154,14 @@ impl QuantCnn {
     }
 
     /// Integer forward: codes [B,16,16,1] -> logits i32 [B, classes].
-    /// Data-parallel across the batch; bit-identical to
-    /// [`QuantCnn::forward_serial`] (both run the network's single
-    /// stage-walk implementation).
+    /// Data-parallel across the batch, running the network's fused
+    /// code-domain walk; bit-identical to [`QuantCnn::forward_serial`]
+    /// (the unfused reference walk — pinned by `tests/fused_stack.rs`).
     pub fn forward(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
         self.network.forward(codes)
     }
 
-    /// Single-threaded integer forward (the reference path).
+    /// Single-threaded unfused integer forward (the reference path).
     pub fn forward_serial(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
         self.network.forward_serial(codes)
     }
@@ -264,11 +264,14 @@ mod tests {
         let store = Arc::new(TableStore::new());
         let m1 = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
         let after_first = store.stats();
-        assert_eq!(after_first.builds, 2, "two conv layers, two builds");
+        assert_eq!(
+            after_first.builds, 4,
+            "two conv layers: two dense-table builds + two absorbed-requant builds"
+        );
         let m2 = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
         let after_second = store.stats();
         assert_eq!(after_second.builds, after_first.builds, "zero redundant builds");
-        assert_eq!(after_second.hits, after_first.hits + 2);
+        assert_eq!(after_second.hits, after_first.hits + 4);
         // and the store-shared model is bit-identical
         let codes = random_codes(3, 4, &mut rng);
         assert_eq!(m1.forward(&codes), m2.forward(&codes));
@@ -370,7 +373,11 @@ mod tests {
         let store = Arc::new(TableStore::new());
         let m = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
         let keys = m.network().table_keys();
-        assert_eq!(keys.len(), 2, "two conv layers, two dense keys");
+        assert_eq!(
+            keys.len(),
+            4,
+            "two conv layers: dense + absorbed-requant key each"
+        );
         for k in keys {
             assert!(store.contains(*k), "compiled key missing from store");
         }

@@ -29,10 +29,13 @@
 use std::borrow::Cow;
 use std::sync::Arc;
 
+use crate::pcilt::custom_fn::ConvFunc;
 use crate::pcilt::engine::{ConvEngine, ConvGeometry};
+use crate::pcilt::fused::{self, RequantTable};
 use crate::pcilt::parallel;
 use crate::pcilt::planner::{EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
-use crate::pcilt::store::{TableKey, TableStore};
+use crate::pcilt::store::{TableArtifact, TableHandle, TableKey, TableStore};
+use crate::pcilt::table::acc_bounds;
 use crate::pcilt::DmEngine;
 use crate::tensor::{max_pool2d_k, Shape4, Tensor4};
 
@@ -51,9 +54,14 @@ pub enum StageSpec {
         stride: usize,
         engine: EngineChoice,
     },
-    /// `k`x`k` max pooling with stride `k` (floor semantics; codes are
-    /// monotone in the dequantized value, so pooling codes == values).
-    MaxPool { k: usize },
+    /// `k`x`k` max pooling with stride `k` (codes are monotone in the
+    /// dequantized value, so pooling codes == values). By default the
+    /// spatial dims must be divisible by `k` — a map that does not tile is
+    /// rejected at [`NetworkSpec::validate`] instead of silently dropping
+    /// trailing rows/cols. `floor: true` opts into the legacy truncating
+    /// (floor) semantics of `tensor::max_pool2d_k`, which the seed
+    /// `QuantCnn` topology relies on (its second pool floors 5x5 -> 2x2).
+    MaxPool { k: usize, floor: bool },
     /// Accumulators -> codes at the network's cardinality:
     /// `clamp(round_ties_even(acc * scale), 0, 2^act_bits - 1)`.
     Requantize { scale: f32 },
@@ -69,7 +77,9 @@ impl StageSpec {
             StageSpec::Conv { out_ch, kernel, stride, .. } => {
                 format!("conv {out_ch}ch k{kernel}s{stride}")
             }
-            StageSpec::MaxPool { k } => format!("maxpool k{k}"),
+            StageSpec::MaxPool { k, floor } => {
+                format!("maxpool k{k}{}", if *floor { " floor" } else { "" })
+            }
             StageSpec::Requantize { scale } => format!("requant x{scale}"),
             StageSpec::Dense { classes } => format!("dense {classes}"),
         }
@@ -186,6 +196,21 @@ pub struct ConvStagePlan {
     pub forced: bool,
     /// Store key the built engine borrows (`None` for table-free engines).
     pub key: Option<TableKey>,
+    /// Requantize scale of this stage's fused chain (the requantize stage
+    /// immediately after the conv — guaranteed by dataflow validation).
+    pub scale: f32,
+    /// Absorbed-requantize table the fused chain borrows. `Some` only when
+    /// the chosen engine is a lookup-family engine (has a conv table key)
+    /// and the accumulator range fits `fused::REQUANT_MAX_ENTRIES`; DM
+    /// chains stay table-free (they are the conformance baseline) and
+    /// requantize inline inside the fused walk.
+    pub requant_key: Option<TableKey>,
+    /// Accumulator bounds backing `requant_key` (from `acc_bounds`, paid
+    /// once here — `compile` and prebuild build straight from them).
+    pub requant_bounds: Option<(i64, i64)>,
+    /// Entries the absorbed table will hold (1 byte each; 0 when inline).
+    /// Priced against the planner's cache budget by `pcilt plan` reports.
+    pub requant_entries: u64,
     /// Full scored registry for the stage (the `pcilt plan` table).
     pub plan: LayerPlan,
 }
@@ -198,11 +223,15 @@ pub struct NetworkPlan {
 }
 
 impl NetworkPlan {
-    /// The store keys compilation will borrow, in stage order. This is
-    /// what the multi-model registry counts for cross-model dedup — by
-    /// construction identical to what `compile` builds.
+    /// The store keys compilation will borrow, in stage order (each conv
+    /// stage's engine tables followed by its absorbed-requantize table, if
+    /// any). This is what the multi-model registry counts for cross-model
+    /// dedup — by construction identical to what `compile` builds.
     pub fn table_keys(&self) -> Vec<TableKey> {
-        self.convs.iter().filter_map(|c| c.key).collect()
+        self.convs
+            .iter()
+            .flat_map(|c| c.key.into_iter().chain(c.requant_key))
+            .collect()
     }
 }
 
@@ -226,7 +255,7 @@ impl NetworkSpec {
                     engine: choice,
                 },
                 StageSpec::Requantize { scale: m1 },
-                StageSpec::MaxPool { k: 2 },
+                StageSpec::MaxPool { k: 2, floor: true },
                 StageSpec::Conv {
                     out_ch: params.c2,
                     kernel: params.kernel,
@@ -234,7 +263,7 @@ impl NetworkSpec {
                     engine: choice,
                 },
                 StageSpec::Requantize { scale: m2 },
-                StageSpec::MaxPool { k: 2 },
+                StageSpec::MaxPool { k: 2, floor: true },
                 StageSpec::Dense {
                     classes: params.classes,
                 },
@@ -349,7 +378,7 @@ impl NetworkSpec {
                 (StageSpec::Requantize { .. }, Flow::Codes(_)) => {
                     return stage_err(i, "requantize consumes accumulators (place after a conv)");
                 }
-                (&StageSpec::MaxPool { k }, Flow::Codes(s)) => {
+                (&StageSpec::MaxPool { k, floor }, Flow::Codes(s)) => {
                     if k < 2 {
                         return stage_err(i, "pool window must be >= 2");
                     }
@@ -357,6 +386,20 @@ impl NetworkSpec {
                         return stage_err(
                             i,
                             format!("pool k{k} collapses a {}x{} map to nothing", s.h, s.w),
+                        );
+                    }
+                    // The silent-truncation bugfix: a map that does not
+                    // tile into k x k windows is a declaration error unless
+                    // the stage explicitly opts into floor semantics.
+                    if !floor && (s.h % k != 0 || s.w % k != 0) {
+                        return stage_err(
+                            i,
+                            format!(
+                                "pool k{k} does not tile a {}x{} map; trailing rows/cols \
+                                 would be silently dropped (set floor = true to accept \
+                                 truncating semantics)",
+                                s.h, s.w
+                            ),
                         );
                     }
                     Flow::Codes(Shape4::new(s.n, s.h / k, s.w / k, s.c))
@@ -485,12 +528,39 @@ impl NetworkSpec {
                     );
                 }
             }
+            let key = chosen.table_key(w, &spec);
+            // The requantize immediately after this conv (dataflow
+            // validation guarantees it) is the fused chain's second stage;
+            // absorb it into a code-emitting table when the chosen engine
+            // is a lookup-family engine and the accumulator range fits.
+            let scale = match self.stages[site.stage + 1] {
+                StageSpec::Requantize { scale } => scale,
+                _ => unreachable!("validated convs are followed by a requantize"),
+            };
+            let (requant_key, requant_bounds, requant_entries) = if key.is_some() {
+                let (lo, hi) = acc_bounds(w, self.act_bits, &ConvFunc::Mul);
+                if RequantTable::feasible(lo, hi) {
+                    (
+                        Some(TableKey::requant(w, self.act_bits, &ConvFunc::Mul, scale)),
+                        Some((lo, hi)),
+                        (hi - lo + 1) as u64,
+                    )
+                } else {
+                    (None, None, 0)
+                }
+            } else {
+                (None, None, 0)
+            };
             convs.push(ConvStagePlan {
                 stage: site.stage,
                 spec,
                 chosen,
                 forced,
-                key: chosen.table_key(w, &spec),
+                key,
+                scale,
+                requant_key,
+                requant_bounds,
+                requant_entries,
                 plan,
             });
         }
@@ -547,6 +617,7 @@ impl NetworkSpec {
             )));
         }
         let mut stages = Vec::with_capacity(self.stages.len());
+        let mut fused_ops: Vec<FusedOp> = Vec::new();
         let mut table_keys = Vec::new();
         let mut conv_names: Vec<&'static str> = Vec::new();
         let mut ci = 0;
@@ -556,7 +627,7 @@ impl NetworkSpec {
                     let cp = &plan.convs[ci];
                     let w = &weights.convs[ci];
                     ci += 1;
-                    let engine: Box<dyn ConvEngine> = match cp
+                    let (engine, built): (Box<dyn ConvEngine>, bool) = match cp
                         .chosen
                         .build_with_store(w, &cp.spec, store)
                     {
@@ -566,23 +637,74 @@ impl NetworkSpec {
                             if let Some(k) = cp.key {
                                 table_keys.push(k);
                             }
-                            e
+                            (e, true)
                         }
                         // Planner winners are never expected to fail, but a
                         // fallback keeps serving alive (mirrors
                         // `EnginePlanner::choose`). Forced engines fail loud.
                         Err(reason) if cp.forced => return stage_err(i, reason),
-                        Err(_) => Box::new(DmEngine::new(w.clone(), cp.spec.geom)),
+                        Err(_) => (Box::new(DmEngine::new(w.clone(), cp.spec.geom)), false),
                     };
+                    // The fused chain for this conv: the absorbed-requantize
+                    // table rides only behind engines that built as planned
+                    // (a DM fallback chain requantizes inline, like DM).
+                    // Bounds were derived once at plan time, so the builder
+                    // captures only Copy scalars — a warm store pays no
+                    // weight clone and no acc_bounds recompute.
+                    let requant = match (built, cp.requant_key, cp.requant_bounds) {
+                        (true, Some(rk), Some((lo, hi))) => {
+                            let (bits, scale) = (self.act_bits, cp.scale);
+                            let handle = store.get_or_build(rk, move || {
+                                TableArtifact::Requant(RequantTable::build(lo, hi, scale, bits))
+                            });
+                            table_keys.push(rk);
+                            Some(handle)
+                        }
+                        _ => None,
+                    };
+                    fused_ops.push(FusedOp::Chain {
+                        conv: i,
+                        scale: cp.scale,
+                        requant,
+                        pool_k: None,
+                    });
                     conv_names.push(engine.name());
                     CompiledStage::Conv(engine)
                 }
-                &StageSpec::MaxPool { k } => CompiledStage::MaxPool { k },
-                &StageSpec::Requantize { scale } => CompiledStage::Requantize { scale },
-                &StageSpec::Dense { classes } => CompiledStage::Dense {
-                    classes,
-                    w: weights.dense.clone(),
-                },
+                &StageSpec::MaxPool { k, .. } => {
+                    // A pool directly behind a conv's requantize folds into
+                    // that chain (the tiled walk pools each row block while
+                    // it is cache-resident); any other pool — including a
+                    // second consecutive pool — runs as a standalone
+                    // code-domain stage. Both use floor semantics at run
+                    // time; validation already rejected implicit floors.
+                    let absorbed = i >= 2
+                        && matches!(self.stages[i - 1], StageSpec::Requantize { .. })
+                        && matches!(self.stages[i - 2], StageSpec::Conv { .. });
+                    if absorbed {
+                        match fused_ops.last_mut() {
+                            Some(FusedOp::Chain { pool_k, .. }) if pool_k.is_none() => {
+                                *pool_k = Some(k);
+                            }
+                            _ => unreachable!("conv chain precedes an absorbed pool"),
+                        }
+                    } else {
+                        fused_ops.push(FusedOp::Pool { k });
+                    }
+                    CompiledStage::MaxPool { k }
+                }
+                &StageSpec::Requantize { scale } => {
+                    // Absorbed into the preceding conv's chain in the fused
+                    // walk; kept as a stage for the unfused reference walk.
+                    CompiledStage::Requantize { scale }
+                }
+                &StageSpec::Dense { classes } => {
+                    fused_ops.push(FusedOp::Dense { stage: i });
+                    CompiledStage::Dense {
+                        classes,
+                        w: weights.dense.clone(),
+                    }
+                }
             };
             stages.push(compiled);
         }
@@ -593,6 +715,8 @@ impl NetworkSpec {
             in_ch: self.in_ch,
             classes: t.classes,
             stages,
+            fused: fused_ops,
+            use_fused: true,
             engine_name,
             table_keys,
             threads: 0,
@@ -618,6 +742,27 @@ enum CompiledStage {
     Dense { classes: usize, w: Vec<i8> },
 }
 
+/// One step of the fused code-domain walk. `Chain` covers a
+/// conv→requantize[→pool] run (executed tiled by [`fused::run_chain`]);
+/// indices point back into `CompiledNetwork::stages`, so the two walks
+/// share one set of engines and dense weights.
+enum FusedOp {
+    Chain {
+        /// Index of the `CompiledStage::Conv` this chain runs.
+        conv: usize,
+        /// Requantize scale (stage `conv + 1`).
+        scale: f32,
+        /// Absorbed-requantize table (`None` = inline `requant_code`).
+        requant: Option<TableHandle>,
+        /// Pool window folded into the chain's tile walk.
+        pool_k: Option<usize>,
+    },
+    /// Standalone code-domain pool (not directly behind a conv chain).
+    Pool { k: usize },
+    /// Index of the `CompiledStage::Dense` head.
+    Dense { stage: usize },
+}
+
 /// Data flowing through the stage walk at run time. Codes borrow the
 /// caller's input until the first stage produces an owned tensor, so
 /// `forward_serial` never copies the batch it was handed.
@@ -636,6 +781,11 @@ pub struct CompiledNetwork {
     in_ch: usize,
     classes: usize,
     stages: Vec<CompiledStage>,
+    /// The fused code-domain walk over `stages` (chain detection done at
+    /// compile time). `forward` runs this by default; `with_fused(false)`
+    /// selects the unfused reference walk.
+    fused: Vec<FusedOp>,
+    use_fused: bool,
     engine_name: String,
     table_keys: Vec<TableKey>,
     /// Batch-parallelism for `forward` (0 = auto; see `pcilt::parallel`).
@@ -647,6 +797,27 @@ impl CompiledNetwork {
     pub fn with_threads(mut self, threads: usize) -> CompiledNetwork {
         self.threads = threads;
         self
+    }
+
+    /// Select the fused code-domain walk (default) or the unfused
+    /// per-stage reference walk for `forward`. Bit-identical either way —
+    /// the toggle exists for benchmarking and conformance pinning.
+    pub fn with_fused(mut self, fused: bool) -> CompiledNetwork {
+        self.use_fused = fused;
+        self
+    }
+
+    /// Whether `forward` runs the fused code-domain walk.
+    pub fn is_fused(&self) -> bool {
+        self.use_fused
+    }
+
+    /// Number of fused conv chains carrying an absorbed-requantize table.
+    pub fn absorbed_requant_count(&self) -> usize {
+        self.fused
+            .iter()
+            .filter(|op| matches!(op, FusedOp::Chain { requant: Some(_), .. }))
+            .count()
     }
 
     /// `"pcilt"`, or `"pcilt+segment"`-style when conv stages differ.
@@ -693,14 +864,16 @@ impl CompiledNetwork {
         x.map(|v| (v * qmax).round().clamp(0.0, qmax) as u8)
     }
 
-    /// Integer forward, data-parallel across the batch (scoped threads;
-    /// bit-identical to [`CompiledNetwork::forward_serial`], which it
-    /// wraps — there is exactly one stage-walk implementation).
+    /// Integer forward, data-parallel across the batch (scoped threads).
+    /// Runs the fused code-domain walk by default (`with_fused(false)`
+    /// selects the unfused reference walk); both are bit-identical to
+    /// [`CompiledNetwork::forward_serial`], pinned by
+    /// `tests/fused_stack.rs`.
     pub fn forward(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
         let n = codes.shape().n;
         let t = parallel::effective_threads(self.threads, n);
         if t <= 1 || n <= 1 {
-            return self.forward_serial(codes);
+            return self.walk(codes);
         }
         let parts = parallel::chunks(n, t);
         std::thread::scope(|scope| {
@@ -708,7 +881,7 @@ impl CompiledNetwork {
                 .iter()
                 .map(|&(start, count)| {
                     let sub = parallel::slice_batch(codes, start, count);
-                    scope.spawn(move || self.forward_serial(&sub))
+                    scope.spawn(move || self.walk(&sub))
                 })
                 .collect();
             let mut out = Vec::with_capacity(n);
@@ -719,8 +892,53 @@ impl CompiledNetwork {
         })
     }
 
-    /// The single-threaded stage walk: codes `[B,img,img,in_ch]` ->
-    /// logits `[B][classes]`. The one and only forward implementation.
+    /// The single-threaded walk `forward` fans out over the batch.
+    fn walk(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
+        if self.use_fused {
+            self.forward_fused_serial(codes)
+        } else {
+            self.forward_serial(codes)
+        }
+    }
+
+    /// The fused code-domain stage walk: conv→requantize[→pool] chains
+    /// execute tiled through [`fused::run_chain`] — only u8 code tensors
+    /// cross stage boundaries, the i32 accumulators live in a
+    /// cache-resident row block, and absorbed-requantize tables turn the
+    /// requantize into a fetch. Bit-identical to
+    /// [`CompiledNetwork::forward_serial`].
+    pub fn forward_fused_serial(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
+        let mut data: Cow<'_, Tensor4<u8>> = Cow::Borrowed(codes);
+        for op in &self.fused {
+            match op {
+                FusedOp::Chain { conv, scale, requant, pool_k } => {
+                    let CompiledStage::Conv(engine) = &self.stages[*conv] else {
+                        unreachable!("chain op points at a conv stage")
+                    };
+                    data = Cow::Owned(fused::run_chain(
+                        engine.as_ref(),
+                        *scale,
+                        requant.as_ref().map(|h| h.requant()),
+                        *pool_k,
+                        self.act_bits,
+                        &data,
+                    ));
+                }
+                FusedOp::Pool { k } => data = Cow::Owned(pool_codes(&data, *k)),
+                FusedOp::Dense { stage } => {
+                    let CompiledStage::Dense { classes, w } = &self.stages[*stage] else {
+                        unreachable!("dense op points at the dense stage")
+                    };
+                    return dense_forward(*classes, w, &data);
+                }
+            }
+        }
+        unreachable!("validated networks end with a dense stage")
+    }
+
+    /// The single-threaded unfused stage walk: codes `[B,img,img,in_ch]`
+    /// -> logits `[B][classes]`, materializing one tensor per stage. The
+    /// conformance reference the fused walk is pinned against.
     pub fn forward_serial(&self, codes: &Tensor4<u8>) -> Vec<Vec<i32>> {
         let qmax = (1i32 << self.act_bits) - 1;
         let mut data = StageData::Codes(Cow::Borrowed(codes));
@@ -731,34 +949,14 @@ impl CompiledNetwork {
                 }
                 (&CompiledStage::Requantize { scale }, StageData::Acc(a)) => {
                     // round-ties-even matches `jnp.round` bit-for-bit
-                    StageData::Codes(Cow::Owned(a.map(|v| {
-                        let r = (v as f32 * scale).round_ties_even() as i32;
-                        r.clamp(0, qmax) as u8
-                    })))
+                    // (fused::requant_code is the single implementation)
+                    StageData::Codes(Cow::Owned(a.map(|v| fused::requant_code(v, scale, qmax))))
                 }
                 (&CompiledStage::MaxPool { k }, StageData::Codes(x)) => {
                     StageData::Codes(Cow::Owned(pool_codes(&x, k)))
                 }
                 (CompiledStage::Dense { classes, w }, StageData::Codes(x)) => {
-                    // flatten NHWC row-major (matches jnp reshape), then
-                    // the integer dense head
-                    let s = x.shape();
-                    let feat = s.h * s.w * s.c;
-                    let mut out = Vec::with_capacity(s.n);
-                    for n in 0..s.n {
-                        let flat = &x.data()[n * feat..(n + 1) * feat];
-                        let mut logits = vec![0i32; *classes];
-                        for (cls, logit) in logits.iter_mut().enumerate() {
-                            let row = &w[cls * feat..(cls + 1) * feat];
-                            *logit = row
-                                .iter()
-                                .zip(flat.iter())
-                                .map(|(&w, &a)| w as i32 * a as i32)
-                                .sum();
-                        }
-                        out.push(logits);
-                    }
-                    return out;
+                    return dense_forward(*classes, w, &x);
                 }
                 // validate() proved the dataflow; a mismatch here is a bug.
                 _ => unreachable!("stage dataflow was validated at compile time"),
@@ -784,10 +982,34 @@ impl CompiledNetwork {
 }
 
 /// `k`x`k` max pool on u8 codes (codes are monotone in the dequantized
-/// value, so pooling codes == pooling values).
+/// value, so pooling codes == pooling values). Floor semantics, matching
+/// `tensor::max_pool2d_k` — implicit truncation is rejected at
+/// `NetworkSpec::validate` unless the stage set `floor = true`.
 fn pool_codes(x: &Tensor4<u8>, k: usize) -> Tensor4<u8> {
     let as_i32 = x.map(|v| v as i32);
     max_pool2d_k(&as_i32, k).map(|v| v as u8)
+}
+
+/// The integer dense head: flatten NHWC row-major (matches jnp reshape),
+/// then one int dot per class. Shared by the fused and unfused walks.
+fn dense_forward(classes: usize, w: &[i8], x: &Tensor4<u8>) -> Vec<Vec<i32>> {
+    let s = x.shape();
+    let feat = s.h * s.w * s.c;
+    let mut out = Vec::with_capacity(s.n);
+    for n in 0..s.n {
+        let flat = &x.data()[n * feat..(n + 1) * feat];
+        let mut logits = vec![0i32; classes];
+        for (cls, logit) in logits.iter_mut().enumerate() {
+            let row = &w[cls * feat..(cls + 1) * feat];
+            *logit = row
+                .iter()
+                .zip(flat.iter())
+                .map(|(&w, &a)| w as i32 * a as i32)
+                .sum();
+        }
+        out.push(logits);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -835,14 +1057,17 @@ mod tests {
             // requantize on codes
             (vec![StageSpec::Requantize { scale: 0.1 }], 0),
             // pool on accumulators
-            (vec![conv.clone(), StageSpec::MaxPool { k: 2 }], 1),
+            (
+                vec![conv.clone(), StageSpec::MaxPool { k: 2, floor: false }],
+                1,
+            ),
             // dense on accumulators
             (vec![conv.clone(), StageSpec::Dense { classes: 4 }], 1),
             // dense not last
             (
                 vec![
                     StageSpec::Dense { classes: 4 },
-                    StageSpec::MaxPool { k: 2 },
+                    StageSpec::MaxPool { k: 2, floor: false },
                 ],
                 1,
             ),
@@ -878,7 +1103,7 @@ mod tests {
                     engine: EngineChoice::Dm,
                 },
                 StageSpec::Requantize { scale: 0.1 },
-                StageSpec::MaxPool { k: 16 },
+                StageSpec::MaxPool { k: 16, floor: false },
                 StageSpec::Dense { classes: 4 },
             ],
         };
@@ -971,7 +1196,11 @@ mod tests {
             .plan(&weights, &planner, crate::pcilt::planner::default_plan_batch())
             .unwrap();
         let predicted = plan.table_keys();
-        assert_eq!(predicted.len(), 2, "two conv stages, two dense keys");
+        assert_eq!(
+            predicted.len(),
+            4,
+            "two conv stages: two dense keys + two absorbed-requant keys"
+        );
         let net = spec.compile_with_defaults(&weights, &store).unwrap();
         assert_eq!(net.table_keys(), predicted.as_slice());
         for k in net.table_keys() {
@@ -1087,7 +1316,7 @@ mod tests {
                         StageSpec::Requantize { scale: 0.05 },
                     ];
                     if i == 1 {
-                        v.push(StageSpec::MaxPool { k: 2 });
+                        v.push(StageSpec::MaxPool { k: 2, floor: false });
                     }
                     v
                 })
@@ -1182,6 +1411,111 @@ mod tests {
             .unwrap();
         let x = codes(2, 17, 2, 13);
         assert_eq!(net.forward(&x), dm.forward(&x));
+    }
+
+    #[test]
+    fn non_tiling_pool_rejected_unless_floor() {
+        // 16 -> conv k3 -> 14 -> pool2 -> 7 -> conv k3 -> 5 -> pool2: the
+        // second pool does not tile 5x5. Strict mode rejects with a clear
+        // error; floor mode (the seed QuantCnn semantics) accepts.
+        let mk = |floor| NetworkSpec {
+            act_bits: 4,
+            img: 16,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv { out_ch: 2, kernel: 3, stride: 1, engine: EngineChoice::Dm },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::MaxPool { k: 2, floor: false }, // 14x14 tiles fine
+                StageSpec::Conv { out_ch: 2, kernel: 3, stride: 1, engine: EngineChoice::Dm },
+                StageSpec::Requantize { scale: 0.1 },
+                StageSpec::MaxPool { k: 2, floor },
+                StageSpec::Dense { classes: 4 },
+            ],
+        };
+        match mk(false).validate().unwrap_err() {
+            NetworkError::Stage { stage, reason } => {
+                assert_eq!(stage, 5);
+                assert!(reason.contains("does not tile"), "{reason}");
+                assert!(reason.contains("floor"), "{reason}");
+            }
+            other => panic!("expected stage error, got {other:?}"),
+        }
+        mk(true).validate().unwrap();
+        // and the seed topology (which floors its second pool) stays valid
+        let (spec, _) = seed_spec(EngineChoice::Dm);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn fused_walk_is_bit_identical_to_unfused() {
+        // The tentpole pin at the network level: fused (default) ==
+        // unfused reference == DM, on the seed topology (odd maps +
+        // floored pool) for every engine choice.
+        let x = codes(4, 16, 4, 77);
+        let (dm_spec, dm_weights) = seed_spec(EngineChoice::Dm);
+        let store = Arc::new(TableStore::new());
+        let reference = dm_spec
+            .compile_with_defaults(&dm_weights, &store)
+            .unwrap()
+            .with_fused(false)
+            .forward_serial(&x);
+        for choice in [
+            EngineChoice::Dm,
+            EngineChoice::Pcilt,
+            EngineChoice::Segment { seg_n: 2 },
+            EngineChoice::Shared,
+            EngineChoice::Auto,
+        ] {
+            let (spec, weights) = seed_spec(choice);
+            let net = spec.compile_with_defaults(&weights, &store).unwrap();
+            assert!(net.is_fused(), "fused walk is the default");
+            assert_eq!(net.forward_fused_serial(&x), reference, "{choice:?} fused");
+            assert_eq!(net.forward_serial(&x), reference, "{choice:?} unfused");
+            assert_eq!(net.forward(&x), reference, "{choice:?} forward");
+        }
+    }
+
+    #[test]
+    fn absorbed_requant_tables_follow_engine_family() {
+        // Lookup-family chains absorb their requantize into a code table;
+        // DM chains (the conformance baseline) stay table-free and
+        // requantize inline.
+        let store = Arc::new(TableStore::new());
+        let (spec, weights) = seed_spec(EngineChoice::Pcilt);
+        let net = spec.compile_with_defaults(&weights, &store).unwrap();
+        assert_eq!(net.absorbed_requant_count(), 2);
+        assert_eq!(net.table_keys().len(), 4, "2 conv tables + 2 requant tables");
+        let (dm_spec, dm_weights) = seed_spec(EngineChoice::Dm);
+        let dm = dm_spec.compile_with_defaults(&dm_weights, &store).unwrap();
+        assert_eq!(dm.absorbed_requant_count(), 0);
+        assert!(dm.table_keys().is_empty());
+        // both walks still agree with absorbed tables in play
+        let x = codes(2, 16, 4, 3);
+        assert_eq!(net.forward_fused_serial(&x), dm.forward_serial(&x));
+    }
+
+    #[test]
+    fn standalone_and_consecutive_pools_fuse_correctly() {
+        // pool→pool after one chain: the first pool folds into the conv
+        // chain, the second runs as a standalone code-domain stage.
+        let spec = NetworkSpec {
+            act_bits: 2,
+            img: 14,
+            in_ch: 1,
+            stages: vec![
+                StageSpec::Conv { out_ch: 3, kernel: 3, stride: 1, engine: EngineChoice::Pcilt },
+                StageSpec::Requantize { scale: 0.07 },
+                StageSpec::MaxPool { k: 2, floor: false }, // 12 -> 6
+                StageSpec::MaxPool { k: 3, floor: false }, // 6 -> 2
+                StageSpec::Dense { classes: 4 },
+            ],
+        };
+        let weights = spec.seeded_weights(19).unwrap();
+        let net = spec
+            .compile_with_defaults(&weights, &Arc::new(TableStore::new()))
+            .unwrap();
+        let x = codes(3, 14, 2, 21);
+        assert_eq!(net.forward_fused_serial(&x), net.forward_serial(&x));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use crate::tensor::{Shape4, Tensor4};
 
-use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, OpCounts};
 
 /// DM engine: holds OHWI weights and geometry.
 pub struct DmEngine {
@@ -33,6 +33,43 @@ impl DmEngine {
     pub fn weights(&self) -> &Tensor4<i8> {
         &self.weights
     }
+
+    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
+    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let ws = self.weights.shape();
+        assert_eq!(s.c, ws.c, "input channels {} != weight in_ch {}", s.c, ws.c);
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        // Gather the RF into a scratch buffer once per position, then do a
+        // dense dot per output channel — same memory behaviour as an
+        // im2col'd GEMM without materializing the whole matrix.
+        let mut rf = vec![0i32; self.positions];
+        for oy in oy0..oy0 + rows {
+            for ox in 0..ow {
+                let mut p = 0;
+                for ky in 0..g.kh {
+                    let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                    // row covers channels at kx=0; walk kw*c contiguous
+                    for &v in row {
+                        rf[p] = v as i32;
+                        p += 1;
+                    }
+                }
+                let base = ((oy - oy0) * ow + ox) * ws.n;
+                for oc in 0..ws.n {
+                    let w = &self.flat[oc * self.positions..(oc + 1) * self.positions];
+                    let mut acc = 0i32;
+                    for (wv, av) in w.iter().zip(rf.iter()) {
+                        acc += wv * av;
+                    }
+                    out[base + oc] = acc;
+                }
+            }
+        }
+    }
 }
 
 impl ConvEngine for DmEngine {
@@ -52,37 +89,18 @@ impl ConvEngine for DmEngine {
         let s = x.shape();
         let g = self.geom;
         let ws = self.weights.shape();
-        assert_eq!(s.c, ws.c, "input channels {} != weight in_ch {}", s.c, ws.c);
         let out_shape = g.out_shape(s, ws.n);
         let mut out = Tensor4::zeros(out_shape);
-        // Gather the RF into a scratch buffer once per position, then do a
-        // dense dot per output channel — same memory behaviour as an
-        // im2col'd GEMM without materializing the whole matrix.
-        let mut rf = vec![0i32; self.positions];
+        let per_n = out_shape.h * out_shape.w * out_shape.c;
         for n in 0..s.n {
-            for oy in 0..out_shape.h {
-                for ox in 0..out_shape.w {
-                    let mut p = 0;
-                    for ky in 0..g.kh {
-                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
-                        // row covers channels at kx=0; walk kw*c contiguous
-                        for &v in row {
-                            rf[p] = v as i32;
-                            p += 1;
-                        }
-                    }
-                    for oc in 0..ws.n {
-                        let w = &self.flat[oc * self.positions..(oc + 1) * self.positions];
-                        let mut acc = 0i32;
-                        for (wv, av) in w.iter().zip(rf.iter()) {
-                            acc += wv * av;
-                        }
-                        out.set(n, oy, ox, oc, acc);
-                    }
-                }
-            }
+            self.conv_band(x, n, 0, out_shape.h, &mut out.data_mut()[n * per_n..(n + 1) * per_n]);
         }
         out
+    }
+
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        check_band(self.geom, x.shape(), self.out_channels(), oy0, rows, out.len());
+        self.conv_band(x, n, oy0, rows, out);
     }
 
     fn op_counts(&self, s: Shape4) -> OpCounts {

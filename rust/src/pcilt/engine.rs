@@ -48,6 +48,29 @@ pub trait ConvEngine: Send + Sync {
     /// Run the convolution over a batch.
     fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32>;
 
+    /// Tile entry point of the fused code-domain pipeline
+    /// (`pcilt::fused`): compute output rows `[oy0, oy0 + rows)` of batch
+    /// item `n` into `out`, row-major `[rows][ow][out_ch]` (fully
+    /// overwritten). The lookup-family engines override this to walk only
+    /// the requested band; the default — the unfused fallback — copies the
+    /// input band the rows depend on and runs the full
+    /// [`ConvEngine::conv`] on it, which is bit-identical because a valid
+    /// convolution is translation-invariant along `h`.
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geometry();
+        check_band(g, s, self.out_channels(), oy0, rows, out.len());
+        let in_rows = (rows - 1) * g.sy + g.kh;
+        let per_row = s.w * s.c;
+        let start = s.index(n, oy0 * g.sy, 0, 0);
+        let band = Tensor4::from_vec(
+            Shape4::new(1, in_rows, s.w, s.c),
+            x.data()[start..start + in_rows * per_row].to_vec(),
+        );
+        let y = self.conv(&band);
+        out.copy_from_slice(y.data());
+    }
+
     /// Operation counts for one invocation on input shape `s` —
     /// (multiplications, additions, table fetches). Used by the op-count
     /// experiments; engines report their true inner-loop behaviour.
@@ -95,6 +118,24 @@ impl OpCounts {
     }
 }
 
+/// The one band-bounds contract every [`ConvEngine::conv_rows`]
+/// implementation enforces: the row band must lie inside the output map
+/// and `out` must hold exactly `[rows][ow][out_ch]` values. Centralized
+/// so the trait default and every engine override agree (and drift
+/// together if the contract ever changes).
+pub(crate) fn check_band(
+    g: ConvGeometry,
+    s: Shape4,
+    out_ch: usize,
+    oy0: usize,
+    rows: usize,
+    out_len: usize,
+) {
+    let (oh, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+    assert!(rows >= 1 && oy0 + rows <= oh, "row band {oy0}+{rows} exceeds output {oh}");
+    assert_eq!(out_len, rows * ow * out_ch, "band buffer mismatch");
+}
+
 /// Number of receptive-field evaluations for geometry `g` on input `s`.
 pub fn rf_count(g: ConvGeometry, s: Shape4) -> u64 {
     let (oh, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
@@ -104,6 +145,73 @@ pub fn rf_count(g: ConvGeometry, s: Shape4) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Minimal engine with NO `conv_rows` override — pins the default
+    /// band-slice fallback against the full conv.
+    struct NaiveSum {
+        geom: ConvGeometry,
+    }
+
+    impl ConvEngine for NaiveSum {
+        fn name(&self) -> &'static str {
+            "naive-sum"
+        }
+        fn out_channels(&self) -> usize {
+            1
+        }
+        fn geometry(&self) -> ConvGeometry {
+            self.geom
+        }
+        fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
+            let s = x.shape();
+            let g = self.geom;
+            let out_shape = g.out_shape(s, 1);
+            let mut out = Tensor4::zeros(out_shape);
+            for n in 0..s.n {
+                for oy in 0..out_shape.h {
+                    for ox in 0..out_shape.w {
+                        let mut acc = 0i32;
+                        for ky in 0..g.kh {
+                            for kx in 0..g.kw {
+                                for c in 0..s.c {
+                                    acc += x.get(n, oy * g.sy + ky, ox * g.sx + kx, c) as i32;
+                                }
+                            }
+                        }
+                        out.set(n, oy, ox, 0, acc);
+                    }
+                }
+            }
+            out
+        }
+        fn op_counts(&self, _s: Shape4) -> OpCounts {
+            OpCounts::default()
+        }
+    }
+
+    #[test]
+    fn default_conv_rows_matches_full_conv() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(41);
+        for (sy, sx) in [(1usize, 1usize), (2, 2)] {
+            let e = NaiveSum {
+                geom: ConvGeometry { kh: 3, kw: 3, sy, sx },
+            };
+            let x = Tensor4::random_activations(Shape4::new(2, 9, 9, 2), 4, &mut rng);
+            let full = e.conv(&x);
+            let fs = full.shape();
+            for n in 0..2 {
+                let mut band = vec![0i32; 2 * fs.w];
+                for oy0 in 0..fs.h - 1 {
+                    e.conv_rows(&x, n, oy0, 2, &mut band);
+                    for (i, &v) in band.iter().enumerate() {
+                        let (dy, ox) = (i / fs.w, i % fs.w);
+                        assert_eq!(v, full.get(n, oy0 + dy, ox, 0), "n={n} oy0={oy0} sy={sy}");
+                    }
+                }
+            }
+        }
+    }
 
     #[test]
     fn out_shape_matches_conv_out() {

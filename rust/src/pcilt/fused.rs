@@ -1,0 +1,444 @@
+//! Fused code-domain execution — conv→requantize→pool chains that pass
+//! quantization *codes* between stages instead of dequantized tensors.
+//!
+//! The paper's central extension is that a lookup table can absorb
+//! downstream work for free: the fetched value can be anything derivable
+//! from `(weight, activation)` at build time. This module extends that to
+//! the *stage boundary*. Two mechanisms compose:
+//!
+//! 1. **Absorbed requantization** ([`RequantTable`]): a conv layer's
+//!    accumulators live in the bounded interval [`acc_bounds`] derives
+//!    from the layer's PCILT entries, so the requantize step
+//!    `clamp(round_ties_even(acc * scale), 0, qmax)` can be enumerated
+//!    into a table of u8 codes indexed by `acc - lo`. One fetch replaces
+//!    the float multiply/round/clamp — and the fetched value *is* the next
+//!    stage's input code.
+//! 2. **Tiled stage walk** ([`run_chain`]): instead of materializing a
+//!    full `Tensor4<i32>` accumulator tensor per conv, the chain walks
+//!    row blocks through conv→requantize→pool while the block is
+//!    cache-resident ([`ConvEngine::conv_rows`] is the tile entry point).
+//!    Only the u8 code tensor crosses the stage boundary — 4x smaller
+//!    than the i32 intermediate, and rows a floor-mode pool would drop
+//!    are never convolved at all.
+//!
+//! Both mechanisms are bit-identical to the unfused walk by construction:
+//! the requant table enumerates the exact [`requant_code`] expression over
+//! every reachable accumulator, and the band walk runs the same per-pixel
+//! arithmetic as the full conv (pinned by `tests/fused_stack.rs`).
+
+use crate::tensor::{Shape4, Tensor4};
+
+use super::custom_fn::ConvFunc;
+use super::engine::ConvEngine;
+use super::store::{ByteReader, ByteWriter};
+use super::table::acc_bounds;
+
+/// The one requantization expression of the whole crate: accumulator ->
+/// activation code. `round_ties_even` matches `jnp.round` bit-for-bit.
+/// Both the unfused stage walk and [`RequantTable::build`] call exactly
+/// this function, so the two paths cannot diverge.
+#[inline(always)]
+pub fn requant_code(acc: i32, scale: f32, qmax: i32) -> u8 {
+    let r = (acc as f32 * scale).round_ties_even() as i32;
+    r.clamp(0, qmax) as u8
+}
+
+/// Ceiling on absorbed-requantize table entries (1 byte each): beyond
+/// ~4 MiB the table stops being cache-friendly and the fused walk falls
+/// back to inline [`requant_code`] — still fused, just not absorbed.
+pub const REQUANT_MAX_ENTRIES: u64 = 1 << 22;
+
+/// Absorbed-requantize table: `codes[acc - lo] = requant_code(acc)` for
+/// every reachable accumulator `acc ∈ [lo, hi]`. Stored u8 codes — the
+/// next stage's input domain — so the table is 4x denser than the i32
+/// PCILTs it rides behind. Content-addressed via `TableKey::requant`
+/// (weights + cardinality + conv-fn + scale) through the `TableStore`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequantTable {
+    /// `codes[i] = requant_code(lo + i, scale, 2^act_bits - 1)`.
+    codes: Vec<u8>,
+    /// Lowest reachable accumulator (the table's index origin).
+    lo: i32,
+    /// Requantize scale baked into the codes.
+    pub scale: f32,
+    /// Output code width; `qmax = 2^act_bits - 1`.
+    pub act_bits: u32,
+}
+
+impl RequantTable {
+    /// Whether an accumulator range supports an absorbed table: non-empty,
+    /// i32-safe, and within [`REQUANT_MAX_ENTRIES`].
+    pub fn feasible(lo: i64, hi: i64) -> bool {
+        lo <= hi
+            && lo >= i32::MIN as i64
+            && hi <= i32::MAX as i64
+            && (hi - lo + 1) as u64 <= REQUANT_MAX_ENTRIES
+    }
+
+    /// Whether `weights` (at `act_bits` cardinality under `f`) admit an
+    /// absorbed table — the planner's feasibility probe.
+    pub fn feasible_for_layer(weights: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> bool {
+        let (lo, hi) = acc_bounds(weights, act_bits, f);
+        Self::feasible(lo, hi)
+    }
+
+    /// Build over an explicit accumulator range.
+    pub fn build(lo: i64, hi: i64, scale: f32, act_bits: u32) -> RequantTable {
+        assert!(Self::feasible(lo, hi), "requant range [{lo}, {hi}] infeasible");
+        assert!((1..=8).contains(&act_bits));
+        assert!(scale.is_finite() && scale > 0.0);
+        let qmax = (1i32 << act_bits) - 1;
+        let codes = (lo..=hi).map(|acc| requant_code(acc as i32, scale, qmax)).collect();
+        RequantTable {
+            codes,
+            lo: lo as i32,
+            scale,
+            act_bits,
+        }
+    }
+
+    /// Build for a conv layer: range from [`acc_bounds`], codes from
+    /// [`requant_code`]. This is what `NetworkSpec::compile` hands the
+    /// `TableStore` builder.
+    pub fn for_layer(
+        weights: &Tensor4<i8>,
+        act_bits: u32,
+        f: &ConvFunc,
+        scale: f32,
+    ) -> RequantTable {
+        let (lo, hi) = acc_bounds(weights, act_bits, f);
+        Self::build(lo, hi, scale, act_bits)
+    }
+
+    /// Accumulator -> next-stage code, one fetch. Total over the layer's
+    /// reachable accumulators; an out-of-range index (a bounds bug, never
+    /// an input property) panics rather than mis-coding.
+    #[inline(always)]
+    pub fn fetch(&self, acc: i32) -> u8 {
+        self.codes[(acc - self.lo) as usize]
+    }
+
+    /// Table entries (1 byte each).
+    pub fn entries(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Lowest covered accumulator.
+    pub fn lo(&self) -> i32 {
+        self.lo
+    }
+
+    pub(crate) fn write_to(&self, w: &mut ByteWriter) {
+        w.u32(self.act_bits);
+        w.u32(self.scale.to_bits());
+        w.u64(self.lo as i64 as u64);
+        w.u8_slice(&self.codes);
+    }
+
+    pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<RequantTable, String> {
+        let act_bits = r.take_u32()?;
+        let scale = f32::from_bits(r.take_u32()?);
+        let lo = r.take_u64()? as i64;
+        let codes = r.take_u8_slice()?;
+        if !(1..=8).contains(&act_bits) {
+            return Err(format!("requant table: bad act_bits {act_bits}"));
+        }
+        if !(scale.is_finite() && scale > 0.0) {
+            return Err(format!("requant table: bad scale {scale}"));
+        }
+        if codes.is_empty() || codes.len() as u64 > REQUANT_MAX_ENTRIES {
+            return Err(format!("requant table: bad entry count {}", codes.len()));
+        }
+        let hi_ok = lo
+            .checked_add(codes.len() as i64 - 1)
+            .map(|hi| hi <= i32::MAX as i64)
+            .unwrap_or(false);
+        if !(i32::MIN as i64..=i32::MAX as i64).contains(&lo) || !hi_ok {
+            return Err(format!("requant table: range [{lo}, +{}] overflows i32", codes.len()));
+        }
+        let qmax = (1u32 << act_bits) - 1;
+        if codes.iter().any(|&c| c as u32 > qmax) {
+            return Err("requant table: code exceeds cardinality".into());
+        }
+        Ok(RequantTable {
+            codes,
+            lo: lo as i32,
+            scale,
+            act_bits,
+        })
+    }
+}
+
+/// Rows per tile: enough that the i32 accumulator band stays around
+/// 128 KiB (cache-resident next to the tables), rounded to a multiple of
+/// the pool window so pooling never straddles tiles. Purely a performance
+/// knob — the walk is bit-identical for every block size (pinned in
+/// tests).
+fn block_rows(ow: usize, oc: usize, pool_k: usize) -> usize {
+    const TARGET_BYTES: usize = 128 * 1024;
+    let per_row = (ow * oc * 4).max(1);
+    let rows = (TARGET_BYTES / per_row).max(1);
+    ((rows / pool_k).max(1)) * pool_k
+}
+
+/// Execute one fused conv→requantize[→max-pool] chain: input codes in,
+/// next-stage codes out, with the i32 accumulators confined to a
+/// cache-resident row block. `requant` absorbs the requantize step into a
+/// table fetch when present; otherwise the block is requantized inline
+/// with [`requant_code`] — both bit-identical to the unfused walk.
+///
+/// Pooling uses the same floor semantics as `tensor::max_pool2d_k`
+/// (trailing rows/columns that do not fill a window are dropped); the
+/// fused walk simply never computes the dropped rows.
+pub fn run_chain(
+    engine: &dyn ConvEngine,
+    scale: f32,
+    requant: Option<&RequantTable>,
+    pool_k: Option<usize>,
+    act_bits: u32,
+    x: &Tensor4<u8>,
+) -> Tensor4<u8> {
+    run_chain_blocked(engine, scale, requant, pool_k, act_bits, x, 0)
+}
+
+/// [`run_chain`] with an explicit rows-per-tile override (`0` = auto via
+/// `block_rows`). Exposed for tests that pin bit-identity across tile
+/// boundaries.
+pub fn run_chain_blocked(
+    engine: &dyn ConvEngine,
+    scale: f32,
+    requant: Option<&RequantTable>,
+    pool_k: Option<usize>,
+    act_bits: u32,
+    x: &Tensor4<u8>,
+    block_override: usize,
+) -> Tensor4<u8> {
+    let s = x.shape();
+    let g = engine.geometry();
+    let oc = engine.out_channels();
+    let (oh, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+    let qmax = (1i32 << act_bits) - 1;
+    let k = pool_k.unwrap_or(1);
+    assert!(k >= 1 && oh / k >= 1 && ow / k >= 1, "pool k{k} collapses {oh}x{ow}");
+    let (ph, pw) = (oh / k, ow / k);
+    let oh_used = ph * k;
+    let block = match block_override {
+        0 => block_rows(ow, oc, k),
+        b => ((b / k).max(1)) * k,
+    };
+    let mut out = Tensor4::zeros(Shape4::new(s.n, ph, pw, oc));
+    let mut acc = vec![0i32; block.min(oh_used) * ow * oc];
+    let mut codes = vec![0u8; acc.len()];
+    let per_out_n = ph * pw * oc;
+    for n in 0..s.n {
+        let mut oy0 = 0;
+        while oy0 < oh_used {
+            let rows = block.min(oh_used - oy0);
+            let band = &mut acc[..rows * ow * oc];
+            engine.conv_rows(x, n, oy0, rows, band);
+            let cband = &mut codes[..rows * ow * oc];
+            match requant {
+                Some(t) => {
+                    debug_assert_eq!(t.act_bits, act_bits);
+                    for (c, &v) in cband.iter_mut().zip(band.iter()) {
+                        *c = t.fetch(v);
+                    }
+                }
+                None => {
+                    for (c, &v) in cband.iter_mut().zip(band.iter()) {
+                        *c = requant_code(v, scale, qmax);
+                    }
+                }
+            }
+            let out_base = n * per_out_n + (oy0 / k) * pw * oc;
+            let dst = out.data_mut();
+            if k == 1 {
+                dst[out_base..out_base + rows * ow * oc].copy_from_slice(cband);
+            } else {
+                for pr in 0..rows / k {
+                    for pc in 0..pw {
+                        for ch in 0..oc {
+                            let mut m = 0u8;
+                            for dy in 0..k {
+                                let row = (pr * k + dy) * ow;
+                                for dx in 0..k {
+                                    m = m.max(cband[(row + pc * k + dx) * oc + ch]);
+                                }
+                            }
+                            dst[out_base + (pr * pw + pc) * oc + ch] = m;
+                        }
+                    }
+                }
+            }
+            oy0 += rows;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcilt::dm::DmEngine;
+    use crate::pcilt::engine::ConvGeometry;
+    use crate::pcilt::lookup::PciltEngine;
+    use crate::pcilt::mixed::{ChannelWidths, MixedEngine};
+    use crate::pcilt::segment::{RowSegmentEngine, SegmentEngine};
+    use crate::pcilt::shared::SharedEngine;
+    use crate::tensor::max_pool2d_k;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    /// The unfused reference: full conv, elementwise requant, code pool.
+    fn unfused(
+        engine: &dyn ConvEngine,
+        scale: f32,
+        pool_k: Option<usize>,
+        act_bits: u32,
+        x: &Tensor4<u8>,
+    ) -> Tensor4<u8> {
+        let qmax = (1i32 << act_bits) - 1;
+        let acc = engine.conv(x);
+        let codes = acc.map(|v| requant_code(v, scale, qmax));
+        match pool_k {
+            None => codes,
+            Some(k) => max_pool2d_k(&codes.map(|v| v as i32), k).map(|v| v as u8),
+        }
+    }
+
+    #[test]
+    fn requant_table_matches_scalar_requant_over_full_range() {
+        forall("requant table == requant_code", 40, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let w = Tensor4::random_weights(
+                Shape4::new(2, 3, 3, 1),
+                8,
+                &mut rng,
+            );
+            let scale = rng.f32_range(0.001, 0.3);
+            let t = RequantTable::for_layer(&w, bits, &ConvFunc::Mul, scale);
+            let (lo, hi) = acc_bounds(&w, bits, &ConvFunc::Mul);
+            assert_eq!(t.entries() as i64, hi - lo + 1);
+            let qmax = (1i32 << bits) - 1;
+            for acc in lo..=hi {
+                assert_eq!(
+                    t.fetch(acc as i32),
+                    requant_code(acc as i32, scale, qmax),
+                    "acc {acc} scale {scale} bits {bits}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn feasibility_guards_range_and_ceiling() {
+        assert!(RequantTable::feasible(-10, 10));
+        assert!(RequantTable::feasible(0, 0));
+        assert!(!RequantTable::feasible(1, 0), "empty range");
+        assert!(!RequantTable::feasible(0, REQUANT_MAX_ENTRIES as i64), "over ceiling");
+        assert!(!RequantTable::feasible(i64::MIN, 0), "i32 overflow");
+        // A wide INT8 layer overflows the ceiling; a narrow one does not.
+        let mut rng = Rng::new(3);
+        let small = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        assert!(RequantTable::feasible_for_layer(&small, 4, &ConvFunc::Mul));
+        let wide = Tensor4::from_fn(Shape4::new(1, 5, 5, 128), |_, _, _, _| 127i8);
+        // 25*128 positions * 127 * 255 ≈ 10^8 entries: infeasible.
+        assert!(!RequantTable::feasible_for_layer(&wide, 8, &ConvFunc::Mul));
+    }
+
+    #[test]
+    fn requant_serde_roundtrip() {
+        let mut rng = Rng::new(5);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 2), 8, &mut rng);
+        let t = RequantTable::for_layer(&w, 4, &ConvFunc::Mul, 0.05);
+        let mut wtr = ByteWriter::new();
+        t.write_to(&mut wtr);
+        let mut rdr = ByteReader::new(&wtr.buf);
+        let back = RequantTable::read_from(&mut rdr).unwrap();
+        assert_eq!(rdr.remaining(), 0);
+        assert_eq!(back, t);
+        // Truncated payloads fail cleanly.
+        let mut short = ByteReader::new(&wtr.buf[..wtr.buf.len() - 3]);
+        assert!(RequantTable::read_from(&mut short).is_err());
+    }
+
+    #[test]
+    fn run_chain_matches_unfused_for_every_engine() {
+        forall("fused chain == unfused stage walk", 12, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[2u32, 4]);
+            let ic = rng.range_i64(1, 2) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            // Odd and even map sizes, pool k in {none, 2, 3}.
+            let h = 3 + rng.range_i64(4, 9) as usize;
+            let w_dim = 3 + rng.range_i64(4, 9) as usize;
+            let pool = *rng.choose(&[None, Some(2usize), Some(3)]);
+            let x = Tensor4::random_activations(Shape4::new(2, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, 3, 3, ic), 8, &mut rng);
+            let geom = ConvGeometry::unit_stride(3, 3);
+            let scale = rng.f32_range(0.01, 0.2);
+            let table = RequantTable::for_layer(&w, bits, &ConvFunc::Mul, scale);
+            let engines: Vec<(&str, Box<dyn ConvEngine>)> = vec![
+                ("dm", Box::new(DmEngine::new(w.clone(), geom))),
+                ("pcilt", Box::new(PciltEngine::new(&w, bits, geom))),
+                ("shared", Box::new(SharedEngine::new(&w, bits, geom))),
+                ("segment", Box::new(SegmentEngine::new(&w, bits, 2, geom))),
+                ("segment-row", Box::new(RowSegmentEngine::new(&w, bits, 2, geom))),
+                (
+                    "mixed",
+                    Box::new(MixedEngine::new(&w, ChannelWidths::uniform(ic, bits), geom)),
+                ),
+            ];
+            for (name, e) in &engines {
+                let expect = unfused(e.as_ref(), scale, pool, bits, &x);
+                // absorbed table, inline fallback, and tiny tile blocks
+                // must all be bit-identical
+                for (label, got) in [
+                    ("table", run_chain(e.as_ref(), scale, Some(&table), pool, bits, &x)),
+                    ("inline", run_chain(e.as_ref(), scale, None, pool, bits, &x)),
+                    (
+                        "block1",
+                        run_chain_blocked(e.as_ref(), scale, Some(&table), pool, bits, &x, 1),
+                    ),
+                    (
+                        "block2",
+                        run_chain_blocked(e.as_ref(), scale, None, pool, bits, &x, 2),
+                    ),
+                ] {
+                    assert_eq!(got, expect, "{name}/{label} h={h} w={w_dim} pool={pool:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn strided_chain_matches_unfused() {
+        let mut rng = Rng::new(11);
+        let x = Tensor4::random_activations(Shape4::new(1, 13, 11, 1), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 1), 8, &mut rng);
+        let geom = ConvGeometry {
+            kh: 3,
+            kw: 3,
+            sy: 2,
+            sx: 2,
+        };
+        let e = PciltEngine::new(&w, 4, geom);
+        for pool in [None, Some(2)] {
+            assert_eq!(
+                run_chain(&e, 0.07, None, pool, 4, &x),
+                unfused(&e, 0.07, pool, 4, &x),
+                "pool {pool:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_rows_respects_pool_multiple() {
+        for (ow, oc, k) in [(8usize, 4usize, 2usize), (640, 64, 3), (1, 1, 5)] {
+            let b = block_rows(ow, oc, k);
+            assert!(b >= k, "block {b} under pool {k}");
+            assert_eq!(b % k, 0, "block {b} not a multiple of pool {k}");
+        }
+    }
+}

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{TableArtifact, TableHandle, TableKey, TableStore};
 use super::table::LayerTables;
 
@@ -125,6 +125,42 @@ impl PciltEngine {
     pub fn build_evals(&self) -> u64 {
         self.tables().build_evals
     }
+
+    /// The shared band walk: output rows `[oy0, oy0 + rows)` of batch item
+    /// `n`, written row-major `[rows][ow][oc]` into `out`. Both
+    /// [`ConvEngine::conv`] and [`ConvEngine::conv_rows`] run exactly this
+    /// loop, so the fused tile walk is bit-identical by construction.
+    fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let tables = self.tables();
+        let in_ch = tables.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels {} != table in_ch {}", s.c, in_ch);
+        let card = tables.card;
+        let oc_n = tables.out_ch;
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let cl = &self.cl[..];
+        let mut acc = vec![0i32; oc_n];
+        for oy in oy0..oy0 + rows {
+            for ox in 0..ow {
+                acc.fill(0);
+                let mut p = 0usize;
+                for ky in 0..g.kh {
+                    let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                    for &a in row {
+                        let base = (p * card + a as usize) * oc_n;
+                        let trow = &cl[base..base + oc_n];
+                        for (acc_v, &t) in acc.iter_mut().zip(trow) {
+                            *acc_v += t;
+                        }
+                        p += 1;
+                    }
+                }
+                let start = ((oy - oy0) * ow + ox) * oc_n;
+                out[start..start + oc_n].copy_from_slice(&acc);
+            }
+        }
+    }
 }
 
 impl ConvEngine for PciltEngine {
@@ -152,35 +188,19 @@ impl ConvEngine for PciltEngine {
         );
         let out_shape = g.out_shape(s, tables.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let card = tables.card;
-        let oc_n = tables.out_ch;
-        // Channels-last inner loop: one contiguous `oc_n`-long row add per
-        // RF position — SIMD-friendly, no per-channel gathers.
-        let cl = &self.cl[..];
-        let mut acc = vec![0i32; oc_n];
-        let row_w = out_shape.w;
+        // Channels-last inner loop (inside `conv_band`): one contiguous
+        // `oc_n`-long row add per RF position — SIMD-friendly, no
+        // per-channel gathers.
+        let per_n = out_shape.h * out_shape.w * out_shape.c;
         for n in 0..s.n {
-            for oy in 0..out_shape.h {
-                for ox in 0..row_w {
-                    acc.fill(0);
-                    let mut p = 0usize;
-                    for ky in 0..g.kh {
-                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
-                        for &a in row {
-                            let base = (p * card + a as usize) * oc_n;
-                            let trow = &cl[base..base + oc_n];
-                            for (acc_v, &t) in acc.iter_mut().zip(trow) {
-                                *acc_v += t;
-                            }
-                            p += 1;
-                        }
-                    }
-                    let start = out_shape.index(n, oy, ox, 0);
-                    out.data_mut()[start..start + oc_n].copy_from_slice(&acc);
-                }
-            }
+            self.conv_band(x, n, 0, out_shape.h, &mut out.data_mut()[n * per_n..(n + 1) * per_n]);
         }
         out
+    }
+
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        check_band(self.geom, x.shape(), self.out_channels(), oy0, rows, out.len());
+        self.conv_band(x, n, oy0, rows, out);
     }
 
     fn op_counts(&self, s: Shape4) -> OpCounts {

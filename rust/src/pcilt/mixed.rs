@@ -17,7 +17,7 @@
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
 
 /// Per-channel activation bit widths.
@@ -259,6 +259,42 @@ impl MixedEngine {
     pub fn entries(&self) -> usize {
         self.tables().cl.len()
     }
+
+    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
+    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let t = self.tables();
+        let in_ch = t.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let oc_n = t.out_ch;
+        let card = t.card;
+        let cl = &t.cl[..];
+        let mut acc = vec![0i32; oc_n];
+        for oy in oy0..oy0 + rows {
+            for ox in 0..ow {
+                acc.fill(0);
+                let mut p = 0usize;
+                for ky in 0..g.kh {
+                    let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                    for (i, &a) in row.iter().enumerate() {
+                        let ic = i % s.c;
+                        let code = (a as usize) >> t.shifts[ic];
+                        let base = (p * card + code) * oc_n;
+                        for (av, &tv) in acc.iter_mut().zip(&cl[base..base + oc_n]) {
+                            *av += tv;
+                        }
+                        p += 1;
+                    }
+                }
+                let start = ((oy - oy0) * ow + ox) * oc_n;
+                out[start..start + oc_n].copy_from_slice(&acc);
+            }
+        }
+    }
 }
 
 impl ConvEngine for MixedEngine {
@@ -278,37 +314,18 @@ impl ConvEngine for MixedEngine {
         let s = x.shape();
         let g = self.geom;
         let t = self.tables();
-        let in_ch = t.positions / (g.kh * g.kw);
-        assert_eq!(s.c, in_ch);
         let out_shape = g.out_shape(s, t.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let oc_n = t.out_ch;
-        let card = t.card;
-        let cl = &t.cl[..];
-        let mut acc = vec![0i32; oc_n];
+        let per_n = out_shape.h * out_shape.w * out_shape.c;
         for n in 0..s.n {
-            for oy in 0..out_shape.h {
-                for ox in 0..out_shape.w {
-                    acc.fill(0);
-                    let mut p = 0usize;
-                    for ky in 0..g.kh {
-                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
-                        for (i, &a) in row.iter().enumerate() {
-                            let ic = i % s.c;
-                            let code = (a as usize) >> t.shifts[ic];
-                            let base = (p * card + code) * oc_n;
-                            for (av, &tv) in acc.iter_mut().zip(&cl[base..base + oc_n]) {
-                                *av += tv;
-                            }
-                            p += 1;
-                        }
-                    }
-                    let start = out_shape.index(n, oy, ox, 0);
-                    out.data_mut()[start..start + oc_n].copy_from_slice(&acc);
-                }
-            }
+            self.conv_band(x, n, 0, out_shape.h, &mut out.data_mut()[n * per_n..(n + 1) * per_n]);
         }
         out
+    }
+
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        check_band(self.geom, x.shape(), self.out_channels(), oy0, rows, out.len());
+        self.conv_band(x, n, oy0, rows, out);
     }
 
     fn op_counts(&self, s: Shape4) -> OpCounts {

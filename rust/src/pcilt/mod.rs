@@ -9,6 +9,7 @@ pub mod custom_fn;
 pub mod dm;
 pub mod engine;
 pub mod fft;
+pub mod fused;
 pub mod grouped;
 pub mod layout;
 pub mod lookup;
@@ -25,6 +26,7 @@ pub mod winograd;
 pub use custom_fn::ConvFunc;
 pub use dm::DmEngine;
 pub use engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+pub use fused::{requant_code, RequantTable};
 pub use grouped::GroupedEngine;
 pub use layout::{LayoutEngine, LayoutPlan, SegmentSpec};
 pub use lookup::PciltEngine;

@@ -19,7 +19,7 @@ use crate::tensor::{Shape4, Tensor4};
 use crate::util::bitpack::{offset_space, pack_offset};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
 
 /// Segment-offset table set for one conv layer (geometry-free: table
@@ -271,6 +271,46 @@ impl SegmentEngine {
     pub fn bytes(&self, value_bits: u32) -> f64 {
         self.entries() as f64 * value_bits as f64 / 8.0
     }
+
+    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
+    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels mismatch");
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let t = self.handle.segment();
+        // Pre-processing circuitry: pack the RF's activations into segment
+        // offsets once, reused across all output channels (the paper:
+        // "calculated offsets can be reused").
+        let mut rf = vec![0u8; self.n_segments * self.seg_n];
+        let mut offsets = vec![0u32; self.n_segments];
+        for oy in oy0..oy0 + rows {
+            for ox in 0..ow {
+                let mut p = 0;
+                for ky in 0..g.kh {
+                    let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                    rf[p..p + g.kw * s.c].copy_from_slice(row);
+                    p += g.kw * s.c;
+                }
+                rf[self.positions..].fill(0); // tail padding
+                for (seg, off) in offsets.iter_mut().enumerate() {
+                    let ws = &rf[seg * self.seg_n..(seg + 1) * self.seg_n];
+                    *off = pack_offset(ws, self.act_bits);
+                }
+                let base_out = ((oy - oy0) * ow + ox) * self.out_ch;
+                for oc in 0..self.out_ch {
+                    let mut acc = 0i32;
+                    for (seg, &off) in offsets.iter().enumerate() {
+                        acc += t.seg_table(oc, seg)[off as usize];
+                    }
+                    out[base_out + oc] = acc;
+                }
+            }
+        }
+    }
 }
 
 impl ConvEngine for SegmentEngine {
@@ -289,43 +329,18 @@ impl ConvEngine for SegmentEngine {
     fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
         let s = x.shape();
         let g = self.geom;
-        let in_ch = self.positions / (g.kh * g.kw);
-        assert_eq!(s.c, in_ch, "input channels mismatch");
         let out_shape = g.out_shape(s, self.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let t = self.handle.segment();
-        // Pre-processing circuitry: pack the RF's activations into segment
-        // offsets once, reused across all output channels (the paper:
-        // "calculated offsets can be reused").
-        let mut rf = vec![0u8; self.n_segments * self.seg_n];
-        let mut offsets = vec![0u32; self.n_segments];
+        let per_n = out_shape.h * out_shape.w * out_shape.c;
         for n in 0..s.n {
-            for oy in 0..out_shape.h {
-                for ox in 0..out_shape.w {
-                    let mut p = 0;
-                    for ky in 0..g.kh {
-                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
-                        rf[p..p + g.kw * s.c].copy_from_slice(row);
-                        p += g.kw * s.c;
-                    }
-                    rf[self.positions..].fill(0); // tail padding
-                    for (seg, off) in offsets.iter_mut().enumerate() {
-                        *off = pack_offset(
-                            &rf[seg * self.seg_n..(seg + 1) * self.seg_n],
-                            self.act_bits,
-                        );
-                    }
-                    for oc in 0..self.out_ch {
-                        let mut acc = 0i32;
-                        for (seg, &off) in offsets.iter().enumerate() {
-                            acc += t.seg_table(oc, seg)[off as usize];
-                        }
-                        out.set(n, oy, ox, oc, acc);
-                    }
-                }
-            }
+            self.conv_band(x, n, 0, out_shape.h, &mut out.data_mut()[n * per_n..(n + 1) * per_n]);
         }
         out
+    }
+
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        check_band(self.geom, x.shape(), self.out_channels(), oy0, rows, out.len());
+        self.conv_band(x, n, oy0, rows, out);
     }
 
     fn op_counts(&self, s: Shape4) -> OpCounts {
@@ -712,6 +727,55 @@ impl RowSegmentEngine {
     pub fn entries(&self) -> usize {
         self.handle.row_segment().cl.len()
     }
+
+    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
+    /// row-major). Input rows are packed once per band — re-packing the
+    /// `kh - 1` rows two adjacent bands share changes no bits, only
+    /// (slightly) the packing amortization.
+    fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        use crate::util::bitpack::{pack_stream, window_offset};
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels mismatch");
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let oc_n = self.out_ch;
+        let row_positions = g.kw * s.c;
+        let bits = self.act_bits;
+        let card = self.seg_card;
+        let tables = self.handle.row_segment();
+        let cl = &tables.cl[..];
+        // Pack the input rows this band reads; each row is w*cin codes.
+        let y_base = oy0 * g.sy;
+        let y_end = (oy0 + rows - 1) * g.sy + g.kh;
+        let streams: Vec<Vec<u64>> = (y_base..y_end)
+            .map(|y| pack_stream(x.row_span(n, y, 0, s.w), bits))
+            .collect();
+        let mut acc = vec![0i32; oc_n];
+        for oy in oy0..oy0 + rows {
+            for ox in 0..ow {
+                acc.fill(0);
+                let col_start = ox * g.sx * s.c;
+                for ky in 0..g.kh {
+                    let stream = &streams[oy * g.sy + ky - y_base];
+                    for j in 0..self.segs_per_row {
+                        let start = col_start + j * self.seg_n;
+                        let take = self.seg_n.min(row_positions - j * self.seg_n);
+                        let off = window_offset(stream, bits, start, take) as usize;
+                        let seg_global = ky * self.segs_per_row + j;
+                        let base = (seg_global * card + off) * oc_n;
+                        let trow = &cl[base..base + oc_n];
+                        for (a, &t) in acc.iter_mut().zip(trow) {
+                            *a += t;
+                        }
+                    }
+                }
+                let start = ((oy - oy0) * ow + ox) * oc_n;
+                out[start..start + oc_n].copy_from_slice(&acc);
+            }
+        }
+    }
 }
 
 impl ConvEngine for RowSegmentEngine {
@@ -728,49 +792,20 @@ impl ConvEngine for RowSegmentEngine {
     }
 
     fn conv(&self, x: &Tensor4<u8>) -> Tensor4<i32> {
-        use crate::util::bitpack::{pack_stream, window_offset};
         let s = x.shape();
         let g = self.geom;
-        let in_ch = self.positions / (g.kh * g.kw);
-        assert_eq!(s.c, in_ch, "input channels mismatch");
         let out_shape = g.out_shape(s, self.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let oc_n = self.out_ch;
-        let row_positions = g.kw * s.c;
-        let bits = self.act_bits;
-        let card = self.seg_card;
-        let tables = self.handle.row_segment();
-        let cl = &tables.cl[..];
-        let mut acc = vec![0i32; oc_n];
+        let per_n = out_shape.h * out_shape.w * out_shape.c;
         for n in 0..s.n {
-            // Pack every input row once; each row is w*cin codes.
-            let streams: Vec<Vec<u64>> = (0..s.h)
-                .map(|y| pack_stream(x.row_span(n, y, 0, s.w), bits))
-                .collect();
-            for oy in 0..out_shape.h {
-                for ox in 0..out_shape.w {
-                    acc.fill(0);
-                    let col_start = ox * g.sx * s.c;
-                    for ky in 0..g.kh {
-                        let stream = &streams[oy * g.sy + ky];
-                        for j in 0..self.segs_per_row {
-                            let start = col_start + j * self.seg_n;
-                            let take = self.seg_n.min(row_positions - j * self.seg_n);
-                            let off = window_offset(stream, bits, start, take) as usize;
-                            let seg_global = ky * self.segs_per_row + j;
-                            let base = (seg_global * card + off) * oc_n;
-                            let trow = &cl[base..base + oc_n];
-                            for (a, &t) in acc.iter_mut().zip(trow) {
-                                *a += t;
-                            }
-                        }
-                    }
-                    let start = out_shape.index(n, oy, ox, 0);
-                    out.data_mut()[start..start + oc_n].copy_from_slice(&acc);
-                }
-            }
+            self.conv_band(x, n, 0, out_shape.h, &mut out.data_mut()[n * per_n..(n + 1) * per_n]);
         }
         out
+    }
+
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        check_band(self.geom, x.shape(), self.out_channels(), oy0, rows, out.len());
+        self.conv_band(x, n, oy0, rows, out);
     }
 
     fn op_counts(&self, s: Shape4) -> OpCounts {

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use crate::tensor::{Shape4, Tensor4};
 
 use super::custom_fn::ConvFunc;
-use super::engine::{rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
+use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
 
 /// Shared-table set for one layer: unique tables + per-position pointers.
@@ -322,6 +322,39 @@ impl SharedEngine {
     pub fn tables(&self) -> &SharedTables {
         self.handle.shared()
     }
+
+    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
+    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let t = self.tables();
+        let in_ch = t.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let mut rf = vec![0u8; t.positions];
+        for oy in oy0..oy0 + rows {
+            for ox in 0..ow {
+                let mut p = 0;
+                for ky in 0..g.kh {
+                    let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                    rf[p..p + g.kw * s.c].copy_from_slice(row);
+                    p += g.kw * s.c;
+                }
+                let base_out = ((oy - oy0) * ow + ox) * t.out_ch;
+                for oc in 0..t.out_ch {
+                    let base = oc * t.positions;
+                    let mut acc = 0i32;
+                    for (pos, &a) in rf.iter().enumerate() {
+                        let ti = t.pointers[base + pos] as usize;
+                        acc += t.unique[ti * t.card + a as usize];
+                    }
+                    out[base_out + oc] = acc;
+                }
+            }
+        }
+    }
 }
 
 impl ConvEngine for SharedEngine {
@@ -341,33 +374,18 @@ impl ConvEngine for SharedEngine {
         let s = x.shape();
         let g = self.geom;
         let t = self.tables();
-        let in_ch = t.positions / (g.kh * g.kw);
-        assert_eq!(s.c, in_ch);
         let out_shape = g.out_shape(s, t.out_ch);
         let mut out = Tensor4::zeros(out_shape);
-        let mut rf = vec![0u8; t.positions];
+        let per_n = out_shape.h * out_shape.w * out_shape.c;
         for n in 0..s.n {
-            for oy in 0..out_shape.h {
-                for ox in 0..out_shape.w {
-                    let mut p = 0;
-                    for ky in 0..g.kh {
-                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
-                        rf[p..p + g.kw * s.c].copy_from_slice(row);
-                        p += g.kw * s.c;
-                    }
-                    for oc in 0..t.out_ch {
-                        let base = oc * t.positions;
-                        let mut acc = 0i32;
-                        for (pos, &a) in rf.iter().enumerate() {
-                            let ti = t.pointers[base + pos] as usize;
-                            acc += t.unique[ti * t.card + a as usize];
-                        }
-                        out.set(n, oy, ox, oc, acc);
-                    }
-                }
-            }
+            self.conv_band(x, n, 0, out_shape.h, &mut out.data_mut()[n * per_n..(n + 1) * per_n]);
         }
         out
+    }
+
+    fn conv_rows(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        check_band(self.geom, x.shape(), self.out_channels(), oy0, rows, out.len());
+        self.conv_band(x, n, oy0, rows, out);
     }
 
     fn op_counts(&self, s: Shape4) -> OpCounts {

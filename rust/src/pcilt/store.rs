@@ -34,6 +34,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::tensor::Tensor4;
 
 use super::custom_fn::ConvFunc;
+use super::fused::RequantTable;
 use super::mixed::{ChannelWidths, MixedTables};
 use super::segment::{RowSegmentTables, SegmentTables};
 use super::shared::{SharedTables, ValueIndirection};
@@ -112,6 +113,7 @@ const KIND_VALUE: u8 = 2;
 const KIND_SEGMENT: u8 = 3;
 const KIND_ROW_SEGMENT: u8 = 4;
 const KIND_MIXED: u8 = 5;
+const KIND_REQUANT: u8 = 6;
 
 impl TableKey {
     fn of(kind: u8, w: &Tensor4<i8>, bits: u32, f: &ConvFunc, extra: &[u64]) -> TableKey {
@@ -167,6 +169,13 @@ impl TableKey {
         let extra: Vec<u64> = widths.bits.iter().map(|&b| b as u64).collect();
         Self::of(KIND_MIXED, w, table_bits, f, &extra)
     }
+
+    /// [`RequantTable`] absorbing a requantize of `scale` behind a conv
+    /// layer's accumulators. The scale reaches every code the table emits,
+    /// so its exact bits are part of the address.
+    pub fn requant(w: &Tensor4<i8>, act_bits: u32, f: &ConvFunc, scale: f32) -> TableKey {
+        Self::of(KIND_REQUANT, w, act_bits, f, &[scale.to_bits() as u64])
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -183,6 +192,7 @@ pub enum TableArtifact {
     Segment(SegmentTables),
     RowSegment(RowSegmentTables),
     Mixed(MixedTables),
+    Requant(RequantTable),
 }
 
 impl TableArtifact {
@@ -194,6 +204,7 @@ impl TableArtifact {
             TableArtifact::Segment(_) => KIND_SEGMENT,
             TableArtifact::RowSegment(_) => KIND_ROW_SEGMENT,
             TableArtifact::Mixed(_) => KIND_MIXED,
+            TableArtifact::Requant(_) => KIND_REQUANT,
         }
     }
 
@@ -206,6 +217,7 @@ impl TableArtifact {
             TableArtifact::Segment(_) => "segment",
             TableArtifact::RowSegment(_) => "segment-row",
             TableArtifact::Mixed(_) => "mixed",
+            TableArtifact::Requant(_) => "requant",
         }
     }
 
@@ -218,6 +230,7 @@ impl TableArtifact {
             TableArtifact::Segment(t) => t.values.len() as f64 * 4.0,
             TableArtifact::RowSegment(t) => t.cl.len() as f64 * 4.0,
             TableArtifact::Mixed(t) => t.resident_bytes(),
+            TableArtifact::Requant(t) => t.entries() as f64,
         }
     }
 
@@ -229,6 +242,7 @@ impl TableArtifact {
             TableArtifact::Segment(t) => t.write_to(w),
             TableArtifact::RowSegment(t) => t.write_to(w),
             TableArtifact::Mixed(t) => t.write_to(w),
+            TableArtifact::Requant(t) => t.write_to(w),
         }
     }
 
@@ -240,6 +254,7 @@ impl TableArtifact {
             KIND_SEGMENT => TableArtifact::Segment(SegmentTables::read_from(r)?),
             KIND_ROW_SEGMENT => TableArtifact::RowSegment(RowSegmentTables::read_from(r)?),
             KIND_MIXED => TableArtifact::Mixed(MixedTables::read_from(r)?),
+            KIND_REQUANT => TableArtifact::Requant(RequantTable::read_from(r)?),
             other => return Err(format!("unknown artifact kind {other}")),
         })
     }
@@ -320,6 +335,13 @@ impl TableHandle {
         match &self.0.artifact {
             TableArtifact::Mixed(t) => t,
             other => panic!("handle holds {} tables, not mixed", other.kind_name()),
+        }
+    }
+
+    pub fn requant(&self) -> &RequantTable {
+        match &self.0.artifact {
+            TableArtifact::Requant(t) => t,
+            other => panic!("handle holds {} tables, not requant", other.kind_name()),
         }
     }
 
@@ -1009,6 +1031,11 @@ impl ByteWriter {
             self.bytes(&x.to_le_bytes());
         }
     }
+
+    pub(crate) fn u8_slice(&mut self, xs: &[u8]) {
+        self.u64(xs.len() as u64);
+        self.bytes(xs);
+    }
 }
 
 /// Bounds-checked little-endian reader; every `take_*` fails (rather than
@@ -1071,6 +1098,11 @@ impl<'a> ByteReader<'a> {
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
+
+    pub(crate) fn take_u8_slice(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.take_u64()? as usize;
+        Ok(self.take_bytes(n)?.to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -1121,6 +1153,21 @@ mod tests {
             TableKey::dense(&w1, 4, &ConvFunc::Mul),
             TableKey::dense(&w1, 4, &ConvFunc::SatMul { max: 10 }),
             "conv-fn is part of the address"
+        );
+        assert_eq!(
+            TableKey::requant(&w1, 4, &ConvFunc::Mul, 0.05),
+            TableKey::requant(&w2, 4, &ConvFunc::Mul, 0.05),
+            "identical requant content must share a key"
+        );
+        assert_ne!(
+            TableKey::requant(&w1, 4, &ConvFunc::Mul, 0.05),
+            TableKey::requant(&w1, 4, &ConvFunc::Mul, 0.06),
+            "requant scale is part of the address"
+        );
+        assert_ne!(
+            TableKey::requant(&w1, 4, &ConvFunc::Mul, 0.05),
+            TableKey::dense(&w1, 4, &ConvFunc::Mul),
+            "requant kind is distinct from dense"
         );
     }
 
@@ -1192,6 +1239,7 @@ mod tests {
                 4,
                 &f,
             )),
+            TableArtifact::Requant(RequantTable::for_layer(&w, 4, &f, 0.05)),
         ];
         for a in artifacts {
             let mut wtr = ByteWriter::new();

@@ -204,6 +204,42 @@ impl LayerTables {
     }
 }
 
+/// Accumulator bounds of a conv layer under `f`: the tightest `[lo, hi]`
+/// interval containing *every* accumulator any output channel can produce
+/// over all activation assignments. Per output channel the extremes are
+/// the per-position extremes of the PCILT entries summed (activations are
+/// chosen independently per position); the layer bound is the min/max over
+/// channels. This is what sizes the absorbed-requantize tables of the
+/// fused pipeline (`pcilt::fused::RequantTable`): a table over `[lo, hi]`
+/// covers every reachable accumulator, so the fetch is total.
+pub fn acc_bounds(weights: &Tensor4<i8>, act_bits: u32, f: &ConvFunc) -> (i64, i64) {
+    assert!((1..=12).contains(&act_bits));
+    let s = weights.shape();
+    let card = 1u32 << act_bits;
+    let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+    for oc in 0..s.n {
+        let (mut oc_lo, mut oc_hi) = (0i64, 0i64);
+        for ky in 0..s.h {
+            for kx in 0..s.w {
+                for ic in 0..s.c {
+                    let w = weights.get(oc, ky, kx, ic) as i32;
+                    let (mut p_lo, mut p_hi) = (i64::MAX, i64::MIN);
+                    for a in 0..card {
+                        let v = f.eval(w, a) as i64;
+                        p_lo = p_lo.min(v);
+                        p_hi = p_hi.max(v);
+                    }
+                    oc_lo += p_lo;
+                    oc_hi += p_hi;
+                }
+            }
+        }
+        lo = lo.min(oc_lo);
+        hi = hi.max(oc_hi);
+    }
+    (lo, hi)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +306,37 @@ mod tests {
         let t = Pcilt::build(1, 8, &ConvFunc::Mul);
         assert_eq!(t.bytes(16), 512.0);
         assert_eq!(t.bytes(12), 384.0); // narrow products: 1.5 B/entry
+    }
+
+    #[test]
+    fn acc_bounds_cover_every_reachable_accumulator() {
+        use crate::pcilt::dm::conv_reference;
+        use crate::pcilt::engine::ConvGeometry;
+        forall("acc_bounds contain conv outputs", 30, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let (kh, kw) = *rng.choose(&[(1usize, 1usize), (3, 3)]);
+            let ic = rng.range_i64(1, 2) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+            let (lo, hi) = acc_bounds(&w, bits, &ConvFunc::Mul);
+            assert!(lo <= 0 && hi >= 0, "zero activations reach 0 for Mul");
+            let x = Tensor4::random_activations(Shape4::new(1, kh + 3, kw + 3, ic), bits, &mut rng);
+            let y = conv_reference(&x, &w, ConvGeometry::unit_stride(kh, kw));
+            for &v in y.data() {
+                assert!((lo..=hi).contains(&(v as i64)), "{v} outside [{lo}, {hi}]");
+            }
+        });
+    }
+
+    #[test]
+    fn acc_bounds_tight_for_known_weights() {
+        // Single position, weight -3, 2-bit codes: products {0,-3,-6,-9}.
+        let w = Tensor4::from_vec(Shape4::new(1, 1, 1, 1), vec![-3i8]);
+        assert_eq!(acc_bounds(&w, 2, &ConvFunc::Mul), (-9, 0));
+        // Two positions, weights {2, -1}, 1-bit codes: lo = -1, hi = 2.
+        let w = Tensor4::from_vec(Shape4::new(1, 1, 2, 1), vec![2i8, -1]);
+        assert_eq!(acc_bounds(&w, 1, &ConvFunc::Mul), (-1, 2));
     }
 
     #[test]

@@ -72,6 +72,12 @@ pub fn max_pool2d(x: &Tensor4<i32>) -> Tensor4<i32> {
 /// `k`×`k` max pooling with stride `k` over an i32 NHWC tensor. Trailing
 /// rows/columns that don't fill a window are dropped (floor semantics);
 /// `k = 2` is bit-identical to [`max_pool2d`].
+///
+/// The floor behavior is an explicit, tested contract of this function —
+/// dropped cells never influence any output. Callers that consider
+/// truncation a declaration error must reject it *before* pooling:
+/// `model::NetworkSpec::validate` does exactly that for pool stages that
+/// did not opt in via `floor = true`.
 pub fn max_pool2d_k(x: &Tensor4<i32>, k: usize) -> Tensor4<i32> {
     assert!(k >= 1, "pool window must be >= 1");
     let s = x.shape();
@@ -182,6 +188,28 @@ mod tests {
     fn max_pool_drops_odd_edge() {
         let x = Tensor4::<i32>::zeros(Shape4::new(1, 5, 5, 2));
         assert_eq!(max_pool2d(&x).shape(), Shape4::new(1, 2, 2, 2));
+    }
+
+    #[test]
+    fn max_pool_floor_boundary_pinned() {
+        // The floor contract, value-level: trailing rows/cols that do not
+        // fill a window are DROPPED and can never influence any output —
+        // even when they hold the global maximum.
+        let mut x = Tensor4::<i32>::zeros(Shape4::new(1, 5, 5, 1));
+        x.set(0, 4, 4, 0, 1_000_000); // in the dropped edge
+        x.set(0, 0, 4, 0, 1_000_000); // dropped trailing column
+        x.set(0, 4, 0, 0, 1_000_000); // dropped trailing row
+        x.set(0, 1, 1, 0, 7);
+        let p = max_pool2d_k(&x, 2);
+        assert_eq!(p.shape(), Shape4::new(1, 2, 2, 1));
+        assert_eq!(p.get(0, 0, 0, 0), 7);
+        assert!(p.data().iter().all(|&v| v <= 7), "dropped cells leaked: {p:?}");
+        // and a k=3 window on a 7x7 map keeps exactly floor(7/3) = 2 rows
+        let y = Tensor4::from_fn(Shape4::new(1, 7, 7, 1), |_, h, w, _| (h * 7 + w) as i32);
+        let q = max_pool2d_k(&y, 3);
+        assert_eq!(q.shape(), Shape4::new(1, 2, 2, 1));
+        // window rows 3..6, cols 3..6 -> max at (5,5) = 40
+        assert_eq!(q.get(0, 1, 1, 0), 40);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Shared helpers for the integration suites: the golden-vector fixture
+//! format used by `network_stack.rs` and `fused_stack.rs`.
+//!
+//! A fixture (`tests/data/golden_<name>.bin`) freezes one conformance
+//! case: conv + dense weights, an input code tensor and the expected
+//! logits — produced *outside* the crate (`python/tools/gen_golden.py`
+//! mirrors the integer pipeline with numpy), so conformance no longer
+//! rests solely on the in-process DM reference agreeing with itself. The
+//! stage graphs live in [`golden_spec`]; the generator script and this
+//! module must agree on them (both carry the layout comment).
+//!
+//! Binary layout (all little-endian):
+//!
+//! ```text
+//! magic "PGLD" | u32 version = 1
+//! u32 n_convs | per conv: u32 o,h,w,i then o*h*w*i weight bytes (i8)
+//! u32 dense_len | dense weight bytes (i8)
+//! u32 b,h,w,c | b*h*w*c input code bytes (u8)
+//! u32 rows, classes | rows*classes expected logits (i32)
+//! ```
+
+// Each integration-test crate compiles this module independently and uses
+// a different subset of it; unused-item lints would otherwise fire
+// per-crate under `clippy -D warnings`.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use pcilt::model::{EngineChoice, NetworkSpec, NetworkWeights, StageSpec};
+use pcilt::tensor::{Shape4, Tensor4};
+
+/// Every checked-in fixture name.
+pub const GOLDEN_FIXTURES: &[&str] = &["g2_pool_floor", "g4_odd_maps", "g8_deep_pool"];
+
+/// The frozen stage graph of a fixture. Scales are dyadic rationals
+/// (exact in f32 *and* f64) so the generator's numpy floats and the
+/// crate's f32 literals denote identical values.
+pub fn golden_spec(name: &str, engine: EngineChoice) -> NetworkSpec {
+    let conv = |out_ch: usize| StageSpec::Conv {
+        out_ch,
+        kernel: 3,
+        stride: 1,
+        engine,
+    };
+    match name {
+        // 2-bit codes, even maps, a strict pool and a floored (3x3 -> 1x1)
+        // pool — the truncating-boundary case the bugfix pins.
+        "g2_pool_floor" => NetworkSpec {
+            act_bits: 2,
+            img: 12,
+            in_ch: 1,
+            stages: vec![
+                conv(4),
+                StageSpec::Requantize { scale: 0.0625 },
+                StageSpec::MaxPool { k: 2, floor: false }, // 10 -> 5
+                conv(6),
+                StageSpec::Requantize { scale: 0.09375 },
+                StageSpec::MaxPool { k: 2, floor: true }, // 3 -> 1 (floor)
+                StageSpec::Dense { classes: 5 },
+            ],
+        },
+        // 4-bit codes, odd maps end-to-end, two input channels, no pool.
+        "g4_odd_maps" => NetworkSpec {
+            act_bits: 4,
+            img: 9,
+            in_ch: 2,
+            stages: vec![
+                conv(3),
+                StageSpec::Requantize { scale: 0.03125 },
+                conv(5),
+                StageSpec::Requantize { scale: 0.046875 },
+                StageSpec::Dense { classes: 4 },
+            ],
+        },
+        // 8-bit codes (the widest u8 cardinality), two pooled chains.
+        "g8_deep_pool" => NetworkSpec {
+            act_bits: 8,
+            img: 10,
+            in_ch: 1,
+            stages: vec![
+                conv(2),
+                StageSpec::Requantize { scale: 0.00390625 },
+                StageSpec::MaxPool { k: 2, floor: false }, // 8 -> 4
+                conv(3),
+                StageSpec::Requantize { scale: 0.015625 },
+                StageSpec::MaxPool { k: 2, floor: false }, // 2 -> 1
+                StageSpec::Dense { classes: 3 },
+            ],
+        },
+        other => panic!("unknown golden fixture '{other}'"),
+    }
+}
+
+/// One loaded fixture: weights, input codes and the expected logits.
+pub struct GoldenCase {
+    pub weights: NetworkWeights,
+    pub input: Tensor4<u8>,
+    pub logits: Vec<Vec<i32>>,
+}
+
+/// `tests/data/golden_<name>.bin` under the crate root.
+pub fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data")
+        .join(format!("golden_{name}.bin"))
+}
+
+struct Reader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Reader {
+    fn bytes(&mut self, n: usize) -> &[u8] {
+        assert!(self.pos + n <= self.buf.len(), "golden fixture truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    fn u32(&mut self) -> u32 {
+        let b = self.bytes(4);
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    fn i8_vec(&mut self, n: usize) -> Vec<i8> {
+        self.bytes(n).iter().map(|&b| b as i8).collect()
+    }
+}
+
+/// Parse a checked-in fixture. Panics (with context) on any malformation —
+/// a broken fixture is a repo error, not a runtime condition.
+pub fn load_golden(name: &str) -> GoldenCase {
+    let path = golden_path(name);
+    let buf = std::fs::read(&path)
+        .unwrap_or_else(|e| panic!("reading golden fixture {}: {e}", path.display()));
+    let mut r = Reader { buf, pos: 0 };
+    assert_eq!(r.bytes(4), b"PGLD", "bad magic in {name}");
+    assert_eq!(r.u32(), 1, "unsupported golden version in {name}");
+    let n_convs = r.u32() as usize;
+    let mut convs = Vec::with_capacity(n_convs);
+    for _ in 0..n_convs {
+        let (o, h, w, i) = (r.u32() as usize, r.u32() as usize, r.u32() as usize, r.u32() as usize);
+        let data = r.i8_vec(o * h * w * i);
+        convs.push(Tensor4::from_vec(Shape4::new(o, h, w, i), data));
+    }
+    let dense_len = r.u32() as usize;
+    let dense = r.i8_vec(dense_len);
+    let (b, h, w, c) = (r.u32() as usize, r.u32() as usize, r.u32() as usize, r.u32() as usize);
+    let input = Tensor4::from_vec(Shape4::new(b, h, w, c), r.bytes(b * h * w * c).to_vec());
+    let (rows, classes) = (r.u32() as usize, r.u32() as usize);
+    let mut logits = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        logits.push(
+            r.bytes(classes * 4)
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+    }
+    assert_eq!(r.pos, r.buf.len(), "trailing bytes in golden fixture {name}");
+    GoldenCase {
+        weights: NetworkWeights { convs, dense },
+        input,
+        logits,
+    }
+}
+
+/// Serialize a fixture (the `#[ignore]` regenerator in `fused_stack.rs`
+/// uses this to refresh expected logits in place).
+pub fn write_golden(name: &str, case: &GoldenCase) {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"PGLD");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(case.weights.convs.len() as u32).to_le_bytes());
+    for w in &case.weights.convs {
+        let s = w.shape();
+        for d in [s.n, s.h, s.w, s.c] {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend(w.data().iter().map(|&v| v as u8));
+    }
+    out.extend_from_slice(&(case.weights.dense.len() as u32).to_le_bytes());
+    out.extend(case.weights.dense.iter().map(|&v| v as u8));
+    let s = case.input.shape();
+    for d in [s.n, s.h, s.w, s.c] {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    out.extend_from_slice(case.input.data());
+    out.extend_from_slice(&(case.logits.len() as u32).to_le_bytes());
+    let classes = case.logits.first().map(|l| l.len()).unwrap_or(0);
+    out.extend_from_slice(&(classes as u32).to_le_bytes());
+    for row in &case.logits {
+        assert_eq!(row.len(), classes);
+        for &v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let path = golden_path(name);
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    std::fs::write(&path, out)
+        .unwrap_or_else(|e| panic!("writing golden fixture {}: {e}", path.display()));
+}

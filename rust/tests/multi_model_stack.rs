@@ -53,7 +53,10 @@ fn shared_backbone_holds_one_table_copy() {
     // materialize the same derived views serving builds (the mirror)
     let _ = solo_model.forward(&image(0));
     let solo = solo_store.stats();
-    assert_eq!(solo.entries, 2, "one model: two conv layers, two tables");
+    assert_eq!(
+        solo.entries, 4,
+        "one model: two conv layers -> dense + absorbed-requant tables"
+    );
 
     let store = Arc::new(TableStore::new());
     let registry = ModelRegistry::start_with_store(
@@ -79,7 +82,11 @@ fn shared_backbone_holds_one_table_copy() {
         s.cross_model_dedup >= 1,
         "cross_model_dedup must record the sharing: {s:?}"
     );
-    assert_eq!(registry.cross_model_dedup(), 2, "both conv-layer keys shared");
+    assert_eq!(
+        registry.cross_model_dedup(),
+        4,
+        "both conv-layer keys and both requant keys shared"
+    );
     assert!(
         s.bytes < 2.0 * solo.bytes,
         "fleet bytes {} must be < 2x single-model bytes {}",
@@ -106,7 +113,10 @@ fn independent_models_share_nothing() {
     )
     .unwrap();
     let s = store.stats();
-    assert_eq!(s.entries, 4, "two independent models: four distinct tables");
+    assert_eq!(
+        s.entries, 8,
+        "two independent models: four distinct conv tables + four requant tables"
+    );
     assert_eq!(s.cross_model_dedup, 0);
     assert_eq!(registry.cross_model_dedup(), 0);
 }

@@ -7,9 +7,12 @@
 //! a 4-conv network declared purely in TOML must serve end-to-end through
 //! the `ModelRegistry` with planner-chosen per-stage engines.
 
+mod common;
+
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{golden_spec, load_golden, GOLDEN_FIXTURES};
 use pcilt::config::{Document, ServeConfig};
 use pcilt::coordinator::{ModelRegistry, ServerOpts};
 use pcilt::model::{
@@ -78,7 +81,7 @@ fn four_conv_heterogeneous_spec_is_bit_exact_vs_dm() {
             StageSpec::Requantize { scale: 0.04 },
             StageSpec::Conv { out_ch: 8, kernel: 3, stride: 1, engine: engines[1] },
             StageSpec::Requantize { scale: 0.04 },
-            StageSpec::MaxPool { k: 2 },
+            StageSpec::MaxPool { k: 2, floor: false },
             StageSpec::Conv { out_ch: 8, kernel: 3, stride: 1, engine: engines[2] },
             StageSpec::Requantize { scale: 0.04 },
             StageSpec::Conv { out_ch: 4, kernel: 3, stride: 1, engine: engines[3] },
@@ -145,6 +148,28 @@ fn compiled_keys_are_the_store_contents() {
         assert!(store.contains(*k));
     }
     assert_eq!(store.stats().entries as usize, net.table_keys().len());
+}
+
+/// Golden-vector conformance for the unfused reference walk: fixtures
+/// generated by an independent numpy implementation of the pipeline
+/// (`python/tools/gen_golden.py`) reproduce bit-for-bit, so the
+/// conformance anchor no longer rests solely on the in-process DM
+/// reference agreeing with itself.
+#[test]
+fn golden_fixtures_reproduce_through_unfused_reference() {
+    for &name in GOLDEN_FIXTURES {
+        let case = load_golden(name);
+        let spec = golden_spec(name, EngineChoice::Dm);
+        let net = spec
+            .compile_with_defaults(&case.weights, &Arc::new(TableStore::new()))
+            .unwrap()
+            .with_fused(false);
+        assert_eq!(
+            net.forward_serial(&case.input),
+            case.logits,
+            "{name}: unfused DM walk diverged from the independent reference"
+        );
+    }
 }
 
 /// The headline acceptance criterion: a 4-conv `NetworkSpec` declared
