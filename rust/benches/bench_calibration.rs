@@ -1,0 +1,102 @@
+//! Calibration-planner benchmark: what a measured plan costs relative to
+//! the analytic one. `calibrate` micro-benches every feasible candidate
+//! (expensive, run once per host), while replanning against the saved
+//! per-host database (`--calibrated`) must stay as cheap as the pure
+//! analytic plan. Results land in the JSON file named by
+//! `PCILT_BENCH_JSON` (`BENCH_calibration.json` in CI).
+
+use std::sync::Arc;
+
+use pcilt::model::{layer_specs, random_params};
+use pcilt::pcilt::planner::{EnginePlanner, PlannerPolicy};
+use pcilt::pcilt::CalibrationDb;
+use pcilt::util::prng::Rng;
+use pcilt::util::timing::{bench, section, BenchOpts};
+
+fn bench_opts() -> BenchOpts {
+    if std::env::var("PCILT_BENCH_QUICK").is_ok() {
+        BenchOpts::quick()
+    } else {
+        BenchOpts::default()
+    }
+}
+
+fn main() {
+    section("Calibration planner: analytic plan vs calibrate vs calibrated replan");
+    let opts = bench_opts();
+    let mut rng = Rng::new(42);
+    let params = random_params(4, &mut rng);
+    let [s1, s2] = layer_specs(&params, 8);
+
+    let analytic_planner = EnginePlanner::new(PlannerPolicy::default());
+    let analytic = bench("analytic plan (2 layers)", &opts, || {
+        (
+            analytic_planner.plan_layer(&s1, Some(&params.w1)),
+            analytic_planner.plan_layer(&s2, Some(&params.w2)),
+        )
+    });
+    println!("{}", analytic.report());
+
+    // One calibration pass: micro-bench every feasible candidate and
+    // record the timings (this is what `pcilt plan --calibrate` runs).
+    let mut db = CalibrationDb::with_host("bench-host");
+    let t0 = std::time::Instant::now();
+    analytic_planner.calibrate_recording(&s1, &params.w1, 0xCA1, &mut db);
+    analytic_planner.calibrate_recording(&s2, &params.w2, 0xCA2, &mut db);
+    let calibrate_ns = t0.elapsed().as_nanos() as f64;
+    println!(
+        "calibrate (2 layers, {} timings recorded): {:.1} ms one-off",
+        db.len(),
+        calibrate_ns / 1e6
+    );
+
+    // Persist + reload through the checksummed artifact, then replan with
+    // measured overrides — the `--calibrated` hot path.
+    let dir = std::env::temp_dir().join(format!("pcilt-bench-cal-{}", std::process::id()));
+    db.save(&dir).expect("calibration db saves");
+    let db_bytes = CalibrationDb::artifact_bytes(&dir);
+    let loaded = CalibrationDb::load_for_host(&dir, "bench-host").expect("roundtrip");
+    assert_eq!(loaded, db, "persistence must be lossless");
+    let entries = loaded.len();
+    let calibrated_planner =
+        EnginePlanner::new(PlannerPolicy::default()).with_calibration(Arc::new(loaded));
+    let calibrated = bench("calibrated replan (2 layers)", &opts, || {
+        (
+            calibrated_planner.plan_layer(&s1, Some(&params.w1)),
+            calibrated_planner.plan_layer(&s2, Some(&params.w2)),
+        )
+    });
+    println!("{}", calibrated.report());
+    let (p1, p2) = (
+        calibrated_planner.plan_layer(&s1, Some(&params.w1)),
+        calibrated_planner.plan_layer(&s2, Some(&params.w2)),
+    );
+    assert!(
+        p1.candidates.iter().any(|c| c.measured.is_some())
+            && p2.candidates.iter().any(|c| c.measured.is_some()),
+        "calibrated replans must carry measured overrides"
+    );
+    println!(
+        "replan overhead vs analytic: {:.2}x ({} db entries, {} bytes on disk)",
+        calibrated.ns_per_iter() / analytic.ns_per_iter(),
+        entries,
+        db_bytes
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if let Ok(path) = std::env::var("PCILT_BENCH_JSON") {
+        let json = format!(
+            "{{\n  \"bench\": \"bench_calibration/planner\",\n  \
+             \"analytic_plan_p50_ns\": {:.1},\n  \"calibrated_plan_p50_ns\": {:.1},\n  \
+             \"calibrate_once_ns\": {calibrate_ns:.1},\n  \"db_entries\": {entries},\n  \
+             \"db_bytes\": {db_bytes}\n}}\n",
+            analytic.ns_per_iter(),
+            calibrated.ns_per_iter(),
+        );
+        if let Err(e) = std::fs::write(&path, json) {
+            eprintln!("could not write {path}: {e}");
+        } else {
+            println!("wrote {path}");
+        }
+    }
+}

@@ -307,7 +307,9 @@ fn parallel_batch() {
     }
 }
 
-/// Hand-rolled JSON (no serde offline); names are plain ASCII.
+/// Hand-rolled JSON (no serde offline); names are plain ASCII. The
+/// `*imgs_per_sec` throughput figures (batch 16 over the parallel-path
+/// p50) are what `pcilt bench-check` gates CI regressions on.
 fn write_bench_json(
     path: &str,
     threads: usize,
@@ -315,6 +317,9 @@ fn write_bench_json(
     conv_speedup: f64,
     model_speedup: f64,
 ) {
+    let batch = 16.0;
+    let conv_imgs_per_sec = batch / (results[1].ns_per_iter() * 1e-9);
+    let model_imgs_per_sec = batch / (results[3].ns_per_iter() * 1e-9);
     let mut rows = String::new();
     for (i, r) in results.iter().enumerate() {
         if i > 0 {
@@ -328,7 +333,9 @@ fn write_bench_json(
     let json = format!(
         "{{\n  \"bench\": \"bench_engines/parallel\",\n  \"batch\": 16,\n  \
          \"threads\": {threads},\n  \"conv_speedup\": {conv_speedup:.3},\n  \
-         \"model_speedup\": {model_speedup:.3},\n  \"results\": [\n{rows}\n  ]\n}}\n"
+         \"model_speedup\": {model_speedup:.3},\n  \
+         \"conv_imgs_per_sec\": {conv_imgs_per_sec:.1},\n  \
+         \"model_imgs_per_sec\": {model_imgs_per_sec:.1},\n  \"results\": [\n{rows}\n  ]\n}}\n"
     );
     if let Err(e) = std::fs::write(path, json) {
         eprintln!("could not write {path}: {e}");

@@ -175,17 +175,27 @@ SUBCOMMANDS:
                                 [[models]] list, or a [network] section
               --img N           input side for [network] plans (default 64)
               --calibrate       micro-benchmark candidates instead of the
-                                analytic model
+                                analytic model, persisting the measured
+                                timings as a per-host calibration db
+                                (calibration.bin next to the table cache)
+              --calibrated      replan with the saved calibration db
+                                overriding analytic scores (prints the
+                                analytic-vs-measured delta per stage;
+                                missing/corrupt/other-host dbs fall back
+                                to analytic scores)
+              --artifacts DIR   artifact dir whose table cache holds the
+                                calibration db (default artifacts)
   validate  cross-check PJRT artifact vs native engines on the smoke pair
               --artifacts DIR
   tables    table-store lifecycle (content-addressed dedup + persistence)
             actions:
-              stats     inspect a persisted cache (entries, bytes, kinds);
+              stats     inspect a persisted cache (entries, bytes, kinds,
+                        calibration-db bytes and the artifacts total);
                         with a [[models]] config, also predict the
                         cross-model table sharing (dedup) of the fleet
               prebuild  build the planner-chosen tables for a model and
                         persist them (parallel workers)
-              purge     delete the persisted cache
+              purge     delete the persisted cache and calibration db
             options:
               --config FILE     serve TOML: prebuild plans with its
                                 [planner] policy and [tables] cache dir, so
@@ -199,6 +209,11 @@ SUBCOMMANDS:
               --budget-mb N     byte budget while building (default 0 = off)
               --all             prebuild every table engine, not just the
                                 planner's winner
+  bench-check  CI bench-regression gate: compare committed baseline
+            BENCH_*.json throughput against freshly measured files
+              --baselines DIR   committed baselines (default benches/baselines)
+              --current DIR     freshly measured BENCH_*.json (default .)
+              --tolerance T     allowed fractional drop, 0..1 (default 0.10)
   sim       ASIC simulator comparison tables (E2/E3)
               --lanes N  --clock GHZ  --act-bits B
   memory    PCILT memory model report (E6/E7 paper numbers)

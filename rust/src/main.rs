@@ -21,7 +21,8 @@ use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec as MemoryNetworkSpec
 use pcilt::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec};
 use pcilt::pcilt::store::{PrebuildRequest, StoreIoError, TableArtifact, TableKey, TableStore};
 use pcilt::pcilt::{
-    parallel, ConvFunc, DmEngine, PciltEngine, RequantTable, SegmentEngine, SharedEngine,
+    parallel, CalibrationDb, ConvFunc, DmEngine, PciltEngine, RequantTable, SegmentEngine,
+    SharedEngine,
 };
 use pcilt::runtime::{ArtifactBundle, PjrtContext};
 use pcilt::tensor::{Shape4, Tensor4};
@@ -74,8 +75,11 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "img",
         "batch",
         "threads",
+        "baselines",
+        "current",
+        "tolerance",
     ];
-    let args = Args::parse(raw, &valued, &["verbose", "calibrate"])?;
+    let args = Args::parse(raw, &valued, &["verbose", "calibrate", "calibrated"])?;
     match args.subcommand.as_str() {
         "serve" => cmd_serve(&args),
         "plan" => cmd_plan(&args),
@@ -83,8 +87,63 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "sim" => cmd_sim(&args),
         "memory" => cmd_memory(),
         "engines" => cmd_engines(&args),
+        "bench-check" => cmd_bench_check(&args),
         other => bail!("unknown subcommand '{other}'; try `pcilt help`"),
     }
+}
+
+/// `pcilt bench-check` — the CI bench-regression gate. Compares every
+/// committed `--baselines` JSON against the same-named freshly measured
+/// file in `--current`, failing (exit 2) when any `*imgs_per_sec` figure
+/// drops more than `--tolerance` (default 0.10 = −10%).
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    use pcilt::util::benchjson;
+    let baselines = args.get_str("baselines", "benches/baselines").to_string();
+    let current = args.get_str("current", ".").to_string();
+    let tolerance = args.get_f64("tolerance", 0.10)?;
+    ensure!(
+        (0.0..1.0).contains(&tolerance),
+        "--tolerance must be in [0,1), got {tolerance}"
+    );
+    let reports = benchjson::check_dirs(Path::new(&baselines), Path::new(&current), tolerance)
+        .with_context(|| format!("reading baselines from '{baselines}'"))?;
+    ensure!(!reports.is_empty(), "no *.json baselines found in '{baselines}'");
+    let mut failed = false;
+    for r in &reports {
+        match &r.error {
+            Some(e) => {
+                println!("{}: FAIL — {e}", r.file);
+                failed = true;
+            }
+            None => {
+                let worst =
+                    r.rows.iter().map(|row| row.ratio).fold(f64::INFINITY, f64::min);
+                println!(
+                    "{}: {} figures, worst current/baseline {:.3} — {}",
+                    r.file,
+                    r.rows.len(),
+                    if worst.is_finite() { worst } else { 1.0 },
+                    if r.failed() { "FAIL" } else { "ok" },
+                );
+                for row in &r.rows {
+                    if row.regressed {
+                        println!(
+                            "  {}: {:.1} -> {:.1} imgs/sec ({:.1}% drop, tolerance {:.0}%)",
+                            row.key,
+                            row.baseline,
+                            row.current,
+                            (1.0 - row.ratio) * 100.0,
+                            tolerance * 100.0,
+                        );
+                        failed = true;
+                    }
+                }
+            }
+        }
+    }
+    ensure!(!failed, "bench regression beyond {:.0}% tolerance", tolerance * 100.0);
+    println!("all benches within {:.0}% of committed baselines", tolerance * 100.0);
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -290,6 +349,7 @@ fn cmd_tables(args: &Args) -> Result<()> {
     };
     match args.action.as_deref().unwrap_or("stats") {
         "stats" => {
+            let mut total_bytes = 0u64;
             match TableStore::cache_info(&cache_dir) {
                 Ok(info) => {
                     println!("table cache at {}:", cache_dir.display());
@@ -299,9 +359,32 @@ fn cmd_tables(args: &Args) -> Result<()> {
                     for (kind, n) in &info.kinds {
                         println!("  kind {kind}: {n}");
                     }
+                    total_bytes += info.payload_bytes;
                 }
                 Err(e) => println!("no readable table cache at {}: {e}", cache_dir.display()),
             }
+            // Calibration artifacts live beside the tables and count
+            // toward the same on-disk total (they purge together too).
+            let cal_bytes = CalibrationDb::artifact_bytes(&cache_dir);
+            if cal_bytes > 0 {
+                let host = pcilt::pcilt::calibration::host_id();
+                match CalibrationDb::load_for_host(&cache_dir, &host) {
+                    Ok(db) => println!(
+                        "  calibration: {} ({} timings, host '{}')",
+                        fmt_bytes(cal_bytes as f64),
+                        db.len(),
+                        db.host(),
+                    ),
+                    Err(e) => println!(
+                        "  calibration: {} (unusable: {e})",
+                        fmt_bytes(cal_bytes as f64)
+                    ),
+                }
+                total_bytes += cal_bytes;
+            } else {
+                println!("  calibration: none");
+            }
+            println!("  artifacts total: {}", fmt_bytes(total_bytes as f64));
             // With a [[models]] config, also predict cross-model sharing:
             // how many table keys the fleet dedups to single copies.
             if !cfg.models.is_empty() {
@@ -339,6 +422,11 @@ fn cmd_tables(args: &Args) -> Result<()> {
                 println!("purged table cache at {}", cache_dir.display());
             } else {
                 println!("no table cache at {}", cache_dir.display());
+            }
+            match CalibrationDb::purge(&cache_dir) {
+                Ok(true) => println!("purged calibration db at {}", cache_dir.display()),
+                Ok(false) => println!("no calibration db at {}", cache_dir.display()),
+                Err(e) => println!("could not purge calibration db: {e}"),
             }
             Ok(())
         }
@@ -453,15 +541,19 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let act_bits = model_act_bits(args)?;
     // Parse the config once; the same Document serves both the [planner]
     // policy and the optional [network] section.
-    let (cfg, doc) = match args.get("config") {
+    let (mut cfg, doc) = match args.get("config") {
         Some(path) => {
             let doc = Document::parse(&std::fs::read_to_string(path)?)?;
             (ServeConfig::from_document(&doc)?, Some(doc))
         }
         None => (ServeConfig::default(), None),
     };
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifact_dir = d.to_string();
+    }
     let policy = cfg.planner.to_policy();
     let calibrate = args.flag("calibrate") || cfg.planner.mode == PlannerMode::Calibrate;
+    let calibrated = args.flag("calibrated");
 
     // A [[models]] list plans every configured model's layer graph — the
     // per-stage planner table for arbitrary-depth NetworkSpecs.
@@ -544,16 +636,59 @@ fn cmd_plan(args: &Args) -> Result<()> {
     // Default sample: the QuantCnn model shapes with seeded random weights.
     let mut rng = Rng::new(42);
     let params = random_params(act_bits, &mut rng);
+    // Measured timings persist next to the table cache, one database per
+    // host (see DESIGN.md §12): `--calibrate` writes it, `--calibrated`
+    // replans against it without re-benchmarking.
+    let cal_dir = cfg.tables.resolve_cache_dir(&cfg.artifact_dir);
+    let mode = if calibrate {
+        "calibrating"
+    } else if calibrated {
+        "measured overrides"
+    } else {
+        "analytic"
+    };
     println!(
-        "## engine plan — QuantCnn sample model (act_bits={act_bits}, batch={batch}, {})",
-        if calibrate { "calibrated" } else { "analytic" }
+        "## engine plan — QuantCnn sample model (act_bits={act_bits}, batch={batch}, {mode})"
     );
-    let planner = EnginePlanner::new(policy.clone());
+    let mut planner = EnginePlanner::new(policy.clone());
+    if calibrated && !calibrate {
+        match CalibrationDb::load(&cal_dir) {
+            Ok(db) => {
+                println!(
+                    "calibration db: {} measured timings for host '{}' from {}",
+                    db.len(),
+                    db.host(),
+                    cal_dir.display()
+                );
+                planner = planner.with_calibration(Arc::new(db));
+            }
+            // Missing, corrupt or another host's measurements: the
+            // analytic model is always a safe fallback.
+            Err(e) => println!("calibration db unavailable ({e}); using analytic scores"),
+        }
+    }
     let plans: Vec<LayerPlan> = if calibrate {
+        let mut db = CalibrationDb::new();
+        let [s1, s2] = layer_specs(&params, batch);
+        let plans = vec![
+            planner.calibrate_recording(&s1, &params.w1, 0xCA1, &mut db),
+            planner.calibrate_recording(&s2, &params.w2, 0xCA2, &mut db),
+        ];
+        match db.save(&cal_dir) {
+            Ok(()) => println!(
+                "saved {} measured timings for host '{}' to {}",
+                db.len(),
+                db.host(),
+                cal_dir.display()
+            ),
+            Err(e) => println!("could not persist calibration db: {e}"),
+        }
+        plans
+    } else if calibrated {
         let [s1, s2] = layer_specs(&params, batch);
         vec![
-            planner.calibrate(&s1, &params.w1, 0xCA1),
-            planner.calibrate(&s2, &params.w2, 0xCA2),
+            planner.plan_layer(&s1, Some(&params.w1)),
+            planner.plan_layer(&s2, Some(&params.w2)),
         ]
     } else {
         plan_model(&params, policy, batch)

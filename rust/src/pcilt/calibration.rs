@@ -1,0 +1,467 @@
+//! Per-host measured calibration database for the engine planner.
+//!
+//! `EnginePlanner::calibrate` micro-benches every feasible candidate for a
+//! layer; this module persists those p50 nanosecond timings so later plans
+//! on the *same host* can override the analytic [`super::engine::OpCounts`]
+//! cost model with measured reality (`pcilt plan --calibrated`). The
+//! on-disk format mirrors the [`super::store::TableStore`] cache idiom:
+//! a little-endian `calibration.bin` plus a human-readable checksummed
+//! `calibration.manifest`, written deterministically (entries in key
+//! order) so identical databases produce identical bytes.
+//!
+//! Timings are machine-specific, so the artifact is stamped with a host
+//! identity and a database saved on one machine is rejected with
+//! [`CalIoError::StaleHost`] on another (falling back to analytic costs)
+//! rather than silently mis-ranking engines. See DESIGN.md §12.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::store::{fnv1a, ByteReader, ByteWriter};
+
+/// Binary payload file name inside the artifact/cache directory.
+pub const CAL_BIN_FILE: &str = "calibration.bin";
+/// Manifest file name alongside [`CAL_BIN_FILE`].
+pub const CAL_MANIFEST_FILE: &str = "calibration.manifest";
+const MAGIC: &[u8; 4] = b"PCAL";
+const FORMAT_VERSION: u32 = 1;
+
+/// Errors from calibration persistence.
+#[derive(Debug)]
+pub enum CalIoError {
+    Io(std::io::Error),
+    /// Truncated, checksum-mismatched or malformed calibration files.
+    Corrupt(String),
+    /// The database was measured on a different machine; its timings do
+    /// not transfer. Callers fall back to the analytic cost model.
+    StaleHost { stored: String, current: String },
+}
+
+impl std::fmt::Display for CalIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CalIoError::Io(e) => write!(f, "calibration io error: {e}"),
+            CalIoError::Corrupt(msg) => write!(f, "calibration db corrupt: {msg}"),
+            CalIoError::StaleHost { stored, current } => write!(
+                f,
+                "calibration db was measured on host '{stored}', this is '{current}'"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CalIoError {}
+
+impl From<std::io::Error> for CalIoError {
+    fn from(e: std::io::Error) -> CalIoError {
+        CalIoError::Io(e)
+    }
+}
+
+fn corrupt<T>(msg: impl Into<String>) -> Result<T, CalIoError> {
+    Err(CalIoError::Corrupt(msg.into()))
+}
+
+/// Best-effort stable identity of the current machine. Timings never
+/// transfer across hosts, so this only has to be stable per machine,
+/// not globally unique. `PCILT_CAL_HOST` overrides for tests and for
+/// fleet setups where hostnames are ephemeral.
+pub fn host_id() -> String {
+    if let Ok(h) = std::env::var("PCILT_CAL_HOST") {
+        if !h.trim().is_empty() {
+            return h.trim().to_string();
+        }
+    }
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.trim().is_empty() {
+            return h.trim().to_string();
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/etc/hostname") {
+        if !h.trim().is_empty() {
+            return h.trim().to_string();
+        }
+    }
+    "unknown-host".to_string()
+}
+
+/// Measured engine timings for one host, keyed by
+/// `(LayerSpec fingerprint, candidate label)` → p50 ns per `conv` call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationDb {
+    host: String,
+    entries: BTreeMap<(u64, String), f64>,
+}
+
+impl Default for CalibrationDb {
+    fn default() -> CalibrationDb {
+        CalibrationDb::new()
+    }
+}
+
+impl CalibrationDb {
+    /// An empty database stamped with [`host_id`].
+    pub fn new() -> CalibrationDb {
+        CalibrationDb::with_host(host_id())
+    }
+
+    /// An empty database with an explicit host stamp (tests use this to
+    /// avoid mutating process environment).
+    pub fn with_host(host: impl Into<String>) -> CalibrationDb {
+        CalibrationDb {
+            host: host.into(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    pub fn host(&self) -> &str {
+        &self.host
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record a measured timing. Non-finite or negative timings are
+    /// silently dropped — they can only arise from a broken clock and
+    /// would poison every later plan.
+    pub fn record(&mut self, fingerprint: u64, label: &str, ns_per_iter: f64) {
+        if ns_per_iter.is_finite() && ns_per_iter >= 0.0 {
+            self.entries.insert((fingerprint, label.to_string()), ns_per_iter);
+        }
+    }
+
+    /// Measured p50 ns for a (layer, engine) pair, if present.
+    pub fn lookup(&self, fingerprint: u64, label: &str) -> Option<f64> {
+        self.entries.get(&(fingerprint, label.to_string())).copied()
+    }
+
+    /// Iterate entries in key order: `(fingerprint, label, ns)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &str, f64)> {
+        self.entries
+            .iter()
+            .map(|((fp, label), &ns)| (*fp, label.as_str(), ns))
+    }
+
+    /// Serialize to `dir/calibration.bin` + `dir/calibration.manifest`.
+    /// Deterministic: entries are written in BTreeMap key order.
+    pub fn save(&self, dir: &Path) -> Result<(), CalIoError> {
+        std::fs::create_dir_all(dir)?;
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u8_slice(self.host.as_bytes());
+        w.u64(self.entries.len() as u64);
+        for ((fp, label), ns) in &self.entries {
+            w.u64(*fp);
+            w.u8_slice(label.as_bytes());
+            w.u64(ns.to_bits());
+        }
+        let checksum = fnv1a(&w.buf);
+        std::fs::write(dir.join(CAL_BIN_FILE), &w.buf)?;
+        let manifest = format!(
+            "version = {FORMAT_VERSION}\nhost = {}\nentries = {}\npayload_bytes = {}\n\
+             checksum = {checksum:016x}\n",
+            self.host,
+            self.entries.len(),
+            w.buf.len(),
+        );
+        std::fs::write(dir.join(CAL_MANIFEST_FILE), manifest)?;
+        Ok(())
+    }
+
+    /// Load a database, rejecting one measured on a different host.
+    /// Equivalent to `load_for_host(dir, &host_id())`.
+    pub fn load(dir: &Path) -> Result<CalibrationDb, CalIoError> {
+        CalibrationDb::load_for_host(dir, &host_id())
+    }
+
+    /// Load and verify (length, checksum, magic, version, host stamp).
+    /// A mismatched host yields [`CalIoError::StaleHost`]; any malformed
+    /// content yields [`CalIoError::Corrupt`] without partial results.
+    pub fn load_for_host(dir: &Path, current_host: &str) -> Result<CalibrationDb, CalIoError> {
+        let manifest = parse_manifest(dir)?;
+        let raw = std::fs::read(dir.join(CAL_BIN_FILE))?;
+        if raw.len() as u64 != manifest.payload_bytes {
+            return corrupt(format!(
+                "calibration.bin is {} bytes, manifest says {}",
+                raw.len(),
+                manifest.payload_bytes
+            ));
+        }
+        if fnv1a(&raw) != manifest.checksum {
+            return corrupt("checksum mismatch between calibration.bin and manifest");
+        }
+        let db = parse_bin(&raw, manifest.entries)?;
+        if db.host != manifest.host {
+            return corrupt(format!(
+                "host '{}' in calibration.bin disagrees with manifest '{}'",
+                db.host, manifest.host
+            ));
+        }
+        if db.host != current_host {
+            return Err(CalIoError::StaleHost {
+                stored: db.host,
+                current: current_host.to_string(),
+            });
+        }
+        Ok(db)
+    }
+
+    /// Bytes the persisted artifact occupies on disk (0 when absent).
+    /// Feeds the `pcilt tables stats` byte totals so calibration data is
+    /// accounted alongside the table cache.
+    pub fn artifact_bytes(dir: &Path) -> u64 {
+        [CAL_BIN_FILE, CAL_MANIFEST_FILE]
+            .iter()
+            .filter_map(|f| std::fs::metadata(dir.join(f)).ok())
+            .map(|m| m.len())
+            .sum()
+    }
+
+    /// Delete a persisted database. Returns whether anything was removed.
+    pub fn purge(dir: &Path) -> Result<bool, CalIoError> {
+        let mut removed = false;
+        for f in [CAL_BIN_FILE, CAL_MANIFEST_FILE] {
+            let p = dir.join(f);
+            if p.exists() {
+                std::fs::remove_file(&p)?;
+                removed = true;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+struct CalManifest {
+    host: String,
+    entries: u64,
+    payload_bytes: u64,
+    checksum: u64,
+}
+
+fn parse_manifest(dir: &Path) -> Result<CalManifest, CalIoError> {
+    let text = std::fs::read_to_string(dir.join(CAL_MANIFEST_FILE))?;
+    let mut version = None;
+    let mut host = None;
+    let mut entries = None;
+    let mut payload_bytes = None;
+    let mut checksum = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return corrupt(format!("bad manifest line '{line}'"));
+        };
+        let (k, v) = (k.trim(), v.trim());
+        match k {
+            "version" => version = v.parse::<u32>().ok(),
+            "host" => host = Some(v.to_string()),
+            "entries" => entries = v.parse::<u64>().ok(),
+            "payload_bytes" => payload_bytes = v.parse::<u64>().ok(),
+            "checksum" => checksum = u64::from_str_radix(v, 16).ok(),
+            other => return corrupt(format!("unknown manifest key '{other}'")),
+        }
+    }
+    match (version, host, entries, payload_bytes, checksum) {
+        (Some(v), Some(h), Some(e), Some(p), Some(c)) => {
+            if v != FORMAT_VERSION {
+                return corrupt(format!("unsupported calibration version {v}"));
+            }
+            Ok(CalManifest {
+                host: h,
+                entries: e,
+                payload_bytes: p,
+                checksum: c,
+            })
+        }
+        _ => corrupt("manifest missing version/host/entries/payload_bytes/checksum"),
+    }
+}
+
+fn parse_bin(raw: &[u8], expect_entries: u64) -> Result<CalibrationDb, CalIoError> {
+    let mut r = ByteReader::new(raw);
+    let magic = r.take_bytes(4).map_err(CalIoError::Corrupt)?;
+    if magic != MAGIC {
+        return corrupt("bad magic in calibration.bin");
+    }
+    let version = r.take_u32().map_err(CalIoError::Corrupt)?;
+    if version != FORMAT_VERSION {
+        return corrupt(format!("unsupported calibration.bin version {version}"));
+    }
+    let host_bytes = r.take_u8_slice().map_err(CalIoError::Corrupt)?;
+    let Ok(host) = String::from_utf8(host_bytes) else {
+        return corrupt("host stamp is not valid utf-8");
+    };
+    let count = r.take_u64().map_err(CalIoError::Corrupt)?;
+    if count != expect_entries {
+        return corrupt(format!(
+            "calibration.bin holds {count} entries, manifest says {expect_entries}"
+        ));
+    }
+    let mut entries = BTreeMap::new();
+    for _ in 0..count {
+        let fp = r.take_u64().map_err(CalIoError::Corrupt)?;
+        let label_bytes = r.take_u8_slice().map_err(CalIoError::Corrupt)?;
+        let Ok(label) = String::from_utf8(label_bytes) else {
+            return corrupt("entry label is not valid utf-8");
+        };
+        let ns = f64::from_bits(r.take_u64().map_err(CalIoError::Corrupt)?);
+        if !ns.is_finite() || ns < 0.0 {
+            return corrupt(format!("non-finite or negative timing for '{label}'"));
+        }
+        entries.insert((fp, label), ns);
+    }
+    if r.remaining() != 0 {
+        return corrupt(format!("{} trailing bytes in calibration.bin", r.remaining()));
+    }
+    Ok(CalibrationDb { host, entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("pcilt-cal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(host: &str) -> CalibrationDb {
+        let mut db = CalibrationDb::with_host(host);
+        db.record(0xAB, "pcilt int4", 1234.5);
+        db.record(0xAB, "dm", 9876.0);
+        db.record(0xCD, "segment n=4 int4", 55.25);
+        db
+    }
+
+    #[test]
+    fn roundtrip_preserves_entries_and_host() {
+        let dir = tmpdir("roundtrip");
+        let db = sample("hostA");
+        db.save(&dir).unwrap();
+        let back = CalibrationDb::load_for_host(&dir, "hostA").unwrap();
+        assert_eq!(back, db);
+        assert_eq!(back.lookup(0xAB, "pcilt int4"), Some(1234.5));
+        assert_eq!(back.lookup(0xAB, "missing"), None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_is_deterministic() {
+        let d1 = tmpdir("det1");
+        let d2 = tmpdir("det2");
+        sample("hostA").save(&d1).unwrap();
+        sample("hostA").save(&d2).unwrap();
+        assert_eq!(
+            std::fs::read(d1.join(CAL_BIN_FILE)).unwrap(),
+            std::fs::read(d2.join(CAL_BIN_FILE)).unwrap()
+        );
+        assert_eq!(
+            std::fs::read(d1.join(CAL_MANIFEST_FILE)).unwrap(),
+            std::fs::read(d2.join(CAL_MANIFEST_FILE)).unwrap()
+        );
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn stale_host_is_rejected() {
+        let dir = tmpdir("stale");
+        sample("hostA").save(&dir).unwrap();
+        match CalibrationDb::load_for_host(&dir, "hostB") {
+            Err(CalIoError::StaleHost { stored, current }) => {
+                assert_eq!(stored, "hostA");
+                assert_eq!(current, "hostB");
+            }
+            other => panic!("expected StaleHost, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected() {
+        let dir = tmpdir("corrupt");
+        sample("hostA").save(&dir).unwrap();
+        let mut raw = std::fs::read(dir.join(CAL_BIN_FILE)).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(dir.join(CAL_BIN_FILE), &raw).unwrap();
+        assert!(matches!(
+            CalibrationDb::load_for_host(&dir, "hostA"),
+            Err(CalIoError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected() {
+        let dir = tmpdir("trunc");
+        sample("hostA").save(&dir).unwrap();
+        let raw = std::fs::read(dir.join(CAL_BIN_FILE)).unwrap();
+        std::fs::write(dir.join(CAL_BIN_FILE), &raw[..raw.len() - 4]).unwrap();
+        assert!(matches!(
+            CalibrationDb::load_for_host(&dir, "hostA"),
+            Err(CalIoError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_files_surface_io_error() {
+        let dir = tmpdir("missing");
+        assert!(matches!(
+            CalibrationDb::load_for_host(&dir, "hostA"),
+            Err(CalIoError::Io(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_manifest_key_is_rejected() {
+        let dir = tmpdir("manifest");
+        sample("hostA").save(&dir).unwrap();
+        let mut text = std::fs::read_to_string(dir.join(CAL_MANIFEST_FILE)).unwrap();
+        text.push_str("surprise = 1\n");
+        std::fs::write(dir.join(CAL_MANIFEST_FILE), text).unwrap();
+        assert!(matches!(
+            CalibrationDb::load_for_host(&dir, "hostA"),
+            Err(CalIoError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn non_finite_timings_are_dropped_on_record() {
+        let mut db = CalibrationDb::with_host("h");
+        db.record(1, "a", f64::NAN);
+        db.record(1, "b", f64::INFINITY);
+        db.record(1, "c", -5.0);
+        db.record(1, "d", 10.0);
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.lookup(1, "d"), Some(10.0));
+    }
+
+    #[test]
+    fn artifact_bytes_and_purge_account_both_files() {
+        let dir = tmpdir("bytes");
+        assert_eq!(CalibrationDb::artifact_bytes(&dir), 0);
+        sample("hostA").save(&dir).unwrap();
+        let total = CalibrationDb::artifact_bytes(&dir);
+        let bin = std::fs::metadata(dir.join(CAL_BIN_FILE)).unwrap().len();
+        let man = std::fs::metadata(dir.join(CAL_MANIFEST_FILE)).unwrap().len();
+        assert_eq!(total, bin + man);
+        assert!(CalibrationDb::purge(&dir).unwrap());
+        assert_eq!(CalibrationDb::artifact_bytes(&dir), 0);
+        assert!(!CalibrationDb::purge(&dir).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

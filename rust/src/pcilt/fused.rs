@@ -434,6 +434,23 @@ mod tests {
     }
 
     #[test]
+    fn fused_chain_identical_under_forced_scalar_and_tiled_walks() {
+        use crate::pcilt::tile::{set_walk_mode, WalkMode};
+        let mut rng = Rng::new(13);
+        let x = Tensor4::random_activations(Shape4::new(2, 9, 21, 2), 4, &mut rng);
+        let w = Tensor4::random_weights(Shape4::new(3, 3, 3, 2), 8, &mut rng);
+        let geom = ConvGeometry::unit_stride(3, 3);
+        let e = PciltEngine::new(&w, 4, geom);
+        let table = RequantTable::for_layer(&w, 4, &ConvFunc::Mul, 0.05);
+        set_walk_mode(WalkMode::Scalar);
+        let scalar = run_chain(&e, 0.05, Some(&table), Some(2), 4, &x);
+        set_walk_mode(WalkMode::Tiled);
+        let tiled = run_chain(&e, 0.05, Some(&table), Some(2), 4, &x);
+        set_walk_mode(WalkMode::Auto);
+        assert_eq!(scalar, tiled);
+    }
+
+    #[test]
     fn block_rows_respects_pool_multiple() {
         for (ow, oc, k) in [(8usize, 4usize, 2usize), (640, 64, 3), (1, 1, 5)] {
             let b = block_rows(ow, oc, k);

@@ -14,6 +14,7 @@ use super::custom_fn::ConvFunc;
 use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{TableArtifact, TableHandle, TableKey, TableStore};
 use super::table::LayerTables;
+use super::tile;
 
 /// Basic PCILT engine.
 ///
@@ -126,11 +127,53 @@ impl PciltEngine {
         self.tables().build_evals
     }
 
-    /// The shared band walk: output rows `[oy0, oy0 + rows)` of batch item
+    /// The band walk: output rows `[oy0, oy0 + rows)` of batch item
     /// `n`, written row-major `[rows][ow][oc]` into `out`. Both
     /// [`ConvEngine::conv`] and [`ConvEngine::conv_rows`] run exactly this
-    /// loop, so the fused tile walk is bit-identical by construction.
+    /// walk, so the fused tile walk is bit-identical by construction.
+    /// Dispatches between the cache-blocked tiled walk (default) and the
+    /// scalar reference behind the `pcilt::tile` knob; the two are pinned
+    /// bit-identical in tests.
     fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        if tile::scalar_walk() {
+            self.conv_band_scalar(x, n, oy0, rows, out);
+        } else {
+            self.conv_band_tiled(x, n, oy0, rows, out);
+        }
+    }
+
+    /// Cache-blocked walk: [`tile::TILE_W`] output pixels per chunk,
+    /// position-major, through the channels-last mirror.
+    fn conv_band_tiled(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let tables = self.tables();
+        let in_ch = tables.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels {} != table in_ch {}", s.c, in_ch);
+        tile::conv_band_cl_tiled(
+            x,
+            n,
+            oy0,
+            rows,
+            out,
+            g,
+            tables.card,
+            tables.out_ch,
+            &self.cl[..],
+            None,
+        );
+    }
+
+    /// The scalar reference walk (bit-exactness baseline for the tiled
+    /// path): one pixel at a time, one table-row add per RF position.
+    fn conv_band_scalar(
+        &self,
+        x: &Tensor4<u8>,
+        n: usize,
+        oy0: usize,
+        rows: usize,
+        out: &mut [i32],
+    ) {
         let s = x.shape();
         let g = self.geom;
         let tables = self.tables();
@@ -333,5 +376,38 @@ mod tests {
         let w = Tensor4::random_weights(Shape4::new(1, 5, 5, 1), 8, &mut rng);
         let e = PciltEngine::new(&w, 8, ConvGeometry::unit_stride(5, 5));
         assert_eq!(e.build_evals(), 25 * 256);
+    }
+
+    #[test]
+    fn tiled_walk_is_bit_identical_to_scalar_reference() {
+        // The tentpole invariant: the cache-blocked tiled walk and the
+        // scalar reference produce the same bits on every band, including
+        // partial tail tiles (ow not a multiple of TILE_W), strides > 1
+        // and mid-map row bands.
+        forall("pcilt tiled == scalar", 25, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let (kh, kw) = *rng.choose(&[(1usize, 1usize), (3, 3), (2, 4)]);
+            let (sy, sx) = *rng.choose(&[(1usize, 1usize), (2, 2)]);
+            let ic = rng.range_i64(1, 3) as usize;
+            let oc = rng.range_i64(1, 5) as usize;
+            let h = kh + rng.range_i64(1, 8) as usize;
+            let w_dim = kw + rng.range_i64(1, 22) as usize;
+            let x = Tensor4::random_activations(Shape4::new(2, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, kh, kw, ic), 8, &mut rng);
+            let geom = ConvGeometry { kh, kw, sy, sx };
+            let e = PciltEngine::new(&w, bits, geom);
+            let s = x.shape();
+            let (oh, ow) = s.conv_out(kh, kw, sy, sx);
+            for n in 0..s.n {
+                for (oy0, rows) in [(0, oh), (oh / 2, oh - oh / 2)] {
+                    let mut scalar = vec![0i32; rows * ow * oc];
+                    let mut tiled = vec![0i32; rows * ow * oc];
+                    e.conv_band_scalar(&x, n, oy0, rows, &mut scalar);
+                    e.conv_band_tiled(&x, n, oy0, rows, &mut tiled);
+                    assert_eq!(scalar, tiled, "n={n} oy0={oy0} rows={rows} ow={ow}");
+                }
+            }
+        });
     }
 }

@@ -19,6 +19,7 @@ use crate::tensor::{Shape4, Tensor4};
 use super::custom_fn::ConvFunc;
 use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
+use super::tile;
 
 /// Per-channel activation bit widths.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -262,8 +263,49 @@ impl MixedEngine {
 
     /// The shared band walk (see `PciltEngine::conv_band`): output rows
     /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
-    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    /// row-major). `conv` and `conv_rows` both run exactly this walk,
+    /// dispatching between the tiled path and the scalar reference behind
+    /// the `pcilt::tile` knob (pinned bit-identical in tests).
     fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        if tile::scalar_walk() {
+            self.conv_band_scalar(x, n, oy0, rows, out);
+        } else {
+            self.conv_band_tiled(x, n, oy0, rows, out);
+        }
+    }
+
+    /// Cache-blocked walk through the channels-last mirror; identical to
+    /// the uniform engine's tiled walk except codes narrow per input
+    /// channel (`a >> shifts[ic]`, the LCD mapping).
+    fn conv_band_tiled(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let t = self.tables();
+        let in_ch = t.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        tile::conv_band_cl_tiled(
+            x,
+            n,
+            oy0,
+            rows,
+            out,
+            g,
+            t.card,
+            t.out_ch,
+            &t.cl[..],
+            Some(&t.shifts[..]),
+        );
+    }
+
+    /// The scalar reference walk (bit-exactness baseline).
+    fn conv_band_scalar(
+        &self,
+        x: &Tensor4<u8>,
+        n: usize,
+        oy0: usize,
+        rows: usize,
+        out: &mut [i32],
+    ) {
         let s = x.shape();
         let g = self.geom;
         let t = self.tables();
@@ -393,6 +435,38 @@ mod tests {
         let e = MixedEngine::new(&w, widths.clone(), geom);
         assert_eq!(e.max_code_error(), 0);
         assert_eq!(e.conv(&x), lcd_reference(&x, &w, &widths, geom));
+    }
+
+    #[test]
+    fn tiled_walk_is_bit_identical_to_scalar_reference() {
+        // Mixed-cardinality channels exercise the per-channel shift path
+        // of the shared tiled walk; widths at 1/2/4 bits, lossy 2-bit
+        // tables, strided geometry and partial tail tiles all pin
+        // scalar == tiled.
+        let mut rng = Rng::new(67);
+        let widths = ChannelWidths {
+            bits: vec![1, 2, 4],
+        };
+        for (table_bits, (sy, sx), w_dim) in
+            [(4u32, (1usize, 1usize), 23usize), (2, (1, 1), 9), (4, (2, 2), 13)]
+        {
+            let x = mixed_activations(Shape4::new(2, 8, w_dim, 3), &widths, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 3), 8, &mut rng);
+            let geom = ConvGeometry { kh: 3, kw: 3, sy, sx };
+            let e =
+                MixedEngine::with_table_bits(&w, widths.clone(), table_bits, geom, &ConvFunc::Mul);
+            let s = x.shape();
+            let (oh, ow) = s.conv_out(3, 3, sy, sx);
+            for n in 0..s.n {
+                for (oy0, rows) in [(0, oh), (oh / 2, oh - oh / 2)] {
+                    let mut scalar = vec![0i32; rows * ow * 4];
+                    let mut tiled = vec![0i32; rows * ow * 4];
+                    e.conv_band_scalar(&x, n, oy0, rows, &mut scalar);
+                    e.conv_band_tiled(&x, n, oy0, rows, &mut tiled);
+                    assert_eq!(scalar, tiled, "bits={table_bits} s=({sy},{sx}) n={n} oy0={oy0}");
+                }
+            }
+        }
     }
 
     #[test]

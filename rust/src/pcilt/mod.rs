@@ -17,12 +17,15 @@ pub mod memory;
 pub mod mixed;
 pub mod parallel;
 pub mod planner;
+pub mod calibration;
 pub mod segment;
 pub mod shared;
 pub mod store;
 pub mod table;
+pub mod tile;
 pub mod winograd;
 
+pub use calibration::{CalIoError, CalibrationDb};
 pub use custom_fn::ConvFunc;
 pub use dm::DmEngine;
 pub use engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
@@ -39,3 +42,4 @@ pub use store::{
     PrebuildRequest, TableArtifact, TableHandle, TableKey, TableStore, TableStoreStats,
 };
 pub use table::{LayerTables, Pcilt};
+pub use tile::{scalar_walk, set_walk_mode, WalkMode, TILE_W};

@@ -22,6 +22,7 @@ use std::sync::{Arc, RwLock};
 
 use crate::tensor::{Shape4, Tensor4};
 
+use super::calibration::CalibrationDb;
 use super::custom_fn::ConvFunc;
 use super::dm::DmEngine;
 use super::engine::{rf_count, ConvEngine, ConvGeometry, OpCounts};
@@ -51,6 +52,31 @@ pub struct LayerSpec {
 impl LayerSpec {
     pub fn positions(&self) -> usize {
         self.geom.kh * self.geom.kw * self.in_ch
+    }
+
+    /// Stable content fingerprint over every spec field, keying measured
+    /// calibration timings ([`CalibrationDb`]). Two layers with identical
+    /// geometry, widths and representative input share timings.
+    pub fn fingerprint(&self) -> u64 {
+        use super::store::fnv1a;
+        let mut bytes = Vec::with_capacity(12 * 8);
+        for v in [
+            self.geom.kh as u64,
+            self.geom.kw as u64,
+            self.geom.sy as u64,
+            self.geom.sx as u64,
+            self.in_ch as u64,
+            self.out_ch as u64,
+            self.act_bits as u64,
+            self.weight_bits as u64,
+            self.input.n as u64,
+            self.input.h as u64,
+            self.input.w as u64,
+            self.input.c as u64,
+        ] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        fnv1a(&bytes)
     }
 
     /// Spec for a weight tensor (OHWI) at a given input.
@@ -248,9 +274,15 @@ pub struct Candidate {
     /// Tables already resident in the planner's store (post-dedup: this
     /// candidate costs no new build and no new bytes).
     pub cached: bool,
-    /// Analytic cost (lower is better); micro-benchmark ns in calibration
-    /// mode.
+    /// Effective cost the sort ranks by (lower is better): the analytic
+    /// model score, unless a measured timing overrode it.
     pub score: f64,
+    /// The analytic model score, always retained even when `score` was
+    /// overridden by a measurement (so reports can show the delta).
+    pub analytic: f64,
+    /// Measured p50 ns per `conv` call, from a live `calibrate` run or a
+    /// persisted [`CalibrationDb`]. When present, `score == measured`.
+    pub measured: Option<f64>,
 }
 
 /// Scoring weights for the analytic cost model. Units are arbitrary
@@ -337,10 +369,35 @@ impl LayerPlan {
             self.spec.act_bits,
             self.spec.input.n,
         );
-        out.push_str(&format!(
-            "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12}  {}\n",
-            "engine", "mults", "adds", "fetches", "tables", "score", "status"
-        ));
+        // When any candidate carries a measured timing (live calibration
+        // or a loaded CalibrationDb), show it next to the analytic score
+        // plus the mis-ranking delta: both costs normalized to the best
+        // measured candidate, so "+40%" means the analytic model thought
+        // this engine was 40% closer to the winner than it really is.
+        let measured_mode = self.candidates.iter().any(|c| c.measured.is_some());
+        let best_analytic = self
+            .candidates
+            .iter()
+            .filter(|c| c.measured.is_some())
+            .map(|c| c.analytic)
+            .fold(f64::INFINITY, f64::min);
+        let best_measured = self
+            .candidates
+            .iter()
+            .filter_map(|c| c.measured)
+            .fold(f64::INFINITY, f64::min);
+        if measured_mode {
+            out.push_str(&format!(
+                "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12} {:>12} {:>8}  {}\n",
+                "engine", "mults", "adds", "fetches", "tables", "analytic", "meas(ns)",
+                "delta", "status"
+            ));
+        } else {
+            out.push_str(&format!(
+                "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12}  {}\n",
+                "engine", "mults", "adds", "fetches", "tables", "score", "status"
+            ));
+        }
         for c in &self.candidates {
             let mut status = match (&c.infeasible, c.id == self.chosen) {
                 (Some(reason), _) => format!("- {reason}"),
@@ -351,16 +408,40 @@ impl LayerPlan {
             if c.cached {
                 status = format!("{} (cached)", status).trim().to_string();
             }
-            out.push_str(&format!(
-                "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12.3e}  {}\n",
-                c.label,
-                fmt_count(c.ops.mults as u128),
-                fmt_count(c.ops.adds as u128),
-                fmt_count(c.ops.fetches as u128),
-                fmt_bytes(c.table_bytes as f64),
-                c.score,
-                status,
-            ));
+            if measured_mode {
+                let (meas, delta) = match c.measured {
+                    Some(ns) if best_analytic > 0.0 && best_measured > 0.0 => {
+                        let rel_a = c.analytic / best_analytic;
+                        let rel_m = ns / best_measured;
+                        (format!("{ns:.0}"), format!("{:+.0}%", (rel_m / rel_a - 1.0) * 100.0))
+                    }
+                    Some(ns) => (format!("{ns:.0}"), String::new()),
+                    None => (String::new(), String::new()),
+                };
+                out.push_str(&format!(
+                    "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12.3e} {:>12} {:>8}  {}\n",
+                    c.label,
+                    fmt_count(c.ops.mults as u128),
+                    fmt_count(c.ops.adds as u128),
+                    fmt_count(c.ops.fetches as u128),
+                    fmt_bytes(c.table_bytes as f64),
+                    c.analytic,
+                    meas,
+                    delta,
+                    status,
+                ));
+            } else {
+                out.push_str(&format!(
+                    "  {:<20} {:>14} {:>14} {:>14} {:>10} {:>12.3e}  {}\n",
+                    c.label,
+                    fmt_count(c.ops.mults as u128),
+                    fmt_count(c.ops.adds as u128),
+                    fmt_count(c.ops.fetches as u128),
+                    fmt_bytes(c.table_bytes as f64),
+                    c.score,
+                    status,
+                ));
+            }
         }
         out
     }
@@ -407,6 +488,7 @@ pub fn default_plan_batch() -> usize {
 pub struct EnginePlanner {
     pub policy: PlannerPolicy,
     store: Option<Arc<TableStore>>,
+    calibration: Option<Arc<CalibrationDb>>,
 }
 
 impl std::fmt::Debug for EnginePlanner {
@@ -414,6 +496,7 @@ impl std::fmt::Debug for EnginePlanner {
         f.debug_struct("EnginePlanner")
             .field("policy", &self.policy)
             .field("store", &self.store.as_ref().map(|s| s.stats()))
+            .field("calibration", &self.calibration.as_ref().map(|c| c.len()))
             .finish()
     }
 }
@@ -425,6 +508,7 @@ impl Default for EnginePlanner {
         EnginePlanner {
             policy: default_policy(),
             store: Some(TableStore::process().clone()),
+            calibration: None,
         }
     }
 }
@@ -435,6 +519,7 @@ impl EnginePlanner {
         EnginePlanner {
             policy,
             store: None,
+            calibration: None,
         }
     }
 
@@ -443,7 +528,19 @@ impl EnginePlanner {
         EnginePlanner {
             policy,
             store: Some(store),
+            calibration: None,
         }
+    }
+
+    /// Attach a measured [`CalibrationDb`]: every subsequent plan replaces
+    /// the analytic score of candidates the database has timings for with
+    /// measured p50 ns (`pcilt plan --calibrated`). A full `--calibrate`
+    /// run measures every feasible candidate, so sorts against a saved
+    /// database compare nanoseconds with nanoseconds; a partial database
+    /// only overrides the stages it covers.
+    pub fn with_calibration(mut self, db: Arc<CalibrationDb>) -> EnginePlanner {
+        self.calibration = Some(db);
+        self
     }
 
     /// The attached table store, if any.
@@ -451,11 +548,27 @@ impl EnginePlanner {
         self.store.as_ref()
     }
 
+    /// The attached calibration database, if any.
+    pub fn calibration(&self) -> Option<&Arc<CalibrationDb>> {
+        self.calibration.as_ref()
+    }
+
     /// Enumerate and score every engine for `spec`. `weights`, when given,
     /// sharpens the shared-table estimate with the actual distinct-value
     /// count and enables cached-table (post-dedup) pricing.
     pub fn plan_layer(&self, spec: &LayerSpec, weights: Option<&Tensor4<i8>>) -> LayerPlan {
         let mut candidates = registry(spec, &self.policy, weights, self.store.as_deref());
+        if let Some(db) = &self.calibration {
+            let fp = spec.fingerprint();
+            for c in &mut candidates {
+                if c.infeasible.is_none() {
+                    if let Some(ns) = db.lookup(fp, &c.label) {
+                        c.measured = Some(ns);
+                        c.score = ns;
+                    }
+                }
+            }
+        }
         // Feasible first, then by ascending score; stable so enumeration
         // order breaks ties deterministically.
         candidates.sort_by(|a, b| {
@@ -510,6 +623,7 @@ impl EnginePlanner {
                 Ok(engine) => {
                     let r = bench(&c.label, &opts, || engine.conv(&x));
                     c.score = r.ns_per_iter();
+                    c.measured = Some(c.score);
                 }
                 Err(reason) => c.infeasible = Some(reason),
             }
@@ -525,6 +639,27 @@ impl EnginePlanner {
             .find(|c| c.infeasible.is_none() && (c.exact || self.policy.allow_approximate))
             .map(|c| c.id)
             .unwrap_or(EngineId::Dm);
+        plan
+    }
+
+    /// [`EnginePlanner::calibrate`] that also records every measurement
+    /// into `db` under `spec.fingerprint()`, so the timings can be
+    /// persisted ([`CalibrationDb::save`]) and override later analytic
+    /// plans on this host.
+    pub fn calibrate_recording(
+        &self,
+        spec: &LayerSpec,
+        weights: &Tensor4<i8>,
+        seed: u64,
+        db: &mut CalibrationDb,
+    ) -> LayerPlan {
+        let plan = self.calibrate(spec, weights, seed);
+        let fp = spec.fingerprint();
+        for c in &plan.candidates {
+            if let Some(ns) = c.measured {
+                db.record(fp, &c.label, ns);
+            }
+        }
         plan
     }
 }
@@ -574,6 +709,7 @@ pub fn registry(
         } else {
             infeasible
         };
+        let analytic = policy.score(ops, table_bytes, build_evals);
         out.push(Candidate {
             id,
             label: id.label(),
@@ -583,7 +719,9 @@ pub fn registry(
             table_bytes,
             build_evals,
             cached,
-            score: policy.score(ops, table_bytes, build_evals),
+            score: analytic,
+            analytic,
+            measured: None,
         });
     };
 
@@ -993,6 +1131,74 @@ mod tests {
         let c = plan.chosen_candidate();
         assert!(c.score > 0.0, "measured time must be positive");
         assert!(c.exact);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_field_sensitive() {
+        let a = spec(16, 16, 2, 4, 3, 2);
+        let b = spec(16, 16, 2, 4, 3, 2);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let wider = spec(16, 16, 2, 4, 3, 4);
+        assert_ne!(a.fingerprint(), wider.fingerprint());
+        let strided = LayerSpec {
+            geom: ConvGeometry { kh: 3, kw: 3, sy: 2, sx: 2 },
+            ..a
+        };
+        assert_ne!(a.fingerprint(), strided.fingerprint());
+    }
+
+    #[test]
+    fn measured_override_flips_engine_choice() {
+        // Analytically PCILT wins this low-bit large-frame layer; a
+        // calibration database claiming DM measured 1ns and PCILT an
+        // eternity must flip the choice to DM.
+        let s = spec(64, 64, 1, 8, 5, 1);
+        let analytic = EnginePlanner::new(PlannerPolicy::default()).plan_layer(&s, None);
+        assert_ne!(analytic.chosen, EngineId::Dm);
+        let mut db = CalibrationDb::with_host("test-host");
+        db.record(s.fingerprint(), "dm", 1.0);
+        db.record(s.fingerprint(), "pcilt", 1.0e9);
+        let planner = EnginePlanner::new(PlannerPolicy::default()).with_calibration(Arc::new(db));
+        let plan = planner.plan_layer(&s, None);
+        assert_eq!(plan.chosen, EngineId::Dm, "measured 1ns must beat everything");
+        let dm = plan.candidate(EngineId::Dm).unwrap();
+        assert_eq!(dm.measured, Some(1.0));
+        assert_eq!(dm.score, 1.0);
+        assert!(dm.analytic > 1.0, "analytic score must be retained");
+        let r = plan.report();
+        assert!(r.contains("meas(ns)"), "measured mode adds the column:\n{r}");
+        assert!(r.contains("delta"), "measured mode adds the delta column:\n{r}");
+    }
+
+    #[test]
+    fn calibration_misses_keep_analytic_scores() {
+        let s = spec(16, 16, 1, 4, 3, 2);
+        let db = CalibrationDb::with_host("test-host"); // empty: all misses
+        let planner = EnginePlanner::new(PlannerPolicy::default()).with_calibration(Arc::new(db));
+        let with_db = planner.plan_layer(&s, None);
+        let without = EnginePlanner::new(PlannerPolicy::default()).plan_layer(&s, None);
+        assert_eq!(with_db.chosen, without.chosen);
+        for (a, b) in with_db.candidates.iter().zip(&without.candidates) {
+            assert_eq!(a.score, b.score);
+            assert_eq!(a.measured, None);
+        }
+    }
+
+    #[test]
+    fn calibrate_recording_persists_measurements() {
+        let mut rng = Rng::new(29);
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let s = spec(12, 12, 1, 2, 3, 2);
+        let mut db = CalibrationDb::with_host("test-host");
+        let plan = EnginePlanner::default().calibrate_recording(&s, &w, 31, &mut db);
+        assert!(!db.is_empty());
+        let chosen = plan.chosen_candidate();
+        assert_eq!(db.lookup(s.fingerprint(), &chosen.label), chosen.measured);
+        // Feeding the recorded timings back reproduces the same choice.
+        let replanner =
+            EnginePlanner::new(PlannerPolicy::default()).with_calibration(Arc::new(db));
+        let replay = replanner.plan_layer(&s, None);
+        assert_eq!(replay.chosen, plan.chosen);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::util::bitpack::{offset_space, pack_offset};
 use super::custom_fn::ConvFunc;
 use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
+use super::tile;
 
 /// Segment-offset table set for one conv layer (geometry-free: table
 /// content depends only on weights, cardinality, `seg_n` and `f`, which is
@@ -272,10 +273,81 @@ impl SegmentEngine {
         self.entries() as f64 * value_bits as f64 / 8.0
     }
 
-    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// The band walk (see `PciltEngine::conv_band`): output rows
     /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
-    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    /// row-major). `conv` and `conv_rows` both run exactly this walk,
+    /// dispatching between the tiled path and the scalar reference behind
+    /// the `pcilt::tile` knob (pinned bit-identical in tests).
     fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        if tile::scalar_walk() {
+            self.conv_band_scalar(x, n, oy0, rows, out);
+        } else {
+            self.conv_band_tiled(x, n, oy0, rows, out);
+        }
+    }
+
+    /// Cache-blocked walk: pack a [`tile::TILE_W`]-pixel tile's segment
+    /// offsets once (reused across all output channels, as in the scalar
+    /// walk), then accumulate (oc, seg)-outer with each segment table
+    /// L1-hot across the whole tile. Per output slot the additions happen
+    /// in the same segment order as the scalar walk.
+    fn conv_band_tiled(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels mismatch");
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let t = self.handle.segment();
+        let oc_n = self.out_ch;
+        let n_seg = self.n_segments;
+        let mut rf = vec![0u8; n_seg * self.seg_n];
+        // offs[seg * tw + tt]: the tile's packed offsets, segment-major.
+        let mut offs = vec![0u32; n_seg * tile::TILE_W];
+        let mut acc = vec![0i32; tile::TILE_W * oc_n];
+        for oy in oy0..oy0 + rows {
+            let mut ox0 = 0usize;
+            while ox0 < ow {
+                let tw = tile::TILE_W.min(ow - ox0);
+                for tt in 0..tw {
+                    let ox = ox0 + tt;
+                    let mut p = 0;
+                    for ky in 0..g.kh {
+                        let row = x.row_span(n, oy * g.sy + ky, ox * g.sx, g.kw);
+                        rf[p..p + g.kw * s.c].copy_from_slice(row);
+                        p += g.kw * s.c;
+                    }
+                    rf[self.positions..].fill(0); // tail padding
+                    for seg in 0..n_seg {
+                        let ws = &rf[seg * self.seg_n..(seg + 1) * self.seg_n];
+                        offs[seg * tw + tt] = pack_offset(ws, self.act_bits);
+                    }
+                }
+                let acc_t = &mut acc[..tw * oc_n];
+                acc_t.fill(0);
+                for oc in 0..oc_n {
+                    for seg in 0..n_seg {
+                        let table = t.seg_table(oc, seg);
+                        for (tt, &off) in offs[seg * tw..(seg + 1) * tw].iter().enumerate() {
+                            acc_t[tt * oc_n + oc] += table[off as usize];
+                        }
+                    }
+                }
+                let base = ((oy - oy0) * ow + ox0) * oc_n;
+                out[base..base + tw * oc_n].copy_from_slice(acc_t);
+                ox0 += tw;
+            }
+        }
+    }
+
+    /// The scalar reference walk (bit-exactness baseline).
+    fn conv_band_scalar(
+        &self,
+        x: &Tensor4<u8>,
+        n: usize,
+        oy0: usize,
+        rows: usize,
+        out: &mut [i32],
+    ) {
         let s = x.shape();
         let g = self.geom;
         let in_ch = self.positions / (g.kh * g.kw);
@@ -430,6 +502,38 @@ mod tests {
             let ic = rng.range_i64(1, 2) as usize;
             let oc = rng.range_i64(1, 3) as usize;
             exact_case(rng.next_u64(), bits, seg_n, kh, kw, ic, oc);
+        });
+    }
+
+    #[test]
+    fn tiled_walk_is_bit_identical_to_scalar_reference() {
+        forall("segment tiled == scalar", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4]);
+            let seg_n = *rng.choose(&[1usize, 2, 4]);
+            if seg_n as u32 * bits > 16 {
+                return;
+            }
+            let (sy, sx) = *rng.choose(&[(1usize, 1usize), (2, 2)]);
+            let ic = rng.range_i64(1, 2) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            let h = 3 + rng.range_i64(1, 6) as usize;
+            let w_dim = 3 + rng.range_i64(1, 20) as usize;
+            let x = Tensor4::random_activations(Shape4::new(2, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, 3, 3, ic), 8, &mut rng);
+            let geom = ConvGeometry { kh: 3, kw: 3, sy, sx };
+            let e = SegmentEngine::new(&w, bits, seg_n, geom);
+            let s = x.shape();
+            let (oh, ow) = s.conv_out(3, 3, sy, sx);
+            for n in 0..s.n {
+                for (oy0, rows) in [(0, oh), (oh / 2, oh - oh / 2)] {
+                    let mut scalar = vec![0i32; rows * ow * oc];
+                    let mut tiled = vec![0i32; rows * ow * oc];
+                    e.conv_band_scalar(&x, n, oy0, rows, &mut scalar);
+                    e.conv_band_tiled(&x, n, oy0, rows, &mut tiled);
+                    assert_eq!(scalar, tiled, "seg_n={seg_n} n={n} oy0={oy0} ow={ow}");
+                }
+            }
         });
     }
 
@@ -728,12 +832,90 @@ impl RowSegmentEngine {
         self.handle.row_segment().cl.len()
     }
 
-    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// The band walk (see `PciltEngine::conv_band`): output rows
     /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
     /// row-major). Input rows are packed once per band — re-packing the
     /// `kh - 1` rows two adjacent bands share changes no bits, only
-    /// (slightly) the packing amortization.
+    /// (slightly) the packing amortization. Dispatches between the tiled
+    /// path and the scalar reference behind the `pcilt::tile` knob
+    /// (pinned bit-identical in tests).
     fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        if tile::scalar_walk() {
+            self.conv_band_scalar(x, n, oy0, rows, out);
+        } else {
+            self.conv_band_tiled(x, n, oy0, rows, out);
+        }
+    }
+
+    /// Cache-blocked walk: extract a [`tile::TILE_W`]-pixel tile's window
+    /// offsets once, then add channels-last table rows segment-major so
+    /// each segment's `card * oc` block stays L1-hot across the tile. Per
+    /// output slot the row adds happen in the same ascending `seg_global`
+    /// order as the scalar walk.
+    fn conv_band_tiled(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        use crate::util::bitpack::{pack_stream, window_offset};
+        let s = x.shape();
+        let g = self.geom;
+        let in_ch = self.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch, "input channels mismatch");
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let oc_n = self.out_ch;
+        let row_positions = g.kw * s.c;
+        let bits = self.act_bits;
+        let card = self.seg_card;
+        let tables = self.handle.row_segment();
+        let cl = &tables.cl[..];
+        let y_base = oy0 * g.sy;
+        let y_end = (oy0 + rows - 1) * g.sy + g.kh;
+        let streams: Vec<Vec<u64>> = (y_base..y_end)
+            .map(|y| pack_stream(x.row_span(n, y, 0, s.w), bits))
+            .collect();
+        let n_seg = self.n_segments;
+        // bases[seg_global * tw + tt]: resolved channels-last row starts.
+        let mut bases = vec![0usize; n_seg * tile::TILE_W];
+        let mut acc = vec![0i32; tile::TILE_W * oc_n];
+        for oy in oy0..oy0 + rows {
+            let mut ox0 = 0usize;
+            while ox0 < ow {
+                let tw = tile::TILE_W.min(ow - ox0);
+                for tt in 0..tw {
+                    let col_start = (ox0 + tt) * g.sx * s.c;
+                    for ky in 0..g.kh {
+                        let stream = &streams[oy * g.sy + ky - y_base];
+                        for j in 0..self.segs_per_row {
+                            let start = col_start + j * self.seg_n;
+                            let take = self.seg_n.min(row_positions - j * self.seg_n);
+                            let off = window_offset(stream, bits, start, take) as usize;
+                            let seg_global = ky * self.segs_per_row + j;
+                            bases[seg_global * tw + tt] = (seg_global * card + off) * oc_n;
+                        }
+                    }
+                }
+                let acc_t = &mut acc[..tw * oc_n];
+                acc_t.fill(0);
+                for seg_global in 0..n_seg {
+                    let brow = &bases[seg_global * tw..(seg_global + 1) * tw];
+                    for (tt, arow) in acc_t.chunks_exact_mut(oc_n).enumerate() {
+                        let base = brow[tt];
+                        tile::add_row(arow, &cl[base..base + oc_n]);
+                    }
+                }
+                let base = ((oy - oy0) * ow + ox0) * oc_n;
+                out[base..base + tw * oc_n].copy_from_slice(acc_t);
+                ox0 += tw;
+            }
+        }
+    }
+
+    /// The scalar reference walk (bit-exactness baseline).
+    fn conv_band_scalar(
+        &self,
+        x: &Tensor4<u8>,
+        n: usize,
+        oy0: usize,
+        rows: usize,
+        out: &mut [i32],
+    ) {
         use crate::util::bitpack::{pack_stream, window_offset};
         let s = x.shape();
         let g = self.geom;
@@ -903,6 +1085,38 @@ mod row_tests {
                 rng.range_i64(1, 2) as usize,
                 rng.range_i64(1, 4) as usize,
             );
+        });
+    }
+
+    #[test]
+    fn tiled_walk_is_bit_identical_to_scalar_reference() {
+        forall("row-segment tiled == scalar", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4]);
+            let seg_n = *rng.choose(&[1usize, 2, 4]);
+            if seg_n as u32 * bits > 16 {
+                return;
+            }
+            let (sy, sx) = *rng.choose(&[(1usize, 1usize), (2, 2)]);
+            let ic = rng.range_i64(1, 2) as usize;
+            let oc = rng.range_i64(1, 3) as usize;
+            let h = 3 + rng.range_i64(1, 6) as usize;
+            let w_dim = 3 + rng.range_i64(1, 20) as usize;
+            let x = Tensor4::random_activations(Shape4::new(2, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, 3, 3, ic), 8, &mut rng);
+            let geom = ConvGeometry { kh: 3, kw: 3, sy, sx };
+            let e = RowSegmentEngine::new(&w, bits, seg_n, geom);
+            let s = x.shape();
+            let (oh, ow) = s.conv_out(3, 3, sy, sx);
+            for n in 0..s.n {
+                for (oy0, rows) in [(0, oh), (oh / 2, oh - oh / 2)] {
+                    let mut scalar = vec![0i32; rows * ow * oc];
+                    let mut tiled = vec![0i32; rows * ow * oc];
+                    e.conv_band_scalar(&x, n, oy0, rows, &mut scalar);
+                    e.conv_band_tiled(&x, n, oy0, rows, &mut tiled);
+                    assert_eq!(scalar, tiled, "seg_n={seg_n} n={n} oy0={oy0} ow={ow}");
+                }
+            }
         });
     }
 

@@ -16,6 +16,7 @@ use crate::tensor::{Shape4, Tensor4};
 use super::custom_fn::ConvFunc;
 use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 use super::store::{ByteReader, ByteWriter, TableArtifact, TableHandle, TableKey, TableStore};
+use super::tile;
 
 /// Shared-table set for one layer: unique tables + per-position pointers.
 #[derive(Debug, Clone, PartialEq)]
@@ -323,10 +324,67 @@ impl SharedEngine {
         self.handle.shared()
     }
 
-    /// The shared band walk (see `PciltEngine::conv_band`): output rows
+    /// The band walk (see `PciltEngine::conv_band`): output rows
     /// `[oy0, oy0 + rows)` of batch item `n` into `out` (`[rows][ow][oc]`
-    /// row-major). `conv` and `conv_rows` both run exactly this loop.
+    /// row-major). `conv` and `conv_rows` both run exactly this walk,
+    /// dispatching between the tiled path and the scalar reference behind
+    /// the `pcilt::tile` knob (pinned bit-identical in tests).
     fn conv_band(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        if tile::scalar_walk() {
+            self.conv_band_scalar(x, n, oy0, rows, out);
+        } else {
+            self.conv_band_tiled(x, n, oy0, rows, out);
+        }
+    }
+
+    /// Cache-blocked walk: gather a [`tile::TILE_W`]-pixel tile's codes
+    /// position-major once, then run the (oc, position) pointer loop with
+    /// the dereferenced unique table L1-hot across the whole tile. Per
+    /// output slot the additions happen in the same position order as the
+    /// scalar walk, so the bits cannot differ.
+    fn conv_band_tiled(&self, x: &Tensor4<u8>, n: usize, oy0: usize, rows: usize, out: &mut [i32]) {
+        let s = x.shape();
+        let g = self.geom;
+        let t = self.tables();
+        let in_ch = t.positions / (g.kh * g.kw);
+        assert_eq!(s.c, in_ch);
+        let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+        let oc_n = t.out_ch;
+        let mut codes = vec![0u8; t.positions * tile::TILE_W];
+        let mut acc = vec![0i32; tile::TILE_W * oc_n];
+        for oy in oy0..oy0 + rows {
+            let mut ox0 = 0usize;
+            while ox0 < ow {
+                let tw = tile::TILE_W.min(ow - ox0);
+                tile::gather_tile_codes(x, n, oy, ox0, tw, g, &mut codes[..t.positions * tw]);
+                let acc_t = &mut acc[..tw * oc_n];
+                acc_t.fill(0);
+                for oc in 0..oc_n {
+                    let pbase = oc * t.positions;
+                    for pos in 0..t.positions {
+                        let ti = t.pointers[pbase + pos] as usize;
+                        let table = &t.unique[ti * t.card..(ti + 1) * t.card];
+                        for (tt, &a) in codes[pos * tw..(pos + 1) * tw].iter().enumerate() {
+                            acc_t[tt * oc_n + oc] += table[a as usize];
+                        }
+                    }
+                }
+                let base = ((oy - oy0) * ow + ox0) * oc_n;
+                out[base..base + tw * oc_n].copy_from_slice(acc_t);
+                ox0 += tw;
+            }
+        }
+    }
+
+    /// The scalar reference walk (bit-exactness baseline).
+    fn conv_band_scalar(
+        &self,
+        x: &Tensor4<u8>,
+        n: usize,
+        oy0: usize,
+        rows: usize,
+        out: &mut [i32],
+    ) {
         let s = x.shape();
         let g = self.geom;
         let t = self.tables();
@@ -441,6 +499,34 @@ mod tests {
             let geom = ConvGeometry::unit_stride(3, 3);
             let e = SharedEngine::new(&w, bits, geom);
             assert_eq!(e.conv(&x), conv_reference(&x, &w, geom));
+        });
+    }
+
+    #[test]
+    fn tiled_walk_is_bit_identical_to_scalar_reference() {
+        forall("shared tiled == scalar", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, i64::MAX / 2) as u64);
+            let bits = *rng.choose(&[1u32, 2, 4]);
+            let (sy, sx) = *rng.choose(&[(1usize, 1usize), (2, 2)]);
+            let ic = rng.range_i64(1, 3) as usize;
+            let oc = rng.range_i64(1, 4) as usize;
+            let h = 3 + rng.range_i64(1, 6) as usize;
+            let w_dim = 3 + rng.range_i64(1, 20) as usize;
+            let x = Tensor4::random_activations(Shape4::new(2, h, w_dim, ic), bits, &mut rng);
+            let w = Tensor4::random_weights(Shape4::new(oc, 3, 3, ic), 4, &mut rng);
+            let geom = ConvGeometry { kh: 3, kw: 3, sy, sx };
+            let e = SharedEngine::with_func(&w, bits, geom, &ConvFunc::Mul);
+            let s = x.shape();
+            let (oh, ow) = s.conv_out(3, 3, sy, sx);
+            for n in 0..s.n {
+                for (oy0, rows) in [(0, oh), (oh / 2, oh - oh / 2)] {
+                    let mut scalar = vec![0i32; rows * ow * oc];
+                    let mut tiled = vec![0i32; rows * ow * oc];
+                    e.conv_band_scalar(&x, n, oy0, rows, &mut scalar);
+                    e.conv_band_tiled(&x, n, oy0, rows, &mut tiled);
+                    assert_eq!(scalar, tiled, "n={n} oy0={oy0} rows={rows} ow={ow}");
+                }
+            }
         });
     }
 

@@ -1,0 +1,235 @@
+//! Cache-blocked, channels-last tiled walk shared by the lookup-family
+//! engines (DESIGN.md §12).
+//!
+//! The scalar band walks (`PciltEngine::conv_band` and friends) fetch one
+//! table row per (pixel, position) and stream the *whole* table through
+//! cache once per output pixel. The tiled walk inverts the loop nest:
+//! [`TILE_W`] output pixels are processed together, position-major, so
+//! each position's `card * oc` table block stays L1-resident while the
+//! tile's codes index into it, and every accumulate is a contiguous
+//! `oc`-row add that stable rustc autovectorizes (no nightly `std::simd`).
+//!
+//! **Bit-identity argument** (pinned by tests in every engine): for each
+//! output slot, both walks apply the identical additions in the identical
+//! position order `p = 0..P` — tiling only interleaves additions across
+//! *distinct* accumulator slots. i32 addition per slot is therefore the
+//! same instruction sequence, so results (including any debug-build
+//! overflow panic) cannot diverge.
+//!
+//! The scalar path stays available as the bit-exactness reference behind
+//! a knob: set `PCILT_SCALAR_WALK=1` (process-wide), or call
+//! [`set_walk_mode`] programmatically (tests pin `Scalar == Tiled`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::tensor::Tensor4;
+
+use super::engine::ConvGeometry;
+
+/// Output pixels walked per tile. 16 i32 accumulator rows of a typical
+/// `oc ≤ 64` layer fit comfortably in L1 next to one position's table
+/// block; the value is a performance knob only — the walk is bit-identical
+/// for every tile width.
+pub const TILE_W: usize = 16;
+
+/// Which inner-loop walk the lookup-family engines run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalkMode {
+    /// Resolve from the `PCILT_SCALAR_WALK` env var (default: tiled).
+    Auto,
+    /// Force the scalar reference walk everywhere.
+    Scalar,
+    /// Force the tiled walk everywhere.
+    Tiled,
+}
+
+static WALK_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static ENV_SCALAR: OnceLock<bool> = OnceLock::new();
+
+/// Install a process-wide walk override (tests and experiments). `Auto`
+/// restores the env-var default.
+pub fn set_walk_mode(mode: WalkMode) {
+    let v = match mode {
+        WalkMode::Auto => 0,
+        WalkMode::Scalar => 1,
+        WalkMode::Tiled => 2,
+    };
+    WALK_OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+/// Whether the engines should run the scalar reference walk. Reads the
+/// programmatic override first, then `PCILT_SCALAR_WALK` (read once).
+pub fn scalar_walk() -> bool {
+    match WALK_OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => *ENV_SCALAR.get_or_init(|| {
+            std::env::var("PCILT_SCALAR_WALK")
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false)
+        }),
+    }
+}
+
+/// Add one contiguous channels-last table row into one accumulator row.
+/// The single hot statement of the tiled walk — a fixed-trip-count
+/// (per-layer `oc`) slice add over `i32`, the shape LLVM's autovectorizer
+/// reliably turns into packed adds.
+#[inline(always)]
+pub(crate) fn add_row(acc: &mut [i32], trow: &[i32]) {
+    for (a, &t) in acc.iter_mut().zip(trow) {
+        *a += t;
+    }
+}
+
+/// The tiled channels-last band walk shared by [`super::PciltEngine`] and
+/// [`super::MixedEngine`] (`cl[(p * card + code) * oc + o]` layout).
+/// Computes output rows `[oy0, oy0 + rows)` of batch item `n` into `out`
+/// (`[rows][ow][oc]` row-major, fully overwritten). `shifts`, when
+/// present, maps a raw activation of input channel `ic` to its table code
+/// by `a >> shifts[ic]` (the mixed-cardinality LCD narrowing); `None` is
+/// the identity used by the uniform-cardinality engine.
+pub(crate) fn conv_band_cl_tiled(
+    x: &Tensor4<u8>,
+    n: usize,
+    oy0: usize,
+    rows: usize,
+    out: &mut [i32],
+    g: ConvGeometry,
+    card: usize,
+    oc_n: usize,
+    cl: &[i32],
+    shifts: Option<&[u32]>,
+) {
+    let s = x.shape();
+    let in_ch = s.c;
+    let (_, ow) = s.conv_out(g.kh, g.kw, g.sy, g.sx);
+    let px_stride = g.sx * in_ch;
+    let mut acc = vec![0i32; TILE_W * oc_n];
+    for oy in oy0..oy0 + rows {
+        let mut ox0 = 0usize;
+        while ox0 < ow {
+            let tw = TILE_W.min(ow - ox0);
+            let acc_t = &mut acc[..tw * oc_n];
+            acc_t.fill(0);
+            let mut p = 0usize;
+            for ky in 0..g.kh {
+                // One span covers every pixel of the tile for this kernel
+                // row: pixel t reads `span[(t*sx + kx)*in_ch + ic]`.
+                let span = x.row_span(n, oy * g.sy + ky, ox0 * g.sx, (tw - 1) * g.sx + g.kw);
+                for kx in 0..g.kw {
+                    for ic in 0..in_ch {
+                        let off0 = kx * in_ch + ic;
+                        let shift = shifts.map_or(0, |sh| sh[ic]);
+                        let pbase = p * card;
+                        for (t, arow) in acc_t.chunks_exact_mut(oc_n).enumerate() {
+                            let code = (span[t * px_stride + off0] as usize) >> shift;
+                            let base = (pbase + code) * oc_n;
+                            add_row(arow, &cl[base..base + oc_n]);
+                        }
+                        p += 1;
+                    }
+                }
+            }
+            // A tile's output pixels are contiguous in the band buffer.
+            let base = ((oy - oy0) * ow + ox0) * oc_n;
+            out[base..base + tw * oc_n].copy_from_slice(acc_t);
+            ox0 += tw;
+        }
+    }
+}
+
+/// Gather one tile's activation codes position-major:
+/// `codes[p * tw + t]` = activation of receptive-field position `p` for
+/// output pixel `ox0 + t` (row `oy`). Used by the engines whose table
+/// indexing is per-(oc, position) — shared and segment — so the oc-outer
+/// accumulate loops read each position's tile codes as one contiguous run.
+pub(crate) fn gather_tile_codes(
+    x: &Tensor4<u8>,
+    n: usize,
+    oy: usize,
+    ox0: usize,
+    tw: usize,
+    g: ConvGeometry,
+    codes: &mut [u8],
+) {
+    let s = x.shape();
+    let in_ch = s.c;
+    let px_stride = g.sx * in_ch;
+    let mut p = 0usize;
+    for ky in 0..g.kh {
+        let span = x.row_span(n, oy * g.sy + ky, ox0 * g.sx, (tw - 1) * g.sx + g.kw);
+        for kx in 0..g.kw {
+            for ic in 0..in_ch {
+                let off0 = kx * in_ch + ic;
+                let dst = &mut codes[p * tw..(p + 1) * tw];
+                for (t, d) in dst.iter_mut().enumerate() {
+                    *d = span[t * px_stride + off0];
+                }
+                p += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape4;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn walk_mode_override_wins_over_env_default() {
+        // Default (Auto, no env set in the test runner) is the tiled walk.
+        set_walk_mode(WalkMode::Auto);
+        let auto_default = scalar_walk();
+        set_walk_mode(WalkMode::Scalar);
+        assert!(scalar_walk(), "Scalar override must force the scalar walk");
+        set_walk_mode(WalkMode::Tiled);
+        assert!(!scalar_walk(), "Tiled override must force the tiled walk");
+        set_walk_mode(WalkMode::Auto);
+        assert_eq!(scalar_walk(), auto_default, "Auto restores the env default");
+    }
+
+    #[test]
+    fn gather_tile_codes_matches_direct_indexing() {
+        let mut rng = Rng::new(71);
+        for (kh, kw, sy, sx, ic) in [(3usize, 3usize, 1usize, 1usize, 2usize), (2, 4, 2, 2, 3)] {
+            let g = ConvGeometry { kh, kw, sy, sx };
+            let x = Tensor4::random_activations(Shape4::new(1, 11, 13, ic), 4, &mut rng);
+            let s = x.shape();
+            let (oh, ow) = s.conv_out(kh, kw, sy, sx);
+            let positions = kh * kw * ic;
+            for oy in [0, oh - 1] {
+                for ox0 in [0, ow.saturating_sub(3)] {
+                    let tw = TILE_W.min(ow - ox0);
+                    let mut codes = vec![0u8; positions * tw];
+                    gather_tile_codes(&x, 0, oy, ox0, tw, g, &mut codes);
+                    for t in 0..tw {
+                        let mut p = 0;
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                for c in 0..ic {
+                                    assert_eq!(
+                                        codes[p * tw + t],
+                                        x.get(0, oy * sy + ky, (ox0 + t) * sx + kx, c),
+                                        "p={p} t={t} oy={oy} ox0={ox0}"
+                                    );
+                                    p += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn add_row_is_elementwise() {
+        let mut acc = vec![1i32, -2, 3, 0];
+        add_row(&mut acc, &[10, 20, 30, 40]);
+        assert_eq!(acc, vec![11, 18, 33, 40]);
+    }
+}

@@ -1,0 +1,251 @@
+//! Bench-regression comparison over the `BENCH_*.json` trajectory files
+//! the benches emit (`PCILT_BENCH_JSON`). CI's `bench-regression` step
+//! runs `pcilt bench-check`, which pairs every `*imgs_per_sec` figure in a
+//! committed baseline file with the same-position figure in the freshly
+//! measured file and fails the build when throughput drops more than the
+//! tolerance (default 10%).
+//!
+//! Hand-rolled scanning (no serde offline): a field counts when its key
+//! ends in `imgs_per_sec` and its value is a bare JSON number. Pairing is
+//! positional per file — the benches emit keys in a fixed document order,
+//! so position is identity; renames/additions should refresh the baseline
+//! file in the same commit.
+
+use std::path::Path;
+
+/// Every `*imgs_per_sec` key/value in document order.
+pub fn imgs_per_sec_values(json: &str) -> Vec<(String, f64)> {
+    let b = json.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        // A quoted token; the benches emit plain ASCII without escapes,
+        // but tolerate them so a stray `\"` cannot desync the scan.
+        let start = i + 1;
+        let mut j = start;
+        while j < b.len() && b[j] != b'"' {
+            if b[j] == b'\\' {
+                j += 1;
+            }
+            j += 1;
+        }
+        if j >= b.len() {
+            break;
+        }
+        let token = &json[start..j];
+        i = j + 1;
+        // Key position iff the next non-space byte is ':'.
+        let mut k = i;
+        while k < b.len() && (b[k] as char).is_ascii_whitespace() {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b':' {
+            continue;
+        }
+        if !token.ends_with("imgs_per_sec") {
+            continue;
+        }
+        let mut v = k + 1;
+        while v < b.len() && (b[v] as char).is_ascii_whitespace() {
+            v += 1;
+        }
+        let num_start = v;
+        while v < b.len() && matches!(b[v], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+            v += 1;
+        }
+        if let Ok(x) = json[num_start..v].parse::<f64>() {
+            out.push((token.to_string(), x));
+            i = v;
+        }
+    }
+    out
+}
+
+/// One baseline-vs-current figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// `current / baseline` (higher is better; imgs/sec figures).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Pair every baseline figure with the same-position current figure.
+/// A baseline figure the current file no longer reports is a regression
+/// (a silently dropped measurement must not pass the gate).
+pub fn compare(baseline_json: &str, current_json: &str, tolerance: f64) -> Vec<BenchRow> {
+    let base = imgs_per_sec_values(baseline_json);
+    let cur = imgs_per_sec_values(current_json);
+    base.into_iter()
+        .enumerate()
+        .map(|(i, (key, baseline))| {
+            let current = cur.get(i).map(|(_, v)| *v).unwrap_or(0.0);
+            let ratio = if baseline > 0.0 { current / baseline } else { f64::INFINITY };
+            BenchRow {
+                key,
+                baseline,
+                current,
+                ratio,
+                regressed: current < baseline * (1.0 - tolerance),
+            }
+        })
+        .collect()
+}
+
+/// Comparison result for one baseline file.
+#[derive(Debug, Clone)]
+pub struct FileReport {
+    pub file: String,
+    pub rows: Vec<BenchRow>,
+    /// Set when the current-side file could not be read.
+    pub error: Option<String>,
+}
+
+impl FileReport {
+    pub fn failed(&self) -> bool {
+        self.error.is_some() || self.rows.iter().any(|r| r.regressed)
+    }
+}
+
+/// Compare every `*.json` baseline in `baseline_dir` against the file of
+/// the same name in `current_dir`. Deterministic: files sorted by name.
+pub fn check_dirs(
+    baseline_dir: &Path,
+    current_dir: &Path,
+    tolerance: f64,
+) -> std::io::Result<Vec<FileReport>> {
+    let mut names: Vec<String> = std::fs::read_dir(baseline_dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.ends_with(".json"))
+        .collect();
+    names.sort();
+    let mut out = Vec::new();
+    for name in names {
+        let baseline = std::fs::read_to_string(baseline_dir.join(&name))?;
+        let report = match std::fs::read_to_string(current_dir.join(&name)) {
+            Ok(current) => FileReport {
+                file: name,
+                rows: compare(&baseline, &current, tolerance),
+                error: None,
+            },
+            Err(e) => FileReport {
+                file: name,
+                rows: Vec::new(),
+                error: Some(format!("current file missing: {e}")),
+            },
+        };
+        out.push(report);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASELINE: &str = r#"{
+  "bench": "bench_fused",
+  "results": [
+    {"name": "conv4", "fused_imgs_per_sec": 1000.0, "unfused_imgs_per_sec": 700.0, "p50_ns": 12.0},
+    {"name": "conv8", "fused_imgs_per_sec": 500.0, "unfused_imgs_per_sec": 350.0}
+  ]
+}"#;
+
+    fn scaled(factor: f64) -> String {
+        format!(
+            r#"{{"results": [
+  {{"name": "conv4", "fused_imgs_per_sec": {}, "unfused_imgs_per_sec": {}, "p50_ns": 11.0}},
+  {{"name": "conv8", "fused_imgs_per_sec": {}, "unfused_imgs_per_sec": {}}}
+]}}"#,
+            1000.0 * factor,
+            700.0 * factor,
+            500.0 * factor,
+            350.0 * factor
+        )
+    }
+
+    #[test]
+    fn scanner_extracts_keys_in_document_order() {
+        let vals = imgs_per_sec_values(BASELINE);
+        assert_eq!(
+            vals,
+            vec![
+                ("fused_imgs_per_sec".to_string(), 1000.0),
+                ("unfused_imgs_per_sec".to_string(), 700.0),
+                ("fused_imgs_per_sec".to_string(), 500.0),
+                ("unfused_imgs_per_sec".to_string(), 350.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn scanner_ignores_string_values_and_other_numbers() {
+        // "imgs_per_sec" as a *value* must not pair with the next number,
+        // and p50_ns keys are not throughput figures.
+        let json = r#"{"note": "imgs_per_sec", "p50_ns": 42.0, "x_imgs_per_sec": 7}"#;
+        assert_eq!(imgs_per_sec_values(json), vec![("x_imgs_per_sec".to_string(), 7.0)]);
+    }
+
+    #[test]
+    fn injected_twenty_percent_drop_fails_default_tolerance() {
+        let rows = compare(BASELINE, &scaled(0.8), 0.10);
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.regressed), "{rows:?}");
+    }
+
+    #[test]
+    fn five_percent_drop_passes_default_tolerance() {
+        let rows = compare(BASELINE, &scaled(0.95), 0.10);
+        assert!(rows.iter().all(|r| !r.regressed), "{rows:?}");
+    }
+
+    #[test]
+    fn improvement_always_passes() {
+        let rows = compare(BASELINE, &scaled(1.4), 0.10);
+        assert!(rows.iter().all(|r| !r.regressed));
+        assert!(rows.iter().all(|r| (r.ratio - 1.4).abs() < 1e-9));
+    }
+
+    #[test]
+    fn tolerance_is_configurable() {
+        // 20% drop passes a 25% tolerance, fails a 15% one.
+        assert!(compare(BASELINE, &scaled(0.8), 0.25).iter().all(|r| !r.regressed));
+        assert!(compare(BASELINE, &scaled(0.8), 0.15).iter().all(|r| r.regressed));
+    }
+
+    #[test]
+    fn dropped_measurement_is_a_regression() {
+        let current = r#"{"results": [{"name": "conv4", "fused_imgs_per_sec": 1000.0}]}"#;
+        let rows = compare(BASELINE, current, 0.10);
+        assert_eq!(rows.len(), 4, "every baseline figure stays accounted");
+        assert!(!rows[0].regressed);
+        assert!(rows[1..].iter().all(|r| r.regressed));
+    }
+
+    #[test]
+    fn check_dirs_flags_missing_current_file() {
+        let base = std::env::temp_dir().join(format!("pcilt-bj-base-{}", std::process::id()));
+        let cur = std::env::temp_dir().join(format!("pcilt-bj-cur-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&cur);
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::create_dir_all(&cur).unwrap();
+        std::fs::write(base.join("BENCH_a.json"), BASELINE).unwrap();
+        std::fs::write(base.join("BENCH_b.json"), BASELINE).unwrap();
+        std::fs::write(cur.join("BENCH_a.json"), scaled(1.0)).unwrap();
+        let reports = check_dirs(&base, &cur, 0.10).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].file, "BENCH_a.json");
+        assert!(!reports[0].failed());
+        assert!(reports[1].failed(), "missing current file must fail the gate");
+        std::fs::remove_dir_all(&base).unwrap();
+        std::fs::remove_dir_all(&cur).unwrap();
+    }
+}

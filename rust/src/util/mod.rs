@@ -4,6 +4,7 @@
 //! (`rand`, `criterion`, `env_logger`, `proptest`, `anyhow`, `log`) — see
 //! DESIGN.md §2.
 
+pub mod benchjson;
 pub mod bitpack;
 pub mod error;
 pub mod logger;

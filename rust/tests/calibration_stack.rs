@@ -1,0 +1,186 @@
+//! Calibration-database integration tests: the measured-planner stack
+//! end to end. A `calibrate_recording` run persists per-host timings
+//! through the checksummed `calibration.bin` artifact; reloading them
+//! overrides analytic scores and can flip an engine choice; and every
+//! rejection path (missing, truncated, corrupted, stale-host) falls back
+//! cleanly instead of poisoning a plan — the PR's acceptance criteria.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcilt::model::{layer_specs, random_params};
+use pcilt::pcilt::calibration::{CAL_BIN_FILE, CAL_MANIFEST_FILE};
+use pcilt::pcilt::engine::ConvGeometry;
+use pcilt::pcilt::planner::{EngineId, EnginePlanner, LayerSpec, PlannerPolicy};
+use pcilt::pcilt::{CalIoError, CalibrationDb};
+use pcilt::tensor::Shape4;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pcilt_cal_stack_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sample_spec() -> LayerSpec {
+    LayerSpec {
+        geom: ConvGeometry::unit_stride(5, 5),
+        in_ch: 1,
+        out_ch: 8,
+        act_bits: 1,
+        weight_bits: 8,
+        input: Shape4::new(1, 64, 64, 1),
+    }
+}
+
+/// End to end: calibrate the sample model recording into a db, persist,
+/// reload, and verify the reloaded planner reproduces the measured
+/// choice without re-benchmarking.
+#[test]
+fn calibrate_persist_reload_reproduces_choice() {
+    let dir = temp_dir("roundtrip");
+    let params = random_params(2, &mut pcilt::util::prng::Rng::new(42));
+    let [s1, s2] = layer_specs(&params, 4);
+    let planner = EnginePlanner::new(PlannerPolicy::default());
+    let mut db = CalibrationDb::with_host("ci-host");
+    let p1 = planner.calibrate_recording(&s1, &params.w1, 0xCA1, &mut db);
+    let p2 = planner.calibrate_recording(&s2, &params.w2, 0xCA2, &mut db);
+    assert!(!db.is_empty(), "calibration must record measurements");
+    db.save(&dir).unwrap();
+
+    let loaded = CalibrationDb::load_for_host(&dir, "ci-host").unwrap();
+    assert_eq!(loaded, db, "persistence roundtrip must be lossless");
+    let replanner =
+        EnginePlanner::new(PlannerPolicy::default()).with_calibration(Arc::new(loaded));
+    let r1 = replanner.plan_layer(&s1, Some(&params.w1));
+    let r2 = replanner.plan_layer(&s2, Some(&params.w2));
+    assert_eq!(r1.chosen, p1.chosen, "layer 1 choice must replay from the db");
+    assert_eq!(r2.chosen, p2.chosen, "layer 2 choice must replay from the db");
+    assert!(r1.chosen_candidate().measured.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Saving the same database twice produces byte-identical artifacts —
+/// the determinism the content-addressed store idiom promises.
+#[test]
+fn persistence_is_deterministic() {
+    let d1 = temp_dir("det_a");
+    let d2 = temp_dir("det_b");
+    let mut db = CalibrationDb::with_host("ci-host");
+    let fp = sample_spec().fingerprint();
+    db.record(fp, "pcilt", 1111.0);
+    db.record(fp, "dm", 2222.0);
+    db.record(fp, "segment(n=4)", 333.5);
+    db.save(&d1).unwrap();
+    db.save(&d2).unwrap();
+    for f in [CAL_BIN_FILE, CAL_MANIFEST_FILE] {
+        assert_eq!(
+            std::fs::read(d1.join(f)).unwrap(),
+            std::fs::read(d2.join(f)).unwrap(),
+            "{f} must be byte-identical across saves"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+}
+
+/// A measured override must be able to flip the analytic winner — the
+/// whole point of calibrated planning.
+#[test]
+fn measured_override_flips_engine_choice_through_disk() {
+    let dir = temp_dir("flip");
+    let spec = sample_spec();
+    let analytic = EnginePlanner::new(PlannerPolicy::default()).plan_layer(&spec, None);
+    assert_ne!(
+        analytic.chosen,
+        EngineId::Dm,
+        "low-bit large-frame layer must pick a lookup engine analytically"
+    );
+    // "Measurements" saying DM is fastest on this host.
+    let mut db = CalibrationDb::with_host("ci-host");
+    db.record(spec.fingerprint(), "dm", 10.0);
+    db.record(spec.fingerprint(), analytic.chosen_candidate().label.as_str(), 1.0e9);
+    db.save(&dir).unwrap();
+    let loaded = Arc::new(CalibrationDb::load_for_host(&dir, "ci-host").unwrap());
+    let plan = EnginePlanner::new(PlannerPolicy::default())
+        .with_calibration(loaded)
+        .plan_layer(&spec, None);
+    assert_eq!(plan.chosen, EngineId::Dm, "measured db must flip the choice to DM");
+    let report = plan.report();
+    assert!(report.contains("meas(ns)"), "report must show the measured column:\n{report}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Missing database: an Io error, distinguishable from corruption, so
+/// callers (the `--calibrated` CLI path) warn and plan analytically.
+#[test]
+fn missing_db_yields_io_error_and_analytic_fallback() {
+    let dir = temp_dir("missing");
+    assert!(matches!(
+        CalibrationDb::load_for_host(&dir, "ci-host"),
+        Err(CalIoError::Io(_))
+    ));
+    // The fallback path: a planner without calibration attached scores
+    // analytically and still chooses.
+    let plan = EnginePlanner::new(PlannerPolicy::default()).plan_layer(&sample_spec(), None);
+    assert!(plan.chosen_candidate().measured.is_none());
+}
+
+/// Corrupt payloads (bit flip) and truncated files are rejected with
+/// `Corrupt`, never partially loaded.
+#[test]
+fn corrupt_and_truncated_dbs_are_rejected() {
+    let dir = temp_dir("corrupt");
+    let mut db = CalibrationDb::with_host("ci-host");
+    db.record(sample_spec().fingerprint(), "pcilt", 500.0);
+    db.save(&dir).unwrap();
+    let clean = std::fs::read(dir.join(CAL_BIN_FILE)).unwrap();
+
+    let mut flipped = clean.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x55;
+    std::fs::write(dir.join(CAL_BIN_FILE), &flipped).unwrap();
+    assert!(matches!(
+        CalibrationDb::load_for_host(&dir, "ci-host"),
+        Err(CalIoError::Corrupt(_))
+    ));
+
+    std::fs::write(dir.join(CAL_BIN_FILE), &clean[..clean.len() - 6]).unwrap();
+    assert!(matches!(
+        CalibrationDb::load_for_host(&dir, "ci-host"),
+        Err(CalIoError::Corrupt(_))
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A database measured on another machine is stale: its nanoseconds do
+/// not transfer, so loading for this host must refuse with `StaleHost`.
+#[test]
+fn stale_host_db_is_rejected_with_both_names() {
+    let dir = temp_dir("stale");
+    let mut db = CalibrationDb::with_host("build-farm-03");
+    db.record(sample_spec().fingerprint(), "pcilt", 500.0);
+    db.save(&dir).unwrap();
+    match CalibrationDb::load_for_host(&dir, "laptop") {
+        Err(CalIoError::StaleHost { stored, current }) => {
+            assert_eq!(stored, "build-farm-03");
+            assert_eq!(current, "laptop");
+        }
+        other => panic!("expected StaleHost, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Artifact accounting: the calibration files count bytes while present
+/// and purge cleanly (the `pcilt tables stats`/`purge` contract).
+#[test]
+fn artifact_bytes_track_save_and_purge() {
+    let dir = temp_dir("bytes");
+    assert_eq!(CalibrationDb::artifact_bytes(&dir), 0);
+    let mut db = CalibrationDb::with_host("ci-host");
+    db.record(sample_spec().fingerprint(), "pcilt", 500.0);
+    db.save(&dir).unwrap();
+    assert!(CalibrationDb::artifact_bytes(&dir) > 0);
+    assert!(CalibrationDb::purge(&dir).unwrap());
+    assert_eq!(CalibrationDb::artifact_bytes(&dir), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
