@@ -159,6 +159,8 @@ SUBCOMMANDS:
               --config FILE     TOML config (overrides defaults;
                                 [planner] tunes auto-selection, [tables]
                                 sets the table-store budget/persistence,
+                                palette-packing (pack) and per-model
+                                fairness caps (per_model_budget_mb),
                                 a [[models]] list serves N named models
                                 from per-model pools that share one
                                 table store — identical layers across
@@ -190,9 +192,12 @@ SUBCOMMANDS:
   tables    table-store lifecycle (content-addressed dedup + persistence)
             actions:
               stats     inspect a persisted cache (entries, bytes, kinds,
-                        calibration-db bytes and the artifacts total);
-                        with a [[models]] config, also predict the
-                        cross-model table sharing (dedup) of the fleet
+                        calibration-db bytes and the artifacts total) plus
+                        its tier residency: cold pageable bytes, and the
+                        packed-vs-logical bytes (pack ratio) a warm boot
+                        holds resident; with a [[models]] config, also
+                        predict the cross-model table sharing (dedup) and
+                        per-model budget usage of the fleet
               prebuild  build the planner-chosen tables for a model and
                         persist them (parallel workers)
               purge     delete the persisted cache and calibration db

@@ -101,6 +101,16 @@ pub struct TablesConfig {
     /// Load the cache at startup and save it at shutdown, so a restarted
     /// server performs zero redundant table builds.
     pub persist: bool,
+    /// Palette-pack table entries whose byte streams compress well
+    /// (ternary/low-cardinality weights). Packing is exact — gathers stay
+    /// bit-identical — so it is on by default; disable to trade memory for
+    /// the one-time decode on first gather.
+    pub pack: bool,
+    /// Per-model residency budget, in MiB. 0 = no per-model cap (only the
+    /// global `budget_mb` applies). With a cap, tables owned exclusively
+    /// by an over-budget model are demoted to the cold tier first, so one
+    /// table-hungry model cannot starve its co-tenants.
+    pub per_model_budget_mb: usize,
 }
 
 impl Default for TablesConfig {
@@ -109,6 +119,8 @@ impl Default for TablesConfig {
             budget_mb: 0,
             cache_dir: String::new(),
             persist: false,
+            pack: true,
+            per_model_budget_mb: 0,
         }
     }
 }
@@ -117,6 +129,11 @@ impl TablesConfig {
     /// Budget in bytes for `TableStore::set_budget_bytes`.
     pub fn budget_bytes(&self) -> u64 {
         self.budget_mb as u64 * 1024 * 1024
+    }
+
+    /// Per-model budget in bytes for `TableStore::set_model_budget_bytes`.
+    pub fn per_model_budget_bytes(&self) -> u64 {
+        self.per_model_budget_mb as u64 * 1024 * 1024
     }
 
     /// The cache directory, defaulting under the artifact dir.
@@ -155,6 +172,7 @@ impl PlannerConfig {
             cache_bytes: self.cache_kb as f64 * 1024.0,
             miss_penalty: PlannerPolicy::default().miss_penalty,
             amortize_invocations: self.amortize,
+            page_in_cost: PlannerPolicy::default().page_in_cost,
             allow_approximate: self.allow_approximate,
         }
     }
@@ -411,6 +429,18 @@ impl ServeConfig {
                     cfg.tables.persist = doc.get_bool(key).ok_or_else(|| {
                         ConfigError::Invalid("tables.persist must be a bool".into())
                     })?;
+                }
+                "tables.pack" => {
+                    cfg.tables.pack = doc.get_bool(key).ok_or_else(|| {
+                        ConfigError::Invalid("tables.pack must be a bool".into())
+                    })?;
+                }
+                "tables.per_model_budget_mb" => {
+                    // 0 is meaningful (= no per-model cap), so not pos_usize
+                    cfg.tables.per_model_budget_mb = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as usize,
+                        _ => return invalid("tables.per_model_budget_mb must be >= 0"),
+                    };
                 }
                 k if k.starts_with("network.") => {} // parsed by NetworkSpec
                 k if k.starts_with("models.") => {}  // parsed by parse_models below
@@ -870,6 +900,8 @@ allow_approximate = true
 budget_mb = 256
 cache_dir = "/var/cache/pcilt"
 persist = true
+pack = false
+per_model_budget_mb = 64
 "#,
         )
         .unwrap();
@@ -878,6 +910,9 @@ persist = true
         assert_eq!(cfg.tables.budget_bytes(), 256 * 1024 * 1024);
         assert_eq!(cfg.tables.cache_dir, "/var/cache/pcilt");
         assert!(cfg.tables.persist);
+        assert!(!cfg.tables.pack);
+        assert_eq!(cfg.tables.per_model_budget_mb, 64);
+        assert_eq!(cfg.tables.per_model_budget_bytes(), 64 * 1024 * 1024);
         assert_eq!(
             cfg.tables.resolve_cache_dir("artifacts"),
             std::path::PathBuf::from("/var/cache/pcilt")
@@ -889,6 +924,8 @@ persist = true
         let cfg = ServeConfig::default();
         assert_eq!(cfg.tables.budget_mb, 0, "default is unlimited");
         assert!(!cfg.tables.persist);
+        assert!(cfg.tables.pack, "packing is on by default (exact, free wins)");
+        assert_eq!(cfg.tables.per_model_budget_mb, 0, "no per-model cap by default");
         assert_eq!(
             cfg.tables.resolve_cache_dir("artifacts"),
             std::path::Path::new("artifacts").join("table_cache")
@@ -900,6 +937,10 @@ persist = true
         let doc = Document::parse("[tables]\nbudget_mb = -1").unwrap();
         assert!(ServeConfig::from_document(&doc).is_err());
         let doc = Document::parse("[tables]\npersist = 3").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[tables]\npack = 1").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[tables]\nper_model_budget_mb = -4").unwrap();
         assert!(ServeConfig::from_document(&doc).is_err());
     }
 

@@ -182,6 +182,9 @@ pub struct SharingRow {
     pub keys: u64,
     /// Keys already owned by models earlier in the list.
     pub shared: u64,
+    /// Resident bytes those keys pin in the store (shared keys counted
+    /// fully for each sharer; packed entries charge their packed size).
+    pub bytes: u64,
 }
 
 /// Predict cross-model table sharing for a `[[models]]` list without
@@ -206,10 +209,18 @@ pub fn plan_model_sharing(models: &[ModelConfig]) -> anyhow::Result<Vec<SharingR
         };
         let shared = keys.iter().filter(|&k| seen.contains(k)).count() as u64;
         seen.extend(keys.iter().copied());
+        // Ownership registration mirrors what a real boot does, so the
+        // throwaway store's per-model accounting matches serving's.
+        store.register_model_keys(&m.name, &keys);
+        let bytes = keys
+            .iter()
+            .filter_map(|&k| store.resident_bytes(k))
+            .sum::<f64>() as u64;
         out.push(SharingRow {
             model: m.name.clone(),
             keys: keys.len() as u64,
             shared,
+            bytes,
         });
     }
     Ok(out)
@@ -274,6 +285,9 @@ impl ModelRegistry {
                 store.note_cross_model_dedup(shared);
             }
             seen_keys.extend(table_keys.iter().copied());
+            // Register ownership so per-model budgets (`[tables]`
+            // per_model_budget_mb) can charge and evict fairly.
+            store.register_model_keys(&m.name, &table_keys);
 
             let spec = backend.for_model(m.name.clone()).with_store(store.clone());
             let server = Arc::new(Server::start(spec, opts)?);

@@ -94,8 +94,9 @@ fn dispatch(raw: &[String]) -> Result<()> {
 
 /// `pcilt bench-check` — the CI bench-regression gate. Compares every
 /// committed `--baselines` JSON against the same-named freshly measured
-/// file in `--current`, failing (exit 2) when any `*imgs_per_sec` figure
-/// drops more than `--tolerance` (default 0.10 = −10%).
+/// file in `--current`, failing (exit 2) when any `*imgs_per_sec` or
+/// `*models_per_budget` figure drops more than `--tolerance`
+/// (default 0.10 = −10%).
 fn cmd_bench_check(args: &Args) -> Result<()> {
     use pcilt::util::benchjson;
     let baselines = args.get_str("baselines", "benches/baselines").to_string();
@@ -128,7 +129,7 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
                 for row in &r.rows {
                     if row.regressed {
                         println!(
-                            "  {}: {:.1} -> {:.1} imgs/sec ({:.1}% drop, tolerance {:.0}%)",
+                            "  {}: {:.1} -> {:.1} ({:.1}% drop, tolerance {:.0}%)",
                             row.key,
                             row.baseline,
                             row.current,
@@ -174,6 +175,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // cache so a restarted server performs zero redundant table builds.
     let store = TableStore::process();
     store.set_budget_bytes(cfg.tables.budget_bytes());
+    store.set_pack(cfg.tables.pack);
+    store.set_model_budget_bytes(cfg.tables.per_model_budget_bytes());
     let cache_dir = cfg.tables.resolve_cache_dir(&cfg.artifact_dir);
     if cfg.tables.persist {
         match store.load(&cache_dir) {
@@ -186,6 +189,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // but must never block serving.
             Err(StoreIoError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => log::warn!("tables: ignoring unreadable cache: {e}"),
+        }
+        // Under a byte budget the warm load may have demoted entries back
+        // to the cold tier; pull the hottest predicted entries back in
+        // before workers start asking for them.
+        if cfg.tables.budget_mb > 0 {
+            let promoted = store.promote_hot(64);
+            if promoted > 0 {
+                log::info!("tables: promoted {promoted} predicted-hot cold entries");
+            }
         }
     }
 
@@ -385,6 +397,48 @@ fn cmd_tables(args: &Args) -> Result<()> {
                 println!("  calibration: none");
             }
             println!("  artifacts total: {}", fmt_bytes(total_bytes as f64));
+            // Tier residency: what a server booting against this cache
+            // sees. Attaching indexes the cache as a pageable cold tier;
+            // loading it hot (with the config's pack setting) measures
+            // how much packing compresses the resident copies.
+            let probe = TableStore::new();
+            if let Ok(n) = probe.attach_cold(&cache_dir) {
+                let cold = probe.stats();
+                println!("\ntier residency (config pack={}):", cfg.tables.pack);
+                println!(
+                    "  cold: {} entries ({}) pageable from {}",
+                    n,
+                    fmt_bytes(cold.cold_bytes),
+                    cache_dir.display()
+                );
+                let hot = TableStore::new();
+                hot.set_pack(cfg.tables.pack);
+                if hot.load(&cache_dir).is_ok() {
+                    let st = hot.stats();
+                    println!(
+                        "  hot when warmed: {} entries ({} resident)",
+                        st.entries,
+                        fmt_bytes(st.bytes)
+                    );
+                    if st.packed_entries > 0 {
+                        println!(
+                            "  packed: {} entries, {} resident <- {} logical \
+                             (ratio {:.2}x), {} page-ins",
+                            st.packed_entries,
+                            fmt_bytes(st.packed_bytes),
+                            fmt_bytes(st.packed_logical_bytes),
+                            if st.packed_bytes > 0.0 {
+                                st.packed_logical_bytes / st.packed_bytes
+                            } else {
+                                1.0
+                            },
+                            st.page_ins,
+                        );
+                    } else {
+                        println!("  packed: none (streams below the profitability bar)");
+                    }
+                }
+            }
             // With a [[models]] config, also predict cross-model sharing:
             // how many table keys the fleet dedups to single copies.
             if !cfg.models.is_empty() {
@@ -398,11 +452,22 @@ fn cmd_tables(args: &Args) -> Result<()> {
                     Ok(rows) => {
                         let mut total = 0u64;
                         let mut shared = 0u64;
+                        let budget = cfg.tables.per_model_budget_bytes();
                         for r in &rows {
                             total += r.keys;
                             shared += r.shared;
+                            let usage = if budget > 0 {
+                                format!(
+                                    ", {} of {} per-model budget ({:.0}%)",
+                                    fmt_bytes(r.bytes as f64),
+                                    fmt_bytes(budget as f64),
+                                    r.bytes as f64 * 100.0 / budget as f64
+                                )
+                            } else {
+                                format!(", {} resident", fmt_bytes(r.bytes as f64))
+                            };
                             println!(
-                                "  {:<16} {} table keys, {} shared with earlier models",
+                                "  {:<16} {} table keys, {} shared with earlier models{usage}",
                                 r.model, r.keys, r.shared
                             );
                         }
@@ -464,6 +529,7 @@ fn cmd_tables_prebuild(
         }
     };
     let store = Arc::new(TableStore::with_budget(budget_mb as u64 * 1024 * 1024));
+    store.set_pack(cfg.tables.pack);
     // Incremental: keep whatever an earlier prebuild already persisted.
     match store.load(cache_dir) {
         Ok(n) if n > 0 => println!("loaded {n} existing cache entries"),

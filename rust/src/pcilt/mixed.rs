@@ -238,7 +238,11 @@ impl MixedEngine {
         let handle = store.get_or_build(key, || {
             TableArtifact::Mixed(MixedTables::build(weights, widths, table_bits, f))
         });
-        MixedEngine { handle, geom }
+        let engine = MixedEngine { handle, geom };
+        // The first artifact borrow may decode a packed entry after its
+        // insert-time budget check; settle up.
+        store.rebalance();
+        engine
     }
 
     /// The borrowed table set.

@@ -15,6 +15,7 @@ pub mod layout;
 pub mod lookup;
 pub mod memory;
 pub mod mixed;
+pub mod packed;
 pub mod parallel;
 pub mod planner;
 pub mod calibration;
@@ -38,8 +39,10 @@ pub use parallel::conv_parallel;
 pub use planner::{Candidate, EngineId, EnginePlanner, LayerPlan, LayerSpec, PlannerPolicy};
 pub use segment::{RowSegmentEngine, RowSegmentTables, SegmentEngine, SegmentTables};
 pub use shared::SharedEngine;
+pub use packed::PackedBytes;
 pub use store::{
-    PrebuildRequest, TableArtifact, TableHandle, TableKey, TableStore, TableStoreStats,
+    PackedTable, PrebuildRequest, StoredRepr, TableArtifact, TableHandle, TableKey, TableStore,
+    TableStoreStats,
 };
 pub use table::{LayerTables, Pcilt};
 pub use tile::{scalar_walk, set_walk_mode, WalkMode, TILE_W};

@@ -1,0 +1,256 @@
+//! Exact palette/bit-packing for table memory (`pcilt::store`'s
+//! `PackedTable` repr).
+//!
+//! A lookup table's entries are 4-byte words (i32 accumulators, u32
+//! pointers, or four u8 requant codes), and real tables repeat values
+//! heavily: a layer's products are drawn from `|weights| x card` distinct
+//! accumulators, so a multi-megabyte dense table often holds a few hundred
+//! distinct words. [`PackedBytes`] palette-compresses any such byte stream
+//! *exactly*: the distinct 4-byte words become a sorted palette and every
+//! word is replaced by a bit-packed index of `ceil(log2(distinct))` bits
+//! (≤16 distinct values → 4-bit indices, the TabConv packing regime).
+//! Unpacking reproduces the input byte-for-byte — there is no lossy mode —
+//! so a packed table decodes bit-identical to its flat form.
+//!
+//! Packing is *optional* per stream: [`PackedBytes::pack`] returns `None`
+//! when the palette would not pay for itself (high-cardinality random
+//! tables), and callers keep the flat representation. The bit-stream
+//! layout follows `util::bitpack` (LSB-first codes, word-straddling), with
+//! u16 indices instead of u8 because palettes run past 256 entries.
+
+use std::collections::BTreeMap;
+
+/// Palette cap: past 2^16 distinct words a 4-byte word needs >16 index
+/// bits and the packing cannot reach the profitability bar anyway.
+const MAX_PALETTE: usize = 1 << 16;
+
+/// Minimum words before packing is worth considering (tiny tables are
+/// cheaper flat than palette + headers).
+const MIN_WORDS: usize = 64;
+
+/// Required saving: packed resident bytes must be at most this fraction of
+/// the flat bytes (exact compression, but only when it pays).
+const PROFIT_NUM: u64 = 3;
+const PROFIT_DEN: u64 = 4;
+
+/// An exactly palette/bit-packed byte stream. Immutable once built;
+/// [`PackedBytes::unpack`] is the only reader.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedBytes {
+    /// Distinct 4-byte little-endian words, sorted ascending (so packing
+    /// is deterministic: identical streams pack to identical bytes).
+    palette: Vec<u32>,
+    /// Bits per index: `max(1, ceil(log2(palette.len())))`, ≤ 16.
+    code_bits: u32,
+    /// `words * code_bits` bits, LSB-first, straddling u64 boundaries.
+    codes: Vec<u64>,
+    /// Whole 4-byte words packed.
+    words: usize,
+    /// Input bytes past the last whole word (`len % 4`), kept verbatim.
+    tail: Vec<u8>,
+}
+
+impl PackedBytes {
+    /// Pack `bytes`, or `None` when the palette would not pay (too few
+    /// words, too many distinct words, or savings under 25%).
+    pub fn pack(bytes: &[u8]) -> Option<PackedBytes> {
+        let words = bytes.len() / 4;
+        if words < MIN_WORDS {
+            return None;
+        }
+        // Palette: distinct word -> dense index, sorted for determinism.
+        let mut distinct: BTreeMap<u32, u16> = BTreeMap::new();
+        for c in bytes[..words * 4].chunks_exact(4) {
+            let w = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let next = distinct.len();
+            if !distinct.contains_key(&w) {
+                if next >= MAX_PALETTE {
+                    return None;
+                }
+                distinct.insert(w, 0);
+            }
+        }
+        let palette: Vec<u32> = distinct.keys().copied().collect();
+        for (i, (_, idx)) in distinct.iter_mut().enumerate() {
+            *idx = i as u16;
+        }
+        let code_bits = bits_for(palette.len());
+        let packed = resident_estimate(palette.len(), words, code_bits, bytes.len() % 4);
+        if packed * PROFIT_DEN > bytes.len() as u64 * PROFIT_NUM {
+            return None;
+        }
+        let mut codes = Vec::with_capacity((words * code_bits as usize).div_ceil(64));
+        let mut bitpos = 0usize;
+        for c in bytes[..words * 4].chunks_exact(4) {
+            let w = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let idx = distinct[&w] as u64;
+            push_bits(&mut codes, &mut bitpos, idx, code_bits);
+        }
+        Some(PackedBytes {
+            palette,
+            code_bits,
+            codes,
+            words,
+            tail: bytes[words * 4..].to_vec(),
+        })
+    }
+
+    /// Reconstruct the original byte stream exactly.
+    pub fn unpack(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words * 4 + self.tail.len());
+        for i in 0..self.words {
+            let idx = read_bits(&self.codes, i, self.code_bits) as usize;
+            out.extend_from_slice(&self.palette[idx].to_le_bytes());
+        }
+        out.extend_from_slice(&self.tail);
+        out
+    }
+
+    /// Original (unpacked) byte length.
+    pub fn unpacked_len(&self) -> usize {
+        self.words * 4 + self.tail.len()
+    }
+
+    /// Bytes this packed form holds resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.palette.len() * 4 + self.codes.len() * 8 + self.tail.len()
+    }
+
+    /// Index bits per packed word.
+    pub fn code_bits(&self) -> u32 {
+        self.code_bits
+    }
+
+    /// Palette size (distinct 4-byte words).
+    pub fn palette_len(&self) -> usize {
+        self.palette.len()
+    }
+}
+
+/// Bits needed to index `n` palette entries (≥1 so zero-width reads never
+/// exist).
+fn bits_for(n: usize) -> u32 {
+    let mut bits = 1;
+    while (1usize << bits) < n {
+        bits += 1;
+    }
+    bits
+}
+
+/// Predicted resident bytes before committing to an encode.
+fn resident_estimate(palette: usize, words: usize, code_bits: u32, tail: usize) -> u64 {
+    let code_words = (words * code_bits as usize).div_ceil(64);
+    (palette * 4 + code_words * 8 + tail) as u64
+}
+
+/// Append one `bits`-wide code at `*bitpos`, LSB-first, growing the stream
+/// and straddling u64 boundaries as needed (`util::bitpack` idiom).
+fn push_bits(stream: &mut Vec<u64>, bitpos: &mut usize, code: u64, bits: u32) {
+    let word = *bitpos / 64;
+    let off = *bitpos % 64;
+    if word == stream.len() {
+        stream.push(0);
+    }
+    stream[word] |= code << off;
+    let room = 64 - off;
+    if (bits as usize) > room {
+        stream.push(code >> room);
+    }
+    *bitpos += bits as usize;
+}
+
+/// Read the `i`-th `bits`-wide code from the stream.
+fn read_bits(stream: &[u64], i: usize, bits: u32) -> u32 {
+    let bitpos = i * bits as usize;
+    let word = bitpos / 64;
+    let off = bitpos % 64;
+    let mut v = stream[word] >> off;
+    if off + bits as usize > 64 {
+        v |= stream[word + 1] << (64 - off);
+    }
+    (v & ((1u64 << bits) - 1)) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::forall;
+
+    fn word_stream(values: &[i32]) -> Vec<u8> {
+        values.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn roundtrip_small_palette_is_exact() {
+        let mut rng = Rng::new(1);
+        let alphabet = [-9i32, -3, 0, 4, 1_000_000, i32::MIN, i32::MAX];
+        let values: Vec<i32> = (0..5000).map(|_| *rng.choose(&alphabet)).collect();
+        let bytes = word_stream(&values);
+        let packed = PackedBytes::pack(&bytes).expect("7 distinct words must pack");
+        assert_eq!(packed.code_bits(), 3);
+        assert_eq!(packed.palette_len(), alphabet.len());
+        assert!(packed.resident_bytes() * 4 < bytes.len());
+        assert_eq!(packed.unpack(), bytes, "packing must be exact");
+        assert_eq!(packed.unpacked_len(), bytes.len());
+    }
+
+    #[test]
+    fn sixteen_distinct_values_pack_to_4_bit_codes() {
+        let values: Vec<i32> = (0..4096).map(|i| (i % 16) * 7 - 40).collect();
+        let packed = PackedBytes::pack(&word_stream(&values)).unwrap();
+        assert_eq!(packed.code_bits(), 4);
+        // 4096 words * 4 bits = 2 KiB of codes + 64 B palette vs 16 KiB flat.
+        assert!(packed.resident_bytes() < 4096 * 4 / 7);
+    }
+
+    #[test]
+    fn tail_bytes_survive() {
+        let mut bytes = word_stream(&vec![42i32; 300]);
+        bytes.extend_from_slice(&[7, 8, 9]); // not a whole word
+        let packed = PackedBytes::pack(&bytes).unwrap();
+        assert_eq!(packed.unpack(), bytes);
+    }
+
+    #[test]
+    fn unprofitable_streams_stay_flat() {
+        // Nearly all-distinct words: palette ~= data, no saving.
+        let mut rng = Rng::new(2);
+        let values: Vec<i32> = (0..512).map(|_| rng.next_u64() as i32).collect();
+        assert!(PackedBytes::pack(&word_stream(&values)).is_none());
+        // Too short to matter.
+        assert!(PackedBytes::pack(&word_stream(&[5i32; MIN_WORDS - 1])).is_none());
+        // Empty.
+        assert!(PackedBytes::pack(&[]).is_none());
+    }
+
+    #[test]
+    fn word_straddling_codes_roundtrip() {
+        // 5-bit codes (17..=32 distinct) force codes across u64 boundaries.
+        forall("straddled codes roundtrip", 40, |g| {
+            let distinct = g.i64(17, 32) as i32;
+            let n = g.i64(100, 2000) as usize;
+            let seed = g.i64(0, i64::MAX / 2) as u64;
+            let mut rng = Rng::new(seed);
+            let values: Vec<i32> =
+                (0..n).map(|_| (rng.next_u64() % distinct as u64) as i32 * 13 - 7).collect();
+            let bytes = word_stream(&values);
+            match PackedBytes::pack(&bytes) {
+                Some(p) => {
+                    assert_eq!(p.code_bits(), 5);
+                    assert_eq!(p.unpack(), bytes);
+                }
+                None => panic!("≤32 distinct words over {n} entries must pack"),
+            }
+        });
+    }
+
+    #[test]
+    fn packing_is_deterministic() {
+        let values: Vec<i32> = (0..1000).map(|i| (i % 11) - 5).collect();
+        let bytes = word_stream(&values);
+        let a = PackedBytes::pack(&bytes).unwrap();
+        let b = PackedBytes::pack(&bytes).unwrap();
+        assert_eq!(a, b);
+    }
+}

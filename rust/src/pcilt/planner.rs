@@ -274,6 +274,9 @@ pub struct Candidate {
     /// Tables already resident in the planner's store (post-dedup: this
     /// candidate costs no new build and no new bytes).
     pub cached: bool,
+    /// Tables not resident but pageable from the store's cold tier —
+    /// priced at amortized page-in cost instead of a full rebuild.
+    pub cold: bool,
     /// Effective cost the sort ranks by (lower is better): the analytic
     /// model score, unless a measured timing overrode it.
     pub score: f64,
@@ -301,6 +304,11 @@ pub struct PlannerPolicy {
     /// How many invocations of `spec.input` one table build amortizes over
     /// (a serving deployment uses a large value; a one-shot run uses 1).
     pub amortize_invocations: f64,
+    /// Per-byte cost of paging a cold table in from `tables.bin`,
+    /// amortized like builds. Far below rebuild cost (a sequential read
+    /// and parse vs `card` conv-fn evaluations per entry) but not free —
+    /// it keeps a resident candidate preferred over a cold one.
+    pub page_in_cost: f64,
     /// Let the planner select float-datapath baselines (Winograd/FFT).
     pub allow_approximate: bool,
 }
@@ -314,6 +322,7 @@ impl Default for PlannerPolicy {
             cache_bytes: 512.0 * 1024.0,
             miss_penalty: 8.0,
             amortize_invocations: 100.0,
+            page_in_cost: 0.1,
             allow_approximate: false,
         }
     }
@@ -407,6 +416,8 @@ impl LayerPlan {
             };
             if c.cached {
                 status = format!("{} (cached)", status).trim().to_string();
+            } else if c.cold {
+                status = format!("{} (cold)", status).trim().to_string();
             }
             if measured_mode {
                 let (meas, delta) = match c.measured {
@@ -693,14 +704,19 @@ pub fn registry(
                     ops: OpCounts,
                     table_bytes: u64,
                     build_evals: u64| {
-        let cached = match (weights, store) {
-            (Some(w), Some(st)) if infeasible.is_none() => {
-                id.table_key(w, spec).is_some_and(|k| st.contains(k))
-            }
-            _ => false,
+        let (cached, cold) = match (weights, store) {
+            (Some(w), Some(st)) if infeasible.is_none() => match id.table_key(w, spec) {
+                Some(k) => (st.contains(k), st.cold_contains(k)),
+                None => (false, false),
+            },
+            _ => (false, false),
         };
-        let build_evals = if cached { 0 } else { build_evals };
-        let too_big = !cached && infeasible.is_none() && table_bytes > TABLE_BYTES_CEILING;
+        // Resident tables cost nothing to obtain; cold tables cost an
+        // amortized page-in (priced below) instead of a rebuild.
+        let build_evals = if cached || cold { 0 } else { build_evals };
+        // The byte ceiling guards against *creating* absurd tables; memory
+        // already paid for (resident) or persisted (pageable) is exempt.
+        let too_big = !cached && !cold && infeasible.is_none() && table_bytes > TABLE_BYTES_CEILING;
         let infeasible = if too_big {
             Some(format!(
                 "tables would need {:.1} GiB",
@@ -709,7 +725,11 @@ pub fn registry(
         } else {
             infeasible
         };
-        let analytic = policy.score(ops, table_bytes, build_evals);
+        let mut analytic = policy.score(ops, table_bytes, build_evals);
+        if cold {
+            analytic +=
+                table_bytes as f64 * policy.page_in_cost / policy.amortize_invocations.max(1.0);
+        }
         out.push(Candidate {
             id,
             label: id.label(),
@@ -719,6 +739,7 @@ pub fn registry(
             table_bytes,
             build_evals,
             cached,
+            cold,
             score: analytic,
             analytic,
             measured: None,
@@ -1230,6 +1251,42 @@ mod tests {
         assert_eq!(warm_c.build_evals, 0);
         assert!(warm_c.score < cold_c.score, "cached build must score lower");
         assert!(warm.report().contains("(cached)"));
+    }
+
+    #[test]
+    fn cold_tier_prices_between_resident_and_rebuild() {
+        let dir = std::env::temp_dir().join("pcilt_planner_cold_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(29);
+        let w = Tensor4::random_weights(Shape4::new(4, 3, 3, 2), 8, &mut rng);
+        let s = spec(16, 16, 2, 4, 3, 2);
+
+        // Never built anywhere: full build cost.
+        let warm_store = Arc::new(TableStore::new());
+        let planner = EnginePlanner::with_store(PlannerPolicy::default(), warm_store.clone());
+        let fresh_c = planner.plan_layer(&s, Some(&w)).candidate(EngineId::Pcilt).unwrap().clone();
+        assert!(!fresh_c.cached && !fresh_c.cold);
+        assert!(fresh_c.build_evals > 0);
+
+        // Build + persist, then attach the cache to an empty store: the
+        // key is pageable from the cold tier, not resident.
+        EngineId::Pcilt.build_with_store(&w, &s, &warm_store).unwrap();
+        warm_store.save(&dir).unwrap();
+        let cold_store = Arc::new(TableStore::new());
+        assert!(cold_store.attach_cold(&dir).unwrap() > 0);
+        let cold_plan = EnginePlanner::with_store(PlannerPolicy::default(), cold_store.clone())
+            .plan_layer(&s, Some(&w));
+        let cold_c = cold_plan.candidate(EngineId::Pcilt).unwrap().clone();
+        assert!(cold_c.cold && !cold_c.cached, "attached key must price as cold");
+        assert_eq!(cold_c.build_evals, 0, "page-in replaces the build");
+        assert!(cold_plan.report().contains("(cold)"));
+
+        // Resident in the warm store: reuse is free.
+        let warm_c = planner.plan_layer(&s, Some(&w)).candidate(EngineId::Pcilt).unwrap().clone();
+        assert!(warm_c.cached);
+        assert!(warm_c.score < cold_c.score, "a page-in is not free");
+        assert!(cold_c.score < fresh_c.score, "a page-in must beat a rebuild");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

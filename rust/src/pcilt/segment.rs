@@ -232,7 +232,11 @@ impl SegmentEngine {
         let handle = store.get_or_build(key, || {
             TableArtifact::Segment(SegmentTables::build(weights, act_bits, seg_n, f))
         });
-        Self::from_handle(handle, geom)
+        let engine = Self::from_handle(handle, geom);
+        // from_handle's first artifact borrow may decode a packed entry
+        // after its insert-time budget check; settle up.
+        store.rebalance();
+        engine
     }
 
     /// Wrap a segment-table handle (store-borrowed or private).
@@ -801,7 +805,11 @@ impl RowSegmentEngine {
         let handle = store.get_or_build(key, || {
             TableArtifact::RowSegment(RowSegmentTables::build(weights, act_bits, seg_n, f))
         });
-        Self::from_handle(handle, geom)
+        let engine = Self::from_handle(handle, geom);
+        // from_handle's first artifact borrow may decode a packed entry
+        // after its insert-time budget check; settle up.
+        store.rebalance();
+        engine
     }
 
     /// Wrap a row-segment-table handle (store-borrowed or private).

@@ -317,7 +317,11 @@ impl SharedEngine {
         let handle = store.get_or_build(key, || {
             TableArtifact::Shared(SharedTables::build(weights, act_bits, f))
         });
-        SharedEngine { handle, geom }
+        let engine = SharedEngine { handle, geom };
+        // The first artifact borrow may decode a packed entry after its
+        // insert-time budget check; settle up.
+        store.rebalance();
+        engine
     }
 
     pub fn tables(&self) -> &SharedTables {

@@ -24,7 +24,26 @@
 //!   `runtime::artifact` bundles, so a restarted server performs **zero**
 //!   redundant table builds. Loaded entries are bit-identical to a fresh
 //!   build (asserted in `tests/store_stack.rs`).
-//! - **Observability.** Hit/miss/build/load/eviction counters surface
+//! - **Exact compression.** Entries whose serialized words repeat (real
+//!   tables draw from a small product alphabet) are stored as a
+//!   [`PackedTable`] — palette + bit-packed indices via `pcilt::packed` —
+//!   and decode on first gather behind the same [`TableHandle`] borrow.
+//!   Packing is exact, so a packed entry is bit-identical to its flat
+//!   build; unprofitable entries (high-cardinality random tables) stay
+//!   flat. Budget accounting charges the packed (actual) bytes.
+//! - **Hot/cold tiering.** A persisted `tables.bin` doubles as the cold
+//!   tier: `save`/`load`/[`TableStore::attach_cold`] index it by offset,
+//!   budget-evicted entries *demote* (their bytes drop but the cold index
+//!   remembers them) and a later `get_or_build` *pages the entry back in*
+//!   from disk — checksummed, single-flight, falling back to a rebuild if
+//!   the file is corrupt — instead of re-enumerating the table from
+//!   weights. Before evicting whole entries the store first *sheds*
+//!   derived views (decoded packed artifacts, channels-last mirrors) from
+//!   idle entries. [`TableStore::promote_hot`] pre-pages the most-hit cold
+//!   entries. Per-model byte budgets (fairness across tenants) evict only
+//!   entries owned exclusively by over-budget models.
+//! - **Observability.** Hit/miss/build/load/eviction counters — plus
+//!   packed/cold residency, page-in, demotion and shed counters — surface
 //!   through [`TableStoreStats`] and `coordinator::metrics`.
 
 use std::collections::BTreeMap;
@@ -36,6 +55,7 @@ use crate::tensor::Tensor4;
 use super::custom_fn::ConvFunc;
 use super::fused::RequantTable;
 use super::mixed::{ChannelWidths, MixedTables};
+use super::packed::PackedBytes;
 use super::segment::{RowSegmentTables, SegmentTables};
 use super::shared::{SharedTables, ValueIndirection};
 use super::table::LayerTables;
@@ -260,11 +280,99 @@ impl TableArtifact {
     }
 }
 
-/// A stored entry: the artifact plus lazily-derived views shared by every
-/// borrowing engine (the channels-last mirror for dense tables).
+/// A palette/bit-packed table artifact: the artifact's canonical
+/// serialized bytes (exactly what [`TableStore::save`] writes) compressed
+/// by `pcilt::packed`. Packing at the byte-stream level keeps one packer
+/// for every artifact kind, and the pinned serde roundtrip guarantees
+/// `unpack` reproduces the artifact bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTable {
+    kind: u8,
+    blob: PackedBytes,
+    logical: f64,
+}
+
+impl PackedTable {
+    /// Pack an artifact, or `None` when packing would not save ≥25%.
+    pub fn pack(artifact: &TableArtifact) -> Option<PackedTable> {
+        let mut w = ByteWriter::new();
+        artifact.write_to(&mut w);
+        let blob = PackedBytes::pack(&w.buf)?;
+        Some(PackedTable {
+            kind: artifact.kind(),
+            blob,
+            logical: artifact.bytes(),
+        })
+    }
+
+    /// Decode back to the exact artifact that was packed.
+    pub fn unpack(&self) -> Result<TableArtifact, String> {
+        let bytes = self.blob.unpack();
+        let mut r = ByteReader::new(&bytes);
+        let a = TableArtifact::read_from(self.kind, &mut r)?;
+        if r.remaining() != 0 {
+            return Err(format!("{} trailing bytes after packed artifact", r.remaining()));
+        }
+        Ok(a)
+    }
+
+    /// Canonical serialized bytes (what `write_to` on the flat artifact
+    /// produces) — lets `save` persist a packed entry without decoding it.
+    fn serialized(&self) -> Vec<u8> {
+        self.blob.unpack()
+    }
+
+    /// Resident bytes of the packed form.
+    pub fn bytes(&self) -> f64 {
+        self.blob.resident_bytes() as f64
+    }
+
+    /// Bytes the artifact would hold resident flat.
+    pub fn logical_bytes(&self) -> f64 {
+        self.logical
+    }
+}
+
+/// How an entry is held resident: flat (the artifact itself) or packed
+/// (palette-compressed serialized bytes, decoded on first gather).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoredRepr {
+    Flat(TableArtifact),
+    Packed(PackedTable),
+}
+
+impl StoredRepr {
+    fn bytes(&self) -> f64 {
+        match self {
+            StoredRepr::Flat(a) => a.bytes(),
+            StoredRepr::Packed(p) => p.bytes(),
+        }
+    }
+
+    fn logical_bytes(&self) -> f64 {
+        match self {
+            StoredRepr::Flat(a) => a.bytes(),
+            StoredRepr::Packed(p) => p.logical_bytes(),
+        }
+    }
+
+    fn kind(&self) -> u8 {
+        match self {
+            StoredRepr::Flat(a) => a.kind(),
+            StoredRepr::Packed(p) => p.kind,
+        }
+    }
+}
+
+/// A stored entry: the stored representation plus lazily-derived views
+/// shared by every borrowing engine (the decoded artifact for packed
+/// entries, the channels-last mirror for dense tables). The repr is
+/// `Arc`-shared so the store can shed an idle entry's derived views
+/// (fresh `StoreEntry`, same repr) without copying table bytes.
 pub struct StoreEntry {
     key: TableKey,
-    artifact: TableArtifact,
+    stored: Arc<StoredRepr>,
+    decoded: OnceLock<TableArtifact>,
     cl: OnceLock<Arc<Vec<i32>>>,
 }
 
@@ -281,7 +389,8 @@ impl TableHandle {
     pub fn private(artifact: TableArtifact) -> TableHandle {
         TableHandle(Arc::new(StoreEntry {
             key: TableKey(0),
-            artifact,
+            stored: Arc::new(StoredRepr::Flat(artifact)),
+            decoded: OnceLock::new(),
             cl: OnceLock::new(),
         }))
     }
@@ -291,55 +400,73 @@ impl TableHandle {
         self.0.key
     }
 
+    /// The flat artifact — the single decode-on-gather seam. Flat entries
+    /// borrow directly; packed entries decode once into the entry's
+    /// `decoded` cache on first access (every later borrow, from any
+    /// engine sharing the entry, is free). Decode failure panics: the
+    /// blob was packed in-process from a valid artifact, so a failure is
+    /// a programming error, not an I/O condition.
     pub fn artifact(&self) -> &TableArtifact {
-        &self.0.artifact
+        match &*self.0.stored {
+            StoredRepr::Flat(a) => a,
+            StoredRepr::Packed(p) => self.0.decoded.get_or_init(|| {
+                p.unpack().unwrap_or_else(|e| {
+                    panic!("packed table {:032x} failed to decode: {e}", self.0.key.0)
+                })
+            }),
+        }
+    }
+
+    /// Whether the entry is held palette-packed.
+    pub fn is_packed(&self) -> bool {
+        matches!(&*self.0.stored, StoredRepr::Packed(_))
     }
 
     /// Dense tables or panic — engines know which kind they stored.
     pub fn dense(&self) -> &LayerTables {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::Dense(t) => t,
             other => panic!("handle holds {} tables, not dense", other.kind_name()),
         }
     }
 
     pub fn shared(&self) -> &SharedTables {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::Shared(t) => t,
             other => panic!("handle holds {} tables, not shared", other.kind_name()),
         }
     }
 
     pub fn value_indirection(&self) -> &ValueIndirection {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::Value(t) => t,
             other => panic!("handle holds {} tables, not value", other.kind_name()),
         }
     }
 
     pub fn segment(&self) -> &SegmentTables {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::Segment(t) => t,
             other => panic!("handle holds {} tables, not segment", other.kind_name()),
         }
     }
 
     pub fn row_segment(&self) -> &RowSegmentTables {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::RowSegment(t) => t,
             other => panic!("handle holds {} tables, not segment-row", other.kind_name()),
         }
     }
 
     pub fn mixed(&self) -> &MixedTables {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::Mixed(t) => t,
             other => panic!("handle holds {} tables, not mixed", other.kind_name()),
         }
     }
 
     pub fn requant(&self) -> &RequantTable {
-        match &self.0.artifact {
+        match self.artifact() {
             TableArtifact::Requant(t) => t,
             other => panic!("handle holds {} tables, not requant", other.kind_name()),
         }
@@ -355,16 +482,64 @@ impl TableHandle {
             .clone()
     }
 
-    /// Resident bytes including derived views built so far.
+    /// Resident bytes including derived views built so far (the decoded
+    /// artifact of a packed entry, the channels-last mirror). This is what
+    /// budget eviction charges: actual bytes, not logical size.
     pub fn bytes(&self) -> f64 {
+        self.0.stored.bytes() + self.shed_bytes()
+    }
+
+    /// Bytes the artifact costs flat (regardless of current repr).
+    pub fn logical_bytes(&self) -> f64 {
+        self.0.stored.logical_bytes()
+    }
+
+    /// Bytes held by derived views alone — what a shed pass reclaims
+    /// without evicting the entry.
+    pub fn shed_bytes(&self) -> f64 {
+        let decoded = match &*self.0.stored {
+            StoredRepr::Packed(_) => {
+                self.0.decoded.get().map(|a| a.bytes()).unwrap_or(0.0)
+            }
+            StoredRepr::Flat(_) => 0.0,
+        };
         let cl = self.0.cl.get().map(|c| c.len() * 4).unwrap_or(0);
-        self.0.artifact.bytes() + cl as f64
+        decoded + cl as f64
     }
 
     /// Number of live handles (the store's own counts as one).
     pub fn ref_count(&self) -> usize {
         Arc::strong_count(&self.0)
     }
+}
+
+/// Build a store entry, packing when enabled and profitable. `seed_hot`
+/// pre-seeds the decoded cache with the artifact we already have in hand
+/// (fresh builds are about to be gathered from; loads and page-ins stay
+/// packed-only until first use).
+fn make_entry(key: TableKey, artifact: TableArtifact, pack: bool, seed_hot: bool) -> TableHandle {
+    let packed = if pack { PackedTable::pack(&artifact) } else { None };
+    let entry = match packed {
+        Some(p) => {
+            let decoded = OnceLock::new();
+            if seed_hot {
+                let _ = decoded.set(artifact);
+            }
+            StoreEntry {
+                key,
+                stored: Arc::new(StoredRepr::Packed(p)),
+                decoded,
+                cl: OnceLock::new(),
+            }
+        }
+        None => StoreEntry {
+            key,
+            stored: Arc::new(StoredRepr::Flat(artifact)),
+            decoded: OnceLock::new(),
+            cl: OnceLock::new(),
+        },
+    };
+    TableHandle(Arc::new(entry))
 }
 
 // ---------------------------------------------------------------------------
@@ -396,6 +571,29 @@ pub struct TableStoreStats {
     /// registered — the fleet-level dedup the multi-model registry
     /// accounts (each shared key is one table copy NOT duplicated).
     pub cross_model_dedup: u64,
+    /// Resident entries held palette-packed.
+    pub packed_entries: u64,
+    /// Actual resident bytes of the packed entries (palette + codes).
+    pub packed_bytes: f64,
+    /// Bytes those packed entries would cost flat (ratio = pack win).
+    pub packed_logical_bytes: f64,
+    /// Cold-indexed entries not currently resident (pageable from disk).
+    pub cold_entries: u64,
+    /// Serialized bytes of the non-resident cold entries.
+    pub cold_bytes: f64,
+    /// Entries restored from the cold tier on demand (miss) or promotion.
+    pub page_ins: u64,
+    /// Cold reads rejected (truncated/corrupt/IO) — each fell back to a
+    /// rebuild from weights.
+    pub page_in_errors: u64,
+    /// Evictions of entries the cold index still covers (demotions: the
+    /// bytes dropped but the entry can page back in instead of rebuild).
+    pub demotions: u64,
+    /// Shed passes: derived views (decoded packed artifacts, channels-last
+    /// mirrors) reclaimed from idle entries before any eviction.
+    pub sheds: u64,
+    /// Per-model byte budget (0 = no per-model fairness cap).
+    pub model_budget_bytes: u64,
 }
 
 impl TableStoreStats {
@@ -403,15 +601,25 @@ impl TableStoreStats {
     pub fn report(&self) -> String {
         use crate::util::stats::fmt_bytes;
         format!(
-            "tables: {} entries ({}), {} hits, {} misses, {} builds, {} loaded, {} evicted, \
-             {} cross-model dedups",
+            "tables: {} entries ({}), {} packed ({} <- {}), {} cold ({}), {} hits, \
+             {} misses, {} builds, {} loaded, {} paged-in ({} errors), {} evicted \
+             ({} demotions, {} sheds), {} cross-model dedups",
             self.entries,
             fmt_bytes(self.bytes),
+            self.packed_entries,
+            fmt_bytes(self.packed_bytes),
+            fmt_bytes(self.packed_logical_bytes),
+            self.cold_entries,
+            fmt_bytes(self.cold_bytes),
             self.hits,
             self.misses,
             self.builds,
             self.loads,
+            self.page_ins,
+            self.page_in_errors,
             self.evictions,
+            self.demotions,
+            self.sheds,
             self.cross_model_dedup,
         )
     }
@@ -420,6 +628,21 @@ impl TableStoreStats {
 struct Slot {
     handle: TableHandle,
     last_used: u64,
+    /// Hits this residency (folded into the cold index on demotion so
+    /// `promote_hot` can rank by observed demand).
+    hits: u64,
+}
+
+/// One pageable entry in the cold tier: where its serialized body lives
+/// inside `tables.bin`, plus an FNV-1a checksum of that body so a
+/// truncated or corrupt file is detected per entry at page-in time.
+#[derive(Debug, Clone)]
+struct ColdEntry {
+    offset: u64,
+    len: u64,
+    kind: u8,
+    sum: u64,
+    hits: u64,
 }
 
 struct Inner {
@@ -433,6 +656,20 @@ struct Inner {
     cross_model_dedup: u64,
     peak_bytes: f64,
     budget_bytes: u64,
+    /// Palette-pack profitable entries on insert.
+    pack: bool,
+    /// Per-model fairness cap (0 = off).
+    model_budget_bytes: u64,
+    /// Key -> models that registered it (split-charge accounting).
+    owners: BTreeMap<u128, Vec<String>>,
+    /// Directory holding the cold-tier `tables.bin`, once indexed.
+    cold_dir: Option<PathBuf>,
+    /// Offset index over the cold-tier file.
+    cold: BTreeMap<u128, ColdEntry>,
+    page_ins: u64,
+    page_in_errors: u64,
+    demotions: u64,
+    sheds: u64,
 }
 
 impl Inner {
@@ -447,13 +684,53 @@ impl Inner {
         }
     }
 
-    /// Evict least-recently-used entries nobody borrows until the budget
-    /// holds. Entries with live handles are skipped (evicting them would
-    /// not free memory); if only borrowed entries remain, the store runs
-    /// over budget until they drop. Resident bytes are summed once and
-    /// decremented per eviction — entry bytes can grow behind the store's
-    /// back (lazy mirrors), so a running counter would drift, but one
-    /// O(n) sum plus O(n) per victim keeps inserts cheap.
+    /// Remove a resident entry, folding its residency hits into the cold
+    /// index when the entry can page back in (a *demotion* rather than a
+    /// plain eviction). Returns the bytes freed.
+    fn drop_entry(&mut self, k: u128) -> Option<f64> {
+        let slot = self.entries.remove(&k)?;
+        if let Some(c) = self.cold.get_mut(&k) {
+            c.hits += slot.hits;
+            self.demotions += 1;
+        }
+        self.evictions += 1;
+        Some(slot.handle.bytes())
+    }
+
+    /// Drop an idle entry's derived views (decoded packed artifact,
+    /// channels-last mirror) by swapping in a fresh `StoreEntry` that
+    /// shares the same `Arc<StoredRepr>`. Only called at `ref_count == 1`,
+    /// so no engine ever loses a view mid-gather — outstanding handles
+    /// keep the old entry (and its views) alive until they drop.
+    fn shed_slot(&mut self, k: u128) -> f64 {
+        let slot = self.entries.get_mut(&k).expect("shed victim must exist");
+        let freed = slot.handle.shed_bytes();
+        let fresh = TableHandle(Arc::new(StoreEntry {
+            key: slot.handle.0.key,
+            stored: Arc::clone(&slot.handle.0.stored),
+            decoded: OnceLock::new(),
+            cl: OnceLock::new(),
+        }));
+        slot.handle = fresh;
+        self.sheds += 1;
+        freed
+    }
+
+    /// Bring resident bytes under the budget. Entries with live handles
+    /// are never touched (demoting them would not free memory and would
+    /// yank tables mid-gather); if only borrowed entries remain, the
+    /// store runs over budget until they drop. Two passes:
+    ///
+    /// 1. *Shed* derived views from idle entries, LRU-first — a packed
+    ///    entry collapses back to palette+codes, a dense entry drops its
+    ///    channels-last mirror. Cheap to reconstruct, big bytes.
+    /// 2. *Evict* whole idle entries, LRU-first. Ones the cold index
+    ///    covers count as demotions (page-in beats rebuild later).
+    ///
+    /// Resident bytes are summed once and decremented per victim — entry
+    /// bytes can grow behind the store's back (lazy views), so a running
+    /// counter would drift, but one O(n) sum plus O(n) per victim keeps
+    /// inserts cheap.
     fn evict_to_budget(&mut self) {
         if self.budget_bytes == 0 {
             return;
@@ -463,17 +740,79 @@ impl Inner {
             let victim = self
                 .entries
                 .iter()
+                .filter(|(_, s)| s.handle.ref_count() == 1 && s.handle.shed_bytes() > 0.0)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => total -= self.shed_slot(k),
+                None => break,
+            }
+        }
+        while total > self.budget_bytes as f64 {
+            let victim = self
+                .entries
+                .iter()
                 .filter(|(_, s)| s.handle.ref_count() == 1)
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| *k);
             match victim {
                 Some(k) => {
-                    if let Some(slot) = self.entries.remove(&k) {
-                        total -= slot.handle.bytes();
+                    if let Some(freed) = self.drop_entry(k) {
+                        total -= freed;
                     }
-                    self.evictions += 1;
                 }
                 None => break,
+            }
+        }
+    }
+
+    /// Enforce the per-model fairness cap. Residency is split-charged
+    /// (an entry shared by n models costs each n-th of its bytes), and a
+    /// victim must be owned *exclusively* by over-budget models — one
+    /// oversized tenant can evict its own tables but never a table any
+    /// in-budget tenant shares. Removal-only (no shedding here), so every
+    /// iteration strictly shrinks the entry set and the loop terminates.
+    fn enforce_model_budgets(&mut self) {
+        if self.model_budget_bytes == 0 {
+            return;
+        }
+        loop {
+            let mut usage: BTreeMap<&str, f64> = BTreeMap::new();
+            for (k, slot) in &self.entries {
+                if let Some(owners) = self.owners.get(k) {
+                    if owners.is_empty() {
+                        continue;
+                    }
+                    let share = slot.handle.bytes() / owners.len() as f64;
+                    for m in owners {
+                        *usage.entry(m.as_str()).or_insert(0.0) += share;
+                    }
+                }
+            }
+            let over: std::collections::BTreeSet<&str> = usage
+                .iter()
+                .filter(|(_, &b)| b > self.model_budget_bytes as f64)
+                .map(|(m, _)| *m)
+                .collect();
+            if over.is_empty() {
+                return;
+            }
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, s)| {
+                    s.handle.ref_count() == 1
+                        && self.owners.get(*k).is_some_and(|os| {
+                            !os.is_empty() && os.iter().all(|m| over.contains(m.as_str()))
+                        })
+                })
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    self.drop_entry(k);
+                }
+                None => return,
             }
         }
     }
@@ -491,10 +830,33 @@ impl Default for TableStore {
     }
 }
 
+/// Palette packing default: on, unless `PCILT_TABLES_PACK=0` (the
+/// `PCILT_SCALAR_WALK`-style pinning knob — the conformance suites run
+/// both settings and assert bit-identical results).
+fn env_pack_default() -> bool {
+    !matches!(
+        std::env::var("PCILT_TABLES_PACK").as_deref().map(str::trim),
+        Ok("0")
+    )
+}
+
+/// `PCILT_TABLES_BUDGET_MB` as bytes, 0 (unlimited) when unset/invalid.
+/// Lets CI run a low-memory pass that forces eviction and paging through
+/// the existing suites without touching any test code.
+fn env_budget_default() -> u64 {
+    std::env::var("PCILT_TABLES_BUDGET_MB")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(|mb| mb.saturating_mul(1 << 20))
+        .unwrap_or(0)
+}
+
 impl TableStore {
-    /// Unbounded store.
+    /// Store with the environment's defaults: unbounded unless
+    /// `PCILT_TABLES_BUDGET_MB` is set, packing on unless
+    /// `PCILT_TABLES_PACK=0`.
     pub fn new() -> TableStore {
-        Self::with_budget(0)
+        Self::with_budget(env_budget_default())
     }
 
     /// Store with a byte budget (0 = unlimited).
@@ -511,6 +873,15 @@ impl TableStore {
                 cross_model_dedup: 0,
                 peak_bytes: 0.0,
                 budget_bytes,
+                pack: env_pack_default(),
+                model_budget_bytes: 0,
+                owners: BTreeMap::new(),
+                cold_dir: None,
+                cold: BTreeMap::new(),
+                page_ins: 0,
+                page_in_errors: 0,
+                demotions: 0,
+                sheds: 0,
             }),
         }
     }
@@ -529,20 +900,92 @@ impl TableStore {
         g.evict_to_budget();
     }
 
+    /// Enable/disable palette packing for entries inserted from now on
+    /// (existing entries keep their repr; both reprs read identically).
+    pub fn set_pack(&self, pack: bool) {
+        self.inner.lock().unwrap().pack = pack;
+    }
+
+    /// Install a per-model fairness cap (0 = off) and enforce it.
+    pub fn set_model_budget_bytes(&self, model_budget_bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.model_budget_bytes = model_budget_bytes;
+        g.enforce_model_budgets();
+    }
+
+    /// Record that `model` depends on `keys` (multi-model registry calls
+    /// this at model start). Ownership drives the per-model budget's
+    /// split-charge accounting and its eviction fairness.
+    pub fn register_model_keys(&self, model: &str, keys: &[TableKey]) {
+        let mut g = self.inner.lock().unwrap();
+        for k in keys {
+            let owners = g.owners.entry(k.0).or_default();
+            if !owners.iter().any(|m| m == model) {
+                owners.push(model.to_string());
+            }
+        }
+        g.enforce_model_budgets();
+    }
+
+    /// Split-charged resident bytes per registered model (`pcilt tables
+    /// stats`). Models registered but currently holding nothing resident
+    /// report 0.
+    pub fn model_usage(&self) -> Vec<(String, f64)> {
+        let g = self.inner.lock().unwrap();
+        let mut usage: BTreeMap<String, f64> = BTreeMap::new();
+        for owners in g.owners.values() {
+            for m in owners {
+                usage.entry(m.clone()).or_insert(0.0);
+            }
+        }
+        for (k, slot) in &g.entries {
+            if let Some(owners) = g.owners.get(k) {
+                if owners.is_empty() {
+                    continue;
+                }
+                let share = slot.handle.bytes() / owners.len() as f64;
+                for m in owners {
+                    *usage.entry(m.clone()).or_insert(0.0) += share;
+                }
+            }
+        }
+        usage.into_iter().collect()
+    }
+
     /// Re-run budget eviction against current resident bytes. Derived
-    /// views (channels-last mirrors) materialize *after* an entry is
-    /// inserted, so engines that build one call this to keep the budget
-    /// honest between inserts.
+    /// views (decoded packed artifacts, channels-last mirrors)
+    /// materialize *after* an entry is inserted, so engines that trigger
+    /// one call this to keep the budget honest between inserts.
     pub fn rebalance(&self) {
         let mut g = self.inner.lock().unwrap();
         g.note_peak();
         g.evict_to_budget();
+        g.enforce_model_budgets();
     }
 
     /// Non-counting peek — used by the planner's post-dedup cost model,
     /// which must not skew the hit/miss counters while scoring.
     pub fn contains(&self, key: TableKey) -> bool {
         self.inner.lock().unwrap().entries.contains_key(&key.0)
+    }
+
+    /// Non-counting peek at the cold tier: is `key` non-resident but
+    /// pageable from `tables.bin`? The planner prices such a key at
+    /// page-in cost rather than a full rebuild.
+    pub fn cold_contains(&self, key: TableKey) -> bool {
+        let g = self.inner.lock().unwrap();
+        !g.entries.contains_key(&key.0) && g.cold.contains_key(&key.0)
+    }
+
+    /// Actual resident bytes of `key` (packed entries report packed
+    /// size), or `None` when not resident. Non-counting.
+    pub fn resident_bytes(&self, key: TableKey) -> Option<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(&key.0)
+            .map(|s| s.handle.bytes())
     }
 
     /// Record `n` cross-model table dedups. The multi-model registry calls
@@ -562,6 +1005,7 @@ impl TableStore {
         match g.entries.get_mut(&key.0) {
             Some(slot) => {
                 slot.last_used = tick;
+                slot.hits += 1;
                 let h = slot.handle.clone();
                 g.hits += 1;
                 Some(h)
@@ -573,14 +1017,16 @@ impl TableStore {
         }
     }
 
-    /// Borrow the entry for `key`, building it on miss. Builds run under
-    /// the store lock: single-flight, so concurrent workers asking for the
-    /// same key perform exactly one build. The deliberate cost is that
-    /// builds for *different* keys also serialize — acceptable while
-    /// warm-up is a handful of layers; batch cold-starts should use
+    /// Borrow the entry for `key`, building it on miss. Misses first try
+    /// the cold tier — a demoted entry pages back in from `tables.bin`
+    /// (checksummed; a bad read falls back to the builder) — and only
+    /// then build from weights. Builds and page-ins run under the store
+    /// lock: single-flight, so concurrent workers asking for the same key
+    /// perform exactly one build. The deliberate cost is that builds for
+    /// *different* keys also serialize — acceptable while warm-up is a
+    /// handful of layers; batch cold-starts should use
     /// [`TableStore::prebuild`], which constructs artifacts outside the
-    /// lock on parallel workers. After an eviction the next call
-    /// transparently rebuilds (rebuild-on-miss).
+    /// lock on parallel workers.
     pub fn get_or_build(
         &self,
         key: TableKey,
@@ -591,55 +1037,61 @@ impl TableStore {
         let tick = g.tick;
         if let Some(slot) = g.entries.get_mut(&key.0) {
             slot.last_used = tick;
+            slot.hits += 1;
             let h = slot.handle.clone();
             g.hits += 1;
             return h;
         }
         g.misses += 1;
-        g.builds += 1;
-        let handle = TableHandle(Arc::new(StoreEntry {
-            key,
-            artifact: build(),
-            cl: OnceLock::new(),
-        }));
+        let (artifact, seed_hot) = match page_in(&mut g, key) {
+            Some(a) => (a, true),
+            None => {
+                g.builds += 1;
+                (build(), true)
+            }
+        };
+        let handle = make_entry(key, artifact, g.pack, seed_hot);
         g.entries.insert(
             key.0,
             Slot {
                 handle: handle.clone(),
                 last_used: tick,
+                hits: 0,
             },
         );
         g.note_peak();
         g.evict_to_budget();
+        g.enforce_model_budgets();
         handle
     }
 
-    fn insert_counted(&self, key: TableKey, artifact: TableArtifact, as_load: bool) -> bool {
+    fn insert_counted(&self, key: TableKey, artifact: TableArtifact, kind: InsertKind) -> bool {
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
         if g.entries.contains_key(&key.0) {
             return false;
         }
-        let handle = TableHandle(Arc::new(StoreEntry {
-            key,
-            artifact,
-            cl: OnceLock::new(),
-        }));
-        if as_load {
-            g.loads += 1;
-        } else {
-            g.builds += 1;
+        // Fresh builds are hot (about to be gathered from); loads and
+        // promotions stay packed-only until first use.
+        let seed_hot = matches!(kind, InsertKind::Build);
+        let handle = make_entry(key, artifact, g.pack, seed_hot);
+        match kind {
+            InsertKind::Build => g.builds += 1,
+            InsertKind::Load => g.loads += 1,
+            InsertKind::PageIn => g.page_ins += 1,
         }
         g.entries.insert(
             key.0,
             Slot {
                 handle,
                 last_used: tick,
+                hits: 0,
             },
         );
         g.note_peak();
         g.evict_to_budget();
+        g.enforce_model_budgets();
         true
     }
 
@@ -691,8 +1143,54 @@ impl TableStore {
         };
         let mut n = 0;
         for (key, artifact) in built {
-            if self.insert_counted(key, artifact, false) {
+            if self.insert_counted(key, artifact, InsertKind::Build) {
                 n += 1;
+            }
+        }
+        n
+    }
+
+    /// Page the hottest non-resident cold entries back in (background
+    /// promotion: `pcilt tables prebuild` and the coordinator call this
+    /// to pre-warm predicted-hot tables from their demand counters).
+    /// Candidates are ranked by accumulated hits (ties by key, so the
+    /// order is deterministic), capped at `max_keys`. Bodies are read and
+    /// parsed outside the lock; a corrupt body drops its cold entry and
+    /// counts a page-in error. Returns the number promoted.
+    pub fn promote_hot(&self, max_keys: usize) -> usize {
+        let (dir, candidates) = {
+            let g = self.inner.lock().unwrap();
+            let Some(dir) = g.cold_dir.clone() else {
+                return 0;
+            };
+            let mut cands: Vec<(u128, ColdEntry)> = g
+                .cold
+                .iter()
+                .filter(|(k, _)| !g.entries.contains_key(*k))
+                .map(|(k, c)| (*k, c.clone()))
+                .collect();
+            cands.sort_by(|a, b| b.1.hits.cmp(&a.1.hits).then(a.0.cmp(&b.0)));
+            cands.truncate(max_keys);
+            (dir, cands)
+        };
+        let mut n = 0;
+        for (k, c) in candidates {
+            match read_cold_body(&dir, c.offset, c.len, c.kind, c.sum) {
+                Ok(artifact) => {
+                    if self.insert_counted(TableKey(k), artifact, InsertKind::PageIn) {
+                        n += 1;
+                    }
+                }
+                Err(e) => {
+                    crate::util::logger::log(
+                        crate::util::logger::Level::Warn,
+                        module_path!(),
+                        format_args!("table promotion failed for {k:032x}: {e}"),
+                    );
+                    let mut g = self.inner.lock().unwrap();
+                    g.cold.remove(&k);
+                    g.page_in_errors += 1;
+                }
             }
         }
         n
@@ -701,6 +1199,24 @@ impl TableStore {
     /// Counter snapshot.
     pub fn stats(&self) -> TableStoreStats {
         let g = self.inner.lock().unwrap();
+        let mut packed_entries = 0u64;
+        let mut packed_bytes = 0.0f64;
+        let mut packed_logical_bytes = 0.0f64;
+        for slot in g.entries.values() {
+            if slot.handle.is_packed() {
+                packed_entries += 1;
+                packed_bytes += slot.handle.0.stored.bytes();
+                packed_logical_bytes += slot.handle.logical_bytes();
+            }
+        }
+        let mut cold_entries = 0u64;
+        let mut cold_bytes = 0.0f64;
+        for (k, c) in &g.cold {
+            if !g.entries.contains_key(k) {
+                cold_entries += 1;
+                cold_bytes += c.len as f64;
+            }
+        }
         TableStoreStats {
             entries: g.entries.len() as u64,
             bytes: g.total_bytes(),
@@ -712,14 +1228,27 @@ impl TableStore {
             evictions: g.evictions,
             cross_model_dedup: g.cross_model_dedup,
             budget_bytes: g.budget_bytes,
+            packed_entries,
+            packed_bytes,
+            packed_logical_bytes,
+            cold_entries,
+            cold_bytes,
+            page_ins: g.page_ins,
+            page_in_errors: g.page_in_errors,
+            demotions: g.demotions,
+            sheds: g.sheds,
+            model_budget_bytes: g.model_budget_bytes,
         }
     }
 
-    /// Drop every entry (borrowed ones stay alive through their handles)
-    /// and zero the counters.
+    /// Drop every entry (borrowed ones stay alive through their handles),
+    /// detach the cold tier and zero the counters. Configuration —
+    /// budgets and the packing switch — survives.
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         let budget = g.budget_bytes;
+        let pack = g.pack;
+        let model_budget = g.model_budget_bytes;
         *g = Inner {
             entries: BTreeMap::new(),
             tick: 0,
@@ -731,6 +1260,15 @@ impl TableStore {
             cross_model_dedup: 0,
             peak_bytes: 0.0,
             budget_bytes: budget,
+            pack,
+            model_budget_bytes: model_budget,
+            owners: BTreeMap::new(),
+            cold_dir: None,
+            cold: BTreeMap::new(),
+            page_ins: 0,
+            page_in_errors: 0,
+            demotions: 0,
+            sheds: 0,
         };
     }
 }
@@ -739,6 +1277,15 @@ impl TableStore {
 pub struct PrebuildRequest {
     pub key: TableKey,
     pub build: Box<dyn FnOnce() -> TableArtifact + Send>,
+}
+
+/// How an insert entered the store (drives which counter it bumps and
+/// whether the decoded cache is pre-seeded).
+#[derive(Clone, Copy)]
+enum InsertKind {
+    Build,
+    Load,
+    PageIn,
 }
 
 // ---------------------------------------------------------------------------
@@ -802,6 +1349,11 @@ impl TableStore {
     /// Serialize every resident entry to `dir/tables.bin` plus a
     /// checksummed `dir/tables.manifest`. Deterministic: entries are
     /// written in key order, so identical stores produce identical files.
+    /// Packed entries persist their canonical serialized bytes (the
+    /// palette decodes to exactly what `write_to` emits) *without*
+    /// materializing the flat artifact, so the disk format is identical
+    /// whether packing is on or off. The written file immediately becomes
+    /// the store's cold tier: every saved entry is pageable from here on.
     pub fn save(&self, dir: &Path) -> Result<SaveReport, StoreIoError> {
         std::fs::create_dir_all(dir)?;
         let mut w = ByteWriter::new();
@@ -813,12 +1365,18 @@ impl TableStore {
             for (key, slot) in &g.entries {
                 w.u64((*key >> 64) as u64);
                 w.u64(*key as u64);
-                let art = slot.handle.artifact();
-                w.byte(art.kind());
-                let mut body = ByteWriter::new();
-                art.write_to(&mut body);
-                w.u64(body.buf.len() as u64);
-                w.bytes(&body.buf);
+                let stored = &slot.handle.0.stored;
+                w.byte(stored.kind());
+                let body = match &**stored {
+                    StoredRepr::Flat(a) => {
+                        let mut body = ByteWriter::new();
+                        a.write_to(&mut body);
+                        body.buf
+                    }
+                    StoredRepr::Packed(p) => p.serialized(),
+                };
+                w.u64(body.len() as u64);
+                w.bytes(&body);
             }
             g.entries.len() as u64
         };
@@ -831,6 +1389,10 @@ impl TableStore {
             w.buf.len(),
         );
         std::fs::write(dir.join(MANIFEST_FILE), manifest)?;
+        {
+            let mut g = self.inner.lock().unwrap();
+            refresh_cold_index(&mut g, dir, &w.buf)?;
+        }
         Ok(SaveReport {
             entries,
             payload_bytes: w.buf.len() as u64,
@@ -842,7 +1404,9 @@ impl TableStore {
     /// Load a persisted cache, merging entries the store does not already
     /// hold (resident entries win). Returns the number of entries loaded.
     /// Every load is verified against the manifest checksum first; a
-    /// corrupt cache errors without touching the store.
+    /// corrupt cache errors without touching the store. The cache also
+    /// becomes the cold tier (indexed before any insert, so entries a
+    /// tight budget immediately evicts count as demotions, not losses).
     pub fn load(&self, dir: &Path) -> Result<usize, StoreIoError> {
         let manifest = parse_manifest(dir)?;
         let raw = std::fs::read(dir.join(BIN_FILE))?;
@@ -857,13 +1421,38 @@ impl TableStore {
             return corrupt("checksum mismatch between tables.bin and manifest");
         }
         let entries = parse_bin(&raw, manifest.entries, |_, _| true)?;
+        {
+            let mut g = self.inner.lock().unwrap();
+            refresh_cold_index(&mut g, dir, &raw)?;
+        }
         let mut n = 0;
         for (key, artifact) in entries {
-            if self.insert_counted(key, artifact, true) {
+            if self.insert_counted(key, artifact, InsertKind::Load) {
                 n += 1;
             }
         }
         Ok(n)
+    }
+
+    /// Index `dir`'s persisted cache as the cold tier *without* loading
+    /// anything resident: entries page in on demand (`get_or_build`) or
+    /// by promotion (`promote_hot`). Verifies the manifest checksum like
+    /// `load`. Returns the number of cold entries indexed.
+    pub fn attach_cold(&self, dir: &Path) -> Result<usize, StoreIoError> {
+        let manifest = parse_manifest(dir)?;
+        let raw = std::fs::read(dir.join(BIN_FILE))?;
+        if raw.len() as u64 != manifest.payload_bytes {
+            return corrupt(format!(
+                "tables.bin is {} bytes, manifest says {}",
+                raw.len(),
+                manifest.payload_bytes
+            ));
+        }
+        if fnv1a(&raw) != manifest.checksum {
+            return corrupt("checksum mismatch between tables.bin and manifest");
+        }
+        let mut g = self.inner.lock().unwrap();
+        refresh_cold_index(&mut g, dir, &raw)
     }
 
     /// Inspect a persisted cache without loading it into memory maps
@@ -986,6 +1575,125 @@ fn parse_bin(
         return corrupt(format!("{} trailing bytes in tables.bin", r.remaining()));
     }
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Cold tier: offset index over tables.bin + page-in
+// ---------------------------------------------------------------------------
+
+/// Walk the `tables.bin` headers without parsing bodies, yielding each
+/// entry's body offset/length/kind plus a per-body checksum. O(file) once
+/// at index time; page-ins then seek straight to their entry.
+fn scan_bin_index(raw: &[u8]) -> Result<Vec<(u128, ColdEntry)>, StoreIoError> {
+    let mut r = ByteReader::new(raw);
+    let magic = r.take_bytes(4).map_err(StoreIoError::Corrupt)?;
+    if magic != MAGIC {
+        return corrupt("bad magic in tables.bin");
+    }
+    let version = r.take_u32().map_err(StoreIoError::Corrupt)?;
+    if version != FORMAT_VERSION {
+        return corrupt(format!("unsupported tables.bin version {version}"));
+    }
+    let count = r.take_u64().map_err(StoreIoError::Corrupt)?;
+    let mut out = Vec::with_capacity(count.min(4096) as usize);
+    for _ in 0..count {
+        let hi = r.take_u64().map_err(StoreIoError::Corrupt)?;
+        let lo = r.take_u64().map_err(StoreIoError::Corrupt)?;
+        let key = ((hi as u128) << 64) | lo as u128;
+        let kind = r.take_byte().map_err(StoreIoError::Corrupt)?;
+        let len = r.take_u64().map_err(StoreIoError::Corrupt)? as usize;
+        let offset = (raw.len() - r.remaining()) as u64;
+        let body = r.take_bytes(len).map_err(StoreIoError::Corrupt)?;
+        out.push((
+            key,
+            ColdEntry {
+                offset,
+                len: len as u64,
+                kind,
+                sum: fnv1a(body),
+                hits: 0,
+            },
+        ));
+    }
+    if r.remaining() != 0 {
+        return corrupt(format!("{} trailing bytes in tables.bin", r.remaining()));
+    }
+    Ok(out)
+}
+
+/// Rebuild the cold index from `raw` (the current content of
+/// `dir/tables.bin`), carrying accumulated hit counters over for keys
+/// that stay indexed.
+fn refresh_cold_index(g: &mut Inner, dir: &Path, raw: &[u8]) -> Result<usize, StoreIoError> {
+    let index = scan_bin_index(raw)?;
+    let mut cold = BTreeMap::new();
+    for (k, mut e) in index {
+        if let Some(old) = g.cold.get(&k) {
+            e.hits = old.hits;
+        }
+        cold.insert(k, e);
+    }
+    let n = cold.len();
+    g.cold = cold;
+    g.cold_dir = Some(dir.to_path_buf());
+    Ok(n)
+}
+
+/// Read and verify one cold entry's body from `dir/tables.bin`. Any
+/// failure — I/O, truncation, checksum, parse — is returned as a message;
+/// the caller falls back to rebuilding from weights.
+fn read_cold_body(
+    dir: &Path,
+    offset: u64,
+    len: u64,
+    kind: u8,
+    sum: u64,
+) -> Result<TableArtifact, String> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(dir.join(BIN_FILE)).map_err(|e| e.to_string())?;
+    f.seek(SeekFrom::Start(offset)).map_err(|e| e.to_string())?;
+    let mut body = vec![0u8; len as usize];
+    f.read_exact(&mut body).map_err(|e| e.to_string())?;
+    if fnv1a(&body) != sum {
+        return Err("cold entry body checksum mismatch".to_string());
+    }
+    let mut r = ByteReader::new(&body);
+    let a = TableArtifact::read_from(kind, &mut r)?;
+    if r.remaining() != 0 {
+        return Err(format!("{} trailing bytes in cold entry body", r.remaining()));
+    }
+    Ok(a)
+}
+
+/// Demand page-in under the store lock (single-flight, like builds). A
+/// failed read logs, drops the cold entry and returns `None` so the
+/// caller's builder runs instead — a damaged cold file degrades to
+/// rebuild-from-weights, never to an error.
+fn page_in(g: &mut Inner, key: TableKey) -> Option<TableArtifact> {
+    let (dir, offset, len, kind, sum) = {
+        let dir = g.cold_dir.as_ref()?;
+        let c = g.cold.get(&key.0)?;
+        (dir.clone(), c.offset, c.len, c.kind, c.sum)
+    };
+    match read_cold_body(&dir, offset, len, kind, sum) {
+        Ok(artifact) => {
+            if let Some(c) = g.cold.get_mut(&key.0) {
+                c.hits += 1;
+            }
+            g.page_ins += 1;
+            Some(artifact)
+        }
+        Err(e) => {
+            crate::util::logger::log(
+                crate::util::logger::Level::Warn,
+                module_path!(),
+                format_args!("table page-in failed for {:032x}: {e}", key.0),
+            );
+            g.cold.remove(&key.0);
+            g.page_in_errors += 1;
+            None
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1361,5 +2069,171 @@ mod tests {
         assert_eq!(store.stats().cross_model_dedup, 3);
         store.clear();
         assert_eq!(store.stats().cross_model_dedup, 0);
+    }
+
+    /// Ternary weights: products over any activation alphabet collapse to
+    /// a few hundred distinct accumulators, the regime palette packing is
+    /// built for.
+    fn ternary_weights(seed: u64) -> Tensor4<i8> {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_fn(Shape4::new(8, 3, 3, 4), |_, _, _, _| *rng.choose(&[-1i8, 0, 1]))
+    }
+
+    #[test]
+    fn packed_entries_decode_bit_identical_and_charge_packed_bytes() {
+        let store = TableStore::new();
+        store.set_pack(true);
+        let w = ternary_weights(20);
+        let key = TableKey::dense(&w, 8, &ConvFunc::Mul);
+        let h = store.get_or_build(key, || dense_artifact(&w, 8));
+        assert!(h.is_packed(), "low-cardinality table must pack");
+        let s = store.stats();
+        assert_eq!(s.packed_entries, 1);
+        assert!(
+            s.packed_bytes < s.packed_logical_bytes / 2.0,
+            "ternary @ 8 bits must pack well: {} vs {}",
+            s.packed_bytes,
+            s.packed_logical_bytes
+        );
+        // The decode-on-gather seam is bit-identical to a fresh flat build,
+        // and to the same store with packing off.
+        assert_eq!(h.dense(), &LayerTables::build(&w, 8, &ConvFunc::Mul));
+        let flat = TableStore::new();
+        flat.set_pack(false);
+        let hf = flat.get_or_build(key, || dense_artifact(&w, 8));
+        assert!(!hf.is_packed());
+        assert_eq!(hf.dense(), h.dense());
+    }
+
+    #[test]
+    fn shed_drops_derived_views_before_evicting() {
+        let store = TableStore::new();
+        store.set_pack(true);
+        let w = ternary_weights(21);
+        let key = TableKey::dense(&w, 8, &ConvFunc::Mul);
+        let h = store.get_or_build(key, || dense_artifact(&w, 8));
+        assert!(h.is_packed());
+        assert!(h.shed_bytes() > 0.0, "a fresh build seeds the decoded cache");
+        let packed_only = h.bytes() - h.shed_bytes();
+        drop(h);
+        // Budget admits the packed bytes but not the decoded view: the
+        // store must shed the view, not evict the entry.
+        store.set_budget_bytes(packed_only as u64 + 64);
+        let s = store.stats();
+        assert_eq!(s.entries, 1, "entry must survive as packed bytes");
+        assert!(s.sheds >= 1);
+        assert_eq!(s.evictions, 0);
+        // and it still gathers bit-identically (decode on demand)
+        let h2 = store.get_or_build(key, || panic!("resident entry must not rebuild"));
+        assert_eq!(h2.dense(), &LayerTables::build(&w, 8, &ConvFunc::Mul));
+    }
+
+    #[test]
+    fn demoted_entries_page_in_instead_of_rebuilding() {
+        let dir = std::env::temp_dir().join("pcilt_store_demote_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = TableStore::new();
+        let w = weights(22);
+        let key = TableKey::dense(&w, 4, &ConvFunc::Mul);
+        store.get_or_build(key, || dense_artifact(&w, 4));
+        store.save(&dir).unwrap();
+        // A tiny budget demotes the (unborrowed) entry; the cold index
+        // still covers it.
+        store.set_budget_bytes(64);
+        let s = store.stats();
+        assert_eq!(s.entries, 0);
+        assert!(s.demotions >= 1);
+        assert!(store.cold_contains(key));
+        // The next request pages in from tables.bin — not the builder.
+        store.set_budget_bytes(0);
+        let h = store.get_or_build(key, || panic!("demoted entry must page in, not rebuild"));
+        assert_eq!(h.dense(), &LayerTables::build(&w, 4, &ConvFunc::Mul));
+        let s = store.stats();
+        assert_eq!(s.page_ins, 1);
+        assert_eq!(s.builds, 1, "only the original build");
+        assert!(!store.cold_contains(key), "resident again, so no longer cold");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_cold_entry_falls_back_to_rebuild() {
+        let dir = std::env::temp_dir().join("pcilt_store_cold_corrupt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = TableStore::new();
+        let w = weights(23);
+        let key = TableKey::dense(&w, 4, &ConvFunc::Mul);
+        store.get_or_build(key, || dense_artifact(&w, 4));
+        store.save(&dir).unwrap();
+        store.set_budget_bytes(64);
+        store.set_budget_bytes(0);
+        assert!(store.cold_contains(key));
+        // Truncate the cold file mid-body: page-in must reject the entry
+        // and fall back to a rebuild.
+        let bin = dir.join(BIN_FILE);
+        let raw = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &raw[..raw.len() / 2]).unwrap();
+        let h = store.get_or_build(key, || dense_artifact(&w, 4));
+        assert_eq!(h.dense(), &LayerTables::build(&w, 4, &ConvFunc::Mul));
+        let s = store.stats();
+        assert_eq!(s.page_in_errors, 1);
+        assert_eq!(s.builds, 2, "corrupt cold entry must rebuild");
+        assert!(!store.cold_contains(key), "bad cold entry is dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn per_model_budget_spares_other_tenants() {
+        let store = TableStore::new();
+        let wa1 = weights(24);
+        let wa2 = weights(25);
+        let wb = weights(26);
+        let ka1 = TableKey::dense(&wa1, 4, &ConvFunc::Mul);
+        let ka2 = TableKey::dense(&wa2, 4, &ConvFunc::Mul);
+        let kb = TableKey::dense(&wb, 4, &ConvFunc::Mul);
+        store.get_or_build(ka1, || dense_artifact(&wa1, 4));
+        store.get_or_build(ka2, || dense_artifact(&wa2, 4));
+        store.get_or_build(kb, || dense_artifact(&wb, 4));
+        store.register_model_keys("big", &[ka1, ka2]);
+        store.register_model_keys("small", &[kb]);
+        let entry = store.resident_bytes(ka1).unwrap();
+        // Cap at 1.5 entries: "big" (2 entries) is over, "small" (1) is
+        // not. Only big's LRU exclusive entry may go.
+        store.set_model_budget_bytes((entry * 1.5) as u64);
+        assert!(!store.contains(ka1), "over-budget model loses its LRU entry");
+        assert!(store.contains(ka2), "one eviction brings big back in budget");
+        assert!(store.contains(kb), "in-budget tenant is untouched");
+        let usage = store.model_usage();
+        assert_eq!(usage.len(), 2);
+        assert!(usage.iter().any(|(m, b)| m == "big" && *b > 0.0));
+        assert!(usage.iter().any(|(m, b)| m == "small" && *b > 0.0));
+    }
+
+    #[test]
+    fn promote_hot_pages_hottest_cold_entries_back_in() {
+        let dir = std::env::temp_dir().join("pcilt_store_promote_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = TableStore::new();
+        let wa = weights(27);
+        let wb = weights(28);
+        let ka = TableKey::dense(&wa, 4, &ConvFunc::Mul);
+        let kb = TableKey::dense(&wb, 4, &ConvFunc::Mul);
+        store.get_or_build(ka, || dense_artifact(&wa, 4));
+        store.get_or_build(kb, || dense_artifact(&wb, 4));
+        // Touch A so its demand counter outranks B's at demotion time.
+        store.get(ka);
+        store.get(ka);
+        store.save(&dir).unwrap();
+        store.set_budget_bytes(64);
+        assert_eq!(store.stats().entries, 0, "both entries demote");
+        store.set_budget_bytes(0);
+        assert_eq!(store.promote_hot(1), 1);
+        assert!(store.contains(ka), "hotter entry promotes first");
+        assert!(!store.contains(kb));
+        assert_eq!(store.promote_hot(8), 1, "second pass brings in the rest");
+        assert!(store.contains(kb));
+        let s = store.stats();
+        assert_eq!(s.page_ins, 2);
+        assert_eq!(s.builds, 2, "promotion never rebuilds");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

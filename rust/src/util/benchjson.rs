@@ -6,14 +6,20 @@
 //! tolerance (default 10%).
 //!
 //! Hand-rolled scanning (no serde offline): a field counts when its key
-//! ends in `imgs_per_sec` and its value is a bare JSON number. Pairing is
-//! positional per file — the benches emit keys in a fixed document order,
-//! so position is identity; renames/additions should refresh the baseline
-//! file in the same commit.
+//! ends in `imgs_per_sec` (throughput) or `models_per_budget` (table-tier
+//! capacity: how many models fit one resident byte budget) and its value
+//! is a bare JSON number. Both are higher-is-better, so one drop rule
+//! gates them. Pairing is positional per file — the benches emit keys in
+//! a fixed document order, so position is identity; renames/additions
+//! should refresh the baseline file in the same commit.
 
 use std::path::Path;
 
-/// Every `*imgs_per_sec` key/value in document order.
+/// Gated figure suffixes — all higher-is-better.
+const GATED_SUFFIXES: [&str; 2] = ["imgs_per_sec", "models_per_budget"];
+
+/// Every gated key/value (`*imgs_per_sec`, `*models_per_budget`) in
+/// document order.
 pub fn imgs_per_sec_values(json: &str) -> Vec<(String, f64)> {
     let b = json.as_bytes();
     let mut out = Vec::new();
@@ -46,7 +52,7 @@ pub fn imgs_per_sec_values(json: &str) -> Vec<(String, f64)> {
         if k >= b.len() || b[k] != b':' {
             continue;
         }
-        if !token.ends_with("imgs_per_sec") {
+        if !GATED_SUFFIXES.iter().any(|s| token.ends_with(s)) {
             continue;
         }
         let mut v = k + 1;
@@ -191,6 +197,23 @@ mod tests {
         // and p50_ns keys are not throughput figures.
         let json = r#"{"note": "imgs_per_sec", "p50_ns": 42.0, "x_imgs_per_sec": 7}"#;
         assert_eq!(imgs_per_sec_values(json), vec![("x_imgs_per_sec".to_string(), 7.0)]);
+    }
+
+    #[test]
+    fn scanner_gates_models_per_budget_figures() {
+        let json = r#"{"packed_models_per_budget": 12, "flat_models_per_budget": 4,
+                       "pack_ratio": 3.5}"#;
+        assert_eq!(
+            imgs_per_sec_values(json),
+            vec![
+                ("packed_models_per_budget".to_string(), 12.0),
+                ("flat_models_per_budget".to_string(), 4.0),
+            ]
+        );
+        // A capacity drop beyond tolerance fails like a throughput drop.
+        let rows = compare(json, r#"{"packed_models_per_budget": 8,
+                                     "flat_models_per_budget": 4}"#, 0.10);
+        assert!(rows[0].regressed && !rows[1].regressed, "{rows:?}");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use pcilt::model::{random_params, EngineChoice, QuantCnn};
 use pcilt::pcilt::dm::conv_reference;
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::planner::{EngineId, EnginePlanner, LayerSpec, PlannerPolicy};
+use pcilt::pcilt::store::StoreIoError;
 use pcilt::pcilt::{
     ChannelWidths, ConvFunc, MixedEngine, PciltEngine, RowSegmentEngine, SegmentEngine,
     SharedEngine, TableKey, TableStore,
@@ -267,6 +268,339 @@ fn corrupt_cache_never_loads() {
     assert!(fresh.load(&dir).is_err());
     assert_eq!(fresh.stats().entries, 0);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tiering roundtrip across the whole lookup family: every idle entry is
+/// demoted to the cold tier (`tables.bin`), pages back in on the next
+/// borrow, and the gathers stay bit-identical — with zero rebuilds.
+#[test]
+fn demote_then_page_in_is_bit_identical_across_engines() {
+    let dir = temp_dir("tiering");
+    let mut rng = Rng::new(131);
+    let bits = 4u32;
+    let ic = 2usize;
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let x = Tensor4::random_activations(Shape4::new(1, 7, 7, ic), bits, &mut rng);
+    // Ternary weights: the dense/shared artifacts take the packed
+    // representation, so the roundtrip shuttles both packed and flat
+    // bodies through the cold tier.
+    let w = Tensor4::from_fn(Shape4::new(4, 3, 3, ic), |_, _, _, _| *rng.choose(&[-1i8, 0, 1]));
+    let make = |store: &TableStore| -> Vec<(&'static str, Box<dyn ConvEngine>)> {
+        vec![
+            ("pcilt", Box::new(PciltEngine::from_store(store, &w, bits, geom, &f))),
+            ("shared", Box::new(SharedEngine::from_store(store, &w, bits, geom, &f))),
+            ("segment", Box::new(SegmentEngine::from_store(store, &w, bits, 2, geom, &f))),
+            ("segment-row", Box::new(RowSegmentEngine::from_store(store, &w, bits, 2, geom, &f))),
+            (
+                "mixed",
+                Box::new(MixedEngine::from_store(
+                    store,
+                    &w,
+                    ChannelWidths::uniform(ic, bits),
+                    bits,
+                    geom,
+                    &f,
+                )),
+            ),
+        ]
+    };
+
+    let store = TableStore::new();
+    let engines = make(&store);
+    let expects: Vec<_> = engines.iter().map(|(_, e)| e.conv(&x)).collect();
+    store.save(&dir).unwrap();
+    drop(engines);
+    let builds = store.stats().builds;
+    assert_eq!(builds, 5);
+
+    // Demote: a 1-byte budget evicts every idle entry, and because the
+    // saved cache covers them all, each eviction is a demotion (pageable)
+    // rather than a loss.
+    store.set_budget_bytes(1);
+    let s = store.stats();
+    assert_eq!(s.entries, 0, "nothing borrowed, so everything demotes");
+    assert_eq!(s.demotions, 5, "saved entries must demote, not vanish: {s:?}");
+    assert_eq!(s.cold_entries, 5);
+    store.set_budget_bytes(0);
+
+    // Page back in: the same borrows are served from the cold tier, with
+    // zero new builds and bit-identical gathers.
+    for ((name, e), expect) in make(&store).iter().zip(&expects) {
+        assert_eq!(e.conv(&x), *expect, "{name} after page-in");
+    }
+    let s = store.stats();
+    assert_eq!(s.builds, builds, "page-in must not rebuild: {s:?}");
+    assert_eq!(s.page_ins, 5);
+    assert_eq!(s.page_in_errors, 0);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The same roundtrip through a whole model: `QuantCnn`'s dense tables
+/// *and* its absorbed-requantize tables demote and page back in with a
+/// bit-identical forward pass.
+#[test]
+fn model_demote_then_page_in_covers_requant_tables() {
+    let dir = temp_dir("tiering_model");
+    let mut rng = Rng::new(137);
+    let params = random_params(4, &mut rng);
+    let codes = Tensor4::random_activations(Shape4::new(2, 16, 16, 1), 4, &mut rng);
+
+    let store = Arc::new(TableStore::new());
+    let m = QuantCnn::with_store(params.clone(), EngineChoice::Pcilt, &store);
+    let reference = m.forward(&codes);
+    store.save(&dir).unwrap();
+    drop(m);
+    let builds = store.stats().builds;
+    assert_eq!(builds, 4, "2 dense + 2 requant tables");
+
+    store.set_budget_bytes(1);
+    assert_eq!(store.stats().entries, 0);
+    store.set_budget_bytes(0);
+
+    let m2 = QuantCnn::with_store(params, EngineChoice::Pcilt, &store);
+    assert_eq!(m2.forward(&codes), reference, "paged-in model must be bit-identical");
+    let s = store.stats();
+    assert_eq!(s.builds, builds, "dense and requant tables page in, not rebuild: {s:?}");
+    assert_eq!(s.page_ins, 4);
+    assert_eq!(s.demotions, 4);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A damaged cold-tier body degrades to rebuild-from-weights: the per-body
+/// checksum rejects it at page-in, the entry leaves the cold index, the
+/// builder runs instead, and the result is still bit-identical.
+#[test]
+fn corrupt_cold_body_falls_back_to_rebuild() {
+    let dir = temp_dir("cold_corrupt");
+    let mut rng = Rng::new(139);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let bits = 4u32;
+    let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 1), bits, &mut rng);
+    let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+    let key = TableKey::dense(&w, bits, &f);
+
+    let store = TableStore::new();
+    let expect = {
+        let e = PciltEngine::from_store(&store, &w, bits, geom, &f);
+        e.conv(&x)
+    };
+    store.save(&dir).unwrap();
+
+    // Flip the last byte on disk — inside the (single) entry's body, so
+    // the manifest-level load checks are not what catches it.
+    let bin = dir.join("tables.bin");
+    let mut raw = std::fs::read(&bin).unwrap();
+    let last = raw.len() - 1;
+    raw[last] ^= 0xFF;
+    std::fs::write(&bin, &raw).unwrap();
+
+    store.set_budget_bytes(1);
+    assert_eq!(store.stats().entries, 0);
+    store.set_budget_bytes(0);
+    let builds = store.stats().builds;
+
+    let e = PciltEngine::from_store(&store, &w, bits, geom, &f);
+    assert_eq!(e.conv(&x), expect, "rebuild fallback must stay bit-identical");
+    let s = store.stats();
+    assert_eq!(s.page_in_errors, 1, "damaged body must count a page-in error: {s:?}");
+    assert_eq!(s.builds, builds + 1, "fallback rebuilds from weights");
+    assert!(!store.cold_contains(key), "damaged cold entry must leave the index (no retry loop)");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A truncated cold file is rejected wholesale at attach time (manifest
+/// payload length), before anything could page in from it.
+#[test]
+fn truncated_cold_file_is_rejected_on_attach() {
+    let dir = temp_dir("cold_truncated");
+    let mut rng = Rng::new(149);
+    let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let store = TableStore::new();
+    let _e = PciltEngine::from_store(&store, &w, 2, geom, &ConvFunc::Mul);
+    store.save(&dir).unwrap();
+
+    let bin = dir.join("tables.bin");
+    let mut raw = std::fs::read(&bin).unwrap();
+    raw.truncate(raw.len() / 2);
+    std::fs::write(&bin, &raw).unwrap();
+
+    let fresh = TableStore::new();
+    match fresh.attach_cold(&dir) {
+        Err(StoreIoError::Corrupt(_)) => {}
+        other => panic!("truncated cache must be rejected as corrupt, got {other:?}"),
+    }
+    assert_eq!(fresh.stats().cold_entries, 0, "rejected cache must index nothing");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `attach_cold` indexes a persisted cache without loading anything;
+/// `promote_hot` then pages entries in ahead of demand, and every later
+/// borrow is served from memory or the cold tier — never a rebuild.
+#[test]
+fn attach_cold_then_promote_serves_without_builds() {
+    let dir = temp_dir("promote");
+    let mut rng = Rng::new(151);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let bits = 2u32;
+    let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 1), bits, &mut rng);
+    let ws: Vec<Tensor4<i8>> = (0..3)
+        .map(|_| Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng))
+        .collect();
+
+    let seed_store = TableStore::new();
+    for w in &ws {
+        let _e = PciltEngine::from_store(&seed_store, w, bits, geom, &f);
+    }
+    seed_store.save(&dir).unwrap();
+
+    let store = TableStore::new();
+    assert_eq!(store.attach_cold(&dir).unwrap(), 3);
+    let s = store.stats();
+    assert_eq!(s.entries, 0, "attach must not load anything resident");
+    assert_eq!(s.cold_entries, 3);
+
+    assert_eq!(store.promote_hot(2), 2);
+    let s = store.stats();
+    assert_eq!(s.entries, 2);
+    assert_eq!(s.page_ins, 2);
+    assert_eq!(s.cold_entries, 1, "promoted entries leave the cold count");
+
+    for w in &ws {
+        let e = PciltEngine::from_store(&store, w, bits, geom, &f);
+        let _ = e.conv(&x);
+    }
+    let s = store.stats();
+    assert_eq!(s.builds, 0, "cold-attached boot must never rebuild: {s:?}");
+    assert_eq!(s.page_ins, 3, "the one unpromoted entry pages in on demand");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression: an entry with a live borrow is never evicted, demoted or
+/// shed, no matter how much churn pushes the store past its budget — the
+/// holding engine keeps gathering bit-identically throughout.
+#[test]
+fn borrowed_entry_is_never_demoted_under_churn() {
+    let mut rng = Rng::new(157);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let bits = 4u32;
+    let x = Tensor4::random_activations(Shape4::new(1, 6, 6, 1), bits, &mut rng);
+    let w_held = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+
+    // Budget fits roughly one layer's tables (see eviction test above),
+    // so every churn build pushes the store over budget while the first
+    // engine still borrows its entry.
+    let store = TableStore::with_budget(4 * 1024);
+    let held = PciltEngine::from_store(&store, &w_held, bits, geom, &f);
+    let expect = held.conv(&x);
+    let key = TableKey::dense(&w_held, bits, &f);
+    let resident = store.resident_bytes(key).expect("held entry must be resident");
+
+    for i in 0..6 {
+        let w = Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng);
+        let e = PciltEngine::from_store(&store, &w, bits, geom, &f);
+        let _ = e.conv(&x);
+        assert!(store.contains(key), "round {i}: borrowed entry was evicted");
+    }
+    let s = store.stats();
+    assert!(s.evictions > 0, "churn past the budget must evict idle entries: {s:?}");
+    assert_eq!(
+        store.resident_bytes(key),
+        Some(resident),
+        "borrowed entry must keep its views (no shed) while held"
+    );
+    assert_eq!(held.conv(&x), expect, "held engine must gather bit-identically after churn");
+}
+
+/// Budget eviction charges what an entry actually costs resident: packed
+/// entries are charged their packed bytes, not their logical (flat) size.
+/// The budget here is far below the models' combined flat footprint and
+/// comfortably above their packed one — everything must stay resident.
+#[test]
+fn eviction_charges_packed_not_logical_bytes() {
+    let dir = temp_dir("packed_accounting");
+    const MODELS: usize = 4;
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let bits = 8u32;
+
+    let builder = TableStore::with_budget(0);
+    builder.set_pack(true);
+    for i in 0..MODELS {
+        let mut r = Rng::new(2000 + i as u64);
+        let shape = Shape4::new(8, 3, 3, 4);
+        let w = Tensor4::from_fn(shape, |_, _, _, _| *r.choose(&[-1i8, 0, 1]));
+        let _e = PciltEngine::from_store(&builder, &w, bits, geom, &f);
+    }
+    let s = builder.stats();
+    assert_eq!(s.packed_entries as usize, MODELS, "ternary tables must pack");
+    assert!(
+        s.packed_bytes * 2.0 < s.packed_logical_bytes,
+        "test needs a real compression gap: {s:?}"
+    );
+    builder.save(&dir).unwrap();
+
+    // Budget between the packed and flat totals: a store charging logical
+    // bytes would evict most entries, one charging packed bytes keeps all.
+    let budget = (s.packed_logical_bytes / 2.0) as u64;
+    let store = TableStore::with_budget(budget);
+    store.set_pack(true);
+    assert_eq!(store.load(&dir).unwrap(), MODELS);
+    let t = store.stats();
+    assert_eq!(t.entries as usize, MODELS, "packed residency must fit the budget: {t:?}");
+    assert!(t.bytes <= budget as f64, "resident bytes over budget: {t:?}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The per-model fairness cap only ever evicts tables owned exclusively
+/// by over-budget models: a noisy tenant shrinks to its cap, the
+/// within-budget tenant's tables survive untouched.
+#[test]
+fn per_model_budget_evicts_only_the_over_budget_owner() {
+    let mut rng = Rng::new(163);
+    let geom = ConvGeometry::unit_stride(3, 3);
+    let f = ConvFunc::Mul;
+    let bits = 4u32;
+    let store = TableStore::new();
+    store.set_pack(false); // deterministic flat sizes for the arithmetic below
+
+    let ws: Vec<Tensor4<i8>> = (0..4)
+        .map(|_| Tensor4::random_weights(Shape4::new(2, 3, 3, 1), 8, &mut rng))
+        .collect();
+    let keys: Vec<TableKey> = ws.iter().map(|w| TableKey::dense(w, bits, &f)).collect();
+    for w in &ws {
+        let _e = PciltEngine::from_store(&store, w, bits, geom, &f);
+    }
+    // "hog" owns the first three tables, "tenant" the last. All four are
+    // the same shape, so they charge identical bytes.
+    store.register_model_keys("hog", &keys[..3]);
+    store.register_model_keys("tenant", &keys[3..]);
+    let per_table = store.resident_bytes(keys[0]).unwrap();
+
+    // Cap at 1.5 tables: "hog" (3 tables) is over, "tenant" (1) is not.
+    let budget = (per_table * 1.5) as u64;
+    store.set_model_budget_bytes(budget);
+    let s = store.stats();
+    assert_eq!(s.entries, 2, "hog must shrink to one table: {s:?}");
+    assert!(store.contains(keys[3]), "tenant's table must survive hog's overrun");
+    assert!(store.contains(keys[2]), "hog keeps its most recently used table");
+    assert!(!store.contains(keys[0]) && !store.contains(keys[1]), "hog's LRU tables evict");
+    for (model, bytes) in store.model_usage() {
+        assert!(
+            bytes <= budget as f64,
+            "{model} still over its cap after enforcement ({bytes} > {budget})"
+        );
+    }
 }
 
 /// Keys are pure content addresses: a clone of the weights hits, a one
