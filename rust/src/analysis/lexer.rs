@@ -1,0 +1,384 @@
+//! A minimal Rust tokenizer for the `pcilt lint` rules.
+//!
+//! This is not a parser: rules only need a token stream that is *safe
+//! against text lookalikes* — an `f64` inside a string literal, an
+//! `unwrap()` inside a doc comment, a `{` in an ASCII diagram must never
+//! trip a rule. The lexer therefore recognizes exactly the Rust lexical
+//! classes that matter for that: line and (nested) block comments,
+//! string/byte-string/raw-string literals, char literals vs lifetimes,
+//! identifiers, numbers and punctuation. Everything it does is what the
+//! "verified by inspection" scans of PRs 1–7 did by hand (see
+//! CHANGES.md); the token stream just makes those scans mechanical.
+//!
+//! Tokens carry byte spans into the source (resolve text via
+//! [`Token::text`]) plus a 1-based line number for diagnostics.
+
+/// Lexical class of a [`Token`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `f64`, `unwrap`, ...).
+    Ident,
+    /// Numeric literal, including suffixed forms (`1u8`, `0f64`). The
+    /// lexer does not consume `.`, so `1.5` is three tokens — enough for
+    /// every rule and it keeps tuple-field access (`pair.0.x`) unambiguous.
+    Number,
+    /// Single punctuation character (`{`, `.`, `=`, ...).
+    Punct,
+    /// `//...` or `/*...*/` comment, text included (pragmas live here).
+    Comment,
+    /// String literal: `"..."`, `b"..."`, `r"..."`, `r#"..."#`.
+    Str,
+    /// Char or byte literal: `'x'`, `'\n'`, `b'q'`.
+    Char,
+    /// Lifetime: `'a`, `'static`.
+    Lifetime,
+}
+
+/// One lexed token: kind, byte span and 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: u32,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Token {
+    /// The token's text within the source it was lexed from.
+    pub fn text<'s>(&self, src: &'s str) -> &'s str {
+        &src[self.start..self.end]
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`. Never fails: unterminated literals run to the end of
+/// the input (the scan still terminates, later rules see fewer tokens).
+pub fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            toks.push(Token { kind: TokenKind::Comment, line, start, end: i });
+            continue;
+        }
+        // Block comment; Rust block comments nest.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Token { kind: TokenKind::Comment, line: start_line, start, end: i });
+            continue;
+        }
+        // Raw strings: r"..."  r#"..."#  br##"..."## — no escapes; the
+        // closing quote must be followed by the opening hash count.
+        if let Some((hashes, body_at)) = raw_string_open(b, i) {
+            let start = i;
+            i = body_at;
+            loop {
+                if i >= n {
+                    break;
+                }
+                if b[i] == b'"' && closes_raw(b, i + 1, hashes) {
+                    i += 1 + hashes;
+                    break;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            toks.push(Token { kind: TokenKind::Str, line, start, end: i });
+            continue;
+        }
+        // Plain and byte strings, with escapes.
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let start = i;
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n && b[i] != b'"' {
+                if b[i] == b'\\' {
+                    i += 1;
+                }
+                if i < n && b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(n);
+            toks.push(Token { kind: TokenKind::Str, line, start, end: i });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' || (c == b'b' && i + 1 < n && b[i + 1] == b'\'') {
+            let start = i;
+            let k = i + if c == b'b' { 2 } else { 1 };
+            if k < n && b[k] == b'\\' {
+                // Escaped char literal: skip to the closing quote.
+                let mut j = k + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+                toks.push(Token { kind: TokenKind::Char, line, start, end: i });
+                continue;
+            }
+            if k + 1 < n && b[k + 1] == b'\'' {
+                i = k + 2;
+                toks.push(Token { kind: TokenKind::Char, line, start, end: i });
+                continue;
+            }
+            if c == b'\'' && k < n && is_ident_start(b[k]) {
+                let mut j = k + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokenKind::Lifetime, line, start, end: j });
+                i = j;
+                continue;
+            }
+            toks.push(Token { kind: TokenKind::Punct, line, start, end: i + 1 });
+            i += 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Token { kind: TokenKind::Ident, line, start, end: i });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // Suffixes stay attached (`0f64`, `1_000u32`); `.` does not.
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Token { kind: TokenKind::Number, line, start, end: i });
+            continue;
+        }
+        toks.push(Token { kind: TokenKind::Punct, line, start, end: i + 1 });
+        i += 1;
+    }
+    toks
+}
+
+/// If `b[i..]` opens a raw string (`r`/`br` + hashes + `"`), return the
+/// hash count and the byte index just past the opening quote.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(b: &[u8], at: usize, hashes: usize) -> bool {
+    (0..hashes).all(|h| b.get(at + h) == Some(&b'#'))
+}
+
+/// Token-index spans `[start, end]` of `#[cfg(test)]` / `#[test]`
+/// attributed items (the whole following item: to the `}` matching its
+/// first `{`, or to a top-level `;`). Rules skip tokens inside these
+/// spans — test code may unwrap, use floats, and so on freely.
+pub fn cfg_test_spans(src: &str, toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !(toks[i].kind == TokenKind::Punct && toks[i].text(src) == "#") {
+            i += 1;
+            continue;
+        }
+        let Some(open) = code_at(toks, i + 1) else { break };
+        if toks[open].text(src) != "[" {
+            i += 1;
+            continue;
+        }
+        // Collect the attribute's tokens up to the matching `]`.
+        let mut depth = 1usize;
+        let mut j = open + 1;
+        let mut attr = String::new();
+        while j < toks.len() && depth > 0 {
+            let t = toks[j].text(src);
+            match t {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                _ => {}
+            }
+            if depth > 0 {
+                attr.push_str(t);
+            }
+            j += 1;
+        }
+        if attr == "test" || attr.starts_with("cfg(test") {
+            // Span runs through the attributed item.
+            let mut braces = 0usize;
+            let mut k = j;
+            while k < toks.len() {
+                match toks[k].text(src) {
+                    "{" => braces += 1,
+                    // `braces == 0` here is a stray close (malformed
+                    // input): end the span rather than underflow.
+                    "}" => {
+                        if braces <= 1 {
+                            break;
+                        }
+                        braces -= 1;
+                    }
+                    ";" if braces == 0 => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            spans.push((i, k));
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Is token index `idx` inside any of `spans`?
+pub fn in_spans(idx: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Index of the next non-comment token at or after `i`.
+fn code_at(toks: &[Token], i: usize) -> Option<usize> {
+    (i..toks.len()).find(|&j| toks[j].kind != TokenKind::Comment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).iter().map(|t| (t.kind, t.text(src).to_string())).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_tokens() {
+        let src = r#"let x = "f64 unwrap"; // f32 here
+            /* f64 { */ let y = 1;"#;
+        let idents: Vec<String> = texts(src)
+            .into_iter()
+            .filter(|(k, _)| *k == TokenKind::Ident)
+            .map(|(_, t)| t)
+            .collect();
+        assert_eq!(idents, ["let", "x", "let", "y"]);
+    }
+
+    #[test]
+    fn raw_strings_skip_escapes_and_quotes() {
+        let src = r##"let s = r#"a "quoted" {brace"#; let t = 2;"##;
+        let toks = texts(src);
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Ident && t == "t"));
+        let braces = toks.iter().filter(|(k, t)| *k == TokenKind::Punct && t == "{").count();
+        assert_eq!(braces, 0);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let e = '\\n'; }";
+        let toks = texts(src);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokenKind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokenKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn numbers_keep_suffix_but_not_dot() {
+        let src = "let a = 1.5f64; let b = pair.0.x;";
+        let nums: Vec<String> = texts(src)
+            .into_iter()
+            .filter(|(k, _)| *k == TokenKind::Number)
+            .map(|(_, t)| t)
+            .collect();
+        assert_eq!(nums, ["1", "5f64", "0"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let z = 1;";
+        let idents: Vec<String> = texts(src)
+            .into_iter()
+            .filter(|(k, _)| *k == TokenKind::Ident)
+            .map(|(_, t)| t)
+            .collect();
+        assert_eq!(idents, ["let", "z"]);
+    }
+
+    #[test]
+    fn test_spans_cover_mod_and_fn() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn a() { x.unwrap(); } }";
+        let toks = lex(src);
+        let spans = cfg_test_spans(src, &toks);
+        assert_eq!(spans.len(), 1);
+        let unwrap_idx = toks
+            .iter()
+            .position(|t| t.text(src) == "unwrap")
+            .expect("unwrap token present");
+        assert!(in_spans(unwrap_idx, &spans));
+        let live_idx = toks.iter().position(|t| t.text(src) == "live").expect("live");
+        assert!(!in_spans(live_idx, &spans));
+    }
+
+    #[test]
+    fn lines_are_tracked() {
+        let src = "a\nb\n  c";
+        let toks = lex(src);
+        let lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, [1, 2, 3]);
+    }
+}

@@ -1,0 +1,433 @@
+//! `lock-order`: rank-checked lock acquisition.
+//!
+//! The repo's locks are few and deliberate — the table store's single
+//! `Mutex<Inner>`, the coordinator queue and metrics mutexes, the
+//! planner's policy `RwLock` — but one nesting does exist
+//! (`Metrics::snapshot` holds the metrics lock while calling
+//! `TableStore::stats`), and nothing used to stop a future edit from
+//! closing that into a cycle. This pass makes the discipline checkable:
+//!
+//! - Each lock field/static is annotated at its declaration:
+//!   `// pcilt-lint: lock-rank(<name> = <rank>)`. Ranks are global; a
+//!   thread may only acquire locks in strictly increasing rank order.
+//! - A function that acquires a lock internally (so callers can nest it
+//!   under their own guard) is annotated `// pcilt-lint: acquires(<name>)`;
+//!   call sites then count as acquisitions of `<name>` — this is how the
+//!   metrics → store edge is seen across module boundaries.
+//!
+//! Within every `fn` body the pass tracks guard bindings (`let g = ...`),
+//! explicit `drop(g)` releases and block-scope expiry, and reports any
+//! acquisition whose rank does not exceed every held lock's rank. The
+//! tracking is lexical, not a borrow checker: guards moved across
+//! functions or stored in structs are out of scope (none exist here) —
+//! the point is to catch the easy-to-introduce nesting regressions.
+
+use std::collections::BTreeMap;
+
+use super::lexer::TokenKind;
+use super::report::Diagnostic;
+use super::rules::{fn_bodies, plain_comment, suppressed_lines, FileData, PRAGMA};
+
+/// Methods whose call on an annotated lock ident is an acquisition.
+const ACQUIRE_METHODS: &[&str] = &["lock", "read", "write"];
+
+/// One annotated lock: global name, rank, declaring file ident.
+struct LockDecl {
+    rank: u32,
+    file: String,
+    line: u32,
+}
+
+/// Everything the annotation pass collects across files.
+#[derive(Default)]
+struct Annotations {
+    /// Lock name -> rank + declaration site.
+    locks: BTreeMap<String, LockDecl>,
+    /// Per file: local ident (field/static name) -> lock name.
+    idents: BTreeMap<String, BTreeMap<String, String>>,
+    /// Method name -> lock name (from `acquires(...)` annotations).
+    acquires: BTreeMap<String, String>,
+    diags: Vec<Diagnostic>,
+}
+
+/// Run the lock-order pass over all scanned files.
+pub fn scan(files: &[FileData]) -> Vec<Diagnostic> {
+    let ann = collect(files);
+    let mut out = ann.diags.clone();
+    for f in files {
+        out.extend(check_file(f, &ann));
+    }
+    out
+}
+
+fn collect(files: &[FileData]) -> Annotations {
+    let mut ann = Annotations::default();
+    for f in files {
+        let code: Vec<usize> =
+            (0..f.toks.len()).filter(|&i| f.toks[i].kind != TokenKind::Comment).collect();
+        for (i, t) in f.toks.iter().enumerate() {
+            if t.kind != TokenKind::Comment {
+                continue;
+            }
+            let text = t.text(&f.src);
+            if !plain_comment(text) {
+                continue;
+            }
+            let Some(at) = text.find(PRAGMA) else { continue };
+            let rest = text[at + PRAGMA.len()..].trim_start();
+            if let Some((name, rank)) = parse_lock_rank(rest) {
+                let Some(ident) = next_field_ident(f, &code, i) else {
+                    ann.diags.push(Diagnostic::new(
+                        &f.rel,
+                        t.line,
+                        "lock-order",
+                        format!("lock-rank({name}) is not followed by a field or static"),
+                    ));
+                    continue;
+                };
+                if let Some(prev) = ann.locks.get(&name) {
+                    ann.diags.push(Diagnostic::new(
+                        &f.rel,
+                        t.line,
+                        "lock-order",
+                        format!(
+                            "lock `{name}` already declared in {}:{}",
+                            prev.file, prev.line
+                        ),
+                    ));
+                    continue;
+                }
+                ann.locks.insert(
+                    name.clone(),
+                    LockDecl { rank, file: f.rel.clone(), line: t.line },
+                );
+                ann.idents.entry(f.rel.clone()).or_default().insert(ident, name);
+            } else if let Some(name) = parse_acquires(rest) {
+                let Some(fn_name) = next_fn_name(f, &code, i) else {
+                    ann.diags.push(Diagnostic::new(
+                        &f.rel,
+                        t.line,
+                        "lock-order",
+                        format!("acquires({name}) is not followed by a fn"),
+                    ));
+                    continue;
+                };
+                ann.acquires.insert(fn_name, name);
+            }
+        }
+    }
+    // `acquires(...)` must name a declared lock.
+    for (fn_name, lock) in &ann.acquires {
+        if !ann.locks.contains_key(lock) {
+            ann.diags.push(Diagnostic::new(
+                "",
+                0,
+                "lock-order",
+                format!("acquires({lock}) on fn `{fn_name}` names an undeclared lock"),
+            ));
+        }
+    }
+    ann
+}
+
+/// `lock-rank(name = rank)` -> (name, rank).
+fn parse_lock_rank(rest: &str) -> Option<(String, u32)> {
+    let body = rest.strip_prefix("lock-rank(")?;
+    let end = body.find(')')?;
+    let (name, rank) = body[..end].split_once('=')?;
+    Some((name.trim().to_string(), rank.trim().parse().ok()?))
+}
+
+/// `acquires(name)` -> name.
+fn parse_acquires(rest: &str) -> Option<String> {
+    let body = rest.strip_prefix("acquires(")?;
+    let end = body.find(')')?;
+    Some(body[..end].trim().to_string())
+}
+
+/// First ident after token `i` that is directly followed by `:` — the
+/// field or static name the annotation binds to. Bounded lookahead so a
+/// stray annotation cannot bind across items.
+fn next_field_ident(f: &FileData, code: &[usize], i: usize) -> Option<String> {
+    let start = code.partition_point(|&c| c < i);
+    for w in code[start..].windows(2).take(12) {
+        if f.toks[w[0]].kind == TokenKind::Ident && f.toks[w[1]].text(&f.src) == ":" {
+            return Some(f.toks[w[0]].text(&f.src).to_string());
+        }
+    }
+    None
+}
+
+/// Name of the first `fn` after token `i` (bounded lookahead).
+fn next_fn_name(f: &FileData, code: &[usize], i: usize) -> Option<String> {
+    let start = code.partition_point(|&c| c < i);
+    for w in code[start..].windows(2).take(12) {
+        if f.toks[w[0]].text(&f.src) == "fn" && f.toks[w[1]].kind == TokenKind::Ident {
+            return Some(f.toks[w[1]].text(&f.src).to_string());
+        }
+    }
+    None
+}
+
+/// A lock currently held in the simulation.
+struct Held {
+    lock: String,
+    /// Guard binding, if the acquisition was a `let` (None = transient).
+    guard: Option<String>,
+    /// Brace depth at the binding — scope exit below this releases it.
+    depth: i32,
+    line: u32,
+}
+
+fn check_file(f: &FileData, ann: &Annotations) -> Vec<Diagnostic> {
+    let empty = BTreeMap::new();
+    let local = ann.idents.get(&f.rel).unwrap_or(&empty);
+    // Held locks only enter via local acquisitions, so files declaring
+    // no locks cannot produce ordering diagnostics.
+    if local.is_empty() {
+        return Vec::new();
+    }
+    let sup = suppressed_lines(f, "lock-order");
+    let code: Vec<usize> =
+        (0..f.toks.len()).filter(|&i| f.toks[i].kind != TokenKind::Comment).collect();
+    let mut out = Vec::new();
+    for fb in fn_bodies(f) {
+        if f.toks[fb.name_idx].text(&f.src) == "drop" {
+            continue; // don't confuse a local `fn drop` impl with releases
+        }
+        let lo = code.partition_point(|&c| c < fb.body.0);
+        let hi = code.partition_point(|&c| c <= fb.body.1);
+        simulate(f, &code[lo..hi], local, ann, &sup, &mut out);
+    }
+    out.sort_by(|a, b| (a.line, a.message.clone()).cmp(&(b.line, b.message.clone())));
+    out.dedup();
+    out
+}
+
+/// Walk one fn body's code tokens, tracking held locks and flagging
+/// acquisitions that don't strictly increase in rank.
+fn simulate(
+    f: &FileData,
+    body: &[usize],
+    local: &BTreeMap<String, String>,
+    ann: &Annotations,
+    sup: &std::collections::BTreeSet<u32>,
+    out: &mut Vec<Diagnostic>,
+) {
+    let text = |ci: usize| f.toks[body[ci]].text(&f.src);
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0i32;
+    let mut pending_let: Option<String> = None;
+    for ci in 0..body.len() {
+        let t = text(ci);
+        match t {
+            "{" => {
+                depth += 1;
+                continue;
+            }
+            "}" => {
+                depth -= 1;
+                held.retain(|h| h.depth <= depth);
+                continue;
+            }
+            ";" => {
+                pending_let = None;
+                continue;
+            }
+            "let" if f.toks[body[ci]].kind == TokenKind::Ident => {
+                // Capture the binding ident (skip `mut`); patterns that
+                // aren't simple idents never bind guards in this repo.
+                let mut j = ci + 1;
+                if j < body.len() && text(j) == "mut" {
+                    j += 1;
+                }
+                if j < body.len() && f.toks[body[j]].kind == TokenKind::Ident {
+                    pending_let = Some(text(j).to_string());
+                }
+                continue;
+            }
+            "drop" => {
+                if ci + 2 < body.len() && text(ci + 1) == "(" {
+                    let g = text(ci + 2).to_string();
+                    held.retain(|h| h.guard.as_deref() != Some(g.as_str()));
+                }
+                continue;
+            }
+            _ => {}
+        }
+        if f.toks[body[ci]].kind != TokenKind::Ident {
+            continue;
+        }
+        // Direct acquisition: `<lock-ident> . lock|read|write (`.
+        if let Some(lock) = local.get(t) {
+            let is_acq = ci + 3 < body.len()
+                && text(ci + 1) == "."
+                && ACQUIRE_METHODS.contains(&text(ci + 2))
+                && text(ci + 3) == "(";
+            if is_acq {
+                let line = f.toks[body[ci]].line;
+                report_order(f, &held, lock, line, ann, sup, out);
+                held.push(Held {
+                    lock: lock.clone(),
+                    guard: pending_let.clone(),
+                    depth,
+                    line,
+                });
+                continue;
+            }
+        }
+        // Cross-module acquisition: `.annotated_fn(` where the callee is
+        // declared `acquires(<lock>)`. Transient: acquired and released
+        // inside the call.
+        if let Some(lock) = ann.acquires.get(t) {
+            let is_call =
+                ci > 0 && text(ci - 1) == "." && ci + 1 < body.len() && text(ci + 1) == "(";
+            if is_call && !held.is_empty() {
+                report_order(f, &held, lock, f.toks[body[ci]].line, ann, sup, out);
+            }
+        }
+    }
+}
+
+/// Emit a diagnostic if acquiring `lock` while anything in `held` has an
+/// equal or higher rank.
+fn report_order(
+    f: &FileData,
+    held: &[Held],
+    lock: &str,
+    line: u32,
+    ann: &Annotations,
+    sup: &std::collections::BTreeSet<u32>,
+    out: &mut Vec<Diagnostic>,
+) {
+    if sup.contains(&line) {
+        return;
+    }
+    let rank = |name: &str| ann.locks.get(name).map(|l| l.rank);
+    let Some(new_rank) = rank(lock) else { return };
+    for h in held {
+        if h.lock == lock {
+            out.push(Diagnostic::new(
+                &f.rel,
+                line,
+                "lock-order",
+                format!("re-acquiring `{lock}` already held since line {}", h.line),
+            ));
+        } else if rank(&h.lock).is_some_and(|r| r >= new_rank) {
+            out.push(Diagnostic::new(
+                &f.rel,
+                line,
+                "lock-order",
+                format!(
+                    "acquiring `{lock}` (rank {new_rank}) while holding `{}` (rank {}) — \
+                     ranks must strictly increase",
+                    h.lock,
+                    rank(&h.lock).unwrap_or(0),
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd(rel: &str, src: &str) -> FileData {
+        FileData::new(rel.to_string(), src.to_string())
+    }
+
+    const DECLS: &str = "pub struct S {\n\
+        // pcilt-lint: lock-rank(low = 10)\n\
+        low: Mutex<u32>,\n\
+        // pcilt-lint: lock-rank(high = 30)\n\
+        high: Mutex<u32>,\n\
+    }\n";
+
+    #[test]
+    fn rank_violation_is_flagged() {
+        let src = format!(
+            "{DECLS}impl S {{\n    fn bad(&self) {{\n        let g = self.high.lock().unwrap();\n\
+             \n        let h = self.low.lock().unwrap();\n    }}\n}}\n"
+        );
+        let d = scan(&[fd("coordinator/s.rs", &src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 11);
+        assert!(d[0].message.contains("`low` (rank 10) while holding `high` (rank 30)"));
+    }
+
+    #[test]
+    fn increasing_ranks_are_fine() {
+        let src = format!(
+            "{DECLS}impl S {{\n    fn good(&self) {{\n        let g = self.low.lock().unwrap();\n\
+             \n        let h = self.high.lock().unwrap();\n    }}\n}}\n"
+        );
+        assert!(scan(&[fd("coordinator/s.rs", &src)]).is_empty());
+    }
+
+    #[test]
+    fn drop_and_scope_release() {
+        let src = format!(
+            "{DECLS}impl S {{\n    fn seq(&self) {{\n        \
+             {{ let g = self.high.lock().unwrap(); }}\n\
+             \n        let h = self.high.lock().unwrap();\n        drop(h);\n\
+             \n        let k = self.low.lock().unwrap();\n    }}\n}}\n"
+        );
+        assert!(scan(&[fd("coordinator/s.rs", &src)]).is_empty(), "scoped guards release");
+    }
+
+    #[test]
+    fn reacquire_same_lock_is_flagged() {
+        let src = format!(
+            "{DECLS}impl S {{\n    fn twice(&self) {{\n        let g = self.low.lock().unwrap();\n\
+             \n        let h = self.low.lock().unwrap();\n    }}\n}}\n"
+        );
+        let d = scan(&[fd("coordinator/s.rs", &src)]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("re-acquiring `low`"));
+    }
+
+    #[test]
+    fn cross_module_acquires_annotation() {
+        let store = "pub struct T {\n\
+            // pcilt-lint: lock-rank(store = 30)\n\
+            inner: Mutex<u32>,\n}\n\
+            impl T {\n\
+            // pcilt-lint: acquires(store)\n\
+            pub fn stats(&self) -> u32 { *self.inner.lock().unwrap() }\n}\n";
+        let metrics_bad = "pub struct M {\n\
+            // pcilt-lint: lock-rank(metrics = 40)\n\
+            inner: Mutex<u32>,\n}\n\
+            impl M {\n\
+            fn snapshot(&self) {\n    let g = self.inner.lock().unwrap();\n\
+            \n    let s = self.store.stats();\n}\n}\n";
+        let d = scan(&[fd("pcilt/store.rs", store), fd("coordinator/metrics.rs", metrics_bad)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].file, "coordinator/metrics.rs");
+        assert!(d[0].message.contains("`store` (rank 30) while holding `metrics` (rank 40)"));
+        // With metrics ranked below store the same shape is legal.
+        let metrics_good =
+            metrics_bad.replace("lock-rank(metrics = 40)", "lock-rank(metrics = 20)");
+        let d = scan(&[fd("pcilt/store.rs", store), fd("coordinator/metrics.rs", &metrics_good)]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn duplicate_lock_name_rejected() {
+        let a = "struct A {\n// pcilt-lint: lock-rank(q = 10)\n    inner: Mutex<u32>,\n}\n";
+        let b = "struct B {\n// pcilt-lint: lock-rank(q = 20)\n    inner: Mutex<u32>,\n}\n";
+        let d = scan(&[fd("coordinator/a.rs", a), fd("coordinator/b.rs", b)]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("already declared"));
+    }
+
+    #[test]
+    fn pragma_suppresses_violation() {
+        let src = format!(
+            "{DECLS}impl S {{\n    fn bad(&self) {{\n        let g = self.high.lock().unwrap();\n\
+             \n        // pcilt-lint: allow(lock-order)\n        \
+             let h = self.low.lock().unwrap();\n    }}\n}}\n"
+        );
+        assert!(scan(&[fd("coordinator/s.rs", &src)]).is_empty());
+    }
+}

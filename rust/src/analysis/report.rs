@@ -1,0 +1,142 @@
+//! Diagnostics and report rendering for `pcilt lint`.
+//!
+//! Every rule emits [`Diagnostic`]s; the [`Report`] collects them,
+//! sorts them into a stable `file:line` order and renders either the
+//! human `path:line: rule: message` form or a machine-readable JSON
+//! document (`pcilt lint --json`) for CI annotation tooling. The JSON
+//! is hand-rolled like `util/benchjson` — the crate is dependency-free.
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the lint root (`pcilt/store.rs`).
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Stable rule name (`float-free`, `no-panic`, ...); also the name
+    /// `// pcilt-lint: allow(<rule>)` pragmas suppress.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: u32, rule: &'static str, message: String) -> Diagnostic {
+        Diagnostic { file: file.to_string(), line, rule, message }
+    }
+}
+
+/// The result of linting a tree: diagnostics plus scan statistics.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Stable order: by file, then line, then rule name.
+    pub fn sort(&mut self) {
+        self.diagnostics
+            .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    }
+
+    /// Human-readable listing, one `path:line: rule: message` per
+    /// violation, followed by a summary line.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}:{}: {}: {}\n", d.file, d.line, d.rule, d.message));
+        }
+        out.push_str(&format!(
+            "pcilt lint: {} file(s) scanned, {} violation(s)\n",
+            self.files,
+            self.diagnostics.len()
+        ));
+        out
+    }
+
+    /// Machine-readable JSON: `{"files":N,"violations":N,"diagnostics":
+    /// [{"file":...,"line":N,"rule":...,"message":...},...]}`.
+    pub fn json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"files\":{},\"violations\":{},\"diagnostics\":[",
+            self.files,
+            self.diagnostics.len()
+        ));
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\"}}",
+                escape(&d.file),
+                d.line,
+                escape(d.rule),
+                escape(&d.message)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report { files: 3, ..Report::default() };
+        r.diagnostics.push(Diagnostic::new("b.rs", 9, "no-panic", "x".into()));
+        r.diagnostics.push(Diagnostic::new("a.rs", 2, "float-free", "`f64` token".into()));
+        r.sort();
+        r
+    }
+
+    #[test]
+    fn text_is_sorted_and_summarized() {
+        let t = sample().text();
+        let a = t.find("a.rs:2").expect("a.rs first");
+        let b = t.find("b.rs:9").expect("b.rs second");
+        assert!(a < b);
+        assert!(t.contains("3 file(s) scanned, 2 violation(s)"));
+    }
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let mut r = Report { files: 1, ..Report::default() };
+        r.diagnostics
+            .push(Diagnostic::new("a.rs", 1, "line-width", "has \"quotes\"\n".into()));
+        let j = r.json();
+        assert!(j.contains("\"violations\":1"));
+        assert!(j.contains("has \\\"quotes\\\"\\n"));
+    }
+
+    #[test]
+    fn clean_report() {
+        let r = Report { files: 2, ..Report::default() };
+        assert!(r.is_clean());
+        assert!(r.json().contains("\"diagnostics\":[]"));
+    }
+}

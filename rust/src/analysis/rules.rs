@@ -1,0 +1,775 @@
+//! The `pcilt lint` rule engine: per-module policy tables, pragma
+//! suppression, and every single-file rule. The lock-order rule lives in
+//! [`super::lockorder`]; cross-file checks (`registry`) are here because
+//! they share the policy tables.
+//!
+//! ## Rules
+//!
+//! | rule            | scope                         | invariant                       |
+//! |-----------------|-------------------------------|---------------------------------|
+//! | `float-free`    | code-domain modules           | no `f32`/`f64` tokens           |
+//! | `det-persist`   | artifact serde fns            | no nondeterminism sources       |
+//! | `no-panic`      | coordinator + store           | no `unwrap()`/`expect()`        |
+//! | `registry`      | engines + store               | full engine surface, kind tags  |
+//! | `line-width`    | everywhere                    | ≤ 100 chars per line            |
+//! | `brace-balance` | everywhere                    | balanced `{}` `()` `[]`         |
+//! | `lock-order`    | annotated locks               | strictly increasing ranks       |
+//!
+//! Test code (`#[cfg(test)]` / `#[test]` items) is exempt from all
+//! token rules. Intentional exceptions are annotated in place:
+//!
+//! ```text
+//! // pcilt-lint: allow(<rule>[, <rule>...])
+//! ```
+//!
+//! At the end of a code line the pragma suppresses that line; on a line
+//! of its own it suppresses the next item (through the `}` matching its
+//! first `{`, or to the next top-level `;`).
+
+use std::collections::BTreeSet;
+
+use super::lexer::{self, Token, TokenKind};
+use super::report::Diagnostic;
+
+// ---------------------------------------------------------------------------
+// Module policy
+// ---------------------------------------------------------------------------
+
+/// Code-domain modules that must stay float-free: table build, lookup,
+/// packing and the fused stage walk are integer/bit-exact by the paper's
+/// claim. Planner scoring, calibration timing, metrics and the quant
+/// boundary are the legal float homes and are *not* listed.
+pub const FLOAT_FREE_FILES: &[&str] = &[
+    "pcilt/tile.rs",
+    "pcilt/table.rs",
+    "pcilt/packed.rs",
+    "pcilt/fused.rs",
+    "pcilt/lookup.rs",
+    "pcilt/dm.rs",
+    "pcilt/segment.rs",
+    "pcilt/mixed.rs",
+    "pcilt/shared.rs",
+    "util/bitpack.rs",
+];
+
+/// Modules holding `tables.bin` / `calibration.bin` serialization code.
+/// Only the named serde functions inside them are scanned.
+pub const PERSIST_FILES: &[&str] = &[
+    "pcilt/store.rs",
+    "pcilt/calibration.rs",
+    "pcilt/table.rs",
+    "pcilt/packed.rs",
+    "pcilt/fused.rs",
+    "pcilt/segment.rs",
+    "pcilt/mixed.rs",
+    "pcilt/shared.rs",
+];
+
+/// Serialization-path function names: byte-for-byte determinism is the
+/// invariant (identical stores must produce identical files — the save
+/// path iterates `BTreeMap`s in key order for exactly this reason).
+const PERSIST_FNS: &[&str] = &[
+    "write_to",
+    "read_from",
+    "save",
+    "load",
+    "load_for_host",
+    "serialized",
+    "parse_bin",
+    "parse_manifest",
+    "refresh_cold_index",
+    "read_cold_body",
+    "cache_info",
+    "attach_cold",
+];
+
+/// Nondeterminism sources banned inside serialization paths: unordered
+/// iteration, wall-clock reads, randomness.
+const BANNED_IN_PERSIST: &[&str] =
+    &["HashMap", "HashSet", "Instant", "SystemTime", "Rng", "random", "thread_rng"];
+
+/// `no-panic` scope: the serving coordinator and the table store — the
+/// long-running, lock-holding subsystems where a stray panic poisons a
+/// mutex or kills a worker.
+pub const NO_PANIC_PREFIXES: &[&str] = &["coordinator/"];
+pub const NO_PANIC_FILES: &[&str] = &["pcilt/store.rs"];
+
+/// `unwrap`/`expect` directly on these methods' results is the allowed
+/// poison/panic-propagation idiom (`.lock().unwrap()`, `.join().expect()`):
+/// the panic is deliberate escalation of another thread's panic, not a
+/// swallowed error path.
+const ALLOWED_PANIC_METHODS: &[&str] = &["lock", "read", "write", "wait", "wait_timeout", "join"];
+
+/// Lookup-family engine modules that must expose the full engine surface:
+/// `conv_rows` (band-sliced execution for the batch-parallel path) and
+/// `from_store` (table borrowing for warm boots).
+pub const REQUIRE_CONV_ROWS: &[&str] = &[
+    "pcilt/lookup.rs",
+    "pcilt/shared.rs",
+    "pcilt/segment.rs",
+    "pcilt/mixed.rs",
+    "pcilt/dm.rs",
+];
+pub const REQUIRE_FROM_STORE: &[&str] =
+    &["pcilt/lookup.rs", "pcilt/shared.rs", "pcilt/segment.rs", "pcilt/mixed.rs"];
+
+/// Hard cap on source line width, in chars (matches rustfmt `max_width`).
+pub const MAX_WIDTH: usize = 100;
+
+/// The pragma marker searched for inside comments.
+pub const PRAGMA: &str = "pcilt-lint:";
+
+// ---------------------------------------------------------------------------
+// Scanned file
+// ---------------------------------------------------------------------------
+
+/// One scanned source file: relative path, text, tokens and test spans.
+pub struct FileData {
+    pub rel: String,
+    pub src: String,
+    pub toks: Vec<Token>,
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl FileData {
+    pub fn new(rel: String, src: String) -> FileData {
+        let toks = lexer::lex(&src);
+        let test_spans = lexer::cfg_test_spans(&src, &toks);
+        FileData { rel, src, toks, test_spans }
+    }
+
+    fn text(&self, i: usize) -> &str {
+        self.toks[i].text(&self.src)
+    }
+
+    fn in_test(&self, i: usize) -> bool {
+        lexer::in_spans(i, &self.test_spans)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pragmas
+// ---------------------------------------------------------------------------
+
+/// Pragmas and annotations live in plain `//` comments only: doc
+/// comments (`///`, `//!`) are prose and may quote pragma syntax as
+/// examples without activating it.
+pub fn plain_comment(text: &str) -> bool {
+    text.starts_with("//") && !text.starts_with("///") && !text.starts_with("//!")
+}
+
+/// Lines suppressed for `rule` by `// pcilt-lint: allow(...)` pragmas.
+pub fn suppressed_lines(f: &FileData, rule: &str) -> BTreeSet<u32> {
+    let mut sup = BTreeSet::new();
+    for (i, t) in f.toks.iter().enumerate() {
+        if t.kind != TokenKind::Comment {
+            continue;
+        }
+        let text = t.text(&f.src);
+        if !plain_comment(text) || !pragma_allows(text, rule) {
+            continue;
+        }
+        sup.insert(t.line);
+        // End-of-line pragma (code precedes it on the same line): that
+        // line only. Own-line pragma: suppress through the next item.
+        let trailing = i > 0 && f.toks[i - 1].line == t.line;
+        if trailing {
+            continue;
+        }
+        let mut depth = 0usize;
+        for j in i + 1..f.toks.len() {
+            let tj = &f.toks[j];
+            if tj.kind == TokenKind::Comment {
+                continue;
+            }
+            sup.insert(tj.line);
+            match tj.text(&f.src) {
+                "{" => depth += 1,
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+        }
+    }
+    sup
+}
+
+/// Does a comment's text carry `pcilt-lint: allow(...)` naming `rule`?
+fn pragma_allows(comment: &str, rule: &str) -> bool {
+    let Some(at) = comment.find(PRAGMA) else { return false };
+    let rest = comment[at + PRAGMA.len()..].trim_start();
+    let Some(list) = rest.strip_prefix("allow(") else { return false };
+    let Some(end) = list.find(')') else { return false };
+    list[..end].split(',').any(|r| r.trim() == rule)
+}
+
+// ---------------------------------------------------------------------------
+// Function bodies (shared by det-persist and lock-order)
+// ---------------------------------------------------------------------------
+
+/// A `fn` item: name plus token-index span of its `{ ... }` body
+/// (declarations without bodies — trait methods — are skipped).
+pub struct FnBody {
+    pub name_idx: usize,
+    pub body: (usize, usize),
+}
+
+/// Every `fn` with a body in the file, including nested ones.
+pub fn fn_bodies(f: &FileData) -> Vec<FnBody> {
+    let mut out = Vec::new();
+    let code: Vec<usize> =
+        (0..f.toks.len()).filter(|&i| f.toks[i].kind != TokenKind::Comment).collect();
+    for (ci, &i) in code.iter().enumerate() {
+        if !(f.toks[i].kind == TokenKind::Ident && f.text(i) == "fn") {
+            continue;
+        }
+        // `fn` pointer types (`fn(usize) -> u8`) have no name ident.
+        let Some(&name_i) = code.get(ci + 1) else { continue };
+        if f.toks[name_i].kind != TokenKind::Ident {
+            continue;
+        }
+        // Find the body `{`; a `;` first (at bracket depth 0: `[u8; 4]`
+        // array types carry semicolons) means a bodyless declaration.
+        let mut j = ci + 2;
+        let mut brackets = 0i32;
+        let mut open = None;
+        while let Some(&k) = code.get(j) {
+            match f.text(k) {
+                "[" => brackets += 1,
+                "]" => brackets -= 1,
+                "{" => {
+                    open = Some(j);
+                    break;
+                }
+                ";" if brackets == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 0i32;
+        let mut close = open;
+        for (jj, &k) in code.iter().enumerate().skip(open) {
+            match f.text(k) {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = jj;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push(FnBody { name_idx: name_i, body: (code[open], code[close]) });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Single-file rules
+// ---------------------------------------------------------------------------
+
+/// Run every single-file rule that applies to `f` per the policy tables.
+pub fn scan_file(f: &FileData) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    out.extend(line_width(f));
+    out.extend(brace_balance(f));
+    if FLOAT_FREE_FILES.contains(&f.rel.as_str()) {
+        out.extend(float_free(f));
+    }
+    if PERSIST_FILES.contains(&f.rel.as_str()) {
+        out.extend(det_persist(f));
+    }
+    if NO_PANIC_FILES.contains(&f.rel.as_str())
+        || NO_PANIC_PREFIXES.iter().any(|p| f.rel.starts_with(p))
+    {
+        out.extend(no_panic(f));
+    }
+    out
+}
+
+/// `line-width`: no source line over [`MAX_WIDTH`] chars.
+fn line_width(f: &FileData) -> Vec<Diagnostic> {
+    let sup = suppressed_lines(f, "line-width");
+    let mut out = Vec::new();
+    for (ln0, line) in f.src.lines().enumerate() {
+        let ln = ln0 as u32 + 1;
+        let w = line.chars().count();
+        if w > MAX_WIDTH && !sup.contains(&ln) {
+            out.push(Diagnostic::new(
+                &f.rel,
+                ln,
+                "line-width",
+                format!("line is {w} chars (max {MAX_WIDTH})"),
+            ));
+        }
+    }
+    out
+}
+
+/// `brace-balance`: `{}` `()` `[]` balanced over code tokens (string,
+/// char and comment contents excluded by the lexer).
+fn brace_balance(f: &FileData) -> Vec<Diagnostic> {
+    let mut depths = [0i64; 3];
+    let mut last_line = 1;
+    for t in &f.toks {
+        if !matches!(t.kind, TokenKind::Punct) {
+            continue;
+        }
+        last_line = t.line;
+        let slot = match t.text(&f.src) {
+            "{" => (0, 1),
+            "}" => (0, -1),
+            "(" => (1, 1),
+            ")" => (1, -1),
+            "[" => (2, 1),
+            "]" => (2, -1),
+            _ => continue,
+        };
+        depths[slot.0] += slot.1;
+        if depths[slot.0] < 0 {
+            return vec![Diagnostic::new(
+                &f.rel,
+                t.line,
+                "brace-balance",
+                format!("unmatched closing `{}`", t.text(&f.src)),
+            )];
+        }
+    }
+    let names = ["{ }", "( )", "[ ]"];
+    for (d, name) in depths.iter().zip(names) {
+        if *d != 0 {
+            return vec![Diagnostic::new(
+                &f.rel,
+                last_line,
+                "brace-balance",
+                format!("{d} unclosed `{name}` pair(s) at end of file"),
+            )];
+        }
+    }
+    Vec::new()
+}
+
+/// `float-free`: no `f32`/`f64` idents or float-suffixed literals in
+/// non-test code of code-domain modules.
+fn float_free(f: &FileData) -> Vec<Diagnostic> {
+    let sup = suppressed_lines(f, "float-free");
+    let mut out = Vec::new();
+    for (i, t) in f.toks.iter().enumerate() {
+        let hit = match t.kind {
+            TokenKind::Ident => matches!(t.text(&f.src), "f32" | "f64"),
+            TokenKind::Number => {
+                t.text(&f.src).ends_with("f32") || t.text(&f.src).ends_with("f64")
+            }
+            _ => false,
+        };
+        if hit && !f.in_test(i) && !sup.contains(&t.line) {
+            out.push(Diagnostic::new(
+                &f.rel,
+                t.line,
+                "float-free",
+                format!("`{}` in float-free code-domain module", t.text(&f.src)),
+            ));
+        }
+    }
+    out
+}
+
+/// `det-persist`: serialization-path functions may not touch
+/// nondeterminism sources (unordered maps, clocks, PRNG).
+fn det_persist(f: &FileData) -> Vec<Diagnostic> {
+    let sup = suppressed_lines(f, "det-persist");
+    let mut out = Vec::new();
+    for fb in fn_bodies(f) {
+        if !PERSIST_FNS.contains(&f.text(fb.name_idx)) || f.in_test(fb.name_idx) {
+            continue;
+        }
+        for i in fb.body.0..=fb.body.1 {
+            let t = &f.toks[i];
+            if t.kind == TokenKind::Ident
+                && BANNED_IN_PERSIST.contains(&t.text(&f.src))
+                && !sup.contains(&t.line)
+            {
+                out.push(Diagnostic::new(
+                    &f.rel,
+                    t.line,
+                    "det-persist",
+                    format!(
+                        "`{}` inside serialization path `{}` breaks byte determinism",
+                        t.text(&f.src),
+                        f.text(fb.name_idx)
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `no-panic`: no `.unwrap()` / `.expect()` in non-test code, except
+/// directly on [`ALLOWED_PANIC_METHODS`] results (poison propagation).
+fn no_panic(f: &FileData) -> Vec<Diagnostic> {
+    let sup = suppressed_lines(f, "no-panic");
+    let mut out = Vec::new();
+    let code: Vec<usize> =
+        (0..f.toks.len()).filter(|&i| f.toks[i].kind != TokenKind::Comment).collect();
+    for (ci, &i) in code.iter().enumerate() {
+        let t = &f.toks[i];
+        if t.kind != TokenKind::Ident || !matches!(t.text(&f.src), "unwrap" | "expect") {
+            continue;
+        }
+        if ci == 0 || f.text(code[ci - 1]) != "." {
+            continue;
+        }
+        if f.in_test(i) || sup.contains(&t.line) {
+            continue;
+        }
+        if is_allowed_panic_receiver(f, &code, ci) {
+            continue;
+        }
+        out.push(Diagnostic::new(
+            &f.rel,
+            t.line,
+            "no-panic",
+            format!(
+                "`.{}()` in {}; propagate with `?` / handle, or pragma if intended",
+                t.text(&f.src),
+                if f.rel.starts_with("coordinator/") { "coordinator" } else { "store" }
+            ),
+        ));
+    }
+    out
+}
+
+/// Walk back over the receiver call's balanced parens: `.lock().unwrap()`
+/// has code tokens `. lock ( ) . unwrap`; find the `(` matching the `)`
+/// just before the `.`, and accept when the ident before it is an
+/// allowed method preceded by `.`.
+fn is_allowed_panic_receiver(f: &FileData, code: &[usize], unwrap_ci: usize) -> bool {
+    if unwrap_ci < 2 || f.text(code[unwrap_ci - 2]) != ")" {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut j = unwrap_ci - 2;
+    loop {
+        match f.text(code[j]) {
+            ")" => depth += 1,
+            "(" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j >= 2
+        && ALLOWED_PANIC_METHODS.contains(&f.text(code[j - 1]))
+        && f.text(code[j - 2]) == "."
+}
+
+// ---------------------------------------------------------------------------
+// Cross-file rule: registry completeness
+// ---------------------------------------------------------------------------
+
+/// `registry`: (a) every non-test `impl ConvEngine` file overrides
+/// `info()` (the default under-reports table bytes) and — per policy —
+/// defines `conv_rows` / `from_store`; (b) the store's `KIND_*` constants
+/// each appear in a write arm (`=> KIND_X`) and a read arm (`KIND_X =>`),
+/// and the `TableArtifact` variant count matches the constant count.
+pub fn registry(files: &[FileData]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in files {
+        out.extend(engine_surface(f));
+        if f.rel == "pcilt/store.rs" {
+            out.extend(kind_tags(f));
+        }
+    }
+    out
+}
+
+fn engine_surface(f: &FileData) -> Vec<Diagnostic> {
+    let sup = suppressed_lines(f, "registry");
+    let code: Vec<usize> =
+        (0..f.toks.len()).filter(|&i| f.toks[i].kind != TokenKind::Comment).collect();
+    let mut impl_line = None;
+    for (ci, &i) in code.iter().enumerate() {
+        if f.text(i) == "impl"
+            && code.get(ci + 1).map(|&j| f.text(j)) == Some("ConvEngine")
+            && code.get(ci + 2).map(|&j| f.text(j)) == Some("for")
+            && !f.in_test(i)
+        {
+            impl_line = Some(f.toks[i].line);
+            break;
+        }
+    }
+    let Some(impl_line) = impl_line else { return Vec::new() };
+    let has_fn = |name: &str| {
+        code.iter().enumerate().any(|(ci, &i)| {
+            f.text(i) == "fn"
+                && code.get(ci + 1).map(|&j| f.text(j)) == Some(name)
+                && !f.in_test(i)
+        })
+    };
+    let mut missing: Vec<&str> = Vec::new();
+    if !has_fn("info") {
+        missing.push("info");
+    }
+    if REQUIRE_CONV_ROWS.contains(&f.rel.as_str()) && !has_fn("conv_rows") {
+        missing.push("conv_rows");
+    }
+    if REQUIRE_FROM_STORE.contains(&f.rel.as_str()) && !has_fn("from_store") {
+        missing.push("from_store");
+    }
+    if missing.is_empty() || sup.contains(&impl_line) {
+        return Vec::new();
+    }
+    vec![Diagnostic::new(
+        &f.rel,
+        impl_line,
+        "registry",
+        format!("`impl ConvEngine` file lacks required fn(s): {}", missing.join(", ")),
+    )]
+}
+
+fn kind_tags(f: &FileData) -> Vec<Diagnostic> {
+    let sup = suppressed_lines(f, "registry");
+    let code: Vec<usize> =
+        (0..f.toks.len()).filter(|&i| f.toks[i].kind != TokenKind::Comment).collect();
+    // Declarations: `const KIND_X: u8 = n;` outside tests.
+    let mut decls: Vec<(String, u32)> = Vec::new();
+    // Uses: `=> KIND_X` (write arm) and `KIND_X =>` (read arm).
+    let mut written: BTreeSet<String> = BTreeSet::new();
+    let mut read: BTreeSet<String> = BTreeSet::new();
+    for (ci, &i) in code.iter().enumerate() {
+        let t = f.text(i);
+        if !t.starts_with("KIND_") || f.in_test(i) {
+            continue;
+        }
+        if ci > 0 && f.text(code[ci - 1]) == "const" {
+            decls.push((t.to_string(), f.toks[i].line));
+            continue;
+        }
+        if ci >= 2 && f.text(code[ci - 1]) == ">" && f.text(code[ci - 2]) == "=" {
+            written.insert(t.to_string());
+        }
+        if ci + 2 < code.len()
+            && f.text(code[ci + 1]) == "="
+            && f.text(code[ci + 2]) == ">"
+        {
+            read.insert(t.to_string());
+        }
+    }
+    if decls.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (name, line) in &decls {
+        let mut gaps: Vec<&str> = Vec::new();
+        if !written.contains(name) {
+            gaps.push("write arm (`=> KIND`)");
+        }
+        if !read.contains(name) {
+            gaps.push("read arm (`KIND =>`)");
+        }
+        if !gaps.is_empty() && !sup.contains(line) {
+            out.push(Diagnostic::new(
+                &f.rel,
+                *line,
+                "registry",
+                format!("table kind `{name}` has no {}", gaps.join(" or ")),
+            ));
+        }
+    }
+    // Variant count of `enum TableArtifact` must match the tag count.
+    if let Some((variants, line)) = enum_variant_count(f, &code, "TableArtifact") {
+        if variants != decls.len() && !sup.contains(&line) {
+            out.push(Diagnostic::new(
+                &f.rel,
+                line,
+                "registry",
+                format!(
+                    "TableArtifact has {variants} variants but {} KIND_* constants",
+                    decls.len()
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Count the variants of `enum <name> { ... }` (idents at brace depth 1
+/// in variant-head position). Returns `(count, decl_line)`.
+fn enum_variant_count(f: &FileData, code: &[usize], name: &str) -> Option<(usize, u32)> {
+    let at = code.windows(2).position(|w| f.text(w[0]) == "enum" && f.text(w[1]) == name)?;
+    let line = f.toks[code[at]].line;
+    let mut depth = 0i32;
+    let mut parens = 0i32;
+    let mut count = 0usize;
+    let mut head = false; // next ident in variant-head position
+    for &i in &code[at + 2..] {
+        match f.text(i) {
+            "{" => {
+                depth += 1;
+                if depth == 1 {
+                    head = true;
+                }
+            }
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            "(" => parens += 1,
+            ")" => parens -= 1,
+            // Commas inside a variant's field list don't start a variant.
+            "," if depth == 1 && parens == 0 => head = true,
+            _ => {
+                if depth == 1 && parens == 0 && head && f.toks[i].kind == TokenKind::Ident {
+                    count += 1;
+                    head = false;
+                }
+            }
+        }
+    }
+    Some((count, line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd(rel: &str, src: &str) -> FileData {
+        FileData::new(rel.to_string(), src.to_string())
+    }
+
+    #[test]
+    fn float_free_flags_and_pragma_suppresses() {
+        let f = fd(
+            "pcilt/tile.rs",
+            "fn a(x: f64) {}\n\
+             fn b(y: f32) {} // pcilt-lint: allow(float-free)\n\
+             fn c() { let z = 1.0f64; }\n",
+        );
+        let d = scan_file(&f);
+        let lines: Vec<u32> =
+            d.iter().filter(|d| d.rule == "float-free").map(|d| d.line).collect();
+        assert_eq!(lines, [1, 3]);
+    }
+
+    #[test]
+    fn own_line_pragma_covers_next_item() {
+        let f = fd(
+            "pcilt/tile.rs",
+            "// pcilt-lint: allow(float-free)\n\
+             fn scaled() -> f64 {\n    let x: f64 = 0.0;\n    x\n}\n\
+             fn after(y: f32) {}\n",
+        );
+        let d = scan_file(&f);
+        let lines: Vec<u32> =
+            d.iter().filter(|d| d.rule == "float-free").map(|d| d.line).collect();
+        assert_eq!(lines, [6], "only the item after the pragma scope trips");
+    }
+
+    #[test]
+    fn no_panic_allows_poison_idiom() {
+        let f = fd(
+            "coordinator/queue.rs",
+            "fn pop(&self) {\n\
+             let g = self.inner.lock().unwrap();\n\
+             let g = self.cv.wait_timeout(g, d).unwrap();\n\
+             let v = g.items.pop().unwrap();\n\
+             h.join().expect(\"worker\");\n}\n",
+        );
+        let lines: Vec<u32> =
+            scan_file(&f).iter().filter(|d| d.rule == "no-panic").map(|d| d.line).collect();
+        assert_eq!(lines, [4]);
+    }
+
+    #[test]
+    fn no_panic_skips_tests() {
+        let f = fd(
+            "coordinator/worker.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n",
+        );
+        assert!(scan_file(&f).iter().all(|d| d.rule != "no-panic"));
+    }
+
+    #[test]
+    fn det_persist_scopes_to_serde_fns() {
+        let f = fd(
+            "pcilt/store.rs",
+            "fn save(&self) { let m = HashMap::new(); }\n\
+             fn prebuild(&self) { let s = HashSet::new(); }\n",
+        );
+        let d: Vec<_> = scan_file(&f).into_iter().filter(|d| d.rule == "det-persist").collect();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 1);
+        assert!(d[0].message.contains("HashMap"));
+    }
+
+    #[test]
+    fn brace_balance_and_width() {
+        let wide = "x".repeat(120);
+        let f = fd("pcilt/memory.rs", &format!("fn a() {{\n{wide}\n"));
+        let d = scan_file(&f);
+        assert!(d.iter().any(|d| d.rule == "line-width" && d.line == 2));
+        assert!(d.iter().any(|d| d.rule == "brace-balance"));
+    }
+
+    #[test]
+    fn registry_kind_tags() {
+        let f = fd(
+            "pcilt/store.rs",
+            "const KIND_A: u8 = 0;\nconst KIND_B: u8 = 1;\n\
+             enum TableArtifact { A(u8), B(u8) }\n\
+             fn kind(&self) -> u8 { match self { Self::A(_) => KIND_A, Self::B(_) => KIND_B } }\n\
+             fn parse(k: u8) { match k { KIND_A => {} _ => {} } }\n",
+        );
+        let d: Vec<_> = registry(&[f]).into_iter().filter(|d| d.rule == "registry").collect();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 2);
+        assert!(d[0].message.contains("KIND_B"), "{}", d[0].message);
+        assert!(d[0].message.contains("read arm"));
+    }
+
+    #[test]
+    fn registry_engine_surface() {
+        let f = fd(
+            "pcilt/lookup.rs",
+            "impl ConvEngine for LookupEngine {\n    fn name(&self) -> &str { \"l\" }\n}\n",
+        );
+        let d = registry(&[f]);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 1);
+        assert!(d[0].message.contains("info"));
+        assert!(d[0].message.contains("conv_rows"));
+        assert!(d[0].message.contains("from_store"));
+    }
+
+    #[test]
+    fn registry_variant_count_mismatch() {
+        let f = fd(
+            "pcilt/store.rs",
+            "const KIND_A: u8 = 0;\n\
+             enum TableArtifact { A(u8), B(u8) }\n\
+             fn kind(&self) -> u8 { KIND_A }\n\
+             fn w() { match 0 { _ => KIND_A } }\nfn r(k: u8) { match k { KIND_A => {} } }\n",
+        );
+        let d = registry(&[f]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("2 variants but 1"));
+    }
+}

@@ -214,6 +214,14 @@ SUBCOMMANDS:
               --budget-mb N     byte budget while building (default 0 = off)
               --all             prebuild every table engine, not just the
                                 planner's winner
+  lint      static-analysis gate: lint the crate sources against the
+            invariant rules (float-free code domain, deterministic
+            persistence, no-panic coordinator/store, engine registry
+            completeness, lock-rank discipline, line width and brace
+            balance — see DESIGN.md §14); exits nonzero on violations
+              --root DIR        source root to lint (default rust/src,
+                                or src when run from rust/)
+              --json            machine-readable report on stdout
   bench-check  CI bench-regression gate: compare committed baseline
             BENCH_*.json throughput against freshly measured files
               --baselines DIR   committed baselines (default benches/baselines)

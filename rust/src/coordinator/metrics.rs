@@ -62,6 +62,7 @@ struct Inner {
 
 /// Thread-safe metrics collector.
 pub struct Metrics {
+    // pcilt-lint: lock-rank(metrics = 20)
     inner: Mutex<Inner>,
     /// Store whose counters ride along in every snapshot.
     store: Arc<TableStore>,

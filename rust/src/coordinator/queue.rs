@@ -31,6 +31,7 @@ struct Inner<T> {
 
 /// Bounded queue. `T` is typically [`super::request::InferRequest`].
 pub struct BoundedQueue<T> {
+    // pcilt-lint: lock-rank(queue = 10)
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
     capacity: usize,
@@ -101,7 +102,12 @@ impl<T> BoundedQueue<T> {
             g = self.not_empty.wait(g).unwrap();
         }
         let mut batch = Vec::with_capacity(max_batch);
-        let (t0, first) = g.items.pop_front().unwrap();
+        let Some((t0, first)) = g.items.pop_front() else {
+            // Unreachable: the wait loop above established non-emptiness
+            // and the lock has been held since.
+            debug_assert!(false, "pop after non-empty wait");
+            return None;
+        };
         batch.push(first);
         // Gather until size or deadline.
         loop {

@@ -368,18 +368,17 @@ impl ModelRegistry {
         self.entries.values().map(|e| e.shared_keys).sum()
     }
 
-    /// Per-model metrics snapshots, in config order.
+    /// Per-model metrics snapshots, in config order. Models whose pool
+    /// is missing (impossible after a successful `start`, which registers
+    /// every pool under its engine name) are skipped rather than panicked
+    /// on — a metrics read must never take the registry down.
     pub fn metrics(&self) -> Vec<(String, MetricsSnapshot)> {
         self.order
             .iter()
-            .map(|name| {
-                let e = &self.entries[name];
-                let m = e
-                    .router
-                    .pool(&e.engine)
-                    .expect("model pool registered under its engine name")
-                    .metrics();
-                (name.clone(), m)
+            .filter_map(|name| {
+                let e = self.entries.get(name)?;
+                let m = e.router.pool(&e.engine)?.metrics();
+                Some((name.clone(), m))
             })
             .collect()
     }

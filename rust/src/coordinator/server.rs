@@ -110,7 +110,7 @@ impl Server {
                         }
                         log::debug!("worker {wid} drained, exiting");
                     })
-                    .expect("spawning worker"),
+                    .map_err(|e| anyhow::anyhow!("spawning worker {wid}: {e}"))?,
             );
         }
         Ok(Server {

@@ -230,10 +230,13 @@ impl Backend {
                     // Pick the smallest exported batch >= remaining, else
                     // the largest and chunk.
                     let remaining = b - i;
-                    let (exe_b, exe) = models
+                    let Some((exe_b, exe)) = models
                         .iter()
                         .find(|(eb, _)| *eb >= remaining)
-                        .unwrap_or_else(|| models.last().unwrap());
+                        .or_else(|| models.last())
+                    else {
+                        anyhow::bail!("hlo backend has no exported batch models");
+                    };
                     let take = remaining.min(*exe_b);
                     // Pad to the executable's batch with zero images.
                     let zero = Tensor4::<u8>::zeros(Shape4::new(1, *img, *img, 1));

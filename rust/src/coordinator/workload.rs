@@ -86,6 +86,16 @@ pub fn run_poisson_models(
     assert!(rate_rps > 0.0);
     let names: Vec<String> = registry.models().iter().map(|s| s.to_string()).collect();
     assert!(!names.is_empty());
+    // Resolve each model's spec once up front; every name came from the
+    // registry itself, so the lookup cannot miss.
+    let fleet: Vec<(String, usize, u32)> = names
+        .iter()
+        .filter_map(|name| {
+            let e = registry.model(name)?;
+            Some((name.clone(), e.spec.img, e.spec.act_bits))
+        })
+        .collect();
+    assert!(!fleet.is_empty());
     let mut rng = Rng::new(seed);
     let t0 = Instant::now();
     let mut accepted = 0usize;
@@ -99,11 +109,8 @@ pub fn run_poisson_models(
         if next_arrival > now {
             std::thread::sleep(next_arrival - now);
         }
-        let name = &names[i % names.len()];
-        let entry = registry.model(name).expect("registered model");
-        let img = entry.spec.img;
-        let bits = entry.spec.act_bits;
-        let codes = Tensor4::random_activations(Shape4::new(1, img, img, 1), bits, &mut rng);
+        let (name, img, bits) = &fleet[i % fleet.len()];
+        let codes = Tensor4::random_activations(Shape4::new(1, *img, *img, 1), *bits, &mut rng);
         match registry.route(Some(name), None, codes) {
             Ok((_, rx)) => {
                 accepted += 1;

@@ -16,6 +16,13 @@
 //!
 //! See `DESIGN.md` for the architecture and experiment index.
 
+// Bit-exactness leaves no room for UB escape hatches, and the 2018
+// idiom lints keep the dependency-free surface uniform; `pcilt lint`
+// (src/analysis/) enforces the rest of the invariants.
+#![forbid(unsafe_code)]
+#![deny(rust_2018_idioms)]
+
+pub mod analysis;
 pub mod asic;
 pub mod cli;
 pub mod config;

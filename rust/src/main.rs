@@ -50,6 +50,10 @@ fn dispatch(raw: &[String]) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     }
+    if raw[0] == "lint" {
+        let args = Args::parse(raw, &["root"], &["json"])?;
+        return cmd_lint(&args);
+    }
     if raw[0] == "tables" {
         // `tables` takes a positional action (stats|prebuild|purge).
         let args = Args::parse_with_action(
@@ -90,6 +94,40 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "bench-check" => cmd_bench_check(&args),
         other => bail!("unknown subcommand '{other}'; try `pcilt help`"),
     }
+}
+
+/// `pcilt lint` — the invariant linter (DESIGN.md §14): float-free code
+/// domain, deterministic persistence, no-panic coordinator/store, engine
+/// registry completeness, lock-rank discipline, and the mechanical
+/// line-width/brace-balance scans. Exits nonzero on any violation so CI
+/// can gate on it; `--json` emits the machine-readable report.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        // Default: the crate sources, whether invoked from the repo
+        // root or from `rust/`.
+        None => {
+            let candidates = ["rust/src", "src"];
+            match candidates.iter().find(|c| Path::new(c).join("lib.rs").is_file()) {
+                Some(c) => std::path::PathBuf::from(c),
+                None => bail!("cannot find crate sources; pass --root <dir>"),
+            }
+        }
+    };
+    let report = pcilt::analysis::lint_root(&root)
+        .with_context(|| format!("linting '{}'", root.display()))?;
+    if args.flag("json") {
+        println!("{}", report.json());
+    } else {
+        print!("{}", report.text());
+    }
+    ensure!(
+        report.is_clean(),
+        "pcilt lint: {} violation(s) in {}",
+        report.diagnostics.len(),
+        root.display()
+    );
+    Ok(())
 }
 
 /// `pcilt bench-check` — the CI bench-regression gate. Compares every

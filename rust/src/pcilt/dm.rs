@@ -4,7 +4,7 @@
 
 use crate::tensor::{Shape4, Tensor4};
 
-use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{check_band, rf_count, ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// DM engine: holds OHWI weights and geometry.
 pub struct DmEngine {
@@ -111,6 +111,15 @@ impl ConvEngine for DmEngine {
             adds: rfs * per_rf,
             // DM fetches both operand streams: weight + activation.
             fetches: rfs * per_rf * 2,
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        // Table-free integer baseline: exact by construction, no tables.
+        EngineInfo {
+            name: self.name(),
+            exact: true,
+            table_bytes: 0,
         }
     }
 }

@@ -37,6 +37,7 @@ use super::table::acc_bounds;
 /// activation code. `round_ties_even` matches `jnp.round` bit-for-bit.
 /// Both the unfused stage walk and [`RequantTable::build`] call exactly
 /// this function, so the two paths cannot diverge.
+// pcilt-lint: allow(float-free) — the one sanctioned quantization boundary
 #[inline(always)]
 pub fn requant_code(acc: i32, scale: f32, qmax: i32) -> u8 {
     let r = (acc as f32 * scale).round_ties_even() as i32;
@@ -60,7 +61,7 @@ pub struct RequantTable {
     /// Lowest reachable accumulator (the table's index origin).
     lo: i32,
     /// Requantize scale baked into the codes.
-    pub scale: f32,
+    pub scale: f32, // pcilt-lint: allow(float-free) — quantization boundary
     /// Output code width; `qmax = 2^act_bits - 1`.
     pub act_bits: u32,
 }
@@ -83,6 +84,7 @@ impl RequantTable {
     }
 
     /// Build over an explicit accumulator range.
+    // pcilt-lint: allow(float-free) — bakes the float scale into u8 codes
     pub fn build(lo: i64, hi: i64, scale: f32, act_bits: u32) -> RequantTable {
         assert!(Self::feasible(lo, hi), "requant range [{lo}, {hi}] infeasible");
         assert!((1..=8).contains(&act_bits));
@@ -104,7 +106,7 @@ impl RequantTable {
         weights: &Tensor4<i8>,
         act_bits: u32,
         f: &ConvFunc,
-        scale: f32,
+        scale: f32, // pcilt-lint: allow(float-free) — quantization boundary
     ) -> RequantTable {
         let (lo, hi) = acc_bounds(weights, act_bits, f);
         Self::build(lo, hi, scale, act_bits)
@@ -137,6 +139,7 @@ impl RequantTable {
 
     pub(crate) fn read_from(r: &mut ByteReader<'_>) -> Result<RequantTable, String> {
         let act_bits = r.take_u32()?;
+        // pcilt-lint: allow(float-free) — bit-exact f32 round-trip via to_bits
         let scale = f32::from_bits(r.take_u32()?);
         let lo = r.take_u64()? as i64;
         let codes = r.take_u8_slice()?;
@@ -192,7 +195,7 @@ fn block_rows(ow: usize, oc: usize, pool_k: usize) -> usize {
 /// fused walk simply never computes the dropped rows.
 pub fn run_chain(
     engine: &dyn ConvEngine,
-    scale: f32,
+    scale: f32, // pcilt-lint: allow(float-free) — quantization boundary
     requant: Option<&RequantTable>,
     pool_k: Option<usize>,
     act_bits: u32,
@@ -206,7 +209,7 @@ pub fn run_chain(
 /// boundaries.
 pub fn run_chain_blocked(
     engine: &dyn ConvEngine,
-    scale: f32,
+    scale: f32, // pcilt-lint: allow(float-free) — quantization boundary
     requant: Option<&RequantTable>,
     pool_k: Option<usize>,
     act_bits: u32,
@@ -292,7 +295,7 @@ mod tests {
     /// The unfused reference: full conv, elementwise requant, code pool.
     fn unfused(
         engine: &dyn ConvEngine,
-        scale: f32,
+        scale: f32, // pcilt-lint: allow(float-free) — quantization boundary
         pool_k: Option<usize>,
         act_bits: u32,
         x: &Tensor4<u8>,

@@ -11,7 +11,7 @@
 
 use crate::tensor::{Shape4, Tensor4};
 
-use super::engine::{ConvEngine, ConvGeometry, OpCounts};
+use super::engine::{ConvEngine, ConvGeometry, EngineInfo, OpCounts};
 
 /// A grouped convolution over per-group inner engines.
 pub struct GroupedEngine {
@@ -124,6 +124,17 @@ impl ConvEngine for GroupedEngine {
             total.fetches += c.fetches;
         }
         total
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            name: self.name(),
+            // Exact iff every per-group inner engine is exact.
+            exact: self.engines.iter().all(|e| e.info().exact),
+            // Sum of per-instance inner footprints; store-level dedup of
+            // identical group tables is not visible from here.
+            table_bytes: self.engines.iter().map(|e| e.info().table_bytes).sum(),
+        }
     }
 }
 

@@ -133,6 +133,7 @@ impl MixedTables {
     }
 
     /// Actual resident bytes of this representation (store accounting).
+    // pcilt-lint: allow(float-free) — store byte accounting, not data path
     pub fn resident_bytes(&self) -> f64 {
         (self.cl.len() + self.shifts.len() + self.widths.bits.len()) as f64 * 4.0
     }

@@ -463,6 +463,7 @@ impl LayerPlan {
 /// (`EngineChoice::Auto` is resolved inside worker threads that only see a
 /// `BackendSpec`). `None` until configured; reads fall back to
 /// `PlannerPolicy::default()`.
+// pcilt-lint: lock-rank(planner-policy = 40)
 static DEFAULT_POLICY: RwLock<Option<PlannerPolicy>> = RwLock::new(None);
 
 /// Batch size the default plan scores against (serving sets its max batch).

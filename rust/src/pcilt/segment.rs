@@ -273,6 +273,7 @@ impl SegmentEngine {
     }
 
     /// Memory at a given value bit-width.
+    // pcilt-lint: allow(float-free) — planner byte estimate, not data path
     pub fn bytes(&self, value_bits: u32) -> f64 {
         self.entries() as f64 * value_bits as f64 / 8.0
     }

@@ -79,6 +79,7 @@ impl SharedTables {
 
     /// Actual resident bytes of this in-memory representation (i32 values,
     /// u32 pointers) — what the table store's budget accounts.
+    // pcilt-lint: allow(float-free) — store byte accounting, not data path
     pub fn resident_bytes(&self) -> f64 {
         (self.unique.len() + self.pointers.len()) as f64 * 4.0
     }
@@ -127,6 +128,7 @@ impl SharedTables {
     /// Memory footprint: unique tables at `value_bits` per entry plus
     /// pointers at `ceil(log2 n_unique)` bits each — the quantities the
     /// paper's ~25 MB / ~18 MB examples trade off.
+    // pcilt-lint: allow(float-free) — planner byte estimate, not data path
     pub fn bytes(&self, value_bits: u32) -> SharedMemory {
         let table_bytes = self.unique.len() as f64 * value_bits as f64 / 8.0;
         let ptr_bits = (self.n_unique.max(2) as f64).log2().ceil();
@@ -142,6 +144,7 @@ impl SharedTables {
 }
 
 /// Memory breakdown of a shared-table layer.
+// pcilt-lint: allow(float-free) — planner byte estimate, not data path
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SharedMemory {
     /// Bytes for the unique tables.
@@ -152,6 +155,7 @@ pub struct SharedMemory {
     pub dense_bytes: f64,
 }
 
+// pcilt-lint: allow(float-free) — planner byte estimate, not data path
 impl SharedMemory {
     pub fn total(&self) -> f64 {
         self.table_bytes + self.pointer_bytes
@@ -216,6 +220,7 @@ impl ValueIndirection {
     }
 
     /// Bytes: pool at `value_bits` + cells at `ceil(log2 |pool|)` bits.
+    // pcilt-lint: allow(float-free) — planner byte estimate, not data path
     pub fn bytes(&self, value_bits: u32) -> f64 {
         let idx_bits = (self.pool.len().max(2) as f64).log2().ceil();
         self.pool.len() as f64 * value_bits as f64 / 8.0
@@ -223,6 +228,7 @@ impl ValueIndirection {
     }
 
     /// Actual resident bytes of this representation (store accounting).
+    // pcilt-lint: allow(float-free) — store byte accounting, not data path
     pub fn resident_bytes(&self) -> f64 {
         (self.pool.len() + self.cells.len()) as f64 * 4.0
     }
@@ -714,6 +720,7 @@ impl TwoLevelTables {
 
     /// Bytes: pool at `value_bits`, index cells at `ceil(log2 |pool|)`
     /// bits, pointers at `ceil(log2 n_index_tables)` bits.
+    // pcilt-lint: allow(float-free) — planner byte estimate, not data path
     pub fn bytes(&self, value_bits: u32) -> f64 {
         let idx_bits = (self.pool.len().max(2) as f64).log2().ceil();
         let ptr_bits = (self.n_index_tables.max(2) as f64).log2().ceil();

@@ -44,6 +44,7 @@ impl Pcilt {
 
     /// Bytes needed at a given value width (the paper stores products at
     /// their natural width, e.g. 12-bit products in 1.5 bytes).
+    // pcilt-lint: allow(float-free) — planner byte estimate, not data path
     pub fn bytes(&self, value_bits: u32) -> f64 {
         self.entries.len() as f64 * value_bits as f64 / 8.0
     }
@@ -124,6 +125,7 @@ impl LayerTables {
     }
 
     /// Memory footprint at the natural product width.
+    // pcilt-lint: allow(float-free) — planner byte estimate, not data path
     pub fn bytes(&self, value_bits: u32) -> f64 {
         self.entries() as f64 * value_bits as f64 / 8.0
     }
