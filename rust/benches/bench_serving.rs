@@ -217,10 +217,12 @@ fn write_bench_json(
     indep: &TableStoreStats,
     indep_tput: f64,
 ) {
+    // `goodput_rps` = completed responses per second — the same name the
+    // net tier's loadtest emitter uses, so the two serving JSONs agree.
     let scenario = |s: &TableStoreStats, tput: f64| {
         format!(
             "{{\"entries\": {}, \"table_bytes\": {:.0}, \"cross_model_dedup\": {}, \
-             \"builds\": {}, \"tput_rps\": {:.1}}}",
+             \"builds\": {}, \"goodput_rps\": {:.1}}}",
             s.entries, s.bytes, s.cross_model_dedup, s.builds, tput
         )
     };

@@ -88,10 +88,11 @@ const PERSIST_FNS: &[&str] = &[
 const BANNED_IN_PERSIST: &[&str] =
     &["HashMap", "HashSet", "Instant", "SystemTime", "Rng", "random", "thread_rng"];
 
-/// `no-panic` scope: the serving coordinator and the table store — the
-/// long-running, lock-holding subsystems where a stray panic poisons a
-/// mutex or kills a worker.
-pub const NO_PANIC_PREFIXES: &[&str] = &["coordinator/"];
+/// `no-panic` scope: the serving coordinator, the socket tier and the
+/// table store — the long-running, lock-holding subsystems where a stray
+/// panic poisons a mutex, kills a worker, or drops every connection the
+/// event-loop thread owns.
+pub const NO_PANIC_PREFIXES: &[&str] = &["coordinator/", "net/"];
 pub const NO_PANIC_FILES: &[&str] = &["pcilt/store.rs"];
 
 /// `unwrap`/`expect` directly on these methods' results is the allowed
@@ -441,7 +442,13 @@ fn no_panic(f: &FileData) -> Vec<Diagnostic> {
             format!(
                 "`.{}()` in {}; propagate with `?` / handle, or pragma if intended",
                 t.text(&f.src),
-                if f.rel.starts_with("coordinator/") { "coordinator" } else { "store" }
+                if f.rel.starts_with("coordinator/") {
+                    "coordinator"
+                } else if f.rel.starts_with("net/") {
+                    "net tier"
+                } else {
+                    "store"
+                }
             ),
         ));
     }

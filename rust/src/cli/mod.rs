@@ -168,7 +168,28 @@ SUBCOMMANDS:
                                 model may declare an arbitrary-depth
                                 layer graph as [[models.layers]] entries
                                 of typed stages: conv / pool / requant /
-                                dense, engines planner-chosen per stage)
+                                dense, engines planner-chosen per stage;
+                                [net] sets the socket tier's addr,
+                                max_inflight, slo_ms and drain_ms)
+              --net             serve over TCP: socket tier (length-
+                                prefixed binary frames + GET /healthz and
+                                /metrics) in front of the registry, with
+                                SLO-derived batch deadlines and per-model
+                                admission control; the workload runs over
+                                real loopback sockets
+  loadtest  open-loop socket client against the net tier; reports
+            p50/p99/p999 latency, goodput and shed rate
+              --addr HOST:PORT  target a running `pcilt serve --net`
+                                (default: self-serve an ephemeral
+                                loopback stack from --config)
+              --rate R          aggregate offered load, req/s
+              --requests N      total requests across connections
+              --connections N   client connections     (default 4)
+              --seed N          workload PRNG seed     (default 7)
+              --config FILE     serve TOML ([[models]] shapes the mix,
+                                [net] tunes the self-served tier)
+              --json FILE       write BENCH_serving_net.json payload
+                                (bench-check gates goodput_imgs_per_sec)
   plan      print the engine registry with predicted OpCounts/memory per
             layer and the planner's chosen engine (no artifacts needed)
               --act-bits B      sample-model activation bits, 1..=8 (default 4)

@@ -146,6 +146,35 @@ impl TablesConfig {
     }
 }
 
+/// `[net]` section: the socket serving tier (`pcilt serve --net`,
+/// `pcilt loadtest` self-serve) — listen address, per-model in-flight
+/// budget, latency SLO and shutdown drain window.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Admission control: per-model budget of admitted-but-unanswered
+    /// requests. Beyond it, clients get explicit `Overloaded` frames.
+    pub max_inflight: usize,
+    /// Latency SLO in milliseconds; the batcher's deadline is derived
+    /// from it (`net::slo_batch_deadline`) so batches close before the
+    /// oldest request busts the SLO.
+    pub slo_ms: u64,
+    /// Graceful-drain window on shutdown, milliseconds.
+    pub drain_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            max_inflight: 64,
+            slo_ms: 50,
+            drain_ms: 500,
+        }
+    }
+}
+
 impl Default for PlannerConfig {
     fn default() -> Self {
         let p = PlannerPolicy::default();
@@ -265,6 +294,8 @@ pub struct ServeConfig {
     pub planner: PlannerConfig,
     /// `[tables]` section (table-store budget + persistence).
     pub tables: TablesConfig,
+    /// `[net]` section (socket serving tier).
+    pub net: NetConfig,
     /// `[[models]]` list: when non-empty, `pcilt serve` starts the
     /// multi-model registry instead of a single anonymous pool.
     pub models: Vec<ModelConfig>,
@@ -283,6 +314,7 @@ impl Default for ServeConfig {
             total_requests: 2_000,
             planner: PlannerConfig::default(),
             tables: TablesConfig::default(),
+            net: NetConfig::default(),
             models: Vec::new(),
         }
     }
@@ -442,6 +474,28 @@ impl ServeConfig {
                         _ => return invalid("tables.per_model_budget_mb must be >= 0"),
                     };
                 }
+                "net.addr" => {
+                    let s = doc
+                        .get_str(key)
+                        .ok_or_else(|| ConfigError::Invalid("net.addr must be a string".into()))?;
+                    if s.is_empty() {
+                        return invalid("net.addr must be non-empty (host:port)");
+                    }
+                    cfg.net.addr = s.to_string();
+                }
+                "net.max_inflight" => {
+                    cfg.net.max_inflight = pos_usize(doc, key)?;
+                }
+                "net.slo_ms" => {
+                    cfg.net.slo_ms = pos_usize(doc, key)? as u64;
+                }
+                "net.drain_ms" => {
+                    // 0 is meaningful (= close immediately on shutdown)
+                    cfg.net.drain_ms = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as u64,
+                        _ => return invalid("net.drain_ms must be >= 0"),
+                    };
+                }
                 k if k.starts_with("network.") => {} // parsed by NetworkSpec
                 k if k.starts_with("models.") => {}  // parsed by parse_models below
                 k => return invalid(format!("unknown config key '{k}'")),
@@ -461,6 +515,9 @@ impl ServeConfig {
         }
         if self.workers == 0 || self.workers > 1024 {
             return invalid("workers must be in 1..=1024");
+        }
+        if !self.net.addr.contains(':') {
+            return invalid(format!("net.addr '{}' must be host:port", self.net.addr));
         }
         let mut seen = std::collections::BTreeSet::new();
         for m in &self.models {
@@ -890,6 +947,44 @@ allow_approximate = true
         assert_eq!(cfg.planner.add_cost, PlannerConfig::default().add_cost);
         let policy = cfg.planner.to_policy();
         assert_eq!(policy.cache_bytes, 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn net_section_parses() {
+        let doc = Document::parse(
+            r#"
+[net]
+addr = "0.0.0.0:9000"
+max_inflight = 128
+slo_ms = 25
+drain_ms = 0
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.net.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.net.max_inflight, 128);
+        assert_eq!(cfg.net.slo_ms, 25);
+        assert_eq!(cfg.net.drain_ms, 0, "0 = close immediately");
+        // untouched defaults survive
+        let d = NetConfig::default();
+        assert_eq!(ServeConfig::default().net, d);
+        assert_eq!(d.addr, "127.0.0.1:7070");
+    }
+
+    #[test]
+    fn net_section_rejects_bad_values() {
+        for (toml, what) in [
+            ("[net]\naddr = \"\"", "empty addr"),
+            ("[net]\naddr = \"noport\"", "addr without port"),
+            ("[net]\nmax_inflight = 0", "zero in-flight budget"),
+            ("[net]\nslo_ms = 0", "zero SLO"),
+            ("[net]\ndrain_ms = -1", "negative drain"),
+            ("[net]\ntypo = 1", "unknown net key"),
+        ] {
+            let doc = Document::parse(toml).unwrap();
+            assert!(ServeConfig::from_document(&doc).is_err(), "accepted {what}: {toml}");
+        }
     }
 
     #[test]

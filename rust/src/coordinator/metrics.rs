@@ -13,13 +13,21 @@ use crate::util::stats::{fmt_ns, LatencyHistogram};
 #[derive(Debug, Default, Clone)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
+    /// Rejected by the queue's hard capacity (`push` backpressure).
     pub rejected_full: u64,
+    /// Shed by admission control (`try_push` depth bound — the net tier's
+    /// bounded in-flight budget).
+    pub shed_overload: u64,
     pub completed: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub p50_latency_ns: f64,
     pub p99_latency_ns: f64,
+    pub p999_latency_ns: f64,
     pub max_latency_ns: u64,
+    /// Queue depth at snapshot time (filled by the owning `Server`; a
+    /// bare `Metrics` reports 0).
+    pub queue_depth: usize,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
     /// Table-store counters at snapshot time — the store this pool's
@@ -31,19 +39,22 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
-            "requests: {} submitted, {} rejected, {} completed in {:.2}s\n\
-             throughput: {:.0} req/s | batches: {} (mean size {:.2})\n\
-             latency: p50={} p99={} max={}\n\
+            "requests: {} submitted, {} rejected, {} shed, {} completed in {:.2}s\n\
+             throughput: {:.0} req/s | batches: {} (mean size {:.2}) | queue depth {}\n\
+             latency: p50={} p99={} p999={} max={}\n\
              {}",
             self.submitted,
             self.rejected_full,
+            self.shed_overload,
             self.completed,
             self.elapsed_s,
             self.throughput_rps,
             self.batches,
             self.mean_batch_size,
+            self.queue_depth,
             fmt_ns(self.p50_latency_ns),
             fmt_ns(self.p99_latency_ns),
+            fmt_ns(self.p999_latency_ns),
             fmt_ns(self.max_latency_ns as f64),
             self.tables.report(),
         )
@@ -53,6 +64,7 @@ impl MetricsSnapshot {
 struct Inner {
     submitted: u64,
     rejected_full: u64,
+    shed_overload: u64,
     completed: u64,
     batches: u64,
     batch_size_sum: u64,
@@ -87,6 +99,7 @@ impl Metrics {
             inner: Mutex::new(Inner {
                 submitted: 0,
                 rejected_full: 0,
+                shed_overload: 0,
                 completed: 0,
                 batches: 0,
                 batch_size_sum: 0,
@@ -104,6 +117,7 @@ impl Metrics {
         *g = Inner {
             submitted: 0,
             rejected_full: 0,
+            shed_overload: 0,
             completed: 0,
             batches: 0,
             batch_size_sum: 0,
@@ -118,6 +132,11 @@ impl Metrics {
 
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected_full += 1;
+    }
+
+    /// Admission control (net tier) shed a request before it queued.
+    pub fn on_shed(&self) {
+        self.inner.lock().unwrap().shed_overload += 1;
     }
 
     /// Record a completed batch with the per-request latencies.
@@ -137,6 +156,7 @@ impl Metrics {
         MetricsSnapshot {
             submitted: g.submitted,
             rejected_full: g.rejected_full,
+            shed_overload: g.shed_overload,
             completed: g.completed,
             batches: g.batches,
             mean_batch_size: if g.batches > 0 {
@@ -146,7 +166,9 @@ impl Metrics {
             },
             p50_latency_ns: g.latency.percentile_ns(0.50),
             p99_latency_ns: g.latency.percentile_ns(0.99),
+            p999_latency_ns: g.latency.percentile_ns(0.999),
             max_latency_ns: g.latency.max_ns(),
+            queue_depth: 0,
             throughput_rps: if elapsed > 0.0 {
                 g.completed as f64 / elapsed
             } else {
@@ -168,10 +190,13 @@ mod tests {
         m.on_submit();
         m.on_submit();
         m.on_reject();
+        m.on_shed();
+        m.on_shed();
         m.on_batch(&[1_000, 2_000]);
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected_full, 1);
+        assert_eq!(s.shed_overload, 2);
         assert_eq!(s.completed, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.mean_batch_size, 2.0);
@@ -200,6 +225,7 @@ mod tests {
             s.throughput_rps
         );
         assert!(s.p50_latency_ns.is_finite() && s.p99_latency_ns.is_finite());
+        assert!(s.p999_latency_ns.is_finite());
         let r = s.report();
         assert!(!r.contains("NaN") && !r.contains("inf"), "report: {r}");
     }
@@ -211,6 +237,8 @@ mod tests {
         let r = m.snapshot().report();
         assert!(r.contains("completed"));
         assert!(r.contains("p99"));
+        assert!(r.contains("p999"));
+        assert!(r.contains("queue depth"));
         // the table-store counters ride along in every serving report
         assert!(r.contains("tables:"));
         assert!(r.contains("hits"));

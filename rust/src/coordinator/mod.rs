@@ -13,7 +13,7 @@ pub mod worker;
 pub mod workload;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use queue::{BoundedQueue, PushError};
+pub use queue::{BoundedQueue, PushError, TryPushError};
 pub use registry::{
     network_for_model, plan_model_sharing, ModelEntry, ModelRegistry, RegistryError, SharingRow,
 };

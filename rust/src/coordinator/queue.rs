@@ -21,6 +21,15 @@ pub enum PushError {
     Closed,
 }
 
+/// Why `try_push` failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryPushError {
+    /// Depth bound (or capacity) reached — admission control sheds.
+    QueueFull,
+    /// Queue closed — server shutting down.
+    Closed,
+}
+
 struct Inner<T> {
     /// Items stamped with their enqueue time, so the batching deadline can
     /// run from when a request *arrived* rather than when a worker first
@@ -58,6 +67,25 @@ impl<T> BoundedQueue<T> {
         }
         if g.items.len() >= self.capacity {
             return Err((item, PushError::Full));
+        }
+        g.items.push_back((Instant::now(), item));
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push against an explicit depth bound: rejects with
+    /// `QueueFull` once the queue already holds `max_depth` items (or the
+    /// hard `capacity`, whichever is smaller). This is the admission-
+    /// control variant the net tier uses — `push` keeps its
+    /// capacity-only backpressure semantics unchanged.
+    pub fn try_push(&self, item: T, max_depth: usize) -> Result<(), (T, TryPushError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((item, TryPushError::Closed));
+        }
+        if g.items.len() >= max_depth.min(self.capacity) {
+            return Err((item, TryPushError::QueueFull));
         }
         g.items.push_back((Instant::now(), item));
         drop(g);
@@ -172,6 +200,51 @@ mod tests {
         // drains remaining then None
         assert_eq!(q.pop_batch(4, Duration::ZERO).unwrap(), vec![1]);
         assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn try_push_rejects_at_depth_bound() {
+        let q = BoundedQueue::new(8);
+        q.try_push(1, 2).unwrap();
+        q.try_push(2, 2).unwrap();
+        let (item, e) = q.try_push(3, 2).unwrap_err();
+        assert_eq!((item, e), (3, TryPushError::QueueFull));
+        // A looser bound still admits (capacity 8 not reached)...
+        q.try_push(3, 4).unwrap();
+        // ...but the hard capacity caps any bound.
+        for i in 4..8 {
+            q.try_push(i, usize::MAX).unwrap();
+        }
+        assert_eq!(q.try_push(9, usize::MAX).unwrap_err().1, TryPushError::QueueFull);
+        q.close();
+        assert_eq!(q.try_push(9, 2).unwrap_err().1, TryPushError::Closed);
+    }
+
+    #[test]
+    fn try_push_leaves_push_semantics_unchanged() {
+        // Regression pin: interleaving try_push rejections must not
+        // change what plain push accepts (capacity-only backpressure) or
+        // FIFO order.
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.try_push(99, 2).unwrap_err().1, TryPushError::QueueFull);
+        q.push(3).unwrap();
+        q.push(4).unwrap();
+        assert_eq!(q.push(5).unwrap_err().1, PushError::Full);
+        let b = q.pop_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn try_push_stamps_enqueue_time_for_batching() {
+        // try_push items join the same deadline-anchored batching as push
+        // items: the enqueue stamp must exist (pop sees both in order).
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        q.try_push(2, 8).unwrap();
+        let b = q.pop_batch(2, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1, 2]);
     }
 
     #[test]

@@ -343,6 +343,35 @@ impl ModelRegistry {
         entry.router.route(engine, codes).map_err(RegistryError::Route)
     }
 
+    /// [`route`](Self::route) with an explicit pool-queue depth bound —
+    /// the net tier's admission control path. Targets the model's default
+    /// engine pool.
+    pub fn submit_bounded(
+        &self,
+        model: Option<&str>,
+        codes: Tensor4<u8>,
+        max_depth: usize,
+    ) -> Result<(u64, mpsc::Receiver<InferResponse>), RegistryError> {
+        let name = model.unwrap_or(&self.default_model);
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownModel {
+                requested: name.to_string(),
+                known: self.order.clone(),
+            })?;
+        let pool = entry.router.pool(&entry.engine).ok_or_else(|| {
+            // Unreachable after a successful start (every pool registers
+            // under its engine name), but a routing miss must not panic.
+            RegistryError::Route(RouteError::UnknownEngine {
+                requested: entry.engine.clone(),
+                known: entry.router.engines().iter().map(|s| s.to_string()).collect(),
+            })
+        })?;
+        pool.submit_bounded(codes, max_depth)
+            .map_err(|e| RegistryError::Route(RouteError::Submit(e)))
+    }
+
     /// Registered model names, in config order.
     pub fn models(&self) -> Vec<&str> {
         self.order.iter().map(String::as_str).collect()

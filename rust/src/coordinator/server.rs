@@ -22,7 +22,7 @@ use crate::util::error as anyhow;
 use crate::util::logger as log;
 
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::queue::{BoundedQueue, PushError};
+use super::queue::{BoundedQueue, PushError, TryPushError};
 use super::request::{InferRequest, InferResponse};
 use super::worker::{process_batch, Backend, BackendSpec};
 
@@ -152,6 +152,29 @@ impl Server {
         }
     }
 
+    /// `submit` with an explicit queue-depth bound below the hard
+    /// capacity — the net tier's admission control. A rejection here is
+    /// counted as shed (`shed_overload`), distinct from the capacity
+    /// backpressure `submit` counts as `rejected_full`.
+    pub fn submit_bounded(
+        &self,
+        codes: Tensor4<u8>,
+        max_depth: usize,
+    ) -> Result<(u64, mpsc::Receiver<InferResponse>), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (req, rx) = InferRequest::new(id, codes);
+        let req = req.with_model(self.model.clone());
+        self.metrics.on_submit();
+        match self.queue.try_push(req, max_depth) {
+            Ok(()) => Ok((id, rx)),
+            Err((_, TryPushError::QueueFull)) => {
+                self.metrics.on_shed();
+                Err(SubmitError::Overloaded)
+            }
+            Err((_, TryPushError::Closed)) => Err(SubmitError::Closed),
+        }
+    }
+
     /// Convenience: submit and block for the response.
     pub fn infer_blocking(&self, codes: Tensor4<u8>) -> anyhow::Result<InferResponse> {
         let (_, rx) = self
@@ -161,7 +184,9 @@ impl Server {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut m = self.metrics.snapshot();
+        m.queue_depth = self.queue.len();
+        m
     }
 
     /// Send `n` throwaway requests (waiting for each) and reset metrics —
@@ -324,6 +349,45 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.rejected_full, rejected);
         assert_eq!(m.completed + m.rejected_full, 64);
+    }
+
+    #[test]
+    fn submit_bounded_sheds_below_capacity() {
+        // Jam a 1-worker pool (long batch deadline) and submit with a
+        // depth bound far below the hard queue capacity: the bound must
+        // shed, counted separately from capacity backpressure.
+        let mut rng = Rng::new(23);
+        let spec = BackendSpec::native(random_params(4, &mut rng), NativeEngineKind::Dm);
+        let server = Server::start(
+            spec,
+            &ServerOpts {
+                workers: 1,
+                max_batch: 2,
+                batch_deadline: Duration::from_millis(50),
+                queue_capacity: 64,
+            },
+        )
+        .unwrap();
+        let mut shed = 0u64;
+        let mut rxs = Vec::new();
+        for i in 0..32 {
+            match server.submit_bounded(one_image(i), 4) {
+                Ok((_, rx)) => rxs.push(rx),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(shed > 0, "depth bound 4 under a jammed pool must shed");
+        assert!(
+            server.metrics().queue_depth <= 4,
+            "queue depth must stay at the admission bound"
+        );
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.shed_overload, shed);
+        assert_eq!(m.rejected_full, 0, "bounded sheds are not capacity rejects");
     }
 
     #[test]

@@ -24,6 +24,18 @@ pub struct WorkloadReport {
     pub offered_rps: f64,
 }
 
+impl WorkloadReport {
+    /// One-line load summary shared by every driver — `pcilt serve`
+    /// (in-process), `pcilt serve --net` and `pcilt loadtest` all render
+    /// this exact format so reports stay grep-compatible across modes.
+    pub fn report(&self) -> String {
+        format!(
+            "workload: {} offered @ {:.0} rps | {} accepted, {} shed | wall {:.2}s",
+            self.offered, self.offered_rps, self.accepted, self.rejected, self.wall_s
+        )
+    }
+}
+
 /// Open-loop Poisson arrivals at `rate_rps`, `total` requests. Responses
 /// are collected on a drainer thread; returns once all accepted requests
 /// have completed.
@@ -230,6 +242,19 @@ mod tests {
         let r = run_poisson(&s, 500.0, 50, 16, 4, 2);
         assert!(r.wall_s > 0.05, "wall={}", r.wall_s);
         assert!(r.offered_rps < 1500.0, "rate={}", r.offered_rps);
+    }
+
+    #[test]
+    fn report_format_is_shared_across_drivers() {
+        let r = WorkloadReport {
+            offered: 100,
+            accepted: 90,
+            rejected: 10,
+            wall_s: 2.0,
+            offered_rps: 50.0,
+        };
+        let s = r.report();
+        assert_eq!(s, "workload: 100 offered @ 50 rps | 90 accepted, 10 shed | wall 2.00s");
     }
 
     #[test]

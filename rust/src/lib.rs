@@ -11,8 +11,9 @@
 //!   batch execution ([`pcilt::parallel`]), a cycle/energy ASIC simulator
 //!   ([`asic`]), an integer tensor library ([`tensor`]), quantization
 //!   ([`quant`]), a PJRT runtime that loads the AOT artifacts
-//!   ([`runtime`], behind the `xla` feature), and a thread-based serving
-//!   coordinator ([`coordinator`]).
+//!   ([`runtime`], behind the `xla` feature), a thread-based serving
+//!   coordinator ([`coordinator`]), and a dependency-free socket serving
+//!   tier in front of it ([`net`]).
 //!
 //! See `DESIGN.md` for the architecture and experiment index.
 
@@ -28,6 +29,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod model;
+pub mod net;
 pub mod pcilt;
 pub mod quant;
 pub mod runtime;

@@ -10,12 +10,16 @@ use pcilt::asic::{
     simulate_winograd, LayerWorkload, TableMem,
 };
 use pcilt::cli::{Args, USAGE};
-use pcilt::config::{network_from_document, Document, EngineKind, PlannerMode, ServeConfig};
+use pcilt::config::{
+    network_from_document, Document, EngineKind, ModelConfig, PlannerMode, ServeConfig,
+};
 use pcilt::coordinator::{
     network_for_model, plan_model_sharing, run_poisson, run_poisson_models, BackendSpec,
     ModelRegistry, NativeEngineKind, Server, ServerOpts,
 };
 use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCnn};
+use pcilt::net::loadtest::{run as loadtest_run, write_bench_json};
+use pcilt::net::{slo_batch_deadline, LoadtestOpts, ModelTarget, NetOpts, NetServer};
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec as MemoryNetworkSpec};
 use pcilt::pcilt::planner::{EnginePlanner, LayerPlan, LayerSpec};
@@ -63,6 +67,14 @@ fn dispatch(raw: &[String]) -> Result<()> {
         )?;
         return cmd_tables(&args);
     }
+    if raw[0] == "loadtest" {
+        let args = Args::parse(
+            raw,
+            &["addr", "rate", "requests", "connections", "seed", "config", "json"],
+            &[],
+        )?;
+        return cmd_loadtest(&args);
+    }
     let valued = [
         "engine",
         "workers",
@@ -83,7 +95,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "current",
         "tolerance",
     ];
-    let args = Args::parse(raw, &valued, &["verbose", "calibrate", "calibrated"])?;
+    let args = Args::parse(raw, &valued, &["verbose", "calibrate", "calibrated", "net"])?;
     match args.subcommand.as_str() {
         "serve" => cmd_serve(&args),
         "plan" => cmd_plan(&args),
@@ -246,6 +258,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity: cfg.queue_capacity,
     };
 
+    // `--net` puts the socket tier in front of a registry (the config's
+    // fleet, or a single seeded default model) and drives the workload
+    // over real TCP instead of in-process submit calls.
+    if args.flag("net") {
+        return cmd_serve_net(&cfg, &opts, &cache_dir);
+    }
+
     // A `[[models]]` list switches to the multi-model registry: one pool
     // per named model, all borrowing tables from the shared process store.
     if !cfg.models.is_empty() {
@@ -315,10 +334,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let metrics = server.metrics();
     println!("--- workload ---");
-    println!(
-        "offered {} ({:.0} rps), accepted {}, shed {}",
-        report.offered, report.offered_rps, report.accepted, report.rejected
-    );
+    println!("{}", report.report());
     println!("--- server ({}) ---", cfg.engine.name());
     println!("{}", metrics.report());
     if cfg.tables.persist {
@@ -354,10 +370,7 @@ fn cmd_serve_multi(cfg: &ServeConfig, opts: &ServerOpts, cache_dir: &Path) -> Re
         "--- workload (round-robin over {} models) ---",
         cfg.models.len()
     );
-    println!(
-        "offered {} ({:.0} rps), accepted {}, shed {}",
-        report.offered, report.offered_rps, report.accepted, report.rejected
-    );
+    println!("{}", report.report());
     for (name, m) in registry.metrics() {
         let entry = registry.model(&name).expect("registered model");
         println!("--- model {name} ({}) ---", entry.engine);
@@ -378,6 +391,177 @@ fn cmd_serve_multi(cfg: &ServeConfig, opts: &ServerOpts, cache_dir: &Path) -> Re
             ),
             Err(e) => log::warn!("tables: failed to persist cache: {e}"),
         }
+    }
+    Ok(())
+}
+
+/// The registry fleet the socket tier fronts: the config's `[[models]]`
+/// list, or a single seeded default model when none is declared (the net
+/// tier always routes through a registry, never a bare pool).
+fn net_models(cfg: &ServeConfig) -> Result<Vec<ModelConfig>> {
+    if !cfg.models.is_empty() {
+        return Ok(cfg.models.clone());
+    }
+    ensure!(
+        cfg.engine != EngineKind::Hlo,
+        "--net serves native registry pools; --engine hlo is not supported"
+    );
+    Ok(vec![ModelConfig {
+        name: "default".to_string(),
+        engine: cfg.engine,
+        ..ModelConfig::default()
+    }])
+}
+
+/// Traffic mix over a model list: one target per model, shaped to its
+/// input (image side and activation cardinality).
+fn net_mix(models: &[ModelConfig]) -> Vec<ModelTarget> {
+    models
+        .iter()
+        .map(|m| ModelTarget {
+            name: m.name.clone(),
+            img: m.img,
+            act_bits: m.act_bits,
+        })
+        .collect()
+}
+
+fn print_net_counters(c: pcilt::net::NetCounters) {
+    println!("--- net tier ---");
+    println!(
+        "accepted {} | completed {} | shed {} (admission) | rejected {} | proto errors {}",
+        c.accepted, c.completed, c.shed, c.rejected, c.proto_errors
+    );
+}
+
+/// `pcilt serve --net`: socket tier in front of the registry, workload
+/// driven over real TCP by the open-loop loadtest client — the measured
+/// path includes wire encode/decode, admission control, and the
+/// SLO-derived batch deadline.
+fn cmd_serve_net(cfg: &ServeConfig, opts: &ServerOpts, cache_dir: &Path) -> Result<()> {
+    let models = net_models(cfg)?;
+    let net_opts = NetOpts::from_config(&cfg.net);
+    // SLO-aware batching: clamp the configured pool deadline to a
+    // fraction of the latency SLO so batching never eats the budget.
+    let opts = ServerOpts {
+        batch_deadline: slo_batch_deadline(net_opts.slo, opts.batch_deadline),
+        ..opts.clone()
+    };
+    let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+    log::info!(
+        "serving {} models [{}] over {} (slo {:?}, batch deadline {:?})",
+        models.len(),
+        names.join(", "),
+        net_opts.addr,
+        net_opts.slo,
+        opts.batch_deadline
+    );
+    let registry = Arc::new(ModelRegistry::start(&models, &opts)?);
+    let net = NetServer::start(Arc::clone(&registry), &net_opts)?;
+    let lt = LoadtestOpts {
+        addr: net.addr().to_string(),
+        rate_rps: cfg.rate_rps,
+        requests: cfg.total_requests,
+        mix: net_mix(&models),
+        ..LoadtestOpts::default()
+    };
+    let report = loadtest_run(&lt)?;
+    println!("--- workload (socket tier @ {}) ---", net.addr());
+    println!("{}", report.report());
+    for (name, m) in registry.metrics() {
+        let entry = registry.model(&name).expect("registered model");
+        println!("--- model {name} ({}) ---", entry.engine);
+        println!("{}", m.report());
+    }
+    print_net_counters(net.shutdown());
+    if cfg.tables.persist {
+        match TableStore::process().save(cache_dir) {
+            Ok(r) => log::info!(
+                "tables: persisted {} entries to {}",
+                r.entries,
+                r.bin_path.display()
+            ),
+            Err(e) => log::warn!("tables: failed to persist cache: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// `pcilt loadtest` — the open-loop socket client. With `--addr` it
+/// targets an already-running `pcilt serve --net`; without, it
+/// self-serves: boots the registry plus socket tier on an ephemeral
+/// loopback port and measures end-to-end over TCP. `--json FILE` writes
+/// the bench-check-gated `BENCH_serving_net.json` payload.
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ServeConfig::load(Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    let mut lt = LoadtestOpts {
+        rate_rps: args.get_f64("rate", cfg.rate_rps)?,
+        requests: args.get_usize("requests", cfg.total_requests)?,
+        ..LoadtestOpts::default()
+    };
+    lt.connections = args.get_usize("connections", lt.connections)?;
+    lt.seed = args.get_usize("seed", lt.seed as usize)? as u64;
+
+    // Self-serve unless --addr points at an external server. The hosted
+    // stack must outlive the run; shutdown order is net tier, then pools.
+    let hosted: Option<(NetServer, Arc<ModelRegistry>)> = match args.get("addr") {
+        Some(a) => {
+            lt.addr = a.to_string();
+            // Against a remote server the model names must come from the
+            // config; with none, route to the server's default model.
+            lt.mix = if cfg.models.is_empty() {
+                vec![ModelTarget { name: String::new(), img: 16, act_bits: 4 }]
+            } else {
+                net_mix(&cfg.models)
+            };
+            None
+        }
+        None => {
+            let models = net_models(&cfg)?;
+            let net_opts = NetOpts {
+                addr: "127.0.0.1:0".to_string(),
+                ..NetOpts::from_config(&cfg.net)
+            };
+            let opts = ServerOpts {
+                workers: cfg.workers,
+                max_batch: cfg.max_batch,
+                batch_deadline: slo_batch_deadline(
+                    net_opts.slo,
+                    Duration::from_micros(cfg.batch_deadline_us),
+                ),
+                queue_capacity: cfg.queue_capacity,
+            };
+            let registry = Arc::new(ModelRegistry::start(&models, &opts)?);
+            let net = NetServer::start(Arc::clone(&registry), &net_opts)?;
+            lt.addr = net.addr().to_string();
+            lt.mix = net_mix(&models);
+            Some((net, registry))
+        }
+    };
+    log::info!(
+        "loadtest: {} requests @ {:.0} rps over {} connections -> {}",
+        lt.requests,
+        lt.rate_rps,
+        lt.connections,
+        lt.addr
+    );
+    let report = loadtest_run(&lt)?;
+    println!("--- loadtest ({}) ---", lt.addr);
+    println!("{}", report.report());
+    if let Some((net, registry)) = hosted {
+        for (name, m) in registry.metrics() {
+            let entry = registry.model(&name).expect("registered model");
+            println!("--- model {name} ({}) ---", entry.engine);
+            println!("{}", m.report());
+        }
+        print_net_counters(net.shutdown());
+    }
+    if let Some(path) = args.get("json") {
+        write_bench_json(Path::new(path), &report)?;
+        log::info!("loadtest: wrote {path}");
     }
     Ok(())
 }

@@ -1,0 +1,307 @@
+//! Per-connection state machine for the net tier's event loop: a
+//! non-blocking read side feeding the frame decoder, an in-order pending
+//! set of dispatched tickets polled for responses, and a buffered
+//! non-blocking write side. One `tick` makes every kind of progress the
+//! socket allows and never blocks.
+//!
+//! Protocol sniffing: the first four bytes pick binary frames vs the
+//! HTTP/1.1 adapter (`GET /healthz`, `GET /metrics`), so one listener
+//! port serves both inference clients and probes.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::TryRecvError;
+use std::time::{Duration, Instant};
+
+use crate::util::error as anyhow;
+use crate::util::logger as log;
+
+use super::dispatch::{DispatchError, Dispatcher, Ticket};
+use super::proto::{
+    encode_frame, http_head_len, http_response, looks_like_http, peek_request_id, FrameDecoder,
+    FrameKind, WireNack, WireRequest, WireResponse,
+};
+
+/// What the connection speaks (decided from the first bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Sniff,
+    Binary,
+    Http,
+}
+
+/// What one tick did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tick {
+    /// False once the connection should be dropped by the event loop.
+    pub keep: bool,
+    /// True when bytes moved or a response landed — the loop uses this to
+    /// decide whether to sleep before the next poll round.
+    pub progressed: bool,
+}
+
+/// One client connection.
+pub struct Conn {
+    stream: TcpStream,
+    peer: String,
+    mode: Mode,
+    decoder: FrameDecoder,
+    pending: Vec<Ticket>,
+    out: Vec<u8>,
+    written: usize,
+    last_activity: Instant,
+    /// Peer half-closed its send side: serve what's pending, then close.
+    peer_eof: bool,
+    /// Close as soon as the out buffer flushes (HTTP, fatal proto error).
+    close_after_flush: bool,
+    /// Server drain: no new requests, close once pending + out are empty.
+    draining: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> anyhow::Result<Conn> {
+        stream
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+        // Latency tier: a frame is a full request, never coalesce.
+        let _ = stream.set_nodelay(true);
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".to_string());
+        Ok(Conn {
+            stream,
+            peer,
+            mode: Mode::Sniff,
+            decoder: FrameDecoder::new(),
+            pending: Vec::new(),
+            out: Vec::new(),
+            written: 0,
+            last_activity: Instant::now(),
+            peer_eof: false,
+            close_after_flush: false,
+            draining: false,
+        })
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Requests admitted but not yet answered on this connection.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Enter drain mode (server shutdown): stop accepting new frames,
+    /// finish what's in flight, then close.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    fn queue_frame(&mut self, kind: FrameKind, body: &[u8]) {
+        self.out.extend_from_slice(&encode_frame(kind, body));
+    }
+
+    fn queue_nack(&mut self, kind: FrameKind, id: u64, message: String) {
+        let body = WireNack { id, message }.encode();
+        self.queue_frame(kind, &body);
+    }
+
+    /// One non-blocking pass: read, decode/dispatch, poll responses,
+    /// write, apply timeouts.
+    pub fn tick(&mut self, d: &Dispatcher, now: Instant, idle_timeout: Duration) -> Tick {
+        let mut progressed = false;
+        if !self.read_some(now, &mut progressed) {
+            return Tick { keep: false, progressed };
+        }
+        if self.mode == Mode::Sniff && self.decoder.buffered() >= 4 {
+            self.mode =
+                if looks_like_http(self.decoder.peek(4)) { Mode::Http } else { Mode::Binary };
+        }
+        match self.mode {
+            Mode::Binary => {
+                if !self.process_frames(d, &mut progressed) {
+                    // Fatal framing error: answer nothing further, flush
+                    // what's queued, close.
+                    self.close_after_flush = true;
+                }
+            }
+            Mode::Http => self.process_http(d, &mut progressed),
+            Mode::Sniff => {}
+        }
+        self.poll_pending(d, &mut progressed);
+        if !self.write_some(now, &mut progressed) {
+            return Tick { keep: false, progressed };
+        }
+        Tick { keep: self.decide_keep(now, idle_timeout), progressed }
+    }
+
+    /// Drain the socket's read side into the decoder. False = hard error.
+    fn read_some(&mut self, now: Instant, progressed: &mut bool) -> bool {
+        let mut scratch = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut scratch) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return true;
+                }
+                Ok(n) => {
+                    self.decoder.extend(&scratch[..n]);
+                    self.last_activity = now;
+                    *progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log::debug!("net: {} read error: {e}", self.peer);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Decode and dispatch buffered frames. False = fatal framing error.
+    fn process_frames(&mut self, d: &Dispatcher, progressed: &mut bool) -> bool {
+        loop {
+            match self.decoder.next_frame() {
+                Ok(Some((FrameKind::Infer, body))) => {
+                    *progressed = true;
+                    if self.draining {
+                        let id = peek_request_id(&body);
+                        d.on_rejected();
+                        self.queue_nack(FrameKind::Error, id, "server draining".to_string());
+                        continue;
+                    }
+                    self.handle_request(d, &body);
+                }
+                Ok(Some((kind, body))) => {
+                    // Clients must not send server->client kinds.
+                    *progressed = true;
+                    d.on_proto_error();
+                    let id = peek_request_id(&body);
+                    self.queue_nack(
+                        FrameKind::Error,
+                        id,
+                        format!("unexpected client frame kind {:?}", kind),
+                    );
+                }
+                Ok(None) => return true,
+                Err(e) if e.is_fatal() => {
+                    log::warn!("net: {} fatal protocol error: {e}", self.peer);
+                    d.on_proto_error();
+                    return false;
+                }
+                Err(e) => {
+                    // Bad frame consumed; the connection survives.
+                    *progressed = true;
+                    d.on_proto_error();
+                    self.queue_nack(FrameKind::Error, 0, e.to_string());
+                }
+            }
+        }
+    }
+
+    fn handle_request(&mut self, d: &Dispatcher, body: &[u8]) {
+        let req = match WireRequest::decode(body) {
+            Ok(r) => r,
+            Err(e) => {
+                d.on_proto_error();
+                self.queue_nack(FrameKind::Error, peek_request_id(body), e.to_string());
+                return;
+            }
+        };
+        let id = req.id;
+        match d.submit(req) {
+            Ok(ticket) => self.pending.push(ticket),
+            Err(DispatchError::Overloaded(m)) => self.queue_nack(FrameKind::Overloaded, id, m),
+            Err(DispatchError::Rejected(m)) => self.queue_nack(FrameKind::Error, id, m),
+        }
+    }
+
+    fn process_http(&mut self, d: &Dispatcher, progressed: &mut bool) {
+        if self.close_after_flush {
+            return; // already answered
+        }
+        let buffered = self.decoder.buffered();
+        if let Some(n) = http_head_len(self.decoder.peek(buffered)) {
+            let head: Vec<u8> = self.decoder.peek(n).to_vec();
+            let resp = http_response(&head, || d.metrics_text());
+            self.out.extend_from_slice(&resp);
+            self.close_after_flush = true;
+            *progressed = true;
+        }
+    }
+
+    /// Move completed inferences from pending tickets onto the wire.
+    fn poll_pending(&mut self, d: &Dispatcher, progressed: &mut bool) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            match self.pending[i].rx.try_recv() {
+                Ok(resp) => {
+                    let t = self.pending.swap_remove(i);
+                    let wire = WireResponse {
+                        id: t.wire_id,
+                        model: resp.model,
+                        logits: resp.logits,
+                        class: resp.class as u32,
+                        latency_ns: resp.latency_ns,
+                        batch_size: resp.batch_size as u32,
+                    };
+                    let body = wire.encode();
+                    self.queue_frame(FrameKind::Logits, &body);
+                    d.on_completed();
+                    *progressed = true;
+                }
+                Err(TryRecvError::Empty) => i += 1,
+                Err(TryRecvError::Disconnected) => {
+                    let t = self.pending.swap_remove(i);
+                    d.on_rejected();
+                    self.queue_nack(FrameKind::Error, t.wire_id, "pool closed".to_string());
+                    *progressed = true;
+                }
+            }
+        }
+    }
+
+    /// Flush the out buffer as far as the socket allows. False = hard
+    /// error (peer gone).
+    fn write_some(&mut self, now: Instant, progressed: &mut bool) -> bool {
+        while self.written < self.out.len() {
+            match self.stream.write(&self.out[self.written..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    self.written += n;
+                    self.last_activity = now;
+                    *progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log::debug!("net: {} write error: {e}", self.peer);
+                    return false;
+                }
+            }
+        }
+        if self.written > 0 && self.written == self.out.len() {
+            self.out.clear();
+            self.written = 0;
+        }
+        true
+    }
+
+    fn decide_keep(&self, now: Instant, idle_timeout: Duration) -> bool {
+        let flushed = self.written == self.out.len();
+        let settled = self.pending.is_empty() && flushed;
+        if self.close_after_flush && flushed && self.pending.is_empty() {
+            return false;
+        }
+        if (self.peer_eof || self.draining) && settled {
+            return false;
+        }
+        // Idle reaping only applies to quiescent connections: anything
+        // pending or unflushed is live regardless of socket silence.
+        if settled && now.duration_since(self.last_activity) > idle_timeout {
+            log::debug!("net: {} idle timeout", self.peer);
+            return false;
+        }
+        true
+    }
+}

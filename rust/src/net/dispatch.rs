@@ -1,0 +1,368 @@
+//! Request dispatch: decoded wire requests enter the existing per-model
+//! [`Server`] pools here, behind two admission-control gates:
+//!
+//! 1. a **bounded in-flight budget per model** — requests admitted but not
+//!    yet answered on the wire. The budget is held by an RAII guard inside
+//!    the [`Ticket`], so a slot is released exactly once whether the
+//!    response is written back or the connection dies first.
+//! 2. the pool queue's own depth bound via
+//!    [`BoundedQueue::try_push`](crate::coordinator::BoundedQueue::try_push)
+//!    — so a stalled pool rejects instead of absorbing the whole budget as
+//!    queue growth.
+//!
+//! Either gate failing produces an explicit `Overloaded` wire response
+//! (never silent queueing), which is what makes the loadtest's shed rate
+//! an honest signal.
+//!
+//! SLO-aware batching lives at the other end of the queue:
+//! [`slo_batch_deadline`] derives the pool's batching deadline from the
+//! configured latency SLO, and `pop_batch` anchors that deadline at the
+//! *enqueue* timestamp the queue already stamps — so a batch closes when
+//! its oldest request nears the SLO, not a full window after a worker
+//! first sees it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{
+    InferResponse, ModelRegistry, RegistryError, RouteError, SubmitError,
+};
+use crate::tensor::{Shape4, Tensor4};
+
+use super::proto::WireRequest;
+
+/// Why a request did not enter a pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DispatchError {
+    /// Admission control shed the request (in-flight budget or pool queue
+    /// at bound). Answered with an `Overloaded` frame.
+    Overloaded(String),
+    /// The request is unservable (unknown model, pool closed). Answered
+    /// with an `Error` frame.
+    Rejected(String),
+}
+
+impl std::fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DispatchError::Overloaded(m) => write!(f, "overloaded: {m}"),
+            DispatchError::Rejected(m) => write!(f, "rejected: {m}"),
+        }
+    }
+}
+
+/// Net-tier counters (monotonic since server start).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct NetCounters {
+    /// Requests admitted into a pool.
+    pub accepted: u64,
+    /// Responses written back to a client.
+    pub completed: u64,
+    /// Requests shed by admission control (`Overloaded` frames).
+    pub shed: u64,
+    /// Requests rejected as unservable (`Error` frames).
+    pub rejected: u64,
+    /// Frames that failed protocol decode.
+    pub proto_errors: u64,
+}
+
+/// Shared in-flight table; split out so response-side guards can hold it
+/// without keeping the whole dispatcher alive.
+struct Inflight {
+    // Acquired before any pool queue lock on the submit path, hence the
+    // rank below queue=10.
+    // pcilt-lint: lock-rank(net-dispatch = 5)
+    by_model: Mutex<BTreeMap<String, usize>>,
+}
+
+/// RAII in-flight slot: dropping it (response written, or connection torn
+/// down with the request still pending) releases the model's budget.
+struct InflightGuard {
+    model: String,
+    shared: Arc<Inflight>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let mut g = self.shared.by_model.lock().unwrap();
+        if let Some(n) = g.get_mut(&self.model) {
+            *n = n.saturating_sub(1);
+        }
+    }
+}
+
+/// An admitted request: the reply receiver plus its in-flight slot.
+pub struct Ticket {
+    /// Wire correlation id to echo on the response frame.
+    pub wire_id: u64,
+    /// Resolved model name (after defaulting).
+    pub model: String,
+    pub rx: mpsc::Receiver<InferResponse>,
+    _guard: InflightGuard,
+}
+
+/// Routes wire requests into the registry's pools with admission control.
+pub struct Dispatcher {
+    registry: Arc<ModelRegistry>,
+    max_inflight: usize,
+    inflight: Arc<Inflight>,
+    accepted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    rejected: AtomicU64,
+    proto_errors: AtomicU64,
+}
+
+impl Dispatcher {
+    /// `max_inflight` is the per-model budget of admitted-but-unanswered
+    /// requests (also used as the pool queue depth bound).
+    pub fn new(registry: Arc<ModelRegistry>, max_inflight: usize) -> Dispatcher {
+        assert!(max_inflight >= 1);
+        Dispatcher {
+            registry,
+            max_inflight,
+            inflight: Arc::new(Inflight { by_model: Mutex::new(BTreeMap::new()) }),
+            accepted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            proto_errors: AtomicU64::new(0),
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Admit one decoded request into its model's pool.
+    pub fn submit(&self, req: WireRequest) -> Result<Ticket, DispatchError> {
+        let WireRequest { id, model, h, w, c, codes } = req;
+        let model = if model.is_empty() {
+            self.registry.default_model().to_string()
+        } else {
+            model
+        };
+        {
+            let mut g = self.inflight.by_model.lock().unwrap();
+            let n = g.entry(model.clone()).or_insert(0);
+            if *n >= self.max_inflight {
+                drop(g);
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(DispatchError::Overloaded(format!(
+                    "model '{model}' at in-flight budget {}",
+                    self.max_inflight
+                )));
+            }
+            *n += 1;
+        }
+        let guard = InflightGuard { model: model.clone(), shared: Arc::clone(&self.inflight) };
+        let shape = Shape4::new(1, h as usize, w as usize, c as usize);
+        // WireRequest::decode validated codes.len() == shape.len().
+        let codes = Tensor4::from_vec(shape, codes);
+        match self.registry.submit_bounded(Some(&model), codes, self.max_inflight) {
+            Ok((_, rx)) => {
+                self.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket { wire_id: id, model, rx, _guard: guard })
+            }
+            Err(RegistryError::Route(RouteError::Submit(SubmitError::Overloaded))) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(DispatchError::Overloaded(format!("model '{model}' queue at bound")))
+            }
+            Err(e) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(DispatchError::Rejected(e.to_string()))
+            }
+        }
+    }
+
+    /// Current in-flight count for a model (admitted, not yet answered).
+    pub fn inflight(&self, model: &str) -> usize {
+        self.inflight.by_model.lock().unwrap().get(model).copied().unwrap_or(0)
+    }
+
+    pub fn on_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_proto_error(&self) {
+        self.proto_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn counters(&self) -> NetCounters {
+        NetCounters {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            proto_errors: self.proto_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Plaintext metrics for `GET /metrics`: net-tier counters plus the
+    /// per-model pool snapshots (one source of truth with `pcilt serve`).
+    pub fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let c = self.counters();
+        let mut s = String::new();
+        let _ = writeln!(s, "pcilt_net_accepted {}", c.accepted);
+        let _ = writeln!(s, "pcilt_net_completed {}", c.completed);
+        let _ = writeln!(s, "pcilt_net_shed {}", c.shed);
+        let _ = writeln!(s, "pcilt_net_rejected {}", c.rejected);
+        let _ = writeln!(s, "pcilt_net_proto_errors {}", c.proto_errors);
+        for (name, m) in self.registry.metrics() {
+            let _ = writeln!(s, "pcilt_model_completed{{model=\"{name}\"}} {}", m.completed);
+            let _ = writeln!(s, "pcilt_model_shed{{model=\"{name}\"}} {}", m.shed_overload);
+            let _ = writeln!(s, "pcilt_model_queue_depth{{model=\"{name}\"}} {}", m.queue_depth);
+            let _ = writeln!(s, "pcilt_model_p50_ns{{model=\"{name}\"}} {:.0}", m.p50_latency_ns);
+            let _ = writeln!(s, "pcilt_model_p99_ns{{model=\"{name}\"}} {:.0}", m.p99_latency_ns);
+            let _ =
+                writeln!(s, "pcilt_model_p999_ns{{model=\"{name}\"}} {:.0}", m.p999_latency_ns);
+        }
+        s
+    }
+}
+
+/// The batching deadline a pool should run under a latency SLO: close a
+/// forming batch once its oldest request has consumed a quarter of the
+/// SLO, leaving the rest for inference and the reply path. Never longer
+/// than the configured deadline (which stays the throughput-mode cap),
+/// never shorter than 100µs (degenerate busy-spin guard).
+pub fn slo_batch_deadline(slo: Duration, configured: Duration) -> Duration {
+    configured.min(slo / 4).max(Duration::from_micros(100))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ModelConfig};
+    use crate::coordinator::ServerOpts;
+    use crate::pcilt::store::TableStore;
+
+    fn registry() -> Arc<ModelRegistry> {
+        let cfg = |name: &str, seed: u64| ModelConfig {
+            name: name.to_string(),
+            engine: EngineKind::Pcilt,
+            act_bits: 4,
+            seed,
+            ..ModelConfig::default()
+        };
+        let store = Arc::new(TableStore::new());
+        Arc::new(
+            ModelRegistry::start_with_store(
+                &[cfg("a", 1), cfg("b", 2)],
+                &ServerOpts {
+                    workers: 1,
+                    max_batch: 4,
+                    batch_deadline: Duration::from_millis(1),
+                    queue_capacity: 64,
+                },
+                store,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn request(model: &str, id: u64) -> WireRequest {
+        WireRequest {
+            id,
+            model: model.to_string(),
+            h: 16,
+            w: 16,
+            c: 1,
+            codes: vec![3; 16 * 16],
+        }
+    }
+
+    #[test]
+    fn inflight_budget_bounds_and_releases() {
+        let d = Dispatcher::new(registry(), 2);
+        let t1 = d.submit(request("a", 1)).unwrap();
+        let t2 = d.submit(request("a", 2)).unwrap();
+        assert_eq!(d.inflight("a"), 2);
+        // Budget is held until the ticket is dropped — even after the pool
+        // answers — so the third submit must shed deterministically.
+        let err = d.submit(request("a", 3)).unwrap_err();
+        assert!(matches!(err, DispatchError::Overloaded(_)), "{err}");
+        // Another model has its own budget.
+        let tb = d.submit(request("b", 4)).unwrap();
+        assert_eq!(tb.model, "b");
+        drop(t1);
+        assert_eq!(d.inflight("a"), 1);
+        let t3 = d.submit(request("a", 5)).unwrap();
+        assert_eq!(t3.wire_id, 5);
+        drop((t2, t3, tb));
+        assert_eq!(d.inflight("a"), 0);
+        let c = d.counters();
+        assert_eq!(c.accepted, 4);
+        assert_eq!(c.shed, 1);
+    }
+
+    #[test]
+    fn empty_model_routes_to_default_and_unknown_rejects() {
+        let d = Dispatcher::new(registry(), 8);
+        let t = d.submit(request("", 1)).unwrap();
+        assert_eq!(t.model, "a", "empty model must resolve to the default");
+        let resp = t.rx.recv().unwrap();
+        assert_eq!(resp.model, "a");
+        let err = d.submit(request("nope", 2)).unwrap_err();
+        assert!(matches!(err, DispatchError::Rejected(_)), "{err}");
+        assert_eq!(d.counters().rejected, 1);
+        assert_eq!(d.inflight("nope"), 0, "rejected submit must not leak budget");
+    }
+
+    #[test]
+    fn admitted_requests_complete_end_to_end() {
+        let d = Dispatcher::new(registry(), 8);
+        let tickets: Vec<Ticket> =
+            (0..8).map(|i| d.submit(request(["a", "b"][i % 2], i as u64)).unwrap()).collect();
+        for t in tickets {
+            let resp = t.rx.recv().unwrap();
+            assert_eq!(resp.model, t.model);
+            assert_eq!(resp.logits.len(), 8);
+        }
+        assert_eq!(d.inflight("a"), 0);
+        assert_eq!(d.inflight("b"), 0);
+    }
+
+    #[test]
+    fn metrics_text_renders_all_series() {
+        let d = Dispatcher::new(registry(), 4);
+        let t = d.submit(request("a", 1)).unwrap();
+        let _ = t.rx.recv();
+        drop(t);
+        d.on_completed();
+        let text = d.metrics_text();
+        for needle in [
+            "pcilt_net_accepted 1",
+            "pcilt_net_completed 1",
+            "pcilt_model_completed{model=\"a\"}",
+            "pcilt_model_queue_depth{model=\"b\"}",
+            "pcilt_model_p999_ns{model=\"a\"}",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn slo_deadline_is_clamped_both_ways() {
+        let cfg = Duration::from_millis(2);
+        // Generous SLO: the configured deadline wins.
+        assert_eq!(slo_batch_deadline(Duration::from_millis(100), cfg), cfg);
+        // Tight SLO: a quarter of it wins.
+        assert_eq!(
+            slo_batch_deadline(Duration::from_millis(4), cfg),
+            Duration::from_millis(1)
+        );
+        // Degenerate SLO: floor at 100µs.
+        assert_eq!(
+            slo_batch_deadline(Duration::from_micros(8), cfg),
+            Duration::from_micros(100)
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Accept/event loop: one `pcilt-net` thread owns a non-blocking
+//! `std::net` listener plus every live [`Conn`], and round-robins ticks
+//! over them (accept → per-connection read/dispatch/write). No external
+//! event API — a short poll sleep bounds the idle cost, and any byte of
+//! progress on any connection skips the sleep, so the loop degrades to
+//! busy-polling exactly when there is work.
+//!
+//! Shutdown is a graceful drain: stop accepting, tell every connection to
+//! finish its in-flight requests, and force-close whatever is left when
+//! the drain window expires.
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ModelRegistry;
+use crate::util::error as anyhow;
+use crate::util::logger as log;
+
+use super::conn::Conn;
+use super::dispatch::{Dispatcher, NetCounters};
+
+/// Sleep between poll rounds when no connection made progress.
+const POLL_IDLE: Duration = Duration::from_micros(500);
+
+/// Net-tier configuration (the `[net]` config section, resolved).
+#[derive(Debug, Clone)]
+pub struct NetOpts {
+    /// Listen address; port 0 picks an ephemeral port (tests, loadtest).
+    pub addr: String,
+    /// Per-model budget of admitted-but-unanswered requests.
+    pub max_inflight: usize,
+    /// Latency SLO the batcher budget is derived from
+    /// ([`super::dispatch::slo_batch_deadline`]).
+    pub slo: Duration,
+    /// Graceful-drain window on shutdown.
+    pub drain: Duration,
+    /// Close quiescent connections after this long.
+    pub idle_timeout: Duration,
+}
+
+impl Default for NetOpts {
+    fn default() -> Self {
+        NetOpts {
+            addr: "127.0.0.1:7070".to_string(),
+            max_inflight: 64,
+            slo: Duration::from_millis(50),
+            drain: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl NetOpts {
+    pub fn from_config(net: &crate::config::NetConfig) -> NetOpts {
+        NetOpts {
+            addr: net.addr.clone(),
+            max_inflight: net.max_inflight,
+            slo: Duration::from_millis(net.slo_ms),
+            drain: Duration::from_millis(net.drain_ms),
+            ..NetOpts::default()
+        }
+    }
+}
+
+/// A running socket tier in front of a [`ModelRegistry`].
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    dispatcher: Arc<Dispatcher>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `opts.addr` and spawn the event-loop thread. The registry
+    /// stays owned by the caller (shutdown order: net tier first, then
+    /// the pools).
+    pub fn start(registry: Arc<ModelRegistry>, opts: &NetOpts) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(opts.addr.as_str())
+            .map_err(|e| anyhow::anyhow!("net: binding {}: {e}", opts.addr))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("net: set_nonblocking: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| anyhow::anyhow!("net: local_addr: {e}"))?;
+        let dispatcher = Arc::new(Dispatcher::new(registry, opts.max_inflight));
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let d = Arc::clone(&dispatcher);
+            let s = Arc::clone(&stop);
+            let (idle, drain) = (opts.idle_timeout, opts.drain);
+            std::thread::Builder::new()
+                .name("pcilt-net".to_string())
+                .spawn(move || event_loop(listener, &d, &s, idle, drain))
+                .map_err(|e| anyhow::anyhow!("net: spawning event loop: {e}"))?
+        };
+        log::info!("net: listening on {addr}");
+        Ok(NetServer { addr, stop, dispatcher, handle: Some(handle) })
+    }
+
+    /// Bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn dispatcher(&self) -> &Arc<Dispatcher> {
+        &self.dispatcher
+    }
+
+    pub fn counters(&self) -> NetCounters {
+        self.dispatcher.counters()
+    }
+
+    /// Stop accepting, drain in-flight work, join the loop thread.
+    pub fn shutdown(mut self) -> NetCounters {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.dispatcher.counters()
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn event_loop(
+    listener: TcpListener,
+    d: &Dispatcher,
+    stop: &AtomicBool,
+    idle_timeout: Duration,
+    drain: Duration,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let mut progressed = false;
+        let stopping = stop.load(Ordering::SeqCst);
+        if !stopping {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => match Conn::new(stream) {
+                        Ok(c) => {
+                            log::debug!("net: accepted {}", c.peer());
+                            conns.push(c);
+                            progressed = true;
+                        }
+                        Err(e) => log::warn!("net: connection setup failed: {e:#}"),
+                    },
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        log::warn!("net: accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        } else if drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + drain);
+            for c in &mut conns {
+                c.begin_drain();
+            }
+            log::info!("net: draining {} connections (window {drain:?})", conns.len());
+        }
+        let now = Instant::now();
+        conns.retain_mut(|c| {
+            let t = c.tick(d, now, idle_timeout);
+            progressed |= t.progressed;
+            t.keep
+        });
+        if stopping {
+            let expired = drain_deadline.map(|t| now >= t).unwrap_or(true);
+            if conns.is_empty() || expired {
+                if !conns.is_empty() {
+                    log::warn!(
+                        "net: drain window expired, dropping {} connections",
+                        conns.len()
+                    );
+                }
+                break;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+}

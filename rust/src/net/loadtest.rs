@@ -1,0 +1,386 @@
+//! Open-loop load-test client for the socket tier: `connections` client
+//! threads each fire Poisson arrivals at `rate/connections` rps over a
+//! model mix, without waiting for responses (open-loop — the arrival
+//! process never slows down because the server lags, which is what makes
+//! tail latency and shed rate honest under overload).
+//!
+//! Each thread pumps a non-blocking socket (buffered writes, incremental
+//! frame decode) and stamps per-request latency into its own
+//! [`LatencyHistogram`]; histograms merge after join, so the harness
+//! itself is lock-free. Results land in `BENCH_serving_net.json`
+//! (`pcilt loadtest --json`), gated in CI via the
+//! `goodput_imgs_per_sec` key.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::WorkloadReport;
+use crate::util::error::{self as anyhow, ensure, Context};
+use crate::util::prng::Rng;
+use crate::util::stats::{fmt_ns, LatencyHistogram};
+
+use super::proto::{
+    encode_frame, FrameDecoder, FrameKind, WireRequest, WireResponse,
+};
+
+/// One entry of the traffic mix: which model, and the input shape/bits
+/// its requests need.
+#[derive(Debug, Clone)]
+pub struct ModelTarget {
+    /// Model name on the wire; empty routes to the server default.
+    pub name: String,
+    pub img: usize,
+    pub act_bits: u32,
+}
+
+/// Load-test configuration.
+#[derive(Debug, Clone)]
+pub struct LoadtestOpts {
+    /// Server address, e.g. `127.0.0.1:7070`.
+    pub addr: String,
+    /// Aggregate offered rate across all connections.
+    pub rate_rps: f64,
+    /// Total requests across all connections.
+    pub requests: usize,
+    pub connections: usize,
+    /// Round-robined per connection.
+    pub mix: Vec<ModelTarget>,
+    pub seed: u64,
+    /// How long to wait for stragglers after the last send.
+    pub drain: Duration,
+}
+
+impl Default for LoadtestOpts {
+    fn default() -> Self {
+        LoadtestOpts {
+            addr: "127.0.0.1:7070".to_string(),
+            rate_rps: 500.0,
+            requests: 1000,
+            connections: 4,
+            mix: Vec::new(),
+            seed: 7,
+            drain: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Aggregated load-test result.
+#[derive(Debug, Clone)]
+pub struct LoadtestReport {
+    pub offered: usize,
+    /// `Logits` responses received.
+    pub completed: usize,
+    /// `Overloaded` responses (admission control shed).
+    pub shed: usize,
+    /// `Error` responses plus protocol-level failures.
+    pub errors: usize,
+    /// Requests never answered within the drain window.
+    pub lost: usize,
+    pub wall_s: f64,
+    pub offered_rps: f64,
+    /// Completed responses per second of wall time.
+    pub goodput_rps: f64,
+    /// shed / offered.
+    pub shed_rate: f64,
+    pub p50_latency_ns: f64,
+    pub p99_latency_ns: f64,
+    pub p999_latency_ns: f64,
+    pub max_latency_ns: u64,
+}
+
+impl LoadtestReport {
+    /// The shared workload view (one report format across the in-process
+    /// driver and the socket tier).
+    pub fn workload(&self) -> WorkloadReport {
+        WorkloadReport {
+            offered: self.offered,
+            accepted: self.completed,
+            rejected: self.shed,
+            wall_s: self.wall_s,
+            offered_rps: self.offered_rps,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{}\nlatency: p50={} p99={} p999={} max={}\n\
+             goodput: {:.0} resp/s | shed rate {:.1}% | {} errors, {} lost",
+            self.workload().report(),
+            fmt_ns(self.p50_latency_ns),
+            fmt_ns(self.p99_latency_ns),
+            fmt_ns(self.p999_latency_ns),
+            fmt_ns(self.max_latency_ns as f64),
+            self.goodput_rps,
+            100.0 * self.shed_rate,
+            self.errors,
+            self.lost,
+        )
+    }
+
+    /// Bench JSON consumed by `pcilt bench-check` — the
+    /// `goodput_imgs_per_sec` key is the CI-gated figure.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\n  \"bench\": \"serving_net/loadtest\",\n  \
+             \"offered\": {},\n  \"completed\": {},\n  \"shed\": {},\n  \
+             \"errors\": {},\n  \"lost\": {},\n  \
+             \"offered_rps\": {:.1},\n  \"goodput_imgs_per_sec\": {:.1},\n  \
+             \"shed_rate\": {:.4},\n  \"p50_ms\": {:.3},\n  \
+             \"p99_ms\": {:.3},\n  \"p999_ms\": {:.3}\n}}\n",
+            self.offered,
+            self.completed,
+            self.shed,
+            self.errors,
+            self.lost,
+            self.offered_rps,
+            self.goodput_rps,
+            self.shed_rate,
+            self.p50_latency_ns / 1e6,
+            self.p99_latency_ns / 1e6,
+            self.p999_latency_ns / 1e6,
+        )
+    }
+}
+
+/// Write the bench JSON to `path`.
+pub fn write_bench_json(path: &Path, r: &LoadtestReport) -> anyhow::Result<()> {
+    std::fs::write(path, r.json())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+struct ClientOutcome {
+    sent: usize,
+    completed: usize,
+    shed: usize,
+    errors: usize,
+    lost: usize,
+    hist: LatencyHistogram,
+}
+
+/// Run the load test. Blocks until all requests are answered or the
+/// drain window expires.
+pub fn run(opts: &LoadtestOpts) -> anyhow::Result<LoadtestReport> {
+    ensure!(opts.rate_rps > 0.0, "rate must be positive");
+    ensure!(opts.connections >= 1, "need at least one connection");
+    ensure!(!opts.mix.is_empty(), "model mix is empty");
+    let per_conn = opts.requests.div_ceil(opts.connections);
+    let per_rate = opts.rate_rps / opts.connections as f64;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..opts.connections)
+        .map(|cid| {
+            let addr = opts.addr.clone();
+            let mix = opts.mix.clone();
+            let count = per_conn.min(opts.requests.saturating_sub(cid * per_conn));
+            let seed = opts.seed.wrapping_add(cid as u64 * 7919);
+            let drain = opts.drain;
+            std::thread::spawn(move || run_client(&addr, &mix, count, per_rate, seed, drain))
+        })
+        .collect();
+    let mut sent = 0;
+    let mut completed = 0;
+    let mut shed = 0;
+    let mut errors = 0;
+    let mut lost = 0;
+    let mut hist = LatencyHistogram::new();
+    for h in handles {
+        let outcome = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("loadtest client thread panicked"))??;
+        sent += outcome.sent;
+        completed += outcome.completed;
+        shed += outcome.shed;
+        errors += outcome.errors;
+        lost += outcome.lost;
+        hist.merge(&outcome.hist);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(LoadtestReport {
+        offered: sent,
+        completed,
+        shed,
+        errors,
+        lost,
+        wall_s,
+        offered_rps: if wall_s > 0.0 { sent as f64 / wall_s } else { 0.0 },
+        goodput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        shed_rate: if sent > 0 { shed as f64 / sent as f64 } else { 0.0 },
+        p50_latency_ns: hist.percentile_ns(0.50),
+        p99_latency_ns: hist.percentile_ns(0.99),
+        p999_latency_ns: hist.percentile_ns(0.999),
+        max_latency_ns: hist.max_ns(),
+    })
+}
+
+fn random_codes(rng: &mut Rng, len: usize, act_bits: u32) -> Vec<u8> {
+    let mask = ((1u32 << act_bits) - 1) as u8;
+    (0..len).map(|_| (rng.next_u32() as u8) & mask).collect()
+}
+
+fn run_client(
+    addr: &str,
+    mix: &[ModelTarget],
+    count: usize,
+    rate_rps: f64,
+    seed: u64,
+    drain: Duration,
+) -> anyhow::Result<ClientOutcome> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream
+        .set_nonblocking(true)
+        .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut rng = Rng::new(seed);
+    let mut decoder = FrameDecoder::new();
+    let mut out: Vec<u8> = Vec::new();
+    let mut written = 0usize;
+    let mut pending: BTreeMap<u64, Instant> = BTreeMap::new();
+    let mut o = ClientOutcome {
+        sent: 0,
+        completed: 0,
+        shed: 0,
+        errors: 0,
+        lost: 0,
+        hist: LatencyHistogram::new(),
+    };
+    let mut next_arrival = Instant::now();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let now = Instant::now();
+        // Open-loop send side: arrivals fire on schedule no matter how
+        // far behind the responses are.
+        if o.sent < count && now >= next_arrival {
+            let t = &mix[o.sent % mix.len()];
+            let len = t.img * t.img;
+            let req = WireRequest {
+                id: o.sent as u64,
+                model: t.name.clone(),
+                h: t.img as u32,
+                w: t.img as u32,
+                c: 1,
+                codes: random_codes(&mut rng, len, t.act_bits),
+            };
+            out.extend_from_slice(&encode_frame(FrameKind::Infer, &req.encode()));
+            pending.insert(req.id, Instant::now());
+            o.sent += 1;
+            next_arrival += Duration::from_secs_f64(rng.exponential(rate_rps));
+            if o.sent == count {
+                drain_deadline = Some(Instant::now() + drain);
+            }
+        }
+        let mut progressed = pump_write(&mut stream, &mut out, &mut written)?;
+        progressed |= pump_read(&mut stream, &mut decoder)?;
+        loop {
+            match decoder.next_frame() {
+                Ok(Some((FrameKind::Logits, body))) => {
+                    progressed = true;
+                    match WireResponse::decode(&body) {
+                        Ok(resp) => {
+                            if let Some(t_sent) = pending.remove(&resp.id) {
+                                let ns = t_sent.elapsed().as_nanos() as u64;
+                                o.hist.record(ns);
+                                o.completed += 1;
+                            }
+                        }
+                        Err(_) => o.errors += 1,
+                    }
+                }
+                Ok(Some((FrameKind::Overloaded, body))) => {
+                    progressed = true;
+                    o.shed += 1;
+                    if let Ok(nack) = super::proto::WireNack::decode(&body) {
+                        pending.remove(&nack.id);
+                    }
+                }
+                Ok(Some((FrameKind::Error, body))) => {
+                    progressed = true;
+                    o.errors += 1;
+                    if let Ok(nack) = super::proto::WireNack::decode(&body) {
+                        pending.remove(&nack.id);
+                    }
+                }
+                Ok(Some((FrameKind::Infer, _))) => {
+                    progressed = true;
+                    o.errors += 1; // server must not send requests
+                }
+                Ok(None) => break,
+                Err(e) if e.is_fatal() => anyhow::bail!("protocol failure from server: {e}"),
+                Err(_) => o.errors += 1,
+            }
+        }
+        if o.sent >= count && pending.is_empty() {
+            break;
+        }
+        if let Some(dl) = drain_deadline {
+            if now >= dl && !pending.is_empty() {
+                o.lost += pending.len();
+                pending.clear();
+                break;
+            }
+        }
+        if !progressed {
+            // Nothing moved: nap until the next scheduled arrival (capped
+            // so response polling stays responsive).
+            let nap = if o.sent < count {
+                next_arrival
+                    .saturating_duration_since(Instant::now())
+                    .min(Duration::from_micros(200))
+            } else {
+                Duration::from_micros(200)
+            };
+            if !nap.is_zero() {
+                std::thread::sleep(nap);
+            }
+        }
+    }
+    Ok(o)
+}
+
+/// Flush buffered output; true if any bytes moved.
+fn pump_write(
+    stream: &mut TcpStream,
+    out: &mut Vec<u8>,
+    written: &mut usize,
+) -> anyhow::Result<bool> {
+    let mut progressed = false;
+    while *written < out.len() {
+        match stream.write(&out[*written..]) {
+            Ok(0) => anyhow::bail!("server closed the connection mid-write"),
+            Ok(n) => {
+                *written += n;
+                progressed = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => anyhow::bail!("write: {e}"),
+        }
+    }
+    if *written > 0 && *written == out.len() {
+        out.clear();
+        *written = 0;
+    }
+    Ok(progressed)
+}
+
+/// Drain the socket into the decoder; true if any bytes arrived.
+fn pump_read(stream: &mut TcpStream, decoder: &mut FrameDecoder) -> anyhow::Result<bool> {
+    let mut scratch = [0u8; 4096];
+    let mut progressed = false;
+    loop {
+        match stream.read(&mut scratch) {
+            Ok(0) => anyhow::bail!("server closed the connection"),
+            Ok(n) => {
+                decoder.extend(&scratch[..n]);
+                progressed = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => anyhow::bail!("read: {e}"),
+        }
+    }
+    Ok(progressed)
+}

@@ -1,0 +1,30 @@
+//! `pcilt-net` (Layer 3.5): the socket serving tier in front of the
+//! coordinator — a dependency-free `std::net` stack that converts the
+//! serving story from the in-process Poisson driver to a real network
+//! front-end. See DESIGN.md §15.
+//!
+//! ```text
+//!   clients ──TCP──▶ listener (accept/event loop, one thread)
+//!                        │ per-conn state machines (conn.rs)
+//!                        ▼ frames (proto.rs)
+//!                    Dispatcher ── admission control ──▶ Server pools
+//!                        │   bounded in-flight / model      (queue.rs)
+//!                        └── Overloaded / Error frames back on the wire
+//! ```
+//!
+//! - [`proto`]: length-prefixed binary frames + checksum, HTTP adapter.
+//! - [`conn`]: non-blocking per-connection read/write state machine.
+//! - [`listener`]: accept/event loop, idle timeouts, graceful drain.
+//! - [`dispatch`]: routing, per-model in-flight budgets, SLO batching.
+//! - [`loadtest`]: open-loop client harness (`pcilt loadtest`).
+
+pub mod conn;
+pub mod dispatch;
+pub mod listener;
+pub mod loadtest;
+pub mod proto;
+
+pub use dispatch::{slo_batch_deadline, DispatchError, Dispatcher, NetCounters, Ticket};
+pub use listener::{NetOpts, NetServer};
+pub use loadtest::{LoadtestOpts, LoadtestReport, ModelTarget};
+pub use proto::{FrameDecoder, FrameKind, ProtoError, WireNack, WireRequest, WireResponse};

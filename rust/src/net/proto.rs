@@ -1,0 +1,560 @@
+//! `pcilt-net` wire protocol: length-prefixed binary frames with a
+//! checksum trailer, byte-exact in the TableStore `ByteWriter`/`ByteReader`
+//! idiom, plus a minimal hand-rolled HTTP/1.1 adapter so `GET /healthz`
+//! and `GET /metrics` work from `curl` on the same port.
+//!
+//! Frame grammar (all integers little-endian):
+//!
+//! ```text
+//!   frame   := magic:u32 version:u8 kind:u8 body_len:u32 body trailer
+//!   trailer := fnv1a(body):u64
+//!   kind    := 1 Infer | 2 Logits | 3 Overloaded | 4 Error
+//! ```
+//!
+//! Error taxonomy: a *fatal* error (bad magic, unknown version, oversized
+//! length) means the byte stream is desynchronized and the connection must
+//! close. A *recoverable* error (checksum mismatch, unknown-but-framed
+//! kind) consumes exactly one frame; the connection survives and the peer
+//! gets an `Error` frame back.
+
+use crate::pcilt::store::{fnv1a, ByteReader, ByteWriter};
+
+/// `b"PCLT"` on the wire, read back as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PCLT");
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// magic + version + kind + body_len.
+pub const HEADER_LEN: usize = 10;
+/// fnv1a(body) checksum.
+pub const TRAILER_LEN: usize = 8;
+/// Hard cap on the body of a single frame; anything larger is a fatal
+/// framing error (a real request for the seed topologies is a few KiB).
+pub const MAX_BODY: usize = 16 << 20;
+/// Longest accepted model name on the wire.
+pub const MAX_MODEL_LEN: usize = 128;
+/// Largest accepted tensor dimension (h, w, c).
+pub const MAX_DIM: u32 = 4096;
+
+/// Frame type tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client -> server: one inference request.
+    Infer,
+    /// Server -> client: logits for a completed request.
+    Logits,
+    /// Server -> client: request shed by admission control.
+    Overloaded,
+    /// Server -> client: request rejected (bad model, malformed body...).
+    Error,
+}
+
+impl FrameKind {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Infer => 1,
+            FrameKind::Logits => 2,
+            FrameKind::Overloaded => 3,
+            FrameKind::Error => 4,
+        }
+    }
+
+    pub fn from_u8(x: u8) -> Option<FrameKind> {
+        match x {
+            1 => Some(FrameKind::Infer),
+            2 => Some(FrameKind::Logits),
+            3 => Some(FrameKind::Overloaded),
+            4 => Some(FrameKind::Error),
+            _ => None,
+        }
+    }
+}
+
+/// Decode/framing errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// First four bytes are not `MAGIC` — stream is not speaking pcilt-net.
+    BadMagic(u32),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Unknown frame kind (framing is intact; the frame was skipped).
+    BadKind(u8),
+    /// Declared body length exceeds [`MAX_BODY`].
+    Oversized(usize),
+    /// Body checksum mismatch (framing is intact; the frame was skipped).
+    Checksum { want: u64, got: u64 },
+    /// Body failed structural decode (bad lengths, non-UTF-8 model...).
+    Malformed(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadMagic(m) => write!(f, "bad magic 0x{m:08x}"),
+            ProtoError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            ProtoError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtoError::Oversized(n) => write!(f, "frame body {n} bytes exceeds {MAX_BODY}"),
+            ProtoError::Checksum { want, got } => {
+                write!(f, "checksum mismatch: want {want:016x}, got {got:016x}")
+            }
+            ProtoError::Malformed(m) => write!(f, "malformed body: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl ProtoError {
+    /// Fatal errors desynchronize framing: the connection must close.
+    /// Recoverable errors consumed exactly one well-framed frame.
+    pub fn is_fatal(&self) -> bool {
+        matches!(
+            self,
+            ProtoError::BadMagic(_) | ProtoError::BadVersion(_) | ProtoError::Oversized(_)
+        )
+    }
+}
+
+/// One inference request on the wire. The tensor payload is the
+/// activation-code image `[1, h, w, c]` (already quantized client-side,
+/// exactly what [`crate::coordinator::Server::submit`] takes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed on the response.
+    pub id: u64,
+    /// Target model name; empty string routes to the registry default.
+    pub model: String,
+    pub h: u32,
+    pub w: u32,
+    pub c: u32,
+    /// `h * w * c` activation codes, row-major.
+    pub codes: Vec<u8>,
+}
+
+impl WireRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u64(self.id);
+        w.u8_slice(self.model.as_bytes());
+        w.u32(self.h);
+        w.u32(self.w);
+        w.u32(self.c);
+        w.u8_slice(&self.codes);
+        w.buf
+    }
+
+    pub fn decode(body: &[u8]) -> Result<WireRequest, ProtoError> {
+        let mut r = ByteReader::new(body);
+        let id = r.take_u64().map_err(ProtoError::Malformed)?;
+        let model_raw = r.take_u8_slice().map_err(ProtoError::Malformed)?;
+        if model_raw.len() > MAX_MODEL_LEN {
+            return Err(ProtoError::Malformed(format!(
+                "model name {} bytes exceeds {MAX_MODEL_LEN}",
+                model_raw.len()
+            )));
+        }
+        let model = String::from_utf8(model_raw)
+            .map_err(|_| ProtoError::Malformed("model name is not UTF-8".to_string()))?;
+        let h = r.take_u32().map_err(ProtoError::Malformed)?;
+        let w = r.take_u32().map_err(ProtoError::Malformed)?;
+        let c = r.take_u32().map_err(ProtoError::Malformed)?;
+        for (name, v) in [("h", h), ("w", w), ("c", c)] {
+            if v == 0 || v > MAX_DIM {
+                return Err(ProtoError::Malformed(format!("dimension {name}={v} out of range")));
+            }
+        }
+        let codes = r.take_u8_slice().map_err(ProtoError::Malformed)?;
+        let want = (h as usize) * (w as usize) * (c as usize);
+        if codes.len() != want {
+            return Err(ProtoError::Malformed(format!(
+                "payload {} bytes, shape [1,{h},{w},{c}] wants {want}",
+                codes.len()
+            )));
+        }
+        if r.remaining() != 0 {
+            return Err(ProtoError::Malformed(format!(
+                "{} trailing bytes after request body",
+                r.remaining()
+            )));
+        }
+        Ok(WireRequest { id, model, h, w, c, codes })
+    }
+}
+
+/// Correlation id of a request body without a full decode — used to
+/// address an `Error` reply when the rest of the body is malformed.
+/// Returns 0 when even the id field is truncated.
+pub fn peek_request_id(body: &[u8]) -> u64 {
+    ByteReader::new(body).take_u64().unwrap_or(0)
+}
+
+/// One inference response on the wire (kind [`FrameKind::Logits`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireResponse {
+    /// Echo of the request's correlation id.
+    pub id: u64,
+    /// Model that served the request.
+    pub model: String,
+    pub logits: Vec<i32>,
+    /// argmax(logits).
+    pub class: u32,
+    /// Server-side submit -> complete latency.
+    pub latency_ns: u64,
+    /// Size of the dynamic batch the request rode in.
+    pub batch_size: u32,
+}
+
+impl WireResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u64(self.id);
+        w.u8_slice(self.model.as_bytes());
+        w.i32_slice(&self.logits);
+        w.u32(self.class);
+        w.u64(self.latency_ns);
+        w.u32(self.batch_size);
+        w.buf
+    }
+
+    pub fn decode(body: &[u8]) -> Result<WireResponse, ProtoError> {
+        let mut r = ByteReader::new(body);
+        let id = r.take_u64().map_err(ProtoError::Malformed)?;
+        let model_raw = r.take_u8_slice().map_err(ProtoError::Malformed)?;
+        let model = String::from_utf8(model_raw)
+            .map_err(|_| ProtoError::Malformed("model name is not UTF-8".to_string()))?;
+        let logits = r.take_i32_slice().map_err(ProtoError::Malformed)?;
+        let class = r.take_u32().map_err(ProtoError::Malformed)?;
+        let latency_ns = r.take_u64().map_err(ProtoError::Malformed)?;
+        let batch_size = r.take_u32().map_err(ProtoError::Malformed)?;
+        if r.remaining() != 0 {
+            return Err(ProtoError::Malformed(format!(
+                "{} trailing bytes after response body",
+                r.remaining()
+            )));
+        }
+        Ok(WireResponse { id, model, logits, class, latency_ns, batch_size })
+    }
+}
+
+/// Negative reply body, shared by [`FrameKind::Overloaded`] and
+/// [`FrameKind::Error`] frames.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireNack {
+    /// Echo of the request's correlation id (0 if it was unreadable).
+    pub id: u64,
+    pub message: String,
+}
+
+impl WireNack {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u64(self.id);
+        w.u8_slice(self.message.as_bytes());
+        w.buf
+    }
+
+    pub fn decode(body: &[u8]) -> Result<WireNack, ProtoError> {
+        let mut r = ByteReader::new(body);
+        let id = r.take_u64().map_err(ProtoError::Malformed)?;
+        let raw = r.take_u8_slice().map_err(ProtoError::Malformed)?;
+        let message = String::from_utf8(raw)
+            .map_err(|_| ProtoError::Malformed("message is not UTF-8".to_string()))?;
+        Ok(WireNack { id, message })
+    }
+}
+
+/// Wrap a body in a complete frame: header, body, checksum trailer.
+pub fn encode_frame(kind: FrameKind, body: &[u8]) -> Vec<u8> {
+    debug_assert!(body.len() <= MAX_BODY);
+    let mut w = ByteWriter::new();
+    w.u32(MAGIC);
+    w.byte(VERSION);
+    w.byte(kind.to_u8());
+    w.u32(body.len() as u32);
+    w.bytes(body);
+    w.u64(fnv1a(body));
+    w.buf
+}
+
+/// Incremental frame decoder over a growing byte stream. Feed reads with
+/// [`FrameDecoder::extend`], then drain complete frames with
+/// [`FrameDecoder::next_frame`]; partial frames stay buffered.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder { buf: Vec::new() }
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// First buffered bytes, for protocol sniffing (binary vs HTTP).
+    pub fn peek(&self, n: usize) -> &[u8] {
+        &self.buf[..n.min(self.buf.len())]
+    }
+
+    /// Pop the next complete frame. `Ok(None)` = need more bytes. An
+    /// `Err` whose [`ProtoError::is_fatal`] is false has consumed exactly
+    /// one well-framed bad frame; decoding may continue.
+    pub fn next_frame(&mut self) -> Result<Option<(FrameKind, Vec<u8>)>, ProtoError> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let mut hdr = ByteReader::new(&self.buf[..HEADER_LEN]);
+        // The three header takes cannot fail: HEADER_LEN bytes are present.
+        let magic = hdr.take_u32().map_err(ProtoError::Malformed)?;
+        if magic != MAGIC {
+            return Err(ProtoError::BadMagic(magic));
+        }
+        let version = hdr.take_byte().map_err(ProtoError::Malformed)?;
+        if version != VERSION {
+            return Err(ProtoError::BadVersion(version));
+        }
+        let kind_raw = hdr.take_byte().map_err(ProtoError::Malformed)?;
+        let body_len = hdr.take_u32().map_err(ProtoError::Malformed)? as usize;
+        if body_len > MAX_BODY {
+            return Err(ProtoError::Oversized(body_len));
+        }
+        let frame_len = HEADER_LEN + body_len + TRAILER_LEN;
+        if self.buf.len() < frame_len {
+            return Ok(None);
+        }
+        // The whole frame is buffered: consume it whatever happens next, so
+        // recoverable errors leave the stream aligned on the next frame.
+        let frame: Vec<u8> = self.buf.drain(..frame_len).collect();
+        let body = &frame[HEADER_LEN..HEADER_LEN + body_len];
+        let mut tr = ByteReader::new(&frame[HEADER_LEN + body_len..]);
+        let got = tr.take_u64().map_err(ProtoError::Malformed)?;
+        let want = fnv1a(body);
+        if got != want {
+            return Err(ProtoError::Checksum { want, got });
+        }
+        let Some(kind) = FrameKind::from_u8(kind_raw) else {
+            return Err(ProtoError::BadKind(kind_raw));
+        };
+        Ok(Some((kind, body.to_vec())))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP/1.1 adapter (healthz + metrics only)
+// ---------------------------------------------------------------------------
+
+/// Does this byte prefix look like an HTTP request rather than a binary
+/// frame? Called once per connection on the first >= 4 buffered bytes.
+pub fn looks_like_http(prefix: &[u8]) -> bool {
+    prefix.starts_with(b"GET ") || prefix.starts_with(b"HEAD") || prefix.starts_with(b"POST")
+}
+
+/// Byte length of the HTTP request head if fully buffered (through the
+/// blank line); `None` while still partial.
+pub fn http_head_len(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Serve one HTTP request head. `metrics` is rendered lazily so a
+/// `/healthz` probe does not touch per-pool locks.
+pub fn http_response(head: &[u8], metrics: impl FnOnce() -> String) -> Vec<u8> {
+    let line = head
+        .split(|&b| b == b'\r' || b == b'\n')
+        .next()
+        .unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = match (method, path) {
+        ("GET", "/healthz") => ("200 OK", "ok\n".to_string()),
+        ("GET", "/metrics") => ("200 OK", metrics()),
+        ("GET", _) => ("404 Not Found", format!("no such path: {path}\n")),
+        _ => ("405 Method Not Allowed", "only GET is served\n".to_string()),
+    };
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_request(rng: &mut Rng) -> WireRequest {
+        let h = 1 + rng.index(16) as u32;
+        let w = 1 + rng.index(16) as u32;
+        let c = 1 + rng.index(3) as u32;
+        let len = (h * w * c) as usize;
+        WireRequest {
+            id: rng.next_u64(),
+            model: format!("m{}", rng.index(100)),
+            h,
+            w,
+            c,
+            codes: (0..len).map(|_| rng.next_u32() as u8).collect(),
+        }
+    }
+
+    fn random_response(rng: &mut Rng) -> WireResponse {
+        WireResponse {
+            id: rng.next_u64(),
+            model: format!("m{}", rng.index(100)),
+            logits: (0..8).map(|_| rng.range_i64(-1 << 20, 1 << 20) as i32).collect(),
+            class: rng.index(8) as u32,
+            latency_ns: rng.next_u64() >> 20,
+            batch_size: 1 + rng.index(16) as u32,
+        }
+    }
+
+    fn decode_one(frame: &[u8]) -> (FrameKind, Vec<u8>) {
+        let mut d = FrameDecoder::new();
+        d.extend(frame);
+        d.next_frame().unwrap().unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips_over_random_inputs() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let req = random_request(&mut rng);
+            let frame = encode_frame(FrameKind::Infer, &req.encode());
+            let (kind, body) = decode_one(&frame);
+            assert_eq!(kind, FrameKind::Infer);
+            assert_eq!(WireRequest::decode(&body).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_and_nack_roundtrip() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let resp = random_response(&mut rng);
+            let (kind, body) = decode_one(&encode_frame(FrameKind::Logits, &resp.encode()));
+            assert_eq!(kind, FrameKind::Logits);
+            assert_eq!(WireResponse::decode(&body).unwrap(), resp);
+        }
+        let nack = WireNack { id: 7, message: "queue full".to_string() };
+        let (kind, body) = decode_one(&encode_frame(FrameKind::Overloaded, &nack.encode()));
+        assert_eq!(kind, FrameKind::Overloaded);
+        assert_eq!(WireNack::decode(&body).unwrap(), nack);
+    }
+
+    #[test]
+    fn truncated_frames_never_panic_and_stay_pending() {
+        let mut rng = Rng::new(43);
+        let req = random_request(&mut rng);
+        let frame = encode_frame(FrameKind::Infer, &req.encode());
+        for cut in 0..frame.len() {
+            let mut d = FrameDecoder::new();
+            d.extend(&frame[..cut]);
+            // A strict prefix is never a complete frame: either "need more
+            // bytes" or (impossible here) an error — but never a frame.
+            assert!(!matches!(d.next_frame(), Ok(Some(_))), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn corrupted_bytes_never_panic() {
+        let mut rng = Rng::new(44);
+        let req = random_request(&mut rng);
+        let frame = encode_frame(FrameKind::Infer, &req.encode());
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x40;
+            let mut d = FrameDecoder::new();
+            d.extend(&bad);
+            // Must not panic; any of Ok(None) (length grew), Err (magic /
+            // checksum / oversized), or a frame whose body then fails
+            // structural decode is acceptable.
+            if let Ok(Some((_, body))) = d.next_frame() {
+                let _ = WireRequest::decode(&body);
+            }
+        }
+    }
+
+    #[test]
+    fn body_corruption_is_recoverable_and_decoder_resyncs() {
+        let mut rng = Rng::new(45);
+        let req = random_request(&mut rng);
+        let mut bad = encode_frame(FrameKind::Infer, &req.encode());
+        bad[HEADER_LEN] ^= 0xff; // flip a body byte -> checksum mismatch
+        let good = encode_frame(FrameKind::Infer, &req.encode());
+        let mut d = FrameDecoder::new();
+        d.extend(&bad);
+        d.extend(&good);
+        let err = d.next_frame().unwrap_err();
+        assert!(matches!(err, ProtoError::Checksum { .. }));
+        assert!(!err.is_fatal(), "checksum errors must not kill the connection");
+        // The bad frame was consumed whole; the next frame decodes cleanly.
+        let (kind, body) = d.next_frame().unwrap().unwrap();
+        assert_eq!(kind, FrameKind::Infer);
+        assert_eq!(WireRequest::decode(&body).unwrap(), req);
+    }
+
+    #[test]
+    fn oversized_and_bad_magic_are_fatal() {
+        let mut w = ByteWriter::new();
+        w.u32(MAGIC);
+        w.byte(VERSION);
+        w.byte(FrameKind::Infer.to_u8());
+        w.u32((MAX_BODY + 1) as u32);
+        let mut d = FrameDecoder::new();
+        d.extend(&w.buf);
+        let err = d.next_frame().unwrap_err();
+        assert!(matches!(err, ProtoError::Oversized(_)) && err.is_fatal());
+
+        let mut d = FrameDecoder::new();
+        d.extend(b"NOPE______________");
+        let err = d.next_frame().unwrap_err();
+        assert!(matches!(err, ProtoError::BadMagic(_)) && err.is_fatal());
+    }
+
+    #[test]
+    fn request_shape_payload_mismatch_rejected() {
+        let mut rng = Rng::new(46);
+        let mut req = random_request(&mut rng);
+        req.codes.push(0); // one byte too many for [1,h,w,c]
+        let err = WireRequest::decode(&req.encode()).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        let zero = WireRequest { h: 0, ..random_request(&mut rng) };
+        assert!(WireRequest::decode(&zero.encode()).is_err());
+    }
+
+    #[test]
+    fn peek_id_reads_the_id_even_from_malformed_bodies() {
+        let mut rng = Rng::new(47);
+        let mut req = random_request(&mut rng);
+        req.codes.pop();
+        let body = req.encode();
+        assert!(WireRequest::decode(&body).is_err());
+        assert_eq!(peek_request_id(&body), req.id);
+        assert_eq!(peek_request_id(&[1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn http_adapter_sniffs_and_serves() {
+        assert!(looks_like_http(b"GET /healthz HTTP/1.1\r\n"));
+        assert!(!looks_like_http(&encode_frame(FrameKind::Infer, &[])));
+        let head = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        assert_eq!(http_head_len(head), Some(head.len()));
+        assert_eq!(http_head_len(b"GET /healthz HTT"), None);
+        let resp = String::from_utf8(http_response(head, || unreachable!())).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.ends_with("ok\n"), "{resp}");
+        let m = http_response(b"GET /metrics HTTP/1.1\r\n\r\n", || "depth 3\n".to_string());
+        assert!(String::from_utf8(m).unwrap().contains("depth 3"));
+        let nf = http_response(b"GET /nope HTTP/1.1\r\n\r\n", || String::new());
+        assert!(String::from_utf8(nf).unwrap().starts_with("HTTP/1.1 404"));
+    }
+}

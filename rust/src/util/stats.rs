@@ -13,6 +13,7 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -34,6 +35,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
         }
     }
 }
@@ -251,6 +253,22 @@ mod tests {
         assert!((s.p50 - 3.0).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn tail_percentiles_are_ordered() {
+        // p999 must sit between p99 and max (the serving report exposes
+        // all three; a digest that reorders them is lying about the tail).
+        let samples: Vec<f64> = (1..=10_000).map(|i| i as f64).collect();
+        let s = Summary::from(&samples);
+        assert!(s.p99 <= s.p999 && s.p999 <= s.max, "p99={} p999={}", s.p99, s.p999);
+        assert!((s.p999 - 9990.0).abs() < 2.0, "p999={}", s.p999);
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 1_000);
+        }
+        let (p99, p999) = (h.percentile_ns(0.99), h.percentile_ns(0.999));
+        assert!(p99 <= p999 && p999 <= h.max_ns() as f64, "p99={p99} p999={p999}");
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! Socket serving tier end-to-end (ISSUE-9 acceptance): responses served
+//! over a real loopback TCP connection must be bit-identical to an
+//! in-process `CompiledNetwork::forward` on the same inputs; overload
+//! must be signaled with explicit `Overloaded` frames while the
+//! dispatcher's in-flight budget stays bounded; the HTTP adapter must
+//! answer `/healthz` and `/metrics` on the same port; and a corrupted
+//! frame must be survivable — nacked without killing the connection.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pcilt::config::{EngineKind, ModelConfig};
+use pcilt::coordinator::{ModelRegistry, ServerOpts};
+use pcilt::net::proto::{encode_frame, FrameDecoder, FrameKind, WireNack, WireRequest, WireResponse};
+use pcilt::net::{NetOpts, NetServer};
+use pcilt::pcilt::TableStore;
+use pcilt::tensor::{Shape4, Tensor4};
+use pcilt::util::prng::Rng;
+
+fn model_cfg(name: &str, seed: u64) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        engine: EngineKind::Pcilt,
+        act_bits: 4,
+        seed,
+        ..ModelConfig::default()
+    }
+}
+
+fn opts() -> ServerOpts {
+    ServerOpts {
+        workers: 2,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(1),
+        queue_capacity: 64,
+    }
+}
+
+/// Boot a two-model registry plus socket tier on an ephemeral port.
+fn serve(max_inflight: usize) -> (NetServer, Arc<ModelRegistry>) {
+    let store = Arc::new(TableStore::new());
+    let registry = Arc::new(
+        ModelRegistry::start_with_store(
+            &[model_cfg("base", 7), model_cfg("alt", 21)],
+            &opts(),
+            store,
+        )
+        .unwrap(),
+    );
+    let net_opts = NetOpts {
+        addr: "127.0.0.1:0".to_string(),
+        max_inflight,
+        ..NetOpts::default()
+    };
+    let net = NetServer::start(Arc::clone(&registry), &net_opts).unwrap();
+    (net, registry)
+}
+
+fn connect(net: &NetServer) -> TcpStream {
+    let stream = TcpStream::connect(net.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+}
+
+fn random_codes(rng: &mut Rng, len: usize, act_bits: u32) -> Vec<u8> {
+    let mask = ((1u32 << act_bits) - 1) as u8;
+    (0..len).map(|_| (rng.next_u32() as u8) & mask).collect()
+}
+
+fn send_request(stream: &mut TcpStream, id: u64, model: &str, codes: Vec<u8>) {
+    let req = WireRequest {
+        id,
+        model: model.to_string(),
+        h: 16,
+        w: 16,
+        c: 1,
+        codes,
+    };
+    stream.write_all(&encode_frame(FrameKind::Infer, &req.encode())).unwrap();
+}
+
+/// Blocking-read until the decoder yields one frame.
+fn recv_frame(stream: &mut TcpStream, dec: &mut FrameDecoder) -> (FrameKind, Vec<u8>) {
+    loop {
+        if let Some(frame) = dec.next_frame().expect("protocol error from server") {
+            return frame;
+        }
+        let mut buf = [0u8; 4096];
+        let n = stream.read(&mut buf).expect("read from server");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        dec.extend(&buf[..n]);
+    }
+}
+
+/// The tentpole bit-identity criterion: for both models, logits served
+/// over the socket equal `CompiledNetwork::forward` on the same codes,
+/// request for request.
+#[test]
+fn socket_responses_bit_identical_to_in_process_forward() {
+    let (net, registry) = serve(16);
+    let mut stream = connect(&net);
+    let mut dec = FrameDecoder::new();
+    let mut rng = Rng::new(404);
+    for (i, model) in ["base", "alt", "base", "alt", "base", "alt"].iter().enumerate() {
+        let entry = registry.model(model).unwrap();
+        let standalone = entry
+            .spec
+            .compile_with_defaults(&entry.weights, &Arc::new(TableStore::new()))
+            .unwrap();
+        let codes = random_codes(&mut rng, 16 * 16, 4);
+        let img = Tensor4::from_vec(Shape4::new(1, 16, 16, 1), codes.clone());
+        let expect = standalone.forward(&img);
+
+        send_request(&mut stream, i as u64, model, codes);
+        let (kind, body) = recv_frame(&mut stream, &mut dec);
+        assert_eq!(kind, FrameKind::Logits, "request {i}");
+        let resp = WireResponse::decode(&body).unwrap();
+        assert_eq!(resp.id, i as u64, "response must echo the wire id");
+        assert_eq!(resp.model, *model);
+        assert_eq!(
+            resp.logits, expect[0],
+            "model {model} request {i}: socket-served logits != in-process forward"
+        );
+        // Same argmax (incl. tie-breaking) as the serving worker.
+        let argmax = expect[0]
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(idx, _)| idx)
+            .unwrap();
+        assert_eq!(resp.class as usize, argmax);
+        assert!(resp.batch_size >= 1);
+    }
+    drop(stream);
+    let c = net.shutdown();
+    assert_eq!(c.accepted, 6);
+    assert_eq!(c.completed, 6);
+    assert_eq!(c.shed, 0);
+}
+
+/// Overload: blast one connection with far more requests than the
+/// in-flight budget admits. Every request must be answered explicitly
+/// (Logits or Overloaded — never silence), the dispatcher's observable
+/// in-flight count must never exceed the budget, and the budget must
+/// fully release afterwards.
+#[test]
+fn overload_sheds_explicitly_with_bounded_inflight() {
+    const BUDGET: usize = 2;
+    const TOTAL: usize = 64;
+    let (net, _registry) = serve(BUDGET);
+    let mut stream = connect(&net);
+    let mut dec = FrameDecoder::new();
+    let mut rng = Rng::new(99);
+    // Send the whole burst before reading anything: admission control has
+    // to decide under pressure, not one request at a time.
+    let mut burst = Vec::new();
+    for i in 0..TOTAL {
+        let req = WireRequest {
+            id: i as u64,
+            model: "base".to_string(),
+            h: 16,
+            w: 16,
+            c: 1,
+            codes: random_codes(&mut rng, 16 * 16, 4),
+        };
+        burst.extend_from_slice(&encode_frame(FrameKind::Infer, &req.encode()));
+    }
+    stream.write_all(&burst).unwrap();
+
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut seen = vec![false; TOTAL];
+    for _ in 0..TOTAL {
+        // The budget is observable mid-flight and must stay bounded.
+        assert!(
+            net.dispatcher().inflight("base") <= BUDGET,
+            "in-flight exceeded the admission budget"
+        );
+        match recv_frame(&mut stream, &mut dec) {
+            (FrameKind::Logits, body) => {
+                let resp = WireResponse::decode(&body).unwrap();
+                assert!(!seen[resp.id as usize], "duplicate answer for id {}", resp.id);
+                seen[resp.id as usize] = true;
+                completed += 1;
+            }
+            (FrameKind::Overloaded, body) => {
+                let nack = WireNack::decode(&body).unwrap();
+                assert!(!seen[nack.id as usize], "duplicate answer for id {}", nack.id);
+                seen[nack.id as usize] = true;
+                assert!(nack.message.contains("budget") || nack.message.contains("bound"));
+                shed += 1;
+            }
+            (kind, _) => panic!("unexpected frame kind {kind:?}"),
+        }
+    }
+    assert_eq!(completed + shed, TOTAL, "every request answered exactly once");
+    assert!(completed >= BUDGET, "the admitted prefix must complete");
+    assert!(shed > 0, "a {TOTAL}-deep burst over budget {BUDGET} must shed");
+    // Budget fully released once everything is answered.
+    let t0 = Instant::now();
+    while net.dispatcher().inflight("base") != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "in-flight budget leaked");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let c = net.shutdown();
+    assert_eq!(c.completed as usize, completed);
+    assert_eq!(c.shed as usize, shed);
+}
+
+/// The HTTP adapter shares the binary port: `/healthz` answers 200 ok,
+/// `/metrics` renders the net counters and per-model series, and unknown
+/// paths get a 404 — each on a connection that then closes.
+#[test]
+fn healthz_and_metrics_served_on_the_same_port() {
+    let (net, _registry) = serve(8);
+    // Prime one completed request so the metrics move off zero.
+    let mut stream = connect(&net);
+    let mut dec = FrameDecoder::new();
+    let mut rng = Rng::new(5);
+    send_request(&mut stream, 1, "", random_codes(&mut rng, 16 * 16, 4));
+    let (kind, _) = recv_frame(&mut stream, &mut dec);
+    assert_eq!(kind, FrameKind::Logits);
+    drop(stream);
+
+    let http = |request: &str| -> String {
+        let mut s = connect(&net);
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap(); // server closes after answering
+        out
+    };
+    let health = http("GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+    assert!(health.ends_with("ok\n"), "{health}");
+
+    let metrics = http("GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(metrics.starts_with("HTTP/1.1 200"), "{metrics}");
+    for needle in [
+        "pcilt_net_accepted 1",
+        "pcilt_net_completed 1",
+        "pcilt_model_completed{model=\"base\"}",
+        "pcilt_model_p999_ns{model=\"alt\"}",
+        "pcilt_model_queue_depth{model=\"base\"}",
+    ] {
+        assert!(metrics.contains(needle), "missing {needle} in:\n{metrics}");
+    }
+
+    let missing = http("GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+    net.shutdown();
+}
+
+/// A corrupted frame (bad checksum) is nacked and consumed; the same
+/// connection then serves a valid request. A broken magic, by contrast,
+/// is fatal: the server closes that connection — but keeps serving new
+/// ones.
+#[test]
+fn connection_survives_bad_frame_but_not_bad_magic() {
+    let (net, _registry) = serve(8);
+    let mut stream = connect(&net);
+    let mut dec = FrameDecoder::new();
+    let mut rng = Rng::new(17);
+
+    // Corrupt the checksum trailer of an otherwise valid frame.
+    let req = WireRequest {
+        id: 9,
+        model: "base".to_string(),
+        h: 16,
+        w: 16,
+        c: 1,
+        codes: random_codes(&mut rng, 16 * 16, 4),
+    };
+    let mut bad = encode_frame(FrameKind::Infer, &req.encode());
+    let last = bad.len() - 1;
+    bad[last] ^= 0xFF;
+    stream.write_all(&bad).unwrap();
+    let (kind, body) = recv_frame(&mut stream, &mut dec);
+    assert_eq!(kind, FrameKind::Error, "checksum mismatch must be nacked");
+    let nack = WireNack::decode(&body).unwrap();
+    assert!(nack.message.contains("checksum"), "{}", nack.message);
+
+    // Same connection, valid frame: still served.
+    send_request(&mut stream, 10, "base", random_codes(&mut rng, 16 * 16, 4));
+    let (kind, body) = recv_frame(&mut stream, &mut dec);
+    assert_eq!(kind, FrameKind::Logits, "connection must survive a bad frame");
+    assert_eq!(WireResponse::decode(&body).unwrap().id, 10);
+
+    // Garbage magic: fatal, the server closes this connection.
+    stream.write_all(b"\0\0\0\0garbage-not-a-frame").unwrap();
+    let mut buf = [0u8; 256];
+    let t0 = Instant::now();
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break, // server hung up, as it must
+            Ok(_) => panic!("server answered a corrupt-magic stream"),
+            Err(e) => panic!("expected clean close, got {e}"),
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(20));
+
+    // The listener itself is unharmed: a fresh connection serves.
+    let mut fresh = connect(&net);
+    let mut dec2 = FrameDecoder::new();
+    send_request(&mut fresh, 11, "alt", random_codes(&mut rng, 16 * 16, 4));
+    let (kind, _) = recv_frame(&mut fresh, &mut dec2);
+    assert_eq!(kind, FrameKind::Logits);
+    let c = net.shutdown();
+    assert!(c.proto_errors >= 2, "both bad frames counted: {c:?}");
+}
+
+/// `shutdown` drains gracefully: a request in flight when the stop lands
+/// still gets its answer before the listener thread exits.
+#[test]
+fn shutdown_drains_inflight_requests() {
+    let (net, _registry) = serve(8);
+    let mut stream = connect(&net);
+    let mut dec = FrameDecoder::new();
+    let mut rng = Rng::new(23);
+    send_request(&mut stream, 1, "base", random_codes(&mut rng, 16 * 16, 4));
+    // Wait until the request is admitted (a drain that starts first would
+    // legitimately nack it), then shut down with the answer in flight.
+    let t0 = Instant::now();
+    while net.counters().accepted < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "request never admitted");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let handle = std::thread::spawn(move || net.shutdown());
+    let (kind, body) = recv_frame(&mut stream, &mut dec);
+    assert_eq!(kind, FrameKind::Logits, "drain must answer in-flight work");
+    assert_eq!(WireResponse::decode(&body).unwrap().id, 1);
+    let c = handle.join().unwrap();
+    assert_eq!(c.completed, 1);
+}
