@@ -170,7 +170,9 @@ SUBCOMMANDS:
                                 of typed stages: conv / pool / requant /
                                 dense, engines planner-chosen per stage;
                                 [net] sets the socket tier's addr,
-                                max_inflight, slo_ms and drain_ms)
+                                loops, max_inflight, slo_ms, drain_ms,
+                                idle_timeout_ms, conn_rate_limit and the
+                                min_workers/max_workers autoscaler band)
               --net             serve over TCP: socket tier (length-
                                 prefixed binary frames + GET /healthz and
                                 /metrics) in front of the registry, with
@@ -185,6 +187,11 @@ SUBCOMMANDS:
               --rate R          aggregate offered load, req/s
               --requests N      total requests across connections
               --connections N   client connections     (default 4)
+              --loops L1,L2,..  sweep the net tier's loop-shard count,
+                                rebooting the self-served stack per point
+                                and reporting per-shard goodput
+              --conns C1,C2,..  sweep client connection counts (combines
+                                with --loops; self-serve only)
               --seed N          workload PRNG seed     (default 7)
               --config FILE     serve TOML ([[models]] shapes the mix,
                                 [net] tunes the self-served tier)

@@ -147,12 +147,16 @@ impl TablesConfig {
 }
 
 /// `[net]` section: the socket serving tier (`pcilt serve --net`,
-/// `pcilt loadtest` self-serve) — listen address, per-model in-flight
-/// budget, latency SLO and shutdown drain window.
+/// `pcilt loadtest` self-serve) — listen address, loop-shard count,
+/// per-model in-flight budget, latency SLO, autoscaler bounds,
+/// per-connection rate limit, idle timeout and shutdown drain window.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetConfig {
     /// Listen address (`host:port`; port 0 picks an ephemeral port).
     pub addr: String,
+    /// Event-loop shard threads (`pcilt-net-0..n-1`); the acceptor hands
+    /// each new connection to the least-loaded shard.
+    pub loops: usize,
     /// Admission control: per-model budget of admitted-but-unanswered
     /// requests. Beyond it, clients get explicit `Overloaded` frames.
     pub max_inflight: usize,
@@ -162,15 +166,32 @@ pub struct NetConfig {
     pub slo_ms: u64,
     /// Graceful-drain window on shutdown, milliseconds.
     pub drain_ms: u64,
+    /// Close quiescent connections after this many milliseconds. Zero is
+    /// rejected (it would reap every connection on its first tick).
+    pub idle_timeout_ms: u64,
+    /// Autoscaler floor: the scaler never parks a pool below this many
+    /// workers. Only meaningful when `max_workers` enables autoscaling.
+    pub min_workers: usize,
+    /// Autoscaler ceiling; 0 disables autoscaling (fixed pools sized by
+    /// the top-level `workers` key).
+    pub max_workers: usize,
+    /// Per-connection token-bucket rate limit in requests/second (burst
+    /// capacity is 2× the rate); 0 disables the limit.
+    pub conn_rate_limit: u64,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
         NetConfig {
             addr: "127.0.0.1:7070".to_string(),
+            loops: 1,
             max_inflight: 64,
             slo_ms: 50,
             drain_ms: 500,
+            idle_timeout_ms: 30_000,
+            min_workers: 1,
+            max_workers: 0,
+            conn_rate_limit: 0,
         }
     }
 }
@@ -496,6 +517,30 @@ impl ServeConfig {
                         _ => return invalid("net.drain_ms must be >= 0"),
                     };
                 }
+                "net.loops" => {
+                    cfg.net.loops = pos_usize(doc, key)?;
+                }
+                "net.idle_timeout_ms" => {
+                    // Zero would reap every connection on its first tick.
+                    cfg.net.idle_timeout_ms = pos_usize(doc, key)? as u64;
+                }
+                "net.min_workers" => {
+                    cfg.net.min_workers = pos_usize(doc, key)?;
+                }
+                "net.max_workers" => {
+                    // 0 is meaningful (= autoscaling off)
+                    cfg.net.max_workers = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as usize,
+                        _ => return invalid("net.max_workers must be >= 0"),
+                    };
+                }
+                "net.conn_rate_limit" => {
+                    // 0 is meaningful (= no per-connection limit)
+                    cfg.net.conn_rate_limit = match doc.get_int(key) {
+                        Some(v) if v >= 0 => v as u64,
+                        _ => return invalid("net.conn_rate_limit must be >= 0"),
+                    };
+                }
                 k if k.starts_with("network.") => {} // parsed by NetworkSpec
                 k if k.starts_with("models.") => {}  // parsed by parse_models below
                 k => return invalid(format!("unknown config key '{k}'")),
@@ -518,6 +563,20 @@ impl ServeConfig {
         }
         if !self.net.addr.contains(':') {
             return invalid(format!("net.addr '{}' must be host:port", self.net.addr));
+        }
+        if self.net.loops == 0 || self.net.loops > 64 {
+            return invalid("net.loops must be in 1..=64");
+        }
+        if self.net.max_workers > 0 {
+            if self.net.min_workers > self.net.max_workers {
+                return invalid(format!(
+                    "net.min_workers ({}) exceeds net.max_workers ({})",
+                    self.net.min_workers, self.net.max_workers
+                ));
+            }
+            if self.net.max_workers > 1024 {
+                return invalid("net.max_workers must be <= 1024");
+            }
         }
         let mut seen = std::collections::BTreeSet::new();
         for m in &self.models {
@@ -958,6 +1017,10 @@ addr = "0.0.0.0:9000"
 max_inflight = 128
 slo_ms = 25
 drain_ms = 0
+loops = 4
+min_workers = 2
+max_workers = 8
+conn_rate_limit = 500
 "#,
         )
         .unwrap();
@@ -966,10 +1029,17 @@ drain_ms = 0
         assert_eq!(cfg.net.max_inflight, 128);
         assert_eq!(cfg.net.slo_ms, 25);
         assert_eq!(cfg.net.drain_ms, 0, "0 = close immediately");
+        assert_eq!(cfg.net.loops, 4);
+        assert_eq!(cfg.net.min_workers, 2);
+        assert_eq!(cfg.net.max_workers, 8);
+        assert_eq!(cfg.net.conn_rate_limit, 500);
         // untouched defaults survive
         let d = NetConfig::default();
         assert_eq!(ServeConfig::default().net, d);
         assert_eq!(d.addr, "127.0.0.1:7070");
+        assert_eq!(d.loops, 1);
+        assert_eq!(d.max_workers, 0, "autoscaling is opt-in");
+        assert_eq!(d.conn_rate_limit, 0, "rate limiting is opt-in");
     }
 
     #[test]
@@ -980,11 +1050,33 @@ drain_ms = 0
             ("[net]\nmax_inflight = 0", "zero in-flight budget"),
             ("[net]\nslo_ms = 0", "zero SLO"),
             ("[net]\ndrain_ms = -1", "negative drain"),
+            ("[net]\nloops = 0", "zero loop shards"),
+            ("[net]\nloops = 65", "loop shards beyond cap"),
+            ("[net]\nmin_workers = 0", "zero worker floor"),
+            ("[net]\nmin_workers = 4\nmax_workers = 2", "floor above ceiling"),
+            ("[net]\nconn_rate_limit = -1", "negative rate limit"),
             ("[net]\ntypo = 1", "unknown net key"),
         ] {
             let doc = Document::parse(toml).unwrap();
             assert!(ServeConfig::from_document(&doc).is_err(), "accepted {what}: {toml}");
         }
+    }
+
+    #[test]
+    fn net_idle_timeout_ms_parses_and_threads() {
+        // Regression (PR 10): `idle_timeout_ms` used to be missing from
+        // NetConfig entirely, so `NetOpts::from_config` silently filled
+        // the idle timeout from `..NetOpts::default()`.
+        let doc = Document::parse("[net]\nidle_timeout_ms = 1234").unwrap();
+        let cfg = ServeConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.net.idle_timeout_ms, 1234);
+        assert_eq!(NetConfig::default().idle_timeout_ms, 30_000);
+        // Zero would reap every connection on its first tick.
+        let doc = Document::parse("[net]\nidle_timeout_ms = 0").unwrap();
+        assert!(ServeConfig::from_document(&doc).is_err(), "zero idle timeout accepted");
+        // Roundtrip into the resolved net options.
+        let opts = crate::net::NetOpts::from_config(&cfg.net);
+        assert_eq!(opts.idle_timeout, std::time::Duration::from_millis(1234));
     }
 
     #[test]

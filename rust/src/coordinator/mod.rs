@@ -8,12 +8,14 @@ pub mod queue;
 pub mod registry;
 pub mod request;
 pub mod router;
+pub mod scaler;
 pub mod server;
 pub mod worker;
 pub mod workload;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use queue::{BoundedQueue, PushError, TryPushError};
+pub use queue::{BoundedQueue, PopOutcome, PushError, TryPushError};
+pub use scaler::{FleetScaler, PoolObs, ScaleDecision, ScalerOpts};
 pub use registry::{
     network_for_model, plan_model_sharing, ModelEntry, ModelRegistry, RegistryError, SharingRow,
 };

@@ -21,6 +21,19 @@ pub enum PushError {
     Closed,
 }
 
+/// Outcome of a [`BoundedQueue::pop_batch_idle`] bounded wait.
+#[derive(Debug)]
+pub enum PopOutcome<T> {
+    /// At least one item arrived; the batch follows the same
+    /// size-or-deadline policy as `pop_batch`.
+    Batch(Vec<T>),
+    /// The idle wait elapsed with no item and the queue still open — the
+    /// caller may re-check its own exit conditions and wait again.
+    Idle,
+    /// Queue closed and drained.
+    Closed,
+}
+
 /// Why `try_push` failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TryPushError {
@@ -117,7 +130,31 @@ impl<T> BoundedQueue<T> {
     /// immediately — queueing delay counts against the latency budget, it
     /// does not reset it.
     pub fn pop_batch(&self, max_batch: usize, deadline: Duration) -> Option<Vec<T>> {
+        loop {
+            // One hour per wait round is effectively "block forever" while
+            // keeping a single implementation of the gather policy.
+            match self.pop_batch_idle(max_batch, deadline, Duration::from_secs(3600)) {
+                PopOutcome::Batch(b) => return Some(b),
+                PopOutcome::Idle => continue,
+                PopOutcome::Closed => return None,
+            }
+        }
+    }
+
+    /// `pop_batch`, but the wait for the *first* item is bounded by
+    /// `idle_wait`: when it elapses with the queue still empty and open,
+    /// the popper gets [`PopOutcome::Idle`] back instead of blocking
+    /// forever. Autoscaled workers use this as their park-check cadence —
+    /// a worker blocked on an idle pool must still notice that the scaler
+    /// lowered the pool's target.
+    pub fn pop_batch_idle(
+        &self,
+        max_batch: usize,
+        deadline: Duration,
+        idle_wait: Duration,
+    ) -> PopOutcome<T> {
         assert!(max_batch >= 1);
+        let idle_start = Instant::now();
         let mut g = self.inner.lock().unwrap();
         // Wait for the first item.
         loop {
@@ -125,16 +162,21 @@ impl<T> BoundedQueue<T> {
                 break;
             }
             if g.closed {
-                return None;
+                return PopOutcome::Closed;
             }
-            g = self.not_empty.wait(g).unwrap();
+            let waited = idle_start.elapsed();
+            if waited >= idle_wait {
+                return PopOutcome::Idle;
+            }
+            g = self.not_empty.wait_timeout(g, idle_wait - waited).unwrap().0;
         }
         let mut batch = Vec::with_capacity(max_batch);
         let Some((t0, first)) = g.items.pop_front() else {
             // Unreachable: the wait loop above established non-emptiness
-            // and the lock has been held since.
+            // and the lock has been held since. `Idle` sends the caller
+            // back around its own loop.
             debug_assert!(false, "pop after non-empty wait");
-            return None;
+            return PopOutcome::Idle;
         };
         batch.push(first);
         // Gather until size or deadline.
@@ -161,7 +203,7 @@ impl<T> BoundedQueue<T> {
                 break;
             }
         }
-        Some(batch)
+        PopOutcome::Batch(batch)
     }
 }
 
@@ -373,6 +415,31 @@ mod tests {
         assert_eq!(all.len(), 400);
         all.dedup();
         assert_eq!(all.len(), 400, "duplicated or lost items");
+    }
+
+    #[test]
+    fn pop_batch_idle_bounds_the_empty_wait() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(
+            q.pop_batch_idle(4, Duration::from_millis(1), Duration::from_millis(20)),
+            PopOutcome::Idle
+        ));
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(18), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500));
+        // With an item available it behaves exactly like pop_batch...
+        q.push(7).unwrap();
+        match q.pop_batch_idle(4, Duration::from_millis(1), Duration::from_millis(20)) {
+            PopOutcome::Batch(b) => assert_eq!(b, vec![7]),
+            other => panic!("expected batch, got {other:?}"),
+        }
+        // ...and close still wins over the idle wait.
+        q.close();
+        assert!(matches!(
+            q.pop_batch_idle(4, Duration::ZERO, Duration::from_secs(10)),
+            PopOutcome::Closed
+        ));
     }
 
     #[test]

@@ -386,6 +386,20 @@ impl ModelRegistry {
         &self.default_model
     }
 
+    /// Per-model serving pools, in config order — the surface the
+    /// autoscaler observes (queue depth, latency, worker count) and acts
+    /// on (`spawn_worker`/`park_worker`). Missing pools are skipped for
+    /// the same reason as in [`ModelRegistry::metrics`].
+    pub fn pools(&self) -> Vec<(&str, &Arc<Server>)> {
+        self.order
+            .iter()
+            .filter_map(|name| {
+                let e = self.entries.get(name)?;
+                Some((name.as_str(), e.router.pool(&e.engine)?))
+            })
+            .collect()
+    }
+
     /// The store every pool borrows tables from.
     pub fn store(&self) -> &Arc<TableStore> {
         &self.store

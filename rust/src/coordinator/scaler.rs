@@ -1,0 +1,302 @@
+//! Per-model worker autoscaling: a small hysteresis controller that
+//! steers each pool's worker count between a floor and a ceiling from
+//! the pool's own metrics snapshot (queue depth + p999 latency vs SLO).
+//!
+//! The scaler is deliberately split in two:
+//!
+//!  * [`FleetScaler::decide`] is **pure** — one pool observation in, one
+//!    [`ScaleDecision`] out — so the policy (thresholds, hysteresis,
+//!    clamps) unit-tests without threads or pools.
+//!  * [`FleetScaler::tick`] applies decisions to real pools via
+//!    [`Server::spawn_worker`] / [`Server::park_worker`]. The acceptor
+//!    thread drives it on the metrics snapshot cadence.
+//!
+//! Two asymmetries are load-bearing:
+//!
+//!  * The latency histogram is **cumulative**, so a single old spike
+//!    keeps p999 above the SLO forever. "Hot" therefore requires
+//!    standing queue work (`queue_depth > 0`); p999 alone never scales
+//!    an idle pool up.
+//!  * Scale-down is much slower than scale-up (`down_ticks` ≫
+//!    `up_ticks`): adding a worker under load is cheap, thrashing
+//!    workers across a bursty arrival process is not.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::util::logger as log;
+
+use super::registry::ModelRegistry;
+
+/// Scaler policy knobs (resolved from the `[net]` config section).
+#[derive(Debug, Clone)]
+pub struct ScalerOpts {
+    /// Never park a pool below this many workers.
+    pub min_workers: usize,
+    /// Never spawn a pool above this many workers.
+    pub max_workers: usize,
+    /// Latency SLO the p999 overload signal compares against.
+    pub slo: Duration,
+    /// Consecutive hot ticks required before a scale-up.
+    pub up_ticks: u32,
+    /// Consecutive cold (empty-queue) ticks required before a park.
+    pub down_ticks: u32,
+}
+
+impl Default for ScalerOpts {
+    fn default() -> Self {
+        ScalerOpts {
+            min_workers: 1,
+            max_workers: 8,
+            slo: Duration::from_millis(50),
+            up_ticks: 2,
+            down_ticks: 10,
+        }
+    }
+}
+
+/// One pool's observation, as fed to [`FleetScaler::decide`].
+#[derive(Debug, Clone, Copy)]
+pub struct PoolObs {
+    /// Requests queued but not yet popped by any worker.
+    pub queue_depth: usize,
+    /// Cumulative p999 batch latency in nanoseconds.
+    pub p999_latency_ns: f64,
+    /// Workers currently running their batch loop.
+    pub workers: usize,
+}
+
+/// What the policy wants done to one pool this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Spawn one worker.
+    Up,
+    /// Park one worker (lazily, at a batch boundary).
+    Down,
+    /// Leave the pool alone.
+    Hold,
+}
+
+#[derive(Default)]
+struct Streaks {
+    hot: u32,
+    cold: u32,
+}
+
+/// The per-model autoscaler state: hysteresis streaks keyed by model
+/// name plus lifetime action counters.
+pub struct FleetScaler {
+    opts: ScalerOpts,
+    streaks: HashMap<String, Streaks>,
+    scale_ups: u64,
+    parks: u64,
+}
+
+impl FleetScaler {
+    pub fn new(opts: ScalerOpts) -> FleetScaler {
+        FleetScaler { opts, streaks: HashMap::new(), scale_ups: 0, parks: 0 }
+    }
+
+    /// Pure policy step for one pool. Bounds violations correct
+    /// immediately; everything else moves only after an unbroken streak
+    /// of `up_ticks` hot / `down_ticks` cold observations, and each
+    /// decision restarts its streak.
+    pub fn decide(&mut self, model: &str, obs: PoolObs) -> ScaleDecision {
+        let s = self.streaks.entry(model.to_string()).or_default();
+        if obs.workers < self.opts.min_workers {
+            *s = Streaks::default();
+            return ScaleDecision::Up;
+        }
+        if obs.workers > self.opts.max_workers {
+            *s = Streaks::default();
+            return ScaleDecision::Down;
+        }
+        let slo_ns = self.opts.slo.as_nanos() as f64;
+        // Hot = standing work AND (queue outgrowing the pool, or the SLO
+        // busted). The depth>0 guard keeps a stale cumulative p999 from
+        // pinning an idle pool hot.
+        let hot = obs.queue_depth > 0
+            && (obs.queue_depth >= 2 * obs.workers.max(1) || obs.p999_latency_ns > slo_ns);
+        let cold = obs.queue_depth == 0;
+        if hot {
+            s.hot = s.hot.saturating_add(1);
+            s.cold = 0;
+        } else if cold {
+            s.cold = s.cold.saturating_add(1);
+            s.hot = 0;
+        } else {
+            // In-between (shallow queue, SLO met): neither streak grows.
+            s.hot = 0;
+            s.cold = 0;
+        }
+        if s.hot >= self.opts.up_ticks && obs.workers < self.opts.max_workers {
+            s.hot = 0;
+            return ScaleDecision::Up;
+        }
+        if s.cold >= self.opts.down_ticks && obs.workers > self.opts.min_workers {
+            s.cold = 0;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+
+    /// Observe every pool in the registry and apply the policy. Called
+    /// from the acceptor thread on the metrics snapshot cadence.
+    pub fn tick(&mut self, registry: &ModelRegistry) {
+        for (name, pool) in registry.pools() {
+            let m = pool.metrics();
+            let obs = PoolObs {
+                queue_depth: m.queue_depth,
+                p999_latency_ns: m.p999_latency_ns,
+                workers: pool.worker_count(),
+            };
+            match self.decide(name, obs) {
+                ScaleDecision::Up => match pool.spawn_worker() {
+                    Ok(()) => {
+                        self.scale_ups += 1;
+                        log::info!(
+                            "scaler: {name} -> {} workers (depth {}, p999 {:.1}ms)",
+                            pool.worker_count(),
+                            obs.queue_depth,
+                            obs.p999_latency_ns / 1e6
+                        );
+                    }
+                    Err(e) => log::warn!("scaler: {name} scale-up failed: {e:#}"),
+                },
+                ScaleDecision::Down => {
+                    if pool.park_worker() {
+                        self.parks += 1;
+                        log::info!(
+                            "scaler: {name} parking one worker (target {})",
+                            pool.target_workers()
+                        );
+                    }
+                }
+                ScaleDecision::Hold => {}
+            }
+        }
+    }
+
+    /// Lifetime count of workers spawned by scale-up decisions.
+    pub fn scale_ups(&self) -> u64 {
+        self.scale_ups
+    }
+
+    /// Lifetime count of park requests issued by scale-down decisions.
+    pub fn parks(&self) -> u64 {
+        self.parks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler() -> FleetScaler {
+        FleetScaler::new(ScalerOpts {
+            min_workers: 1,
+            max_workers: 4,
+            slo: Duration::from_millis(10),
+            up_ticks: 2,
+            down_ticks: 3,
+        })
+    }
+
+    fn obs(depth: usize, p999_ms: f64, workers: usize) -> PoolObs {
+        PoolObs { queue_depth: depth, p999_latency_ns: p999_ms * 1e6, workers }
+    }
+
+    #[test]
+    fn scale_up_needs_consecutive_hot_ticks() {
+        let mut s = scaler();
+        assert_eq!(s.decide("m", obs(8, 50.0, 1)), ScaleDecision::Hold);
+        // An in-between tick (shallow queue, SLO met) resets the streak.
+        assert_eq!(s.decide("m", obs(1, 1.0, 1)), ScaleDecision::Hold);
+        assert_eq!(s.decide("m", obs(8, 50.0, 1)), ScaleDecision::Hold);
+        assert_eq!(s.decide("m", obs(8, 50.0, 1)), ScaleDecision::Up);
+        // The streak restarts after the decision.
+        assert_eq!(s.decide("m", obs(8, 50.0, 2)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn stale_p999_alone_never_scales_up() {
+        // The latency histogram is cumulative: one old 500ms spike keeps
+        // p999 over the SLO forever. With an empty queue that must read
+        // cold, never hot.
+        let mut s = scaler();
+        for _ in 0..20 {
+            assert_ne!(s.decide("m", obs(0, 500.0, 2)), ScaleDecision::Up);
+        }
+    }
+
+    #[test]
+    fn scale_down_needs_long_cold_streak_and_respects_floor() {
+        let mut s = scaler();
+        assert_eq!(s.decide("m", obs(0, 0.0, 2)), ScaleDecision::Hold);
+        assert_eq!(s.decide("m", obs(0, 0.0, 2)), ScaleDecision::Hold);
+        assert_eq!(s.decide("m", obs(0, 0.0, 2)), ScaleDecision::Down);
+        // At the floor, cold forever still holds.
+        for _ in 0..10 {
+            assert_eq!(s.decide("m", obs(0, 0.0, 1)), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn bounds_correct_immediately_without_hysteresis() {
+        let mut s = scaler();
+        assert_eq!(s.decide("m", obs(0, 0.0, 0)), ScaleDecision::Up);
+        assert_eq!(s.decide("m", obs(0, 0.0, 9)), ScaleDecision::Down);
+        // A saturated-hot pool at the ceiling holds rather than overshoot.
+        for _ in 0..5 {
+            assert_eq!(s.decide("m", obs(64, 99.0, 4)), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn streaks_are_per_model() {
+        let mut s = scaler();
+        assert_eq!(s.decide("a", obs(8, 50.0, 1)), ScaleDecision::Hold);
+        // Model b's first hot tick must not inherit a's streak.
+        assert_eq!(s.decide("b", obs(8, 50.0, 1)), ScaleDecision::Hold);
+        assert_eq!(s.decide("a", obs(8, 50.0, 1)), ScaleDecision::Up);
+        assert_eq!(s.decide("b", obs(8, 50.0, 1)), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn tick_spawns_below_floor_pool_up_to_min() {
+        // A real one-worker pool under a scaler with min_workers=2: the
+        // below-floor bound corrects on the first tick.
+        use crate::config::{EngineKind, ModelConfig};
+        use crate::coordinator::server::ServerOpts;
+        use crate::pcilt::store::TableStore;
+        use std::sync::Arc;
+        let cfg = ModelConfig {
+            name: "m".to_string(),
+            engine: EngineKind::Pcilt,
+            act_bits: 4,
+            seed: 1,
+            ..ModelConfig::default()
+        };
+        let reg = ModelRegistry::start_with_store(
+            &[cfg],
+            &ServerOpts {
+                workers: 1,
+                max_batch: 4,
+                batch_deadline: Duration::from_millis(1),
+                queue_capacity: 64,
+            },
+            Arc::new(TableStore::new()),
+        )
+        .unwrap();
+        let mut s = FleetScaler::new(ScalerOpts { min_workers: 2, ..ScalerOpts::default() });
+        s.tick(&reg);
+        let pools = reg.pools();
+        assert_eq!(pools.len(), 1);
+        assert_eq!(pools[0].1.worker_count(), 2);
+        assert_eq!(s.scale_ups(), 1);
+        // Once at the floor, further ticks on an idle pool hold.
+        s.tick(&reg);
+        assert_eq!(pools[0].1.worker_count(), 2);
+        assert_eq!(s.scale_ups(), 1);
+    }
+}

@@ -11,9 +11,16 @@
 //! Workers build their backend in-thread from a [`BackendSpec`] (PJRT
 //! executables are not Send) and loop on the size-or-deadline batching
 //! policy. Shutdown closes the queue; workers drain and exit.
+//!
+//! The pool is **elastic**: [`Server::spawn_worker`] starts an extra
+//! worker and [`Server::park_worker`] lowers the pool's target so one
+//! worker parks itself — always at a batch boundary, never mid-batch, so
+//! scaling down cannot drop admitted work. The net tier's
+//! [`super::scaler::FleetScaler`] drives both from queue-depth/latency
+//! observations.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -22,9 +29,13 @@ use crate::util::error as anyhow;
 use crate::util::logger as log;
 
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::queue::{BoundedQueue, PushError, TryPushError};
+use super::queue::{BoundedQueue, PopOutcome, PushError, TryPushError};
 use super::request::{InferRequest, InferResponse};
 use super::worker::{process_batch, Backend, BackendSpec};
+
+/// How long an idle worker waits on the empty queue before re-checking
+/// whether it should park — the scale-down reaction bound.
+const PARK_CHECK: Duration = Duration::from_millis(50);
 
 /// Server configuration (subset of `config::ServeConfig` the data plane
 /// needs).
@@ -60,11 +71,25 @@ pub enum SubmitError {
 pub struct Server {
     queue: Arc<BoundedQueue<InferRequest>>,
     metrics: Arc<Metrics>,
-    workers: Vec<JoinHandle<()>>,
+    // Joined lazily: spawn_worker reaps finished (parked) handles before
+    // pushing a new one, so the vec stays bounded under scaling churn.
+    // Held only to push/reap/drain, never across a join or another lock.
+    // pcilt-lint: lock-rank(worker-handles = 8)
+    workers: Mutex<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
+    /// Monotonic worker-thread name suffix across spawn/park cycles.
+    next_wid: AtomicUsize,
     backend_name: String,
     /// Model label stamped on every request (empty for anonymous pools).
     model: String,
+    /// Retained so late-spawned workers can build their own backend.
+    spec: BackendSpec,
+    max_batch: usize,
+    batch_deadline: Duration,
+    /// Worker count the pool is steering toward (scaler-owned).
+    target: Arc<AtomicUsize>,
+    /// Worker threads actually running their batch loop.
+    active: Arc<AtomicUsize>,
 }
 
 impl Server {
@@ -82,45 +107,96 @@ impl Server {
         let backend_name = probe.name();
         drop(probe);
 
-        let mut workers = Vec::with_capacity(opts.workers);
-        for wid in 0..opts.workers {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
-            let spec = spec.clone();
-            let max_batch = opts.max_batch;
-            let deadline = opts.batch_deadline;
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("pcilt-worker-{wid}"))
-                    .spawn(move || {
-                        let backend = match Backend::build(&spec) {
-                            Ok(b) => b,
-                            Err(e) => {
-                                log::error!("worker {wid}: backend build failed: {e:#}");
-                                return;
-                            }
-                        };
-                        log::debug!("worker {wid} up ({})", backend.name());
-                        while let Some(batch) = queue.pop_batch(max_batch, deadline) {
-                            if let Err(e) =
-                                process_batch(&backend, batch, |lat| metrics.on_batch(lat))
-                            {
-                                log::error!("worker {wid}: batch failed: {e:#}");
-                            }
-                        }
-                        log::debug!("worker {wid} drained, exiting");
-                    })
-                    .map_err(|e| anyhow::anyhow!("spawning worker {wid}: {e}"))?,
-            );
-        }
-        Ok(Server {
+        let server = Server {
             queue,
             metrics,
-            workers,
+            workers: Mutex::new(Vec::with_capacity(opts.workers)),
             next_id: AtomicU64::new(0),
+            next_wid: AtomicUsize::new(0),
             backend_name,
             model,
-        })
+            spec,
+            max_batch: opts.max_batch,
+            batch_deadline: opts.batch_deadline,
+            target: Arc::new(AtomicUsize::new(opts.workers)),
+            active: Arc::new(AtomicUsize::new(0)),
+        };
+        for _ in 0..opts.workers {
+            server.spawn_thread()?;
+        }
+        Ok(server)
+    }
+
+    /// Spawn one worker thread against the current queue/spec. The active
+    /// counter is charged before the spawn so `worker_count` reflects the
+    /// thread immediately.
+    fn spawn_thread(&self) -> anyhow::Result<()> {
+        let wid = self.next_wid.fetch_add(1, Ordering::Relaxed);
+        self.active.fetch_add(1, Ordering::SeqCst);
+        let queue = Arc::clone(&self.queue);
+        let metrics = Arc::clone(&self.metrics);
+        let spec = self.spec.clone();
+        let (max_batch, deadline) = (self.max_batch, self.batch_deadline);
+        let target = Arc::clone(&self.target);
+        let active = Arc::clone(&self.active);
+        let spawned = std::thread::Builder::new()
+            .name(format!("pcilt-worker-{wid}"))
+            .spawn(move || {
+                run_worker(wid, &queue, &metrics, &spec, max_batch, deadline, &target, &active)
+            });
+        match spawned {
+            Ok(handle) => {
+                let mut g = self.workers.lock().unwrap();
+                g.retain(|h| !h.is_finished());
+                g.push(handle);
+                Ok(())
+            }
+            Err(e) => {
+                dec_floor_zero(&self.active);
+                Err(anyhow::anyhow!("spawning worker {wid}: {e}"))
+            }
+        }
+    }
+
+    /// Autoscaler scale-up: raise the pool's target by one and start a
+    /// worker for it.
+    pub fn spawn_worker(&self) -> anyhow::Result<()> {
+        self.target.fetch_add(1, Ordering::SeqCst);
+        let r = self.spawn_thread();
+        if r.is_err() {
+            dec_floor_zero(&self.target);
+        }
+        r
+    }
+
+    /// Autoscaler scale-down: lower the pool's target by one. Some worker
+    /// parks itself lazily at its next batch boundary (never mid-batch,
+    /// so admitted work is never dropped). Refuses to target below one
+    /// worker; returns whether the target moved.
+    pub fn park_worker(&self) -> bool {
+        loop {
+            let t = self.target.load(Ordering::SeqCst);
+            if t <= 1 {
+                return false;
+            }
+            if self
+                .target
+                .compare_exchange(t, t - 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// Worker threads currently running their batch loop.
+    pub fn worker_count(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Worker count the scaler is steering the pool toward.
+    pub fn target_workers(&self) -> usize {
+        self.target.load(Ordering::SeqCst)
     }
 
     pub fn backend_name(&self) -> &str {
@@ -208,9 +284,11 @@ impl Server {
 
     /// Graceful shutdown: close the queue, join the workers (they drain
     /// outstanding requests first).
-    pub fn shutdown(mut self) -> MetricsSnapshot {
+    pub fn shutdown(self) -> MetricsSnapshot {
         self.queue.close();
-        for w in self.workers.drain(..) {
+        // Take the handles out under the lock, join outside it.
+        let handles: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for w in handles {
             let _ = w.join();
         }
         self.metrics.snapshot()
@@ -220,8 +298,87 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.queue.close();
-        for w in self.workers.drain(..) {
+        let handles: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for w in handles {
             let _ = w.join();
+        }
+    }
+}
+
+/// One worker thread's life: build a backend, loop on batches, exit on
+/// queue close — or park when the pool's target dropped below the number
+/// of running workers. The park check sits between batches only, so a
+/// parking worker never abandons requests it already popped.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    wid: usize,
+    queue: &BoundedQueue<InferRequest>,
+    metrics: &Metrics,
+    spec: &BackendSpec,
+    max_batch: usize,
+    deadline: Duration,
+    target: &AtomicUsize,
+    active: &AtomicUsize,
+) {
+    let backend = match Backend::build(spec) {
+        Ok(b) => b,
+        Err(e) => {
+            log::error!("worker {wid}: backend build failed: {e:#}");
+            // Surrender both counters so the pool does not report a
+            // worker that never served.
+            dec_floor_zero(active);
+            dec_floor_zero(target);
+            return;
+        }
+    };
+    log::debug!("worker {wid} up ({})", backend.name());
+    loop {
+        if try_park(target, active) {
+            log::debug!("worker {wid} parked");
+            return;
+        }
+        match queue.pop_batch_idle(max_batch, deadline, PARK_CHECK) {
+            PopOutcome::Batch(batch) => {
+                if let Err(e) = process_batch(&backend, batch, |lat| metrics.on_batch(lat)) {
+                    log::error!("worker {wid}: batch failed: {e:#}");
+                }
+            }
+            PopOutcome::Idle => {}
+            PopOutcome::Closed => break,
+        }
+    }
+    log::debug!("worker {wid} drained, exiting");
+    dec_floor_zero(active);
+}
+
+/// CAS claim of one park slot: succeeds for exactly one worker per unit
+/// of target/active overshoot. The `a <= 1` guard keeps the last runner
+/// alive regardless of target.
+fn try_park(target: &AtomicUsize, active: &AtomicUsize) -> bool {
+    loop {
+        let t = target.load(Ordering::SeqCst);
+        let a = active.load(Ordering::SeqCst);
+        if a <= t || a <= 1 {
+            return false;
+        }
+        if active
+            .compare_exchange(a, a - 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
+
+/// Saturating atomic decrement (never wraps past zero).
+fn dec_floor_zero(n: &AtomicUsize) {
+    loop {
+        let v = n.load(Ordering::SeqCst);
+        if v == 0 {
+            return;
+        }
+        if n.compare_exchange(v, v - 1, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+            return;
         }
     }
 }
@@ -388,6 +545,34 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.shed_overload, shed);
         assert_eq!(m.rejected_full, 0, "bounded sheds are not capacity rejects");
+    }
+
+    #[test]
+    fn workers_spawn_and_park_dynamically() {
+        use std::time::Instant;
+        let server = test_server(1, 64);
+        assert_eq!(server.worker_count(), 1);
+        server.spawn_worker().unwrap();
+        server.spawn_worker().unwrap();
+        assert_eq!(server.worker_count(), 3);
+        assert_eq!(server.target_workers(), 3);
+        // Lower the target twice; parking is lazy (next batch boundary /
+        // idle park-check), so wait for the counters to converge.
+        assert!(server.park_worker());
+        assert!(server.park_worker());
+        assert_eq!(server.target_workers(), 1);
+        let t0 = Instant::now();
+        while server.worker_count() > 1 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "workers never parked");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Floor: the last worker can never be parked away.
+        assert!(!server.park_worker());
+        // The pool still serves after scaling churn.
+        let resp = server.infer_blocking(one_image(9)).unwrap();
+        assert_eq!(resp.logits.len(), 8);
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
     }
 
     #[test]

@@ -18,7 +18,9 @@ use pcilt::coordinator::{
     ModelRegistry, NativeEngineKind, Server, ServerOpts,
 };
 use pcilt::model::{layer_specs, plan_model, random_params, EngineChoice, QuantCnn};
-use pcilt::net::loadtest::{run as loadtest_run, write_bench_json};
+use pcilt::net::loadtest::{
+    run as loadtest_run, run_sweep, write_bench_json, write_sweep_json,
+};
 use pcilt::net::{slo_batch_deadline, LoadtestOpts, ModelTarget, NetOpts, NetServer};
 use pcilt::pcilt::engine::{ConvEngine, ConvGeometry};
 use pcilt::pcilt::memory::{paper_memory_report, NetworkSpec as MemoryNetworkSpec};
@@ -70,7 +72,17 @@ fn dispatch(raw: &[String]) -> Result<()> {
     if raw[0] == "loadtest" {
         let args = Args::parse(
             raw,
-            &["addr", "rate", "requests", "connections", "seed", "config", "json"],
+            &[
+                "addr",
+                "rate",
+                "requests",
+                "connections",
+                "conns",
+                "loops",
+                "seed",
+                "config",
+                "json",
+            ],
             &[],
         )?;
         return cmd_loadtest(&args);
@@ -487,11 +499,30 @@ fn cmd_serve_net(cfg: &ServeConfig, opts: &ServerOpts, cache_dir: &Path) -> Resu
     Ok(())
 }
 
+/// Parse a comma-separated positive-integer sweep list (`--loops 1,4`).
+fn parse_sweep_list(v: Option<&str>, key: &str) -> Result<Option<Vec<usize>>> {
+    let Some(v) = v else { return Ok(None) };
+    let mut out = Vec::new();
+    for part in v.split(',') {
+        let part = part.trim();
+        let n: usize = part
+            .parse()
+            .map_err(|_| pcilt::util::error::anyhow!("invalid --{key} entry '{part}'"))?;
+        ensure!(n >= 1, "--{key} entries must be >= 1");
+        out.push(n);
+    }
+    ensure!(!out.is_empty(), "--{key} list is empty");
+    Ok(Some(out))
+}
+
 /// `pcilt loadtest` — the open-loop socket client. With `--addr` it
 /// targets an already-running `pcilt serve --net`; without, it
 /// self-serves: boots the registry plus socket tier on an ephemeral
-/// loopback port and measures end-to-end over TCP. `--json FILE` writes
-/// the bench-check-gated `BENCH_serving_net.json` payload.
+/// loopback port and measures end-to-end over TCP. `--loops`/`--conns`
+/// take comma lists and sweep the shard/connection counts (rebooting the
+/// self-served net tier per point, reporting per-shard goodput).
+/// `--json FILE` writes the bench-check-gated `BENCH_serving_net.json`
+/// payload.
 fn cmd_loadtest(args: &Args) -> Result<()> {
     let cfg = match args.get("config") {
         Some(path) => ServeConfig::load(Path::new(path))?,
@@ -504,6 +535,49 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     };
     lt.connections = args.get_usize("connections", lt.connections)?;
     lt.seed = args.get_usize("seed", lt.seed as usize)? as u64;
+
+    let loops_list = parse_sweep_list(args.get("loops"), "loops")?;
+    let conns_list = parse_sweep_list(args.get("conns"), "conns")?;
+    if loops_list.is_some() || conns_list.is_some() {
+        // Sweeps reboot the net tier per point, so they only work over
+        // the self-served stack.
+        ensure!(
+            args.get("addr").is_none(),
+            "--loops/--conns sweeps reboot the server per point; drop --addr"
+        );
+        let models = net_models(&cfg)?;
+        let net_opts = NetOpts {
+            addr: "127.0.0.1:0".to_string(),
+            ..NetOpts::from_config(&cfg.net)
+        };
+        let opts = ServerOpts {
+            workers: cfg.workers,
+            max_batch: cfg.max_batch,
+            batch_deadline: slo_batch_deadline(
+                net_opts.slo,
+                Duration::from_micros(cfg.batch_deadline_us),
+            ),
+            queue_capacity: cfg.queue_capacity,
+        };
+        lt.mix = net_mix(&models);
+        let loops_list = loops_list.unwrap_or_else(|| vec![net_opts.loops]);
+        let conns_list = conns_list.unwrap_or_else(|| vec![lt.connections]);
+        let registry = Arc::new(ModelRegistry::start(&models, &opts)?);
+        log::info!(
+            "loadtest sweep: loops {loops_list:?} x conns {conns_list:?}, {} requests @ \
+             {:.0} rps per point",
+            lt.requests,
+            lt.rate_rps
+        );
+        let sweep = run_sweep(&registry, &net_opts, &lt, &loops_list, &conns_list)?;
+        println!("--- loadtest sweep ---");
+        print!("{}", sweep.report());
+        if let Some(path) = args.get("json") {
+            write_sweep_json(Path::new(path), &sweep)?;
+            log::info!("loadtest: wrote {path}");
+        }
+        return Ok(());
+    }
 
     // Self-serve unless --addr points at an external server. The hosted
     // stack must outlive the run; shutdown order is net tier, then pools.

@@ -22,6 +22,17 @@ use super::proto::{
     FrameKind, WireNack, WireRequest, WireResponse,
 };
 
+/// Compact the flushed prefix of the out buffer once it exceeds this —
+/// a partial-flush loop must reclaim memory without waiting for the one
+/// moment the buffer fully drains (which a slow reader never provides).
+const OUT_COMPACT: usize = 64 * 1024;
+
+/// Read backpressure high-water mark: while the *unflushed* out backlog
+/// exceeds this, the connection stops reading and decoding new frames.
+/// Requests then queue in the kernel socket buffers and TCP flow control
+/// pushes back on the client, instead of the backlog growing unboundedly.
+const OUT_HIGH_WATER: usize = 256 * 1024;
+
 /// What the connection speaks (decided from the first bytes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Mode {
@@ -38,6 +49,38 @@ pub struct Tick {
     /// True when bytes moved or a response landed — the loop uses this to
     /// decide whether to sleep before the next poll round.
     pub progressed: bool,
+    /// Inference responses written onto the wire this tick (per-shard
+    /// goodput accounting).
+    pub completed: u32,
+}
+
+/// Per-connection token bucket: `rate` requests/second with a burst
+/// capacity of 2× the rate, refilled continuously (fractional tokens
+/// accumulate between ticks).
+struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate_rps: u64, now: Instant) -> TokenBucket {
+        let rate = rate_rps as f64;
+        TokenBucket { rate, burst: rate * 2.0, tokens: rate * 2.0, last: now }
+    }
+
+    fn try_take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
 }
 
 /// One client connection.
@@ -56,10 +99,14 @@ pub struct Conn {
     close_after_flush: bool,
     /// Server drain: no new requests, close once pending + out are empty.
     draining: bool,
+    /// Per-connection rate limit; `None` = unlimited.
+    bucket: Option<TokenBucket>,
 }
 
 impl Conn {
-    pub fn new(stream: TcpStream) -> anyhow::Result<Conn> {
+    /// `rate_limit` is the per-connection token-bucket rate in
+    /// requests/second (burst = 2× rate); 0 disables the limit.
+    pub fn new(stream: TcpStream, rate_limit: u64) -> anyhow::Result<Conn> {
         stream
             .set_nonblocking(true)
             .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
@@ -78,6 +125,7 @@ impl Conn {
             peer_eof: false,
             close_after_flush: false,
             draining: false,
+            bucket: (rate_limit > 0).then(|| TokenBucket::new(rate_limit, Instant::now())),
         })
     }
 
@@ -105,12 +153,21 @@ impl Conn {
         self.queue_frame(kind, &body);
     }
 
+    /// Unflushed response bytes waiting on the socket.
+    fn out_backlog(&self) -> usize {
+        self.out.len() - self.written
+    }
+
     /// One non-blocking pass: read, decode/dispatch, poll responses,
     /// write, apply timeouts.
     pub fn tick(&mut self, d: &Dispatcher, now: Instant, idle_timeout: Duration) -> Tick {
         let mut progressed = false;
-        if !self.read_some(now, &mut progressed) {
-            return Tick { keep: false, progressed };
+        let mut completed = 0u32;
+        // Read backpressure: a slow reader with a full out backlog gets
+        // no further reads until the backlog drains below the high-water
+        // mark — new requests wait in the kernel socket buffers.
+        if self.out_backlog() <= OUT_HIGH_WATER && !self.read_some(now, &mut progressed) {
+            return Tick { keep: false, progressed, completed };
         }
         if self.mode == Mode::Sniff && self.decoder.buffered() >= 4 {
             self.mode =
@@ -118,7 +175,7 @@ impl Conn {
         }
         match self.mode {
             Mode::Binary => {
-                if !self.process_frames(d, &mut progressed) {
+                if !self.process_frames(d, now, &mut progressed) {
                     // Fatal framing error: answer nothing further, flush
                     // what's queued, close.
                     self.close_after_flush = true;
@@ -127,11 +184,11 @@ impl Conn {
             Mode::Http => self.process_http(d, &mut progressed),
             Mode::Sniff => {}
         }
-        self.poll_pending(d, &mut progressed);
+        self.poll_pending(d, &mut progressed, &mut completed);
         if !self.write_some(now, &mut progressed) {
-            return Tick { keep: false, progressed };
+            return Tick { keep: false, progressed, completed };
         }
-        Tick { keep: self.decide_keep(now, idle_timeout), progressed }
+        Tick { keep: self.decide_keep(now, idle_timeout), progressed, completed }
     }
 
     /// Drain the socket's read side into the decoder. False = hard error.
@@ -159,8 +216,14 @@ impl Conn {
     }
 
     /// Decode and dispatch buffered frames. False = fatal framing error.
-    fn process_frames(&mut self, d: &Dispatcher, progressed: &mut bool) -> bool {
+    fn process_frames(&mut self, d: &Dispatcher, now: Instant, progressed: &mut bool) -> bool {
         loop {
+            // Per-frame backpressure check: one burst of buffered frames
+            // must not blow past the high-water mark inside a single
+            // tick. Undecoded frames stay in the decoder for later.
+            if self.out_backlog() > OUT_HIGH_WATER {
+                return true;
+            }
             match self.decoder.next_frame() {
                 Ok(Some((FrameKind::Infer, body))) => {
                     *progressed = true;
@@ -170,7 +233,7 @@ impl Conn {
                         self.queue_nack(FrameKind::Error, id, "server draining".to_string());
                         continue;
                     }
-                    self.handle_request(d, &body);
+                    self.handle_request(d, now, &body);
                 }
                 Ok(Some((kind, body))) => {
                     // Clients must not send server->client kinds.
@@ -199,7 +262,7 @@ impl Conn {
         }
     }
 
-    fn handle_request(&mut self, d: &Dispatcher, body: &[u8]) {
+    fn handle_request(&mut self, d: &Dispatcher, now: Instant, body: &[u8]) {
         let req = match WireRequest::decode(body) {
             Ok(r) => r,
             Err(e) => {
@@ -209,6 +272,19 @@ impl Conn {
             }
         };
         let id = req.id;
+        // Per-connection rate limit, enforced before dispatch: over-rate
+        // requests cost no pool work and are shed with an explicit nack.
+        if let Some(b) = self.bucket.as_mut() {
+            if !b.try_take(now) {
+                d.on_shed();
+                self.queue_nack(
+                    FrameKind::Overloaded,
+                    id,
+                    "connection rate limit exceeded".to_string(),
+                );
+                return;
+            }
+        }
         match d.submit(req) {
             Ok(ticket) => self.pending.push(ticket),
             Err(DispatchError::Overloaded(m)) => self.queue_nack(FrameKind::Overloaded, id, m),
@@ -231,7 +307,7 @@ impl Conn {
     }
 
     /// Move completed inferences from pending tickets onto the wire.
-    fn poll_pending(&mut self, d: &Dispatcher, progressed: &mut bool) {
+    fn poll_pending(&mut self, d: &Dispatcher, progressed: &mut bool, completed: &mut u32) {
         let mut i = 0;
         while i < self.pending.len() {
             match self.pending[i].rx.try_recv() {
@@ -248,6 +324,7 @@ impl Conn {
                     let body = wire.encode();
                     self.queue_frame(FrameKind::Logits, &body);
                     d.on_completed();
+                    *completed += 1;
                     *progressed = true;
                 }
                 Err(TryRecvError::Empty) => i += 1,
@@ -280,11 +357,23 @@ impl Conn {
                 }
             }
         }
+        self.reclaim_out();
+        true
+    }
+
+    /// Reclaim flushed bytes from the out buffer: drop it whole on a
+    /// complete flush, or compact the flushed prefix once it exceeds
+    /// [`OUT_COMPACT`]. Waiting only for a complete flush never reclaims
+    /// under a slow reader with pipelined requests (the buffer never
+    /// fully drains), which grew `out` unboundedly.
+    fn reclaim_out(&mut self) {
         if self.written > 0 && self.written == self.out.len() {
             self.out.clear();
             self.written = 0;
+        } else if self.written > OUT_COMPACT {
+            self.out.drain(..self.written);
+            self.written = 0;
         }
-        true
     }
 
     fn decide_keep(&self, now: Instant, idle_timeout: Duration) -> bool {
@@ -303,5 +392,181 @@ impl Conn {
             return false;
         }
         true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ModelConfig};
+    use crate::coordinator::{ModelRegistry, ServerOpts};
+    use crate::pcilt::store::TableStore;
+    use std::net::TcpListener;
+    use std::sync::Arc;
+
+    fn dispatcher() -> Dispatcher {
+        let cfg = ModelConfig {
+            name: "a".to_string(),
+            engine: EngineKind::Pcilt,
+            act_bits: 4,
+            seed: 1,
+            ..ModelConfig::default()
+        };
+        let registry = Arc::new(
+            ModelRegistry::start_with_store(
+                &[cfg],
+                &ServerOpts {
+                    workers: 1,
+                    max_batch: 4,
+                    batch_deadline: Duration::from_millis(1),
+                    queue_capacity: 64,
+                },
+                Arc::new(TableStore::new()),
+            )
+            .unwrap(),
+        );
+        Dispatcher::new(registry, 8)
+    }
+
+    /// Loopback socket pair: (client side, accepted server side).
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = l.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_with_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10, t0);
+        // Burst capacity is 2× the rate: exactly 20 requests pass at t0.
+        for i in 0..20 {
+            assert!(b.try_take(t0), "burst request {i} must pass");
+        }
+        assert!(!b.try_take(t0), "empty bucket must shed");
+        // 100ms refills one token at 10 rps.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take(t1));
+        assert!(!b.try_take(t1));
+        // A long quiet period refills to the burst cap, not beyond.
+        let t2 = t1 + Duration::from_secs(60);
+        for i in 0..20 {
+            assert!(b.try_take(t2), "refilled burst request {i} must pass");
+        }
+        assert!(!b.try_take(t2), "cap is 2x rate even after a long idle");
+    }
+
+    #[test]
+    fn slow_reader_backpressure_bounds_out_buffer() {
+        // Regression (PR 10): `write_some` only reclaimed `out` on a
+        // complete flush, and reads never paused, so a slow reader with
+        // pipelined requests grew the buffer unboundedly.
+        let d = dispatcher();
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server, 0).unwrap();
+        let idle = Duration::from_secs(30);
+
+        // Partial-flush reclaim: a flushed prefix beyond OUT_COMPACT is
+        // compacted even though unflushed bytes remain.
+        conn.out = vec![0u8; OUT_COMPACT + 10_000];
+        conn.written = OUT_COMPACT + 1;
+        conn.reclaim_out();
+        assert_eq!(conn.written, 0, "compaction must reset the flush cursor");
+        assert_eq!(conn.out.len(), 9_999, "only unflushed bytes may remain");
+        // Small flushed prefixes are left alone (no O(n^2) re-compaction)…
+        conn.written = 100;
+        conn.reclaim_out();
+        assert_eq!((conn.out.len(), conn.written), (9_999, 100));
+        // …and a complete flush still clears outright.
+        conn.written = conn.out.len();
+        conn.reclaim_out();
+        assert_eq!((conn.out.len(), conn.written), (0, 0));
+
+        // Read backpressure: with the out backlog above the high-water
+        // mark, a tick must not pull the client's request off the socket.
+        let req = WireRequest {
+            id: 7,
+            model: "a".to_string(),
+            h: 16,
+            w: 16,
+            c: 1,
+            codes: vec![3; 256],
+        };
+        let frame = encode_frame(FrameKind::Infer, &req.encode());
+        client.write_all(&frame).unwrap();
+        let filler = vec![0u8; 4096];
+        while conn.out_backlog() <= OUT_HIGH_WATER {
+            conn.queue_frame(FrameKind::Logits, &filler);
+        }
+        let t = conn.tick(&d, Instant::now(), idle);
+        assert!(t.keep);
+        assert_eq!(conn.decoder.buffered(), 0, "backpressured tick must not read");
+        assert!(conn.pending.is_empty(), "backpressured tick must not dispatch");
+
+        // Once the reader catches up and the backlog drains, the request
+        // is read, dispatched and answered — nothing was lost.
+        client.set_nonblocking(true).unwrap();
+        let mut scratch = vec![0u8; 64 * 1024];
+        let mut completed = 0u32;
+        for _ in 0..2_000 {
+            loop {
+                match client.read(&mut scratch) {
+                    Ok(0) => break,
+                    Ok(_) => {}
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => panic!("client read: {e}"),
+                }
+            }
+            let t = conn.tick(&d, Instant::now(), idle);
+            assert!(t.keep);
+            completed += t.completed;
+            if completed > 0 && conn.out_backlog() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        assert_eq!(completed, 1, "the backpressured request must complete");
+        assert!(conn.pending.is_empty());
+    }
+
+    #[test]
+    fn rate_limited_conn_nacks_before_dispatch() {
+        // rate 1 rps => burst 2: of 10 back-to-back requests exactly 2
+        // dispatch; the rest come back as Overloaded nacks counted shed.
+        let d = dispatcher();
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server, 1).unwrap();
+        let idle = Duration::from_secs(30);
+        for id in 0..10u64 {
+            let req = WireRequest {
+                id,
+                model: "a".to_string(),
+                h: 16,
+                w: 16,
+                c: 1,
+                codes: vec![3; 256],
+            };
+            client.write_all(&encode_frame(FrameKind::Infer, &req.encode())).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut completed = 0u64;
+        loop {
+            completed += u64::from(conn.tick(&d, Instant::now(), idle).completed);
+            let c = d.counters();
+            if c.accepted + c.shed == 10 && completed == c.accepted {
+                break;
+            }
+            assert!(Instant::now() < deadline, "requests unresolved: {c:?}");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let c = d.counters();
+        // ≥2 from the initial burst (a slow run may refill a token or
+        // two, never most of the batch), everything else shed pre-pool.
+        assert!(c.accepted >= 2, "burst of 2 must dispatch, got {}", c.accepted);
+        assert!(c.shed >= 6, "over-rate requests must shed, got {}", c.shed);
+        assert_eq!(c.accepted + c.shed, 10);
+        assert_eq!(d.inflight("a"), 0, "sheds must not hold budget");
     }
 }

@@ -89,6 +89,13 @@ impl Drop for InflightGuard {
         let mut g = self.shared.by_model.lock().unwrap();
         if let Some(n) = g.get_mut(&self.model) {
             *n = n.saturating_sub(1);
+            // Prune at zero: the map must stay bounded by the number of
+            // models with live requests, not grow one entry per name ever
+            // seen (a client spraying random names is cheap; this map
+            // living forever is not).
+            if *n == 0 {
+                g.remove(&self.model);
+            }
         }
     }
 }
@@ -144,6 +151,19 @@ impl Dispatcher {
         } else {
             model
         };
+        // Reject unknown models before charging the budget: an unknown
+        // name must never insert an in-flight entry (bounded-map
+        // invariant), and the registry is the authority on known names.
+        if self.registry.model(&model).is_none() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(DispatchError::Rejected(
+                RegistryError::UnknownModel {
+                    requested: model,
+                    known: self.registry.models().iter().map(|s| s.to_string()).collect(),
+                }
+                .to_string(),
+            ));
+        }
         {
             let mut g = self.inflight.by_model.lock().unwrap();
             let n = g.entry(model.clone()).or_insert(0);
@@ -182,8 +202,21 @@ impl Dispatcher {
         self.inflight.by_model.lock().unwrap().get(model).copied().unwrap_or(0)
     }
 
+    /// Models currently holding in-flight budget. Bounded by the number
+    /// of registered models with live requests — entries are pruned at
+    /// zero and unknown names never insert (regression surface for the
+    /// unbounded-map bug).
+    pub fn inflight_models(&self) -> usize {
+        self.inflight.by_model.lock().unwrap().len()
+    }
+
     pub fn on_completed(&self) {
         self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a request shed before dispatch (per-connection rate limit).
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn on_rejected(&self) {
@@ -215,7 +248,8 @@ impl Dispatcher {
         let _ = writeln!(s, "pcilt_net_shed {}", c.shed);
         let _ = writeln!(s, "pcilt_net_rejected {}", c.rejected);
         let _ = writeln!(s, "pcilt_net_proto_errors {}", c.proto_errors);
-        for (name, m) in self.registry.metrics() {
+        for (name, pool) in self.registry.pools() {
+            let m = pool.metrics();
             let _ = writeln!(s, "pcilt_model_completed{{model=\"{name}\"}} {}", m.completed);
             let _ = writeln!(s, "pcilt_model_shed{{model=\"{name}\"}} {}", m.shed_overload);
             let _ = writeln!(s, "pcilt_model_queue_depth{{model=\"{name}\"}} {}", m.queue_depth);
@@ -223,6 +257,8 @@ impl Dispatcher {
             let _ = writeln!(s, "pcilt_model_p99_ns{{model=\"{name}\"}} {:.0}", m.p99_latency_ns);
             let _ =
                 writeln!(s, "pcilt_model_p999_ns{{model=\"{name}\"}} {:.0}", m.p999_latency_ns);
+            let _ =
+                writeln!(s, "pcilt_model_workers{{model=\"{name}\"}} {}", pool.worker_count());
         }
         s
     }
@@ -344,9 +380,31 @@ mod tests {
             "pcilt_model_completed{model=\"a\"}",
             "pcilt_model_queue_depth{model=\"b\"}",
             "pcilt_model_p999_ns{model=\"a\"}",
+            "pcilt_model_workers{model=\"a\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
+    }
+
+    #[test]
+    fn inflight_map_bounded_under_random_name_soak() {
+        // Regression (PR 10): unknown-model submits used to insert a
+        // permanent `by_model` entry per name, so a client spraying
+        // random names grew the map without bound.
+        let d = Dispatcher::new(registry(), 4);
+        let mut rng = crate::util::prng::Rng::new(0x50AC);
+        for i in 0..10_000u64 {
+            let name = format!("ghost-{:016x}", rng.next_u64());
+            let err = d.submit(request(&name, i)).unwrap_err();
+            assert!(matches!(err, DispatchError::Rejected(_)), "{err}");
+        }
+        assert_eq!(d.inflight_models(), 0, "unknown names must never enter the map");
+        assert_eq!(d.counters().rejected, 10_000);
+        // Known-model entries are pruned once their count returns to 0.
+        let t = d.submit(request("a", 1)).unwrap();
+        assert_eq!(d.inflight_models(), 1);
+        drop(t);
+        assert_eq!(d.inflight_models(), 0, "drop at zero must remove the key");
     }
 
     #[test]

@@ -1,22 +1,31 @@
-//! Accept/event loop: one `pcilt-net` thread owns a non-blocking
-//! `std::net` listener plus every live [`Conn`], and round-robins ticks
-//! over them (accept → per-connection read/dispatch/write). No external
-//! event API — a short poll sleep bounds the idle cost, and any byte of
-//! progress on any connection skips the sleep, so the loop degrades to
-//! busy-polling exactly when there is work.
+//! Accept + event-loop shards: one `pcilt-net-accept` thread owns the
+//! non-blocking `std::net` listener and hands each accepted socket to the
+//! least-loaded of a fixed pool of loop-shard threads
+//! (`pcilt-net-0..n-1`). Every shard runs the per-connection tick loop
+//! (accept handoff → read/dispatch/write) over its own connections, so
+//! connection I/O scales across cores while the [`Dispatcher`] — whose
+//! counters are atomic and whose in-flight table locks — stays shared.
+//! No external event API — a short poll sleep bounds the idle cost, and
+//! any byte of progress on any connection skips the sleep, so each loop
+//! degrades to busy-polling exactly when there is work.
+//!
+//! The acceptor also drives the per-model worker autoscaler
+//! ([`FleetScaler`]) on the metrics snapshot cadence, and backs off
+//! exponentially on persistent `accept()` errors (EMFILE and friends)
+//! instead of logging every poll round.
 //!
 //! Shutdown is a graceful drain: stop accepting, tell every connection to
 //! finish its in-flight requests, and force-close whatever is left when
 //! the drain window expires.
 
 use std::io::ErrorKind;
-use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::ModelRegistry;
+use crate::coordinator::{FleetScaler, ModelRegistry, ScalerOpts};
 use crate::util::error as anyhow;
 use crate::util::logger as log;
 
@@ -26,44 +35,143 @@ use super::dispatch::{Dispatcher, NetCounters};
 /// Sleep between poll rounds when no connection made progress.
 const POLL_IDLE: Duration = Duration::from_micros(500);
 
+/// Autoscaler cadence: each tick takes one metrics snapshot per pool and
+/// feeds it to the scaler, so scaling piggybacks on the snapshot rhythm
+/// rather than adding its own sampling path.
+const SCALER_TICK: Duration = Duration::from_millis(100);
+
+/// First delay after a non-`WouldBlock` accept error; doubles per
+/// consecutive error up to [`ACCEPT_BACKOFF_CAP`].
+const ACCEPT_BACKOFF_BASE: Duration = Duration::from_millis(1);
+
+/// Ceiling for the accept-error backoff.
+const ACCEPT_BACKOFF_CAP: Duration = Duration::from_secs(1);
+
 /// Net-tier configuration (the `[net]` config section, resolved).
 #[derive(Debug, Clone)]
 pub struct NetOpts {
     /// Listen address; port 0 picks an ephemeral port (tests, loadtest).
     pub addr: String,
+    /// Event-loop shard threads the acceptor feeds.
+    pub loops: usize,
     /// Per-model budget of admitted-but-unanswered requests.
     pub max_inflight: usize,
     /// Latency SLO the batcher budget is derived from
-    /// ([`super::dispatch::slo_batch_deadline`]).
+    /// ([`super::dispatch::slo_batch_deadline`]) and the autoscaler
+    /// compares p999 against.
     pub slo: Duration,
     /// Graceful-drain window on shutdown.
     pub drain: Duration,
     /// Close quiescent connections after this long.
     pub idle_timeout: Duration,
+    /// Autoscaler floor (workers per pool).
+    pub min_workers: usize,
+    /// Autoscaler ceiling; 0 disables autoscaling.
+    pub max_workers: usize,
+    /// Per-connection token-bucket rate (requests/second, burst = 2×);
+    /// 0 disables the limit.
+    pub conn_rate_limit: u64,
 }
 
 impl Default for NetOpts {
     fn default() -> Self {
         NetOpts {
             addr: "127.0.0.1:7070".to_string(),
+            loops: 1,
             max_inflight: 64,
             slo: Duration::from_millis(50),
             drain: Duration::from_millis(500),
             idle_timeout: Duration::from_secs(30),
+            min_workers: 1,
+            max_workers: 0,
+            conn_rate_limit: 0,
         }
     }
 }
 
 impl NetOpts {
     pub fn from_config(net: &crate::config::NetConfig) -> NetOpts {
+        // Every field explicit on purpose: filling the tail from
+        // `..NetOpts::default()` is exactly how `idle_timeout` silently
+        // ignored the config until `idle_timeout_ms` existed.
         NetOpts {
             addr: net.addr.clone(),
+            loops: net.loops,
             max_inflight: net.max_inflight,
             slo: Duration::from_millis(net.slo_ms),
             drain: Duration::from_millis(net.drain_ms),
-            ..NetOpts::default()
+            idle_timeout: Duration::from_millis(net.idle_timeout_ms),
+            min_workers: net.min_workers,
+            max_workers: net.max_workers,
+            conn_rate_limit: net.conn_rate_limit,
         }
     }
+}
+
+/// Exponential backoff over consecutive non-`WouldBlock` accept errors.
+/// EMFILE and friends persist across poll rounds; without backoff the
+/// 500µs accept loop retries (and warns) ~2000 times per second. Any
+/// successful accept resets the episode.
+#[derive(Debug, Default)]
+pub(crate) struct AcceptBackoff {
+    delay: Option<Duration>,
+}
+
+impl AcceptBackoff {
+    /// Record one more consecutive error; returns how long to wait
+    /// before the next accept attempt.
+    pub(crate) fn on_error(&mut self) -> Duration {
+        let next = match self.delay {
+            None => ACCEPT_BACKOFF_BASE,
+            Some(d) => ACCEPT_BACKOFF_CAP.min(d * 2),
+        };
+        self.delay = Some(next);
+        next
+    }
+
+    pub(crate) fn on_success(&mut self) {
+        self.delay = None;
+    }
+}
+
+/// Shared accounting plus the acceptor→shard handoff for one loop shard.
+struct ShardSlot {
+    /// Live connections owned by the shard — the least-connections
+    /// assignment key. Incremented by the acceptor at handoff,
+    /// decremented by the shard when a connection closes.
+    conns: AtomicUsize,
+    /// Connections ever assigned to the shard.
+    accepted: AtomicU64,
+    /// Inference responses the shard wrote onto the wire.
+    completed: AtomicU64,
+    // Handoff mailbox from the acceptor, drained at the top of every
+    // shard round. Held only for a single push or take, never across
+    // another lock.
+    // pcilt-lint: lock-rank(net-shard = 3)
+    inbox: Mutex<Vec<TcpStream>>,
+}
+
+impl ShardSlot {
+    fn new() -> ShardSlot {
+        ShardSlot {
+            conns: AtomicUsize::new(0),
+            accepted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            inbox: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// One shard's counters (`NetServer::shard_stats`; the loadtest reports
+/// per-shard goodput from these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Live connections currently owned by the shard.
+    pub conns: usize,
+    /// Connections ever assigned to the shard.
+    pub accepted: u64,
+    /// Inference responses the shard wrote onto the wire.
+    pub completed: u64,
 }
 
 /// A running socket tier in front of a [`ModelRegistry`].
@@ -71,14 +179,18 @@ pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     dispatcher: Arc<Dispatcher>,
-    handle: Option<JoinHandle<()>>,
+    shards: Arc<Vec<ShardSlot>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl NetServer {
-    /// Bind `opts.addr` and spawn the event-loop thread. The registry
-    /// stays owned by the caller (shutdown order: net tier first, then
-    /// the pools).
+    /// Bind `opts.addr` and spawn the acceptor plus `opts.loops` shard
+    /// threads. The registry stays owned by the caller (shutdown order:
+    /// net tier first, then the pools).
     pub fn start(registry: Arc<ModelRegistry>, opts: &NetOpts) -> anyhow::Result<NetServer> {
+        if opts.loops == 0 {
+            return Err(anyhow::anyhow!("net: loops must be >= 1"));
+        }
         let listener = TcpListener::bind(opts.addr.as_str())
             .map_err(|e| anyhow::anyhow!("net: binding {}: {e}", opts.addr))?;
         listener
@@ -87,19 +199,58 @@ impl NetServer {
         let addr = listener
             .local_addr()
             .map_err(|e| anyhow::anyhow!("net: local_addr: {e}"))?;
-        let dispatcher = Arc::new(Dispatcher::new(registry, opts.max_inflight));
+        let dispatcher = Arc::new(Dispatcher::new(Arc::clone(&registry), opts.max_inflight));
         let stop = Arc::new(AtomicBool::new(false));
-        let handle = {
+        let shards: Arc<Vec<ShardSlot>> =
+            Arc::new((0..opts.loops).map(|_| ShardSlot::new()).collect());
+        let mut handles = Vec::with_capacity(opts.loops + 1);
+        for i in 0..opts.loops {
             let d = Arc::clone(&dispatcher);
             let s = Arc::clone(&stop);
-            let (idle, drain) = (opts.idle_timeout, opts.drain);
-            std::thread::Builder::new()
-                .name("pcilt-net".to_string())
-                .spawn(move || event_loop(listener, &d, &s, idle, drain))
-                .map_err(|e| anyhow::anyhow!("net: spawning event loop: {e}"))?
-        };
-        log::info!("net: listening on {addr}");
-        Ok(NetServer { addr, stop, dispatcher, handle: Some(handle) })
+            let sh = Arc::clone(&shards);
+            let (idle, drain, rate) = (opts.idle_timeout, opts.drain, opts.conn_rate_limit);
+            let spawned = std::thread::Builder::new()
+                .name(format!("pcilt-net-{i}"))
+                .spawn(move || shard_loop(&sh[i], &d, &s, idle, drain, rate));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Unwind the threads already running before bailing.
+                    stop.store(true, Ordering::SeqCst);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow::anyhow!("net: spawning shard {i}: {e}"));
+                }
+            }
+        }
+        let scaler = (opts.max_workers > 0).then(|| {
+            FleetScaler::new(ScalerOpts {
+                min_workers: opts.min_workers,
+                max_workers: opts.max_workers,
+                slo: opts.slo,
+                ..ScalerOpts::default()
+            })
+        });
+        {
+            let s = Arc::clone(&stop);
+            let sh = Arc::clone(&shards);
+            let spawned = std::thread::Builder::new()
+                .name("pcilt-net-accept".to_string())
+                .spawn(move || acceptor_loop(&listener, &sh, &s, &registry, scaler));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow::anyhow!("net: spawning acceptor: {e}"));
+                }
+            }
+        }
+        log::info!("net: listening on {addr} ({} loop shards)", opts.loops);
+        Ok(NetServer { addr, stop, dispatcher, shards, handles })
     }
 
     /// Bound address (resolves port 0).
@@ -115,10 +266,22 @@ impl NetServer {
         self.dispatcher.counters()
     }
 
-    /// Stop accepting, drain in-flight work, join the loop thread.
+    /// Per-shard connection/goodput counters, in shard order.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| ShardStats {
+                conns: s.conns.load(Ordering::SeqCst),
+                accepted: s.accepted.load(Ordering::SeqCst),
+                completed: s.completed.load(Ordering::SeqCst),
+            })
+            .collect()
+    }
+
+    /// Stop accepting, drain in-flight work, join every loop thread.
     pub fn shutdown(mut self) -> NetCounters {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
         self.dispatcher.counters()
@@ -128,18 +291,84 @@ impl NetServer {
 impl Drop for NetServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn event_loop(
-    listener: TcpListener,
+/// The `pcilt-net-accept` thread: accept with error backoff, assign each
+/// socket to the least-loaded shard, and tick the autoscaler.
+fn acceptor_loop(
+    listener: &TcpListener,
+    shards: &[ShardSlot],
+    stop: &AtomicBool,
+    registry: &Arc<ModelRegistry>,
+    mut scaler: Option<FleetScaler>,
+) {
+    let mut backoff = AcceptBackoff::default();
+    let mut retry_at: Option<Instant> = None;
+    let mut next_scale = Instant::now() + SCALER_TICK;
+    while !stop.load(Ordering::SeqCst) {
+        let mut progressed = false;
+        let now = Instant::now();
+        if retry_at.map(|t| now >= t).unwrap_or(true) {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        backoff.on_success();
+                        retry_at = None;
+                        // Least-connections assignment over the shards'
+                        // shared counters.
+                        let mut pick = 0usize;
+                        let mut best = usize::MAX;
+                        for (i, s) in shards.iter().enumerate() {
+                            let n = s.conns.load(Ordering::SeqCst);
+                            if n < best {
+                                best = n;
+                                pick = i;
+                            }
+                        }
+                        let slot = &shards[pick];
+                        slot.conns.fetch_add(1, Ordering::SeqCst);
+                        slot.accepted.fetch_add(1, Ordering::SeqCst);
+                        slot.inbox.lock().unwrap().push(stream);
+                        log::debug!("net: accepted connection -> shard {pick}");
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        // Persistent errors (EMFILE...) repeat every poll
+                        // round; back off instead of spamming the log.
+                        let delay = backoff.on_error();
+                        log::warn!("net: accept error: {e} (backing off {delay:?})");
+                        retry_at = Some(Instant::now() + delay);
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(sc) = scaler.as_mut() {
+            if now >= next_scale {
+                sc.tick(registry);
+                next_scale = now + SCALER_TICK;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+}
+
+/// One `pcilt-net-{i}` thread: drain the handoff inbox, tick every owned
+/// connection, account closures back into the shard slot.
+fn shard_loop(
+    shard: &ShardSlot,
     d: &Dispatcher,
     stop: &AtomicBool,
     idle_timeout: Duration,
     drain: Duration,
+    rate_limit: u64,
 ) {
     let mut conns: Vec<Conn> = Vec::new();
     let mut drain_deadline: Option<Instant> = None;
@@ -147,20 +376,20 @@ fn event_loop(
         let mut progressed = false;
         let stopping = stop.load(Ordering::SeqCst);
         if !stopping {
-            loop {
-                match listener.accept() {
-                    Ok((stream, _)) => match Conn::new(stream) {
-                        Ok(c) => {
-                            log::debug!("net: accepted {}", c.peer());
-                            conns.push(c);
-                            progressed = true;
-                        }
-                        Err(e) => log::warn!("net: connection setup failed: {e:#}"),
-                    },
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            let incoming = {
+                let mut g = shard.inbox.lock().unwrap();
+                std::mem::take(&mut *g)
+            };
+            for stream in incoming {
+                match Conn::new(stream, rate_limit) {
+                    Ok(c) => {
+                        log::debug!("net: accepted {}", c.peer());
+                        conns.push(c);
+                        progressed = true;
+                    }
                     Err(e) => {
-                        log::warn!("net: accept error: {e}");
-                        break;
+                        shard.conns.fetch_sub(1, Ordering::SeqCst);
+                        log::warn!("net: connection setup failed: {e:#}");
                     }
                 }
             }
@@ -172,11 +401,21 @@ fn event_loop(
             log::info!("net: draining {} connections (window {drain:?})", conns.len());
         }
         let now = Instant::now();
+        let before = conns.len();
+        let mut completed = 0u64;
         conns.retain_mut(|c| {
             let t = c.tick(d, now, idle_timeout);
             progressed |= t.progressed;
+            completed += u64::from(t.completed);
             t.keep
         });
+        if completed > 0 {
+            shard.completed.fetch_add(completed, Ordering::SeqCst);
+        }
+        let closed = before - conns.len();
+        if closed > 0 {
+            shard.conns.fetch_sub(closed, Ordering::SeqCst);
+        }
         if stopping {
             let expired = drain_deadline.map(|t| now >= t).unwrap_or(true);
             if conns.is_empty() || expired {
@@ -192,5 +431,60 @@ fn event_loop(
         if !progressed {
             std::thread::sleep(POLL_IDLE);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_backoff_caps_and_resets() {
+        // Regression (PR 10): a persistent accept error (EMFILE) used to
+        // log a warning every 500µs poll round. Injected error sequence:
+        // consecutive errors double the delay from 1ms up to the 1s cap;
+        // one successful accept resets the episode.
+        let mut b = AcceptBackoff::default();
+        let mut expected = ACCEPT_BACKOFF_BASE;
+        for step in 0..10 {
+            assert_eq!(b.on_error(), expected, "step {step}");
+            expected = ACCEPT_BACKOFF_CAP.min(expected * 2);
+        }
+        for step in 0..20 {
+            assert_eq!(b.on_error(), ACCEPT_BACKOFF_CAP, "cap step {step}");
+        }
+        b.on_success();
+        assert_eq!(b.on_error(), ACCEPT_BACKOFF_BASE, "success must reset");
+        // A mixed sequence stays at the episode's own pace.
+        assert_eq!(b.on_error(), ACCEPT_BACKOFF_BASE * 2);
+        b.on_success();
+        assert_eq!(b.on_error(), ACCEPT_BACKOFF_BASE);
+    }
+
+    #[test]
+    fn net_opts_from_config_threads_every_field() {
+        // Regression (PR 10): `from_config` used `..NetOpts::default()`,
+        // silently dropping the idle timeout.
+        let cfg = crate::config::NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            loops: 3,
+            max_inflight: 17,
+            slo_ms: 21,
+            drain_ms: 33,
+            idle_timeout_ms: 4_500,
+            min_workers: 2,
+            max_workers: 6,
+            conn_rate_limit: 250,
+        };
+        let opts = NetOpts::from_config(&cfg);
+        assert_eq!(opts.addr, "127.0.0.1:0");
+        assert_eq!(opts.loops, 3);
+        assert_eq!(opts.max_inflight, 17);
+        assert_eq!(opts.slo, Duration::from_millis(21));
+        assert_eq!(opts.drain, Duration::from_millis(33));
+        assert_eq!(opts.idle_timeout, Duration::from_millis(4_500));
+        assert_eq!(opts.min_workers, 2);
+        assert_eq!(opts.max_workers, 6);
+        assert_eq!(opts.conn_rate_limit, 250);
     }
 }

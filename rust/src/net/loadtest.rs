@@ -15,13 +15,15 @@ use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::WorkloadReport;
+use crate::coordinator::{ModelRegistry, WorkloadReport};
 use crate::util::error::{self as anyhow, ensure, Context};
 use crate::util::prng::Rng;
 use crate::util::stats::{fmt_ns, LatencyHistogram};
 
+use super::listener::{NetOpts, NetServer};
 use super::proto::{
     encode_frame, FrameDecoder, FrameKind, WireRequest, WireResponse,
 };
@@ -150,6 +152,155 @@ pub fn write_bench_json(path: &Path, r: &LoadtestReport) -> anyhow::Result<()> {
     std::fs::write(path, r.json())
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(())
+}
+
+/// One point of a `--loops`/`--conns` sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Loop shards the net tier served this point with.
+    pub loops: usize,
+    /// Client connections the loadtest used.
+    pub connections: usize,
+    pub report: LoadtestReport,
+    /// Responses written per shard during this point (shard order).
+    pub shard_completed: Vec<u64>,
+}
+
+/// A `--loops`/`--conns` sweep: every point reboots the net tier with
+/// its own shard count over one shared registry.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepReport {
+    /// Goodput ratio of the last loops point over the first — the
+    /// shard-scaling factor the sweep measured. `None` for single-loops
+    /// sweeps (nothing to compare).
+    pub fn speedup(&self) -> Option<f64> {
+        let first = self.points.first()?;
+        let last = self.points.last()?;
+        if first.loops == last.loops || first.report.goodput_rps <= 0.0 {
+            return None;
+        }
+        Some(last.report.goodput_rps / first.report.goodput_rps)
+    }
+
+    fn multi_conns(&self) -> bool {
+        self.points.windows(2).any(|w| w[0].connections != w[1].connections)
+    }
+
+    fn point_key(&self, p: &SweepPoint) -> String {
+        // The conns qualifier appears only when the sweep varies it, so
+        // the CI baseline keys (`loops{n}_*`, fixed conns) stay stable.
+        if self.multi_conns() {
+            format!("loops{}_conns{}", p.loops, p.connections)
+        } else {
+            format!("loops{}", p.loops)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for p in &self.points {
+            s.push_str(&format!(
+                "--- loops={} conns={} ---\n{}\n",
+                p.loops,
+                p.connections,
+                p.report.report()
+            ));
+            let wall = p.report.wall_s.max(1e-9);
+            let shards: Vec<String> = p
+                .shard_completed
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("shard {i}: {:.0}/s", *c as f64 / wall))
+                .collect();
+            s.push_str(&format!("per-shard goodput: {}\n", shards.join(" | ")));
+        }
+        if let Some(sp) = self.speedup() {
+            s.push_str(&format!("loops speedup (first -> last point): {sp:.2}x\n"));
+        }
+        s
+    }
+
+    /// Bench JSON for `pcilt bench-check`. Every `*_goodput_imgs_per_sec`
+    /// key is gated; bench-check pairs baseline and current measurements
+    /// positionally, so the emission order here IS the contract with
+    /// `benches/baselines/BENCH_serving_net.json` — append new keys at
+    /// the end, never reorder.
+    pub fn json(&self) -> String {
+        let mut s = String::from("{\n  \"bench\": \"serving_net/loadtest\",\n");
+        for p in &self.points {
+            let key = self.point_key(p);
+            s.push_str(&format!(
+                "  \"{key}_offered\": {},\n  \"{key}_completed\": {},\n  \
+                 \"{key}_shed_rate\": {:.4},\n  \"{key}_p99_ms\": {:.3},\n  \
+                 \"{key}_goodput_imgs_per_sec\": {:.1},\n",
+                p.report.offered,
+                p.report.completed,
+                p.report.shed_rate,
+                p.report.p99_latency_ns / 1e6,
+                p.report.goodput_rps,
+            ));
+        }
+        if let Some(sp) = self.speedup() {
+            s.push_str(&format!("  \"loops_speedup\": {sp:.2},\n"));
+        }
+        // Legacy single-figure key last: the final (widest) point, so
+        // older tooling keeps reading one goodput number.
+        let last_goodput = self.points.last().map_or(0.0, |p| p.report.goodput_rps);
+        s.push_str(&format!("  \"goodput_imgs_per_sec\": {last_goodput:.1}\n}}\n"));
+        s
+    }
+}
+
+/// Write the sweep bench JSON to `path`.
+pub fn write_sweep_json(path: &Path, r: &SweepReport) -> anyhow::Result<()> {
+    std::fs::write(path, r.json())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Run the `--loops`/`--conns` sweep: for each shard count boot a fresh
+/// net tier on an ephemeral loopback port over the caller's registry,
+/// then loadtest it at every connection count. `lt.addr` is ignored.
+pub fn run_sweep(
+    registry: &Arc<ModelRegistry>,
+    net_opts: &NetOpts,
+    lt: &LoadtestOpts,
+    loops_list: &[usize],
+    conns_list: &[usize],
+) -> anyhow::Result<SweepReport> {
+    ensure!(!loops_list.is_empty(), "empty --loops sweep");
+    ensure!(!conns_list.is_empty(), "empty --conns sweep");
+    let mut points = Vec::new();
+    for &loops in loops_list {
+        let opts = NetOpts {
+            addr: "127.0.0.1:0".to_string(),
+            loops,
+            ..net_opts.clone()
+        };
+        let net = NetServer::start(Arc::clone(registry), &opts)?;
+        for &connections in conns_list {
+            let point = LoadtestOpts {
+                addr: net.addr().to_string(),
+                connections,
+                ..lt.clone()
+            };
+            let before: Vec<u64> = net.shard_stats().iter().map(|s| s.completed).collect();
+            let report = run(&point)?;
+            let shard_completed: Vec<u64> = net
+                .shard_stats()
+                .iter()
+                .zip(&before)
+                .map(|(s, b)| s.completed.saturating_sub(*b))
+                .collect();
+            points.push(SweepPoint { loops, connections, report, shard_completed });
+        }
+        net.shutdown();
+    }
+    Ok(SweepReport { points })
 }
 
 struct ClientOutcome {
@@ -383,4 +534,88 @@ fn pump_read(stream: &mut TcpStream, decoder: &mut FrameDecoder) -> anyhow::Resu
         }
     }
     Ok(progressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rpt(goodput: f64) -> LoadtestReport {
+        LoadtestReport {
+            offered: 10,
+            completed: 10,
+            shed: 0,
+            errors: 0,
+            lost: 0,
+            wall_s: 1.0,
+            offered_rps: 10.0,
+            goodput_rps: goodput,
+            shed_rate: 0.0,
+            p50_latency_ns: 1.0e6,
+            p99_latency_ns: 2.0e6,
+            p999_latency_ns: 3.0e6,
+            max_latency_ns: 4_000_000,
+        }
+    }
+
+    #[test]
+    fn sweep_json_emits_gated_keys_in_document_order() {
+        // bench-check pairs baseline/current positionally, so the gated
+        // keys must appear in a stable document order.
+        let sw = SweepReport {
+            points: vec![
+                SweepPoint {
+                    loops: 1,
+                    connections: 4,
+                    report: rpt(40.0),
+                    shard_completed: vec![10],
+                },
+                SweepPoint {
+                    loops: 4,
+                    connections: 4,
+                    report: rpt(100.0),
+                    shard_completed: vec![3, 3, 2, 2],
+                },
+            ],
+        };
+        let j = sw.json();
+        let i1 = j.find("\"loops1_goodput_imgs_per_sec\"").unwrap();
+        let i4 = j.find("\"loops4_goodput_imgs_per_sec\"").unwrap();
+        let il = j.rfind("\"goodput_imgs_per_sec\"").unwrap();
+        assert!(i1 < i4 && i4 < il, "gated keys out of order:\n{j}");
+        assert!(j.contains("\"loops_speedup\": 2.50"), "{j}");
+        assert_eq!(sw.speedup(), Some(2.5));
+        // A fixed-conns sweep must not qualify keys with the conns count
+        // (the CI baseline names would churn).
+        assert!(!j.contains("conns4"), "{j}");
+        // The report view mentions per-shard goodput for every shard.
+        let r = sw.report();
+        assert!(r.contains("shard 0") && r.contains("shard 3"), "{r}");
+    }
+
+    #[test]
+    fn sweep_with_varied_conns_qualifies_keys() {
+        let sw = SweepReport {
+            points: vec![
+                SweepPoint {
+                    loops: 2,
+                    connections: 2,
+                    report: rpt(40.0),
+                    shard_completed: vec![5, 5],
+                },
+                SweepPoint {
+                    loops: 2,
+                    connections: 8,
+                    report: rpt(60.0),
+                    shard_completed: vec![8, 7],
+                },
+            ],
+        };
+        let j = sw.json();
+        assert!(j.contains("\"loops2_conns2_goodput_imgs_per_sec\""), "{j}");
+        assert!(j.contains("\"loops2_conns8_goodput_imgs_per_sec\""), "{j}");
+        // Same loops at both ends: no speedup figure.
+        assert!(sw.speedup().is_none());
+        assert!(!j.contains("loops_speedup"), "{j}");
+    }
 }

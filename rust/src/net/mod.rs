@@ -4,17 +4,22 @@
 //! front-end. See DESIGN.md §15.
 //!
 //! ```text
-//!   clients ──TCP──▶ listener (accept/event loop, one thread)
-//!                        │ per-conn state machines (conn.rs)
-//!                        ▼ frames (proto.rs)
+//!   clients ──TCP──▶ acceptor ──least-connections──▶ loop shards 0..n-1
+//!                        │ (accept backoff,              │ per-conn state
+//!                        │  autoscaler tick)             │ machines (conn.rs)
+//!                        ▼                               ▼ frames (proto.rs)
 //!                    Dispatcher ── admission control ──▶ Server pools
 //!                        │   bounded in-flight / model      (queue.rs)
+//!                        │   per-conn token-bucket rate      workers scaled by
+//!                        │   limits (Overloaded nacks)       scaler.rs
 //!                        └── Overloaded / Error frames back on the wire
 //! ```
 //!
 //! - [`proto`]: length-prefixed binary frames + checksum, HTTP adapter.
-//! - [`conn`]: non-blocking per-connection read/write state machine.
-//! - [`listener`]: accept/event loop, idle timeouts, graceful drain.
+//! - [`conn`]: non-blocking per-connection read/write state machine,
+//!   write-side backpressure, token-bucket rate limiting.
+//! - [`listener`]: acceptor + `[net] loops` event-loop shards, idle
+//!   timeouts, accept-error backoff, graceful drain.
 //! - [`dispatch`]: routing, per-model in-flight budgets, SLO batching.
 //! - [`loadtest`]: open-loop client harness (`pcilt loadtest`).
 
@@ -25,6 +30,6 @@ pub mod loadtest;
 pub mod proto;
 
 pub use dispatch::{slo_batch_deadline, DispatchError, Dispatcher, NetCounters, Ticket};
-pub use listener::{NetOpts, NetServer};
+pub use listener::{NetOpts, NetServer, ShardStats};
 pub use loadtest::{LoadtestOpts, LoadtestReport, ModelTarget};
 pub use proto::{FrameDecoder, FrameKind, ProtoError, WireNack, WireRequest, WireResponse};

@@ -5,9 +5,16 @@
 //! dispatcher's in-flight budget stays bounded; the HTTP adapter must
 //! answer `/healthz` and `/metrics` on the same port; and a corrupted
 //! frame must be survivable — nacked without killing the connection.
+//!
+//! ISSUE-10 additions: the multi-shard tier must stay bit-identical and
+//! exactly-once under concurrent clients across ≥4 loop shards;
+//! per-connection rate limits must nack as shed; and the worker
+//! autoscaler must scale a pool up under burst and park back down when
+//! idle without losing admitted work.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -38,8 +45,9 @@ fn opts() -> ServerOpts {
     }
 }
 
-/// Boot a two-model registry plus socket tier on an ephemeral port.
-fn serve(max_inflight: usize) -> (NetServer, Arc<ModelRegistry>) {
+/// Boot a two-model registry plus socket tier on an ephemeral port with
+/// explicit net options (`addr` is always overridden to an ephemeral one).
+fn serve_with(mut net_opts: NetOpts) -> (NetServer, Arc<ModelRegistry>) {
     let store = Arc::new(TableStore::new());
     let registry = Arc::new(
         ModelRegistry::start_with_store(
@@ -49,13 +57,14 @@ fn serve(max_inflight: usize) -> (NetServer, Arc<ModelRegistry>) {
         )
         .unwrap(),
     );
-    let net_opts = NetOpts {
-        addr: "127.0.0.1:0".to_string(),
-        max_inflight,
-        ..NetOpts::default()
-    };
+    net_opts.addr = "127.0.0.1:0".to_string();
     let net = NetServer::start(Arc::clone(&registry), &net_opts).unwrap();
     (net, registry)
+}
+
+/// Boot a two-model registry plus socket tier on an ephemeral port.
+fn serve(max_inflight: usize) -> (NetServer, Arc<ModelRegistry>) {
+    serve_with(NetOpts { max_inflight, ..NetOpts::default() })
 }
 
 fn connect(net: &NetServer) -> TcpStream {
@@ -333,4 +342,265 @@ fn shutdown_drains_inflight_requests() {
     assert_eq!(WireResponse::decode(&body).unwrap().id, 1);
     let c = handle.join().unwrap();
     assert_eq!(c.completed, 1);
+}
+
+/// ISSUE-10 tentpole criterion: with 4 loop shards and 8 concurrent
+/// clients, every response stays bit-identical to the in-process
+/// forward, every id is answered exactly once per connection, and the
+/// least-connections acceptor actually spreads the connections over
+/// more than one shard.
+#[test]
+fn four_shards_bit_identical_and_exactly_once_under_concurrency() {
+    const CLIENTS: u64 = 8;
+    const PER_CLIENT: u64 = 25;
+    let (net, registry) = serve_with(NetOpts {
+        loops: 4,
+        max_inflight: 256,
+        ..NetOpts::default()
+    });
+    let addr = net.addr();
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            let reg = Arc::clone(&registry);
+            std::thread::spawn(move || {
+                // Each client compiles its own reference networks; the
+                // serving path must agree with them bit for bit from
+                // every shard.
+                let compile_ref = |name: &str| {
+                    let entry = reg.model(name).unwrap();
+                    entry
+                        .spec
+                        .compile_with_defaults(&entry.weights, &Arc::new(TableStore::new()))
+                        .unwrap()
+                };
+                let ref_base = compile_ref("base");
+                let ref_alt = compile_ref("alt");
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut dec = FrameDecoder::new();
+                let mut rng = Rng::new(0xA11 + t);
+                let mut seen = vec![false; PER_CLIENT as usize];
+                for i in 0..PER_CLIENT {
+                    let (model, reference) = if (t + i) % 2 == 0 {
+                        ("base", &ref_base)
+                    } else {
+                        ("alt", &ref_alt)
+                    };
+                    let codes = random_codes(&mut rng, 16 * 16, 4);
+                    let img = Tensor4::from_vec(Shape4::new(1, 16, 16, 1), codes.clone());
+                    let expect = reference.forward(&img);
+                    send_request(&mut stream, i, model, codes);
+                    let (kind, body) = recv_frame(&mut stream, &mut dec);
+                    assert_eq!(kind, FrameKind::Logits, "client {t} request {i}");
+                    let resp = WireResponse::decode(&body).unwrap();
+                    assert!(!seen[resp.id as usize], "client {t}: duplicate id {}", resp.id);
+                    seen[resp.id as usize] = true;
+                    assert_eq!(resp.id, i, "in-order single-stream round trips echo ids");
+                    assert_eq!(
+                        resp.logits, expect[0],
+                        "client {t} request {i} model {model}: shard-served logits drifted"
+                    );
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let stats = net.shard_stats();
+    assert_eq!(stats.len(), 4, "one stat row per loop shard");
+    let accepted: u64 = stats.iter().map(|s| s.accepted).sum();
+    let completed: u64 = stats.iter().map(|s| s.completed).sum();
+    assert_eq!(accepted, CLIENTS, "every connection lands on exactly one shard");
+    assert_eq!(completed, CLIENTS * PER_CLIENT, "per-shard goodput sums to the total");
+    let busy = stats.iter().filter(|s| s.accepted > 0).count();
+    assert!(
+        busy >= 2,
+        "least-connections must spread {CLIENTS} concurrent conns across shards: {stats:?}"
+    );
+    let c = net.shutdown();
+    assert_eq!(c.completed, CLIENTS * PER_CLIENT);
+    assert_eq!(c.shed, 0);
+}
+
+/// Per-connection token-bucket rate limiting: a burst far beyond the
+/// configured rate gets explicit `Overloaded` nacks that are counted as
+/// shed, while at least the bucket's burst capacity is served.
+#[test]
+fn per_connection_rate_limit_nacks_count_as_shed() {
+    const TOTAL: usize = 30;
+    // 1 rps => burst capacity 2. Refilling the other 28 tokens would take
+    // 28 s, far beyond this test's lifetime, so most of the burst sheds.
+    let (net, _registry) = serve_with(NetOpts {
+        max_inflight: 64,
+        conn_rate_limit: 1,
+        ..NetOpts::default()
+    });
+    let mut stream = connect(&net);
+    let mut dec = FrameDecoder::new();
+    let mut rng = Rng::new(77);
+    let mut burst = Vec::new();
+    for i in 0..TOTAL {
+        let req = WireRequest {
+            id: i as u64,
+            model: "base".to_string(),
+            h: 16,
+            w: 16,
+            c: 1,
+            codes: random_codes(&mut rng, 16 * 16, 4),
+        };
+        burst.extend_from_slice(&encode_frame(FrameKind::Infer, &req.encode()));
+    }
+    stream.write_all(&burst).unwrap();
+
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut seen = vec![false; TOTAL];
+    for _ in 0..TOTAL {
+        match recv_frame(&mut stream, &mut dec) {
+            (FrameKind::Logits, body) => {
+                let resp = WireResponse::decode(&body).unwrap();
+                assert!(!seen[resp.id as usize], "duplicate answer for id {}", resp.id);
+                seen[resp.id as usize] = true;
+                completed += 1;
+            }
+            (FrameKind::Overloaded, body) => {
+                let nack = WireNack::decode(&body).unwrap();
+                assert!(!seen[nack.id as usize], "duplicate answer for id {}", nack.id);
+                seen[nack.id as usize] = true;
+                assert!(
+                    nack.message.contains("rate limit"),
+                    "nack must name the rate limit, got: {}",
+                    nack.message
+                );
+                shed += 1;
+            }
+            (kind, _) => panic!("unexpected frame kind {kind:?}"),
+        }
+    }
+    assert_eq!(completed + shed, TOTAL, "every request answered exactly once");
+    assert!(completed >= 2, "the bucket starts full: burst capacity must serve");
+    assert!(shed >= 10, "a {TOTAL}-deep burst at 1 rps must shed most of itself");
+    drop(stream);
+    let c = net.shutdown();
+    assert_eq!(c.completed as usize, completed);
+    assert_eq!(c.shed as usize, shed, "rate-limit nacks must be counted as shed");
+}
+
+/// Autoscaler end to end: a 1-worker pool under sustained socket burst
+/// scales up toward `[net] max_workers`, every admitted request is still
+/// answered exactly once (no in-flight work lost across the resize), and
+/// once the line goes quiet the pool parks back down to the floor.
+#[test]
+fn autoscaler_scales_up_under_burst_then_parks_when_idle() {
+    let store = Arc::new(TableStore::new());
+    let registry = Arc::new(
+        ModelRegistry::start_with_store(
+            &[model_cfg("base", 7)],
+            &ServerOpts {
+                workers: 1,
+                max_batch: 4,
+                batch_deadline: Duration::from_millis(1),
+                queue_capacity: 4096,
+            },
+            store,
+        )
+        .unwrap(),
+    );
+    let net_opts = NetOpts {
+        addr: "127.0.0.1:0".to_string(),
+        loops: 2,
+        max_inflight: 4096,
+        slo: Duration::from_millis(25),
+        min_workers: 1,
+        max_workers: 3,
+        ..NetOpts::default()
+    };
+    let net = NetServer::start(Arc::clone(&registry), &net_opts).unwrap();
+    let pool = Arc::clone(registry.pools()[0].1);
+    assert_eq!(pool.worker_count(), 1, "the pool starts at its configured size");
+
+    // Writer half: blast requests on a cloned stream handle until the
+    // scaler is seen reacting; reader half (this thread) drains answers.
+    let mut stream = connect(&net);
+    let wstream = stream.try_clone().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer_stop = Arc::clone(&stop);
+    let writer = std::thread::spawn(move || {
+        let mut wstream = wstream;
+        let mut rng = Rng::new(31);
+        let mut id = 0u64;
+        while !writer_stop.load(Ordering::SeqCst) {
+            send_request(&mut wstream, id, "base", random_codes(&mut rng, 16 * 16, 4));
+            id += 1;
+        }
+        id
+    });
+
+    let mut dec = FrameDecoder::new();
+    let mut answered = std::collections::HashSet::new();
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    let mut peak_workers = 1usize;
+    let t0 = Instant::now();
+    let drain_answers = |stream: &mut TcpStream,
+                         dec: &mut FrameDecoder,
+                         answered: &mut std::collections::HashSet<u64>,
+                         completed: &mut u64,
+                         shed: &mut u64| {
+        let (kind, body) = recv_frame(stream, dec);
+        let id = match kind {
+            FrameKind::Logits => {
+                *completed += 1;
+                WireResponse::decode(&body).unwrap().id
+            }
+            FrameKind::Overloaded => {
+                *shed += 1;
+                WireNack::decode(&body).unwrap().id
+            }
+            other => panic!("unexpected frame kind {other:?}"),
+        };
+        assert!(answered.insert(id), "id {id} answered twice");
+    };
+    // Phase 1: sustain pressure until the scaler grows the pool.
+    while peak_workers < 2 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "scaler never scaled up under sustained burst (workers={peak_workers})"
+        );
+        drain_answers(&mut stream, &mut dec, &mut answered, &mut completed, &mut shed);
+        peak_workers = peak_workers.max(pool.worker_count());
+    }
+    stop.store(true, Ordering::SeqCst);
+    let sent = writer.join().unwrap();
+    // Phase 2: drain every remaining answer — nothing admitted may be lost
+    // across the resize.
+    while (answered.len() as u64) < sent {
+        drain_answers(&mut stream, &mut dec, &mut answered, &mut completed, &mut shed);
+    }
+    assert_eq!(completed + shed, sent, "every request answered exactly once");
+    assert!(completed > 0, "the pool must have served under burst");
+    assert!(peak_workers >= 2, "burst must grow the pool above the floor");
+    assert!(
+        peak_workers <= 3,
+        "the scaler must respect [net] max_workers, saw {peak_workers}"
+    );
+
+    // Phase 3: the line is quiet; the pool parks back down to min_workers.
+    let t1 = Instant::now();
+    while pool.worker_count() > 1 {
+        assert!(
+            t1.elapsed() < Duration::from_secs(20),
+            "idle pool never parked back to the floor (workers={})",
+            pool.worker_count()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(pool.target_workers(), 1, "scaler target must settle at the floor");
+    drop(stream);
+    let c = net.shutdown();
+    assert_eq!(c.completed, completed);
+    assert_eq!(c.shed, shed);
 }
